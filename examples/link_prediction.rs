@@ -1,0 +1,60 @@
+//! Link prediction — the paper's Hyperlink-PLD evaluation (§4.5): hold
+//! out a fraction of edges, train on the rest, score held-out pairs vs
+//! random non-edges by cosine similarity, and report ROC-AUC.
+//!
+//!     cargo run --release --example link_prediction [nodes]
+
+use graphvite::eval::{link_prediction_auc, LinkSplit};
+use graphvite::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let nodes: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(5_000);
+    // A pure BA graph has no homophily (linked nodes share nothing but
+    // preferential attachment), so cosine link prediction is undefined on
+    // it; use the youtube-like graph whose community overlay gives edges
+    // the locality the paper's Hyperlink-PLD web graph has.
+    let graph = generators::youtube_like(nodes, 10, 0xBEEF);
+    println!(
+        "scale-free + community graph: {} nodes, {} edges",
+        graph.num_nodes(),
+        graph.num_edges()
+    );
+
+    // Hold out 1% of edges (the paper holds out 0.01% of a 623M-edge
+    // graph; at our scale 1% keeps the test set meaningfully sized).
+    let split = LinkSplit::new(&graph, 0.01, 4);
+    println!(
+        "held out {} positive edges (+ {} sampled non-edges)",
+        split.positives.len(),
+        split.negatives.len()
+    );
+
+    let config = TrainConfig {
+        dim: 32,
+        epochs: 200,
+        num_workers: 4,
+        num_samplers: 4,
+        episode_size: (nodes / 2).max(4_000),
+        backend: BackendKind::Native,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(split.train_graph.clone(), config)?;
+    let result = trainer.train()?;
+    println!(
+        "trained in {:.2}s ({:.2}M samples/s)",
+        result.stats.train_secs,
+        result.stats.throughput() / 1e6
+    );
+
+    let auc = link_prediction_auc(&result.embeddings, &split);
+    println!("link prediction AUC = {auc:.4}  (paper reports 0.943 on Hyperlink-PLD)");
+    // Held-out edges mix community edges (predictable) with BA edges (no
+    // homophily -> coin-flip), capping AUC near ~0.75 on this workload.
+    anyhow::ensure!(auc > 0.55, "AUC suspiciously low: {auc}");
+    println!("link_prediction OK");
+    Ok(())
+}

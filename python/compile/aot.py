@@ -1,0 +1,143 @@
+"""AOT pipeline: lower the Layer-2 train-block (with the Layer-1 Pallas
+kernel inlined) to HLO **text** artifacts the rust runtime loads via PJRT.
+
+HLO text -- NOT ``lowered.compiler_ir("hlo").as_hlo_proto().SerializeToString()``
+-- is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the image's xla_extension 0.5.1 (used by the rust
+``xla`` crate) rejects (``proto.id() <= INT_MAX``). The HLO *text* parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out, default ../artifacts):
+    train_p{P}_d{D}.hlo.txt     episode-block trainer variants
+    kernel_n{N}_d{D}.hlo.txt    standalone Layer-1 kernel (micro-bench)
+    manifest.txt                one `key=value ...` line per artifact,
+                                parsed by rust/src/runtime/manifest.rs
+
+Usage: cd python && python -m compile.aot [--out DIR] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import make_train_block, make_kernel_only, example_args
+
+# (P, D, B, S, K) variants. P = padded partition capacity, D = embedding
+# dim, B = batch, S = scan steps per execute, K = negatives per positive.
+# The rust runtime picks the smallest P >= its partition size with
+# matching D. Keep the matrix small: each entry costs a jax lowering.
+# S (scan steps per execute) amortizes the fixed PJRT execute overhead
+# (~2.4 ms on this CPU plugin): s=8 -> 0.64 M samples/s, s=32 -> 1.47 on
+# the p4096/d64 variant (EXPERIMENTS.md §Perf). Large-capacity variants
+# use deep scans because their blocks hold >> s*b samples; the small ones
+# stay shallow so wrap-around padding does not dominate tiny blocks.
+TRAIN_VARIANTS = [
+    # tiny: unit tests / CI
+    dict(p=256, d=16, b=64, s=4, k=1),
+    # small graphs (quickstart, karate-scale)
+    dict(p=4096, d=16, b=256, s=8, k=1),
+    dict(p=4096, d=32, b=256, s=8, k=1),
+    dict(p=4096, d=64, b=256, s=8, k=1),
+    # medium graphs (youtube-mini scale experiments)
+    dict(p=16384, d=32, b=512, s=16, k=1),
+    dict(p=16384, d=64, b=512, s=16, k=1),
+    dict(p=16384, d=128, b=512, s=16, k=1),
+    # large runs (table5-scale)
+    dict(p=65536, d=32, b=1024, s=16, k=1),
+    dict(p=65536, d=128, b=1024, s=16, k=1),
+]
+
+KERNEL_VARIANTS = [
+    dict(n=512, d=64),
+    dict(n=2048, d=128),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    CRITICAL: print with ``print_large_constants=True``. The default HLO
+    printer elides constants over ~16 elements as ``constant({...})``,
+    which XLA 0.5.1's text *parser* silently reads back as zeros — the
+    model's label/weight vectors become 0 and the compiled train step is a
+    perfect no-op (zero loss, zero gradients). Found the hard way.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax's printer emits metadata attributes (e.g. source_end_line) that
+    # XLA 0.5.1's text parser does not know; strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer elided a large constant"
+    return text
+
+
+def lower_train(v):
+    fn = make_train_block(v["p"], v["d"], v["b"], v["s"], v["k"])
+    args = example_args(v["p"], v["d"], v["b"], v["s"], v["k"])
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_kernel(v):
+    fn = make_kernel_only(v["n"], v["d"])
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((v["n"], v["d"]), f32),
+        jax.ShapeDtypeStruct((v["n"], v["d"]), f32),
+        jax.ShapeDtypeStruct((v["n"],), f32),
+        jax.ShapeDtypeStruct((v["n"],), f32),
+    )
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="only build artifacts whose name contains this substring")
+    ns = ap.parse_args()
+    os.makedirs(ns.out, exist_ok=True)
+
+    manifest_lines = []
+    for v in TRAIN_VARIANTS:
+        name = f"train_p{v['p']}_d{v['d']}"
+        fname = f"{name}.hlo.txt"
+        line = (
+            f"kind=train file={fname} p={v['p']} d={v['d']} "
+            f"b={v['b']} s={v['s']} k={v['k']}"
+        )
+        manifest_lines.append(line)
+        if ns.only and ns.only not in name:
+            continue
+        text = lower_train(v)
+        with open(os.path.join(ns.out, fname), "w") as f:
+            f.write(text)
+        print(f"wrote {fname} ({len(text)} chars)", file=sys.stderr)
+
+    for v in KERNEL_VARIANTS:
+        name = f"kernel_n{v['n']}_d{v['d']}"
+        fname = f"{name}.hlo.txt"
+        manifest_lines.append(f"kind=kernel file={fname} n={v['n']} d={v['d']}")
+        if ns.only and ns.only not in name:
+            continue
+        text = lower_kernel(v)
+        with open(os.path.join(ns.out, fname), "w") as f:
+            f.write(text)
+        print(f"wrote {fname} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(ns.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest.txt ({len(manifest_lines)} artifacts)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

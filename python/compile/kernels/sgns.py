@@ -1,0 +1,88 @@
+"""Layer-1 Pallas kernel: SGNS forward + gradient over a tile of pairs.
+
+This is the compute hot-spot of GraphVite's embedding-training stage: for a
+flattened tile of (u, v, label, weight) rows it computes the binary
+cross-entropy on the embedding dot product plus the closed-form gradients.
+
+Hardware adaptation (paper CUDA kernel -> Pallas, see DESIGN.md
+section Hardware-Adaptation): the CUDA kernel stages embedding rows into
+on-chip *shared memory* per thread-block; here the BlockSpec tiles the
+sample axis so each grid step holds a ``[TB, D]`` tile in *VMEM*. The
+warp-level dot product becomes a vectorized reduction on the VPU; the
+rank-1 gradient outer products are dense ``[TB, D]`` elementwise work.
+
+``interpret=True`` is mandatory in this image: real TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute. Interpret mode
+lowers the kernel to plain HLO ops, so the same artifact runs on the rust
+CPU PJRT client with identical numerics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile along the sample axis. 256 rows x 128 dims x 4 B x
+# (2 inputs + 2 grads) ~= 1 MiB of VMEM per grid step -- comfortably under
+# the ~16 MiB VMEM budget of a TPU core, leaving room for double buffering.
+DEFAULT_TILE = 256
+
+
+def _sgns_kernel(u_ref, v_ref, label_ref, weight_ref, gu_ref, gv_ref, loss_ref):
+    """One grid step: SGNS loss + grads for a [TB, D] tile of pairs."""
+    u = u_ref[...]
+    v = v_ref[...]
+    label = label_ref[...]
+    weight = weight_ref[...]
+
+    s = jnp.sum(u * v, axis=-1)  # [TB] dot products (VPU reduction)
+    p = jax.nn.sigmoid(s)
+    g = (p - label) * weight  # dL/ds
+
+    gu_ref[...] = g[:, None] * v  # rank-1 updates
+    gv_ref[...] = g[:, None] * u
+    # stable: softplus(s) - label*s = max(s,0) + log1p(exp(-|s|)) - label*s
+    sp = jnp.maximum(s, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(s)))
+    loss_ref[...] = weight * (sp - label * s)
+
+
+def sgns_grad(u, v, label, weight, *, tile=None):
+    """Pallas SGNS kernel over N pairs.
+
+    u, v           : [N, D] float32 embedding rows (already gathered)
+    label, weight  : [N] float32
+    returns (grad_u [N,D], grad_v [N,D], loss [N])
+
+    N must be divisible by the tile size; callers (model.py) choose shapes
+    so this holds. Tile defaults to min(DEFAULT_TILE, N).
+    """
+    n, d = u.shape
+    tb = tile if tile is not None else min(DEFAULT_TILE, n)
+    if n % tb != 0:
+        raise ValueError(f"sample count {n} not divisible by tile {tb}")
+
+    grid = (n // tb,)
+    row_spec = pl.BlockSpec((tb, d), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((tb,), lambda i: (i,))
+
+    return pl.pallas_call(
+        _sgns_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, vec_spec, vec_spec],
+        out_specs=[row_spec, row_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), u.dtype),
+            jax.ShapeDtypeStruct((n, d), u.dtype),
+            jax.ShapeDtypeStruct((n,), u.dtype),
+        ],
+        interpret=True,  # CPU-PJRT execution path; see module docstring
+    )(u, v, label, weight)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def sgns_grad_jit(u, v, label, weight, tile=None):
+    """jit wrapper used by the pytest suite."""
+    return sgns_grad(u, v, label, weight, tile=tile)

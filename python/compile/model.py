@@ -1,0 +1,109 @@
+"""Layer-2 JAX model: one GraphVite episode-block training step.
+
+``make_train_block(P, D, B, S, K)`` builds the jax function that a single
+simulated GPU worker executes during an episode: a ``lax.scan`` over S
+batches of B positive samples (each with K restricted negatives), where
+each scan step
+
+    1. gathers the embedding rows for the batch from the worker-resident
+       vertex/context partitions,
+    2. calls the Layer-1 Pallas SGNS kernel on the flattened
+       ``[B*(1+K), D]`` pair tile,
+    3. applies scatter-add SGD updates back into the partitions.
+
+All shapes are static (AOT requirement): P is the padded partition-row
+capacity, D the embedding dim. The rust coordinator pads partitions up to
+the artifact's P and only ever indexes real rows, so padding rows receive
+no gradient and stay bit-identical.
+
+Within one scan step the scatter-add resolves duplicate indices
+deterministically (proper mini-batch SGD); the paper's asynchronous hogwild
+behaviour lives *between* blocks at Layer 3, exactly where its
+epsilon-gradient-exchangeability argument applies.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sgns import sgns_grad
+from .kernels.ref import sgns_grad_ref
+
+NEG_WEIGHT = 5.0  # paper section 4.3: scale the 1 negative's gradient by 5
+
+
+def make_train_block(P, D, B, S, K, *, neg_weight=NEG_WEIGHT, use_pallas=True):
+    """Build the episode-block train function with static shapes.
+
+    Signature of the returned function:
+        train_block(vertex[P,D] f32, context[P,D] f32,
+                    pos_u[S,B] i32, pos_v[S,B] i32, neg_v[S,B,K] i32,
+                    lr[] f32)
+            -> (vertex'[P,D], context'[P,D], mean_loss[] f32)
+    """
+    grad_fn = sgns_grad if use_pallas else sgns_grad_ref
+
+    def train_block(vertex, context, pos_u, pos_v, neg_v, lr):
+        def body(carry, batch):
+            vtx, ctx = carry
+            u, v, nv = batch  # u, v: [B] i32; nv: [B, K] i32
+            nvf = nv.reshape(-1)  # [B*K], row-major (b0k0, b0k1, ...)
+
+            vu = vtx[u]  # [B, D] gather
+            cv = ctx[v]  # [B, D]
+            cn = ctx[nvf]  # [B*K, D]
+
+            # Flatten positives + negatives into one kernel tile so the
+            # Pallas kernel sees a single [B*(1+K), D] workload.
+            ue = jnp.concatenate([vu, jnp.repeat(vu, K, axis=0)], axis=0)
+            ve = jnp.concatenate([cv, cn], axis=0)
+            label = jnp.concatenate(
+                [jnp.ones((B,), vtx.dtype), jnp.zeros((B * K,), vtx.dtype)]
+            )
+            weight = jnp.concatenate(
+                [jnp.ones((B,), vtx.dtype), jnp.full((B * K,), neg_weight, vtx.dtype)]
+            )
+
+            gu, gv, loss = grad_fn(ue, ve, label, weight)
+
+            # u receives gradient from its positive pair and all K negatives.
+            gu_total = gu[:B] + gu[B:].reshape(B, K, D).sum(axis=1)
+            vtx = vtx.at[u].add(-lr * gu_total)
+            ctx = ctx.at[v].add(-lr * gv[:B])
+            ctx = ctx.at[nvf].add(-lr * gv[B:])
+            return (vtx, ctx), loss.mean()
+
+        (vertex, context), losses = jax.lax.scan(
+            body, (vertex, context), (pos_u, pos_v, neg_v)
+        )
+        return vertex, context, losses.mean()
+
+    return train_block
+
+
+def make_kernel_only(N, D):
+    """Standalone Layer-1 kernel entry point (for rust micro-benches/tests).
+
+    kernel(u[N,D], v[N,D], label[N], weight[N])
+        -> (grad_u[N,D], grad_v[N,D], loss[N])
+    """
+
+    def kernel(u, v, label, weight):
+        return tuple(sgns_grad(u, v, label, weight))
+
+    return kernel
+
+
+def example_args(P, D, B, S, K):
+    """ShapeDtypeStructs for AOT lowering of make_train_block(P,D,B,S,K)."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((P, D), f32),  # vertex
+        jax.ShapeDtypeStruct((P, D), f32),  # context
+        jax.ShapeDtypeStruct((S, B), i32),  # pos_u
+        jax.ShapeDtypeStruct((S, B), i32),  # pos_v
+        jax.ShapeDtypeStruct((S, B, K), i32),  # neg_v
+        jax.ShapeDtypeStruct((), f32),  # lr
+    )

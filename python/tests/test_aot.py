@@ -1,0 +1,60 @@
+"""AOT pipeline contract tests: the manifest the rust runtime parses must
+exactly describe the variants aot.py lowers, and the artifact inventory
+must cover the capacity/dim combinations the experiments need."""
+
+from compile.aot import KERNEL_VARIANTS, TRAIN_VARIANTS
+
+
+class TestVariantMatrix:
+    def test_unique_names(self):
+        names = [f"train_p{v['p']}_d{v['d']}" for v in TRAIN_VARIANTS]
+        assert len(names) == len(set(names)), "duplicate train variant"
+        knames = [f"kernel_n{v['n']}_d{v['d']}" for v in KERNEL_VARIANTS]
+        assert len(knames) == len(set(knames))
+
+    def test_shapes_are_consistent(self):
+        for v in TRAIN_VARIANTS:
+            # the runtime's padding invariant needs P >= any index the
+            # coordinator can emit, and the scan shape must be non-empty
+            assert v["p"] >= v["b"], v
+            assert v["s"] >= 1 and v["b"] >= 1 and v["k"] >= 1, v
+            # chunk samples per execute must divide reasonably into the
+            # partition capacity so wrap-padding stays bounded (< p)
+            assert v["s"] * v["b"] <= v["p"] * 4, v
+
+    def test_experiment_coverage(self):
+        """Every (rows, dim) the experiment presets request must resolve."""
+        need = [
+            (256, 16),     # unit tests / karate quickstart (2 workers)
+            (2_000, 32),   # tiny youtube-like, 1 worker
+            (5_000, 32),   # small youtube-like, 4 workers
+            (20_000, 32),  # small youtube-like, 1 worker
+            (37_500, 32),  # friendster-like (150k nodes, 4 workers)
+            (16_384, 128), # paper-dim medium runs
+        ]
+        for rows, dim in need:
+            fits = [
+                v for v in TRAIN_VARIANTS if v["d"] == dim and v["p"] >= rows
+            ]
+            assert fits, f"no artifact covers rows={rows} dim={dim}"
+
+    def test_deep_scans_only_on_large_capacities(self):
+        # wrap-around padding must not dominate small blocks: shallow
+        # scans at small P, deep scans allowed only at P >= 16384
+        for v in TRAIN_VARIANTS:
+            if v["p"] < 16384:
+                assert v["s"] <= 8, f"scan too deep for small variant {v}"
+
+
+class TestManifestRoundTrip:
+    def test_manifest_lines_match_rust_grammar(self):
+        # mirror of rust/src/runtime/manifest.rs parsing rules
+        for v in TRAIN_VARIANTS:
+            line = (
+                f"kind=train file=train_p{v['p']}_d{v['d']}.hlo.txt "
+                f"p={v['p']} d={v['d']} b={v['b']} s={v['s']} k={v['k']}"
+            )
+            kv = dict(tok.split("=", 1) for tok in line.split())
+            assert kv["kind"] == "train"
+            assert int(kv["p"]) == v["p"]
+            assert int(kv["s"]) == v["s"]

@@ -1,0 +1,162 @@
+"""Layer-1 correctness: Pallas SGNS kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/tiles; the oracle itself is cross-checked against
+jax autodiff, so the chain is:  autodiff == ref == pallas.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.sgns import sgns_grad, DEFAULT_TILE
+from compile.kernels.ref import sgns_grad_ref, sgns_loss_ref
+
+
+def _rand(shape, seed, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+def _labels(n, seed):
+    lab = (jax.random.uniform(jax.random.PRNGKey(seed), (n,)) < 0.5).astype(
+        jnp.float32
+    )
+    weight = jnp.where(lab > 0, 1.0, 5.0)
+    return lab, weight
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("n,d", [(64, 8), (256, 32), (512, 64), (1024, 128)])
+    def test_matches_ref(self, n, d):
+        u, v = _rand((n, d), 0), _rand((n, d), 1)
+        lab, w = _labels(n, 2)
+        gu, gv, loss = sgns_grad(u, v, lab, w)
+        rgu, rgv, rloss = sgns_grad_ref(u, v, lab, w)
+        np.testing.assert_allclose(gu, rgu, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(gv, rgv, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(loss, rloss, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        log_tiles=st.integers(0, 4),
+        tile=st.sampled_from([32, 64, 128, 256]),
+        d=st.sampled_from([4, 16, 33, 64, 96, 128]),
+        seed=st.integers(0, 2**16),
+        scale=st.sampled_from([0.01, 1.0, 10.0]),
+    )
+    def test_hypothesis_shape_sweep(self, log_tiles, tile, d, seed, scale):
+        """Shape/tile/scale sweep: pallas == ref for any divisible tiling."""
+        n = tile * (2**log_tiles)
+        u, v = _rand((n, d), seed, scale), _rand((n, d), seed + 1, scale)
+        lab, w = _labels(n, seed + 2)
+        gu, gv, loss = sgns_grad(u, v, lab, w, tile=tile)
+        rgu, rgv, rloss = sgns_grad_ref(u, v, lab, w)
+        # f32 sigmoid of large dot products (|s| ~ scale^2 * sqrt(d)) loses
+        # relative precision; tolerance scales with the input magnitude.
+        rtol = 1e-4 if scale <= 1.0 else 5e-3
+        np.testing.assert_allclose(gu, rgu, rtol=rtol, atol=1e-6)
+        np.testing.assert_allclose(gv, rgv, rtol=rtol, atol=1e-6)
+        np.testing.assert_allclose(loss, rloss, rtol=rtol, atol=1e-6)
+
+    def test_indivisible_tile_rejected(self):
+        u, v = _rand((100, 8), 0), _rand((100, 8), 1)
+        lab, w = _labels(100, 2)
+        with pytest.raises(ValueError, match="not divisible"):
+            sgns_grad(u, v, lab, w, tile=64)
+
+    def test_default_tile_small_n(self):
+        """N < DEFAULT_TILE falls back to a single whole-array tile."""
+        n = DEFAULT_TILE // 4
+        u, v = _rand((n, 8), 0), _rand((n, 8), 1)
+        lab, w = _labels(n, 2)
+        gu, _, _ = sgns_grad(u, v, lab, w)
+        rgu, _, _ = sgns_grad_ref(u, v, lab, w)
+        np.testing.assert_allclose(gu, rgu, rtol=1e-5, atol=1e-6)
+
+
+class TestRefVsAutodiff:
+    """The oracle's closed-form gradients must equal jax autodiff."""
+
+    @pytest.mark.parametrize("n,d", [(64, 8), (256, 32)])
+    def test_grad_u(self, n, d):
+        u, v = _rand((n, d), 3), _rand((n, d), 4)
+        lab, w = _labels(n, 5)
+        gu, gv, _ = sgns_grad_ref(u, v, lab, w)
+        g_auto_u = jax.grad(lambda x: sgns_loss_ref(x, v, lab, w).sum())(u)
+        g_auto_v = jax.grad(lambda x: sgns_loss_ref(u, x, lab, w).sum())(v)
+        np.testing.assert_allclose(gu, g_auto_u, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(gv, g_auto_v, rtol=1e-4, atol=1e-5)
+
+
+class TestNumericalStability:
+    def test_large_dot_products(self):
+        """|s| >> 0 must not produce inf/nan in loss or grads."""
+        n, d = 64, 16
+        u = jnp.ones((n, d)) * 50.0
+        v = jnp.ones((n, d)) * 50.0  # s = 40000
+        lab, w = _labels(n, 6)
+        gu, gv, loss = sgns_grad(u, v, lab, w)
+        assert np.isfinite(np.asarray(loss)).all()
+        assert np.isfinite(np.asarray(gu)).all()
+        assert np.isfinite(np.asarray(gv)).all()
+
+    def test_negative_large_dot(self):
+        n, d = 64, 16
+        u = jnp.ones((n, d)) * 50.0
+        v = jnp.ones((n, d)) * -50.0
+        lab, w = _labels(n, 7)
+        _, _, loss = sgns_grad(u, v, lab, w)
+        assert np.isfinite(np.asarray(loss)).all()
+
+    def test_zero_embeddings(self):
+        """s=0: loss = weight*log(2), grad = weight*(0.5-label)*other."""
+        n, d = 64, 16
+        u = jnp.zeros((n, d))
+        v = jnp.zeros((n, d))
+        lab, w = _labels(n, 8)
+        gu, gv, loss = sgns_grad(u, v, lab, w)
+        np.testing.assert_allclose(loss, w * np.log(2.0), rtol=1e-5)
+        np.testing.assert_allclose(gu, 0.0, atol=1e-7)
+
+
+class TestSemantics:
+    def test_positive_pair_gradient_attracts(self):
+        """For label=1, -grad_u points toward v (dot(-gu, v) > 0)."""
+        n, d = 64, 16
+        u, v = _rand((n, d), 9), _rand((n, d), 10)
+        lab = jnp.ones((n,))
+        w = jnp.ones((n,))
+        gu, _, _ = sgns_grad(u, v, lab, w)
+        step_dir = -(gu * v).sum(-1)  # alignment of -grad with v
+        assert np.all(np.asarray(step_dir) > 0)
+
+    def test_negative_pair_gradient_repels(self):
+        n, d = 64, 16
+        u, v = _rand((n, d), 11), _rand((n, d), 12)
+        lab = jnp.zeros((n,))
+        w = jnp.ones((n,))
+        gu, _, _ = sgns_grad(u, v, lab, w)
+        step_dir = -(gu * v).sum(-1)
+        assert np.all(np.asarray(step_dir) < 0)
+
+    def test_weight_scales_gradient_linearly(self):
+        n, d = 64, 16
+        u, v = _rand((n, d), 13), _rand((n, d), 14)
+        lab = jnp.zeros((n,))
+        gu1, gv1, l1 = sgns_grad(u, v, lab, jnp.ones((n,)))
+        gu5, gv5, l5 = sgns_grad(u, v, lab, jnp.full((n,), 5.0))
+        np.testing.assert_allclose(5.0 * gu1, gu5, rtol=1e-5)
+        np.testing.assert_allclose(5.0 * gv1, gv5, rtol=1e-5)
+        np.testing.assert_allclose(5.0 * l1, l5, rtol=1e-5)
+
+    def test_symmetry_u_v(self):
+        """Swapping u/v swaps grad_u/grad_v (dot product is symmetric)."""
+        n, d = 128, 32
+        u, v = _rand((n, d), 15), _rand((n, d), 16)
+        lab, w = _labels(n, 17)
+        gu, gv, loss = sgns_grad(u, v, lab, w)
+        gu2, gv2, loss2 = sgns_grad(v, u, lab, w)
+        np.testing.assert_allclose(gu, gv2, rtol=1e-6)
+        np.testing.assert_allclose(gv, gu2, rtol=1e-6)
+        np.testing.assert_allclose(loss, loss2, rtol=1e-6)

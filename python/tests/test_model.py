@@ -1,0 +1,182 @@
+"""Layer-2 correctness: scan/gather/scatter train_block vs loop reference,
+padding invariants, optimization behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import make_train_block, example_args, NEG_WEIGHT
+from compile.kernels.ref import train_block_ref
+
+
+def _setup(P, D, B, S, K, seed=0, nmax=None):
+    """Random partitions + sample indices bounded by nmax (default P)."""
+    nmax = nmax or P
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    vertex = jax.random.normal(ks[0], (P, D)) * 0.1
+    context = jax.random.normal(ks[1], (P, D)) * 0.1
+    pu = jax.random.randint(ks[2], (S, B), 0, nmax)
+    pv = jax.random.randint(ks[3], (S, B), 0, nmax)
+    nv = jax.random.randint(ks[4], (S, B, K), 0, nmax)
+    return vertex, context, pu, pv, nv
+
+
+class TestTrainBlockVsRef:
+    @pytest.mark.parametrize(
+        "P,D,B,S,K",
+        [(256, 16, 64, 4, 1), (128, 8, 32, 2, 2), (512, 32, 64, 3, 1)],
+    )
+    def test_matches_loop_reference(self, P, D, B, S, K):
+        fn = jax.jit(make_train_block(P, D, B, S, K))
+        vertex, context, pu, pv, nv = _setup(P, D, B, S, K)
+        v2, c2, loss = fn(vertex, context, pu, pv, nv, 0.025)
+        rv2, rc2, rloss = train_block_ref(vertex, context, pu, pv, nv, 0.025)
+        np.testing.assert_allclose(v2, rv2, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(c2, rc2, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(loss, rloss, rtol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), k=st.sampled_from([1, 2, 4]))
+    def test_hypothesis_seeds(self, seed, k):
+        P, D, B, S = 128, 8, 32, 2
+        fn = jax.jit(make_train_block(P, D, B, S, k))
+        vertex, context, pu, pv, nv = _setup(P, D, B, S, k, seed=seed)
+        v2, c2, loss = fn(vertex, context, pu, pv, nv, 0.025)
+        rv2, rc2, rloss = train_block_ref(vertex, context, pu, pv, nv, 0.025)
+        np.testing.assert_allclose(v2, rv2, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(c2, rc2, rtol=1e-4, atol=1e-5)
+
+    def test_pallas_vs_jnp_path(self):
+        """use_pallas=True and use_pallas=False must agree exactly-ish."""
+        P, D, B, S, K = 256, 16, 64, 4, 1
+        vertex, context, pu, pv, nv = _setup(P, D, B, S, K)
+        a = jax.jit(make_train_block(P, D, B, S, K, use_pallas=True))
+        b = jax.jit(make_train_block(P, D, B, S, K, use_pallas=False))
+        va, ca, la = a(vertex, context, pu, pv, nv, 0.025)
+        vb, cb, lb = b(vertex, context, pu, pv, nv, 0.025)
+        np.testing.assert_allclose(va, vb, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(ca, cb, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(la, lb, rtol=1e-5)
+
+
+class TestPaddingInvariant:
+    def test_pad_rows_untouched(self):
+        """Rows >= nmax are padding: the trainer must never write them."""
+        P, D, B, S, K = 256, 16, 64, 4, 1
+        nmax = 100  # only rows [0, 100) are real
+        fn = jax.jit(make_train_block(P, D, B, S, K))
+        vertex, context, pu, pv, nv = _setup(P, D, B, S, K, nmax=nmax)
+        v2, c2, _ = fn(vertex, context, pu, pv, nv, 0.025)
+        np.testing.assert_array_equal(v2[nmax:], vertex[nmax:])
+        np.testing.assert_array_equal(c2[nmax:], context[nmax:])
+        # and the real region did change
+        assert not np.allclose(v2[:nmax], vertex[:nmax])
+
+
+class TestOptimization:
+    def test_loss_decreases_over_blocks(self):
+        """Repeated training on a fixed positive structure reduces loss."""
+        P, D, B, S, K = 128, 16, 32, 4, 1
+        fn = jax.jit(make_train_block(P, D, B, S, K))
+        key = jax.random.PRNGKey(42)
+        ks = jax.random.split(key, 5)
+        vertex = jax.random.normal(ks[0], (P, D)) * 0.1
+        context = jax.random.normal(ks[1], (P, D)) * 0.1
+        # fixed "graph": node i positively linked to (i+1) mod P
+        pu = jax.random.randint(ks[2], (S, B), 0, P)
+        pv = (pu + 1) % P
+        nv = jax.random.randint(ks[3], (S, B, K), 0, P)
+        losses = []
+        for _ in range(8):
+            vertex, context, loss = fn(vertex, context, pu, pv, nv, 0.05)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+
+    def test_lr_zero_is_identity(self):
+        P, D, B, S, K = 128, 8, 32, 2, 1
+        fn = jax.jit(make_train_block(P, D, B, S, K))
+        vertex, context, pu, pv, nv = _setup(P, D, B, S, K)
+        v2, c2, _ = fn(vertex, context, pu, pv, nv, 0.0)
+        np.testing.assert_array_equal(v2, vertex)
+        np.testing.assert_array_equal(c2, context)
+
+    def test_duplicate_indices_accumulate(self):
+        """Scatter-add must sum gradients for repeated rows in one batch."""
+        P, D, B, S, K = 64, 8, 32, 1, 1
+        fn = jax.jit(make_train_block(P, D, B, S, K))
+        vertex = jnp.ones((P, D)) * 0.1
+        context = jnp.ones((P, D)) * 0.1
+        # every positive sample is the same pair (0, 1), negatives all row 2
+        pu = jnp.zeros((S, B), jnp.int32)
+        pv = jnp.ones((S, B), jnp.int32)
+        nv = jnp.full((S, B, K), 2, jnp.int32)
+        v2, _, _ = fn(vertex, context, pu, pv, nv, 0.01)
+        # row 0 of vertex moved ~B times as far as a single-sample update
+        single = jax.jit(make_train_block(P, D, 1, 1, K))
+        v1, _, _ = single(
+            vertex,
+            context,
+            jnp.zeros((1, 1), jnp.int32),
+            jnp.ones((1, 1), jnp.int32),
+            jnp.full((1, 1, K), 2, jnp.int32),
+            0.01,
+        )
+        moved_b = v2[0] - vertex[0]
+        moved_1 = v1[0] - vertex[0]
+        np.testing.assert_allclose(moved_b, B * moved_1, rtol=1e-4)
+
+
+class TestRustParityFixture:
+    """Pins the exact numbers `rust/tests/hlo_runtime.rs` asserts against.
+
+    If the model changes, this test fails first and tells you to update the
+    rust-side constants (and vice versa) — the two suites share one fixture.
+    """
+
+    def test_reference_values(self):
+        P, D, B, S, K = 256, 16, 64, 4, 1
+        fn = jax.jit(make_train_block(P, D, B, S, K))
+        vertex = ((np.arange(P * D) % 97 - 48) / 100.0).astype(np.float32).reshape(P, D)
+        context = ((np.arange(P * D) % 89 - 44) / 100.0).astype(np.float32).reshape(P, D)
+        pu = (np.arange(S * B) % 100).astype(np.int32).reshape(S, B)
+        pv = ((np.arange(S * B) * 7 + 3) % 100).astype(np.int32).reshape(S, B)
+        nv = ((np.arange(S * B * K) * 13 + 5) % 100).astype(np.int32).reshape(S, B, K)
+        v2, c2, loss = fn(vertex, context, pu, pv, nv, jnp.float32(0.025))
+        assert abs(float(loss) - 2.172836) < 1e-3
+        assert abs(float(np.abs(v2 - vertex).sum()) - 53.03366) < 0.05
+        assert abs(float(np.abs(c2 - context).sum()) - 59.299427) < 0.05
+
+
+class TestAotTextFormat:
+    """Regression tests for the HLO-text interchange gotchas."""
+
+    def test_no_elided_constants(self):
+        # The default printer turns >16-element constants into `{...}`,
+        # which XLA 0.5.1's parser silently zeroes. to_hlo_text must print
+        # them in full (this killed the whole train step once).
+        from compile.aot import lower_train
+
+        text = lower_train(dict(p=256, d=16, b=64, s=4, k=1))
+        assert "{...}" not in text
+        assert "constant({1, 1, 1" in text or "constant({5, 5, 5" in text
+
+    def test_no_unparseable_metadata(self):
+        from compile.aot import lower_train
+
+        text = lower_train(dict(p=256, d=16, b=64, s=4, k=1))
+        # XLA 0.5.1 rejects newer metadata attributes like source_end_line
+        assert "source_end_line" not in text
+
+
+class TestExampleArgs:
+    def test_shapes_match_manifest_contract(self):
+        args = example_args(256, 16, 64, 4, 1)
+        assert args[0].shape == (256, 16)
+        assert args[2].shape == (4, 64)
+        assert args[4].shape == (4, 64, 1)
+        assert args[5].shape == ()
+
+    def test_neg_weight_constant(self):
+        assert NEG_WEIGHT == 5.0  # paper section 4.3

@@ -1,0 +1,17 @@
+//! Regenerates paper Figure 6 — speedup vs number of CPU samplers and device workers.
+//!
+//! Run with `cargo bench --bench bench_fig6`; set
+//! GRAPHVITE_BENCH_SCALE=tiny|small|full to change the workload size
+//! (default tiny so `cargo bench` completes quickly; EXPERIMENTS.md
+//! records the `small` runs).
+
+fn scale() -> graphvite::experiments::Scale {
+    std::env::var("GRAPHVITE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| graphvite::experiments::Scale::parse(&s))
+        .unwrap_or(graphvite::experiments::Scale::Tiny)
+}
+
+fn main() {
+    graphvite::experiments::run("fig6", scale()).expect("fig6 experiment");
+}

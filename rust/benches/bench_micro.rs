@@ -1,0 +1,230 @@
+//! Micro-benchmarks of every substrate on the hot path. These are the
+//! numbers the EXPERIMENTS.md §Perf table tracks; run with
+//!
+//!     cargo bench --bench bench_micro
+//!
+//! Scale knobs: GRAPHVITE_BENCH_FAST=1 shrinks iteration counts for CI.
+
+use graphvite::config::{BackendKind, TrainConfig};
+use graphvite::coordinator::Trainer;
+use graphvite::embedding::{EmbeddingStore, Matrix};
+use graphvite::gpu::native_minibatch_step;
+use graphvite::graph::generators;
+use graphvite::partition::Partitioner;
+use graphvite::pool::{shuffle, ShuffleKind};
+use graphvite::runtime::{default_manifest, Device};
+use graphvite::sampling::{AliasTable, AugmentConfig, NegativeSampler, OnlineAugmenter, RandomWalker};
+use graphvite::util::bench::{black_box, Bencher};
+use graphvite::util::rng::Rng;
+
+fn fast() -> bool {
+    std::env::var("GRAPHVITE_BENCH_FAST").is_ok()
+}
+
+fn main() {
+    let mut b = if fast() {
+        Bencher::with_iters(1, 3)
+    } else {
+        Bencher::with_iters(3, 10)
+    };
+
+    println!("== sampling substrates ==");
+    bench_rng(&mut b);
+    bench_alias(&mut b);
+    bench_augmentation(&mut b);
+    bench_negative(&mut b);
+
+    println!("== pool shuffles (Table 7 speed column) ==");
+    bench_shuffles(&mut b);
+
+    println!("== partition gather/scatter (episode transfers) ==");
+    bench_gather_scatter(&mut b);
+
+    println!("== device backends (per-chunk train step) ==");
+    bench_native_step(&mut b);
+    bench_hlo_step(&mut b);
+
+    println!("== end-to-end trainer (native) ==");
+    bench_trainer(&mut b);
+}
+
+fn bench_rng(b: &mut Bencher) {
+    let mut rng = Rng::new(1);
+    const N: usize = 10_000_000;
+    b.bench_items("rng.next_u64 x10M", N as f64, || {
+        let mut acc = 0u64;
+        for _ in 0..N {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        acc
+    });
+}
+
+fn bench_alias(b: &mut Bencher) {
+    let mut rng = Rng::new(2);
+    let weights: Vec<f32> = (0..1_000_000).map(|i| ((i % 1000) + 1) as f32).collect();
+    b.bench("alias.build 1M outcomes", || AliasTable::new(&weights));
+    let t = AliasTable::new(&weights);
+    const N: usize = 10_000_000;
+    b.bench_items("alias.sample x10M", N as f64, || {
+        let mut acc = 0u32;
+        for _ in 0..N {
+            acc = acc.wrapping_add(t.sample(&mut rng));
+        }
+        acc
+    });
+}
+
+fn bench_augmentation(b: &mut Bencher) {
+    let g = generators::barabasi_albert(100_000, 5, 3);
+    let dep = OnlineAugmenter::departure_table(&g);
+    let walker = RandomWalker::new(&g);
+    let cfg = AugmentConfig { walk_length: 5, augmentation_distance: 2 };
+    const N: usize = 1_000_000;
+    b.bench_items("online_augmentation.fill 1M samples (1 thread)", N as f64, || {
+        let mut aug = OnlineAugmenter::new(&walker, &dep, cfg, Rng::new(4));
+        let mut out = Vec::with_capacity(N);
+        aug.fill(&mut out, N);
+        out.len()
+    });
+}
+
+fn bench_negative(b: &mut Bencher) {
+    let g = generators::barabasi_albert(100_000, 5, 5);
+    let parts = Partitioner::degree_zigzag(&g, 4);
+    let neg = NegativeSampler::new(&g, &parts);
+    let mut rng = Rng::new(6);
+    const N: usize = 10_000_000;
+    b.bench_items("negative.sample_local x10M", N as f64, || {
+        let mut acc = 0u32;
+        for i in 0..N {
+            acc = acc.wrapping_add(neg.sample_local(i % 4, &mut rng));
+        }
+        acc
+    });
+}
+
+fn bench_shuffles(b: &mut Bencher) {
+    let n = if fast() { 1_000_000 } else { 10_000_000 };
+    let base: Vec<(u32, u32)> = (0..n)
+        .map(|i| ((i / 4) as u32, (i as u32).wrapping_mul(2654435761)))
+        .collect();
+    for kind in [
+        ShuffleKind::None,
+        ShuffleKind::Random,
+        ShuffleKind::IndexMapping,
+        ShuffleKind::Pseudo,
+    ] {
+        let mut rng = Rng::new(7);
+        b.bench_items(&format!("shuffle.{} {}M samples", kind.name(), n / 1_000_000), n as f64, || {
+            let mut pool = base.clone();
+            shuffle::shuffle(kind, &mut pool, 5, &mut rng);
+            black_box(pool.len())
+        });
+    }
+}
+
+fn bench_gather_scatter(b: &mut Bencher) {
+    let g = generators::barabasi_albert(100_000, 5, 8);
+    let parts = Partitioner::degree_zigzag(&g, 4);
+    let store = EmbeddingStore::init(100_000, 128, 9);
+    let cap = parts.max_part_size();
+    let mut buf = Vec::new();
+    let rows = parts.part_size(0) as f64;
+    b.bench_items("gather_partition 25k rows x d128", rows, || {
+        store.gather_partition(&parts, 0, cap, Matrix::Vertex, &mut buf);
+        buf.len()
+    });
+    let mut store2 = EmbeddingStore::init(100_000, 128, 10);
+    store2.gather_partition(&parts, 0, cap, Matrix::Vertex, &mut buf);
+    let data = buf.clone();
+    b.bench_items("scatter_partition 25k rows x d128", rows, || {
+        store2.scatter_partition(&parts, 0, Matrix::Vertex, &data);
+        0
+    });
+}
+
+fn bench_native_step(b: &mut Bencher) {
+    let p = 4096;
+    let d = 64;
+    let bsz = 256;
+    let k = 1;
+    let mut vertex: Vec<f32> = (0..p * d).map(|i| ((i % 97) as f32 - 48.0) / 100.0).collect();
+    let mut context = vertex.clone();
+    let mut rng = Rng::new(11);
+    let pos_u: Vec<i32> = (0..bsz).map(|_| rng.below(p as u64) as i32).collect();
+    let pos_v: Vec<i32> = (0..bsz).map(|_| rng.below(p as u64) as i32).collect();
+    let neg_v: Vec<i32> = (0..bsz * k).map(|_| rng.below(p as u64) as i32).collect();
+    let (mut gu, mut gc) = (Vec::new(), Vec::new());
+    b.bench_items("native_minibatch_step b256 d64 k1 (samples/s)", bsz as f64, || {
+        native_minibatch_step(
+            &mut vertex, &mut context, d, &pos_u, &pos_v, &neg_v, k, 0.001, 5.0, &mut gu, &mut gc,
+        )
+    });
+}
+
+fn bench_hlo_step(b: &mut Bencher) {
+    let Ok(m) = default_manifest() else {
+        println!("bench hlo: no artifacts, skipping");
+        return;
+    };
+    let meta = m.find_train(4096, 64).expect("p4096 d64 artifact").clone();
+    let dev = Device::load(&meta).expect("compile artifact");
+    let (p, d, s, bsz, k) = (meta.p, meta.d, meta.s, meta.b, meta.k);
+    let vertex: Vec<f32> = (0..p * d).map(|i| ((i % 97) as f32 - 48.0) / 100.0).collect();
+    let context = vertex.clone();
+    let mut rng = Rng::new(12);
+    let pos_u: Vec<i32> = (0..s * bsz).map(|_| rng.below(p as u64) as i32).collect();
+    let pos_v: Vec<i32> = (0..s * bsz).map(|_| rng.below(p as u64) as i32).collect();
+    let neg_v: Vec<i32> = (0..s * bsz * k).map(|_| rng.below(p as u64) as i32).collect();
+    let samples = (s * bsz) as f64;
+    b.bench_items(
+        &format!("hlo_train_step p{p} d{d} s{s} b{bsz} (samples/s, incl. transfers)"),
+        samples,
+        || {
+            let (vl, cl) = dev.upload_partitions(&vertex, &context).unwrap();
+            let (nv, nc, loss) = dev.train_step(vl, cl, &pos_u, &pos_v, &neg_v, 0.001).unwrap();
+            let _ = dev.download_partitions(&nv, &nc).unwrap();
+            loss
+        },
+    );
+    // steady-state: keep literals device-side between steps (no host copy)
+    b.bench_items(
+        &format!("hlo_train_step p{p} d{d} chained (samples/s, no download)"),
+        samples * 4.0,
+        || {
+            let (mut vl, mut cl) = dev.upload_partitions(&vertex, &context).unwrap();
+            let mut last = 0f32;
+            for _ in 0..4 {
+                let (nv, nc, loss) = dev.train_step(vl, cl, &pos_u, &pos_v, &neg_v, 0.001).unwrap();
+                vl = nv;
+                cl = nc;
+                last = loss;
+            }
+            last
+        },
+    );
+}
+
+fn bench_trainer(b: &mut Bencher) {
+    let g = generators::barabasi_albert(20_000, 5, 13);
+    let epochs = if fast() { 2 } else { 10 };
+    let samples = (epochs * g.num_edges()) as f64;
+    b.bench_items(
+        &format!("trainer.native 4w 20k nodes {epochs} epochs (samples/s)"),
+        samples,
+        || {
+            let cfg = TrainConfig {
+                dim: 64,
+                epochs,
+                num_workers: 4,
+                num_samplers: 4,
+                episode_size: 50_000,
+                backend: BackendKind::Native,
+                ..TrainConfig::default()
+            };
+            let mut t = Trainer::new(g.clone(), cfg).unwrap();
+            t.train().unwrap().stats.counters.samples_trained
+        },
+    );
+}

@@ -1,0 +1,17 @@
+//! Regenerates paper Table 1 — the analytic memory-cost model.
+//!
+//! Run with `cargo bench --bench bench_table1`; set
+//! GRAPHVITE_BENCH_SCALE=tiny|small|full to change the workload size
+//! (default tiny so `cargo bench` completes quickly; EXPERIMENTS.md
+//! records the `small` runs).
+
+fn scale() -> graphvite::experiments::Scale {
+    std::env::var("GRAPHVITE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| graphvite::experiments::Scale::parse(&s))
+        .unwrap_or(graphvite::experiments::Scale::Tiny)
+}
+
+fn main() {
+    graphvite::experiments::run("table1", scale()).expect("table1 experiment");
+}

@@ -1,0 +1,17 @@
+//! Regenerates paper Table 3 — training time of LINE, DeepWalk, mini-batch-GPU and GraphVite (1 and 4 workers) on the YouTube substitute.
+//!
+//! Run with `cargo bench --bench bench_table3`; set
+//! GRAPHVITE_BENCH_SCALE=tiny|small|full to change the workload size
+//! (default tiny so `cargo bench` completes quickly; EXPERIMENTS.md
+//! records the `small` runs).
+
+fn scale() -> graphvite::experiments::Scale {
+    std::env::var("GRAPHVITE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| graphvite::experiments::Scale::parse(&s))
+        .unwrap_or(graphvite::experiments::Scale::Tiny)
+}
+
+fn main() {
+    graphvite::experiments::run("table3", scale()).expect("table3 experiment");
+}

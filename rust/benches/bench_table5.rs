@@ -1,0 +1,17 @@
+//! Regenerates paper Table 5 — GraphVite training time on the larger BA graphs, 1 vs 4 workers.
+//!
+//! Run with `cargo bench --bench bench_table5`; set
+//! GRAPHVITE_BENCH_SCALE=tiny|small|full to change the workload size
+//! (default tiny so `cargo bench` completes quickly; EXPERIMENTS.md
+//! records the `small` runs).
+
+fn scale() -> graphvite::experiments::Scale {
+    std::env::var("GRAPHVITE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| graphvite::experiments::Scale::parse(&s))
+        .unwrap_or(graphvite::experiments::Scale::Tiny)
+}
+
+fn main() {
+    graphvite::experiments::run("table5", scale()).expect("table5 experiment");
+}

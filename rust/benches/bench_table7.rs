@@ -1,0 +1,17 @@
+//! Regenerates paper Table 7 — F1 + training time for the four pool-shuffle algorithms.
+//!
+//! Run with `cargo bench --bench bench_table7`; set
+//! GRAPHVITE_BENCH_SCALE=tiny|small|full to change the workload size
+//! (default tiny so `cargo bench` completes quickly; EXPERIMENTS.md
+//! records the `small` runs).
+
+fn scale() -> graphvite::experiments::Scale {
+    std::env::var("GRAPHVITE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| graphvite::experiments::Scale::parse(&s))
+        .unwrap_or(graphvite::experiments::Scale::Tiny)
+}
+
+fn main() {
+    graphvite::experiments::run("table7", scale()).expect("table7 experiment");
+}

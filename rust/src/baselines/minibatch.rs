@@ -1,0 +1,150 @@
+//! The OpenNE-style mini-batch "GPU" baseline (Table 3's `LINE in OpenNE`
+//! row): a deep-learning-framework port of LINE where the embedding
+//! matrices live "on device" and every mini-batch round-trips data over
+//! the bus. For node embedding the per-batch compute is tiny relative to
+//! the parameter traffic, so the system is **bus-bound** — the paper's
+//! motivating pathology (§2.2: "even worse than its CPU counterpart").
+//!
+//! We reproduce the pathology mechanically: each batch copies the full
+//! vertex+context matrices into the device buffer, runs the batch update
+//! there, and copies them back (what naive `tf.Variable` feeding did),
+//! against a single "GPU" (one compute thread).
+
+use anyhow::Result;
+
+use crate::baselines::BaselineResult;
+use crate::embedding::EmbeddingStore;
+use crate::gpu::native_minibatch_step;
+use crate::graph::Graph;
+use crate::metrics::TrainStats;
+use crate::sampling::{AliasTable, EdgeSampler};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+#[derive(Debug, Clone)]
+pub struct MinibatchConfig {
+    pub dim: usize,
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub lr: f32,
+    pub negatives: usize,
+    pub neg_weight: f32,
+    pub seed: u64,
+}
+
+impl Default for MinibatchConfig {
+    fn default() -> Self {
+        MinibatchConfig {
+            dim: 64,
+            epochs: 10,
+            batch_size: 256,
+            lr: 0.025,
+            negatives: 1,
+            neg_weight: 5.0,
+            seed: 42,
+        }
+    }
+}
+
+pub struct MinibatchGpuBaseline;
+
+impl MinibatchGpuBaseline {
+    pub fn train(graph: &Graph, cfg: &MinibatchConfig) -> Result<BaselineResult> {
+        let mut prep = Stopwatch::started();
+        let sampler = EdgeSampler::new(graph);
+        let neg_weights: Vec<f32> = (0..graph.num_nodes() as u32)
+            .map(|v| graph.weighted_degree(v).max(1e-12).powf(0.75))
+            .collect();
+        let neg_table = AliasTable::new(&neg_weights);
+        prep.stop();
+
+        let mut train_sw = Stopwatch::started();
+        let n = graph.num_nodes();
+        let dim = cfg.dim;
+        let store = EmbeddingStore::init(n, dim, cfg.seed);
+        // "host" copies of the parameters
+        let mut host_vertex = store.vertex_matrix().to_vec();
+        let mut host_context = store.context_matrix().to_vec();
+        // "device" buffers
+        let mut dev_vertex = vec![0f32; n * dim];
+        let mut dev_context = vec![0f32; n * dim];
+        let (mut grad_u, mut grad_c) = (Vec::new(), Vec::new());
+
+        let total = (cfg.epochs * graph.num_edges()) as u64;
+        let mut rng = Rng::new(cfg.seed);
+        let mut done = 0u64;
+        let mut bytes_moved = 0u64;
+        let bsz = cfg.batch_size;
+        let mut pos_u = vec![0i32; bsz];
+        let mut pos_v = vec![0i32; bsz];
+        let mut neg_v = vec![0i32; bsz * cfg.negatives];
+        while done < total {
+            for i in 0..bsz {
+                let (u, v) = sampler.sample(&mut rng);
+                pos_u[i] = u as i32;
+                pos_v[i] = v as i32;
+            }
+            for nv in neg_v.iter_mut() {
+                *nv = neg_table.sample(&mut rng) as i32;
+            }
+            // the pathological part: full-matrix bus transfer per batch
+            dev_vertex.copy_from_slice(&host_vertex);
+            dev_context.copy_from_slice(&host_context);
+            bytes_moved += 2 * (n * dim * 4) as u64;
+
+            let lr = cfg.lr * (1.0 - done as f32 / total as f32).max(1e-4);
+            native_minibatch_step(
+                &mut dev_vertex,
+                &mut dev_context,
+                dim,
+                &pos_u,
+                &pos_v,
+                &neg_v,
+                cfg.negatives,
+                lr,
+                cfg.neg_weight,
+                &mut grad_u,
+                &mut grad_c,
+            );
+
+            host_vertex.copy_from_slice(&dev_vertex);
+            host_context.copy_from_slice(&dev_context);
+            bytes_moved += 2 * (n * dim * 4) as u64;
+            done += bsz as u64;
+        }
+        train_sw.stop();
+
+        let mut stats = TrainStats {
+            train_secs: train_sw.secs(),
+            preprocess_secs: prep.secs(),
+            ..Default::default()
+        };
+        stats.counters.samples_trained = done;
+        stats.counters.bytes_to_device = bytes_moved / 2;
+        stats.counters.bytes_from_device = bytes_moved / 2;
+        Ok(BaselineResult {
+            embeddings: EmbeddingStore::from_raw(n, dim, host_vertex, host_context),
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn minibatch_trains_but_moves_mountains_of_bytes() {
+        let g = generators::barabasi_albert(200, 3, 1);
+        let cfg = MinibatchConfig { dim: 8, epochs: 1, batch_size: 64, ..Default::default() };
+        let r = MinibatchGpuBaseline::train(&g, &cfg).unwrap();
+        assert!(r.stats.counters.samples_trained >= g.num_edges() as u64);
+        // bytes moved per trained sample should dwarf the embedding size —
+        // the bus-bound pathology
+        let per_sample = (r.stats.counters.bytes_to_device
+            + r.stats.counters.bytes_from_device) as f64
+            / r.stats.counters.samples_trained as f64;
+        assert!(per_sample > (8 * 4) as f64 * 10.0, "per_sample {per_sample}");
+    }
+}

@@ -1,0 +1,33 @@
+//! Reimplementations of the systems GraphVite is compared against in
+//! Table 3, built from scratch on the same substrates:
+//!
+//! * [`line`] — LINE: CPU hogwild ASGD over alias-sampled edges (the
+//!   paper's "current fastest system" and the speedup denominator).
+//! * [`deepwalk`] — DeepWalk: materialized random-walk corpus, then
+//!   skip-gram-with-window training (walks stored in memory, the paper's
+//!   "fastest setting" for DeepWalk).
+//! * [`minibatch`] — the OpenNE-style mini-batch "GPU" system: model
+//!   parameters live on the device and the *full matrices* round-trip the
+//!   bus every batch — reproducing why Table 3's GPU row loses to CPUs.
+//! * [`node2vec`] — second-order p/q-biased walks with per-edge alias
+//!   preprocessing (the paper's 25.9-hour preprocessing row).
+
+pub mod deepwalk;
+pub mod hsoftmax;
+pub mod line;
+pub mod minibatch;
+pub mod node2vec;
+
+pub use deepwalk::DeepWalkBaseline;
+pub use line::LineBaseline;
+pub use minibatch::MinibatchGpuBaseline;
+pub use node2vec::Node2VecBaseline;
+
+use crate::embedding::EmbeddingStore;
+use crate::metrics::TrainStats;
+
+/// Common result shape for all baselines.
+pub struct BaselineResult {
+    pub embeddings: EmbeddingStore,
+    pub stats: TrainStats,
+}

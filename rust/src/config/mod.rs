@@ -1,0 +1,279 @@
+//! Training configuration + a TOML-subset parser (serde/toml are not in
+//! the offline crate set, so the config substrate is built from scratch).
+
+mod toml;
+
+pub use toml::{parse_toml, TomlValue};
+
+use anyhow::{bail, Result};
+
+use crate::pool::ShuffleKind;
+
+/// Which device backend the simulated GPUs run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT-compiled HLO (JAX Layer-2 + Pallas Layer-1) via PJRT — the
+    /// three-layer production path.
+    Hlo,
+    /// Pure-rust SGNS trainer — bit-compatible math, used by baselines and
+    /// large sweeps where PJRT compile time dominates.
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "hlo" => Some(Self::Hlo),
+            "native" => Some(Self::Native),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Hlo => "hlo",
+            Self::Native => "native",
+        }
+    }
+}
+
+/// Full GraphVite training configuration (defaults follow paper §4.3).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Embedding dimension (paper: 128, 96 on Friendster).
+    pub dim: usize,
+    /// Training epochs; one epoch = |E| positive samples (paper §4.3).
+    pub epochs: usize,
+    /// Initial learning rate with linear decay (paper: 0.025).
+    pub lr: f32,
+    /// Negatives per positive (paper: 1).
+    pub negatives: usize,
+    /// Gradient scale on negatives (paper: 5).
+    pub neg_weight: f32,
+    /// Random-walk length in edges (paper: 5 on YouTube, 2 on dense nets).
+    pub walk_length: usize,
+    /// Augmentation distance s.
+    pub augmentation_distance: usize,
+    /// Number of simulated GPUs (device workers).
+    pub num_workers: usize,
+    /// Matrix partitions (0 = same as `num_workers`). The paper's §3.2
+    /// "any number of partitions greater than n" generalization: must be
+    /// a multiple of `num_workers`; each episode group is processed in
+    /// `num_partitions / num_workers` orthogonal waves. More partitions
+    /// shrink the per-device resident set (Table 1 sizing) at the cost of
+    /// more transfers.
+    pub num_partitions: usize,
+    /// CPU sampler threads feeding the pool.
+    pub num_samplers: usize,
+    /// Episode size: positive samples trained per set of n orthogonal
+    /// blocks (paper fig 5; tuned proportional to |V|). The pool holds
+    /// `episode_size` samples and one pool pass = `num_workers` episodes.
+    pub episode_size: usize,
+    /// Pool shuffle algorithm (paper: pseudo).
+    pub shuffle: ShuffleKind,
+    /// Device backend.
+    pub backend: BackendKind,
+    /// Collaboration strategy (double-buffered pools, §3.3). Off = the
+    /// sequential ablation row of Table 6.
+    pub collaboration: bool,
+    /// Parallel online augmentation (§3.1). Off = plain edge sampling
+    /// (the Table 6 ablation baseline).
+    pub online_augmentation: bool,
+    /// Bus usage optimization (§3.4): pin context partitions to workers
+    /// and rotate only vertex partitions.
+    pub fix_context: bool,
+    /// Mini-batch size fed to the device per step (HLO artifacts fix this
+    /// per variant; native backend uses it directly).
+    pub batch_size: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Print progress every N episodes (0 = quiet).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            dim: 64,
+            epochs: 10,
+            lr: 0.025,
+            negatives: 1,
+            neg_weight: 5.0,
+            walk_length: 5,
+            augmentation_distance: 2,
+            num_workers: 4,
+            num_partitions: 0,
+            num_samplers: 4,
+            episode_size: 200_000,
+            shuffle: ShuffleKind::Pseudo,
+            backend: BackendKind::Native,
+            collaboration: true,
+            online_augmentation: true,
+            fix_context: true,
+            batch_size: 256,
+            seed: 42,
+            log_every: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Validate invariants; call before training.
+    pub fn validate(&self) -> Result<()> {
+        if self.dim == 0 {
+            bail!("dim must be positive");
+        }
+        if self.num_workers == 0 || self.num_samplers == 0 {
+            bail!("num_workers and num_samplers must be positive");
+        }
+        if self.num_partitions != 0 {
+            if self.num_partitions % self.num_workers != 0 {
+                bail!(
+                    "num_partitions ({}) must be a multiple of num_workers ({})",
+                    self.num_partitions,
+                    self.num_workers
+                );
+            }
+            if self.fix_context && self.num_partitions != self.num_workers {
+                bail!("fix_context requires num_partitions == num_workers (paper section 3.4)");
+            }
+        }
+        if self.walk_length == 0 || self.augmentation_distance == 0 {
+            bail!("walk_length and augmentation_distance must be positive");
+        }
+        if self.episode_size == 0 || self.batch_size == 0 {
+            bail!("episode_size and batch_size must be positive");
+        }
+        if !(self.lr > 0.0) {
+            bail!("lr must be positive");
+        }
+        if self.negatives == 0 {
+            bail!("negatives must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file's `[train]` table (missing keys keep defaults).
+    pub fn from_toml_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        let mut cfg = TrainConfig::default();
+        let get = |key: &str| -> Option<&TomlValue> {
+            doc.get(&format!("train.{key}")).or_else(|| doc.get(key))
+        };
+        macro_rules! set_num {
+            ($field:ident, $key:expr, $ty:ty) => {
+                if let Some(v) = get($key) {
+                    cfg.$field = v.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!(concat!($key, " must be a number"))
+                    })? as $ty;
+                }
+            };
+        }
+        set_num!(dim, "dim", usize);
+        set_num!(epochs, "epochs", usize);
+        set_num!(lr, "lr", f32);
+        set_num!(negatives, "negatives", usize);
+        set_num!(neg_weight, "neg_weight", f32);
+        set_num!(walk_length, "walk_length", usize);
+        set_num!(augmentation_distance, "augmentation_distance", usize);
+        set_num!(num_workers, "num_workers", usize);
+        set_num!(num_partitions, "num_partitions", usize);
+        set_num!(num_samplers, "num_samplers", usize);
+        set_num!(episode_size, "episode_size", usize);
+        set_num!(batch_size, "batch_size", usize);
+        set_num!(seed, "seed", u64);
+        set_num!(log_every, "log_every", usize);
+        if let Some(v) = get("shuffle") {
+            let s = v.as_str().ok_or_else(|| anyhow::anyhow!("shuffle must be a string"))?;
+            cfg.shuffle = ShuffleKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown shuffle '{s}'"))?;
+        }
+        if let Some(v) = get("backend") {
+            let s = v.as_str().ok_or_else(|| anyhow::anyhow!("backend must be a string"))?;
+            cfg.backend = BackendKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown backend '{s}'"))?;
+        }
+        macro_rules! set_bool {
+            ($field:ident, $key:expr) => {
+                if let Some(v) = get($key) {
+                    cfg.$field = v.as_bool().ok_or_else(|| {
+                        anyhow::anyhow!(concat!($key, " must be a bool"))
+                    })?;
+                }
+            };
+        }
+        set_bool!(collaboration, "collaboration");
+        set_bool!(online_augmentation, "online_augmentation");
+        set_bool!(fix_context, "fix_context");
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Total positive samples this config trains (epochs × |E|).
+    pub fn total_samples(&self, num_edges: usize) -> u64 {
+        self.epochs as u64 * num_edges as u64
+    }
+
+    /// Effective partition count (defaults to the worker count).
+    pub fn partitions(&self) -> usize {
+        if self.num_partitions == 0 { self.num_workers } else { self.num_partitions }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let cfg = TrainConfig::from_toml_str(
+            r#"
+            [train]
+            dim = 32
+            epochs = 7
+            lr = 0.05
+            shuffle = "random"
+            backend = "hlo"
+            collaboration = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dim, 32);
+        assert_eq!(cfg.epochs, 7);
+        assert!((cfg.lr - 0.05).abs() < 1e-9);
+        assert_eq!(cfg.shuffle, ShuffleKind::Random);
+        assert_eq!(cfg.backend, BackendKind::Hlo);
+        assert!(!cfg.collaboration);
+        // untouched keys keep defaults
+        assert_eq!(cfg.negatives, 1);
+    }
+
+    #[test]
+    fn toml_without_section_works() {
+        let cfg = TrainConfig::from_toml_str("dim = 16\n").unwrap();
+        assert_eq!(cfg.dim, 16);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(TrainConfig::from_toml_str("dim = \"big\"\n").is_err());
+        assert!(TrainConfig::from_toml_str("shuffle = \"sorted\"\n").is_err());
+        assert!(TrainConfig::from_toml_str("dim = 0\n").is_err());
+    }
+
+    #[test]
+    fn total_samples() {
+        let cfg = TrainConfig { epochs: 3, ..Default::default() };
+        assert_eq!(cfg.total_samples(100), 300);
+    }
+}

@@ -1,0 +1,174 @@
+//! Minimal TOML-subset parser (flat tables, scalar values).
+//!
+//! Supports exactly what the config files need: `[section]` headers,
+//! `key = value` with integers, floats, booleans and quoted strings,
+//! comments (`#`), and blank lines. Keys inside a section are exposed as
+//! `"section.key"`. Arrays/dates/multi-line strings are out of scope.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a TOML-subset document into a flat `section.key -> value` map.
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            let name = name.trim();
+            if name.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected 'key = value'", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        let val = line[eq + 1..].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.insert(full_key, parse_value(val, lineno + 1)?);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("line {lineno}: missing value");
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            bail!("line {lineno}: unterminated string");
+        };
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value '{s}'");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_sections() {
+        let doc = parse_toml(
+            r#"
+            top = 1
+            [train]
+            dim = 128          # comment
+            lr = 0.025
+            name = "gv # not a comment"
+            flag = true
+            big = 1_000_000
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc["top"], TomlValue::Int(1));
+        assert_eq!(doc["train.dim"], TomlValue::Int(128));
+        assert_eq!(doc["train.lr"], TomlValue::Float(0.025));
+        assert_eq!(
+            doc["train.name"],
+            TomlValue::Str("gv # not a comment".into())
+        );
+        assert_eq!(doc["train.flag"], TomlValue::Bool(true));
+        assert_eq!(doc["train.big"], TomlValue::Int(1_000_000));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_toml("[unterminated\n").is_err());
+        assert!(parse_toml("keyonly\n").is_err());
+        assert!(parse_toml("k = \n").is_err());
+        assert!(parse_toml("k = \"open\n").is_err());
+        assert!(parse_toml("k = 12abc\n").is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        assert_eq!(TomlValue::Int(3).as_f64(), Some(3.0));
+        assert_eq!(TomlValue::Float(2.5).as_f64(), Some(2.5));
+        assert_eq!(TomlValue::Bool(true).as_bool(), Some(true));
+        assert_eq!(TomlValue::Str("x".into()).as_str(), Some("x"));
+        assert_eq!(TomlValue::Str("x".into()).as_f64(), None);
+    }
+}

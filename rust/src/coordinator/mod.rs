@@ -1,0 +1,517 @@
+//! The GraphVite coordinator: ties parallel online augmentation (CPU
+//! sampler threads), the double-buffered sample-pool pair, the episode
+//! scheduler and the device workers into the paper's full hybrid system
+//! (Figure 1 / Algorithm 3).
+//!
+//! Thread topology during [`Trainer::train`]:
+//!
+//! ```text
+//!   producer thread ──  fills pool (num_samplers sampler threads)
+//!        │ PoolPair (double buffer, §3.3 collaboration strategy)
+//!        ▼
+//!   main thread      ── redistribute pool into n×n BlockGrid,
+//!                       per episode group: gather partitions, send Jobs
+//!        │ mpsc per worker            ▲ results channel
+//!        ▼                            │
+//!   worker threads   ── one per simulated GPU; owns a WorkerBackend
+//!                       (PJRT client+executable or native trainer),
+//!                       draws restricted negatives, trains its block
+//! ```
+//!
+//! Ablation flags in [`TrainConfig`](crate::config::TrainConfig) switch
+//! off each paper component: `online_augmentation` (plain edge sampling
+//! instead), `collaboration` (fill and train sequentially), `fix_context`
+//! (transfer context partitions every episode) — these drive Table 6.
+
+mod worker;
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{BackendKind, TrainConfig};
+use crate::embedding::{EmbeddingStore, Matrix};
+use crate::graph::Graph;
+use crate::metrics::{Counters, TrainStats};
+use crate::partition::Partitioner;
+use crate::pool::{BlockGrid, PoolPair, SamplePool};
+use crate::pool::shuffle;
+use crate::runtime::ArtifactMeta;
+use crate::sampling::{AugmentConfig, EdgeSampler, NegativeSampler, OnlineAugmenter, RandomWalker};
+use crate::scheduler::EpisodeSchedule;
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+use worker::{spawn_workers, Job, JobMsg, JobResult};
+
+/// Output of a training run.
+#[derive(Debug)]
+pub struct TrainResult {
+    pub embeddings: EmbeddingStore,
+    pub stats: TrainStats,
+}
+
+/// Checkpoint callback: (positive samples trained so far, current store).
+pub type Checkpoint<'a> = &'a mut dyn FnMut(u64, &EmbeddingStore);
+
+/// The GraphVite system handle.
+pub struct Trainer {
+    graph: Arc<Graph>,
+    config: TrainConfig,
+}
+
+impl Trainer {
+    pub fn new(graph: Graph, config: TrainConfig) -> Result<Self> {
+        config.validate()?;
+        anyhow::ensure!(
+            graph.num_nodes() >= config.partitions(),
+            "graph smaller than partition count"
+        );
+        Ok(Trainer { graph: Arc::new(graph), config })
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.config
+    }
+
+    /// Train to completion.
+    pub fn train(&mut self) -> Result<TrainResult> {
+        self.train_with_callback(None)
+    }
+
+    /// Train, invoking `checkpoint` after every pool pass (used by the
+    /// Figure-4 performance-curve experiments). Note: with `fix_context`
+    /// the store's *context* matrix is only synchronized at the end of
+    /// training; checkpoints see current vertex embeddings (the ones all
+    /// evaluations use) and stale context rows.
+    pub fn train_with_callback(&mut self, mut checkpoint: Option<Checkpoint>) -> Result<TrainResult> {
+        let cfg = self.config.clone();
+        let graph = Arc::clone(&self.graph);
+        let counters = Arc::new(Counters::default());
+
+        // ---- preprocessing (paper's "preprocessing time" column) ----
+        let mut prep = Stopwatch::started();
+        let num_parts = cfg.partitions();
+        let parts = Arc::new(Partitioner::degree_zigzag(&graph, num_parts));
+        let neg = Arc::new(NegativeSampler::new(&graph, &parts));
+        let sched = EpisodeSchedule::new(num_parts, cfg.num_workers, cfg.fix_context);
+        let artifact: Option<ArtifactMeta> = match cfg.backend {
+            BackendKind::Hlo => {
+                let manifest = crate::runtime::default_manifest()?;
+                Some(
+                    manifest
+                        .find_train(parts.max_part_size(), cfg.dim)
+                        .context("selecting train artifact")?
+                        .clone(),
+                )
+            }
+            BackendKind::Native => None,
+        };
+        let mut store = EmbeddingStore::init(graph.num_nodes(), cfg.dim, cfg.seed);
+        prep.stop();
+
+        // ---- training ----
+        let mut train_sw = Stopwatch::started();
+        let total_samples = cfg.total_samples(self.graph.num_edges()).max(1);
+        let pool_size = cfg.episode_size.saturating_mul(num_parts).max(cfg.batch_size);
+        let num_pools = (total_samples as usize).div_ceil(pool_size);
+
+        let base_rng = Rng::new(cfg.seed);
+        let mut loss_curve: Vec<f32> = Vec::new();
+        let mut samples_done: u64 = 0;
+
+        // Shared read-only sampling structures, built ONCE. (Building the
+        // walker / departure table / edge sampler per pool fill used to
+        // rebuild |V| alias tables per sampler thread per pool on weighted
+        // graphs and dominated the profile — EXPERIMENTS.md §Perf.)
+        let sampling = SamplingShared::build(&graph, &cfg);
+
+        std::thread::scope(|scope| -> Result<()> {
+            // ---- device worker threads ----
+            let (handles, job_txs, result_rx) = spawn_workers(
+                scope,
+                &cfg,
+                artifact.as_ref(),
+                Arc::clone(&neg),
+                Arc::clone(&counters),
+                &base_rng,
+            );
+
+            // ---- pool production ----
+            let sampling_ref = &sampling;
+            let counters_ref = &counters;
+            let fill_pool = |pool: &mut SamplePool, pool_idx: usize, target: usize| {
+                let t0 = std::time::Instant::now();
+                fill_pool_parallel(sampling_ref, &cfg, &base_rng, pool_idx, target, pool);
+                counters_ref.add(&counters_ref.sampling_nanos, t0.elapsed().as_nanos() as u64);
+            };
+
+            let pair = Arc::new(PoolPair::new());
+            let producer_handle = if cfg.collaboration {
+                let pair = Arc::clone(&pair);
+                let cfg2 = cfg.clone();
+                let base2 = base_rng.clone();
+                let counters2 = Arc::clone(&counters);
+                Some(scope.spawn(move || {
+                    let mut buf = SamplePool::new();
+                    for pool_idx in 0..num_pools {
+                        buf.clear();
+                        let t0 = std::time::Instant::now();
+                        fill_pool_parallel(sampling_ref, &cfg2, &base2, pool_idx, pool_size, &mut buf);
+                        counters2.add(&counters2.sampling_nanos, t0.elapsed().as_nanos() as u64);
+                        buf = pair.publish(buf);
+                    }
+                    pair.finish();
+                }))
+            } else {
+                None
+            };
+
+            // ---- consumption: episodes over each pool ----
+            let consume_pool = |store: &mut EmbeddingStore,
+                                pool: SamplePool,
+                                samples_done: &mut u64,
+                                loss_curve: &mut Vec<f32>|
+             -> Result<()> {
+                counters.add(&counters.samples_generated, pool.len() as u64);
+                let mut grid = BlockGrid::redistribute(&pool, &parts);
+                for g in 0..sched.num_groups() {
+                    let mut ep_loss = 0.0f64;
+                    let mut ep_trained = 0u64;
+                    for w in 0..sched.waves_per_group() {
+                        let wave = sched.wave(g, w);
+                        let lr = cfg.lr
+                            * (1.0 - *samples_done as f32 / total_samples as f32).max(1e-4);
+                        let mut outstanding = 0usize;
+                        for a in &wave {
+                            let block = grid.take_block(a.vid, a.cid);
+                            let vcap = artifact.as_ref().map(|m| m.p).unwrap_or(parts.part_size(a.vid));
+                            let ccap = artifact.as_ref().map(|m| m.p).unwrap_or(parts.part_size(a.cid));
+                            let mut vertex = Vec::new();
+                            store.gather_partition(&parts, a.vid, vcap, Matrix::Vertex, &mut vertex);
+                            counters.add(&counters.bytes_to_device, (vertex.len() * 4) as u64);
+                            let context = if cfg.fix_context && g + w > 0 {
+                                None // resident on the worker since the first episode
+                            } else {
+                                let mut c = Vec::new();
+                                store.gather_partition(&parts, a.cid, ccap, Matrix::Context, &mut c);
+                                counters.add(&counters.bytes_to_device, (c.len() * 4) as u64);
+                                Some(c)
+                            };
+                            let is_last_group =
+                                g == sched.num_groups() - 1 && w == sched.waves_per_group() - 1;
+                            job_txs[a.worker]
+                                .send(JobMsg::Train(Job {
+                                    vid: a.vid,
+                                    cid: a.cid,
+                                    block,
+                                    vertex,
+                                    context,
+                                    return_context: !cfg.fix_context || is_last_group,
+                                    lr,
+                                }))
+                                .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+                            outstanding += 1;
+                        }
+                        for _ in 0..outstanding {
+                            let res: JobResult = result_rx
+                                .recv()
+                                .map_err(|_| anyhow::anyhow!("workers hung up"))??;
+                            store.scatter_partition(&parts, res.vid, Matrix::Vertex, &res.vertex);
+                            counters.add(&counters.bytes_from_device, (res.vertex.len() * 4) as u64);
+                            if let Some(ctx) = &res.context {
+                                store.scatter_partition(&parts, res.cid, Matrix::Context, ctx);
+                                counters.add(&counters.bytes_from_device, (ctx.len() * 4) as u64);
+                            }
+                            ep_loss += res.loss as f64 * res.trained as f64;
+                            ep_trained += res.trained;
+                            *samples_done += res.trained;
+                        }
+                    }
+                    counters.add(&counters.episodes, 1);
+                    if ep_trained > 0 {
+                        loss_curve.push((ep_loss / ep_trained as f64) as f32);
+                    }
+                    if cfg.log_every > 0 && loss_curve.len() % cfg.log_every == 0 {
+                        log::info!(
+                            "episode {} loss {:.4} ({}/{} samples)",
+                            loss_curve.len(),
+                            loss_curve.last().unwrap(),
+                            samples_done,
+                            total_samples
+                        );
+                    }
+                }
+                Ok(())
+            };
+
+            if cfg.collaboration {
+                while let Some(pool) = pair.take() {
+                    consume_pool(&mut store, pool, &mut samples_done, &mut loss_curve)?;
+                    pair.recycle(SamplePool::new());
+                    if let Some(cb) = checkpoint.as_mut() {
+                        cb(samples_done, &store);
+                    }
+                }
+            } else {
+                let mut buf = SamplePool::new();
+                for pool_idx in 0..num_pools {
+                    buf.clear();
+                    fill_pool(&mut buf, pool_idx, pool_size);
+                    let pool = std::mem::take(&mut buf);
+                    consume_pool(&mut store, pool, &mut samples_done, &mut loss_curve)?;
+                    if let Some(cb) = checkpoint.as_mut() {
+                        cb(samples_done, &store);
+                    }
+                }
+            }
+
+            // drain cached contexts (fix_context) + stop workers
+            for tx in &job_txs {
+                let _ = tx.send(JobMsg::Stop);
+            }
+            if let Some(h) = producer_handle {
+                h.join().map_err(|_| anyhow::anyhow!("producer panicked"))?;
+            }
+            for h in handles {
+                h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+            }
+            Ok(())
+        })?;
+
+        train_sw.stop();
+        let snapshot = counters.snapshot();
+        let stats = TrainStats {
+            train_secs: train_sw.secs(),
+            preprocess_secs: prep.secs(),
+            final_loss: loss_curve.last().copied().unwrap_or(f32::NAN),
+            loss_curve,
+            counters: snapshot,
+        };
+        Ok(TrainResult { embeddings: store, stats })
+    }
+}
+
+/// Read-only sampling structures shared by every sampler thread and every
+/// pool fill (built once per training run).
+struct SamplingShared<'g> {
+    graph: &'g Graph,
+    walker: Option<RandomWalker<'g>>,
+    departure: Option<AliasTableShared>,
+    edge_sampler: Option<EdgeSampler>,
+}
+
+type AliasTableShared = crate::sampling::AliasTable;
+
+impl<'g> SamplingShared<'g> {
+    fn build(graph: &'g Graph, cfg: &TrainConfig) -> Self {
+        if cfg.online_augmentation {
+            SamplingShared {
+                graph,
+                walker: Some(RandomWalker::new(graph)),
+                departure: Some(OnlineAugmenter::departure_table(graph)),
+                edge_sampler: None,
+            }
+        } else {
+            SamplingShared {
+                graph,
+                walker: None,
+                departure: None,
+                edge_sampler: Some(EdgeSampler::new(graph)),
+            }
+        }
+    }
+}
+
+/// Fill one pool with `target` samples using `num_samplers` CPU threads
+/// (parallel online augmentation, Algorithm 2), then shuffle (Table 7).
+fn fill_pool_parallel(
+    shared: &SamplingShared<'_>,
+    cfg: &TrainConfig,
+    base_rng: &Rng,
+    pool_idx: usize,
+    target: usize,
+    out: &mut SamplePool,
+) {
+    let num_samplers = cfg.num_samplers;
+    let per_thread = target.div_ceil(num_samplers);
+    let aug_cfg = AugmentConfig {
+        walk_length: cfg.walk_length,
+        augmentation_distance: cfg.augmentation_distance,
+    };
+
+    let mut parts: Vec<SamplePool> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..num_samplers)
+            .map(|i| {
+                let rng = base_rng.split((pool_idx as u64) << 20 | i as u64 | 1 << 40);
+                scope.spawn(move || {
+                    let mut local = SamplePool::with_capacity(per_thread);
+                    match (&shared.walker, &shared.departure, &shared.edge_sampler) {
+                        (Some(walker), Some(dep), _) => {
+                            let mut aug = OnlineAugmenter::new(walker, dep, aug_cfg, rng);
+                            aug.fill(&mut local, per_thread);
+                        }
+                        (_, _, Some(es)) => {
+                            let mut rng = rng;
+                            es.fill(&mut local, per_thread, &mut rng);
+                        }
+                        _ => unreachable!(),
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    out.clear();
+    out.reserve(target);
+    for p in &mut parts {
+        out.append(p);
+    }
+    out.truncate(target);
+    let mut rng = base_rng.split(0xF00D ^ pool_idx as u64);
+    shuffle::shuffle(cfg.shuffle, out, cfg.augmentation_distance.max(2), &mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::pool::ShuffleKind;
+
+    fn small_cfg() -> TrainConfig {
+        TrainConfig {
+            dim: 8,
+            epochs: 3,
+            num_workers: 2,
+            num_samplers: 2,
+            episode_size: 2_000,
+            batch_size: 64,
+            backend: BackendKind::Native,
+            shuffle: ShuffleKind::Pseudo,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn trains_karate_native() {
+        let g = generators::karate_club();
+        let mut t = Trainer::new(g, TrainConfig { num_workers: 2, ..small_cfg() }).unwrap();
+        let r = t.train().unwrap();
+        assert_eq!(r.embeddings.num_nodes(), 34);
+        assert!(r.stats.counters.samples_trained > 0);
+        assert!(r.stats.final_loss.is_finite());
+    }
+
+    #[test]
+    fn loss_decreases_on_structured_graph() {
+        let g = generators::planted_partition(500, 5, 20.0, 0.05, 7);
+        let cfg = TrainConfig { epochs: 20, ..small_cfg() };
+        let mut t = Trainer::new(g, cfg).unwrap();
+        let r = t.train().unwrap();
+        let curve = &r.stats.loss_curve;
+        assert!(curve.len() >= 4, "curve {curve:?}");
+        let head: f32 = curve[..2].iter().sum::<f32>() / 2.0;
+        let tail: f32 = curve[curve.len() - 2..].iter().sum::<f32>() / 2.0;
+        assert!(tail < head, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn sequential_mode_matches_sample_budget() {
+        let g = generators::barabasi_albert(300, 3, 3);
+        let edges = g.num_edges() as u64;
+        let cfg = TrainConfig { collaboration: false, epochs: 2, ..small_cfg() };
+        let mut t = Trainer::new(g, cfg).unwrap();
+        let r = t.train().unwrap();
+        // trained at least the requested budget (pool granularity rounds up)
+        assert!(r.stats.counters.samples_trained >= 2 * edges);
+    }
+
+    #[test]
+    fn ablations_run() {
+        let g = generators::barabasi_albert(200, 3, 4);
+        for (aug, collab, fixc) in [
+            (false, true, true),
+            (true, false, false),
+            (false, false, false),
+        ] {
+            let cfg = TrainConfig {
+                online_augmentation: aug,
+                collaboration: collab,
+                fix_context: fixc,
+                epochs: 1,
+                ..small_cfg()
+            };
+            let mut t = Trainer::new(g.clone(), cfg).unwrap();
+            let r = t.train().unwrap();
+            assert!(r.stats.counters.samples_trained > 0);
+        }
+    }
+
+    #[test]
+    fn more_partitions_than_workers() {
+        // paper section 3.2: "any number of partitions greater than n",
+        // processed in subgroups of n orthogonal blocks per episode.
+        let g = generators::planted_partition(400, 4, 16.0, 0.05, 23);
+        let cfg = TrainConfig {
+            num_workers: 2,
+            num_partitions: 6,
+            fix_context: false,
+            epochs: 120,
+            ..small_cfg()
+        };
+        let mut t = Trainer::new(g.clone(), cfg).unwrap();
+        let r = t.train().unwrap();
+        assert!(r.stats.counters.samples_trained > 0);
+        assert!(r.stats.final_loss.is_finite());
+        // quality must not collapse vs the square grid
+        let rep = crate::experiments::classify(&r.embeddings, &g, 0.05, 7);
+        assert!(rep.micro_f1 > 0.4, "micro {}", rep.micro_f1);
+    }
+
+    #[test]
+    fn partitions_must_be_multiple_of_workers() {
+        let g = generators::karate_club();
+        let cfg = TrainConfig {
+            num_workers: 2,
+            num_partitions: 5,
+            fix_context: false,
+            ..small_cfg()
+        };
+        assert!(Trainer::new(g, cfg).is_err());
+    }
+
+    #[test]
+    fn fix_context_rejects_extra_partitions() {
+        let g = generators::karate_club();
+        let cfg = TrainConfig {
+            num_workers: 2,
+            num_partitions: 4,
+            fix_context: true,
+            ..small_cfg()
+        };
+        assert!(Trainer::new(g, cfg).is_err());
+    }
+
+    #[test]
+    fn checkpoints_fire() {
+        let g = generators::barabasi_albert(200, 3, 5);
+        let mut cfg = small_cfg();
+        cfg.episode_size = 500; // several pools
+        cfg.epochs = 4;
+        let mut t = Trainer::new(g, cfg).unwrap();
+        let mut calls = 0;
+        let mut cb = |done: u64, store: &EmbeddingStore| {
+            assert!(done > 0);
+            assert_eq!(store.dim(), 8);
+            calls += 1;
+        };
+        t.train_with_callback(Some(&mut cb)).unwrap();
+        assert!(calls >= 2, "calls {calls}");
+    }
+}

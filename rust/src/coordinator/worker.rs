@@ -1,0 +1,315 @@
+//! Device worker threads: each simulated GPU owns a [`WorkerBackend`]
+//! (PJRT executable or native trainer), receives block jobs, draws its
+//! restricted negatives (paper §3.2 — only from the resident context
+//! partition), trains, and ships updated partitions back.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::{Scope, ScopedJoinHandle};
+
+use anyhow::Result;
+
+use crate::config::{BackendKind, TrainConfig};
+use crate::gpu::{ChunkPlan, HloWorker, NativeWorker, WorkerBackend};
+use crate::metrics::Counters;
+use crate::runtime::ArtifactMeta;
+use crate::sampling::NegativeSampler;
+use crate::util::rng::Rng;
+
+/// A block-training job.
+pub struct Job {
+    pub vid: usize,
+    pub cid: usize,
+    /// Partition-local (u, v) positive samples of block (vid, cid).
+    pub block: Vec<(i32, i32)>,
+    /// Padded vertex partition rows.
+    pub vertex: Vec<f32>,
+    /// Padded context partition rows; `None` = reuse the worker-resident
+    /// copy (bus-usage optimization, §3.4).
+    pub context: Option<Vec<f32>>,
+    /// Ship the context partition back with the result (off while the
+    /// context stays pinned to this worker).
+    pub return_context: bool,
+    pub lr: f32,
+}
+
+pub enum JobMsg {
+    Train(Job),
+    Stop,
+}
+
+/// Worker response to one job.
+pub struct JobResult {
+    pub vid: usize,
+    pub cid: usize,
+    pub vertex: Vec<f32>,
+    pub context: Option<Vec<f32>>,
+    pub loss: f32,
+    /// Real (unpadded) positive samples trained.
+    pub trained: u64,
+}
+
+type ResultTx = mpsc::Sender<Result<JobResult>>;
+
+/// Spawn `num_workers` device threads inside `scope`. Returns join
+/// handles, per-worker job senders, and the shared result receiver.
+pub fn spawn_workers<'scope, 'env>(
+    scope: &'scope Scope<'scope, 'env>,
+    cfg: &TrainConfig,
+    artifact: Option<&ArtifactMeta>,
+    neg: Arc<NegativeSampler>,
+    counters: Arc<Counters>,
+    base_rng: &Rng,
+) -> (
+    Vec<ScopedJoinHandle<'scope, Result<()>>>,
+    Vec<mpsc::Sender<JobMsg>>,
+    mpsc::Receiver<Result<JobResult>>,
+) {
+    let (result_tx, result_rx) = mpsc::channel::<Result<JobResult>>();
+    let mut handles = Vec::with_capacity(cfg.num_workers);
+    let mut job_txs = Vec::with_capacity(cfg.num_workers);
+    for i in 0..cfg.num_workers {
+        let (tx, rx) = mpsc::channel::<JobMsg>();
+        job_txs.push(tx);
+        let result_tx = result_tx.clone();
+        let neg = Arc::clone(&neg);
+        let counters = Arc::clone(&counters);
+        let rng = base_rng.split(0xBEEF ^ (i as u64));
+        let cfg = cfg.clone();
+        let artifact = artifact.cloned();
+        handles.push(scope.spawn(move || {
+            worker_loop(i, cfg, artifact, neg, counters, rng, rx, result_tx)
+        }));
+    }
+    (handles, job_txs, result_rx)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    _worker_idx: usize,
+    cfg: TrainConfig,
+    artifact: Option<ArtifactMeta>,
+    neg: Arc<NegativeSampler>,
+    counters: Arc<Counters>,
+    mut rng: Rng,
+    rx: mpsc::Receiver<JobMsg>,
+    tx: ResultTx,
+) -> Result<()> {
+    // Backend construction happens on this thread: PJRT handles are !Send,
+    // one client per simulated GPU (like one CUDA context per device).
+    let mut backend = match cfg.backend {
+        BackendKind::Hlo => WorkerBackend::Hlo(HloWorker::new(
+            artifact
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("hlo backend needs an artifact"))?,
+        )?),
+        BackendKind::Native => WorkerBackend::Native(NativeWorker::new(
+            cfg.dim,
+            cfg.batch_size,
+            cfg.negatives,
+            cfg.neg_weight,
+        )),
+    };
+
+    // fix_context residency: (cid, padded context rows)
+    let mut ctx_cache: Option<(usize, Vec<f32>)> = None;
+    // reusable chunk scratch (avoids 3 Vec allocations per chunk)
+    let mut scratch = ChunkPlan::default();
+
+    while let Ok(msg) = rx.recv() {
+        let job = match msg {
+            JobMsg::Train(job) => job,
+            JobMsg::Stop => break,
+        };
+        let out = run_job(
+            &cfg,
+            &mut backend,
+            &neg,
+            &counters,
+            &mut rng,
+            &mut ctx_cache,
+            &mut scratch,
+            job,
+        );
+        if tx.send(out).is_err() {
+            break; // coordinator gone
+        }
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_job(
+    _cfg: &TrainConfig,
+    backend: &mut WorkerBackend,
+    neg: &NegativeSampler,
+    counters: &Counters,
+    rng: &mut Rng,
+    ctx_cache: &mut Option<(usize, Vec<f32>)>,
+    scratch: &mut ChunkPlan,
+    job: Job,
+) -> Result<JobResult> {
+    let Job { vid, cid, block, mut vertex, context, return_context, lr } = job;
+    // resolve the context partition: shipped with the job or resident
+    let mut ctx = match context {
+        Some(c) => c,
+        None => match ctx_cache.take() {
+            Some((cached_cid, c)) if cached_cid == cid => c,
+            other => {
+                anyhow::bail!(
+                    "worker asked to reuse context {cid} but cache holds {:?}",
+                    other.map(|(c, _)| c)
+                )
+            }
+        },
+    };
+
+    let trained = block.len() as u64;
+    let loss = match backend {
+        // Native: stream chunks through one reusable scratch plan (the
+        // collected-Vec variant allocated 3 vectors per chunk and showed
+        // up as allocator churn — EXPERIMENTS.md §Perf).
+        WorkerBackend::Native(_) => {
+            let chunk_sz = backend.chunk_samples();
+            let k = backend.k();
+            let mut loss_sum = 0.0f64;
+            let mut chunks = 0usize;
+            let mut at = 0usize;
+            while at < block.len() {
+                let real =
+                    plan_chunk_into(scratch, chunk_sz, k, neg, cid, &block, at, lr, rng);
+                let t0 = std::time::Instant::now();
+                let loss = backend.train_chunks(
+                    &mut vertex,
+                    &mut ctx,
+                    std::slice::from_ref(scratch),
+                    counters,
+                )?;
+                counters.add(&counters.device_nanos, t0.elapsed().as_nanos() as u64);
+                loss_sum += loss as f64;
+                chunks += 1;
+                at += real;
+            }
+            if chunks > 0 { (loss_sum / chunks as f64) as f32 } else { 0.0 }
+        }
+        // HLO: one call per block so partitions are uploaded/downloaded
+        // once per episode (the paper's transfer pattern), not per chunk.
+        WorkerBackend::Hlo(_) => {
+            let chunks = plan_chunks(backend, neg, cid, &block, lr, rng);
+            let t0 = std::time::Instant::now();
+            let loss = backend.train_chunks(&mut vertex, &mut ctx, &chunks, counters)?;
+            counters.add(&counters.device_nanos, t0.elapsed().as_nanos() as u64);
+            loss
+        }
+    };
+    counters.add(&counters.samples_trained, trained);
+
+    let context_out = if return_context {
+        Some(ctx)
+    } else {
+        *ctx_cache = Some((cid, ctx));
+        None
+    };
+    Ok(JobResult { vid, cid, vertex, context: context_out, loss, trained })
+}
+
+/// Fill `plan` with the chunk starting at `at`: `chunk_sz` positives
+/// (wrap-around padded past the block end) and `chunk_sz * k` restricted
+/// negatives from context partition `cid`. Returns the number of real
+/// (unpadded) samples consumed.
+#[allow(clippy::too_many_arguments)]
+fn plan_chunk_into(
+    plan: &mut ChunkPlan,
+    chunk_sz: usize,
+    k: usize,
+    neg: &NegativeSampler,
+    cid: usize,
+    block: &[(i32, i32)],
+    at: usize,
+    lr: f32,
+    rng: &mut Rng,
+) -> usize {
+    debug_assert!(at < block.len());
+    let real = chunk_sz.min(block.len() - at);
+    plan.pos_u.clear();
+    plan.pos_v.clear();
+    plan.neg_v.clear();
+    for t in 0..chunk_sz {
+        // wrap-around pad: reuse samples from the block start; the
+        // duplicates are counted as padding (not in `real`).
+        let (u, v) = block[(at + t) % block.len()];
+        plan.pos_u.push(u);
+        plan.pos_v.push(v);
+    }
+    for _ in 0..chunk_sz * k {
+        plan.neg_v.push(neg.sample_local(cid, rng) as i32);
+    }
+    plan.lr = lr;
+    plan.real = real;
+    real
+}
+
+/// Collected-Vec chunk planning (kept for tests and the HLO parity
+/// harness; the worker hot path streams through `plan_chunk_into`).
+fn plan_chunks(
+    backend: &WorkerBackend,
+    neg: &NegativeSampler,
+    cid: usize,
+    block: &[(i32, i32)],
+    lr: f32,
+    rng: &mut Rng,
+) -> Vec<ChunkPlan> {
+    let chunk_sz = backend.chunk_samples();
+    let k = backend.k();
+    if block.is_empty() {
+        return Vec::new();
+    }
+    let mut chunks = Vec::with_capacity(block.len().div_ceil(chunk_sz));
+    let mut at = 0usize;
+    while at < block.len() {
+        let mut plan = ChunkPlan::default();
+        let real = plan_chunk_into(&mut plan, chunk_sz, k, neg, cid, block, at, lr, rng);
+        chunks.push(plan);
+        at += real;
+    }
+    chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::Partitioner;
+
+    #[test]
+    fn plan_chunks_covers_block_with_padding() {
+        let g = generators::barabasi_albert(100, 3, 1);
+        let parts = Partitioner::degree_zigzag(&g, 2);
+        let neg = NegativeSampler::new(&g, &parts);
+        let backend = WorkerBackend::Native(NativeWorker::new(8, 32, 2, 5.0));
+        let block: Vec<(i32, i32)> = (0..70).map(|i| (i % 50, (i + 1) % 50)).collect();
+        let mut rng = Rng::new(1);
+        let chunks = plan_chunks(&backend, &neg, 0, &block, 0.025, &mut rng);
+        assert_eq!(chunks.len(), 3); // ceil(70/32)
+        assert_eq!(chunks.iter().map(|c| c.real).sum::<usize>(), 70);
+        for c in &chunks {
+            assert_eq!(c.pos_u.len(), 32);
+            assert_eq!(c.neg_v.len(), 64); // k=2
+            assert!(c.neg_v.iter().all(|&n| (n as usize) < parts.part_size(0)));
+        }
+        // final chunk wraps around to the beginning
+        let last = chunks.last().unwrap();
+        assert_eq!(last.real, 70 - 64);
+        assert_eq!((last.pos_u[6], last.pos_v[6]), (block[0].0, block[0].1));
+    }
+
+    #[test]
+    fn empty_block_no_chunks() {
+        let g = generators::karate_club();
+        let parts = Partitioner::degree_zigzag(&g, 2);
+        let neg = NegativeSampler::new(&g, &parts);
+        let backend = WorkerBackend::Native(NativeWorker::new(4, 16, 1, 5.0));
+        let mut rng = Rng::new(2);
+        assert!(plan_chunks(&backend, &neg, 1, &[], 0.1, &mut rng).is_empty());
+    }
+}

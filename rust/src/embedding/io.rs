@@ -1,0 +1,144 @@
+//! Embedding persistence: a compact binary format (magic + header + raw
+//! f32 rows) and the word2vec text format other toolchains consume.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::EmbeddingStore;
+
+const MAGIC: &[u8; 8] = b"GRVITE01";
+
+/// Save both matrices in the binary format.
+pub fn save_embeddings_binary(store: &EmbeddingStore, path: impl AsRef<Path>) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(store.num_nodes() as u64).to_le_bytes())?;
+    w.write_all(&(store.dim() as u64).to_le_bytes())?;
+    for mat in [store.vertex_matrix(), store.context_matrix()] {
+        // SAFETY-free path: write f32s via to_le_bytes chunks
+        let mut buf = Vec::with_capacity(mat.len() * 4);
+        for &x in mat {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Load a binary embedding file.
+pub fn load_embeddings(path: impl AsRef<Path>) -> Result<EmbeddingStore> {
+    let mut r = BufReader::new(File::open(path.as_ref()).with_context(|| {
+        format!("open {}", path.as_ref().display())
+    })?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a graphvite embedding file (bad magic)");
+    }
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let n = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let d = u64::from_le_bytes(u64buf) as usize;
+    let mut read_matrix = |len: usize| -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; len * 4];
+        r.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    };
+    let vertex = read_matrix(n * d)?;
+    let context = read_matrix(n * d)?;
+    Ok(EmbeddingStore::from_raw(n, d, vertex, context))
+}
+
+/// Save the vertex matrix in word2vec text format (`n d` header, then
+/// `node x1 x2 …` per line).
+pub fn save_embeddings_text(store: &EmbeddingStore, path: impl AsRef<Path>) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "{} {}", store.num_nodes(), store.dim())?;
+    for v in 0..store.num_nodes() as u32 {
+        write!(w, "{v}")?;
+        for x in store.vertex(v) {
+            write!(w, " {x}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Load word2vec text format (vertex matrix only; context zeroed).
+pub fn load_embeddings_text(path: impl AsRef<Path>) -> Result<EmbeddingStore> {
+    let r = BufReader::new(File::open(path)?);
+    let mut lines = r.lines();
+    let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty file"))??;
+    let mut it = header.split_whitespace();
+    let n: usize = it.next().unwrap().parse()?;
+    let d: usize = it
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("bad header"))?
+        .parse()?;
+    let mut vertex = vec![0f32; n * d];
+    for line in lines {
+        let line = line?;
+        let mut it = line.split_whitespace();
+        let v: usize = match it.next() {
+            Some(tok) => tok.parse()?,
+            None => continue,
+        };
+        for (j, tok) in it.enumerate() {
+            if j >= d {
+                bail!("row {v} has more than {d} values");
+            }
+            vertex[v * d + j] = tok.parse()?;
+        }
+    }
+    Ok(EmbeddingStore::from_raw(n, d, vertex, vec![0.0; n * d]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("graphvite_emb_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let e = EmbeddingStore::init(37, 9, 1);
+        let p = tmp("emb.bin");
+        save_embeddings_binary(&e, &p).unwrap();
+        let e2 = load_embeddings(&p).unwrap();
+        assert_eq!(e2.num_nodes(), 37);
+        assert_eq!(e2.dim(), 9);
+        assert_eq!(e.vertex_matrix(), e2.vertex_matrix());
+        assert_eq!(e.context_matrix(), e2.context_matrix());
+    }
+
+    #[test]
+    fn text_roundtrip_vertex() {
+        let e = EmbeddingStore::init(7, 3, 2);
+        let p = tmp("emb.txt");
+        save_embeddings_text(&e, &p).unwrap();
+        let e2 = load_embeddings_text(&p).unwrap();
+        for v in 0..7u32 {
+            for (a, b) in e.vertex(v).iter().zip(e2.vertex(v)) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC__________").unwrap();
+        assert!(load_embeddings(&p).is_err());
+    }
+}

@@ -1,0 +1,268 @@
+//! Embedding storage: the `vertex` and `context` matrices living in main
+//! memory (paper Table 1 — at 50M nodes they are 23.8 GB each, which is
+//! why they cannot live on any single GPU and must be partitioned).
+//!
+//! Provides word2vec-style initialization, partition gather/scatter (the
+//! host side of the per-episode transfers) and binary/text persistence.
+
+mod io;
+
+pub use io::{load_embeddings, load_embeddings_text, save_embeddings_binary, save_embeddings_text};
+
+use crate::partition::Partitioning;
+use crate::util::rng::Rng;
+
+/// Dense row-major `num_nodes × dim` matrix pair.
+#[derive(Debug, Clone)]
+pub struct EmbeddingStore {
+    num_nodes: usize,
+    dim: usize,
+    vertex: Vec<f32>,
+    context: Vec<f32>,
+}
+
+impl EmbeddingStore {
+    /// word2vec-style init: vertex ~ U[-0.5/d, 0.5/d), context = 0
+    /// (LINE/DeepWalk both use this asymmetric init).
+    pub fn init(num_nodes: usize, dim: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let bound = 0.5 / dim as f32;
+        let vertex = (0..num_nodes * dim)
+            .map(|_| rng.range_f32(-bound, bound))
+            .collect();
+        let context = vec![0.0; num_nodes * dim];
+        EmbeddingStore { num_nodes, dim, vertex, context }
+    }
+
+    /// Construct from raw matrices (loader / tests).
+    pub fn from_raw(num_nodes: usize, dim: usize, vertex: Vec<f32>, context: Vec<f32>) -> Self {
+        assert_eq!(vertex.len(), num_nodes * dim);
+        assert_eq!(context.len(), num_nodes * dim);
+        EmbeddingStore { num_nodes, dim, vertex, context }
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Vertex embedding of node `v`.
+    #[inline]
+    pub fn vertex(&self, v: u32) -> &[f32] {
+        let d = self.dim;
+        &self.vertex[v as usize * d..(v as usize + 1) * d]
+    }
+
+    #[inline]
+    pub fn context(&self, v: u32) -> &[f32] {
+        let d = self.dim;
+        &self.context[v as usize * d..(v as usize + 1) * d]
+    }
+
+    pub fn vertex_matrix(&self) -> &[f32] {
+        &self.vertex
+    }
+
+    pub fn context_matrix(&self) -> &[f32] {
+        &self.context
+    }
+
+    pub fn vertex_matrix_mut(&mut self) -> &mut [f32] {
+        &mut self.vertex
+    }
+
+    pub fn context_matrix_mut(&mut self) -> &mut [f32] {
+        &mut self.context
+    }
+
+    /// Gather partition `p`'s rows into a zero-padded `capacity × dim`
+    /// buffer (the "send vertex_partitions[vid] to GPU" transfer of
+    /// Algorithm 3). `capacity >= part_size(p)`.
+    pub fn gather_partition(
+        &self,
+        parts: &Partitioning,
+        p: usize,
+        capacity: usize,
+        which: Matrix,
+        out: &mut Vec<f32>,
+    ) {
+        let nodes = parts.nodes_of_part(p);
+        assert!(capacity >= nodes.len(), "capacity {} < partition {}", capacity, nodes.len());
+        let d = self.dim;
+        let src = match which {
+            Matrix::Vertex => &self.vertex,
+            Matrix::Context => &self.context,
+        };
+        out.clear();
+        out.resize(capacity * d, 0.0);
+        for (row, &v) in nodes.iter().enumerate() {
+            let s = v as usize * d;
+            out[row * d..(row + 1) * d].copy_from_slice(&src[s..s + d]);
+        }
+    }
+
+    /// Scatter a padded partition buffer back ("receive … from GPU i").
+    pub fn scatter_partition(
+        &mut self,
+        parts: &Partitioning,
+        p: usize,
+        which: Matrix,
+        data: &[f32],
+    ) {
+        let nodes = parts.nodes_of_part(p);
+        let d = self.dim;
+        assert!(data.len() >= nodes.len() * d);
+        let dst = match which {
+            Matrix::Vertex => &mut self.vertex,
+            Matrix::Context => &mut self.context,
+        };
+        for (row, &v) in nodes.iter().enumerate() {
+            let s = v as usize * d;
+            dst[s..s + d].copy_from_slice(&data[row * d..(row + 1) * d]);
+        }
+    }
+
+    /// L2-normalized copy of the vertex matrix (the paper normalizes
+    /// embeddings before the YouTube classification eval, §4.4).
+    pub fn normalized_vertex(&self) -> Vec<f32> {
+        let d = self.dim;
+        let mut out = self.vertex.clone();
+        for row in out.chunks_mut(d) {
+            let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 1e-12 {
+                for x in row {
+                    *x /= norm;
+                }
+            }
+        }
+        out
+    }
+
+    /// Mean-centered then L2-normalized vertex matrix — the feature space
+    /// all evaluations use.
+    ///
+    /// SGNS embeddings carry a large *common drift component* (the
+    /// weighted negative gradient pushes every vertex away from the mean
+    /// context direction). A fully converged linear classifier absorbs a
+    /// shared direction into its bias, but it drowns cosine similarities
+    /// and slows iterative solvers badly; centering removes it without
+    /// touching relative structure. (The paper's eval uses liblinear,
+    /// which converges to the same optimum either way.)
+    pub fn centered_normalized_vertex(&self) -> Vec<f32> {
+        let d = self.dim;
+        let n = self.num_nodes;
+        let mut out = self.vertex.clone();
+        let mut mean = vec![0f32; d];
+        for row in out.chunks(d) {
+            for (m, x) in mean.iter_mut().zip(row) {
+                *m += x;
+            }
+        }
+        for m in &mut mean {
+            *m /= n.max(1) as f32;
+        }
+        for row in out.chunks_mut(d) {
+            for (x, m) in row.iter_mut().zip(&mean) {
+                *x -= m;
+            }
+            let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 1e-12 {
+                for x in row {
+                    *x /= norm;
+                }
+            }
+        }
+        out
+    }
+
+    /// Memory footprint of both matrices in bytes (Table 1 accounting).
+    pub fn bytes(&self) -> u64 {
+        (self.vertex.len() + self.context.len()) as u64 * 4
+    }
+}
+
+/// Which matrix a partition transfer touches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Matrix {
+    Vertex,
+    Context,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::Partitioner;
+
+    #[test]
+    fn init_ranges() {
+        let e = EmbeddingStore::init(10, 8, 1);
+        let bound = 0.5 / 8.0;
+        for &x in e.vertex_matrix() {
+            assert!(x >= -bound && x < bound);
+        }
+        assert!(e.context_matrix().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let g = generators::barabasi_albert(100, 2, 1);
+        let parts = Partitioner::degree_zigzag(&g, 3);
+        let mut e = EmbeddingStore::init(100, 4, 2);
+        let orig = e.vertex_matrix().to_vec();
+        let cap = parts.max_part_size() + 5;
+        let mut buf = Vec::new();
+        for p in 0..3 {
+            e.gather_partition(&parts, p, cap, Matrix::Vertex, &mut buf);
+            assert_eq!(buf.len(), cap * 4);
+            // padding rows are zero
+            for row in parts.part_size(p)..cap {
+                assert!(buf[row * 4..(row + 1) * 4].iter().all(|&x| x == 0.0));
+            }
+            e.scatter_partition(&parts, p, Matrix::Vertex, &buf);
+        }
+        assert_eq!(e.vertex_matrix(), &orig[..]);
+    }
+
+    #[test]
+    fn scatter_applies_updates() {
+        let g = generators::karate_club();
+        let parts = Partitioner::degree_zigzag(&g, 2);
+        let mut e = EmbeddingStore::init(34, 4, 3);
+        let cap = parts.max_part_size();
+        let mut buf = Vec::new();
+        e.gather_partition(&parts, 0, cap, Matrix::Context, &mut buf);
+        for x in buf.iter_mut() {
+            *x += 1.0;
+        }
+        e.scatter_partition(&parts, 0, Matrix::Context, &buf);
+        for &v in parts.nodes_of_part(0) {
+            assert!(e.context(v).iter().all(|&x| x == 1.0));
+        }
+        for &v in parts.nodes_of_part(1) {
+            assert!(e.context(v).iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn normalization_unit_rows() {
+        let mut e = EmbeddingStore::init(5, 4, 4);
+        e.vertex_matrix_mut().iter_mut().for_each(|x| *x += 0.3);
+        let n = e.normalized_vertex();
+        for row in n.chunks(4) {
+            let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let e = EmbeddingStore::init(1000, 128, 5);
+        assert_eq!(e.bytes(), 2 * 1000 * 128 * 4);
+    }
+}

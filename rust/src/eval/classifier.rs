@@ -1,0 +1,235 @@
+//! One-vs-rest logistic regression over (normalized) node embeddings —
+//! the paper's node-classification protocol (§4.4: "train one-vs-rest
+//! linear classifiers over the normalized node embeddings"), with
+//! micro-/macro-F1 reporting.
+
+use crate::util::rng::Rng;
+
+/// Trained OvR logistic regression: one (w, b) per class.
+#[derive(Debug, Clone)]
+pub struct LogisticOvR {
+    num_classes: usize,
+    dim: usize,
+    /// weights: `num_classes × dim`, row-major.
+    weights: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+impl LogisticOvR {
+    /// Fit with mini-batchless SGD + L2. `features` is row-major `n × dim`
+    /// (pass [`crate::embedding::EmbeddingStore::normalized_vertex`]),
+    /// `labels[i] < num_classes`, training restricted to `train_ids`.
+    pub fn fit(
+        features: &[f32],
+        dim: usize,
+        labels: &[u16],
+        train_ids: &[u32],
+        num_classes: usize,
+        epochs: usize,
+        lr: f32,
+        l2: f32,
+        seed: u64,
+    ) -> Self {
+        assert!(num_classes >= 2);
+        let mut model = LogisticOvR {
+            num_classes,
+            dim,
+            weights: vec![0.0; num_classes * dim],
+            bias: vec![0.0; num_classes],
+        };
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<u32> = train_ids.to_vec();
+        for epoch in 0..epochs {
+            rng.shuffle(&mut order);
+            let lr_t = lr / (1.0 + epoch as f32 * 0.1);
+            for &i in &order {
+                let x = &features[i as usize * dim..(i as usize + 1) * dim];
+                let y = labels[i as usize] as usize;
+                for c in 0..num_classes {
+                    let w = &mut model.weights[c * dim..(c + 1) * dim];
+                    let z: f32 =
+                        w.iter().zip(x).map(|(a, b)| a * b).sum::<f32>() + model.bias[c];
+                    let p = 1.0 / (1.0 + (-z).exp());
+                    let t = if c == y { 1.0 } else { 0.0 };
+                    let g = p - t;
+                    for (wj, xj) in w.iter_mut().zip(x) {
+                        *wj -= lr_t * (g * xj + l2 * *wj);
+                    }
+                    model.bias[c] -= lr_t * g;
+                }
+            }
+        }
+        model
+    }
+
+    /// Predict the argmax class for node features `x`.
+    pub fn predict(&self, x: &[f32]) -> u16 {
+        let mut best = 0usize;
+        let mut best_z = f32::NEG_INFINITY;
+        for c in 0..self.num_classes {
+            let w = &self.weights[c * self.dim..(c + 1) * self.dim];
+            let z: f32 = w.iter().zip(x).map(|(a, b)| a * b).sum::<f32>() + self.bias[c];
+            if z > best_z {
+                best_z = z;
+                best = c;
+            }
+        }
+        best as u16
+    }
+
+    /// Evaluate on `test_ids`, returning micro/macro F1.
+    pub fn evaluate(
+        &self,
+        features: &[f32],
+        labels: &[u16],
+        test_ids: &[u32],
+    ) -> NodeClassificationReport {
+        let k = self.num_classes;
+        let mut tp = vec![0u64; k];
+        let mut fp = vec![0u64; k];
+        let mut fn_ = vec![0u64; k];
+        for &i in test_ids {
+            let x = &features[i as usize * self.dim..(i as usize + 1) * self.dim];
+            let pred = self.predict(x) as usize;
+            let truth = labels[i as usize] as usize;
+            if pred == truth {
+                tp[truth] += 1;
+            } else {
+                fp[pred] += 1;
+                fn_[truth] += 1;
+            }
+        }
+        NodeClassificationReport::from_counts(&tp, &fp, &fn_)
+    }
+}
+
+/// Micro/macro-F1 report (the two Table 4 metrics).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeClassificationReport {
+    pub micro_f1: f64,
+    pub macro_f1: f64,
+}
+
+impl NodeClassificationReport {
+    pub fn from_counts(tp: &[u64], fp: &[u64], fn_: &[u64]) -> Self {
+        let k = tp.len();
+        // micro: pool all counts. (For single-label multi-class, micro-F1
+        // equals accuracy; kept in count form for clarity/extensibility.)
+        let (stp, sfp, sfn): (u64, u64, u64) = (
+            tp.iter().sum(),
+            fp.iter().sum(),
+            fn_.iter().sum(),
+        );
+        let micro = f1(stp, sfp, sfn);
+        // macro: average per-class F1 over classes that appear
+        let mut macro_sum = 0.0;
+        let mut present = 0usize;
+        for c in 0..k {
+            if tp[c] + fn_[c] == 0 {
+                continue; // class absent from test set
+            }
+            macro_sum += f1(tp[c], fp[c], fn_[c]);
+            present += 1;
+        }
+        NodeClassificationReport {
+            micro_f1: micro,
+            macro_f1: if present > 0 { macro_sum / present as f64 } else { 0.0 },
+        }
+    }
+}
+
+fn f1(tp: u64, fp: u64, fn_: u64) -> f64 {
+    if tp == 0 {
+        return 0.0;
+    }
+    let p = tp as f64 / (tp + fp) as f64;
+    let r = tp as f64 / (tp + fn_) as f64;
+    2.0 * p * r / (p + r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Linearly separable 2-class blob data.
+    fn blobs(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<u16>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::with_capacity(n * dim);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = (i % 2) as u16;
+            let center = if c == 0 { -1.0 } else { 1.0 };
+            for _ in 0..dim {
+                x.push(center + rng.normal() as f32 * 0.3);
+            }
+            y.push(c);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn separable_blobs_high_f1() {
+        let (x, y) = blobs(400, 8, 1);
+        let (train, test) = crate::eval::train_test_split(400, 0.5, 2);
+        let model = LogisticOvR::fit(&x, 8, &y, &train, 2, 20, 0.5, 1e-4, 3);
+        let rep = model.evaluate(&x, &y, &test);
+        assert!(rep.micro_f1 > 0.95, "micro {}", rep.micro_f1);
+        assert!(rep.macro_f1 > 0.95, "macro {}", rep.macro_f1);
+    }
+
+    #[test]
+    fn three_class_blobs() {
+        // class c centered at angle 2πc/3 in first two dims
+        let n = 600;
+        let dim = 4;
+        let mut rng = Rng::new(4);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let c = (i % 3) as u16;
+            let ang = 2.0 * std::f64::consts::PI * c as f64 / 3.0;
+            x.push((ang.cos() * 2.0 + rng.normal() * 0.3) as f32);
+            x.push((ang.sin() * 2.0 + rng.normal() * 0.3) as f32);
+            for _ in 2..dim {
+                x.push(rng.normal() as f32 * 0.1);
+            }
+            y.push(c);
+        }
+        let (train, test) = crate::eval::train_test_split(n, 0.3, 5);
+        let model = LogisticOvR::fit(&x, dim, &y, &train, 3, 25, 0.5, 1e-4, 6);
+        let rep = model.evaluate(&x, &y, &test);
+        assert!(rep.micro_f1 > 0.9, "micro {}", rep.micro_f1);
+    }
+
+    #[test]
+    fn random_labels_near_chance() {
+        let mut rng = Rng::new(7);
+        let n = 500;
+        let dim = 8;
+        let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        let y: Vec<u16> = (0..n).map(|_| (rng.below(4)) as u16).collect();
+        let (train, test) = train_split(n);
+        let model = LogisticOvR::fit(&x, dim, &y, &train, 4, 10, 0.2, 1e-4, 8);
+        let rep = model.evaluate(&x, &y, &test);
+        assert!(rep.micro_f1 < 0.45, "micro {}", rep.micro_f1); // ~0.25 expected
+    }
+
+    fn train_split(n: usize) -> (Vec<u32>, Vec<u32>) {
+        crate::eval::train_test_split(n, 0.5, 9)
+    }
+
+    #[test]
+    fn f1_math() {
+        assert_eq!(f1(0, 0, 0), 0.0);
+        assert!((f1(10, 0, 0) - 1.0).abs() < 1e-12);
+        // p=0.5, r=1.0 -> f1 = 2/3
+        assert!((f1(10, 10, 0) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_counts_perfect_report() {
+        let rep = NodeClassificationReport::from_counts(&[5, 5], &[0, 0], &[0, 0]);
+        assert_eq!(rep.micro_f1, 1.0);
+        assert_eq!(rep.macro_f1, 1.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Downstream evaluation substrate: the tasks the paper measures
+//! embedding quality with — multi-class node classification via
+//! one-vs-rest logistic regression (Tables 4/6/7, Figs 4/5) and link
+//! prediction AUC (Hyperlink-PLD, Fig 4).
+
+pub mod classifier;
+pub mod linkpred;
+pub mod split;
+
+pub use classifier::{LogisticOvR, NodeClassificationReport};
+pub use linkpred::{auc_from_scores, link_prediction_auc, LinkSplit};
+pub use split::train_test_split;

@@ -1,0 +1,49 @@
+//! Deterministic train/test splits for labelled nodes.
+
+use crate::util::rng::Rng;
+
+/// Split node ids `0..n` into (train, test) with `train_frac` of nodes in
+/// the training set, shuffled by `seed`. Matches the paper's
+/// "% labeled nodes" protocol (Table 4's 1%..10% sweep).
+pub fn train_test_split(n: usize, train_frac: f64, seed: u64) -> (Vec<u32>, Vec<u32>) {
+    assert!((0.0..=1.0).contains(&train_frac));
+    let mut rng = Rng::new(seed);
+    let mut ids: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut ids);
+    let cut = ((n as f64) * train_frac).round() as usize;
+    let cut = cut.clamp(1, n.saturating_sub(1).max(1));
+    let train = ids[..cut].to_vec();
+    let test = ids[cut..].to_vec();
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_sizes_and_disjoint() {
+        let (tr, te) = train_test_split(1000, 0.1, 1);
+        assert_eq!(tr.len(), 100);
+        assert_eq!(te.len(), 900);
+        let mut all: Vec<u32> = tr.iter().chain(te.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = train_test_split(100, 0.3, 7);
+        let b = train_test_split(100, 0.3, 7);
+        assert_eq!(a, b);
+        let c = train_test_split(100, 0.3, 8);
+        assert_ne!(a.0, c.0);
+    }
+
+    #[test]
+    fn tiny_fractions_keep_at_least_one() {
+        let (tr, te) = train_test_split(50, 0.001, 3);
+        assert_eq!(tr.len(), 1);
+        assert_eq!(te.len(), 49);
+    }
+}

@@ -1,0 +1,40 @@
+//! Figure 5 — episode-size sweep on 4 workers: samples/second and
+//! micro-F1 vs episode size. Shape: speed rises with episode size
+//! (amortized transfers) then flattens/drops when only a few episodes
+//! remain; F1 is insensitive across the sweep.
+
+use anyhow::Result;
+
+use crate::coordinator::Trainer;
+use crate::experiments::presets::{classify, Scale, Workload};
+use crate::util::bench::Table;
+
+pub fn run(scale: Scale) -> Result<()> {
+    let w = Workload::youtube_like(scale);
+    let total = w.graph.num_edges() * w.config.epochs;
+    // sweep episode sizes as fractions of the total budget
+    let sizes: Vec<usize> = [256usize, 64, 16, 4, 1]
+        .iter()
+        .map(|div| (total / (div * w.config.num_workers)).max(512))
+        .collect();
+
+    let mut table = Table::new(
+        "Figure 5 — speed & performance vs episode size (4 workers)",
+        &["episode size", "episodes", "samples/s", "micro-F1@2%"],
+    );
+    for episode_size in sizes {
+        let mut cfg = w.config.clone();
+        cfg.episode_size = episode_size;
+        let mut trainer = Trainer::new(w.graph.clone(), cfg)?;
+        let r = trainer.train()?;
+        let rep = classify(&r.embeddings, &w.graph, 0.02, 7);
+        table.row(&[
+            format!("{episode_size}"),
+            format!("{}", r.stats.counters.episodes),
+            format!("{:.0}", r.stats.throughput()),
+            format!("{:.2}", rep.micro_f1 * 100.0),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Figure 6 — speedup vs number of workers ("GPUs") × samplers per
+//! worker (CPU threads). Shape: near-planar speedup in both axes, around
+//! half the theoretical maximum at the largest configuration.
+//!
+//! TESTBED NOTE: one CPU core — measured wall clock shows coordination
+//! overhead only. The projected table applies the critical-path model
+//! (device compute / workers, sampling / samplers, overlapped when the
+//! double buffer is on) to the measured per-stage times; that is the
+//! quantity the paper's Figure 6 plots.
+
+use anyhow::Result;
+
+use crate::coordinator::Trainer;
+use crate::experiments::presets::{Scale, Workload};
+use crate::util::bench::Table;
+
+pub fn run(scale: Scale) -> Result<()> {
+    let w = Workload::youtube_like(scale);
+    let samplers_per: Vec<usize> = vec![1, 2, 3];
+    let workers_axis: Vec<usize> = vec![1, 2, 4];
+
+    // baseline: 1 worker, 1 sampler
+    let mut base_cfg = w.config.clone();
+    base_cfg.num_workers = 1;
+    base_cfg.num_samplers = 1;
+    let mut trainer = Trainer::new(w.graph.clone(), base_cfg)?;
+    let base = trainer.train()?.stats.throughput();
+
+    let mut headers: Vec<String> = vec!["workers \\ samplers/worker".into()];
+    headers.extend(samplers_per.iter().map(|s| format!("{s}")));
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Figure 6 — speedup over (1 worker, 1 sampler) baseline",
+        &headers_ref,
+    );
+    let mut proj_table = Table::new(
+        "Figure 6 (projected) — critical-path speedup on parallel hardware",
+        &headers_ref,
+    );
+    // projected baseline: 1 worker, 1 sampler on dedicated cores
+    let mut base_cfg = w.config.clone();
+    base_cfg.num_workers = 1;
+    base_cfg.num_samplers = 1;
+    let mut trainer = Trainer::new(w.graph.clone(), base_cfg)?;
+    let base_stats = trainer.train()?.stats;
+    let proj_base = base_stats.projected_parallel_secs(1, true);
+    let total_samples = base_stats.counters.samples_trained as f64;
+
+    for &workers in &workers_axis {
+        let mut row = vec![format!("{workers}")];
+        let mut proj_row = vec![format!("{workers}")];
+        for &sp in &samplers_per {
+            let mut cfg = w.config.clone();
+            cfg.num_workers = workers;
+            cfg.num_samplers = (sp * workers).max(1);
+            let num_samplers = cfg.num_samplers;
+            let mut trainer = Trainer::new(w.graph.clone(), cfg)?;
+            let stats = trainer.train()?.stats;
+            row.push(format!("{:.2}x", stats.throughput() / base.max(1e-9)));
+            // sampling divides across sampler threads on real hardware
+            let device = stats.device_secs() / workers as f64;
+            let sampling = stats.sampling_secs() / num_samplers as f64;
+            let coordinator =
+                (stats.train_secs - stats.device_secs() - stats.sampling_secs()).max(0.0);
+            let projected = device.max(sampling) + coordinator;
+            let scale_adj = stats.counters.samples_trained as f64 / total_samples;
+            proj_row.push(format!("{:.2}x", proj_base * scale_adj / projected.max(1e-9)));
+        }
+        table.row(&row);
+        proj_table.row(&proj_row);
+    }
+    table.print();
+    proj_table.print();
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Experiment harnesses: one module per table/figure of the paper's
+//! evaluation (the per-experiment index lives in DESIGN.md). Each
+//! harness builds its workload, runs the systems, and prints a markdown
+//! table matching the paper's layout. The `graphvite exp <name>` CLI and
+//! `rust/benches/bench_*.rs` targets call into these.
+
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod presets;
+pub mod table1;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+pub mod table8;
+
+pub use presets::{classify, Scale, Workload};
+
+use anyhow::Result;
+
+/// Run an experiment by paper id. `scale` shrinks workloads for CI.
+pub fn run(name: &str, scale: Scale) -> Result<()> {
+    match name {
+        "table1" => table1::run(),
+        "table3" => table3::run(scale),
+        "table4" => table4::run(scale),
+        "table5" => table5::run(scale),
+        "table6" => table6::run(scale),
+        "table7" => table7::run(scale),
+        "table8" => table8::run(scale),
+        "fig4" => fig4::run(scale),
+        "fig5" => fig5::run(scale),
+        "fig6" => fig6::run(scale),
+        "all" => {
+            for n in [
+                "table1", "table3", "table4", "table5", "table6", "table7", "table8",
+                "fig4", "fig5", "fig6",
+            ] {
+                run(n, scale)?;
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!(
+            "unknown experiment '{name}' (try table1|table3|table4|table5|table6|table7|table8|fig4|fig5|fig6|all)"
+        ),
+    }
+}

@@ -1,0 +1,34 @@
+//! Table 1 — memory cost of node embedding on the paper's running
+//! example (50M nodes / 1B edges scale-free network, d=128).
+
+use anyhow::Result;
+
+use crate::metrics::memory::MemoryModel;
+use crate::util::human_bytes;
+
+pub fn run() -> Result<()> {
+    let m = MemoryModel::paper_example();
+    let mut t = m.table();
+    t.title = "Table 1 — memory cost (paper example: 5e7 nodes, 1e9 edges, d=128)".into();
+    t.print();
+    // the paper's point: per-GPU cost after n-way partitioning
+    for parts in [1u64, 2, 4, 8] {
+        println!(
+            "per-GPU resident set with {parts} partitions: {}",
+            human_bytes(m.per_gpu_bytes(parts))
+        );
+    }
+    println!(
+        "\npaper reference values: nodes 191 MB, edges 7.45 GB, augmented 373 GB, \
+         vertex/context 23.8 GB each"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn runs() {
+        super::run().unwrap();
+    }
+}

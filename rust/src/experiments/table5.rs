@@ -1,0 +1,69 @@
+//! Table 5 — GraphVite training time on larger scale-free graphs with
+//! 1 vs 4 workers. Shape: near-linear worker scaling, wall-clock growing
+//! ~linearly with |E|.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::Trainer;
+use crate::experiments::presets::{Scale, Workload};
+use crate::util::bench::Table;
+use crate::util::human_secs;
+
+pub fn run(scale: Scale) -> Result<()> {
+    // (name, nodes, edges-per-node) — shrunken Friendster-small /
+    // Hyperlink-PLD / Friendster analogues.
+    let datasets: Vec<(&str, usize, usize)> = match scale {
+        Scale::Tiny => vec![("friendster-small-like", 5_000, 8), ("hyperlink-like", 10_000, 6)],
+        Scale::Small => vec![
+            ("friendster-small-like", 50_000, 12),
+            ("hyperlink-like", 100_000, 8),
+            ("friendster-like", 150_000, 14),
+        ],
+        Scale::Full => vec![
+            ("friendster-small-like", 200_000, 14),
+            ("hyperlink-like", 400_000, 8),
+            ("friendster-like", 500_000, 14),
+        ],
+    };
+
+    let mut table = Table::new(
+        "Table 5 — GraphVite training time on larger graphs",
+        &["dataset", "|V|", "|E|", "1 worker", "4 workers", "scaling"],
+    );
+    for (name, nodes, epn) in datasets {
+        let graph = Workload::scale_free(nodes, epn, 0xF00 + nodes as u64);
+        let mut times = Vec::new();
+        for workers in [1usize, 4] {
+            let cfg = TrainConfig {
+                dim: 32,
+                epochs: 4,
+                num_workers: workers,
+                num_samplers: workers + 1,
+                episode_size: (nodes / 2).max(10_000),
+                walk_length: 2, // paper: length 2 on the dense networks
+                augmentation_distance: 2,
+                batch_size: 512,
+                ..TrainConfig::default()
+            };
+            let mut trainer = Trainer::new(graph.clone(), cfg)?;
+            let r = trainer.train()?;
+            times.push(r.stats.train_secs);
+        }
+        table.row(&[
+            name.into(),
+            format!("{nodes}"),
+            format!("{}", graph.num_edges()),
+            human_secs(times[0]),
+            human_secs(times[1]),
+            format!("{:.2}x", times[0] / times[1]),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    // exercised via `graphvite exp table5 --scale tiny` in the bench suite
+}

@@ -1,0 +1,44 @@
+//! Table 8 — hardware-configuration sensitivity. The paper contrasts a
+//! Tesla-P100 server with an economic GTX-1080 server; our substitution
+//! contrasts a "fast" device configuration (larger batch shapes, more
+//! sampler threads — high-end GPU analogue) with an "economic" one
+//! (smaller batches, half the samplers). Shape: the gap stays well under
+//! 2x, i.e. the system is not tied to top-end hardware.
+
+use anyhow::Result;
+
+use crate::coordinator::Trainer;
+use crate::experiments::presets::{Scale, Workload};
+use crate::util::bench::Table;
+use crate::util::human_secs;
+
+pub fn run(scale: Scale) -> Result<()> {
+    let w = Workload::youtube_like(scale);
+    let mut table = Table::new(
+        "Table 8 — training time under different hardware configurations",
+        &["hardware analogue", "CPU threads", "workers", "train time"],
+    );
+
+    // (name, batch, samplers per worker)
+    let configs: Vec<(&str, usize, usize)> =
+        vec![("fast server (P100-like)", 1024, 2), ("economic server (GTX1080-like)", 128, 1)];
+    for (name, batch, samplers_per) in configs {
+        for workers in [1usize, 4] {
+            let mut cfg = w.config.clone();
+            cfg.num_workers = workers;
+            cfg.num_samplers = (samplers_per * workers).max(1);
+            cfg.batch_size = batch;
+            let total_threads = cfg.num_samplers + workers;
+            let mut trainer = Trainer::new(w.graph.clone(), cfg)?;
+            let r = trainer.train()?;
+            table.row(&[
+                name.into(),
+                format!("{total_threads}"),
+                format!("{workers}"),
+                human_secs(r.stats.train_secs),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}

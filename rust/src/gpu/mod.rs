@@ -1,0 +1,147 @@
+//! Simulated GPU device backends.
+//!
+//! Each GraphVite worker ("GPU") trains SGNS on its resident vertex /
+//! context partitions. Two interchangeable backends exist:
+//!
+//! * [`HloWorker`] — the production three-layer path: executes the
+//!   AOT-compiled JAX+Pallas train step via PJRT. Partitions are uploaded
+//!   once per block, chained across execute calls, downloaded once — the
+//!   paper's per-episode transfer pattern.
+//! * [`NativeWorker`] — pure-rust SGNS with *identical mini-batch
+//!   semantics* (gather → gradient at pre-update values → scatter-add), so
+//!   the two backends agree numerically (see `rust/tests/hlo_runtime.rs`).
+//!   Used by the CPU baselines and large parameter sweeps.
+//!
+//! The coordinator prepares [`ChunkPlan`]s (sample indices already
+//! translated to partition-local rows, negatives drawn from the resident
+//! context partition per paper section 3.2) and hands them to
+//! [`WorkerBackend::train_chunks`].
+
+mod native;
+
+pub use native::{native_minibatch_step, NativeWorker};
+
+use anyhow::Result;
+
+use crate::metrics::Counters;
+use crate::runtime::{ArtifactMeta, Device};
+
+/// One device-ready chunk of training work: `real` positive samples
+/// (padded by wrap-around up to the backend's chunk size), each with `k`
+/// negatives, trained at learning rate `lr`.
+#[derive(Debug, Clone, Default)]
+pub struct ChunkPlan {
+    pub pos_u: Vec<i32>,
+    pub pos_v: Vec<i32>,
+    pub neg_v: Vec<i32>,
+    pub lr: f32,
+    pub real: usize,
+}
+
+/// A device worker backend (one per simulated GPU).
+pub enum WorkerBackend {
+    Hlo(HloWorker),
+    Native(NativeWorker),
+}
+
+impl WorkerBackend {
+    /// Positive samples per chunk this backend consumes.
+    pub fn chunk_samples(&self) -> usize {
+        match self {
+            WorkerBackend::Hlo(w) => w.device.meta().s * w.device.meta().b,
+            WorkerBackend::Native(w) => w.batch_size,
+        }
+    }
+
+    /// Negatives per positive.
+    pub fn k(&self) -> usize {
+        match self {
+            WorkerBackend::Hlo(w) => w.device.meta().k,
+            WorkerBackend::Native(w) => w.negatives,
+        }
+    }
+
+    /// Row capacity the padded partition buffers must have.
+    pub fn capacity(&self, part_rows: usize) -> usize {
+        match self {
+            WorkerBackend::Hlo(w) => w.device.meta().p,
+            WorkerBackend::Native(_) => part_rows,
+        }
+    }
+
+    /// Train all chunks against the padded partitions in place.
+    /// Returns the mean loss over chunks.
+    pub fn train_chunks(
+        &mut self,
+        vertex: &mut Vec<f32>,
+        context: &mut Vec<f32>,
+        chunks: &[ChunkPlan],
+        counters: &Counters,
+    ) -> Result<f32> {
+        match self {
+            WorkerBackend::Hlo(w) => w.train_chunks(vertex, context, chunks, counters),
+            WorkerBackend::Native(w) => Ok(w.train_chunks(vertex, context, chunks, counters)),
+        }
+    }
+}
+
+/// PJRT-backed worker (Layer 1+2 compute via the AOT artifact).
+pub struct HloWorker {
+    pub device: Device,
+}
+
+impl HloWorker {
+    pub fn new(meta: &ArtifactMeta) -> Result<Self> {
+        Ok(HloWorker { device: Device::load(meta)? })
+    }
+
+    fn train_chunks(
+        &mut self,
+        vertex: &mut Vec<f32>,
+        context: &mut Vec<f32>,
+        chunks: &[ChunkPlan],
+        counters: &Counters,
+    ) -> Result<f32> {
+        if chunks.is_empty() {
+            return Ok(0.0);
+        }
+        let meta = self.device.meta().clone();
+        let mat_bytes = (meta.p * meta.d * 4) as u64;
+        // upload once per block (the paper's episode-boundary transfer)
+        let (mut v_lit, mut c_lit) = self.device.upload_partitions(vertex, context)?;
+        counters.add(&counters.bytes_to_device, 2 * mat_bytes);
+        let mut loss_sum = 0.0f64;
+        for ch in chunks {
+            let (nv, nc, loss) =
+                self.device
+                    .train_step(v_lit, c_lit, &ch.pos_u, &ch.pos_v, &ch.neg_v, ch.lr)?;
+            v_lit = nv;
+            c_lit = nc;
+            loss_sum += loss as f64;
+            counters.add(
+                &counters.bytes_to_device,
+                ((ch.pos_u.len() + ch.pos_v.len() + ch.neg_v.len()) * 4) as u64,
+            );
+            counters.add(&counters.device_steps, 1);
+        }
+        let (v_host, c_host) = self.device.download_partitions(&v_lit, &c_lit)?;
+        counters.add(&counters.bytes_from_device, 2 * mat_bytes);
+        let vlen = vertex.len();
+        let clen = context.len();
+        vertex.copy_from_slice(&v_host[..vlen]);
+        context.copy_from_slice(&c_host[..clen]);
+        Ok((loss_sum / chunks.len() as f64) as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_plan_default_empty() {
+        let c = ChunkPlan::default();
+        assert_eq!(c.real, 0);
+        assert!(c.pos_u.is_empty());
+    }
+}

@@ -1,0 +1,282 @@
+//! Pure-rust SGNS trainer with mini-batch semantics matching the HLO
+//! artifact bit-for-bit in structure (gather -> gradients at pre-update
+//! values -> scatter-add), so the two backends can be cross-validated.
+//!
+//! The math is exactly Layer 1's:
+//!     s = <u, v>;  g = weight * (sigmoid(s) - label)
+//!     u -= lr * g * v;  v -= lr * g * u_old
+//! with loss = weight * (softplus(s) - label * s).
+
+use crate::gpu::ChunkPlan;
+use crate::metrics::Counters;
+
+/// Stable softplus, matching the kernel's max(s,0)+log1p(exp(-|s|)).
+#[inline]
+fn softplus(s: f32) -> f32 {
+    s.max(0.0) + (-s.abs()).exp().ln_1p()
+}
+
+#[inline]
+fn sigmoid(s: f32) -> f32 {
+    1.0 / (1.0 + (-s).exp())
+}
+
+/// One mini-batch step with gradient accumulation (the HLO scan body).
+///
+/// `pos_u`/`pos_v` are `bsz` local rows; `neg_v` is `bsz * k` rows.
+/// Gradients for the whole batch are computed against the pre-update
+/// matrices, then applied with scatter-add — duplicate rows accumulate,
+/// matching `jnp .at[].add` semantics. Returns the mean per-sample loss
+/// (mean over the `bsz * (1+k)` pair rows, like the kernel's tile mean).
+pub fn native_minibatch_step(
+    vertex: &mut [f32],
+    context: &mut [f32],
+    dim: usize,
+    pos_u: &[i32],
+    pos_v: &[i32],
+    neg_v: &[i32],
+    k: usize,
+    lr: f32,
+    neg_weight: f32,
+    grad_u_buf: &mut Vec<f32>,
+    grad_c_buf: &mut Vec<f32>,
+) -> f32 {
+    let bsz = pos_u.len();
+    debug_assert_eq!(pos_v.len(), bsz);
+    debug_assert_eq!(neg_v.len(), bsz * k);
+
+    // Dense gradient accumulators over the partitions. INVARIANT: between
+    // calls every entry is zero — `apply_sparse` re-zeroes exactly the
+    // rows that accumulated (pos_u for grad_u; pos_v + neg_v for grad_c).
+    // Zeroing the whole buffer per batch instead was the original hot
+    // spot: a 2 x P x D memset per 256-sample batch dominated the step
+    // (see EXPERIMENTS.md §Perf).
+    if grad_u_buf.len() != vertex.len() {
+        grad_u_buf.clear();
+        grad_u_buf.resize(vertex.len(), 0.0);
+    }
+    if grad_c_buf.len() != context.len() {
+        grad_c_buf.clear();
+        grad_c_buf.resize(context.len(), 0.0);
+    }
+
+    let mut loss_sum = 0.0f64;
+    for i in 0..bsz {
+        let u = pos_u[i] as usize * dim;
+        let urow = &vertex[u..u + dim];
+        let gu = &mut grad_u_buf[u..u + dim];
+
+        // positive pair
+        let v = pos_v[i] as usize * dim;
+        let vrow = &context[v..v + dim];
+        let s: f32 = urow.iter().zip(vrow).map(|(a, b)| a * b).sum();
+        let g = sigmoid(s) - 1.0; // label=1, weight=1
+        loss_sum += (softplus(s) - s) as f64;
+        let gv = &mut grad_c_buf[v..v + dim];
+        for j in 0..dim {
+            gu[j] += g * vrow[j];
+            gv[j] += g * urow[j];
+        }
+
+        // negatives (label=0, weight=neg_weight)
+        for t in 0..k {
+            let n = neg_v[i * k + t] as usize * dim;
+            let nrow = &context[n..n + dim];
+            let s: f32 = urow.iter().zip(nrow).map(|(a, b)| a * b).sum();
+            let g = neg_weight * sigmoid(s);
+            loss_sum += (neg_weight * softplus(s)) as f64;
+            let gn = &mut grad_c_buf[n..n + dim];
+            for j in 0..dim {
+                gu[j] += g * nrow[j];
+                gn[j] += g * urow[j];
+            }
+        }
+    }
+
+    // scatter-add application (only touched rows are nonzero, but a dense
+    // axpy over the partition is branch-free; see EXPERIMENTS.md §Perf for
+    // the sparse-apply variant benchmarks)
+    apply_sparse(vertex, grad_u_buf, pos_u, dim, lr);
+    apply_sparse(context, grad_c_buf, pos_v, dim, lr);
+    apply_sparse(context, grad_c_buf, neg_v, dim, lr);
+
+    (loss_sum / (bsz * (1 + k)) as f64) as f32
+}
+
+/// Subtract lr * grad for each (deduplicated) touched row, then zero the
+/// gradient rows so the buffers are clean for the next batch.
+fn apply_sparse(mat: &mut [f32], grad: &mut [f32], rows: &[i32], dim: usize, lr: f32) {
+    for &r in rows {
+        let o = r as usize * dim;
+        let g = &mut grad[o..o + dim];
+        // a row can appear in several index lists / multiple times; after
+        // the first application its grad is zeroed, making reapplication a
+        // no-op — this implements "apply each accumulated row once".
+        let m = &mut mat[o..o + dim];
+        for j in 0..dim {
+            m[j] -= lr * g[j];
+            g[j] = 0.0;
+        }
+    }
+}
+
+/// Pure-rust device worker.
+pub struct NativeWorker {
+    pub dim: usize,
+    pub batch_size: usize,
+    pub negatives: usize,
+    pub neg_weight: f32,
+    grad_u: Vec<f32>,
+    grad_c: Vec<f32>,
+}
+
+impl NativeWorker {
+    pub fn new(dim: usize, batch_size: usize, negatives: usize, neg_weight: f32) -> Self {
+        NativeWorker {
+            dim,
+            batch_size,
+            negatives,
+            neg_weight,
+            grad_u: Vec::new(),
+            grad_c: Vec::new(),
+        }
+    }
+
+    pub fn train_chunks(
+        &mut self,
+        vertex: &mut [f32],
+        context: &mut [f32],
+        chunks: &[ChunkPlan],
+        counters: &Counters,
+    ) -> f32 {
+        if chunks.is_empty() {
+            return 0.0;
+        }
+        let mut loss_sum = 0.0f64;
+        for ch in chunks {
+            let loss = native_minibatch_step(
+                vertex,
+                context,
+                self.dim,
+                &ch.pos_u,
+                &ch.pos_v,
+                &ch.neg_v,
+                self.negatives,
+                ch.lr,
+                self.neg_weight,
+                &mut self.grad_u,
+                &mut self.grad_c,
+            );
+            loss_sum += loss as f64;
+            counters.add(&counters.device_steps, 1);
+        }
+        (loss_sum / chunks.len() as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(p: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let v = (0..p * dim).map(|_| rng.range_f32(-0.1, 0.1)).collect();
+        let c = (0..p * dim).map(|_| rng.range_f32(-0.1, 0.1)).collect();
+        (v, c)
+    }
+
+    #[test]
+    fn positive_pairs_attract() {
+        let (mut v, mut c) = setup(4, 8, 1);
+        let dot_before: f32 = v[0..8].iter().zip(&c[8..16]).map(|(a, b)| a * b).sum();
+        let (mut gu, mut gc) = (Vec::new(), Vec::new());
+        for _ in 0..50 {
+            native_minibatch_step(
+                &mut v, &mut c, 8, &[0], &[1], &[2], 1, 0.1, 5.0, &mut gu, &mut gc,
+            );
+        }
+        let dot_after: f32 = v[0..8].iter().zip(&c[8..16]).map(|(a, b)| a * b).sum();
+        assert!(dot_after > dot_before, "{dot_before} -> {dot_after}");
+    }
+
+    #[test]
+    fn loss_decreases() {
+        let (mut v, mut c) = setup(16, 8, 2);
+        let (mut gu, mut gc) = (Vec::new(), Vec::new());
+        let pos_u: Vec<i32> = (0..8).collect();
+        let pos_v: Vec<i32> = (8..16).collect();
+        let neg: Vec<i32> = (0..8).map(|i| (i + 4) % 16).collect();
+        let first = native_minibatch_step(
+            &mut v, &mut c, 8, &pos_u, &pos_v, &neg, 1, 0.2, 5.0, &mut gu, &mut gc,
+        );
+        let mut last = first;
+        for _ in 0..30 {
+            last = native_minibatch_step(
+                &mut v, &mut c, 8, &pos_u, &pos_v, &neg, 1, 0.2, 5.0, &mut gu, &mut gc,
+            );
+        }
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn duplicate_rows_accumulate_once_applied() {
+        // two positives hitting the same u row: grad must accumulate, and
+        // the update must be applied exactly once
+        let dim = 4;
+        let (mut v, mut c) = setup(4, dim, 3);
+        let v_orig = v.clone();
+        let (mut gu, mut gc) = (Vec::new(), Vec::new());
+        // batch: (0 -> 1) twice; k=1 negatives both row 2
+        native_minibatch_step(
+            &mut v, &mut c, dim, &[0, 0], &[1, 1], &[2, 2], 1, 0.1, 5.0, &mut gu, &mut gc,
+        );
+        let moved_twice: Vec<f32> = v[0..dim]
+            .iter()
+            .zip(&v_orig[0..dim])
+            .map(|(a, b)| a - b)
+            .collect();
+
+        let (mut v2, mut c2) = setup(4, dim, 3);
+        native_minibatch_step(
+            &mut v2, &mut c2, dim, &[0], &[1], &[2], 1, 0.1, 5.0, &mut gu, &mut gc,
+        );
+        let moved_once: Vec<f32> = v2[0..dim]
+            .iter()
+            .zip(&v_orig[0..dim])
+            .map(|(a, b)| a - b)
+            .collect();
+        for (t, o) in moved_twice.iter().zip(&moved_once) {
+            assert!((t - 2.0 * o).abs() < 1e-5, "twice {t} vs once {o}");
+        }
+    }
+
+    #[test]
+    fn untouched_rows_unchanged() {
+        let (mut v, mut c) = setup(8, 4, 4);
+        let (v0, c0) = (v.clone(), c.clone());
+        let (mut gu, mut gc) = (Vec::new(), Vec::new());
+        native_minibatch_step(
+            &mut v, &mut c, 4, &[0], &[1], &[2], 1, 0.1, 5.0, &mut gu, &mut gc,
+        );
+        // rows 3..8 untouched in both matrices
+        assert_eq!(&v[3 * 4..], &v0[3 * 4..]);
+        assert_eq!(&c[3 * 4..], &c0[3 * 4..]);
+        // u row 0 changed in vertex only; context rows 1,2 changed
+        assert_ne!(&v[0..4], &v0[0..4]);
+        assert_eq!(&c[0..4], &c0[0..4]);
+        assert_ne!(&c[4..8], &c0[4..8]);
+    }
+
+    #[test]
+    fn zero_lr_identity() {
+        let (mut v, mut c) = setup(8, 4, 5);
+        let (v0, c0) = (v.clone(), c.clone());
+        let (mut gu, mut gc) = (Vec::new(), Vec::new());
+        native_minibatch_step(
+            &mut v, &mut c, 4, &[0, 3], &[1, 2], &[2, 0], 1, 0.0, 5.0, &mut gu, &mut gc,
+        );
+        assert_eq!(v, v0);
+        assert_eq!(c, c0);
+    }
+}

@@ -1,0 +1,181 @@
+//! Edge-list → CSR construction with symmetrization and dedup.
+
+use super::Graph;
+
+/// Accumulates undirected edges and builds a [`Graph`].
+///
+/// Duplicate (u, v) pairs have their weights summed; self-loops are
+/// dropped (they carry no information for SGNS and break walk semantics).
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    edges: Vec<(u32, u32, f32)>,
+    num_nodes: usize,
+    labels: Option<Vec<u16>>,
+    dedup: bool,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        GraphBuilder { edges: Vec::new(), num_nodes: 0, labels: None, dedup: true }
+    }
+
+    /// Pre-declare node count (otherwise inferred as max id + 1).
+    pub fn with_num_nodes(mut self, n: usize) -> Self {
+        self.num_nodes = n;
+        self
+    }
+
+    /// Disable duplicate-edge merging (keeps parallel edges as extra weight
+    /// entries — matches how LINE treats multigraphs).
+    pub fn keep_duplicates(mut self) -> Self {
+        self.dedup = false;
+        self
+    }
+
+    pub fn with_labels(mut self, labels: Vec<u16>) -> Self {
+        self.labels = Some(labels);
+        self
+    }
+
+    pub fn add_edge(mut self, u: u32, v: u32, w: f32) -> Self {
+        self.push_edge(u, v, w);
+        self
+    }
+
+    /// Non-consuming variant for loops.
+    pub fn push_edge(&mut self, u: u32, v: u32, w: f32) {
+        if u == v {
+            return; // drop self loops
+        }
+        debug_assert!(w > 0.0, "edge weights must be positive");
+        self.edges.push((u, v, w));
+        let hi = u.max(v) as usize + 1;
+        if hi > self.num_nodes {
+            self.num_nodes = hi;
+        }
+    }
+
+    pub fn extend(&mut self, edges: impl IntoIterator<Item = (u32, u32, f32)>) {
+        for (u, v, w) in edges {
+            self.push_edge(u, v, w);
+        }
+    }
+
+    pub fn num_pending_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Build the CSR graph (counting-sort by source; O(V + E)).
+    pub fn build(self) -> Graph {
+        let n = self.num_nodes;
+        // Symmetrize: each undirected edge becomes two arcs.
+        let mut arcs: Vec<(u32, u32, f32)> = Vec::with_capacity(self.edges.len() * 2);
+        for &(u, v, w) in &self.edges {
+            arcs.push((u, v, w));
+            arcs.push((v, u, w));
+        }
+
+        // Counting sort by source.
+        let mut counts = vec![0u64; n + 1];
+        for &(u, _, _) in &arcs {
+            counts[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut targets = vec![0u32; arcs.len()];
+        let mut weights = vec![0f32; arcs.len()];
+        let mut cursor = counts;
+        for (u, v, w) in arcs {
+            let at = cursor[u as usize] as usize;
+            targets[at] = v;
+            weights[at] = w;
+            cursor[u as usize] += 1;
+        }
+
+        // Per-row sort by target + optional dedup (merge weights).
+        let mut out_offsets = Vec::with_capacity(n + 1);
+        let mut out_targets = Vec::with_capacity(targets.len());
+        let mut out_weights = Vec::with_capacity(weights.len());
+        out_offsets.push(0u64);
+        let mut row: Vec<(u32, f32)> = Vec::new();
+        for v in 0..n {
+            let (s, e) = (offsets[v] as usize, offsets[v + 1] as usize);
+            row.clear();
+            row.extend(targets[s..e].iter().copied().zip(weights[s..e].iter().copied()));
+            row.sort_unstable_by_key(|&(t, _)| t);
+            if self.dedup {
+                let mut i = 0;
+                while i < row.len() {
+                    let mut j = i + 1;
+                    let mut w = row[i].1;
+                    while j < row.len() && row[j].0 == row[i].0 {
+                        w += row[j].1;
+                        j += 1;
+                    }
+                    out_targets.push(row[i].0);
+                    out_weights.push(w);
+                    i = j;
+                }
+            } else {
+                for &(t, w) in &row {
+                    out_targets.push(t);
+                    out_weights.push(w);
+                }
+            }
+            out_offsets.push(out_targets.len() as u64);
+        }
+
+        Graph::from_parts(out_offsets, out_targets, out_weights, self.labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_merges_weights() {
+        let g = GraphBuilder::new()
+            .add_edge(0, 1, 1.0)
+            .add_edge(0, 1, 2.0)
+            .build();
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.neighbor_weights(0), &[3.0]);
+    }
+
+    #[test]
+    fn keep_duplicates_keeps_arcs() {
+        let g = GraphBuilder::new()
+            .keep_duplicates()
+            .add_edge(0, 1, 1.0)
+            .add_edge(0, 1, 1.0)
+            .build();
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let g = GraphBuilder::new().add_edge(0, 0, 1.0).add_edge(0, 1, 1.0).build();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.degree(0), 1);
+    }
+
+    #[test]
+    fn neighbors_sorted() {
+        let g = GraphBuilder::new()
+            .add_edge(0, 5, 1.0)
+            .add_edge(0, 2, 1.0)
+            .add_edge(0, 9, 1.0)
+            .build();
+        assert_eq!(g.neighbors(0), &[2, 5, 9]);
+    }
+
+    #[test]
+    fn symmetrized() {
+        let g = GraphBuilder::new().add_edge(3, 7, 1.5).build();
+        assert_eq!(g.neighbors(7), &[3]);
+        assert_eq!(g.neighbor_weights(7), &[1.5]);
+    }
+}

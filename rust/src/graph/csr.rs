@@ -1,0 +1,187 @@
+//! Compressed-sparse-row graph storage.
+//!
+//! This is the in-memory network the CPU side (parallel online
+//! augmentation) random-walks over: contiguous adjacency for cache-friendly
+//! neighbor scans, plus weighted degrees for the departure-node and
+//! negative-sampling distributions.
+
+/// An undirected weighted graph in CSR form. Node ids are dense `u32`.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// CSR row offsets; length `n + 1`.
+    offsets: Vec<u64>,
+    /// Flattened neighbor lists; length = 2 * undirected edge count.
+    targets: Vec<u32>,
+    /// Per-adjacency edge weights, parallel to `targets`.
+    weights: Vec<f32>,
+    /// Weighted degree per node (sum of incident weights).
+    degrees: Vec<f32>,
+    /// Optional single-label community assignment (SBM generator / loader).
+    labels: Option<Vec<u16>>,
+    /// True if every weight is exactly 1.0 (enables uniform fast paths).
+    unit_weights: bool,
+}
+
+impl Graph {
+    pub(crate) fn from_parts(
+        offsets: Vec<u64>,
+        targets: Vec<u32>,
+        weights: Vec<f32>,
+        labels: Option<Vec<u16>>,
+    ) -> Self {
+        debug_assert_eq!(targets.len(), weights.len());
+        let n = offsets.len() - 1;
+        let mut degrees = vec![0.0f32; n];
+        for v in 0..n {
+            let (s, e) = (offsets[v] as usize, offsets[v + 1] as usize);
+            degrees[v] = weights[s..e].iter().sum();
+        }
+        let unit_weights = weights.iter().all(|&w| w == 1.0);
+        if let Some(l) = &labels {
+            assert_eq!(l.len(), n, "label vector length must match node count");
+        }
+        Graph { offsets, targets, weights, degrees, labels, unit_weights }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of *undirected* edges (adjacency entries / 2).
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.targets.len() / 2
+    }
+
+    /// Total adjacency entries (directed arc count).
+    #[inline]
+    pub fn num_arcs(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Neighbors of `v` as a slice of target node ids.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let (s, e) = self.span(v);
+        &self.targets[s..e]
+    }
+
+    /// Weights parallel to [`Self::neighbors`].
+    #[inline]
+    pub fn neighbor_weights(&self, v: u32) -> &[f32] {
+        let (s, e) = self.span(v);
+        &self.weights[s..e]
+    }
+
+    #[inline]
+    fn span(&self, v: u32) -> (usize, usize) {
+        (self.offsets[v as usize] as usize, self.offsets[v as usize + 1] as usize)
+    }
+
+    /// Unweighted out-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        let (s, e) = self.span(v);
+        e - s
+    }
+
+    /// Weighted degree of `v`.
+    #[inline]
+    pub fn weighted_degree(&self, v: u32) -> f32 {
+        self.degrees[v as usize]
+    }
+
+    /// All weighted degrees.
+    #[inline]
+    pub fn weighted_degrees(&self) -> &[f32] {
+        &self.degrees
+    }
+
+    /// True if all edge weights are 1.0.
+    #[inline]
+    pub fn unit_weights(&self) -> bool {
+        self.unit_weights
+    }
+
+    /// Community labels, if the graph carries them.
+    pub fn labels(&self) -> Option<&[u16]> {
+        self.labels.as_deref()
+    }
+
+    pub fn set_labels(&mut self, labels: Vec<u16>) {
+        assert_eq!(labels.len(), self.num_nodes());
+        self.labels = Some(labels);
+    }
+
+    /// Iterate all arcs as (source, target, weight).
+    pub fn arcs(&self) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        (0..self.num_nodes() as u32).flat_map(move |v| {
+            let (s, e) = self.span(v);
+            (s..e).map(move |i| (v, self.targets[i], self.weights[i]))
+        })
+    }
+
+    /// Iterate each undirected edge once (u <= v ordering).
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        self.arcs().filter(|&(u, v, _)| u <= v)
+    }
+
+    /// True if `u`–`v` are adjacent (linear scan; test/eval helper).
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.neighbors(u).contains(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn csr_roundtrip_triangle() {
+        let g = GraphBuilder::new()
+            .add_edge(0, 1, 1.0)
+            .add_edge(1, 2, 1.0)
+            .add_edge(0, 2, 1.0)
+            .build();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.num_arcs(), 6);
+        for v in 0..3u32 {
+            assert_eq!(g.degree(v), 2);
+            assert_eq!(g.weighted_degree(v), 2.0);
+        }
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(g.unit_weights());
+    }
+
+    #[test]
+    fn weighted_degrees() {
+        let g = GraphBuilder::new()
+            .add_edge(0, 1, 2.0)
+            .add_edge(0, 2, 3.0)
+            .build();
+        assert_eq!(g.weighted_degree(0), 5.0);
+        assert_eq!(g.weighted_degree(1), 2.0);
+        assert!(!g.unit_weights());
+    }
+
+    #[test]
+    fn edges_iterates_each_once() {
+        let g = GraphBuilder::new()
+            .add_edge(0, 1, 1.0)
+            .add_edge(1, 2, 1.0)
+            .build();
+        let edges: Vec<_> = g.edges().collect();
+        assert_eq!(edges.len(), 2);
+    }
+
+    #[test]
+    fn isolated_nodes_allowed() {
+        let g = GraphBuilder::new().with_num_nodes(5).add_edge(0, 1, 1.0).build();
+        assert_eq!(g.num_nodes(), 5);
+        assert_eq!(g.degree(4), 0);
+        assert_eq!(g.neighbors(4), &[] as &[u32]);
+    }
+}

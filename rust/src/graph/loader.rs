@@ -1,0 +1,146 @@
+//! Edge-list file I/O.
+//!
+//! Format (the same one LINE/DeepWalk consume): one edge per line,
+//! `src dst [weight]`, whitespace-separated, `#`-prefixed comments
+//! ignored. An optional companion `<path>.labels` file carries
+//! `node label` lines.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Graph, GraphBuilder};
+
+/// Load an edge list (and `<path>.labels` if present) into a [`Graph`].
+pub fn load_edge_list(path: impl AsRef<Path>) -> Result<Graph> {
+    let path = path.as_ref();
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut builder = GraphBuilder::new();
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let u: u32 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing src", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad src", lineno + 1))?;
+        let v: u32 = match it.next() {
+            Some(tok) => tok
+                .parse()
+                .with_context(|| format!("line {}: bad dst", lineno + 1))?,
+            None => bail!("line {}: missing dst", lineno + 1),
+        };
+        let w: f32 = match it.next() {
+            Some(tok) => tok
+                .parse()
+                .with_context(|| format!("line {}: bad weight", lineno + 1))?,
+            None => 1.0,
+        };
+        builder.push_edge(u, v, w);
+    }
+    let mut graph = builder.build();
+
+    let label_path = path.with_extension(format!(
+        "{}labels",
+        path.extension().map(|e| format!("{}.", e.to_string_lossy())).unwrap_or_default()
+    ));
+    if label_path.exists() {
+        let mut labels = vec![0u16; graph.num_nodes()];
+        let file = File::open(&label_path)?;
+        for line in BufReader::new(file).lines() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let node: usize = it.next().unwrap().parse()?;
+            let label: u16 = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("missing label for node {node}"))?
+                .parse()?;
+            if node < labels.len() {
+                labels[node] = label;
+            }
+        }
+        graph.set_labels(labels);
+    }
+    Ok(graph)
+}
+
+/// Save a graph as an edge list (each undirected edge once) plus a
+/// `.labels` companion when labels exist.
+pub fn save_edge_list(graph: &Graph, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "# graphvite edge list: src dst weight")?;
+    for (u, v, wt) in graph.edges() {
+        if wt == 1.0 {
+            writeln!(w, "{u} {v}")?;
+        } else {
+            writeln!(w, "{u} {v} {wt}")?;
+        }
+    }
+    if let Some(labels) = graph.labels() {
+        let label_path = path.with_extension(format!(
+            "{}labels",
+            path.extension().map(|e| format!("{}.", e.to_string_lossy())).unwrap_or_default()
+        ));
+        let mut lw = BufWriter::new(File::create(label_path)?);
+        for (node, label) in labels.iter().enumerate() {
+            writeln!(lw, "{node} {label}")?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("graphvite_loader_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        let g = generators::karate_club();
+        save_edge_list(&g, &path).unwrap();
+        let g2 = load_edge_list(&path).unwrap();
+        assert_eq!(g2.num_nodes(), g.num_nodes());
+        assert_eq!(g2.num_edges(), g.num_edges());
+        assert_eq!(g2.labels().unwrap(), g.labels().unwrap());
+    }
+
+    #[test]
+    fn parses_comments_weights_blank_lines() {
+        let dir = std::env::temp_dir().join("graphvite_loader_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        std::fs::write(&path, "# comment\n0 1\n\n1 2 2.5\n").unwrap();
+        let g = load_edge_list(&path).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbor_weights(2), &[2.5]);
+    }
+
+    #[test]
+    fn bad_line_is_error() {
+        let dir = std::env::temp_dir().join("graphvite_loader_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.txt");
+        std::fs::write(&path, "0 x\n").unwrap();
+        assert!(load_edge_list(&path).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(load_edge_list("/nonexistent/nope.txt").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Graph substrate: CSR storage, edge-list I/O, synthetic generators and
+//! degree statistics.
+//!
+//! GraphVite treats all networks as undirected weighted graphs
+//! (paper section 4.3); [`GraphBuilder`] symmetrizes edges on construction.
+
+mod builder;
+mod csr;
+pub mod generators;
+mod loader;
+mod stats;
+
+pub use builder::GraphBuilder;
+pub use csr::Graph;
+pub use loader::{load_edge_list, save_edge_list};
+pub use stats::{degree_histogram, GraphStats};

@@ -1,0 +1,89 @@
+//! Degree statistics (used by DESIGN/EXPERIMENTS reporting and the
+//! partitioner's sanity checks).
+
+use super::Graph;
+
+/// Summary statistics for a graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphStats {
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    pub min_degree: usize,
+    pub max_degree: usize,
+    pub mean_degree: f64,
+    /// Fraction of total degree held by the top 1% highest-degree nodes —
+    /// a quick scale-freeness indicator.
+    pub top1pct_degree_share: f64,
+}
+
+impl GraphStats {
+    pub fn compute(g: &Graph) -> Self {
+        let n = g.num_nodes();
+        let mut degrees: Vec<usize> = (0..n as u32).map(|v| g.degree(v)).collect();
+        let total: usize = degrees.iter().sum();
+        let min = degrees.iter().copied().min().unwrap_or(0);
+        let max = degrees.iter().copied().max().unwrap_or(0);
+        degrees.sort_unstable_by(|a, b| b.cmp(a));
+        let top = (n / 100).max(1);
+        let top_sum: usize = degrees[..top.min(n)].iter().sum();
+        GraphStats {
+            num_nodes: n,
+            num_edges: g.num_edges(),
+            min_degree: min,
+            max_degree: max,
+            mean_degree: total as f64 / n.max(1) as f64,
+            top1pct_degree_share: if total > 0 { top_sum as f64 / total as f64 } else { 0.0 },
+        }
+    }
+}
+
+/// Log-binned degree histogram: (bin upper bound, count).
+pub fn degree_histogram(g: &Graph) -> Vec<(usize, usize)> {
+    let mut bins: Vec<(usize, usize)> = Vec::new();
+    let mut bound = 1usize;
+    loop {
+        bins.push((bound, 0));
+        if bound > g.num_nodes() {
+            break;
+        }
+        bound *= 2;
+    }
+    for v in 0..g.num_nodes() as u32 {
+        let d = g.degree(v);
+        let idx = (usize::BITS - d.leading_zeros()) as usize; // floor(log2(d)) + 1
+        let last = bins.len() - 1;
+        bins[idx.min(last)].1 += 1;
+    }
+    bins.retain(|&(_, c)| c > 0);
+    bins
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn stats_on_karate() {
+        let s = GraphStats::compute(&generators::karate_club());
+        assert_eq!(s.num_nodes, 34);
+        assert_eq!(s.num_edges, 78);
+        assert_eq!(s.max_degree, 17); // node 33
+        assert!((s.mean_degree - 2.0 * 78.0 / 34.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ba_is_more_skewed_than_er() {
+        let ba = GraphStats::compute(&generators::barabasi_albert(2000, 3, 1));
+        let er = GraphStats::compute(&generators::erdos_renyi(2000, 6000, 1));
+        assert!(ba.top1pct_degree_share > er.top1pct_degree_share);
+    }
+
+    #[test]
+    fn histogram_counts_all_nodes() {
+        let g = generators::barabasi_albert(500, 2, 2);
+        let h = degree_histogram(&g);
+        let total: usize = h.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 500);
+    }
+}

@@ -1,0 +1,60 @@
+//! # GraphVite (WWW'19) — CPU/"GPU" hybrid node-embedding system
+//!
+//! Reproduction of *GraphVite: A High-Performance CPU-GPU Hybrid System
+//! for Node Embedding* (Zhu, Xu, Qu, Tang — WWW 2019) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's system contribution: parallel
+//!   online augmentation on CPU threads ([`sampling`]), the grid-partitioned
+//!   sample pool with pseudo shuffle ([`pool`]), parallel negative sampling
+//!   over orthogonal blocks ([`scheduler`], [`partition`]), and the
+//!   double-buffered CPU/GPU collaboration strategy ([`coordinator`]).
+//! * **Layer 2** — the SGNS train-block written in JAX
+//!   (`python/compile/model.py`), AOT-lowered to HLO text at build time.
+//! * **Layer 1** — the SGNS gradient hot-spot as a Pallas kernel
+//!   (`python/compile/kernels/sgns.py`), inlined into the Layer-2 HLO.
+//!
+//! At run time the [`runtime`] module loads the HLO artifacts through the
+//! PJRT C API (`xla` crate) and each simulated GPU worker executes them;
+//! Python never runs on the training path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use graphvite::prelude::*;
+//!
+//! let graph = generators::barabasi_albert(10_000, 5, 42);
+//! let config = TrainConfig { dim: 32, epochs: 20, ..TrainConfig::default() };
+//! let mut trainer = Trainer::new(graph, config).unwrap();
+//! let result = trainer.train().unwrap();
+//! println!("trained {} nodes in {:.2}s", result.embeddings.num_nodes(),
+//!          result.stats.train_secs);
+//! ```
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod embedding;
+pub mod eval;
+pub mod experiments;
+pub mod gpu;
+pub mod graph;
+pub mod metrics;
+pub mod partition;
+pub mod pool;
+pub mod runtime;
+pub mod sampling;
+pub mod scheduler;
+pub mod util;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::config::{BackendKind, TrainConfig};
+    pub use crate::coordinator::{TrainResult, Trainer};
+    pub use crate::embedding::EmbeddingStore;
+    // pub use crate::eval::{classifier, linkpred}; // (enabled once eval lands)
+    pub use crate::graph::{generators, Graph};
+    pub use crate::pool::ShuffleKind;
+    pub use crate::util::rng::Rng;
+}

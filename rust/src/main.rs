@@ -1,0 +1,370 @@
+//! `graphvite` — the CLI launcher for the GraphVite (WWW'19) reproduction.
+//!
+//! Subcommands:
+//!
+//! * `train`      — train node embeddings on an edge-list file or a
+//!                  synthetic graph through the full hybrid system.
+//! * `generate`   — write a synthetic benchmark graph to an edge list.
+//! * `eval`       — evaluate saved embeddings (node classification or
+//!                  link prediction).
+//! * `exp`        — regenerate a paper table/figure (table1..table8,
+//!                  fig4..fig6, or `all`).
+//! * `stats`      — print graph statistics and the Table-1 memory model
+//!                  for a given graph size.
+//! * `artifacts`  — list the AOT HLO artifacts the runtime can load.
+//!
+//! Run `graphvite help` for usage.
+
+use anyhow::{bail, Context, Result};
+
+use graphvite::cli::Args;
+use graphvite::config::{BackendKind, TrainConfig};
+use graphvite::coordinator::Trainer;
+use graphvite::embedding::{self, EmbeddingStore};
+use graphvite::eval;
+use graphvite::experiments::{self, Scale};
+use graphvite::graph::{self, generators, Graph, GraphStats};
+use graphvite::metrics::memory::MemoryModel;
+use graphvite::pool::ShuffleKind;
+use graphvite::util::{human_bytes, human_secs};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    if args.command.is_empty() {
+        print_usage();
+        return Ok(());
+    }
+    match args.command.as_str() {
+        "train" => cmd_train(args),
+        "generate" => cmd_generate(args),
+        "eval" => cmd_eval(args),
+        "exp" => cmd_exp(args),
+        "stats" => cmd_stats(args),
+        "artifacts" => cmd_artifacts(),
+        "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (see `graphvite help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "graphvite — CPU/'GPU' hybrid node embedding (GraphVite, WWW'19)
+
+USAGE:
+  graphvite train [GRAPH.txt] [options]     train embeddings
+  graphvite generate --kind K [options]     write a synthetic graph
+  graphvite eval TASK [options]             evaluate saved embeddings
+  graphvite exp NAME [--scale S]            regenerate a paper table/figure
+  graphvite stats [GRAPH.txt] [options]     graph stats + memory model
+  graphvite artifacts                       list loadable AOT artifacts
+
+TRAIN OPTIONS (defaults follow paper section 4.3):
+  --config FILE.toml    load a [train] config table
+  --synthetic KIND      ba | youtube | sbm | karate (instead of GRAPH.txt)
+  --nodes N             synthetic graph size            [10000]
+  --dim D               embedding dimension             [64]
+  --epochs E            |E| positive samples per epoch  [10]
+  --workers N           simulated GPUs                  [4]
+  --partitions N        matrix partitions (0 = workers; multiple of workers;
+                        needs --no-fix-context when > workers)
+  --samplers N          CPU sampler threads             [4]
+  --episode-size N      samples per episode x workers   [200000]
+  --backend hlo|native  device backend                  [native]
+  --shuffle S           none|random|index-mapping|pseudo [pseudo]
+  --walk-length L       random walk length (edges)      [5]
+  --aug-distance S      augmentation distance           [2]
+  --lr X, --negatives K, --neg-weight W, --seed N, --batch-size B
+  --no-collaboration    disable the double-buffered pools
+  --no-augmentation     plain edge sampling instead of online augmentation
+  --no-fix-context      re-transfer context partitions every episode
+  --output FILE         save embeddings (binary; .txt for text format)
+
+GENERATE OPTIONS:
+  --kind ba|youtube|sbm|er  --nodes N  --edges-per-node M  --labels K
+  --mixing X  --seed N  --out FILE
+
+EVAL TASKS:
+  classify  --embeddings F --graph G [--train-frac X] [--seed N]
+  linkpred  --embeddings F --graph G [--holdout X] [--seed N]
+
+EXPERIMENTS: table1 table3 table4 table5 table6 table7 table8
+             fig4 fig5 fig6 all       (--scale tiny|small|full)"
+    );
+}
+
+// ---------------------------------------------------------------- train --
+
+fn load_or_generate_graph(args: &Args) -> Result<Graph> {
+    if let Some(kind) = args.get("synthetic") {
+        let n = args.get_parse("nodes", 10_000usize)?;
+        let m = args.get_parse("edges-per-node", 5usize)?;
+        let labels = args.get_parse("labels", 10usize)?;
+        let seed = args.get_parse("seed", 42u64)?;
+        let g = match kind {
+            "ba" => generators::barabasi_albert(n, m, seed),
+            "youtube" => generators::youtube_like(n, labels, seed),
+            "sbm" => {
+                let mixing = args.get_parse("mixing", 0.05f64)?;
+                generators::planted_partition(n, labels, 2.0 * m as f64, mixing, seed)
+            }
+            "karate" => generators::karate_club(),
+            other => bail!("unknown synthetic graph kind '{other}'"),
+        };
+        return Ok(g);
+    }
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("need a GRAPH.txt path or --synthetic KIND"))?;
+    graph::load_edge_list(path).with_context(|| format!("loading {path}"))
+}
+
+fn config_from_args(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::from_toml_file(path)?,
+        None => TrainConfig::default(),
+    };
+    cfg.dim = args.get_parse("dim", cfg.dim)?;
+    cfg.epochs = args.get_parse("epochs", cfg.epochs)?;
+    cfg.lr = args.get_parse("lr", cfg.lr)?;
+    cfg.negatives = args.get_parse("negatives", cfg.negatives)?;
+    cfg.neg_weight = args.get_parse("neg-weight", cfg.neg_weight)?;
+    cfg.walk_length = args.get_parse("walk-length", cfg.walk_length)?;
+    cfg.augmentation_distance = args.get_parse("aug-distance", cfg.augmentation_distance)?;
+    cfg.num_workers = args.get_parse("workers", cfg.num_workers)?;
+    cfg.num_partitions = args.get_parse("partitions", cfg.num_partitions)?;
+    cfg.num_samplers = args.get_parse("samplers", cfg.num_samplers)?;
+    cfg.episode_size = args.get_parse("episode-size", cfg.episode_size)?;
+    cfg.batch_size = args.get_parse("batch-size", cfg.batch_size)?;
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    cfg.log_every = args.get_parse("log-every", cfg.log_every)?;
+    if let Some(s) = args.get("shuffle") {
+        cfg.shuffle =
+            ShuffleKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown shuffle '{s}'"))?;
+    }
+    if let Some(s) = args.get("backend") {
+        cfg.backend =
+            BackendKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown backend '{s}'"))?;
+    }
+    if args.flag("no-collaboration") {
+        cfg.collaboration = false;
+    }
+    if args.flag("no-augmentation") {
+        cfg.online_augmentation = false;
+    }
+    if args.flag("no-fix-context") {
+        cfg.fix_context = false;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let graph = load_or_generate_graph(args)?;
+    let cfg = config_from_args(args)?;
+    let stats = GraphStats::compute(&graph);
+    eprintln!(
+        "graph: {} nodes, {} edges (mean degree {:.1})",
+        stats.num_nodes, stats.num_edges, stats.mean_degree
+    );
+    eprintln!(
+        "config: dim={} epochs={} workers={} samplers={} backend={} shuffle={}",
+        cfg.dim,
+        cfg.epochs,
+        cfg.num_workers,
+        cfg.num_samplers,
+        cfg.backend.name(),
+        cfg.shuffle.name()
+    );
+
+    let mut trainer = Trainer::new(graph, cfg)?;
+    let result = trainer.train()?;
+    let s = &result.stats;
+    eprintln!(
+        "trained {} samples in {} (preprocess {}), {:.2}M samples/s, final loss {:.4}",
+        s.counters.samples_trained,
+        human_secs(s.train_secs),
+        human_secs(s.preprocess_secs),
+        s.throughput() / 1e6,
+        s.final_loss
+    );
+    eprintln!(
+        "bus: {} to device, {} from device over {} episodes",
+        human_bytes(s.counters.bytes_to_device),
+        human_bytes(s.counters.bytes_from_device),
+        s.counters.episodes
+    );
+
+    if let Some(out) = args.get("output") {
+        if out.ends_with(".txt") {
+            embedding::save_embeddings_text(&result.embeddings, out)?;
+        } else {
+            embedding::save_embeddings_binary(&result.embeddings, out)?;
+        }
+        eprintln!("embeddings saved to {out}");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- generate --
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let kind = args.get("kind").unwrap_or("ba");
+    let n = args.get_parse("nodes", 10_000usize)?;
+    let m = args.get_parse("edges-per-node", 5usize)?;
+    let labels = args.get_parse("labels", 10usize)?;
+    let mixing = args.get_parse("mixing", 0.05f64)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out FILE is required"))?;
+    let g = match kind {
+        "ba" => generators::barabasi_albert(n, m, seed),
+        "youtube" => generators::youtube_like(n, labels, seed),
+        "sbm" => generators::planted_partition(n, labels, 2.0 * m as f64, mixing, seed),
+        "er" => generators::erdos_renyi(n, n * m, seed),
+        other => bail!("unknown graph kind '{other}'"),
+    };
+    graph::save_edge_list(&g, out)?;
+    let s = GraphStats::compute(&g);
+    eprintln!(
+        "wrote {}: {} nodes, {} edges, mean degree {:.1}, top-1% degree share {:.2}",
+        out, s.num_nodes, s.num_edges, s.mean_degree, s.top1pct_degree_share
+    );
+    Ok(())
+}
+
+// ----------------------------------------------------------------- eval --
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let task = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("eval needs a task: classify | linkpred"))?;
+    let emb_path = args
+        .get("embeddings")
+        .ok_or_else(|| anyhow::anyhow!("--embeddings FILE is required"))?;
+    let graph_path = args
+        .get("graph")
+        .ok_or_else(|| anyhow::anyhow!("--graph FILE is required"))?;
+    let store = load_embeddings_any(emb_path)?;
+    let graph = graph::load_edge_list(graph_path)?;
+    anyhow::ensure!(
+        store.num_nodes() == graph.num_nodes(),
+        "embeddings ({}) and graph ({}) disagree on node count",
+        store.num_nodes(),
+        graph.num_nodes()
+    );
+    let seed = args.get_parse("seed", 7u64)?;
+    match task {
+        "classify" => {
+            anyhow::ensure!(graph.labels().is_some(), "graph has no labels");
+            let frac = args.get_parse("train-frac", 0.02f64)?;
+            let report = experiments::classify(&store, &graph, frac, seed);
+            println!(
+                "micro-F1 {:.2}%  macro-F1 {:.2}%  ({}% labeled)",
+                100.0 * report.micro_f1,
+                100.0 * report.macro_f1,
+                100.0 * frac
+            );
+        }
+        "linkpred" => {
+            let holdout = args.get_parse("holdout", 0.01f64)?;
+            let split = eval::LinkSplit::new(&graph, holdout, seed);
+            let auc = eval::link_prediction_auc(&store, &split);
+            println!(
+                "link prediction AUC {:.4} over {} held-out edges",
+                auc,
+                split.positives.len()
+            );
+        }
+        other => bail!("unknown eval task '{other}'"),
+    }
+    Ok(())
+}
+
+fn load_embeddings_any(path: &str) -> Result<EmbeddingStore> {
+    if path.ends_with(".txt") {
+        embedding::load_embeddings_text(path)
+    } else {
+        embedding::load_embeddings(path)
+    }
+}
+
+// ------------------------------------------------------------------ exp --
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("exp needs a name (table1..table8, fig4..fig6, all)"))?;
+    let scale = match args.get("scale") {
+        Some(s) => Scale::parse(s).ok_or_else(|| anyhow::anyhow!("unknown scale '{s}'"))?,
+        None => Scale::Small,
+    };
+    experiments::run(name, scale)
+}
+
+// ---------------------------------------------------------------- stats --
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    if args.positional.is_empty() && args.get("synthetic").is_none() {
+        // no graph: print the paper's Table-1 memory model
+        MemoryModel::paper_example().table().print();
+        return Ok(());
+    }
+    let g = load_or_generate_graph(args)?;
+    let s = GraphStats::compute(&g);
+    println!("nodes            {}", s.num_nodes);
+    println!("edges            {}", s.num_edges);
+    println!(
+        "degree           min {} / mean {:.2} / max {}",
+        s.min_degree, s.mean_degree, s.max_degree
+    );
+    println!("top-1% share     {:.3}", s.top1pct_degree_share);
+    let dim = args.get_parse("dim", 128u64)?;
+    let model = MemoryModel {
+        num_nodes: s.num_nodes as u64,
+        num_edges: s.num_edges as u64,
+        dim,
+        walk_length: args.get_parse("walk-length", 5u64)?,
+        augmentation_distance: args.get_parse("aug-distance", 2u64)?,
+    };
+    model.table().print();
+    Ok(())
+}
+
+// ------------------------------------------------------------ artifacts --
+
+fn cmd_artifacts() -> Result<()> {
+    let dir = graphvite::runtime::artifacts_dir();
+    let manifest = graphvite::runtime::default_manifest()
+        .with_context(|| format!("no manifest under {} — run `make artifacts`", dir.display()))?;
+    println!("artifacts dir: {}", dir.display());
+    for meta in manifest.all() {
+        println!("  {meta}");
+    }
+    Ok(())
+}

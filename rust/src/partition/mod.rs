@@ -1,0 +1,192 @@
+//! Degree-guided grid partitioning (paper §4.3, Figure 3).
+//!
+//! Rows of `vertex` and `context` are split into `n` partitions. GraphVite
+//! sorts nodes by degree and deals them into partitions in a zig-zag
+//! (boustrophedon) pattern — 0,1,…,n-1,n-1,…,1,0,… — so every partition
+//! receives the same number of nodes *and* a balanced share of high-degree
+//! nodes (sample blocks then have roughly equal sizes, which keeps the
+//! per-episode work of the n GPUs balanced).
+
+use crate::graph::Graph;
+
+/// A partitioning of node ids into `n` parts with local row indices.
+#[derive(Debug, Clone)]
+pub struct Partitioning {
+    /// part_of[v] = partition id of node v.
+    part_of: Vec<u16>,
+    /// local_row[v] = row of node v inside its partition.
+    local_row: Vec<u32>,
+    /// nodes_of_part[p][r] = global node id at partition p, local row r.
+    nodes_of_part: Vec<Vec<u32>>,
+}
+
+/// Partitioning strategies.
+pub struct Partitioner;
+
+impl Partitioner {
+    /// The paper's degree-guided zig-zag strategy.
+    pub fn degree_zigzag(graph: &Graph, num_parts: usize) -> Partitioning {
+        assert!(num_parts >= 1);
+        let n = graph.num_nodes();
+        assert!(n >= num_parts, "fewer nodes than partitions");
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        // sort by degree descending (stable tiebreak on id for determinism)
+        order.sort_unstable_by(|&a, &b| {
+            graph
+                .degree(b)
+                .cmp(&graph.degree(a))
+                .then_with(|| a.cmp(&b))
+        });
+        Self::zigzag_assign(&order, n, num_parts)
+    }
+
+    /// Round-robin over raw node ids (ablation baseline: no degree guidance).
+    pub fn round_robin(graph: &Graph, num_parts: usize) -> Partitioning {
+        let n = graph.num_nodes();
+        let order: Vec<u32> = (0..n as u32).collect();
+        Self::zigzag_assign(&order, n, num_parts)
+    }
+
+    fn zigzag_assign(order: &[u32], n: usize, num_parts: usize) -> Partitioning {
+        let mut part_of = vec![0u16; n];
+        let mut local_row = vec![0u32; n];
+        let mut nodes_of_part: Vec<Vec<u32>> = vec![Vec::with_capacity(n / num_parts + 1); num_parts];
+        for (i, &v) in order.iter().enumerate() {
+            let round = i / num_parts;
+            let pos = i % num_parts;
+            let p = if round % 2 == 0 { pos } else { num_parts - 1 - pos };
+            part_of[v as usize] = p as u16;
+            local_row[v as usize] = nodes_of_part[p].len() as u32;
+            nodes_of_part[p].push(v);
+        }
+        Partitioning { part_of, local_row, nodes_of_part }
+    }
+}
+
+impl Partitioning {
+    pub fn num_parts(&self) -> usize {
+        self.nodes_of_part.len()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.part_of.len()
+    }
+
+    /// Partition id of node `v`.
+    #[inline]
+    pub fn part_of(&self, v: u32) -> usize {
+        self.part_of[v as usize] as usize
+    }
+
+    /// Local row of node `v` within its partition.
+    #[inline]
+    pub fn local_row(&self, v: u32) -> u32 {
+        self.local_row[v as usize]
+    }
+
+    /// Global node ids of partition `p` in local-row order.
+    #[inline]
+    pub fn nodes_of_part(&self, p: usize) -> &[u32] {
+        &self.nodes_of_part[p]
+    }
+
+    /// Number of rows in partition `p`.
+    #[inline]
+    pub fn part_size(&self, p: usize) -> usize {
+        self.nodes_of_part[p].len()
+    }
+
+    /// Largest partition size (the row capacity a device must hold).
+    pub fn max_part_size(&self) -> usize {
+        self.nodes_of_part.iter().map(|v| v.len()).max().unwrap_or(0)
+    }
+
+    /// Sum of weighted degrees per partition (balance diagnostics).
+    pub fn degree_loads(&self, graph: &Graph) -> Vec<f64> {
+        self.nodes_of_part
+            .iter()
+            .map(|nodes| {
+                nodes
+                    .iter()
+                    .map(|&v| graph.weighted_degree(v) as f64)
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn covers_every_node_exactly_once() {
+        let g = generators::barabasi_albert(997, 3, 1); // prime count
+        let parts = Partitioner::degree_zigzag(&g, 4);
+        let mut seen = vec![false; 997];
+        for p in 0..4 {
+            for &v in parts.nodes_of_part(p) {
+                assert!(!seen[v as usize], "node {v} assigned twice");
+                seen[v as usize] = true;
+                assert_eq!(parts.part_of(v), p);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn local_rows_are_dense_and_consistent() {
+        let g = generators::barabasi_albert(500, 2, 2);
+        let parts = Partitioner::degree_zigzag(&g, 3);
+        for p in 0..3 {
+            let nodes = parts.nodes_of_part(p);
+            for (r, &v) in nodes.iter().enumerate() {
+                assert_eq!(parts.local_row(v) as usize, r);
+            }
+        }
+    }
+
+    #[test]
+    fn sizes_balanced_within_one() {
+        let g = generators::barabasi_albert(1001, 2, 3);
+        let parts = Partitioner::degree_zigzag(&g, 4);
+        let sizes: Vec<usize> = (0..4).map(|p| parts.part_size(p)).collect();
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert!(max - min <= 1, "sizes {sizes:?}");
+    }
+
+    #[test]
+    fn zigzag_balances_degree_better_than_blocked() {
+        // on a scale-free graph, degree loads under zig-zag should be
+        // within ~25% of each other
+        let g = generators::barabasi_albert(2000, 3, 4);
+        let parts = Partitioner::degree_zigzag(&g, 4);
+        let loads = parts.degree_loads(&g);
+        let min = loads.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = loads.iter().cloned().fold(0.0, f64::max);
+        assert!(max / min < 1.25, "loads {loads:?}");
+    }
+
+    #[test]
+    fn single_partition_is_identity_map() {
+        let g = generators::karate_club();
+        let parts = Partitioner::degree_zigzag(&g, 1);
+        assert_eq!(parts.part_size(0), 34);
+        for v in 0..34u32 {
+            assert_eq!(parts.part_of(v), 0);
+        }
+    }
+
+    #[test]
+    fn round_robin_is_degree_blind() {
+        let g = generators::karate_club();
+        let parts = Partitioner::round_robin(&g, 2);
+        // first zig: node 0 -> part 0, node 1 -> part 1; zag: 2 -> 1, 3 -> 0
+        assert_eq!(parts.part_of(0), 0);
+        assert_eq!(parts.part_of(1), 1);
+        assert_eq!(parts.part_of(2), 1);
+        assert_eq!(parts.part_of(3), 0);
+    }
+}

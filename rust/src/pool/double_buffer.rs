@@ -1,0 +1,156 @@
+//! The collaboration strategy's double-buffered pool pair (paper §3.3).
+//!
+//! Two sample pools live in main memory; CPU sampler threads always fill
+//! one while GPU workers train from the other, and the pair swaps when the
+//! producer finishes — so neither stage ever waits on the other inside an
+//! episode and the hardware-idle-half problem of a single shared pool
+//! disappears.
+//!
+//! Implemented as a rendezvous: the producer publishes a filled pool and
+//! blocks until the consumer returns the previous one (1-deep exchange —
+//! exactly two buffers ever exist, like the paper's layout).
+
+use std::sync::{Condvar, Mutex};
+
+use super::SamplePool;
+
+#[derive(Debug, Default)]
+struct State {
+    /// Filled pool waiting for the consumer (capacity 1).
+    ready: Option<SamplePool>,
+    /// Empty pool returned by the consumer for the producer to refill.
+    free: Option<SamplePool>,
+    /// Producer signalled end of stream.
+    done: bool,
+}
+
+/// Shared double-buffer exchange between one producer and one consumer.
+#[derive(Debug, Default)]
+pub struct PoolPair {
+    state: Mutex<State>,
+    cond: Condvar,
+}
+
+impl PoolPair {
+    pub fn new() -> Self {
+        let mut s = State::default();
+        // seed the producer with one free buffer; the second buffer is the
+        // one the producer allocates for its first fill.
+        s.free = Some(SamplePool::new());
+        PoolPair { state: Mutex::new(s), cond: Condvar::new() }
+    }
+
+    /// Producer: publish a filled pool; blocks while the previous one is
+    /// still unconsumed (keeps exactly 2 pools alive). Returns an empty
+    /// buffer to refill, or None if the consumer hung up… (consumer never
+    /// hangs up in our protocol; kept simple).
+    pub fn publish(&self, pool: SamplePool) -> SamplePool {
+        let mut st = self.state.lock().unwrap();
+        while st.ready.is_some() {
+            st = self.cond.wait(st).unwrap();
+        }
+        st.ready = Some(pool);
+        self.cond.notify_all();
+        while st.free.is_none() {
+            st = self.cond.wait(st).unwrap();
+        }
+        let mut buf = st.free.take().unwrap();
+        buf.clear();
+        buf
+    }
+
+    /// Consumer: take the next filled pool, blocking until one is ready.
+    /// Returns None after [`Self::finish`] once the stream drains.
+    pub fn take(&self) -> Option<SamplePool> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(pool) = st.ready.take() {
+                self.cond.notify_all();
+                return Some(pool);
+            }
+            if st.done {
+                return None;
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Consumer: hand a drained pool back for refilling.
+    pub fn recycle(&self, pool: SamplePool) {
+        let mut st = self.state.lock().unwrap();
+        st.free = Some(pool);
+        self.cond.notify_all();
+    }
+
+    /// Producer: signal end of stream.
+    pub fn finish(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.done = true;
+        self.cond.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn producer_consumer_overlap() {
+        let pair = Arc::new(PoolPair::new());
+        let producer = {
+            let pair = Arc::clone(&pair);
+            std::thread::spawn(move || {
+                let mut buf = SamplePool::new();
+                for round in 0..5u32 {
+                    buf.clear();
+                    buf.extend((0..100).map(|i| (round, i)));
+                    buf = pair.publish(buf);
+                }
+                pair.finish();
+            })
+        };
+        let mut rounds = Vec::new();
+        while let Some(pool) = pair.take() {
+            assert_eq!(pool.len(), 100);
+            rounds.push(pool[0].0);
+            pair.recycle(pool);
+        }
+        producer.join().unwrap();
+        assert_eq!(rounds, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn finish_without_publish_unblocks_consumer() {
+        let pair = Arc::new(PoolPair::new());
+        let p2 = Arc::clone(&pair);
+        let h = std::thread::spawn(move || p2.take());
+        pair.finish();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn at_most_two_buffers_exist() {
+        // producer blocks on the second publish until consumer takes
+        let pair = Arc::new(PoolPair::new());
+        let p2 = Arc::clone(&pair);
+        let producer = std::thread::spawn(move || {
+            let mut buf = SamplePool::new();
+            for _ in 0..3 {
+                buf.push((1, 1));
+                buf = p2.publish(buf);
+            }
+            p2.finish();
+        });
+        // sleep to let producer try to run ahead — it can't publish #3
+        // until we take #1 and recycle.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let mut n = 0;
+        while let Some(pool) = pair.take() {
+            n += 1;
+            pair.recycle(pool);
+        }
+        assert_eq!(n, 3);
+        producer.join().unwrap();
+    }
+}

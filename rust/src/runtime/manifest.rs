@@ -1,0 +1,195 @@
+//! `artifacts/manifest.txt` parser — the contract between `aot.py` and the
+//! rust runtime. One artifact per line, `key=value` pairs separated by
+//! whitespace; keys: kind, file, and the static shape parameters.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Static shape parameters of one AOT artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub kind: ArtifactKind,
+    /// Path to the HLO text file (absolute once parsed).
+    pub file: PathBuf,
+    /// train: partition row capacity.
+    pub p: usize,
+    /// embedding dim.
+    pub d: usize,
+    /// train: batch size per scan step.
+    pub b: usize,
+    /// train: scan steps per execute.
+    pub s: usize,
+    /// train: negatives per positive.
+    pub k: usize,
+    /// kernel: pair count.
+    pub n: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Train,
+    Kernel,
+}
+
+/// All artifacts listed in a manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`; `file=` entries resolve relative to dir.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kv: HashMap<&str, &str> = HashMap::new();
+            for tok in line.split_whitespace() {
+                let Some(eq) = tok.find('=') else {
+                    bail!("manifest line {}: token '{}' is not key=value", lineno + 1, tok);
+                };
+                kv.insert(&tok[..eq], &tok[eq + 1..]);
+            }
+            let kind = match kv.get("kind") {
+                Some(&"train") => ArtifactKind::Train,
+                Some(&"kernel") => ArtifactKind::Kernel,
+                other => bail!("manifest line {}: bad kind {:?}", lineno + 1, other),
+            };
+            let file = dir.join(
+                kv.get("file")
+                    .ok_or_else(|| anyhow::anyhow!("manifest line {}: missing file", lineno + 1))?,
+            );
+            let num = |key: &str| -> Result<usize> {
+                kv.get(key)
+                    .map(|v| v.parse().map_err(|_| anyhow::anyhow!("bad {key}")))
+                    .unwrap_or(Ok(0))
+            };
+            artifacts.push(ArtifactMeta {
+                kind,
+                file,
+                p: num("p")?,
+                d: num("d")?,
+                b: num("b")?,
+                s: num("s")?,
+                k: num("k")?,
+                n: num("n")?,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Smallest train artifact with matching dim whose capacity fits
+    /// `rows` (the partition size). Errors list available variants.
+    pub fn find_train(&self, rows: usize, dim: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Train && a.d == dim && a.p >= rows)
+            .min_by_key(|a| a.p)
+            .ok_or_else(|| {
+                let avail: Vec<String> = self
+                    .artifacts
+                    .iter()
+                    .filter(|a| a.kind == ArtifactKind::Train)
+                    .map(|a| format!("(p={}, d={})", a.p, a.d))
+                    .collect();
+                anyhow::anyhow!(
+                    "no train artifact with d={dim} and capacity >= {rows}; \
+                     available: {} — add a variant to python/compile/aot.py \
+                     TRAIN_VARIANTS and re-run `make artifacts`",
+                    avail.join(", ")
+                )
+            })
+    }
+
+    /// First kernel artifact matching (n, d) exactly.
+    pub fn find_kernel(&self, n: usize, d: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Kernel && a.n == n && a.d == d)
+    }
+
+    /// All artifacts (CLI listing).
+    pub fn all(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+}
+
+impl std::fmt::Display for ArtifactMeta {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            ArtifactKind::Train => write!(
+                f,
+                "train  {}  (P={} rows, d={}, batch={}, scan={}, k={})",
+                self.file.file_name().and_then(|s| s.to_str()).unwrap_or("?"),
+                self.p,
+                self.d,
+                self.b,
+                self.s,
+                self.k
+            ),
+            ArtifactKind::Kernel => write!(
+                f,
+                "kernel {}  (n={}, d={})",
+                self.file.file_name().and_then(|s| s.to_str()).unwrap_or("?"),
+                self.n,
+                self.d
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+kind=train file=train_p256_d16.hlo.txt p=256 d=16 b=64 s=4 k=1
+kind=train file=train_p4096_d16.hlo.txt p=4096 d=16 b=256 s=8 k=1
+kind=kernel file=kernel_n512_d64.hlo.txt n=512 d=64
+";
+
+    #[test]
+    fn parses_and_resolves() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].p, 256);
+        assert_eq!(m.artifacts[0].file, Path::new("/art/train_p256_d16.hlo.txt"));
+        assert_eq!(m.artifacts[2].kind, ArtifactKind::Kernel);
+        assert_eq!(m.artifacts[2].n, 512);
+    }
+
+    #[test]
+    fn find_train_picks_smallest_fit() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.find_train(100, 16).unwrap().p, 256);
+        assert_eq!(m.find_train(300, 16).unwrap().p, 4096);
+        assert!(m.find_train(100, 999).is_err());
+        assert!(m.find_train(10_000, 16).is_err());
+    }
+
+    #[test]
+    fn find_kernel_exact() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert!(m.find_kernel(512, 64).is_some());
+        assert!(m.find_kernel(512, 65).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("kind=???", Path::new("/a")).is_err());
+        assert!(Manifest::parse("notkv", Path::new("/a")).is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Vose alias method: O(n) build, O(1) sampling from any discrete
+//! distribution. The "alias table trick" the paper borrows from
+//! LINE/node2vec (§4.3) — used for departure-node sampling (p ∝ degree),
+//! weighted neighbor choice, edge sampling and negative sampling
+//! (p ∝ degree^0.75).
+
+use crate::util::rng::Rng;
+
+/// Immutable alias table over `n` outcomes.
+#[derive(Debug, Clone)]
+pub struct AliasTable {
+    prob: Vec<f32>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from (unnormalized, non-negative) weights. At least one
+    /// weight must be positive.
+    pub fn new(weights: &[f32]) -> Self {
+        #[cfg(feature = "count-alias-builds")]
+        {
+            use std::sync::atomic::{AtomicU64, Ordering};
+            static BUILDS: AtomicU64 = AtomicU64::new(0);
+            static ENTRIES: AtomicU64 = AtomicU64::new(0);
+            let b = BUILDS.fetch_add(1, Ordering::Relaxed) + 1;
+            let e = ENTRIES.fetch_add(weights.len() as u64, Ordering::Relaxed);
+            if b % 100_000 == 0 {
+                eprintln!("[alias] builds={b} entries={e}");
+            }
+        }
+        let n = weights.len();
+        assert!(n > 0, "alias table needs at least one outcome");
+        let total: f64 = weights.iter().map(|&w| w as f64).sum();
+        assert!(total > 0.0, "alias table needs positive total weight");
+
+        let mut prob = vec![0f32; n];
+        let mut alias = vec![0u32; n];
+        // scaled probabilities: p_i * n
+        let mut scaled: Vec<f64> = weights
+            .iter()
+            .map(|&w| (w as f64) * n as f64 / total)
+            .collect();
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &p) in scaled.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        // NOTE: do not use `while let (Some(s), Some(l)) = (small.pop(),
+        // large.pop())` here — both pops evaluate before the match, so the
+        // exit iteration silently drops one element from the non-empty
+        // stack, leaving its prob at 0.
+        while !small.is_empty() && !large.is_empty() {
+            let s = small.pop().unwrap();
+            let l = large.pop().unwrap();
+            prob[s as usize] = scaled[s as usize] as f32;
+            alias[s as usize] = l;
+            scaled[l as usize] = (scaled[l as usize] + scaled[s as usize]) - 1.0;
+            if scaled[l as usize] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        for i in large.into_iter().chain(small) {
+            prob[i as usize] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// Number of outcomes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one outcome in O(1).
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let i = rng.below_usize(self.prob.len());
+        if rng.f32() < self.prob[i] {
+            i as u32
+        } else {
+            self.alias[i]
+        }
+    }
+
+    /// Memory footprint in bytes (for the Table 1 memory model).
+    pub fn bytes(&self) -> usize {
+        self.prob.len() * (std::mem::size_of::<f32>() + std::mem::size_of::<u32>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(table: &AliasTable, draws: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0usize; table.len()];
+        for _ in 0..draws {
+            counts[table.sample(&mut rng) as usize] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn uniform_distribution() {
+        let t = AliasTable::new(&[1.0; 8]);
+        let freqs = empirical(&t, 80_000, 1);
+        for f in freqs {
+            assert!((f - 0.125).abs() < 0.01, "f={f}");
+        }
+    }
+
+    #[test]
+    fn skewed_distribution() {
+        let t = AliasTable::new(&[1.0, 2.0, 3.0, 4.0]);
+        let freqs = empirical(&t, 100_000, 2);
+        for (i, f) in freqs.iter().enumerate() {
+            let expect = (i + 1) as f64 / 10.0;
+            assert!((f - expect).abs() < 0.01, "i={i} f={f} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn zero_weights_never_sampled() {
+        let t = AliasTable::new(&[0.0, 1.0, 0.0, 1.0]);
+        let freqs = empirical(&t, 20_000, 3);
+        assert_eq!(freqs[0], 0.0);
+        assert_eq!(freqs[2], 0.0);
+    }
+
+    #[test]
+    fn single_outcome() {
+        let t = AliasTable::new(&[5.0]);
+        let mut rng = Rng::new(4);
+        for _ in 0..10 {
+            assert_eq!(t.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn degree_power_distribution() {
+        // negative sampling weights deg^0.75
+        let degs = [1.0f32, 16.0, 81.0];
+        let weights: Vec<f32> = degs.iter().map(|d| d.powf(0.75)).collect();
+        let t = AliasTable::new(&weights);
+        let freqs = empirical(&t, 100_000, 5);
+        let total: f32 = weights.iter().sum();
+        for (f, w) in freqs.iter().zip(&weights) {
+            assert!((f - (*w / total) as f64).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn all_zero_weights_panics() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+}

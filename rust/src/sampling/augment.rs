@@ -1,0 +1,217 @@
+//! Parallel online augmentation (paper §3.1, Algorithm 2).
+//!
+//! Instead of materializing the augmented network E' (which is 1–2 orders
+//! of magnitude larger than E — Table 1's 373 GB), edge samples are
+//! generated on the fly: draw a departure node with p ∝ degree, random-walk
+//! from it, and emit every node pair within augmentation distance `s`
+//! along the walk as a positive sample.
+//!
+//! Each sampler thread owns an independent [`OnlineAugmenter`] (separate
+//! RNG stream + walk buffer), making the stage embarrassingly parallel —
+//! exactly Algorithm 2's "allocated with an independent sample pool".
+
+use crate::graph::Graph;
+use crate::sampling::{AliasTable, RandomWalker};
+use crate::util::rng::Rng;
+
+/// Tunables of the augmentation stage.
+#[derive(Debug, Clone, Copy)]
+pub struct AugmentConfig {
+    /// Random-walk length in edges (paper: 5 on YouTube, 2 on the dense
+    /// networks, 40 as the general default in §4.3).
+    pub walk_length: usize,
+    /// Augmentation distance `s`: pairs (walk[i], walk[j]) with
+    /// 1 <= j - i <= s become positive samples.
+    pub augmentation_distance: usize,
+}
+
+impl Default for AugmentConfig {
+    fn default() -> Self {
+        AugmentConfig { walk_length: 5, augmentation_distance: 2 }
+    }
+}
+
+/// Per-thread online augmentation engine.
+pub struct OnlineAugmenter<'g> {
+    walker: &'g RandomWalker<'g>,
+    departure: &'g AliasTable,
+    config: AugmentConfig,
+    rng: Rng,
+    walk_buf: Vec<u32>,
+}
+
+impl<'g> OnlineAugmenter<'g> {
+    /// `departure` must be an alias table over node degrees and `walker`
+    /// a walk engine over the same graph — both shared, built once by the
+    /// coordinator. (An earlier version built the walker here; on
+    /// weighted graphs that constructs |V| per-node alias tables per
+    /// sampler thread per pool and dominated the profile — see
+    /// EXPERIMENTS.md §Perf.)
+    pub fn new(
+        walker: &'g RandomWalker<'g>,
+        departure: &'g AliasTable,
+        config: AugmentConfig,
+        rng: Rng,
+    ) -> Self {
+        assert!(config.walk_length >= 1);
+        assert!(config.augmentation_distance >= 1);
+        OnlineAugmenter {
+            walker,
+            departure,
+            config,
+            rng,
+            walk_buf: Vec::with_capacity(config.walk_length + 1),
+        }
+    }
+
+    /// Build the shared departure-node distribution (p ∝ weighted degree).
+    pub fn departure_table(graph: &Graph) -> AliasTable {
+        AliasTable::new(graph.weighted_degrees())
+    }
+
+    /// Run one walk and append its augmented edge samples to `out`.
+    /// Returns the number of samples emitted.
+    pub fn fill_from_one_walk(&mut self, out: &mut Vec<(u32, u32)>) -> usize {
+        let start = self.departure.sample(&mut self.rng);
+        let cfg = self.config;
+        let len = self
+            .walker
+            .walk_into(start, cfg.walk_length, &mut self.rng, &mut self.walk_buf);
+        let before = out.len();
+        for i in 0..len {
+            let upper = (i + cfg.augmentation_distance).min(len - 1);
+            for j in (i + 1)..=upper {
+                // a walk can revisit a node within the window (cycles);
+                // (u, u) pairs carry no gradient signal, skip them
+                if self.walk_buf[i] != self.walk_buf[j] {
+                    out.push((self.walk_buf[i], self.walk_buf[j]));
+                }
+            }
+        }
+        out.len() - before
+    }
+
+    /// Emit samples until `out` reaches `target` length (Algorithm 2's
+    /// "while pool is not full").
+    pub fn fill(&mut self, out: &mut Vec<(u32, u32)>, target: usize) {
+        while out.len() < target {
+            let emitted = self.fill_from_one_walk(out);
+            if emitted == 0 {
+                // isolated departure node: keep going, another departure
+                // will produce samples (graphs of interest are not all
+                // isolated nodes — the departure table is degree-weighted
+                // so isolated nodes have zero probability).
+                continue;
+            }
+        }
+        out.truncate(target);
+    }
+
+    /// Expected number of samples per walk: sum over positions of the
+    /// clipped distance window. Exact for full-length walks.
+    pub fn samples_per_walk(config: &AugmentConfig) -> usize {
+        let l = config.walk_length + 1; // nodes in the walk
+        let s = config.augmentation_distance;
+        (0..l).map(|i| ((i + s).min(l - 1)).saturating_sub(i)).sum()
+    }
+
+    /// The augmentation ratio |E'| / |E| this config implies — the factor
+    /// in Table 1's "augmented edges" row.
+    pub fn augmentation_ratio(config: &AugmentConfig) -> f64 {
+        Self::samples_per_walk(config) as f64 / config.walk_length as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn setup(cfg: AugmentConfig) -> (crate::graph::Graph, AliasTable) {
+        let g = generators::karate_club();
+        let t = OnlineAugmenter::departure_table(&g);
+        let _ = cfg;
+        (g, t)
+    }
+
+    // tests construct a walker in place of the coordinator's shared one
+    macro_rules! walker {
+        ($g:expr) => {
+            RandomWalker::new(&$g)
+        };
+    }
+
+    #[test]
+    fn samples_are_within_distance() {
+        let cfg = AugmentConfig { walk_length: 10, augmentation_distance: 3 };
+        let (g, t) = setup(cfg);
+        let w = walker!(g);
+        let mut aug = OnlineAugmenter::new(&w, &t, cfg, Rng::new(1));
+        let mut out = Vec::new();
+        aug.fill(&mut out, 5_000);
+        assert_eq!(out.len(), 5_000);
+        // each sample must be a pair of nodes at walk distance <= 3; at
+        // minimum both endpoints are valid node ids
+        for &(u, v) in &out {
+            assert!((u as usize) < g.num_nodes());
+            assert!((v as usize) < g.num_nodes());
+        }
+    }
+
+    #[test]
+    fn distance_one_equals_walk_edges() {
+        // s=1 emits exactly consecutive walk pairs => all true edges
+        let cfg = AugmentConfig { walk_length: 8, augmentation_distance: 1 };
+        let (g, t) = setup(cfg);
+        let w = walker!(g);
+        let mut aug = OnlineAugmenter::new(&w, &t, cfg, Rng::new(2));
+        let mut out = Vec::new();
+        aug.fill(&mut out, 2_000);
+        for &(u, v) in &out {
+            assert!(g.has_edge(u, v), "{u}->{v} must be a real edge at s=1");
+        }
+    }
+
+    #[test]
+    fn samples_per_walk_formula() {
+        // walk of 4 edges (5 nodes), s=2: i=0:2, i=1:2, i=2:2, i=3:1, i=4:0 = 7
+        let cfg = AugmentConfig { walk_length: 4, augmentation_distance: 2 };
+        assert_eq!(OnlineAugmenter::samples_per_walk(&cfg), 7);
+        // s=1: one pair per edge
+        let cfg1 = AugmentConfig { walk_length: 4, augmentation_distance: 1 };
+        assert_eq!(OnlineAugmenter::samples_per_walk(&cfg1), 4);
+        assert!((OnlineAugmenter::augmentation_ratio(&cfg1) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn departure_is_degree_weighted() {
+        let (g, t) = setup(AugmentConfig::default());
+        let mut rng = Rng::new(3);
+        let mut counts = vec![0usize; g.num_nodes()];
+        const N: usize = 100_000;
+        for _ in 0..N {
+            counts[t.sample(&mut rng) as usize] += 1;
+        }
+        // node 33 has the highest degree (17) and must be sampled most
+        let argmax = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, c)| *c)
+            .unwrap()
+            .0;
+        assert_eq!(argmax, 33);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = AugmentConfig::default();
+        let (g, t) = setup(cfg);
+        let w = walker!(g);
+        let mut a = OnlineAugmenter::new(&w, &t, cfg, Rng::new(9));
+        let mut b = OnlineAugmenter::new(&w, &t, cfg, Rng::new(9));
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        a.fill(&mut oa, 1000);
+        b.fill(&mut ob, 1000);
+        assert_eq!(oa, ob);
+    }
+}

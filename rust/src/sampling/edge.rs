@@ -1,0 +1,89 @@
+//! Plain edge sampling (no augmentation): draw existing arcs with
+//! p ∝ weight via a global alias table — what LINE does, and what the
+//! Table 6 ablation baseline uses instead of parallel online augmentation.
+
+use crate::graph::Graph;
+use crate::sampling::AliasTable;
+use crate::util::rng::Rng;
+
+/// O(1) weighted arc sampler over the whole graph.
+pub struct EdgeSampler {
+    table: AliasTable,
+    arcs: Vec<(u32, u32)>,
+}
+
+impl EdgeSampler {
+    pub fn new(graph: &Graph) -> Self {
+        let mut arcs = Vec::with_capacity(graph.num_arcs());
+        let mut weights = Vec::with_capacity(graph.num_arcs());
+        for (u, v, w) in graph.arcs() {
+            arcs.push((u, v));
+            weights.push(w);
+        }
+        EdgeSampler { table: AliasTable::new(&weights), arcs }
+    }
+
+    /// Draw one (source, target) sample.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> (u32, u32) {
+        self.arcs[self.table.sample(rng) as usize]
+    }
+
+    /// Fill `out` up to `target` samples.
+    pub fn fill(&self, out: &mut Vec<(u32, u32)>, target: usize, rng: &mut Rng) {
+        while out.len() < target {
+            out.push(self.sample(rng));
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.table.bytes() + self.arcs.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, GraphBuilder};
+
+    #[test]
+    fn samples_are_arcs() {
+        let g = generators::karate_club();
+        let s = EdgeSampler::new(&g);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let (u, v) = s.sample(&mut rng);
+            assert!(g.has_edge(u, v));
+        }
+    }
+
+    #[test]
+    fn weighted_arcs_preferred() {
+        let g = GraphBuilder::new()
+            .add_edge(0, 1, 9.0)
+            .add_edge(2, 3, 1.0)
+            .build();
+        let s = EdgeSampler::new(&g);
+        let mut rng = Rng::new(2);
+        let mut heavy = 0;
+        const N: usize = 20_000;
+        for _ in 0..N {
+            let (u, _) = s.sample(&mut rng);
+            if u <= 1 {
+                heavy += 1;
+            }
+        }
+        let f = heavy as f64 / N as f64;
+        assert!((f - 0.9).abs() < 0.02, "f={f}");
+    }
+
+    #[test]
+    fn fill_reaches_target() {
+        let g = generators::karate_club();
+        let s = EdgeSampler::new(&g);
+        let mut rng = Rng::new(3);
+        let mut out = Vec::new();
+        s.fill(&mut out, 500, &mut rng);
+        assert_eq!(out.len(), 500);
+    }
+}

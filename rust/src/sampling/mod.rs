@@ -1,0 +1,15 @@
+//! Sampling substrate: alias tables, random walks, GraphVite's parallel
+//! online augmentation (paper §3.1) and the restricted negative sampler
+//! (paper §3.2).
+
+mod alias;
+mod augment;
+mod edge;
+mod negative;
+mod walk;
+
+pub use alias::AliasTable;
+pub use augment::{AugmentConfig, OnlineAugmenter};
+pub use edge::EdgeSampler;
+pub use negative::NegativeSampler;
+pub use walk::RandomWalker;

@@ -1,0 +1,125 @@
+//! Restricted negative sampling (paper §3.2).
+//!
+//! GraphVite draws negatives with p ∝ degree^0.75 (word2vec's unigram
+//! power), but — crucially — **only from the context partition resident on
+//! the current GPU**, so no inter-GPU communication is ever needed for
+//! negatives. This module builds one alias table per context partition
+//! over the partition's member degrees; samples are *partition-local row
+//! indices*, ready to feed the device trainer.
+
+use crate::graph::Graph;
+use crate::partition::Partitioning;
+use crate::sampling::AliasTable;
+use crate::util::rng::Rng;
+
+/// word2vec / LINE negative-sampling degree power.
+pub const NEG_POWER: f32 = 0.75;
+
+/// Per-partition restricted negative sampler.
+pub struct NegativeSampler {
+    /// One table per partition, over that partition's local rows.
+    tables: Vec<AliasTable>,
+}
+
+impl NegativeSampler {
+    /// Build from the graph degrees and a partitioning. Table `p` is over
+    /// partition `p`'s nodes in *local-row order*, weighted deg^0.75.
+    pub fn new(graph: &Graph, partitioning: &Partitioning) -> Self {
+        let tables = (0..partitioning.num_parts())
+            .map(|p| {
+                let weights: Vec<f32> = partitioning
+                    .nodes_of_part(p)
+                    .iter()
+                    .map(|&v| graph.weighted_degree(v).max(1e-12).powf(NEG_POWER))
+                    .collect();
+                AliasTable::new(&weights)
+            })
+            .collect();
+        NegativeSampler { tables }
+    }
+
+    /// Draw one negative as a local row index within partition `part`.
+    #[inline]
+    pub fn sample_local(&self, part: usize, rng: &mut Rng) -> u32 {
+        self.tables[part].sample(rng)
+    }
+
+    /// Fill `out` with `count` local-row negatives for partition `part`.
+    pub fn fill_local(&self, part: usize, count: usize, rng: &mut Rng, out: &mut Vec<i32>) {
+        out.clear();
+        out.reserve(count);
+        for _ in 0..count {
+            out.push(self.tables[part].sample(rng) as i32);
+        }
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Total memory of all tables (Table 1 accounting).
+    pub fn bytes(&self) -> usize {
+        self.tables.iter().map(|t| t.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::Partitioner;
+
+    #[test]
+    fn locals_are_in_partition_range() {
+        let g = generators::barabasi_albert(200, 3, 1);
+        let parts = Partitioner::degree_zigzag(&g, 4);
+        let neg = NegativeSampler::new(&g, &parts);
+        let mut rng = Rng::new(1);
+        for p in 0..4 {
+            let size = parts.part_size(p);
+            for _ in 0..100 {
+                assert!((neg.sample_local(p, &mut rng) as usize) < size);
+            }
+        }
+    }
+
+    #[test]
+    fn distribution_follows_degree_power() {
+        let g = generators::barabasi_albert(100, 2, 2);
+        let parts = Partitioner::degree_zigzag(&g, 1); // single partition
+        let neg = NegativeSampler::new(&g, &parts);
+        let mut rng = Rng::new(2);
+        let nodes = parts.nodes_of_part(0);
+        let mut counts = vec![0usize; nodes.len()];
+        const N: usize = 200_000;
+        for _ in 0..N {
+            counts[neg.sample_local(0, &mut rng) as usize] += 1;
+        }
+        let weights: Vec<f64> = nodes
+            .iter()
+            .map(|&v| (g.weighted_degree(v) as f64).powf(0.75))
+            .collect();
+        let total: f64 = weights.iter().sum();
+        // spot-check the top-degree node's frequency
+        let (argmax, wmax) = weights
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, w)| (i, *w))
+            .unwrap();
+        let f = counts[argmax] as f64 / N as f64;
+        assert!((f - wmax / total).abs() < 0.01, "f={f} expect={}", wmax / total);
+    }
+
+    #[test]
+    fn fill_local_count_and_range() {
+        let g = generators::karate_club();
+        let parts = Partitioner::degree_zigzag(&g, 2);
+        let neg = NegativeSampler::new(&g, &parts);
+        let mut rng = Rng::new(3);
+        let mut out = Vec::new();
+        neg.fill_local(1, 64, &mut rng, &mut out);
+        assert_eq!(out.len(), 64);
+        assert!(out.iter().all(|&x| (x as usize) < parts.part_size(1)));
+    }
+}

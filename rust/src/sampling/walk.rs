@@ -1,0 +1,153 @@
+//! Random-walk engine over the CSR graph.
+//!
+//! Walks are uniform over neighbors for unit-weight graphs and
+//! weight-proportional otherwise (per-node alias tables, built once —
+//! the same O(E)-memory trick LINE/node2vec use).
+
+use crate::graph::Graph;
+use crate::sampling::AliasTable;
+use crate::util::rng::Rng;
+
+/// Neighbor-sampling strategy, chosen at construction from the graph.
+enum NeighborChoice {
+    /// Unit weights: sample neighbor index uniformly (no tables needed).
+    Uniform,
+    /// Weighted: one alias table per node with degree >= 2.
+    Weighted(Vec<Option<AliasTable>>),
+}
+
+/// Reusable walk engine; cheap to share per thread (immutable).
+pub struct RandomWalker<'g> {
+    graph: &'g Graph,
+    choice: NeighborChoice,
+}
+
+impl<'g> RandomWalker<'g> {
+    pub fn new(graph: &'g Graph) -> Self {
+        let choice = if graph.unit_weights() {
+            NeighborChoice::Uniform
+        } else {
+            let tables = (0..graph.num_nodes() as u32)
+                .map(|v| {
+                    let w = graph.neighbor_weights(v);
+                    if w.len() >= 2 {
+                        Some(AliasTable::new(w))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            NeighborChoice::Weighted(tables)
+        };
+        RandomWalker { graph, choice }
+    }
+
+    /// One walk step from `v`; None if `v` has no neighbors.
+    #[inline]
+    pub fn step(&self, v: u32, rng: &mut Rng) -> Option<u32> {
+        let nbrs = self.graph.neighbors(v);
+        match nbrs.len() {
+            0 => None,
+            1 => Some(nbrs[0]),
+            n => {
+                let idx = match &self.choice {
+                    NeighborChoice::Uniform => rng.below_usize(n),
+                    NeighborChoice::Weighted(tables) => {
+                        tables[v as usize].as_ref().unwrap().sample(rng) as usize
+                    }
+                };
+                Some(nbrs[idx])
+            }
+        }
+    }
+
+    /// Walk of up to `len` edges starting at `start`, writing nodes into
+    /// `out` (cleared first; `out.len() <= len + 1`). Stops early at
+    /// dead ends. Returns the number of nodes written.
+    pub fn walk_into(&self, start: u32, len: usize, rng: &mut Rng, out: &mut Vec<u32>) -> usize {
+        out.clear();
+        out.push(start);
+        let mut cur = start;
+        for _ in 0..len {
+            match self.step(cur, rng) {
+                Some(next) => {
+                    out.push(next);
+                    cur = next;
+                }
+                None => break,
+            }
+        }
+        out.len()
+    }
+
+    /// Allocating convenience wrapper around [`Self::walk_into`].
+    pub fn walk(&self, start: u32, len: usize, rng: &mut Rng) -> Vec<u32> {
+        let mut out = Vec::with_capacity(len + 1);
+        self.walk_into(start, len, rng, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, GraphBuilder};
+
+    #[test]
+    fn walk_stays_on_edges() {
+        let g = generators::karate_club();
+        let walker = RandomWalker::new(&g);
+        let mut rng = Rng::new(1);
+        for start in 0..34u32 {
+            let path = walker.walk(start, 20, &mut rng);
+            assert_eq!(path[0], start);
+            for w in path.windows(2) {
+                assert!(g.has_edge(w[0], w[1]), "{} -> {} not an edge", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn dead_end_stops_walk() {
+        // path graph 0-1; node with single neighbor bounces back, fine;
+        // isolated node 2 stops immediately.
+        let g = GraphBuilder::new().with_num_nodes(3).add_edge(0, 1, 1.0).build();
+        let walker = RandomWalker::new(&g);
+        let mut rng = Rng::new(2);
+        let path = walker.walk(2, 10, &mut rng);
+        assert_eq!(path, vec![2]);
+    }
+
+    #[test]
+    fn weighted_walk_prefers_heavy_edges() {
+        // star: 0 connected to 1 (w=9) and 2 (w=1)
+        let g = GraphBuilder::new()
+            .add_edge(0, 1, 9.0)
+            .add_edge(0, 2, 1.0)
+            .build();
+        let walker = RandomWalker::new(&g);
+        let mut rng = Rng::new(3);
+        let mut count1 = 0;
+        const N: usize = 20_000;
+        for _ in 0..N {
+            if walker.step(0, &mut rng) == Some(1) {
+                count1 += 1;
+            }
+        }
+        let f = count1 as f64 / N as f64;
+        assert!((f - 0.9).abs() < 0.02, "f={f}");
+    }
+
+    #[test]
+    fn walk_into_reuses_buffer() {
+        let g = generators::karate_club();
+        let walker = RandomWalker::new(&g);
+        let mut rng = Rng::new(4);
+        let mut buf = Vec::new();
+        let n1 = walker.walk_into(0, 5, &mut rng, &mut buf);
+        assert_eq!(n1, buf.len());
+        let n2 = walker.walk_into(1, 3, &mut rng, &mut buf);
+        assert_eq!(n2, buf.len());
+        assert!(n2 <= 4);
+    }
+}

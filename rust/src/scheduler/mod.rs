@@ -1,0 +1,162 @@
+//! Episode scheduling (paper §3.2, Algorithm 3).
+//!
+//! For `P` partitions the sample pool redistributes into a `P × P` block
+//! grid. A *pool pass* visits every block exactly once, organized as `P`
+//! *episode groups*; group `g` is the latin-square diagonal
+//! `{(i, (i+g) mod P) | i}` — `P` mutually **orthogonal** blocks (no two
+//! share a vertex-partition row or context-partition column), which is
+//! what lets the workers run without any inter-worker synchronization.
+//!
+//! With the bus-usage optimization (§3.4, `fix_context`) the group is
+//! transposed: worker `i` keeps context partition `i` resident and the
+//! *vertex* partitions rotate — saving the context transfer entirely.
+
+/// One block assignment inside an episode group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    /// Worker (simulated GPU) index executing this block.
+    pub worker: usize,
+    /// Vertex partition id (row of the grid).
+    pub vid: usize,
+    /// Context partition id (column of the grid).
+    pub cid: usize,
+}
+
+/// Static schedule for one pool pass.
+#[derive(Debug, Clone)]
+pub struct EpisodeSchedule {
+    num_parts: usize,
+    num_workers: usize,
+    fix_context: bool,
+}
+
+impl EpisodeSchedule {
+    /// `num_parts` must be a multiple of `num_workers` (the paper's
+    /// "any number of partitions greater than n … in subgroups of n").
+    pub fn new(num_parts: usize, num_workers: usize, fix_context: bool) -> Self {
+        assert!(num_parts >= 1 && num_workers >= 1);
+        assert!(
+            num_parts % num_workers == 0,
+            "num_parts {num_parts} must be a multiple of num_workers {num_workers}"
+        );
+        assert!(
+            !fix_context || num_parts == num_workers,
+            "fix_context requires num_parts == num_workers (paper section 3.4)"
+        );
+        EpisodeSchedule { num_parts, num_workers, fix_context }
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.num_parts
+    }
+
+    /// Episode groups per pool pass (= `num_parts`).
+    pub fn num_groups(&self) -> usize {
+        self.num_parts
+    }
+
+    /// Waves per group: orthogonal blocks processed `num_workers` at a time.
+    pub fn waves_per_group(&self) -> usize {
+        self.num_parts / self.num_workers
+    }
+
+    /// The assignments of episode group `g`, wave `w`.
+    pub fn wave(&self, g: usize, w: usize) -> Vec<Assignment> {
+        assert!(g < self.num_groups() && w < self.waves_per_group());
+        let p = self.num_parts;
+        (0..self.num_workers)
+            .map(|i| {
+                let slot = w * self.num_workers + i; // position within the diagonal
+                if self.fix_context {
+                    // context pinned to worker: cid = i, vertex rotates
+                    let cid = slot;
+                    let vid = (slot + g) % p;
+                    Assignment { worker: i, vid, cid }
+                } else {
+                    let vid = slot;
+                    let cid = (slot + g) % p;
+                    Assignment { worker: i, vid, cid }
+                }
+            })
+            .collect()
+    }
+
+    /// All waves of group `g` flattened.
+    pub fn group(&self, g: usize) -> Vec<Assignment> {
+        (0..self.waves_per_group())
+            .flat_map(|w| self.wave(g, w))
+            .collect()
+    }
+
+    /// Every assignment of a full pool pass, in execution order.
+    pub fn full_pass(&self) -> Vec<Vec<Assignment>> {
+        (0..self.num_groups()).map(|g| self.group(g)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_pass(parts: usize, workers: usize, fix_context: bool) {
+        let s = EpisodeSchedule::new(parts, workers, fix_context);
+        let mut seen = vec![false; parts * parts];
+        for group in s.full_pass() {
+            // orthogonality within a group: distinct rows and columns
+            let mut rows = vec![false; parts];
+            let mut cols = vec![false; parts];
+            for a in &group {
+                assert!(!rows[a.vid], "row {} reused in group", a.vid);
+                assert!(!cols[a.cid], "col {} reused in group", a.cid);
+                rows[a.vid] = true;
+                cols[a.cid] = true;
+                assert!(!seen[a.vid * parts + a.cid], "block revisited");
+                seen[a.vid * parts + a.cid] = true;
+            }
+            assert_eq!(group.len(), parts);
+        }
+        assert!(seen.iter().all(|&s| s), "not all blocks covered");
+    }
+
+    #[test]
+    fn covers_all_blocks_orthogonally() {
+        check_pass(4, 4, false);
+        check_pass(4, 4, true);
+        check_pass(1, 1, false);
+        check_pass(8, 4, false);
+        check_pass(6, 2, false);
+    }
+
+    #[test]
+    fn fix_context_pins_cid_to_worker() {
+        let s = EpisodeSchedule::new(4, 4, true);
+        for g in 0..4 {
+            for a in s.wave(g, 0) {
+                assert_eq!(a.cid, a.worker);
+            }
+        }
+    }
+
+    #[test]
+    fn rotating_vid_without_fix_context() {
+        let s = EpisodeSchedule::new(4, 4, false);
+        for g in 0..4 {
+            for a in s.wave(g, 0) {
+                assert_eq!(a.vid, a.worker);
+                assert_eq!(a.cid, (a.worker + g) % 4);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn rejects_nondivisible() {
+        EpisodeSchedule::new(5, 2, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "fix_context")]
+    fn rejects_fix_context_with_subgroups() {
+        EpisodeSchedule::new(8, 4, true);
+    }
+}

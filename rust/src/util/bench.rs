@@ -1,0 +1,210 @@
+//! Criterion-style micro/macro benchmark harness (criterion itself is not
+//! in the offline crate set). Used by every `rust/benches/*.rs` target
+//! (all declared `harness = false`).
+//!
+//! Features: warmup, configurable sample count, mean/stddev/min reporting,
+//! throughput annotations, and a markdown table emitter so each bench can
+//! print the paper table it regenerates.
+
+use std::hint::black_box as bb;
+use std::time::Instant;
+
+use crate::util::{human_secs, mean, stddev};
+
+/// Re-export of `std::hint::black_box` for bench bodies.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_secs: f64,
+    pub stddev_secs: f64,
+    pub min_secs: f64,
+    pub samples: usize,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.mean_secs)
+    }
+}
+
+/// Benchmark runner with warmup + repeated timing.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Bencher { warmup_iters: 3, sample_iters: 10, results: Vec::new() }
+    }
+
+    pub fn with_iters(warmup: usize, samples: usize) -> Self {
+        Bencher { warmup_iters: warmup, sample_iters: samples, results: Vec::new() }
+    }
+
+    /// Run `f` (warmup + samples), record and print one line.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_with_items(name, None, &mut f)
+    }
+
+    /// Like [`Self::bench`] but annotates items/iteration for throughput.
+    pub fn bench_items<T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_items(name, Some(items), &mut f)
+    }
+
+    fn bench_with_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            bb(f());
+        }
+        let mut times = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            bb(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            mean_secs: mean(&times),
+            stddev_secs: stddev(&times),
+            min_secs: times.iter().cloned().fold(f64::INFINITY, f64::min),
+            samples: self.sample_iters,
+            items_per_iter: items,
+        };
+        let thr = res
+            .throughput()
+            .map(|t| format!("  ({:.3} Melem/s)", t / 1e6))
+            .unwrap_or_default();
+        println!(
+            "bench {:<48} {:>12} ± {:>10}  min {:>12}{}",
+            res.name,
+            human_secs(res.mean_secs),
+            human_secs(res.stddev_secs),
+            human_secs(res.min_secs),
+            thr
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Markdown table emitter for experiment harnesses: each paper table is
+/// regenerated as one of these and printed to stdout.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}-|", "-".repeat(w + 1)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_runs_and_records() {
+        let mut b = Bencher::with_iters(1, 3);
+        let r = b.bench("noop", || 1 + 1).clone();
+        assert_eq!(r.samples, 3);
+        assert!(r.mean_secs >= 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let mut b = Bencher::with_iters(0, 2);
+        let r = b.bench_items("items", 1000.0, || bb(0)).clone();
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(&["1".into(), "xx".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_arity_checked() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

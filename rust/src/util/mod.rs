@@ -1,0 +1,84 @@
+//! Hand-rolled infrastructure substrates.
+//!
+//! The offline crate set has no `rand`, `rayon`, `criterion` or `proptest`,
+//! so this module provides the equivalents the rest of the system needs:
+//! a fast counter-seeded RNG ([`rng`]), wall-clock timers ([`timer`]), a
+//! criterion-style benchmark harness ([`bench`]) and a miniature
+//! property-testing framework ([`prop`]).
+
+pub mod bench;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+/// Mean of an f64 slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Format a byte count as a human-readable string (KiB/MiB/GiB).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[unit])
+    }
+}
+
+/// Format seconds as "Xh Ym", "Xm Ys" or "X.XXs".
+pub fn human_secs(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{:.0}h {:.0}m", (secs / 3600.0).floor(), (secs % 3600.0) / 60.0)
+    } else if secs >= 60.0 {
+        format!("{:.0}m {:.1}s", (secs / 60.0).floor(), secs % 60.0)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((stddev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(stddev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(human_secs(0.5), "0.500s");
+        assert_eq!(human_secs(90.0), "1m 30.0s");
+        assert_eq!(human_secs(7260.0), "2h 1m");
+    }
+}

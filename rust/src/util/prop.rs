@@ -1,0 +1,131 @@
+//! Miniature property-testing framework (proptest is not in the offline
+//! crate set). Provides seeded case generation with failure reporting of
+//! the offending seed, plus common generators for graphs/index vectors.
+//!
+//! Usage:
+//! ```
+//! use graphvite::util::prop::{forall, Gen};
+//! forall("reverse twice is identity", 100, |g: &mut Gen| {
+//!     let xs = g.vec_u32(0..200, 0..1000);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::ops::Range;
+
+/// Per-case generator handle wrapping a seeded RNG.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.end > r.start);
+        r.start + self.rng.below_usize(r.end - r.start)
+    }
+
+    pub fn u32_in(&mut self, r: Range<u32>) -> u32 {
+        self.usize_in(r.start as usize..r.end as usize) as u32
+    }
+
+    pub fn f32_in(&mut self, r: Range<f32>) -> f32 {
+        self.rng.range_f32(r.start, r.end)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// Vector of random u32 with random length in `len` and values in `val`.
+    pub fn vec_u32(&mut self, len: Range<usize>, val: Range<u32>) -> Vec<u32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.u32_in(val.clone())).collect()
+    }
+
+    /// Vector of random f32 values.
+    pub fn vec_f32(&mut self, len: Range<usize>, val: Range<f32>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(val.clone())).collect()
+    }
+
+    /// Random undirected edge list over `n` nodes (no self loops).
+    pub fn edges(&mut self, n: usize, max_edges: usize) -> Vec<(u32, u32)> {
+        assert!(n >= 2);
+        let m = self.usize_in(1..max_edges.max(2));
+        (0..m)
+            .map(|_| {
+                let u = self.rng.below_usize(n) as u32;
+                let mut v = self.rng.below_usize(n) as u32;
+                while v == u {
+                    v = self.rng.below_usize(n) as u32;
+                }
+                (u, v)
+            })
+            .collect()
+    }
+
+    /// Choose one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below_usize(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of `body`, panicking with the failing seed.
+///
+/// The base seed comes from `GRAPHVITE_PROP_SEED` (env) or a fixed default
+/// so CI runs are reproducible; set the env var to replay a failure.
+pub fn forall(name: &str, cases: usize, body: impl Fn(&mut Gen)) {
+    let base: u64 = std::env::var("GRAPHVITE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x9E3779B9);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x2545F4914F6CDD1D);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case} (replay with \
+                 GRAPHVITE_PROP_SEED={base} and case index {case})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        forall("count", 25, |_g| {});
+        forall("ranges", 25, |g| {
+            let x = g.usize_in(3..10);
+            assert!((3..10).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall("fails", 5, |g| {
+            assert!(g.usize_in(0..10) > 100);
+        });
+    }
+
+    #[test]
+    fn edges_have_no_self_loops() {
+        forall("no self loops", 50, |g| {
+            for (u, v) in g.edges(10, 50) {
+                assert_ne!(u, v);
+                assert!(u < 10 && v < 10);
+            }
+        });
+    }
+}

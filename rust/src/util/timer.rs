@@ -1,0 +1,94 @@
+//! Wall-clock timing helpers used by the coordinator's stage metrics and
+//! the benchmark harness.
+
+use std::time::Instant;
+
+/// A simple start/stop stopwatch that accumulates across intervals.
+#[derive(Debug)]
+pub struct Stopwatch {
+    accumulated: f64,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { accumulated: 0.0, started: None }
+    }
+
+    /// Create and immediately start.
+    pub fn started() -> Self {
+        let mut s = Self::new();
+        s.start();
+        s
+    }
+
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.accumulated += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Total accumulated seconds (includes the running interval, if any).
+    pub fn secs(&self) -> f64 {
+        self.accumulated
+            + self
+                .started
+                .map(|t0| t0.elapsed().as_secs_f64())
+                .unwrap_or(0.0)
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        sw.stop();
+        let t1 = sw.secs();
+        assert!(t1 >= 0.009, "t1={t1}");
+        sw.start();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        sw.stop();
+        assert!(sw.secs() > t1);
+    }
+
+    #[test]
+    fn stopwatch_idempotent_stop() {
+        let mut sw = Stopwatch::new();
+        sw.stop(); // no-op
+        assert_eq!(sw.secs(), 0.0);
+    }
+
+    #[test]
+    fn time_reports_duration() {
+        let (v, secs) = time(|| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(secs >= 0.004);
+    }
+}

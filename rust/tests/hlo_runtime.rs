@@ -1,0 +1,151 @@
+//! Runtime-layer integration tests: AOT HLO artifacts loaded through PJRT
+//! must agree numerically with the Python JAX reference and with the
+//! native rust backend.
+
+use graphvite::gpu::native_minibatch_step;
+use graphvite::runtime::{default_manifest, Device, KernelDevice};
+
+/// Deterministic fixture; the reference numbers in
+/// `train_artifact_matches_python_reference` were produced by running the
+/// Layer-2 jax function on exactly these values (see
+/// `python/tests/test_model.py::TestRustParityFixture`).
+fn fixture(
+    p: usize,
+    d: usize,
+    s: usize,
+    b: usize,
+    k: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<i32>, Vec<i32>, Vec<i32>) {
+    let vertex: Vec<f32> = (0..p * d).map(|i| ((i % 97) as f32 - 48.0) / 100.0).collect();
+    let context: Vec<f32> = (0..p * d).map(|i| ((i % 89) as f32 - 44.0) / 100.0).collect();
+    let pos_u: Vec<i32> = (0..s * b).map(|i| (i % 100) as i32).collect();
+    let pos_v: Vec<i32> = (0..s * b).map(|i| ((i * 7 + 3) % 100) as i32).collect();
+    let neg_v: Vec<i32> = (0..s * b * k).map(|i| ((i * 13 + 5) % 100) as i32).collect();
+    (vertex, context, pos_u, pos_v, neg_v)
+}
+
+#[test]
+fn train_artifact_matches_python_reference() {
+    let m = default_manifest().unwrap();
+    let meta = m.find_train(100, 16).unwrap();
+    assert_eq!((meta.p, meta.d, meta.b, meta.s, meta.k), (256, 16, 64, 4, 1));
+    let dev = Device::load(meta).unwrap();
+    let (vertex, context, pos_u, pos_v, neg_v) = fixture(meta.p, meta.d, meta.s, meta.b, meta.k);
+    let (vl, cl) = dev.upload_partitions(&vertex, &context).unwrap();
+    let (nv, nc, loss) = dev.train_step(vl, cl, &pos_u, &pos_v, &neg_v, 0.025).unwrap();
+    let (vh, ch) = dev.download_partitions(&nv, &nc).unwrap();
+    let dv: f32 = vh.iter().zip(&vertex).map(|(a, b)| (a - b).abs()).sum();
+    let dc: f32 = ch.iter().zip(&context).map(|(a, b)| (a - b).abs()).sum();
+    assert!((loss - 2.172836).abs() < 1e-3, "loss {loss}");
+    assert!((dv - 53.03366).abs() < 0.05, "dv {dv}");
+    assert!((dc - 59.299427).abs() < 0.05, "dc {dc}");
+}
+
+#[test]
+fn train_artifact_matches_native_backend_step() {
+    // One S*B-sample train step through the HLO path must equal S
+    // sequential native mini-batch steps (identical batch semantics:
+    // gather → gradient at pre-update values → scatter-add).
+    let m = default_manifest().unwrap();
+    let meta = m.find_train(100, 16).unwrap();
+    let dev = Device::load(meta).unwrap();
+    let (vertex, context, pos_u, pos_v, neg_v) = fixture(meta.p, meta.d, meta.s, meta.b, meta.k);
+    let lr = 0.0125f32;
+
+    let (vl, cl) = dev.upload_partitions(&vertex, &context).unwrap();
+    let (nv, nc, _loss) = dev.train_step(vl, cl, &pos_u, &pos_v, &neg_v, lr).unwrap();
+    let (vh, ch) = dev.download_partitions(&nv, &nc).unwrap();
+
+    let mut v2 = vertex.clone();
+    let mut c2 = context.clone();
+    let (mut gu, mut gc) = (Vec::new(), Vec::new());
+    for step in 0..meta.s {
+        native_minibatch_step(
+            &mut v2,
+            &mut c2,
+            meta.d,
+            &pos_u[step * meta.b..(step + 1) * meta.b],
+            &pos_v[step * meta.b..(step + 1) * meta.b],
+            &neg_v[step * meta.b * meta.k..(step + 1) * meta.b * meta.k],
+            meta.k,
+            lr,
+            5.0,
+            &mut gu,
+            &mut gc,
+        );
+    }
+    let max_dv = vh.iter().zip(&v2).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    let max_dc = ch.iter().zip(&c2).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    assert!(max_dv < 2e-5, "vertex diverged: {max_dv}");
+    assert!(max_dc < 2e-5, "context diverged: {max_dc}");
+}
+
+#[test]
+fn kernel_artifact_runs_and_is_finite() {
+    let m = default_manifest().unwrap();
+    let meta = m.find_kernel(512, 64).expect("kernel_n512_d64 artifact");
+    let dev = KernelDevice::load(meta).unwrap();
+    let n = meta.n;
+    let d = meta.d;
+    let u: Vec<f32> = (0..n * d).map(|i| ((i % 31) as f32 - 15.0) / 20.0).collect();
+    let v: Vec<f32> = (0..n * d).map(|i| ((i % 37) as f32 - 18.0) / 20.0).collect();
+    let label: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+    let weight: Vec<f32> = label.iter().map(|&l| if l > 0.0 { 1.0 } else { 5.0 }).collect();
+    let (gu, gv, loss) = dev.run(&u, &v, &label, &weight).unwrap();
+    assert_eq!(gu.len(), n * d);
+    assert_eq!(gv.len(), n * d);
+    assert_eq!(loss.len(), n);
+    assert!(loss.iter().all(|x| x.is_finite() && *x >= 0.0));
+    assert!(gu.iter().chain(&gv).all(|x| x.is_finite()));
+    // semantics: -grad_u attracts for label=1, repels for label=0
+    for i in (1..n).step_by(101) {
+        let dot: f32 = (0..d).map(|j| -gu[i * d + j] * v[i * d + j]).sum();
+        if label[i] > 0.0 {
+            assert!(dot > 0.0, "positive pair {i} not attracted");
+        } else {
+            assert!(dot < 0.0, "negative pair {i} not repelled");
+        }
+    }
+}
+
+#[test]
+fn padded_rows_receive_no_gradient() {
+    // Rows >= the real partition size must stay bit-identical through a
+    // train step (the coordinator relies on this when padding partitions
+    // up to the artifact capacity P).
+    let m = default_manifest().unwrap();
+    let meta = m.find_train(100, 16).unwrap();
+    let dev = Device::load(meta).unwrap();
+    let (vertex, context, pos_u, pos_v, neg_v) = fixture(meta.p, meta.d, meta.s, meta.b, meta.k);
+    // all fixture indices are < 100, so rows 100..256 are padding
+    let (vl, cl) = dev.upload_partitions(&vertex, &context).unwrap();
+    let (nv, nc, _) = dev.train_step(vl, cl, &pos_u, &pos_v, &neg_v, 0.025).unwrap();
+    let (vh, ch) = dev.download_partitions(&nv, &nc).unwrap();
+    let pad_start = 100 * meta.d;
+    assert_eq!(&vh[pad_start..], &vertex[pad_start..], "vertex padding touched");
+    assert_eq!(&ch[pad_start..], &context[pad_start..], "context padding touched");
+}
+
+#[test]
+fn manifest_selects_smallest_sufficient_capacity() {
+    let m = default_manifest().unwrap();
+    assert_eq!(m.find_train(100, 16).unwrap().p, 256);
+    assert_eq!(m.find_train(256, 16).unwrap().p, 256);
+    assert_eq!(m.find_train(257, 64).unwrap().p, 4096);
+    assert_eq!(m.find_train(5000, 64).unwrap().p, 16384);
+    assert!(m.find_train(100, 999).is_err(), "no artifact for dim 999");
+}
+
+#[test]
+fn zero_lr_train_step_is_identity() {
+    let m = default_manifest().unwrap();
+    let meta = m.find_train(100, 16).unwrap();
+    let dev = Device::load(meta).unwrap();
+    let (vertex, context, pos_u, pos_v, neg_v) = fixture(meta.p, meta.d, meta.s, meta.b, meta.k);
+    let (vl, cl) = dev.upload_partitions(&vertex, &context).unwrap();
+    let (nv, nc, loss) = dev.train_step(vl, cl, &pos_u, &pos_v, &neg_v, 0.0).unwrap();
+    let (vh, ch) = dev.download_partitions(&nv, &nc).unwrap();
+    assert_eq!(vh, vertex);
+    assert_eq!(ch, context);
+    assert!(loss > 0.0, "loss should still be computed: {loss}");
+}

@@ -1,0 +1,259 @@
+//! Cross-module integration tests over the native path: graph → sampler →
+//! pool → partition → scheduler → trainer → eval, plus persistence and
+//! the CLI-facing config surface. (The HLO path is covered by
+//! `pipeline.rs` and `hlo_runtime.rs`.)
+
+use graphvite::baselines::line::LineConfig;
+use graphvite::baselines::{DeepWalkBaseline, LineBaseline, MinibatchGpuBaseline};
+use graphvite::baselines::deepwalk::DeepWalkConfig;
+use graphvite::baselines::minibatch::MinibatchConfig;
+use graphvite::config::{BackendKind, TrainConfig};
+use graphvite::coordinator::Trainer;
+use graphvite::embedding::{self, EmbeddingStore};
+use graphvite::eval::{link_prediction_auc, LinkSplit};
+use graphvite::experiments::classify;
+use graphvite::graph::{self, generators};
+use graphvite::pool::ShuffleKind;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("graphvite_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn small_cfg() -> TrainConfig {
+    TrainConfig {
+        dim: 16,
+        epochs: 100,
+        num_workers: 2,
+        num_samplers: 2,
+        episode_size: 5_000,
+        backend: BackendKind::Native,
+        shuffle: ShuffleKind::Pseudo,
+        ..TrainConfig::default()
+    }
+}
+
+// ---------------------------------------------------------------- train --
+
+#[test]
+fn trained_embeddings_classify_communities() {
+    let g = generators::planted_partition(1_000, 5, 16.0, 0.05, 3);
+    let mut t = Trainer::new(g.clone(), TrainConfig { epochs: 200, ..small_cfg() }).unwrap();
+    let r = t.train().unwrap();
+    let rep = classify(&r.embeddings, &g, 0.05, 7);
+    assert!(rep.micro_f1 > 0.6, "micro {}", rep.micro_f1);
+    assert!(rep.macro_f1 > 0.6, "macro {}", rep.macro_f1);
+}
+
+#[test]
+fn trained_embeddings_predict_links() {
+    let g = generators::planted_partition(1_000, 5, 16.0, 0.05, 5);
+    let split = LinkSplit::new(&g, 0.02, 6);
+    let mut t =
+        Trainer::new(split.train_graph.clone(), TrainConfig { epochs: 200, ..small_cfg() })
+            .unwrap();
+    let r = t.train().unwrap();
+    let auc = link_prediction_auc(&r.embeddings, &split);
+    assert!(auc > 0.75, "auc {auc}");
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let g = generators::barabasi_albert(300, 3, 9);
+    let run = |seed: u64| {
+        let mut cfg = small_cfg();
+        cfg.epochs = 5;
+        cfg.seed = seed;
+        cfg.num_workers = 1; // multi-worker result order is nondeterministic
+        cfg.num_samplers = 1;
+        cfg.collaboration = false;
+        let mut t = Trainer::new(g.clone(), cfg).unwrap();
+        t.train().unwrap().embeddings.vertex_matrix().to_vec()
+    };
+    assert_eq!(run(7), run(7), "same seed must reproduce bit-identically");
+    assert_ne!(run(7), run(8), "different seeds must differ");
+}
+
+#[test]
+fn worker_counts_agree_on_quality() {
+    // parallel negative sampling must not cost accuracy (Table 6 claim)
+    let g = generators::planted_partition(800, 4, 16.0, 0.05, 11);
+    let f1_for = |workers: usize| {
+        let mut cfg = TrainConfig { epochs: 150, ..small_cfg() };
+        cfg.num_workers = workers;
+        let mut t = Trainer::new(g.clone(), cfg).unwrap();
+        let r = t.train().unwrap();
+        classify(&r.embeddings, &g, 0.05, 7).micro_f1
+    };
+    let one = f1_for(1);
+    let four = f1_for(4);
+    assert!(
+        four > one - 0.1,
+        "4-worker F1 {four} collapsed vs 1-worker {one}"
+    );
+}
+
+// ---------------------------------------------------------- persistence --
+
+#[test]
+fn embeddings_binary_roundtrip() {
+    let g = generators::karate_club();
+    let mut t = Trainer::new(g, TrainConfig { epochs: 10, ..small_cfg() }).unwrap();
+    let r = t.train().unwrap();
+    let path = tmp("emb_roundtrip.bin");
+    embedding::save_embeddings_binary(&r.embeddings, &path).unwrap();
+    let loaded = embedding::load_embeddings(&path).unwrap();
+    assert_eq!(loaded.num_nodes(), r.embeddings.num_nodes());
+    assert_eq!(loaded.dim(), r.embeddings.dim());
+    assert_eq!(loaded.vertex_matrix(), r.embeddings.vertex_matrix());
+    assert_eq!(loaded.context_matrix(), r.embeddings.context_matrix());
+}
+
+#[test]
+fn embeddings_text_roundtrip() {
+    let store = EmbeddingStore::init(20, 8, 3);
+    let path = tmp("emb_roundtrip.txt");
+    embedding::save_embeddings_text(&store, &path).unwrap();
+    let loaded = embedding::load_embeddings_text(&path).unwrap();
+    assert_eq!(loaded.num_nodes(), 20);
+    assert_eq!(loaded.dim(), 8);
+    for (a, b) in loaded.vertex_matrix().iter().zip(store.vertex_matrix()) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn graph_edge_list_roundtrip_with_labels() {
+    let g = generators::planted_partition(200, 4, 8.0, 0.1, 13);
+    let path = tmp("graph_roundtrip.txt");
+    graph::save_edge_list(&g, &path).unwrap();
+    let loaded = graph::load_edge_list(&path).unwrap();
+    assert_eq!(loaded.num_nodes(), g.num_nodes());
+    assert_eq!(loaded.num_edges(), g.num_edges());
+    assert_eq!(loaded.labels(), g.labels());
+    for v in (0..200u32).step_by(17) {
+        assert_eq!(loaded.degree(v), g.degree(v));
+    }
+}
+
+// ------------------------------------------------------------ baselines --
+
+#[test]
+fn all_baselines_produce_finite_embeddings() {
+    let g = generators::barabasi_albert(300, 3, 15);
+    let line = LineBaseline::train(&g, &LineConfig { dim: 16, epochs: 5, ..Default::default() })
+        .unwrap();
+    let dw = DeepWalkBaseline::train(
+        &g,
+        &DeepWalkConfig { dim: 16, walks_per_node: 2, ..Default::default() },
+    )
+    .unwrap();
+    let mb =
+        MinibatchGpuBaseline::train(&g, &MinibatchConfig { dim: 16, epochs: 1, ..Default::default() })
+            .unwrap();
+    for (name, r) in [("line", &line), ("deepwalk", &dw), ("minibatch", &mb)] {
+        assert_eq!(r.embeddings.num_nodes(), 300, "{name}");
+        assert!(
+            r.embeddings.vertex_matrix().iter().all(|x| x.is_finite()),
+            "{name} has non-finite values"
+        );
+        assert!(r.stats.counters.samples_trained > 0, "{name}");
+    }
+}
+
+#[test]
+fn minibatch_gpu_moves_far_more_bus_bytes_than_coordinator() {
+    // The Table 3 pathology: mini-batch SGD round-trips the full matrices
+    // every batch, while GraphVite transfers per episode.
+    let g = generators::barabasi_albert(500, 4, 17);
+    let mb = MinibatchGpuBaseline::train(
+        &g,
+        &MinibatchConfig { dim: 16, epochs: 2, ..Default::default() },
+    )
+    .unwrap();
+    let mut t = Trainer::new(g, TrainConfig { epochs: 2, ..small_cfg() }).unwrap();
+    let gv = t.train().unwrap();
+    let mb_bytes = mb.stats.counters.bytes_to_device + mb.stats.counters.bytes_from_device;
+    let gv_bytes = gv.stats.counters.bytes_to_device + gv.stats.counters.bytes_from_device;
+    assert!(
+        mb_bytes > 5 * gv_bytes,
+        "mini-batch {mb_bytes} vs coordinator {gv_bytes}: bus pathology not visible"
+    );
+}
+
+// ------------------------------------------------------------- config --
+
+#[test]
+fn toml_config_drives_trainer() {
+    let text = r#"
+[train]
+dim = 8
+epochs = 3
+num_workers = 2
+num_samplers = 2
+episode_size = 2000
+backend = "native"
+shuffle = "pseudo"
+"#;
+    let cfg = TrainConfig::from_toml_str(text).unwrap();
+    let g = generators::karate_club();
+    let mut t = Trainer::new(g, cfg).unwrap();
+    let r = t.train().unwrap();
+    assert_eq!(r.embeddings.dim(), 8);
+}
+
+#[test]
+fn cli_parse_roundtrip() {
+    use graphvite::cli::Args;
+    let argv: Vec<String> = "train graph.txt --dim 32 --backend=native --quiet"
+        .split_whitespace()
+        .map(String::from)
+        .collect();
+    let a = Args::parse(&argv).unwrap();
+    assert_eq!(a.command, "train");
+    assert_eq!(a.get("dim"), Some("32"));
+    assert_eq!(a.get("backend"), Some("native"));
+    assert!(a.flag("quiet"));
+    assert_eq!(a.positional, vec!["graph.txt"]);
+}
+
+// ----------------------------------------------------------- ablations --
+
+#[test]
+fn every_ablation_combination_trains() {
+    let g = generators::barabasi_albert(200, 3, 19);
+    for aug in [false, true] {
+        for collab in [false, true] {
+            for fixc in [false, true] {
+                for shuffle in [ShuffleKind::None, ShuffleKind::Pseudo] {
+                    let cfg = TrainConfig {
+                        online_augmentation: aug,
+                        collaboration: collab,
+                        fix_context: fixc,
+                        shuffle,
+                        epochs: 2,
+                        ..small_cfg()
+                    };
+                    let mut t = Trainer::new(g.clone(), cfg).unwrap();
+                    let r = t.train().unwrap();
+                    assert!(
+                        r.stats.counters.samples_trained > 0,
+                        "aug={aug} collab={collab} fixc={fixc} {shuffle:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn experiments_tiny_scale_all_run() {
+    // The `exp` CLI surface: every harness must complete at Tiny scale.
+    // (Individually they are also exercised by the bench targets; this
+    // catches wiring regressions in experiments::run.)
+    use graphvite::experiments::{run, Scale};
+    for name in ["table1", "table7"] {
+        run(name, Scale::Tiny).unwrap();
+    }
+}

@@ -1,0 +1,281 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! state), using the hand-rolled `util::prop` mini-framework (proptest is
+//! not in the offline crate set). Each `forall` runs a body over many
+//! generated cases and shrinks failures by reporting the seed.
+
+use graphvite::embedding::{EmbeddingStore, Matrix};
+use graphvite::graph::{generators, GraphBuilder};
+use graphvite::partition::Partitioner;
+use graphvite::pool::{shuffle, BlockGrid, ShuffleKind};
+use graphvite::sampling::{AliasTable, AugmentConfig, NegativeSampler, OnlineAugmenter, RandomWalker};
+use graphvite::scheduler::EpisodeSchedule;
+use graphvite::util::prop::forall;
+use graphvite::util::rng::Rng;
+
+// ------------------------------------------------------------ routing --
+
+#[test]
+fn prop_schedule_covers_grid_orthogonally() {
+    forall("schedule", 50, |g| {
+        let workers = g.usize_in(1..5);
+        let parts = workers * g.usize_in(1..4);
+        let fix_context = parts == workers && g.bool(0.5);
+        let s = EpisodeSchedule::new(parts, workers, fix_context);
+        let mut seen = vec![false; parts * parts];
+        for group in s.full_pass() {
+            let mut rows = vec![false; parts];
+            let mut cols = vec![false; parts];
+            for a in &group {
+                assert!(a.worker < workers);
+                assert!(!rows[a.vid] && !cols[a.cid], "group not orthogonal");
+                rows[a.vid] = true;
+                cols[a.cid] = true;
+                assert!(!seen[a.vid * parts + a.cid], "block visited twice");
+                seen[a.vid * parts + a.cid] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "grid not covered");
+    });
+}
+
+#[test]
+fn prop_partitioner_is_a_bijection() {
+    forall("partition", 40, |g| {
+        let n = g.usize_in(10..2000);
+        let parts_n = g.usize_in(1..8).min(n);
+        let graph = generators::barabasi_albert(n, g.usize_in(1..4), g.usize_in(0..1000) as u64);
+        let parts = if g.bool(0.5) {
+            Partitioner::degree_zigzag(&graph, parts_n)
+        } else {
+            Partitioner::round_robin(&graph, parts_n)
+        };
+        // every node appears in exactly one partition at its local row
+        let mut seen = vec![false; n];
+        for p in 0..parts_n {
+            for (r, &v) in parts.nodes_of_part(p).iter().enumerate() {
+                assert!(!seen[v as usize]);
+                seen[v as usize] = true;
+                assert_eq!(parts.part_of(v), p);
+                assert_eq!(parts.local_row(v) as usize, r);
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+        // sizes balanced within one
+        let sizes: Vec<usize> = (0..parts_n).map(|p| parts.part_size(p)).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    });
+}
+
+#[test]
+fn prop_redistribute_conserves_and_routes_correctly() {
+    forall("redistribute", 40, |g| {
+        let n = g.usize_in(10..500);
+        let graph = generators::barabasi_albert(n, 2, g.usize_in(0..1000) as u64);
+        let parts_n = g.usize_in(1..5).min(n);
+        let parts = Partitioner::degree_zigzag(&graph, parts_n);
+        let pool: Vec<(u32, u32)> = (0..g.usize_in(0..2000))
+            .map(|_| (g.u32_in(0..n as u32), g.u32_in(0..n as u32)))
+            .collect();
+        let grid = BlockGrid::redistribute(&pool, &parts);
+        assert_eq!(grid.total_samples(), pool.len());
+        for i in 0..parts_n {
+            for j in 0..parts_n {
+                for &(lu, lv) in grid.block(i, j) {
+                    assert!((lu as usize) < parts.part_size(i));
+                    assert!((lv as usize) < parts.part_size(j));
+                }
+            }
+        }
+    });
+}
+
+// ----------------------------------------------------------- batching --
+
+#[test]
+fn prop_shuffles_are_permutations() {
+    forall("shuffles", 60, |g| {
+        let n = g.usize_in(0..5000);
+        let pool: Vec<(u32, u32)> = (0..n)
+            .map(|i| (g.u32_in(0..1000), i as u32))
+            .collect();
+        let kind = *g.choose(&[
+            ShuffleKind::None,
+            ShuffleKind::Random,
+            ShuffleKind::IndexMapping,
+            ShuffleKind::Pseudo,
+        ]);
+        let stride = g.usize_in(2..8);
+        let mut rng = Rng::new(g.usize_in(0..10000) as u64);
+        let mut shuffled = pool.clone();
+        shuffle::shuffle(kind, &mut shuffled, stride, &mut rng);
+        let mut a = pool;
+        let mut b = shuffled;
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "{kind:?} lost/duplicated samples");
+    });
+}
+
+#[test]
+fn prop_pseudo_shuffle_block_structure() {
+    // pseudo shuffle = deal round-robin into s blocks, concatenate:
+    // element at pool index i lands in block (i % s) at offset (i / s).
+    forall("pseudo-layout", 40, |g| {
+        let n = g.usize_in(2..3000);
+        let s = g.usize_in(2..7);
+        let mut pool: Vec<(u32, u32)> = (0..n as u32).map(|i| (i, i)).collect();
+        shuffle::pseudo_shuffle(&mut pool, s);
+        let block_len = |b: usize| n / s + usize::from(b < n % s);
+        let mut expect = Vec::with_capacity(n);
+        for b in 0..s {
+            for off in 0..block_len(b) {
+                expect.push((off * s + b) as u32);
+            }
+        }
+        let got: Vec<u32> = pool.iter().map(|&(u, _)| u).collect();
+        assert_eq!(got, expect);
+    });
+}
+
+#[test]
+fn prop_augmenter_emits_walk_neighbors() {
+    forall("augment", 25, |g| {
+        let n = g.usize_in(20..300);
+        let graph = generators::barabasi_albert(n, 2, g.usize_in(0..100) as u64);
+        let cfg = AugmentConfig {
+            walk_length: g.usize_in(1..10),
+            augmentation_distance: g.usize_in(1..6),
+        };
+        let dep = OnlineAugmenter::departure_table(&graph);
+        let walker = RandomWalker::new(&graph);
+        let mut aug =
+            OnlineAugmenter::new(&walker, &dep, cfg, Rng::new(g.usize_in(0..1000) as u64));
+        let mut out = Vec::new();
+        aug.fill(&mut out, 500);
+        assert_eq!(out.len(), 500);
+        for &(u, v) in &out {
+            assert!((u as usize) < n && (v as usize) < n);
+            assert_ne!(u, v, "self-pair emitted");
+        }
+    });
+}
+
+#[test]
+fn prop_negative_sampler_stays_in_partition() {
+    forall("negatives", 30, |g| {
+        let n = g.usize_in(20..1000);
+        let graph = generators::barabasi_albert(n, 2, g.usize_in(0..100) as u64);
+        let parts_n = g.usize_in(1..5).min(n);
+        let parts = Partitioner::degree_zigzag(&graph, parts_n);
+        let neg = NegativeSampler::new(&graph, &parts);
+        let mut rng = Rng::new(g.usize_in(0..1000) as u64);
+        for p in 0..parts_n {
+            for _ in 0..200 {
+                let local = neg.sample_local(p, &mut rng);
+                assert!(
+                    (local as usize) < parts.part_size(p),
+                    "negative row {local} outside partition {p}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_alias_table_matches_weights() {
+    forall("alias", 20, |g| {
+        let k = g.usize_in(2..50);
+        let weights: Vec<f32> = (0..k).map(|_| g.f32_in(0.0..10.0)).collect();
+        let total: f32 = weights.iter().sum();
+        if total <= 0.0 {
+            return; // all-zero weight vectors are rejected by construction
+        }
+        let t = AliasTable::new(&weights);
+        let mut rng = Rng::new(g.usize_in(0..10000) as u64);
+        let draws = 60_000;
+        let mut counts = vec![0usize; k];
+        for _ in 0..draws {
+            counts[t.sample(&mut rng) as usize] += 1;
+        }
+        for i in 0..k {
+            let expect = (weights[i] / total) as f64;
+            let got = counts[i] as f64 / draws as f64;
+            assert!(
+                (got - expect).abs() < 0.02 + 0.1 * expect,
+                "outcome {i}: got {got:.4} expect {expect:.4}"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------- state --
+
+#[test]
+fn prop_gather_scatter_roundtrip_any_partitioning() {
+    forall("gather-scatter", 30, |g| {
+        let n = g.usize_in(5..500);
+        let d = *g.choose(&[1usize, 3, 8, 17, 64]);
+        let graph = generators::barabasi_albert(n, 2, g.usize_in(0..100) as u64);
+        let parts_n = g.usize_in(1..5).min(n);
+        let parts = Partitioner::degree_zigzag(&graph, parts_n);
+        let mut store = EmbeddingStore::init(n, d, g.usize_in(0..1000) as u64);
+        let orig_v = store.vertex_matrix().to_vec();
+        let orig_c = store.context_matrix().to_vec();
+        let cap = parts.max_part_size() + g.usize_in(0..10);
+        let mut buf = Vec::new();
+        for p in 0..parts_n {
+            for which in [Matrix::Vertex, Matrix::Context] {
+                store.gather_partition(&parts, p, cap, which, &mut buf);
+                assert_eq!(buf.len(), cap * d);
+                store.scatter_partition(&parts, p, which, &buf);
+            }
+        }
+        assert_eq!(store.vertex_matrix(), &orig_v[..]);
+        assert_eq!(store.context_matrix(), &orig_c[..]);
+    });
+}
+
+#[test]
+fn prop_graph_builder_degree_symmetry() {
+    // undirected graphs: degree counts both directions; total degree = 2|E|
+    forall("graph-build", 30, |g| {
+        let n = g.usize_in(2..300);
+        let edges = g.edges(n, 1500);
+        let mut b = GraphBuilder::new().with_num_nodes(n);
+        for &(u, v) in &edges {
+            if u != v {
+                b.push_edge(u, v, 1.0);
+            }
+        }
+        let graph = b.build();
+        let total: usize = (0..n as u32).map(|v| graph.degree(v)).sum();
+        assert_eq!(total, 2 * graph.num_edges());
+        // every reported edge must be queryable in both directions
+        for &(u, v) in edges.iter().take(50) {
+            if u != v {
+                assert!(graph.has_edge(u, v));
+                assert!(graph.has_edge(v, u));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_rng_below_is_unbiased_across_ranges() {
+    forall("rng-below", 15, |g| {
+        let n = g.usize_in(2..64) as u64;
+        let mut rng = Rng::new(g.usize_in(0..100000) as u64);
+        let draws = 50_000;
+        let mut counts = vec![0usize; n as usize];
+        for _ in 0..draws {
+            counts[rng.below(n) as usize] += 1;
+        }
+        let expect = draws as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect).abs() < 6.0 * expect.sqrt() + 10.0,
+                "bucket {i}: {c} vs {expect}"
+            );
+        }
+    });
+}
