@@ -5,13 +5,6 @@
 //! (default tiny so `cargo bench` completes quickly; EXPERIMENTS.md
 //! records the `small` runs).
 
-fn scale() -> graphvite::experiments::Scale {
-    std::env::var("GRAPHVITE_BENCH_SCALE")
-        .ok()
-        .and_then(|s| graphvite::experiments::Scale::parse(&s))
-        .unwrap_or(graphvite::experiments::Scale::Tiny)
-}
-
 fn main() {
-    graphvite::experiments::run("fig6", scale()).expect("fig6 experiment");
+    graphvite::experiments::run("fig6", graphvite::experiments::Scale::from_env()).expect("fig6 experiment");
 }

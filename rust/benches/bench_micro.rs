@@ -12,7 +12,6 @@ use graphvite::gpu::native_minibatch_step;
 use graphvite::graph::generators;
 use graphvite::partition::Partitioner;
 use graphvite::pool::{shuffle, ShuffleKind};
-use graphvite::runtime::{default_manifest, Device};
 use graphvite::sampling::{AliasTable, AugmentConfig, NegativeSampler, OnlineAugmenter, RandomWalker};
 use graphvite::util::bench::{black_box, Bencher};
 use graphvite::util::rng::Rng;
@@ -163,7 +162,15 @@ fn bench_native_step(b: &mut Bencher) {
     });
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn bench_hlo_step(_b: &mut Bencher) {
+    println!("bench hlo: built without the pjrt feature, skipping");
+}
+
+#[cfg(feature = "pjrt")]
 fn bench_hlo_step(b: &mut Bencher) {
+    use graphvite::runtime::{default_manifest, Device};
+
     let Ok(m) = default_manifest() else {
         println!("bench hlo: no artifacts, skipping");
         return;

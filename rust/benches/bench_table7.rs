@@ -5,13 +5,6 @@
 //! (default tiny so `cargo bench` completes quickly; EXPERIMENTS.md
 //! records the `small` runs).
 
-fn scale() -> graphvite::experiments::Scale {
-    std::env::var("GRAPHVITE_BENCH_SCALE")
-        .ok()
-        .and_then(|s| graphvite::experiments::Scale::parse(&s))
-        .unwrap_or(graphvite::experiments::Scale::Tiny)
-}
-
 fn main() {
-    graphvite::experiments::run("table7", scale()).expect("table7 experiment");
+    graphvite::experiments::run("table7", graphvite::experiments::Scale::from_env()).expect("table7 experiment");
 }

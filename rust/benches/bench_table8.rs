@@ -1,0 +1,11 @@
+//! Regenerates paper Table 8 — training time under the "fast server" vs
+//! "economic server" hardware-analogue configurations.
+//!
+//! Run with `cargo bench --bench bench_table8`; set
+//! GRAPHVITE_BENCH_SCALE=tiny|small|full to change the workload size
+//! (default tiny so `cargo bench` completes quickly; EXPERIMENTS.md
+//! records the `small` runs).
+
+fn main() {
+    graphvite::experiments::run("table8", graphvite::experiments::Scale::from_env()).expect("table8 experiment");
+}

@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         num_workers: 4,
         num_samplers: 4,
         episode_size: (nodes / 2).max(4_000),
-        backend: BackendKind::Hlo, // full L3→L2→L1 path
+        backend: BackendKind::best_available(), // full L3→L2→L1 path under --features pjrt
         shuffle: ShuffleKind::Pseudo,
         collaboration: true,
         online_augmentation: true,
@@ -54,8 +54,12 @@ fn main() -> anyhow::Result<()> {
         ..TrainConfig::default()
     };
     println!(
-        "config: dim={} epochs={} workers={} samplers={} backend=hlo (AOT JAX+Pallas)",
-        config.dim, config.epochs, config.num_workers, config.num_samplers
+        "config: dim={} epochs={} workers={} samplers={} backend={}",
+        config.dim,
+        config.epochs,
+        config.num_workers,
+        config.num_samplers,
+        config.backend.name()
     );
 
     // ---- train with performance-curve checkpoints (Fig 4 shape) ----
@@ -76,7 +80,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n--- training ---");
     println!(
-        "GraphVite(hlo, 4 workers): {} trained in {} ({:.2}M samples/s)",
+        "GraphVite (4 workers): {} trained in {} ({:.2}M samples/s)",
         s.counters.samples_trained,
         human_secs(s.train_secs),
         s.throughput() / 1e6

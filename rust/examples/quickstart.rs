@@ -1,8 +1,11 @@
 //! Quickstart: train embeddings on the Zachary karate club (a tiny real
-//! graph embedded in-source) through the full three-layer HLO path, then
-//! sanity-check that the two known factions separate in embedding space.
+//! graph embedded in-source) through the best backend compiled into this
+//! binary (the full three-layer PJRT path under `--features pjrt`, the
+//! pure-rust native trainer otherwise), then sanity-check that the two
+//! known factions separate in embedding space.
 //!
 //!     cargo run --release --example quickstart
+//!     cargo run --release --features pjrt --example quickstart
 
 use graphvite::prelude::*;
 
@@ -20,7 +23,7 @@ fn main() -> anyhow::Result<()> {
         num_workers: 2,
         num_samplers: 2,
         episode_size: 2_000,
-        backend: BackendKind::Hlo, // the full JAX+Pallas AOT path
+        backend: BackendKind::best_available(), // pjrt when compiled in
         ..TrainConfig::default()
     };
     let mut trainer = Trainer::new(graph.clone(), config)?;

@@ -132,6 +132,7 @@ fn sigmoid(s: f32) -> f32 {
 /// One hierarchical-softmax update for the pair (u -> v): walk v's
 /// Huffman path, at each inner node push the branch decision towards the
 /// observed bit. Returns the pair's negative log-likelihood.
+#[allow(clippy::too_many_arguments)]
 pub fn hs_update(
     vertex: &mut [f32],
     inner: &mut [f32],

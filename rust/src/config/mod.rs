@@ -9,21 +9,26 @@ use anyhow::{bail, Result};
 
 use crate::pool::ShuffleKind;
 
-/// Which device backend the simulated GPUs run.
+/// Which device backend the simulated GPUs run. Every variant corresponds
+/// to an implementation of [`crate::gpu::Backend`]; the PJRT one is only
+/// compiled in with the `pjrt` cargo feature (see [`TrainConfig::validate`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
-    /// AOT-compiled HLO (JAX Layer-2 + Pallas Layer-1) via PJRT — the
-    /// three-layer production path.
-    Hlo,
-    /// Pure-rust SGNS trainer — bit-compatible math, used by baselines and
-    /// large sweeps where PJRT compile time dominates.
+    /// AOT-compiled HLO (JAX Layer-2 + Pallas Layer-1) executed through
+    /// PJRT — the three-layer production path. Requires building with
+    /// `--features pjrt`.
+    Pjrt,
+    /// Pure-rust SGNS trainer — bit-compatible math, always available.
+    /// Used by the baselines, CI, and large sweeps where PJRT compile
+    /// time dominates.
     Native,
 }
 
 impl BackendKind {
     pub fn parse(s: &str) -> Option<Self> {
         match s {
-            "hlo" => Some(Self::Hlo),
+            // "hlo" kept as a legacy alias for existing configs/scripts.
+            "pjrt" | "hlo" => Some(Self::Pjrt),
             "native" => Some(Self::Native),
             _ => None,
         }
@@ -31,8 +36,27 @@ impl BackendKind {
 
     pub fn name(&self) -> &'static str {
         match self {
-            Self::Hlo => "hlo",
+            Self::Pjrt => "pjrt",
             Self::Native => "native",
+        }
+    }
+
+    /// True when this binary can actually construct the backend.
+    pub fn available(&self) -> bool {
+        match self {
+            Self::Native => true,
+            Self::Pjrt => cfg!(feature = "pjrt"),
+        }
+    }
+
+    /// The most capable backend compiled into this binary: [`Self::Pjrt`]
+    /// with the `pjrt` feature, [`Self::Native`] otherwise. Examples and
+    /// experiment drivers use this so the same source runs everywhere.
+    pub fn best_available() -> Self {
+        if cfg!(feature = "pjrt") {
+            Self::Pjrt
+        } else {
+            Self::Native
         }
     }
 }
@@ -120,6 +144,14 @@ impl Default for TrainConfig {
 impl TrainConfig {
     /// Validate invariants; call before training.
     pub fn validate(&self) -> Result<()> {
+        if !self.backend.available() {
+            bail!(
+                "backend '{}' is not compiled into this binary: rebuild with \
+                 `cargo build --features pjrt` (the default feature set ships \
+                 only the pure-rust 'native' backend)",
+                self.backend.name()
+            );
+        }
         if self.dim == 0 {
             bail!("dim must be positive");
         }
@@ -243,7 +275,7 @@ mod tests {
             epochs = 7
             lr = 0.05
             shuffle = "random"
-            backend = "hlo"
+            backend = "native"
             collaboration = false
             "#,
         )
@@ -252,10 +284,39 @@ mod tests {
         assert_eq!(cfg.epochs, 7);
         assert!((cfg.lr - 0.05).abs() < 1e-9);
         assert_eq!(cfg.shuffle, ShuffleKind::Random);
-        assert_eq!(cfg.backend, BackendKind::Hlo);
+        assert_eq!(cfg.backend, BackendKind::Native);
         assert!(!cfg.collaboration);
         // untouched keys keep defaults
         assert_eq!(cfg.negatives, 1);
+    }
+
+    #[test]
+    fn backend_names_and_aliases() {
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("hlo"), Some(BackendKind::Pjrt)); // legacy
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("cuda"), None);
+        assert_eq!(BackendKind::Pjrt.name(), "pjrt");
+        assert!(BackendKind::Native.available());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_rejected_without_feature() {
+        let cfg = TrainConfig { backend: BackendKind::Pjrt, ..TrainConfig::default() };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("--features pjrt"), "unhelpful error: {err}");
+        // the TOML path surfaces the same error
+        assert!(TrainConfig::from_toml_str("backend = \"pjrt\"\n").is_err());
+        assert_eq!(BackendKind::best_available(), BackendKind::Native);
+    }
+
+    #[cfg(feature = "pjrt")]
+    #[test]
+    fn pjrt_backend_accepted_with_feature() {
+        let cfg = TrainConfig { backend: BackendKind::Pjrt, ..TrainConfig::default() };
+        cfg.validate().unwrap();
+        assert_eq!(BackendKind::best_available(), BackendKind::Pjrt);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //!                       per episode group: gather partitions, send Jobs
 //!        │ mpsc per worker            ▲ results channel
 //!        ▼                            │
-//!   worker threads   ── one per simulated GPU; owns a WorkerBackend
+//!   worker threads   ── one per simulated GPU; owns a gpu::Backend
 //!                       (PJRT client+executable or native trainer),
 //!                       draws restricted negatives, trains its block
 //! ```
@@ -100,7 +100,7 @@ impl Trainer {
         let neg = Arc::new(NegativeSampler::new(&graph, &parts));
         let sched = EpisodeSchedule::new(num_parts, cfg.num_workers, cfg.fix_context);
         let artifact: Option<ArtifactMeta> = match cfg.backend {
-            BackendKind::Hlo => {
+            BackendKind::Pjrt => {
                 let manifest = crate::runtime::default_manifest()?;
                 Some(
                     manifest
@@ -189,8 +189,16 @@ impl Trainer {
                         let mut outstanding = 0usize;
                         for a in &wave {
                             let block = grid.take_block(a.vid, a.cid);
-                            let vcap = artifact.as_ref().map(|m| m.p).unwrap_or(parts.part_size(a.vid));
-                            let ccap = artifact.as_ref().map(|m| m.p).unwrap_or(parts.part_size(a.cid));
+                            let vcap = crate::gpu::planned_capacity(
+                                &cfg,
+                                artifact.as_ref(),
+                                parts.part_size(a.vid),
+                            );
+                            let ccap = crate::gpu::planned_capacity(
+                                &cfg,
+                                artifact.as_ref(),
+                                parts.part_size(a.cid),
+                            );
                             let mut vertex = Vec::new();
                             store.gather_partition(&parts, a.vid, vcap, Matrix::Vertex, &mut vertex);
                             counters.add(&counters.bytes_to_device, (vertex.len() * 4) as u64);
@@ -237,7 +245,7 @@ impl Trainer {
                         loss_curve.push((ep_loss / ep_trained as f64) as f32);
                     }
                     if cfg.log_every > 0 && loss_curve.len() % cfg.log_every == 0 {
-                        log::info!(
+                        eprintln!(
                             "episode {} loss {:.4} ({}/{} samples)",
                             loss_curve.len(),
                             loss_curve.last().unwrap(),
@@ -299,7 +307,6 @@ impl Trainer {
 /// Read-only sampling structures shared by every sampler thread and every
 /// pool fill (built once per training run).
 struct SamplingShared<'g> {
-    graph: &'g Graph,
     walker: Option<RandomWalker<'g>>,
     departure: Option<AliasTableShared>,
     edge_sampler: Option<EdgeSampler>,
@@ -311,14 +318,12 @@ impl<'g> SamplingShared<'g> {
     fn build(graph: &'g Graph, cfg: &TrainConfig) -> Self {
         if cfg.online_augmentation {
             SamplingShared {
-                graph,
                 walker: Some(RandomWalker::new(graph)),
                 departure: Some(OnlineAugmenter::departure_table(graph)),
                 edge_sampler: None,
             }
         } else {
             SamplingShared {
-                graph,
                 walker: None,
                 departure: None,
                 edge_sampler: Some(EdgeSampler::new(graph)),

@@ -1,5 +1,6 @@
-//! Device worker threads: each simulated GPU owns a [`WorkerBackend`]
-//! (PJRT executable or native trainer), receives block jobs, draws its
+//! Device worker threads: each simulated GPU owns a [`Backend`] trait
+//! object (PJRT executable or native trainer, chosen by
+//! [`crate::gpu::create_backend`]), receives block jobs, draws its
 //! restricted negatives (paper §3.2 — only from the resident context
 //! partition), trains, and ships updated partitions back.
 
@@ -9,8 +10,8 @@ use std::thread::{Scope, ScopedJoinHandle};
 
 use anyhow::Result;
 
-use crate::config::{BackendKind, TrainConfig};
-use crate::gpu::{ChunkPlan, HloWorker, NativeWorker, WorkerBackend};
+use crate::config::TrainConfig;
+use crate::gpu::{create_backend, Backend, ChunkPlan};
 use crate::metrics::Counters;
 use crate::runtime::ArtifactMeta;
 use crate::sampling::NegativeSampler;
@@ -97,19 +98,7 @@ fn worker_loop(
 ) -> Result<()> {
     // Backend construction happens on this thread: PJRT handles are !Send,
     // one client per simulated GPU (like one CUDA context per device).
-    let mut backend = match cfg.backend {
-        BackendKind::Hlo => WorkerBackend::Hlo(HloWorker::new(
-            artifact
-                .as_ref()
-                .ok_or_else(|| anyhow::anyhow!("hlo backend needs an artifact"))?,
-        )?),
-        BackendKind::Native => WorkerBackend::Native(NativeWorker::new(
-            cfg.dim,
-            cfg.batch_size,
-            cfg.negatives,
-            cfg.neg_weight,
-        )),
-    };
+    let mut backend = create_backend(&cfg, artifact.as_ref())?;
 
     // fix_context residency: (cid, padded context rows)
     let mut ctx_cache: Option<(usize, Vec<f32>)> = None;
@@ -122,8 +111,7 @@ fn worker_loop(
             JobMsg::Stop => break,
         };
         let out = run_job(
-            &cfg,
-            &mut backend,
+            backend.as_mut(),
             &neg,
             &counters,
             &mut rng,
@@ -140,8 +128,7 @@ fn worker_loop(
 
 #[allow(clippy::too_many_arguments)]
 fn run_job(
-    _cfg: &TrainConfig,
-    backend: &mut WorkerBackend,
+    backend: &mut dyn Backend,
     neg: &NegativeSampler,
     counters: &Counters,
     rng: &mut Rng,
@@ -165,42 +152,39 @@ fn run_job(
     };
 
     let trained = block.len() as u64;
-    let loss = match backend {
-        // Native: stream chunks through one reusable scratch plan (the
-        // collected-Vec variant allocated 3 vectors per chunk and showed
-        // up as allocator churn — EXPERIMENTS.md §Perf).
-        WorkerBackend::Native(_) => {
-            let chunk_sz = backend.chunk_samples();
-            let k = backend.k();
-            let mut loss_sum = 0.0f64;
-            let mut chunks = 0usize;
-            let mut at = 0usize;
-            while at < block.len() {
-                let real =
-                    plan_chunk_into(scratch, chunk_sz, k, neg, cid, &block, at, lr, rng);
-                let t0 = std::time::Instant::now();
-                let loss = backend.train_chunks(
-                    &mut vertex,
-                    &mut ctx,
-                    std::slice::from_ref(scratch),
-                    counters,
-                )?;
-                counters.add(&counters.device_nanos, t0.elapsed().as_nanos() as u64);
-                loss_sum += loss as f64;
-                chunks += 1;
-                at += real;
-            }
-            if chunks > 0 { (loss_sum / chunks as f64) as f32 } else { 0.0 }
-        }
-        // HLO: one call per block so partitions are uploaded/downloaded
-        // once per episode (the paper's transfer pattern), not per chunk.
-        WorkerBackend::Hlo(_) => {
-            let chunks = plan_chunks(backend, neg, cid, &block, lr, rng);
+    let loss = if backend.batched_upload() {
+        // Batched backends (PJRT): one train_chunks call per block so
+        // partitions are uploaded/downloaded once per episode (the
+        // paper's transfer pattern), not per chunk.
+        let chunks = plan_chunks(&*backend, neg, cid, &block, lr, rng);
+        let t0 = std::time::Instant::now();
+        let loss = backend.train_chunks(&mut vertex, &mut ctx, &chunks, counters)?;
+        counters.add(&counters.device_nanos, t0.elapsed().as_nanos() as u64);
+        loss
+    } else {
+        // Streaming backends (native): feed chunks through one reusable
+        // scratch plan (the collected-Vec variant allocated 3 vectors per
+        // chunk and showed up as allocator churn — EXPERIMENTS.md §Perf).
+        let chunk_sz = backend.chunk_samples();
+        let k = backend.k();
+        let mut loss_sum = 0.0f64;
+        let mut chunks = 0usize;
+        let mut at = 0usize;
+        while at < block.len() {
+            let real = plan_chunk_into(scratch, chunk_sz, k, neg, cid, &block, at, lr, rng);
             let t0 = std::time::Instant::now();
-            let loss = backend.train_chunks(&mut vertex, &mut ctx, &chunks, counters)?;
+            let loss = backend.train_chunks(
+                &mut vertex,
+                &mut ctx,
+                std::slice::from_ref(scratch),
+                counters,
+            )?;
             counters.add(&counters.device_nanos, t0.elapsed().as_nanos() as u64);
-            loss
+            loss_sum += loss as f64;
+            chunks += 1;
+            at += real;
         }
+        if chunks > 0 { (loss_sum / chunks as f64) as f32 } else { 0.0 }
     };
     counters.add(&counters.samples_trained, trained);
 
@@ -249,10 +233,10 @@ fn plan_chunk_into(
     real
 }
 
-/// Collected-Vec chunk planning (kept for tests and the HLO parity
-/// harness; the worker hot path streams through `plan_chunk_into`).
+/// Collected-Vec chunk planning (used by batched backends and the HLO
+/// parity harness; streaming backends go through `plan_chunk_into`).
 fn plan_chunks(
-    backend: &WorkerBackend,
+    backend: &dyn Backend,
     neg: &NegativeSampler,
     cid: usize,
     block: &[(i32, i32)],
@@ -278,6 +262,7 @@ fn plan_chunks(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gpu::NativeWorker;
     use crate::graph::generators;
     use crate::partition::Partitioner;
 
@@ -286,7 +271,7 @@ mod tests {
         let g = generators::barabasi_albert(100, 3, 1);
         let parts = Partitioner::degree_zigzag(&g, 2);
         let neg = NegativeSampler::new(&g, &parts);
-        let backend = WorkerBackend::Native(NativeWorker::new(8, 32, 2, 5.0));
+        let backend = NativeWorker::new(8, 32, 2, 5.0);
         let block: Vec<(i32, i32)> = (0..70).map(|i| (i % 50, (i + 1) % 50)).collect();
         let mut rng = Rng::new(1);
         let chunks = plan_chunks(&backend, &neg, 0, &block, 0.025, &mut rng);
@@ -308,7 +293,7 @@ mod tests {
         let g = generators::karate_club();
         let parts = Partitioner::degree_zigzag(&g, 2);
         let neg = NegativeSampler::new(&g, &parts);
-        let backend = WorkerBackend::Native(NativeWorker::new(4, 16, 1, 5.0));
+        let backend = NativeWorker::new(4, 16, 1, 5.0);
         let mut rng = Rng::new(2);
         assert!(plan_chunks(&backend, &neg, 1, &[], 0.1, &mut rng).is_empty());
     }

@@ -19,6 +19,7 @@ impl LogisticOvR {
     /// Fit with mini-batchless SGD + L2. `features` is row-major `n × dim`
     /// (pass [`crate::embedding::EmbeddingStore::normalized_vertex`]),
     /// `labels[i] < num_classes`, training restricted to `train_ids`.
+    #[allow(clippy::too_many_arguments)]
     pub fn fit(
         features: &[f32],
         dim: usize,

@@ -8,5 +8,5 @@ pub mod linkpred;
 pub mod split;
 
 pub use classifier::{LogisticOvR, NodeClassificationReport};
-pub use linkpred::{auc_from_scores, link_prediction_auc, LinkSplit};
+pub use linkpred::{auc_from_scores, graph_reconstruction_auc, link_prediction_auc, LinkSplit};
 pub use split::train_test_split;

@@ -29,6 +29,15 @@ impl Scale {
         }
     }
 
+    /// Scale from the `GRAPHVITE_BENCH_SCALE` env var (`tiny` when unset
+    /// or unrecognized) — the single parser shared by every bench target.
+    pub fn from_env() -> Self {
+        std::env::var("GRAPHVITE_BENCH_SCALE")
+            .ok()
+            .and_then(|s| Self::parse(&s))
+            .unwrap_or(Scale::Tiny)
+    }
+
     /// Nodes of the "YouTube-like" classification graph at this scale.
     pub fn youtube_nodes(&self) -> usize {
         match self {

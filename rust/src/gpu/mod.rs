@@ -1,21 +1,25 @@
-//! Simulated GPU device backends.
+//! Simulated GPU device backends behind the [`Backend`] trait.
 //!
 //! Each GraphVite worker ("GPU") trains SGNS on its resident vertex /
-//! context partitions. Two interchangeable backends exist:
+//! context partitions. Backends are interchangeable implementations of
+//! [`Backend`], constructed per worker thread by [`create_backend`]:
 //!
-//! * [`HloWorker`] — the production three-layer path: executes the
-//!   AOT-compiled JAX+Pallas train step via PJRT. Partitions are uploaded
-//!   once per block, chained across execute calls, downloaded once — the
-//!   paper's per-episode transfer pattern.
-//! * [`NativeWorker`] — pure-rust SGNS with *identical mini-batch
-//!   semantics* (gather → gradient at pre-update values → scatter-add), so
-//!   the two backends agree numerically (see `rust/tests/hlo_runtime.rs`).
-//!   Used by the CPU baselines and large parameter sweeps.
+//! * [`NativeWorker`] (always compiled, the default) — pure-rust SGNS with
+//!   the same mini-batch semantics the HLO artifact has (gather → gradient
+//!   at pre-update values → scatter-add), so the backends agree
+//!   numerically (see `rust/tests/hlo_runtime.rs`). Used by the CPU
+//!   baselines, CI, and large parameter sweeps.
+//! * [`HloWorker`] (`pjrt` cargo feature) — the production three-layer
+//!   path: executes the AOT-compiled JAX+Pallas train step via PJRT.
+//!   Partitions are uploaded once per block, chained across execute
+//!   calls, downloaded once — the paper's per-episode transfer pattern.
 //!
 //! The coordinator prepares [`ChunkPlan`]s (sample indices already
 //! translated to partition-local rows, negatives drawn from the resident
 //! context partition per paper section 3.2) and hands them to
-//! [`WorkerBackend::train_chunks`].
+//! [`Backend::train_chunks`]. This trait is the seam future device
+//! backends (multi-device sharding, SIMD kernels, alternative runtimes)
+//! plug into without touching the coordinator.
 
 mod native;
 
@@ -23,8 +27,12 @@ pub use native::{native_minibatch_step, NativeWorker};
 
 use anyhow::Result;
 
+use crate::config::{BackendKind, TrainConfig};
 use crate::metrics::Counters;
-use crate::runtime::{ArtifactMeta, Device};
+use crate::runtime::ArtifactMeta;
+
+#[cfg(feature = "pjrt")]
+use crate::runtime::Device;
 
 /// One device-ready chunk of training work: `real` positive samples
 /// (padded by wrap-around up to the backend's chunk size), each with `k`
@@ -38,67 +46,146 @@ pub struct ChunkPlan {
     pub real: usize,
 }
 
-/// A device worker backend (one per simulated GPU).
-pub enum WorkerBackend {
-    Hlo(HloWorker),
-    Native(NativeWorker),
-}
-
-impl WorkerBackend {
+/// A device worker backend (one instance per simulated GPU, owned by its
+/// worker thread — implementations need not be `Send`; PJRT handles are
+/// raw pointers and are constructed on the owning thread, like one CUDA
+/// context per device).
+pub trait Backend {
     /// Positive samples per chunk this backend consumes.
-    pub fn chunk_samples(&self) -> usize {
-        match self {
-            WorkerBackend::Hlo(w) => w.device.meta().s * w.device.meta().b,
-            WorkerBackend::Native(w) => w.batch_size,
-        }
-    }
+    fn chunk_samples(&self) -> usize;
 
     /// Negatives per positive.
-    pub fn k(&self) -> usize {
-        match self {
-            WorkerBackend::Hlo(w) => w.device.meta().k,
-            WorkerBackend::Native(w) => w.negatives,
-        }
-    }
+    fn k(&self) -> usize;
 
-    /// Row capacity the padded partition buffers must have.
-    pub fn capacity(&self, part_rows: usize) -> usize {
-        match self {
-            WorkerBackend::Hlo(w) => w.device.meta().p,
-            WorkerBackend::Native(_) => part_rows,
-        }
+    /// True when the backend pays a per-call upload/download cost and the
+    /// worker should hand it all chunks of a block in ONE
+    /// [`Backend::train_chunks`] call (the paper's once-per-episode
+    /// transfer pattern). Streaming backends (native) return false and
+    /// receive chunks one at a time through a reusable scratch plan.
+    fn batched_upload(&self) -> bool {
+        false
     }
 
     /// Train all chunks against the padded partitions in place.
     /// Returns the mean loss over chunks.
-    pub fn train_chunks(
+    fn train_chunks(
         &mut self,
-        vertex: &mut Vec<f32>,
-        context: &mut Vec<f32>,
+        vertex: &mut [f32],
+        context: &mut [f32],
         chunks: &[ChunkPlan],
         counters: &Counters,
-    ) -> Result<f32> {
-        match self {
-            WorkerBackend::Hlo(w) => w.train_chunks(vertex, context, chunks, counters),
-            WorkerBackend::Native(w) => Ok(w.train_chunks(vertex, context, chunks, counters)),
+    ) -> Result<f32>;
+}
+
+/// Row capacity the coordinator must pad partition buffers to for the
+/// backend `cfg` selects, for a partition of `part_rows` rows. This is
+/// the single source of the padding rule: it is computable without
+/// constructing a backend (backends are built on their worker threads,
+/// after the coordinator has already gathered the padded partitions),
+/// and backends receive buffers sized by it.
+pub fn planned_capacity(
+    cfg: &TrainConfig,
+    artifact: Option<&ArtifactMeta>,
+    part_rows: usize,
+) -> usize {
+    match cfg.backend {
+        BackendKind::Native => part_rows,
+        // artifact is always Some for a validated pjrt run; fall back to
+        // the raw partition size so a missing artifact fails later with
+        // the descriptive create_backend error instead of a bad index.
+        BackendKind::Pjrt => artifact.map(|m| m.p).unwrap_or(part_rows),
+    }
+}
+
+/// Construct the backend selected by `cfg` for one worker thread.
+///
+/// `artifact` carries the AOT artifact chosen by the coordinator's
+/// capacity planning (None for the native backend). Must be called on the
+/// worker's own thread: PJRT handles are not `Send`.
+pub fn create_backend(
+    cfg: &TrainConfig,
+    artifact: Option<&ArtifactMeta>,
+) -> Result<Box<dyn Backend>> {
+    match cfg.backend {
+        BackendKind::Native => {
+            let _ = artifact;
+            Ok(Box::new(NativeWorker::new(
+                cfg.dim,
+                cfg.batch_size,
+                cfg.negatives,
+                cfg.neg_weight,
+            )))
+        }
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => {
+            let meta = artifact
+                .ok_or_else(|| anyhow::anyhow!("pjrt backend needs an AOT artifact"))?;
+            Ok(Box::new(HloWorker::new(meta)?))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => {
+            // Unreachable through Trainer (TrainConfig::validate rejects
+            // this combination first) but kept as a descriptive error for
+            // direct callers.
+            anyhow::bail!(
+                "backend 'pjrt' is not compiled into this binary; rebuild with \
+                 `cargo build --features pjrt`"
+            )
         }
     }
 }
 
-/// PJRT-backed worker (Layer 1+2 compute via the AOT artifact).
-pub struct HloWorker {
-    pub device: Device,
-}
+impl Backend for NativeWorker {
+    fn chunk_samples(&self) -> usize {
+        self.batch_size
+    }
 
-impl HloWorker {
-    pub fn new(meta: &ArtifactMeta) -> Result<Self> {
-        Ok(HloWorker { device: Device::load(meta)? })
+    fn k(&self) -> usize {
+        self.negatives
     }
 
     fn train_chunks(
         &mut self,
-        vertex: &mut Vec<f32>,
-        context: &mut Vec<f32>,
+        vertex: &mut [f32],
+        context: &mut [f32],
+        chunks: &[ChunkPlan],
+        counters: &Counters,
+    ) -> Result<f32> {
+        Ok(self.train_chunks_native(vertex, context, chunks, counters))
+    }
+}
+
+/// PJRT-backed worker (Layer 1+2 compute via the AOT artifact).
+#[cfg(feature = "pjrt")]
+pub struct HloWorker {
+    pub device: Device,
+}
+
+#[cfg(feature = "pjrt")]
+impl HloWorker {
+    pub fn new(meta: &ArtifactMeta) -> Result<Self> {
+        Ok(HloWorker { device: Device::load(meta)? })
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Backend for HloWorker {
+    fn chunk_samples(&self) -> usize {
+        self.device.meta().s * self.device.meta().b
+    }
+
+    fn k(&self) -> usize {
+        self.device.meta().k
+    }
+
+    fn batched_upload(&self) -> bool {
+        true
+    }
+
+    fn train_chunks(
+        &mut self,
+        vertex: &mut [f32],
+        context: &mut [f32],
         chunks: &[ChunkPlan],
         counters: &Counters,
     ) -> Result<f32> {
@@ -143,5 +230,58 @@ mod tests {
         let c = ChunkPlan::default();
         assert_eq!(c.real, 0);
         assert!(c.pos_u.is_empty());
+    }
+
+    #[test]
+    fn native_backend_via_factory() {
+        let cfg = TrainConfig {
+            dim: 8,
+            batch_size: 32,
+            negatives: 2,
+            backend: BackendKind::Native,
+            ..TrainConfig::default()
+        };
+        let b = create_backend(&cfg, None).unwrap();
+        assert_eq!(b.chunk_samples(), 32);
+        assert_eq!(b.k(), 2);
+        assert!(!b.batched_upload());
+        // native backends get buffers sized exactly to the partition
+        assert_eq!(planned_capacity(&cfg, None, 100), 100);
+        assert_eq!(planned_capacity(&cfg, None, 7), 7);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_factory_errors_without_feature() {
+        let cfg = TrainConfig { backend: BackendKind::Pjrt, ..TrainConfig::default() };
+        let err = create_backend(&cfg, None).unwrap_err().to_string();
+        assert!(err.contains("--features pjrt"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn trait_object_trains_a_chunk() {
+        let cfg = TrainConfig {
+            dim: 4,
+            batch_size: 2,
+            negatives: 1,
+            backend: BackendKind::Native,
+            ..TrainConfig::default()
+        };
+        let mut b = create_backend(&cfg, None).unwrap();
+        let mut vertex = vec![0.01f32; 4 * 4];
+        let mut context = vec![0.02f32; 4 * 4];
+        let chunk = ChunkPlan {
+            pos_u: vec![0, 1],
+            pos_v: vec![1, 2],
+            neg_v: vec![2, 3],
+            lr: 0.1,
+            real: 2,
+        };
+        let counters = Counters::default();
+        let loss = b
+            .train_chunks(&mut vertex, &mut context, std::slice::from_ref(&chunk), &counters)
+            .unwrap();
+        assert!(loss.is_finite());
+        assert_eq!(counters.snapshot().device_steps, 1);
     }
 }

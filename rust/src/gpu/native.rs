@@ -28,6 +28,7 @@ fn sigmoid(s: f32) -> f32 {
 /// matrices, then applied with scatter-add — duplicate rows accumulate,
 /// matching `jnp .at[].add` semantics. Returns the mean per-sample loss
 /// (mean over the `bsz * (1+k)` pair rows, like the kernel's tile mean).
+#[allow(clippy::too_many_arguments)]
 pub fn native_minibatch_step(
     vertex: &mut [f32],
     context: &mut [f32],
@@ -120,7 +121,7 @@ fn apply_sparse(mat: &mut [f32], grad: &mut [f32], rows: &[i32], dim: usize, lr:
     }
 }
 
-/// Pure-rust device worker.
+/// Pure-rust device worker — the default [`crate::gpu::Backend`].
 pub struct NativeWorker {
     pub dim: usize,
     pub batch_size: usize,
@@ -142,7 +143,10 @@ impl NativeWorker {
         }
     }
 
-    pub fn train_chunks(
+    /// Train `chunks` in place; returns the mean loss over chunks. (The
+    /// trait-object path goes through [`crate::gpu::Backend`]; this
+    /// slice-based entry point is kept for direct/bench callers.)
+    pub fn train_chunks_native(
         &mut self,
         vertex: &mut [f32],
         context: &mut [f32],

@@ -14,9 +14,14 @@
 //! * **Layer 1** — the SGNS gradient hot-spot as a Pallas kernel
 //!   (`python/compile/kernels/sgns.py`), inlined into the Layer-2 HLO.
 //!
-//! At run time the [`runtime`] module loads the HLO artifacts through the
-//! PJRT C API (`xla` crate) and each simulated GPU worker executes them;
-//! Python never runs on the training path.
+//! Device execution sits behind the [`gpu::Backend`] trait: the pure-rust
+//! [`gpu::NativeWorker`] is the always-available default, and with the
+//! `pjrt` cargo feature the [`runtime`] module loads the HLO artifacts
+//! through the PJRT C API (`xla` crate) so each simulated GPU worker
+//! executes the compiled artifacts; Python never runs on the training
+//! path. Build without features for a dependency-light binary
+//! (`cargo build --release`), or with `--features pjrt` for the
+//! three-layer path (see README "Building").
 //!
 //! ## Quickstart
 //!

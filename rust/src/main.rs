@@ -89,7 +89,8 @@ TRAIN OPTIONS (defaults follow paper section 4.3):
                         needs --no-fix-context when > workers)
   --samplers N          CPU sampler threads             [4]
   --episode-size N      samples per episode x workers   [200000]
-  --backend hlo|native  device backend                  [native]
+  --backend pjrt|native device backend ('pjrt' needs a build with
+                        --features pjrt; 'hlo' is a legacy alias) [native]
   --shuffle S           none|random|index-mapping|pseudo [pseudo]
   --walk-length L       random walk length (edges)      [5]
   --aug-distance S      augmentation distance           [2]

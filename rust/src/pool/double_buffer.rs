@@ -33,10 +33,9 @@ pub struct PoolPair {
 
 impl PoolPair {
     pub fn new() -> Self {
-        let mut s = State::default();
         // seed the producer with one free buffer; the second buffer is the
         // one the producer allocates for its first fill.
-        s.free = Some(SamplePool::new());
+        let s = State { free: Some(SamplePool::new()), ..State::default() };
         PoolPair { state: Mutex::new(s), cond: Condvar::new() }
     }
 

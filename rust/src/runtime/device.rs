@@ -1,0 +1,191 @@
+//! PJRT device layer (`pjrt` cargo feature): loads the AOT HLO-text
+//! artifacts produced by `python/compile/aot.py` and executes them on a
+//! per-worker CPU PJRT client. The only module that touches the `xla`
+//! crate — see the design notes on [`crate::runtime`].
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::ArtifactMeta;
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+    Literal::vec1(data).reshape(dims).map_err(to_anyhow)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+    Literal::vec1(data).reshape(dims).map_err(to_anyhow)
+}
+
+/// A per-worker PJRT device: one CPU client + one compiled train step.
+///
+/// The "device memory" of this simulated GPU is the pair of partition
+/// literals the caller keeps between [`Device::train_step`] calls.
+pub struct Device {
+    exe: PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+}
+
+impl Device {
+    /// Compile the artifact on a fresh CPU client.
+    pub fn load(meta: &ArtifactMeta) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(to_anyhow).context("create PJRT CPU client")?;
+        Self::load_with_client(meta, client)
+    }
+
+    /// Compile on an existing client (lets one worker own several
+    /// executables — e.g. train variants of different capacities).
+    pub fn load_with_client(meta: &ArtifactMeta, client: PjRtClient) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+        )
+        .map_err(to_anyhow)
+        .with_context(|| format!("parse HLO text {}", meta.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(to_anyhow)
+            .with_context(|| format!("compile {}", meta.file.display()))?;
+        Ok(Device { exe, meta: meta.clone() })
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Wrap padded host partition matrices as the device-state literals.
+    pub fn upload_partitions(&self, vertex: &[f32], context: &[f32]) -> Result<(Literal, Literal)> {
+        let (p, d) = (self.meta.p as i64, self.meta.d as i64);
+        Ok((literal_f32(vertex, &[p, d])?, literal_f32(context, &[p, d])?))
+    }
+
+    /// Download the state literals back into padded host matrices.
+    pub fn download_partitions(&self, vertex: &Literal, context: &Literal) -> Result<(Vec<f32>, Vec<f32>)> {
+        Ok((
+            vertex.to_vec::<f32>().map_err(to_anyhow)?,
+            context.to_vec::<f32>().map_err(to_anyhow)?,
+        ))
+    }
+
+    /// One AOT train step over S x B positive samples.
+    ///
+    /// `vertex`/`context` are the current state literals (consumed);
+    /// returns the updated state plus the mean SGNS loss. Index slices are
+    /// partition-local rows sized exactly `s*b` / `s*b*k`.
+    pub fn train_step(
+        &self,
+        vertex: Literal,
+        context: Literal,
+        pos_u: &[i32],
+        pos_v: &[i32],
+        neg_v: &[i32],
+        lr: f32,
+    ) -> Result<(Literal, Literal, f32)> {
+        let m = &self.meta;
+        debug_assert_eq!(pos_u.len(), m.s * m.b);
+        debug_assert_eq!(pos_v.len(), m.s * m.b);
+        debug_assert_eq!(neg_v.len(), m.s * m.b * m.k);
+        let (s, b, k) = (m.s as i64, m.b as i64, m.k as i64);
+        let pu = literal_i32(pos_u, &[s, b])?;
+        let pv = literal_i32(pos_v, &[s, b])?;
+        let nv = literal_i32(neg_v, &[s, b, k])?;
+        let lr_lit = Literal::scalar(lr);
+        let outs = self
+            .exe
+            .execute::<Literal>(&[vertex, context, pu, pv, nv, lr_lit])
+            .map_err(to_anyhow)
+            .context("execute train step")?;
+        let result = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow::anyhow!("no output buffer"))?
+            .to_literal_sync()
+            .map_err(to_anyhow)?;
+        let (new_vertex, new_context, loss_lit) = result.to_tuple3().map_err(to_anyhow)?;
+        let loss = loss_lit.get_first_element::<f32>().map_err(to_anyhow)?;
+        Ok((new_vertex, new_context, loss))
+    }
+
+    /// Bytes transferred host<->device by one train step (both directions),
+    /// for the metrics counters: partitions up+down, samples up.
+    pub fn step_transfer_bytes(&self) -> u64 {
+        let m = &self.meta;
+        let mat = (m.p * m.d * 4) as u64;
+        let samples = (m.s * m.b * (2 + m.k) * 4) as u64;
+        2 * mat /* up */ + 2 * mat /* down */ + samples
+    }
+}
+
+/// A compiled standalone Layer-1 kernel (micro-bench / parity tests).
+pub struct KernelDevice {
+    exe: PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+}
+
+impl KernelDevice {
+    pub fn load(meta: &ArtifactMeta) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(to_anyhow)?;
+        let proto = xla::HloModuleProto::from_text_file(meta.file.to_str().unwrap())
+            .map_err(to_anyhow)?;
+        let exe = client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .map_err(to_anyhow)?;
+        Ok(KernelDevice { exe, meta: meta.clone() })
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Run sgns_grad(u, v, label, weight) -> (grad_u, grad_v, loss).
+    pub fn run(
+        &self,
+        u: &[f32],
+        v: &[f32],
+        label: &[f32],
+        weight: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (n, d) = (self.meta.n as i64, self.meta.d as i64);
+        let args = [
+            literal_f32(u, &[n, d])?,
+            literal_f32(v, &[n, d])?,
+            literal_f32(label, &[n])?,
+            literal_f32(weight, &[n])?,
+        ];
+        let outs = self.exe.execute::<Literal>(&args).map_err(to_anyhow)?;
+        let result = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow::anyhow!("no output"))?
+            .to_literal_sync()
+            .map_err(to_anyhow)?;
+        let (gu, gv, loss) = result.to_tuple3().map_err(to_anyhow)?;
+        Ok((
+            gu.to_vec::<f32>().map_err(to_anyhow)?,
+            gv.to_vec::<f32>().map_err(to_anyhow)?,
+            loss.to_vec::<f32>().map_err(to_anyhow)?,
+        ))
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_builders_shape_check() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let i = literal_i32(&[1, 2, 3], &[3]).unwrap();
+        assert_eq!(i.element_count(), 3);
+    }
+}

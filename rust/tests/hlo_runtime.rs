@@ -1,6 +1,10 @@
 //! Runtime-layer integration tests: AOT HLO artifacts loaded through PJRT
 //! must agree numerically with the Python JAX reference and with the
 //! native rust backend.
+//!
+//! Compiled only with `--features pjrt`; needs real PJRT bindings (not
+//! the offline `xla` stub) plus the AOT artifacts at run time.
+#![cfg(feature = "pjrt")]
 
 use graphvite::gpu::native_minibatch_step;
 use graphvite::runtime::{default_manifest, Device, KernelDevice};

@@ -1,6 +1,12 @@
 //! Full-pipeline integration tests: the complete three-layer system
 //! (rust coordinator → PJRT-loaded AOT HLO from JAX+Pallas) on small real
 //! workloads. These are the tests that prove the layers compose.
+//!
+//! Compiled only with `--features pjrt` (and they additionally need real
+//! PJRT bindings plus the AOT artifacts at run time); the default feature
+//! set covers the same coordinator paths through the native backend in
+//! `integration.rs`.
+#![cfg(feature = "pjrt")]
 
 use graphvite::config::{BackendKind, TrainConfig};
 use graphvite::coordinator::Trainer;
@@ -15,7 +21,7 @@ fn hlo_cfg() -> TrainConfig {
         num_samplers: 2,
         episode_size: 1_000,
         batch_size: 256, // hlo chunk = s*b from the artifact, this is unused
-        backend: BackendKind::Hlo,
+        backend: BackendKind::Pjrt,
         shuffle: ShuffleKind::Pseudo,
         ..TrainConfig::default()
     }
@@ -57,7 +63,7 @@ fn hlo_and_native_agree_on_loss_trajectory() {
         let mut t = Trainer::new(g.clone(), cfg).unwrap();
         t.train().unwrap().stats.final_loss
     };
-    let hlo = run(BackendKind::Hlo);
+    let hlo = run(BackendKind::Pjrt);
     let native = run(BackendKind::Native);
     assert!(hlo.is_finite() && native.is_finite());
     assert!(

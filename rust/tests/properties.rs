@@ -208,6 +208,105 @@ fn prop_alias_table_matches_weights() {
     });
 }
 
+#[test]
+fn prop_alias_empirical_frequencies_chi_square() {
+    // Vose alias tables must reproduce their weight vector: a chi-square
+    // goodness-of-fit statistic over the empirical draw counts stays
+    // within a generous bound of its expectation (df = k-1, E[X2] = k-1,
+    // sd = sqrt(2(k-1))). Zero-weight outcomes must never be drawn.
+    forall("alias-chi-square", 25, |g| {
+        let k = g.usize_in(2..40);
+        let mut weights: Vec<f32> = (0..k).map(|_| g.f32_in(0.1..10.0)).collect();
+        // sprinkle in some exact zeros (kept off index 0 so the total stays positive)
+        for i in 1..k {
+            if g.bool(0.2) {
+                weights[i] = 0.0;
+            }
+        }
+        let total: f64 = weights.iter().map(|&w| w as f64).sum();
+        let t = AliasTable::new(&weights);
+        let draws = 60_000usize;
+        let mut rng = Rng::new(g.usize_in(0..100_000) as u64);
+        let mut counts = vec![0u64; k];
+        for _ in 0..draws {
+            counts[t.sample(&mut rng) as usize] += 1;
+        }
+        let mut chi2 = 0.0f64;
+        let mut df = 0usize;
+        for i in 0..k {
+            let expect = draws as f64 * weights[i] as f64 / total;
+            if weights[i] == 0.0 {
+                assert_eq!(counts[i], 0, "zero-weight outcome {i} was drawn");
+                continue;
+            }
+            chi2 += (counts[i] as f64 - expect) * (counts[i] as f64 - expect) / expect;
+            df += 1;
+        }
+        let df = df.saturating_sub(1).max(1) as f64;
+        // mean + 6 sigma + slack: astronomically unlikely to trip on a
+        // correct sampler, catches any systematic bias immediately
+        let bound = df + 6.0 * (2.0 * df).sqrt() + 12.0;
+        assert!(chi2 < bound, "chi2 {chi2:.1} over bound {bound:.1} (df {df})");
+    });
+}
+
+#[test]
+fn prop_pseudo_shuffle_is_exact_permutation() {
+    // The pseudo shuffle must lose/duplicate nothing for any pool length
+    // (including lengths not divisible by the stride) and any stride —
+    // checked as an exact multiset equality over unique payloads.
+    forall("pseudo-permutation", 50, |g| {
+        let n = g.usize_in(0..4000);
+        let s = g.usize_in(2..9);
+        let orig: Vec<(u32, u32)> = (0..n as u32).map(|i| (i, i.wrapping_mul(2654435761))).collect();
+        let mut pool = orig.clone();
+        shuffle::pseudo_shuffle(&mut pool, s);
+        assert_eq!(pool.len(), orig.len());
+        let mut a = orig;
+        let mut b = pool;
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "pseudo shuffle (n={n}, s={s}) is not a permutation");
+    });
+}
+
+#[test]
+fn prop_block_grid_conserves_every_sample_exactly_once() {
+    // Redistribute must conserve the pool as a multiset: translating each
+    // block's local rows back through nodes_of_part reproduces exactly
+    // the original (u, v) pool — nothing dropped, duplicated, or
+    // misrouted into the wrong block.
+    forall("grid-conservation", 40, |g| {
+        let n = g.usize_in(10..600);
+        let graph = generators::barabasi_albert(n, 2, g.usize_in(0..1000) as u64);
+        let parts_n = g.usize_in(1..6).min(n);
+        let parts = Partitioner::degree_zigzag(&graph, parts_n);
+        // duplicates on purpose: the grid must keep every copy
+        let pool: Vec<(u32, u32)> = (0..g.usize_in(1..3000))
+            .map(|_| (g.u32_in(0..n as u32), g.u32_in(0..n as u32)))
+            .collect();
+        let grid = BlockGrid::redistribute(&pool, &parts);
+        let mut recovered: Vec<(u32, u32)> = Vec::with_capacity(pool.len());
+        for i in 0..parts_n {
+            for j in 0..parts_n {
+                for &(lu, lv) in grid.block(i, j) {
+                    let u = parts.nodes_of_part(i)[lu as usize];
+                    let v = parts.nodes_of_part(j)[lv as usize];
+                    // routed into the right block
+                    assert_eq!(parts.part_of(u), i);
+                    assert_eq!(parts.part_of(v), j);
+                    recovered.push((u, v));
+                }
+            }
+        }
+        let mut a = pool;
+        let mut b = recovered;
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "redistribute did not conserve the sample multiset");
+    });
+}
+
 // ---------------------------------------------------------------- state --
 
 #[test]

@@ -1,0 +1,83 @@
+//! Deterministic end-to-end regression guard for the coordinator /
+//! scheduler: the same seed trained with `num_workers = 1` and
+//! `num_workers = 2` on the native backend must both produce embeddings
+//! whose link-prediction (graph-reconstruction) AUC clears a fixed floor,
+//! and the two runs must agree on quality. Silent corruption anywhere in
+//! the pipeline — block routing, orthogonal scheduling, partition
+//! gather/scatter, the fix-context residency cache — collapses the AUC to
+//! ~0.5 and trips this test long before it would show up in timing.
+//!
+//! Reconstruction (observed edges vs non-edges, see
+//! `eval::graph_reconstruction_auc`) rather than a held-out split: pure
+//! Barabási–Albert graphs have near-zero clustering, so held-out cosine
+//! AUC sits at chance regardless of trainer health (see the workload
+//! notes in `rust/examples/link_prediction.rs` and `experiments/fig4.rs`).
+
+use graphvite::config::{BackendKind, TrainConfig};
+use graphvite::coordinator::Trainer;
+use graphvite::embedding::EmbeddingStore;
+use graphvite::eval::graph_reconstruction_auc;
+use graphvite::graph::{generators, Graph};
+use graphvite::pool::ShuffleKind;
+
+fn train_auc(graph: &Graph, num_workers: usize, seed: u64) -> f64 {
+    let cfg = TrainConfig {
+        dim: 16,
+        epochs: 150,
+        num_workers,
+        num_samplers: num_workers,
+        episode_size: 4_000,
+        batch_size: 128,
+        backend: BackendKind::Native,
+        shuffle: ShuffleKind::Pseudo,
+        seed,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(graph.clone(), cfg).unwrap();
+    let r = trainer.train().unwrap();
+    assert!(
+        r.embeddings.vertex_matrix().iter().all(|x| x.is_finite()),
+        "{num_workers}-worker run produced non-finite embeddings"
+    );
+    assert!(
+        r.stats.counters.samples_trained >= 150 * graph.num_edges() as u64,
+        "{num_workers}-worker run under-trained: {} samples",
+        r.stats.counters.samples_trained
+    );
+    graph_reconstruction_auc(&r.embeddings, graph, 0xA0C ^ seed)
+}
+
+// Deliberately loose: a healthy run reconstructs trained edges at AUC
+// well above 0.8 while any corruption collapses to ~0.5, so the floor
+// only needs to split those regimes. (These thresholds are empirical —
+// see ROADMAP "Flaky-threshold audit".)
+const AUC_FLOOR: f64 = 0.65;
+
+#[test]
+fn worker_counts_clear_auc_floor_and_agree() {
+    let graph = generators::barabasi_albert(600, 3, 42);
+    let auc_1 = train_auc(&graph, 1, 7);
+    let auc_2 = train_auc(&graph, 2, 7);
+    assert!(auc_1 > AUC_FLOOR, "1-worker AUC {auc_1} below floor {AUC_FLOOR}");
+    assert!(auc_2 > AUC_FLOOR, "2-worker AUC {auc_2} below floor {AUC_FLOOR}");
+    // Parallel negative sampling over orthogonal blocks must not cost
+    // quality (paper Table 6): the two runs see the same sample budget
+    // and seed, so their AUCs should land in the same band.
+    assert!(
+        (auc_1 - auc_2).abs() < 0.15,
+        "worker counts disagree: 1w {auc_1} vs 2w {auc_2}"
+    );
+}
+
+#[test]
+fn untrained_embeddings_sit_at_chance() {
+    // Sanity-check the metric itself: random init must NOT clear the
+    // floor, otherwise the regression test can't detect corruption.
+    let graph = generators::barabasi_albert(600, 3, 42);
+    let store = EmbeddingStore::init(graph.num_nodes(), 16, 1);
+    let auc = graph_reconstruction_auc(&store, &graph, 3);
+    assert!(
+        (auc - 0.5).abs() < 0.1,
+        "untrained AUC {auc} should be near chance"
+    );
+}

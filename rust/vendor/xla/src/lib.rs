@@ -1,0 +1,236 @@
+//! Compile-only stub of the `xla` crate (PJRT C-API bindings).
+//!
+//! The `pjrt` cargo feature of `graphvite` routes device execution through
+//! the real `xla` crate, which needs the PJRT shared library and cannot be
+//! fetched or built on offline hosts. This stub mirrors the exact API
+//! surface `graphvite::runtime` uses so that `cargo check --features pjrt`
+//! (and full builds of the PJRT code path) succeed everywhere:
+//!
+//! * host-side [`Literal`] construction/inspection works for real — it is
+//!   plain host memory, no PJRT involved;
+//! * every operation that would touch a PJRT device
+//!   ([`PjRtClient::cpu`], [`HloModuleProto::from_text_file`]) returns a
+//!   descriptive [`Error`] at run time.
+//!
+//! On a host with the real bindings, replace the `xla` path dependency in
+//! `rust/Cargo.toml` (or add a `[patch]` entry) — `graphvite` itself does
+//! not change.
+
+use std::borrow::BorrowMut;
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's `xla::Error` usage (`Display`).
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Self {
+        Error(format!(
+            "{what}: PJRT runtime unavailable — this binary was built against the \
+             offline `xla` stub; rebuild against the real xla/PJRT bindings to run \
+             the pjrt backend"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla::Error({})", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + Sized {
+    fn wrap(data: Vec<Self>) -> Storage;
+    fn unwrap(storage: &Storage) -> Option<&[Self]>;
+}
+
+/// Backing storage of a literal (exposed only through [`Literal`]).
+#[derive(Debug, Clone)]
+pub enum Storage {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+macro_rules! native_type {
+    ($ty:ty, $variant:ident) => {
+        impl NativeType for $ty {
+            fn wrap(data: Vec<Self>) -> Storage {
+                Storage::$variant(data)
+            }
+            fn unwrap(storage: &Storage) -> Option<&[Self]> {
+                match storage {
+                    Storage::$variant(v) => Some(v),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native_type!(f32, F32);
+native_type!(f64, F64);
+native_type!(i32, I32);
+native_type!(u32, U32);
+
+/// A host-side tensor value (shape + flat data), as in the real crate.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], storage: T::wrap(data.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(value: T) -> Literal {
+        Literal { dims: Vec::new(), storage: T::wrap(vec![value]) }
+    }
+
+    /// Reinterpret with new dimensions; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Total element count.
+    pub fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::F64(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::U32(v) => v.len(),
+            Storage::Tuple(v) => v.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    /// Copy the flat data out as `Vec<T>`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage)
+            .map(|v| v.to_vec())
+            .ok_or_else(|| Error("to_vec: element type mismatch".to_string()))
+    }
+
+    /// First element of the flat data.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::unwrap(&self.storage)
+            .and_then(|v| v.first().copied())
+            .ok_or_else(|| Error("get_first_element: type mismatch or empty".to_string()))
+    }
+
+    /// Destructure a 3-tuple literal.
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        match self.storage {
+            Storage::Tuple(mut elems) if elems.len() == 3 => {
+                let c = elems.pop().unwrap();
+                let b = elems.pop().unwrap();
+                let a = elems.pop().unwrap();
+                Ok((a, b, c))
+            }
+            _ => Err(Error("to_tuple3: literal is not a 3-tuple".to_string())),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: construction always fails at run time).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::stub(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A PJRT client (stub: `cpu()` always fails at run time).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable (unreachable through the stub client).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Mirrors the real signature: one buffer list per device.
+    pub fn execute<L: BorrowMut<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer handle (unreachable through the stub client).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert_eq!(Literal::scalar(0.5f32).get_first_element::<f32>().unwrap(), 0.5);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        assert!(Literal::vec1(&[1i32, 2, 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn device_entry_points_fail_cleanly() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo").is_err());
+    }
+}
