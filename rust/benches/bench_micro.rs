@@ -8,7 +8,9 @@
 use graphvite::config::{BackendKind, TrainConfig};
 use graphvite::coordinator::Trainer;
 use graphvite::embedding::{EmbeddingStore, Matrix};
-use graphvite::gpu::native_minibatch_step;
+use graphvite::gpu::{
+    native_minibatch_step, simd_minibatch_step, Kernels, ScalarKernels, UnrolledKernels,
+};
 use graphvite::graph::generators;
 use graphvite::partition::Partitioner;
 use graphvite::pool::{shuffle, ShuffleKind};
@@ -39,8 +41,11 @@ fn main() {
     println!("== partition gather/scatter (episode transfers) ==");
     bench_gather_scatter(&mut b);
 
+    println!("== dim kernels (scalar vs hand-unrolled f32x8) ==");
+    bench_kernels(&mut b);
+
     println!("== device backends (per-chunk train step) ==");
-    bench_native_step(&mut b);
+    bench_minibatch_steps(&mut b);
     bench_hlo_step(&mut b);
 
     println!("== end-to-end trainer (native) ==");
@@ -143,23 +148,75 @@ fn bench_gather_scatter(b: &mut Bencher) {
     });
 }
 
-fn bench_native_step(b: &mut Bencher) {
+/// The `dim`-wide inner loops in isolation — the scalar-vs-unrolled
+/// speedup here is the headline number for the `simd` backend (the full
+/// step adds gather/scatter memory traffic on top).
+fn bench_kernels(b: &mut Bencher) {
+    let d = 128;
+    let mut rng = Rng::new(10);
+    let x: Vec<f32> = (0..d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let y: Vec<f32> = (0..d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let n = if fast() { 100_000 } else { 1_000_000 };
+    b.bench_items(&format!("kernel.dot d{d} scalar ({n} calls)"), n as f64, || {
+        let mut acc = 0.0f32;
+        for _ in 0..n {
+            acc += ScalarKernels::dot(black_box(&x), black_box(&y));
+        }
+        acc
+    });
+    b.bench_items(&format!("kernel.dot d{d} f32x8  ({n} calls)"), n as f64, || {
+        let mut acc = 0.0f32;
+        for _ in 0..n {
+            acc += UnrolledKernels::dot(black_box(&x), black_box(&y));
+        }
+        acc
+    });
+    let mut out = vec![0.0f32; d];
+    b.bench_items(&format!("kernel.axpy d{d} scalar ({n} calls)"), n as f64, || {
+        for _ in 0..n {
+            ScalarKernels::axpy(black_box(&mut out[..]), 1e-6, black_box(&x));
+        }
+        out[0]
+    });
+    let mut out2 = vec![0.0f32; d];
+    b.bench_items(&format!("kernel.axpy d{d} f32x8  ({n} calls)"), n as f64, || {
+        for _ in 0..n {
+            UnrolledKernels::axpy(black_box(&mut out2[..]), 1e-6, black_box(&x));
+        }
+        out2[0]
+    });
+}
+
+/// Full mini-batch step, scalar vs unrolled, at an 8-aligned dim and at a
+/// remainder-lane dim (d100 = 12 full lanes + 4-wide tail per row).
+fn bench_minibatch_steps(b: &mut Bencher) {
     let p = 4096;
-    let d = 64;
     let bsz = 256;
     let k = 1;
-    let mut vertex: Vec<f32> = (0..p * d).map(|i| ((i % 97) as f32 - 48.0) / 100.0).collect();
-    let mut context = vertex.clone();
-    let mut rng = Rng::new(11);
-    let pos_u: Vec<i32> = (0..bsz).map(|_| rng.below(p as u64) as i32).collect();
-    let pos_v: Vec<i32> = (0..bsz).map(|_| rng.below(p as u64) as i32).collect();
-    let neg_v: Vec<i32> = (0..bsz * k).map(|_| rng.below(p as u64) as i32).collect();
-    let (mut gu, mut gc) = (Vec::new(), Vec::new());
-    b.bench_items("native_minibatch_step b256 d64 k1 (samples/s)", bsz as f64, || {
-        native_minibatch_step(
-            &mut vertex, &mut context, d, &pos_u, &pos_v, &neg_v, k, 0.001, 5.0, &mut gu, &mut gc,
-        )
-    });
+    for d in [64usize, 100] {
+        let base: Vec<f32> = (0..p * d).map(|i| ((i % 97) as f32 - 48.0) / 100.0).collect();
+        let mut rng = Rng::new(11);
+        let pos_u: Vec<i32> = (0..bsz).map(|_| rng.below(p as u64) as i32).collect();
+        let pos_v: Vec<i32> = (0..bsz).map(|_| rng.below(p as u64) as i32).collect();
+        let neg_v: Vec<i32> = (0..bsz * k).map(|_| rng.below(p as u64) as i32).collect();
+
+        let (mut vertex, mut context) = (base.clone(), base.clone());
+        let (mut gu, mut gc) = (Vec::new(), Vec::new());
+        b.bench_items(&format!("native_minibatch_step b256 d{d} k1 (samples/s)"), bsz as f64, || {
+            native_minibatch_step(
+                &mut vertex, &mut context, d, &pos_u, &pos_v, &neg_v, k, 0.001, 5.0, &mut gu,
+                &mut gc,
+            )
+        });
+
+        let (mut sv, mut sc) = (base.clone(), base);
+        let (mut sgu, mut sgc) = (Vec::new(), Vec::new());
+        b.bench_items(&format!("simd_minibatch_step   b256 d{d} k1 (samples/s)"), bsz as f64, || {
+            simd_minibatch_step(
+                &mut sv, &mut sc, d, &pos_u, &pos_v, &neg_v, k, 0.001, 5.0, &mut sgu, &mut sgc,
+            )
+        });
+    }
 }
 
 #[cfg(not(feature = "pjrt"))]

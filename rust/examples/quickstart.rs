@@ -1,8 +1,8 @@
 //! Quickstart: train embeddings on the Zachary karate club (a tiny real
 //! graph embedded in-source) through the best backend compiled into this
 //! binary (the full three-layer PJRT path under `--features pjrt`, the
-//! pure-rust native trainer otherwise), then sanity-check that the two
-//! known factions separate in embedding space.
+//! pure-rust f32x8 `simd` trainer otherwise), then sanity-check that the
+//! two known factions separate in embedding space.
 //!
 //!     cargo run --release --example quickstart
 //!     cargo run --release --features pjrt --example quickstart
@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
         num_workers: 2,
         num_samplers: 2,
         episode_size: 2_000,
-        backend: BackendKind::best_available(), // pjrt when compiled in
+        backend: BackendKind::best_available(), // pjrt when compiled in, else simd
         ..TrainConfig::default()
     };
     let mut trainer = Trainer::new(graph.clone(), config)?;

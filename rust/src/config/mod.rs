@@ -12,51 +12,110 @@ use crate::pool::ShuffleKind;
 /// Which device backend the simulated GPUs run. Every variant corresponds
 /// to an implementation of [`crate::gpu::Backend`]; the PJRT one is only
 /// compiled in with the `pjrt` cargo feature (see [`TrainConfig::validate`]).
+///
+/// Per-variant names, aliases and descriptions live in [`Self::name`],
+/// [`Self::aliases`] and [`Self::summary`] next to this enum — the CLI
+/// `--backend` help, the TOML error messages and the round-trip tests are
+/// all generated from them (via [`Self::ALL`]), so a new variant cannot
+/// drift out of the user-facing docs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
     /// AOT-compiled HLO (JAX Layer-2 + Pallas Layer-1) executed through
     /// PJRT — the three-layer production path. Requires building with
     /// `--features pjrt`.
     Pjrt,
-    /// Pure-rust SGNS trainer — bit-compatible math, always available.
-    /// Used by the baselines, CI, and large sweeps where PJRT compile
-    /// time dominates.
+    /// Pure-rust SGNS trainer with straight-line scalar kernels —
+    /// bit-compatible math, always available. Used by the baselines, CI,
+    /// and large sweeps where PJRT compile time dominates.
     Native,
+    /// Pure-rust SGNS trainer with hand-unrolled f32x8 kernels
+    /// ([`crate::gpu::SimdWorker`]) — always available, same scheduling
+    /// behavior as `Native`, dot products agree within reassociation ULPs
+    /// (enforced by `rust/tests/simd_kernels.rs`).
+    Simd,
 }
 
 impl BackendKind {
+    /// Every backend this crate knows about, in display order. This table
+    /// plus [`Self::name`] / [`Self::aliases`] / [`Self::summary`] is the
+    /// single source of truth for [`Self::parse`], the CLI help block
+    /// ([`Self::help_text`]) and the config round-trip tests.
+    pub const ALL: &'static [BackendKind] = &[Self::Native, Self::Simd, Self::Pjrt];
+
+    /// Parse a backend name or alias (see [`Self::aliases`]).
     pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            // "hlo" kept as a legacy alias for existing configs/scripts.
-            "pjrt" | "hlo" => Some(Self::Pjrt),
-            "native" => Some(Self::Native),
-            _ => None,
-        }
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|b| b.name() == s || b.aliases().contains(&s))
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             Self::Pjrt => "pjrt",
             Self::Native => "native",
+            Self::Simd => "simd",
         }
+    }
+
+    /// Legacy / alternate spellings accepted by [`Self::parse`].
+    pub fn aliases(&self) -> &'static [&'static str] {
+        match self {
+            // "hlo" kept as a legacy alias for existing configs/scripts.
+            Self::Pjrt => &["hlo"],
+            Self::Native | Self::Simd => &[],
+        }
+    }
+
+    /// One-line description used by the CLI help and the README table.
+    pub fn summary(&self) -> &'static str {
+        match self {
+            Self::Pjrt => "AOT HLO artifacts via the PJRT C API (build with --features pjrt)",
+            Self::Native => "pure-rust scalar SGNS kernels (always available; the default)",
+            Self::Simd => "pure-rust hand-unrolled f32x8 SGNS kernels (always available)",
+        }
+    }
+
+    /// `"native|simd|pjrt"` — for usage one-liners and error messages.
+    pub fn names_joined() -> String {
+        let names: Vec<&str> = Self::ALL.iter().map(|b| b.name()).collect();
+        names.join("|")
+    }
+
+    /// Indented per-backend help block (one line per variant, aliases
+    /// included), rendered into `graphvite help`.
+    pub fn help_text() -> String {
+        let mut out = String::new();
+        for b in Self::ALL {
+            let alias = if b.aliases().is_empty() {
+                String::new()
+            } else {
+                format!(" (alias: {})", b.aliases().join(", "))
+            };
+            out.push_str(&format!("  {:<8}{}{}\n", b.name(), b.summary(), alias));
+        }
+        out.pop(); // drop the trailing newline for clean embedding
+        out
     }
 
     /// True when this binary can actually construct the backend.
     pub fn available(&self) -> bool {
         match self {
-            Self::Native => true,
+            Self::Native | Self::Simd => true,
             Self::Pjrt => cfg!(feature = "pjrt"),
         }
     }
 
     /// The most capable backend compiled into this binary: [`Self::Pjrt`]
-    /// with the `pjrt` feature, [`Self::Native`] otherwise. Examples and
-    /// experiment drivers use this so the same source runs everywhere.
+    /// with the `pjrt` feature, the unrolled [`Self::Simd`] otherwise
+    /// (it beats [`Self::Native`] on kernel throughput and agrees with it
+    /// numerically). Examples and experiment drivers use this so the same
+    /// source runs everywhere.
     pub fn best_available() -> Self {
         if cfg!(feature = "pjrt") {
             Self::Pjrt
         } else {
-            Self::Native
+            Self::Simd
         }
     }
 }
@@ -95,7 +154,8 @@ pub struct TrainConfig {
     pub episode_size: usize,
     /// Pool shuffle algorithm (paper: pseudo).
     pub shuffle: ShuffleKind,
-    /// Device backend.
+    /// Device backend the simulated GPUs run ([`BackendKind::ALL`] lists
+    /// the choices; TOML key `backend`, CLI flag `--backend`).
     pub backend: BackendKind,
     /// Collaboration strategy (double-buffered pools, §3.3). Off = the
     /// sequential ablation row of Table 6.
@@ -148,7 +208,7 @@ impl TrainConfig {
             bail!(
                 "backend '{}' is not compiled into this binary: rebuild with \
                  `cargo build --features pjrt` (the default feature set ships \
-                 only the pure-rust 'native' backend)",
+                 the pure-rust 'native' and 'simd' backends)",
                 self.backend.name()
             );
         }
@@ -227,8 +287,12 @@ impl TrainConfig {
         }
         if let Some(v) = get("backend") {
             let s = v.as_str().ok_or_else(|| anyhow::anyhow!("backend must be a string"))?;
-            cfg.backend = BackendKind::parse(s)
-                .ok_or_else(|| anyhow::anyhow!("unknown backend '{s}'"))?;
+            cfg.backend = BackendKind::parse(s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown backend '{s}' (expected one of: {})",
+                    BackendKind::names_joined()
+                )
+            })?;
         }
         macro_rules! set_bool {
             ($field:ident, $key:expr) => {
@@ -295,9 +359,35 @@ mod tests {
         assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
         assert_eq!(BackendKind::parse("hlo"), Some(BackendKind::Pjrt)); // legacy
         assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("simd"), Some(BackendKind::Simd));
         assert_eq!(BackendKind::parse("cuda"), None);
         assert_eq!(BackendKind::Pjrt.name(), "pjrt");
         assert!(BackendKind::Native.available());
+        assert!(BackendKind::Simd.available());
+    }
+
+    #[test]
+    fn backend_surfaces_derive_from_the_table() {
+        // name -> parse round-trips for every variant and every alias
+        for &b in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(b.name()), Some(b));
+            for alias in b.aliases() {
+                assert_eq!(BackendKind::parse(alias), Some(b), "alias '{alias}'");
+            }
+            // every variant shows up in the generated help surfaces
+            assert!(BackendKind::names_joined().contains(b.name()));
+            assert!(BackendKind::help_text().contains(b.name()));
+            assert!(BackendKind::help_text().contains(b.summary()));
+        }
+        // aliases render in the help block too (the "hlo" line regression)
+        assert!(BackendKind::help_text().contains("alias: hlo"));
+        // and the unknown-backend error names the valid spellings
+        let err = TrainConfig::from_toml_str("backend = \"cuda\"\n")
+            .unwrap_err()
+            .to_string();
+        for &b in BackendKind::ALL {
+            assert!(err.contains(b.name()), "error '{err}' misses '{}'", b.name());
+        }
     }
 
     #[cfg(not(feature = "pjrt"))]
@@ -308,7 +398,8 @@ mod tests {
         assert!(err.contains("--features pjrt"), "unhelpful error: {err}");
         // the TOML path surfaces the same error
         assert!(TrainConfig::from_toml_str("backend = \"pjrt\"\n").is_err());
-        assert_eq!(BackendKind::best_available(), BackendKind::Native);
+        // without pjrt the unrolled pure-rust backend is the best available
+        assert_eq!(BackendKind::best_available(), BackendKind::Simd);
     }
 
     #[cfg(feature = "pjrt")]

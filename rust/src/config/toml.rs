@@ -4,6 +4,13 @@
 //! `key = value` with integers, floats, booleans and quoted strings,
 //! comments (`#`), and blank lines. Keys inside a section are exposed as
 //! `"section.key"`. Arrays/dates/multi-line strings are out of scope.
+//!
+//! This layer is untyped: interpretation of individual keys (e.g. mapping
+//! the `backend` string through [`crate::config::BackendKind::parse`],
+//! whose accepted names/aliases come from the table next to that enum)
+//! happens in [`crate::config::TrainConfig::from_toml_str`], and the
+//! round-trip of every backend variant through this parser is covered by
+//! `rust/tests/config.rs`.
 
 use std::collections::BTreeMap;
 

@@ -18,6 +18,23 @@
 //!                       draws restricted negatives, trains its block
 //! ```
 //!
+//! The coordinator is backend-agnostic: workers construct whatever
+//! [`crate::gpu::Backend`] the config selects (`native`, `simd`, or
+//! `pjrt`) on their own threads, and the only backend-specific fact the
+//! coordinator consumes is the partition padding rule
+//! ([`crate::gpu::planned_capacity`]). Swapping kernels — e.g. the
+//! f32x8-unrolled [`crate::gpu::SimdWorker`] — changes nothing here.
+//!
+//! Episode semantics (what the `episodes` counter and `log_every` lines
+//! count): one *episode* = one orthogonal group — for `P` partitions, the
+//! `P` blocks of a latin-square diagonal from
+//! [`crate::scheduler::EpisodeSchedule`], run as `P / n` waves of `n`
+//! concurrently-training workers with no shared rows, hence no
+//! synchronization — totalling `episode_size` positive samples; one
+//! *pool pass* = `P` episodes covering all P² blocks, after which the
+//! double-buffered pool pair swaps. The learning rate decays linearly
+//! over total samples, matching the paper's SGD schedule.
+//!
 //! Ablation flags in [`TrainConfig`](crate::config::TrainConfig) switch
 //! off each paper component: `online_augmentation` (plain edge sampling
 //! instead), `collaboration` (fill and train sequentially), `fix_context`
@@ -109,7 +126,9 @@ impl Trainer {
                         .clone(),
                 )
             }
-            BackendKind::Native => None,
+            // the pure-rust backends (scalar + unrolled-simd) train
+            // directly on the gathered partitions — no AOT artifact
+            BackendKind::Native | BackendKind::Simd => None,
         };
         let mut store = EmbeddingStore::init(graph.num_nodes(), cfg.dim, cfg.seed);
         prep.stop();

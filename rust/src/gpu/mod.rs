@@ -9,7 +9,16 @@
 //!   at pre-update values → scatter-add), so the backends agree
 //!   numerically (see `rust/tests/hlo_runtime.rs`). Used by the CPU
 //!   baselines, CI, and large parameter sweeps.
-//! * [`HloWorker`] (`pjrt` cargo feature) — the production three-layer
+//! * [`SimdWorker`] (always compiled) — the same skeleton with the
+//!   `dim`-wide inner loops hand-unrolled 8 lanes at a time
+//!   ([`UnrolledKernels`]), on stable Rust with no external crates.
+//!   Element-wise updates are bit-identical to the native worker; only
+//!   dot-product reduction order differs (reassociation ULPs), so the
+//!   regression quality gates carry over — see
+//!   `rust/tests/simd_kernels.rs` and the scalar-vs-simd comparison in
+//!   `bench_micro`.
+//! * `HloWorker` (`pjrt` cargo feature — the type is only compiled, and
+//!   so only linkable, in that configuration) — the production three-layer
 //!   path: executes the AOT-compiled JAX+Pallas train step via PJRT.
 //!   Partitions are uploaded once per block, chained across execute
 //!   calls, downloaded once — the paper's per-episode transfer pattern.
@@ -17,13 +26,21 @@
 //! The coordinator prepares [`ChunkPlan`]s (sample indices already
 //! translated to partition-local rows, negatives drawn from the resident
 //! context partition per paper section 3.2) and hands them to
-//! [`Backend::train_chunks`]. This trait is the seam future device
-//! backends (multi-device sharding, SIMD kernels, alternative runtimes)
-//! plug into without touching the coordinator.
+//! [`Backend::train_chunks`]. This trait is the seam device backends plug
+//! into without touching the coordinator — adding the SIMD backend
+//! changed no coordinator code, and multi-device sharding / alternative
+//! runtimes slot in the same way. The mini-batch math itself is also a
+//! seam one level down: [`minibatch_step`] is generic over [`Kernels`]
+//! (the three `dim`-wide inner loops), which is how the scalar and
+//! unrolled paths share one gradient/update skeleton.
 
 mod native;
+mod simd;
 
-pub use native::{native_minibatch_step, NativeWorker};
+pub use native::{
+    minibatch_step, native_minibatch_step, Kernels, NativeWorker, ScalarKernels, Worker,
+};
+pub use simd::{simd_minibatch_step, SimdWorker, UnrolledKernels, LANES};
 
 use anyhow::Result;
 
@@ -89,7 +106,7 @@ pub fn planned_capacity(
     part_rows: usize,
 ) -> usize {
     match cfg.backend {
-        BackendKind::Native => part_rows,
+        BackendKind::Native | BackendKind::Simd => part_rows,
         // artifact is always Some for a validated pjrt run; fall back to
         // the raw partition size so a missing artifact fails later with
         // the descriptive create_backend error instead of a bad index.
@@ -116,6 +133,12 @@ pub fn create_backend(
                 cfg.neg_weight,
             )))
         }
+        BackendKind::Simd => Ok(Box::new(SimdWorker::new(
+            cfg.dim,
+            cfg.batch_size,
+            cfg.negatives,
+            cfg.neg_weight,
+        ))),
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => {
             let meta = artifact
@@ -135,7 +158,9 @@ pub fn create_backend(
     }
 }
 
-impl Backend for NativeWorker {
+/// One impl covers every kernel instantiation of the pure-rust worker
+/// ([`NativeWorker`], [`SimdWorker`], and any future [`Kernels`] impl).
+impl<K: Kernels> Backend for Worker<K> {
     fn chunk_samples(&self) -> usize {
         self.batch_size
     }
@@ -151,7 +176,7 @@ impl Backend for NativeWorker {
         chunks: &[ChunkPlan],
         counters: &Counters,
     ) -> Result<f32> {
-        Ok(self.train_chunks_native(vertex, context, chunks, counters))
+        Ok(self.train_chunks_in_place(vertex, context, chunks, counters))
     }
 }
 
@@ -248,6 +273,24 @@ mod tests {
         // native backends get buffers sized exactly to the partition
         assert_eq!(planned_capacity(&cfg, None, 100), 100);
         assert_eq!(planned_capacity(&cfg, None, 7), 7);
+    }
+
+    #[test]
+    fn simd_backend_via_factory() {
+        let cfg = TrainConfig {
+            dim: 12, // not a multiple of 8: the worker must handle remainder lanes
+            batch_size: 64,
+            negatives: 3,
+            backend: BackendKind::Simd,
+            ..TrainConfig::default()
+        };
+        let b = create_backend(&cfg, None).unwrap();
+        assert_eq!(b.chunk_samples(), 64);
+        assert_eq!(b.k(), 3);
+        // same streaming contract and padding rule as the native worker:
+        // the coordinator cannot tell the two apart
+        assert!(!b.batched_upload());
+        assert_eq!(planned_capacity(&cfg, None, 100), 100);
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -6,6 +6,14 @@
 //!     s = <u, v>;  g = weight * (sigmoid(s) - label)
 //!     u -= lr * g * v;  v -= lr * g * u_old
 //! with loss = weight * (softplus(s) - label * s).
+//!
+//! The mini-batch skeleton (index translation, gradient accumulation,
+//! scatter-add, loss reduction) is written once, generic over a
+//! [`Kernels`] implementation that supplies the three `dim`-wide inner
+//! loops. [`ScalarKernels`] here is the straight-line reference; the
+//! hand-unrolled f32x8 variant lives in [`crate::gpu::UnrolledKernels`]
+//! and must agree with it within reassociation error (enforced by
+//! `rust/tests/simd_kernels.rs`).
 
 use crate::gpu::ChunkPlan;
 use crate::metrics::Counters;
@@ -21,7 +29,80 @@ fn sigmoid(s: f32) -> f32 {
     1.0 / (1.0 + (-s).exp())
 }
 
-/// One mini-batch step with gradient accumulation (the HLO scan body).
+/// The `dim`-wide inner loops of the SGNS mini-batch step. Everything a
+/// backend spends its FLOPs on goes through these three operations, so a
+/// [`minibatch_step`] instantiation is fully characterized by its
+/// `Kernels` impl:
+///
+/// * [`ScalarKernels`] — sequential reference implementation.
+/// * [`crate::gpu::UnrolledKernels`] — hand-unrolled 8-lane version.
+///
+/// `axpy` and `apply_zero` are element-wise and must be bit-identical
+/// across implementations; only `dot` may reassociate its reduction (and
+/// therefore differ by a few ULPs).
+pub trait Kernels {
+    /// Inner product `<a, b>`. Implementations may reassociate the sum.
+    fn dot(a: &[f32], b: &[f32]) -> f32;
+
+    /// `out[j] += g * x[j]` — gradient accumulation.
+    fn axpy(out: &mut [f32], g: f32, x: &[f32]);
+
+    /// `m[j] -= lr * g[j]; g[j] = 0.0` — fused SGD row update + gradient
+    /// clear (the clear keeps the dense accumulator invariant of
+    /// [`minibatch_step`]: every entry zero between calls).
+    fn apply_zero(m: &mut [f32], g: &mut [f32], lr: f32);
+}
+
+/// Straight-line scalar kernels — the reference implementation every
+/// other [`Kernels`] impl is property-tested against.
+pub struct ScalarKernels;
+
+impl Kernels for ScalarKernels {
+    #[inline]
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[inline]
+    fn axpy(out: &mut [f32], g: f32, x: &[f32]) {
+        for (o, v) in out.iter_mut().zip(x) {
+            *o += g * *v;
+        }
+    }
+
+    #[inline]
+    fn apply_zero(m: &mut [f32], g: &mut [f32], lr: f32) {
+        for (mv, gv) in m.iter_mut().zip(g.iter_mut()) {
+            *mv -= lr * *gv;
+            *gv = 0.0;
+        }
+    }
+}
+
+/// One mini-batch step with the [`ScalarKernels`] reference inner loops —
+/// the historical entry point, kept for benches and cross-validation
+/// against the HLO artifact. See [`minibatch_step`] for the semantics.
+#[allow(clippy::too_many_arguments)]
+pub fn native_minibatch_step(
+    vertex: &mut [f32],
+    context: &mut [f32],
+    dim: usize,
+    pos_u: &[i32],
+    pos_v: &[i32],
+    neg_v: &[i32],
+    k: usize,
+    lr: f32,
+    neg_weight: f32,
+    grad_u_buf: &mut Vec<f32>,
+    grad_c_buf: &mut Vec<f32>,
+) -> f32 {
+    minibatch_step::<ScalarKernels>(
+        vertex, context, dim, pos_u, pos_v, neg_v, k, lr, neg_weight, grad_u_buf, grad_c_buf,
+    )
+}
+
+/// One mini-batch step with gradient accumulation (the HLO scan body),
+/// generic over the [`Kernels`] supplying the `dim`-wide inner loops.
 ///
 /// `pos_u`/`pos_v` are `bsz` local rows; `neg_v` is `bsz * k` rows.
 /// Gradients for the whole batch are computed against the pre-update
@@ -29,7 +110,7 @@ fn sigmoid(s: f32) -> f32 {
 /// matching `jnp .at[].add` semantics. Returns the mean per-sample loss
 /// (mean over the `bsz * (1+k)` pair rows, like the kernel's tile mean).
 #[allow(clippy::too_many_arguments)]
-pub fn native_minibatch_step(
+pub fn minibatch_step<K: Kernels>(
     vertex: &mut [f32],
     context: &mut [f32],
     dim: usize,
@@ -70,83 +151,85 @@ pub fn native_minibatch_step(
         // positive pair
         let v = pos_v[i] as usize * dim;
         let vrow = &context[v..v + dim];
-        let s: f32 = urow.iter().zip(vrow).map(|(a, b)| a * b).sum();
+        let s = K::dot(urow, vrow);
         let g = sigmoid(s) - 1.0; // label=1, weight=1
         loss_sum += (softplus(s) - s) as f64;
         let gv = &mut grad_c_buf[v..v + dim];
-        for j in 0..dim {
-            gu[j] += g * vrow[j];
-            gv[j] += g * urow[j];
-        }
+        K::axpy(gu, g, vrow);
+        K::axpy(gv, g, urow);
 
         // negatives (label=0, weight=neg_weight)
         for t in 0..k {
             let n = neg_v[i * k + t] as usize * dim;
             let nrow = &context[n..n + dim];
-            let s: f32 = urow.iter().zip(nrow).map(|(a, b)| a * b).sum();
+            let s = K::dot(urow, nrow);
             let g = neg_weight * sigmoid(s);
             loss_sum += (neg_weight * softplus(s)) as f64;
             let gn = &mut grad_c_buf[n..n + dim];
-            for j in 0..dim {
-                gu[j] += g * nrow[j];
-                gn[j] += g * urow[j];
-            }
+            K::axpy(gu, g, nrow);
+            K::axpy(gn, g, urow);
         }
     }
 
     // scatter-add application (only touched rows are nonzero, but a dense
     // axpy over the partition is branch-free; see EXPERIMENTS.md §Perf for
     // the sparse-apply variant benchmarks)
-    apply_sparse(vertex, grad_u_buf, pos_u, dim, lr);
-    apply_sparse(context, grad_c_buf, pos_v, dim, lr);
-    apply_sparse(context, grad_c_buf, neg_v, dim, lr);
+    apply_sparse::<K>(vertex, grad_u_buf, pos_u, dim, lr);
+    apply_sparse::<K>(context, grad_c_buf, pos_v, dim, lr);
+    apply_sparse::<K>(context, grad_c_buf, neg_v, dim, lr);
 
     (loss_sum / (bsz * (1 + k)) as f64) as f32
 }
 
 /// Subtract lr * grad for each (deduplicated) touched row, then zero the
 /// gradient rows so the buffers are clean for the next batch.
-fn apply_sparse(mat: &mut [f32], grad: &mut [f32], rows: &[i32], dim: usize, lr: f32) {
+fn apply_sparse<K: Kernels>(mat: &mut [f32], grad: &mut [f32], rows: &[i32], dim: usize, lr: f32) {
     for &r in rows {
         let o = r as usize * dim;
-        let g = &mut grad[o..o + dim];
         // a row can appear in several index lists / multiple times; after
         // the first application its grad is zeroed, making reapplication a
         // no-op — this implements "apply each accumulated row once".
-        let m = &mut mat[o..o + dim];
-        for j in 0..dim {
-            m[j] -= lr * g[j];
-            g[j] = 0.0;
-        }
+        K::apply_zero(&mut mat[o..o + dim], &mut grad[o..o + dim], lr);
     }
 }
 
-/// Pure-rust device worker — the default [`crate::gpu::Backend`].
-pub struct NativeWorker {
+/// Pure-rust device worker, generic over the [`Kernels`] its inner loops
+/// run. One definition serves every streaming (non-batched-upload)
+/// backend: [`NativeWorker`] and [`crate::gpu::SimdWorker`] are type
+/// aliases of this struct, so they cannot drift apart in state, chunk
+/// handling, or [`crate::gpu::Backend`] behavior.
+pub struct Worker<K: Kernels> {
     pub dim: usize,
     pub batch_size: usize,
     pub negatives: usize,
     pub neg_weight: f32,
     grad_u: Vec<f32>,
     grad_c: Vec<f32>,
+    // fn() -> K keeps auto traits (Send/Sync) independent of K.
+    _kernels: std::marker::PhantomData<fn() -> K>,
 }
 
-impl NativeWorker {
+/// Pure-rust device worker with the scalar reference kernels — the
+/// default [`crate::gpu::Backend`].
+pub type NativeWorker = Worker<ScalarKernels>;
+
+impl<K: Kernels> Worker<K> {
     pub fn new(dim: usize, batch_size: usize, negatives: usize, neg_weight: f32) -> Self {
-        NativeWorker {
+        Worker {
             dim,
             batch_size,
             negatives,
             neg_weight,
             grad_u: Vec::new(),
             grad_c: Vec::new(),
+            _kernels: std::marker::PhantomData,
         }
     }
 
     /// Train `chunks` in place; returns the mean loss over chunks. (The
     /// trait-object path goes through [`crate::gpu::Backend`]; this
     /// slice-based entry point is kept for direct/bench callers.)
-    pub fn train_chunks_native(
+    pub fn train_chunks_in_place(
         &mut self,
         vertex: &mut [f32],
         context: &mut [f32],
@@ -158,7 +241,7 @@ impl NativeWorker {
         }
         let mut loss_sum = 0.0f64;
         for ch in chunks {
-            let loss = native_minibatch_step(
+            let loss = minibatch_step::<K>(
                 vertex,
                 context,
                 self.dim,

@@ -1,0 +1,235 @@
+//! Hand-unrolled f32x8 SGNS kernels — the device backend selected by
+//! [`crate::config::BackendKind::Simd`] (`backend = "simd"`).
+//!
+//! The scalar [`NativeWorker`](crate::gpu::NativeWorker) runs the SGNS
+//! inner loops one lane at a time; most of a modern CPU's f32 throughput
+//! sits in its vector units. This module supplies the same three
+//! `dim`-wide inner loops ([`Kernels`]) in a portable 8-lane form that
+//! stable Rust auto-vectorizes reliably:
+//!
+//! * fixed-width chunks via `split_at` / `chunks_exact` so the loop body
+//!   has a compile-time trip count of 8 and no bounds checks
+//!   (`try_into` to `&[f32; 8]` makes the length a type-level fact);
+//! * eight independent accumulators in the [`Kernels::dot`] impl so the
+//!   reduction has no loop-carried dependency — the shape LLVM turns
+//!   into `mulps`/`fmadd` + a lane shuffle reduce on SSE/AVX/NEON;
+//! * a scalar tail loop for the `dim % 8` remainder lanes, so every
+//!   dimension is supported, not just multiples of 8.
+//!
+//! No `std::arch` intrinsics, no nightly `std::simd`, no external crates:
+//! the unrolled form is plain stable Rust, portable to every target.
+//!
+//! **Numerics.** `axpy` and `apply_zero` are element-wise, so they are
+//! bit-identical to the scalar kernels. `dot` reassociates its reduction
+//! (8 partial sums + pairwise combine instead of one sequential sum),
+//! which differs from the scalar result only by float reassociation
+//! error — a few ULPs for embedding-scale values. The equivalence is
+//! enforced by the property tests in `rust/tests/simd_kernels.rs`,
+//! including remainder-lane dims; that is why the quality gates in
+//! `rust/tests/regression.rs` carry over to this backend unchanged.
+
+use crate::gpu::native::{minibatch_step, Kernels, Worker};
+
+/// Lanes per unrolled block. Eight f32s = one AVX register (or two
+/// NEON/SSE registers), and wide enough that the reduction tree in
+/// the unrolled `dot` hides FMA latency.
+pub const LANES: usize = 8;
+
+/// Split a slice at the largest multiple of [`LANES`].
+#[inline]
+fn split_main_tail(a: &[f32]) -> (&[f32], &[f32]) {
+    a.split_at(a.len() - a.len() % LANES)
+}
+
+/// Portable hand-unrolled 8-lane [`Kernels`] implementation.
+pub struct UnrolledKernels;
+
+impl Kernels for UnrolledKernels {
+    #[inline]
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let (am, at) = split_main_tail(a);
+        let (bm, bt) = split_main_tail(b);
+        let mut acc = [0.0f32; LANES];
+        for (ca, cb) in am.chunks_exact(LANES).zip(bm.chunks_exact(LANES)) {
+            let ca: &[f32; LANES] = ca.try_into().unwrap();
+            let cb: &[f32; LANES] = cb.try_into().unwrap();
+            for l in 0..LANES {
+                acc[l] += ca[l] * cb[l];
+            }
+        }
+        let mut tail = 0.0f32;
+        for (x, y) in at.iter().zip(bt) {
+            tail += x * y;
+        }
+        // pairwise lane reduce (matches the shuffle-reduce a vector ISA
+        // would do; NOT the scalar left-to-right order — hence the
+        // ULP-tolerance in the equivalence tests)
+        (((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))) + tail
+    }
+
+    #[inline]
+    fn axpy(out: &mut [f32], g: f32, x: &[f32]) {
+        debug_assert_eq!(out.len(), x.len());
+        let split = out.len() - out.len() % LANES;
+        let (om, ot) = out.split_at_mut(split);
+        let (xm, xt) = x.split_at(split);
+        for (co, cx) in om.chunks_exact_mut(LANES).zip(xm.chunks_exact(LANES)) {
+            let co: &mut [f32; LANES] = co.try_into().unwrap();
+            let cx: &[f32; LANES] = cx.try_into().unwrap();
+            for l in 0..LANES {
+                co[l] += g * cx[l];
+            }
+        }
+        for (o, v) in ot.iter_mut().zip(xt) {
+            *o += g * *v;
+        }
+    }
+
+    #[inline]
+    fn apply_zero(m: &mut [f32], g: &mut [f32], lr: f32) {
+        debug_assert_eq!(m.len(), g.len());
+        let split = m.len() - m.len() % LANES;
+        let (mm, mt) = m.split_at_mut(split);
+        let (gm, gt) = g.split_at_mut(split);
+        for (cm, cg) in mm.chunks_exact_mut(LANES).zip(gm.chunks_exact_mut(LANES)) {
+            let cm: &mut [f32; LANES] = cm.try_into().unwrap();
+            let cg: &mut [f32; LANES] = cg.try_into().unwrap();
+            for l in 0..LANES {
+                cm[l] -= lr * cg[l];
+                cg[l] = 0.0;
+            }
+        }
+        for (mv, gv) in mt.iter_mut().zip(gt.iter_mut()) {
+            *mv -= lr * *gv;
+            *gv = 0.0;
+        }
+    }
+}
+
+/// One mini-batch step through the [`UnrolledKernels`] — the 8-lane twin
+/// of [`native_minibatch_step`](crate::gpu::native_minibatch_step), with
+/// identical semantics (same skeleton, same scatter-add accumulation) and
+/// dot products that agree within reassociation error.
+#[allow(clippy::too_many_arguments)]
+pub fn simd_minibatch_step(
+    vertex: &mut [f32],
+    context: &mut [f32],
+    dim: usize,
+    pos_u: &[i32],
+    pos_v: &[i32],
+    neg_v: &[i32],
+    k: usize,
+    lr: f32,
+    neg_weight: f32,
+    grad_u_buf: &mut Vec<f32>,
+    grad_c_buf: &mut Vec<f32>,
+) -> f32 {
+    minibatch_step::<UnrolledKernels>(
+        vertex, context, dim, pos_u, pos_v, neg_v, k, lr, neg_weight, grad_u_buf, grad_c_buf,
+    )
+}
+
+/// Pure-rust device worker running the hand-unrolled f32x8 kernels — the
+/// [`crate::gpu::Backend`] behind `backend = "simd"`. An alias of the
+/// same generic [`Worker`] as [`NativeWorker`](crate::gpu::NativeWorker),
+/// so the two are identical in every scheduling-visible way (streaming
+/// chunks, chunk size, negative count, gradient-buffer state) and the
+/// coordinator cannot tell them apart — that is the point of the Backend
+/// seam.
+pub type SimdWorker = Worker<UnrolledKernels>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::native::ScalarKernels;
+    use crate::util::rng::Rng;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let a = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn dot_matches_scalar_all_remainders() {
+        // every dim % 8 class, incl. 0 and sub-lane lengths
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 24, 31, 64, 100, 127, 128] {
+            let (a, b) = vecs(n, n as u64 + 1);
+            let s = ScalarKernels::dot(&a, &b);
+            let u = UnrolledKernels::dot(&a, &b);
+            // analytic reassociation bound: dim * eps * sum of |terms|
+            let mag: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            let tol = 8.0 * n.max(1) as f32 * f32::EPSILON * mag + 1e-7;
+            assert!((s - u).abs() <= tol, "dim {n}: scalar {s} vs unrolled {u} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn axpy_bitwise_identical_to_scalar() {
+        for n in [0usize, 1, 7, 8, 9, 16, 17, 100] {
+            let (x, base) = vecs(n, 1000 + n as u64);
+            let (mut o1, mut o2) = (base.clone(), base);
+            ScalarKernels::axpy(&mut o1, 0.37, &x);
+            UnrolledKernels::axpy(&mut o2, 0.37, &x);
+            assert_eq!(o1, o2, "dim {n}");
+        }
+    }
+
+    #[test]
+    fn apply_zero_bitwise_identical_and_clears() {
+        for n in [0usize, 1, 7, 8, 9, 16, 17, 100] {
+            let (m_base, g_base) = vecs(n, 2000 + n as u64);
+            let (mut m1, mut g1) = (m_base.clone(), g_base.clone());
+            let (mut m2, mut g2) = (m_base, g_base);
+            ScalarKernels::apply_zero(&mut m1, &mut g1, 0.05);
+            UnrolledKernels::apply_zero(&mut m2, &mut g2, 0.05);
+            assert_eq!(m1, m2, "dim {n}");
+            assert!(g1.iter().all(|&v| v == 0.0));
+            assert!(g2.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn simd_step_trains_and_attracts() {
+        // same shape as native.rs positive_pairs_attract, through the
+        // unrolled path end-to-end (dim 12 exercises remainder lanes)
+        let dim = 12;
+        let mut rng = Rng::new(5);
+        let mut v: Vec<f32> = (0..4 * dim).map(|_| rng.range_f32(-0.1, 0.1)).collect();
+        let mut c: Vec<f32> = (0..4 * dim).map(|_| rng.range_f32(-0.1, 0.1)).collect();
+        let dot_before = ScalarKernels::dot(&v[0..dim], &c[dim..2 * dim]);
+        let (mut gu, mut gc) = (Vec::new(), Vec::new());
+        for _ in 0..50 {
+            simd_minibatch_step(
+                &mut v, &mut c, dim, &[0], &[1], &[2], 1, 0.1, 5.0, &mut gu, &mut gc,
+            );
+        }
+        let dot_after = ScalarKernels::dot(&v[0..dim], &c[dim..2 * dim]);
+        assert!(dot_after > dot_before, "{dot_before} -> {dot_after}");
+    }
+
+    #[test]
+    fn simd_worker_trains_chunks() {
+        let mut w = SimdWorker::new(4, 2, 1, 5.0);
+        let mut vertex = vec![0.01f32; 4 * 4];
+        let mut context = vec![0.02f32; 4 * 4];
+        let chunk = crate::gpu::ChunkPlan {
+            pos_u: vec![0, 1],
+            pos_v: vec![1, 2],
+            neg_v: vec![2, 3],
+            lr: 0.1,
+            real: 2,
+        };
+        let counters = crate::metrics::Counters::default();
+        let loss = w.train_chunks_in_place(
+            &mut vertex,
+            &mut context,
+            std::slice::from_ref(&chunk),
+            &counters,
+        );
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(counters.snapshot().device_steps, 1);
+    }
+}

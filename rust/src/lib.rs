@@ -15,13 +15,19 @@
 //!   (`python/compile/kernels/sgns.py`), inlined into the Layer-2 HLO.
 //!
 //! Device execution sits behind the [`gpu::Backend`] trait: the pure-rust
-//! [`gpu::NativeWorker`] is the always-available default, and with the
+//! [`gpu::NativeWorker`] is the always-available default,
+//! [`gpu::SimdWorker`] runs the same math through hand-unrolled f32x8
+//! kernels (also always available — `backend = "simd"`), and with the
 //! `pjrt` cargo feature the [`runtime`] module loads the HLO artifacts
 //! through the PJRT C API (`xla` crate) so each simulated GPU worker
 //! executes the compiled artifacts; Python never runs on the training
 //! path. Build without features for a dependency-light binary
 //! (`cargo build --release`), or with `--features pjrt` for the
 //! three-layer path (see README "Building").
+//!
+//! A top-to-bottom map of the system — pipeline stages, thread topology,
+//! the module ↔ paper-section table — lives in `ARCHITECTURE.md` at the
+//! repository root.
 //!
 //! ## Quickstart
 //!

@@ -67,6 +67,8 @@ fn run(args: &Args) -> Result<()> {
 }
 
 fn print_usage() {
+    // The backend list and descriptions are generated from
+    // `BackendKind::ALL` so this text cannot drift from the enum.
     println!(
         "graphvite — CPU/'GPU' hybrid node embedding (GraphVite, WWW'19)
 
@@ -89,8 +91,7 @@ TRAIN OPTIONS (defaults follow paper section 4.3):
                         needs --no-fix-context when > workers)
   --samplers N          CPU sampler threads             [4]
   --episode-size N      samples per episode x workers   [200000]
-  --backend pjrt|native device backend ('pjrt' needs a build with
-                        --features pjrt; 'hlo' is a legacy alias) [native]
+  --backend B           device backend: {names}  [native]
   --shuffle S           none|random|index-mapping|pseudo [pseudo]
   --walk-length L       random walk length (edges)      [5]
   --aug-distance S      augmentation distance           [2]
@@ -109,7 +110,12 @@ EVAL TASKS:
   linkpred  --embeddings F --graph G [--holdout X] [--seed N]
 
 EXPERIMENTS: table1 table3 table4 table5 table6 table7 table8
-             fig4 fig5 fig6 all       (--scale tiny|small|full)"
+             fig4 fig5 fig6 all       (--scale tiny|small|full)
+
+BACKENDS (--backend on the CLI, `backend = \"...\"` in [train] TOML):
+{backends}",
+        names = BackendKind::names_joined(),
+        backends = BackendKind::help_text()
     );
 }
 
@@ -164,8 +170,12 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
             ShuffleKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown shuffle '{s}'"))?;
     }
     if let Some(s) = args.get("backend") {
-        cfg.backend =
-            BackendKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown backend '{s}'"))?;
+        cfg.backend = BackendKind::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown backend '{s}' (expected one of: {})",
+                BackendKind::names_joined()
+            )
+        })?;
     }
     if args.flag("no-collaboration") {
         cfg.collaboration = false;

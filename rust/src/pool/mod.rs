@@ -2,6 +2,32 @@
 //! CPUs produce and GPUs consume, with the shuffle algorithms of Table 7,
 //! block redistribution into the n×n grid (Algorithm 3's `Redistribute`)
 //! and the double-buffered collaboration pair (§3.3).
+//!
+//! **Pseudo shuffle (§3.1, Table 7).** Samples from one random walk are
+//! correlated (they share nodes), and feeding them to SGD in generation
+//! order hurts embedding quality; a full Fisher–Yates pass over a
+//! hundred-million-sample pool is a cache-miss storm. The paper's pseudo
+//! shuffle is the middle point: deal samples round-robin into `s`
+//! sequential-append blocks (s = augmentation distance) and concatenate,
+//! so correlated neighbors land ~`pool_len / s` apart at purely
+//! sequential-write cost. All
+//! four algorithms of Table 7 (`none`, `random`, `index-mapping`,
+//! `pseudo`) live in [`shuffle`], selected by [`ShuffleKind`]; the speed
+//! column is reproduced by `bench_micro`, the F1 column by `bench_table7`.
+//!
+//! **Episode semantics (§3.2–3.3).** A filled pool is redistributed into
+//! the [`BlockGrid`] — `blocks[i][j]` holds samples whose source lies in
+//! vertex partition `i` and target in context partition `j`, already
+//! translated to partition-local rows. One *episode* is one orthogonal
+//! group: a latin-square diagonal of n mutually orthogonal blocks (each
+//! holding ~`episode_size / n` samples, `episode_size` in total) trained
+//! by the n workers concurrently (see [`crate::scheduler`]); a *pool
+//! pass* is n episodes covering all n² blocks, after which the pair of
+//! pools swaps
+//! ([`PoolPair`], the §3.3 collaboration strategy): device workers train
+//! out of one pool while the sampler threads fill the other, so CPU
+//! sampling and GPU training overlap instead of alternating (the
+//! `collaboration = false` ablation is exactly that alternation).
 
 mod double_buffer;
 pub mod shuffle;

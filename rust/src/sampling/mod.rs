@@ -1,6 +1,31 @@
 //! Sampling substrate: alias tables, random walks, GraphVite's parallel
 //! online augmentation (paper §3.1) and the restricted negative sampler
 //! (paper §3.2).
+//!
+//! **Online augmentation (§3.1).** Plain edge sampling starves the GPUs
+//! on sparse graphs, so each CPU sampler thread runs random walks of
+//! `walk_length` edges and emits every node pair within
+//! `augmentation_distance` hops along the walk as an *augmented* positive
+//! sample ([`OnlineAugmenter`]). Departure nodes are drawn with
+//! probability proportional to degree through an [`AliasTable`] (O(1)
+//! weighted draws), and the walk itself steps through per-node alias
+//! tables ([`RandomWalker`]). Nothing is materialized: augmentation
+//! happens online while filling the pool, which is what lets the sampler
+//! threads keep up with the device workers in the §3.3 collaboration
+//! strategy.
+//!
+//! **Restricted (parallel) negative sampling (§3.2).** Classic SGNS draws
+//! negatives from all of `V`, which would force every worker to hold the
+//! whole context matrix. GraphVite's observation is that negatives only
+//! need to be *approximately* uniform: each worker instead draws
+//! negatives from the context partition resident on it
+//! ([`NegativeSampler::sample_local`]), so an episode's block trains
+//! entirely against device-resident rows — no transfer, no cross-worker
+//! synchronization. Over a pool pass every (vertex, context) partition
+//! pair is visited, so the union of restricted distributions covers `V`.
+//!
+//! The [`EdgeSampler`] is the un-augmented fallback behind the
+//! `online_augmentation = false` ablation (Table 6 row 2).
 
 mod alias;
 mod augment;

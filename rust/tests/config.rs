@@ -1,0 +1,107 @@
+//! Config round-trip coverage: TOML → `TrainConfig` → `validate` for
+//! every `BackendKind` variant — driven off `BackendKind::ALL` so a new
+//! backend is covered the moment it is added to the enum — plus an
+//! end-to-end smoke train through the `simd` backend selected the way a
+//! user would select it (config text, not code).
+
+use graphvite::config::{BackendKind, TrainConfig};
+use graphvite::coordinator::Trainer;
+use graphvite::graph::generators;
+
+#[test]
+fn toml_roundtrip_every_backend() {
+    for &b in BackendKind::ALL {
+        let toml = format!("[train]\nbackend = \"{}\"\n", b.name());
+        let res = TrainConfig::from_toml_str(&toml);
+        if b.available() {
+            let cfg = res.unwrap_or_else(|e| panic!("backend '{}' rejected: {e}", b.name()));
+            assert_eq!(cfg.backend, b, "backend '{}'", b.name());
+            cfg.validate()
+                .unwrap_or_else(|e| panic!("backend '{}' failed validate: {e}", b.name()));
+        } else {
+            // only reachable for pjrt without the feature: the error must
+            // tell the user exactly how to get the backend
+            let err = res.expect_err("unavailable backend must be rejected").to_string();
+            assert!(
+                err.contains("--features pjrt"),
+                "backend '{}': unhelpful error: {err}",
+                b.name()
+            );
+            assert!(
+                err.contains(b.name()),
+                "backend '{}': error does not name the backend: {err}",
+                b.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn toml_roundtrip_every_alias() {
+    for &b in BackendKind::ALL {
+        for alias in b.aliases() {
+            let toml = format!("backend = \"{alias}\"\n");
+            match TrainConfig::from_toml_str(&toml) {
+                Ok(cfg) => assert_eq!(cfg.backend, b, "alias '{alias}'"),
+                // an unavailable aliased backend still fails with the
+                // canonical feature hint, not an "unknown backend" error
+                Err(e) => {
+                    assert!(!b.available(), "alias '{alias}' rejected: {e}");
+                    assert!(e.to_string().contains("--features pjrt"), "alias '{alias}': {e}");
+                }
+            }
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn pjrt_unavailable_error_is_descriptive() {
+    let err = TrainConfig::from_toml_str("backend = \"pjrt\"\n")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("pjrt"), "{err}");
+    assert!(err.contains("--features pjrt"), "{err}");
+    assert!(err.contains("native"), "should point at the always-available backends: {err}");
+}
+
+#[test]
+fn unknown_backend_error_lists_choices() {
+    let err = TrainConfig::from_toml_str("backend = \"cuda\"\n")
+        .unwrap_err()
+        .to_string();
+    for &b in BackendKind::ALL {
+        assert!(err.contains(b.name()), "'{err}' misses '{}'", b.name());
+    }
+}
+
+/// The simd backend selected via config text trains end-to-end: the
+/// coordinator path (partitioning, episode schedule, restricted
+/// negatives) is backend-agnostic and the run must produce finite,
+/// nontrivial embeddings.
+#[test]
+fn simd_backend_trains_end_to_end() {
+    let cfg = TrainConfig::from_toml_str(
+        r#"
+        [train]
+        backend = "simd"
+        dim = 12
+        epochs = 20
+        num_workers = 2
+        num_samplers = 2
+        episode_size = 2000
+        batch_size = 64
+        seed = 9
+        "#,
+    )
+    .unwrap();
+    assert_eq!(cfg.backend, BackendKind::Simd);
+    let graph = generators::barabasi_albert(500, 4, 9);
+    let mut trainer = Trainer::new(graph, cfg).unwrap();
+    let result = trainer.train().unwrap();
+    assert!(result.stats.final_loss.is_finite());
+    let v = result.embeddings.vertex_matrix();
+    assert!(v.iter().all(|x| x.is_finite()));
+    // training moved the embeddings off their init
+    assert!(result.stats.counters.samples_trained > 0);
+}

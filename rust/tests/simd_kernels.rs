@@ -1,0 +1,161 @@
+//! Exact-equivalence strategy for the hand-unrolled f32x8 backend: the
+//! unrolled kernels must match the scalar reference within a tight,
+//! derivable tolerance on randomized batches and dims — including
+//! remainder lanes when `dim % 8 != 0` — so every quality gate proven
+//! against the native backend (`rust/tests/regression.rs`,
+//! `rust/tests/properties.rs`) carries over to `backend = "simd"`
+//! unchanged.
+//!
+//! Error budget: `axpy` and `apply_zero` are element-wise and required to
+//! be *bitwise* identical. Only `dot` reassociates (8 partial sums +
+//! pairwise reduce), so a single dot differs from the sequential scalar
+//! sum by at most ~`dim * EPSILON * Σ|aᵢbᵢ|`. Downstream of a dot, the
+//! divergence is smoothed through sigmoid (Lipschitz ¼) and scaled by
+//! `lr`, which is why whole-step embedding deltas stay orders of
+//! magnitude below the asserted bounds.
+
+use graphvite::gpu::{
+    native_minibatch_step, simd_minibatch_step, Kernels, ScalarKernels, UnrolledKernels,
+};
+use graphvite::util::prop::forall;
+
+#[test]
+fn prop_unrolled_dot_matches_scalar_within_ulps() {
+    forall("unrolled dot vs scalar", 300, |g| {
+        // 0..67 covers every remainder class mod 8 several times over
+        let n = g.usize_in(0..67);
+        let a: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0..2.0)).collect();
+        let b: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0..2.0)).collect();
+        let s = ScalarKernels::dot(&a, &b);
+        let u = UnrolledKernels::dot(&a, &b);
+        // reassociation bound: dim * eps * sum of |terms|, with slack for
+        // the scalar sum's own rounding; exact zero when n == 0
+        let mag: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+        let tol = 8.0 * n.max(1) as f32 * f32::EPSILON * mag + 1e-7;
+        assert!(
+            (s - u).abs() <= tol,
+            "dim {n}: scalar {s} vs unrolled {u} (tol {tol})"
+        );
+    });
+}
+
+#[test]
+fn prop_unrolled_axpy_bitwise_identical() {
+    forall("unrolled axpy vs scalar", 200, |g| {
+        let n = g.usize_in(0..67);
+        let x: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0..2.0)).collect();
+        let base: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0..2.0)).collect();
+        let scale = g.f32_in(-3.0..3.0);
+        let (mut o1, mut o2) = (base.clone(), base);
+        ScalarKernels::axpy(&mut o1, scale, &x);
+        UnrolledKernels::axpy(&mut o2, scale, &x);
+        // element-wise op: no reassociation, so bitwise equality holds
+        assert_eq!(o1, o2, "dim {n}, scale {scale}");
+    });
+}
+
+#[test]
+fn prop_unrolled_apply_zero_bitwise_identical() {
+    forall("unrolled apply_zero vs scalar", 200, |g| {
+        let n = g.usize_in(0..67);
+        let m_base: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0..2.0)).collect();
+        let g_base: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0..2.0)).collect();
+        let lr = g.f32_in(0.001..0.5);
+        let (mut m1, mut g1) = (m_base.clone(), g_base.clone());
+        let (mut m2, mut g2) = (m_base, g_base);
+        ScalarKernels::apply_zero(&mut m1, &mut g1, lr);
+        UnrolledKernels::apply_zero(&mut m2, &mut g2, lr);
+        assert_eq!(m1, m2, "dim {n}");
+        // both must also restore the dense-accumulator invariant
+        assert!(g1.iter().all(|&v| v == 0.0));
+        assert!(g2.iter().all(|&v| v == 0.0));
+    });
+}
+
+/// One full mini-batch step on randomized shapes: same indices (with
+/// duplicates — small `p` makes row collisions frequent, exercising the
+/// scatter-add dedup on both paths), same data, scalar vs unrolled.
+#[test]
+fn prop_simd_minibatch_step_matches_scalar() {
+    forall("simd step vs scalar step", 50, |g| {
+        let dim = g.usize_in(1..40); // dense coverage of dim % 8 != 0
+        let p = g.usize_in(4..64);
+        let bsz = g.usize_in(1..24);
+        let k = g.usize_in(1..4);
+        let lr = g.f32_in(0.01..0.2);
+
+        let base_v: Vec<f32> = (0..p * dim).map(|_| g.f32_in(-0.25..0.25)).collect();
+        let base_c: Vec<f32> = (0..p * dim).map(|_| g.f32_in(-0.25..0.25)).collect();
+        let pos_u: Vec<i32> = (0..bsz).map(|_| g.usize_in(0..p) as i32).collect();
+        let pos_v: Vec<i32> = (0..bsz).map(|_| g.usize_in(0..p) as i32).collect();
+        let neg_v: Vec<i32> = (0..bsz * k).map(|_| g.usize_in(0..p) as i32).collect();
+
+        let (mut v1, mut c1) = (base_v.clone(), base_c.clone());
+        let (mut v2, mut c2) = (base_v, base_c);
+        let (mut gu1, mut gc1) = (Vec::new(), Vec::new());
+        let (mut gu2, mut gc2) = (Vec::new(), Vec::new());
+        let l1 = native_minibatch_step(
+            &mut v1, &mut c1, dim, &pos_u, &pos_v, &neg_v, k, lr, 5.0, &mut gu1, &mut gc1,
+        );
+        let l2 = simd_minibatch_step(
+            &mut v2, &mut c2, dim, &pos_u, &pos_v, &neg_v, k, lr, 5.0, &mut gu2, &mut gc2,
+        );
+
+        assert!(
+            (l1 - l2).abs() <= 1e-5 + 1e-4 * l1.abs(),
+            "loss diverged: scalar {l1} vs simd {l2} (dim {dim} p {p} bsz {bsz} k {k})"
+        );
+        for (i, (a, b)) in v1.iter().zip(&v2).enumerate() {
+            assert!(
+                (a - b).abs() <= 2e-4,
+                "vertex[{i}] diverged: {a} vs {b} (dim {dim} p {p} bsz {bsz} k {k})"
+            );
+        }
+        for (i, (a, b)) in c1.iter().zip(&c2).enumerate() {
+            assert!(
+                (a - b).abs() <= 2e-4,
+                "context[{i}] diverged: {a} vs {b} (dim {dim} p {p} bsz {bsz} k {k})"
+            );
+        }
+    });
+}
+
+/// Reassociation error must not amplify across successive steps on the
+/// same buffers (the divergence is damped by sigmoid saturation, not
+/// compounded) — 20 chained steps at a remainder-lane dim stay close.
+#[test]
+fn chained_steps_stay_close() {
+    let dim = 20; // 20 % 8 == 4: main lanes + remainder every step
+    let p = 64;
+    let bsz = 32;
+    let k = 2;
+    let mut g = graphvite::util::rng::Rng::new(4242);
+    let base_v: Vec<f32> = (0..p * dim).map(|_| g.range_f32(-0.25, 0.25)).collect();
+    let base_c: Vec<f32> = (0..p * dim).map(|_| g.range_f32(-0.25, 0.25)).collect();
+    let (mut v1, mut c1) = (base_v.clone(), base_c.clone());
+    let (mut v2, mut c2) = (base_v, base_c);
+    let (mut gu1, mut gc1) = (Vec::new(), Vec::new());
+    let (mut gu2, mut gc2) = (Vec::new(), Vec::new());
+    for step in 0..20 {
+        let pos_u: Vec<i32> = (0..bsz).map(|_| g.below(p as u64) as i32).collect();
+        let pos_v: Vec<i32> = (0..bsz).map(|_| g.below(p as u64) as i32).collect();
+        let neg_v: Vec<i32> = (0..bsz * k).map(|_| g.below(p as u64) as i32).collect();
+        let l1 = native_minibatch_step(
+            &mut v1, &mut c1, dim, &pos_u, &pos_v, &neg_v, k, 0.1, 5.0, &mut gu1, &mut gc1,
+        );
+        let l2 = simd_minibatch_step(
+            &mut v2, &mut c2, dim, &pos_u, &pos_v, &neg_v, k, 0.1, 5.0, &mut gu2, &mut gc2,
+        );
+        assert!(
+            (l1 - l2).abs() <= 1e-4 + 1e-3 * l1.abs(),
+            "loss diverged at step {step}: {l1} vs {l2}"
+        );
+    }
+    let max_diff = v1
+        .iter()
+        .zip(&v2)
+        .chain(c1.iter().zip(&c2))
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff <= 5e-3, "chained divergence {max_diff}");
+}
