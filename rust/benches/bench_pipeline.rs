@@ -1,0 +1,187 @@
+//! Transfer-engine comparison: serial dispatch vs pipelined waves vs
+//! pipelined + partition residency (the PR-3 perf work; no paper table —
+//! this tracks the repo's own host↔device data path).
+//!
+//! Run with `cargo bench --bench bench_pipeline`; set
+//! `GRAPHVITE_BENCH_SCALE=tiny|small|full` for workload size and
+//! `GRAPHVITE_BENCH_FAST=1` for the CI smoke run (single sample).
+//!
+//! Unlike the table/figure targets this bench **self-records**: besides
+//! printing the usual `bench` lines + markdown table it writes
+//! `BENCH_pipeline_<scale>.json` next to this file (the benches/README
+//! convention), so every run extends the perf trajectory without the
+//! shell capture one-liner.
+
+use graphvite::config::{BackendKind, TrainConfig};
+use graphvite::coordinator::Trainer;
+use graphvite::experiments::{Scale, Workload};
+use graphvite::graph::Graph;
+use graphvite::metrics::TrainStats;
+use graphvite::pool::ShuffleKind;
+use graphvite::util::bench::{Bencher, Table};
+use graphvite::util::human_bytes;
+
+fn scale_name(scale: Scale) -> &'static str {
+    match scale {
+        Scale::Tiny => "tiny",
+        Scale::Small => "small",
+        Scale::Full => "full",
+    }
+}
+
+fn workload(scale: Scale) -> (Graph, TrainConfig) {
+    let nodes = match scale {
+        Scale::Tiny => 2_000,
+        Scale::Small => 20_000,
+        Scale::Full => 100_000,
+    };
+    let graph = Workload::scale_free(nodes, 5, 0x717);
+    let cfg = TrainConfig {
+        dim: 64,
+        epochs: if scale == Scale::Tiny { 2 } else { 4 },
+        num_workers: 2,
+        num_partitions: 4, // multi-wave groups: the pipelined case
+        num_samplers: 2,
+        episode_size: (nodes / 2).max(4_000),
+        batch_size: 256,
+        fix_context: false, // required for partitions > workers
+        backend: BackendKind::best_available(),
+        shuffle: ShuffleKind::Pseudo,
+        seed: 11,
+        ..TrainConfig::default()
+    };
+    (graph, cfg)
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let fast = std::env::var("GRAPHVITE_BENCH_FAST").is_ok();
+    let mut b = if fast { Bencher::with_iters(0, 1) } else { Bencher::with_iters(1, 3) };
+
+    let (graph, base) = workload(scale);
+    let samples = base.total_samples(graph.num_edges()) as f64;
+    println!(
+        "bench_pipeline scale={} ({} nodes, {} edges, backend {})",
+        scale_name(scale),
+        graph.num_nodes(),
+        graph.num_edges(),
+        base.backend.name()
+    );
+
+    let variants: [(&str, bool, bool); 3] = [
+        ("serial", false, false),
+        ("pipelined", true, false),
+        ("pipelined+residency", true, true),
+    ];
+    let mut table = Table::new(
+        "Transfer engine: serial vs pipelined vs residency",
+        &[
+            "config",
+            "train s",
+            "Msamples/s",
+            "to-device",
+            "from-device",
+            "hits",
+            "saved",
+            "gather+scatter ms",
+        ],
+    );
+    let mut recorded: Vec<String> = Vec::new();
+
+    for (name, pipeline, residency) in variants {
+        let mut last: Option<TrainStats> = None;
+        b.bench_items(&format!("train.{name}"), samples, || {
+            let cfg = TrainConfig {
+                pipeline_transfers: pipeline,
+                residency,
+                ..base.clone()
+            };
+            let mut t = Trainer::new(graph.clone(), cfg).unwrap();
+            let r = t.train().unwrap();
+            let trained = r.stats.counters.samples_trained;
+            last = Some(r.stats);
+            trained
+        });
+        let s = last.expect("bench ran at least once");
+        let c = &s.counters;
+        table.row(&[
+            name.to_string(),
+            format!("{:.3}", s.train_secs),
+            format!("{:.3}", s.throughput() / 1e6),
+            human_bytes(c.bytes_to_device),
+            human_bytes(c.bytes_from_device),
+            c.residency_hits.to_string(),
+            human_bytes(c.bytes_saved),
+            format!("{:.1}", s.transfer_secs() * 1e3),
+        ]);
+        recorded.push(format!(
+            "counters {name}: train_secs {:.6} samples_trained {} bytes_to_device {} \
+             bytes_from_device {} residency_hits {} bytes_saved {} gather_nanos {} \
+             scatter_nanos {}",
+            s.train_secs,
+            c.samples_trained,
+            c.bytes_to_device,
+            c.bytes_from_device,
+            c.residency_hits,
+            c.bytes_saved,
+            c.gather_nanos,
+            c.scatter_nanos
+        ));
+    }
+
+    table.print();
+    for line in &recorded {
+        println!("{line}");
+    }
+
+    // self-record per the benches/README BENCH_*.json convention
+    let mut lines: Vec<String> = b
+        .results()
+        .iter()
+        .map(|r| {
+            format!(
+                "bench {} {:.9} ± {:.9} min {:.9}",
+                r.name, r.mean_secs, r.stddev_secs, r.min_secs
+            )
+        })
+        .collect();
+    lines.extend(table.to_markdown().lines().map(String::from));
+    lines.extend(recorded.iter().cloned());
+    let json = to_json(&format!("bench_pipeline scale={}", scale_name(scale)), &lines);
+    let path = format!(
+        "{}/benches/BENCH_pipeline_{}.json",
+        env!("CARGO_MANIFEST_DIR"),
+        scale_name(scale)
+    );
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("recorded {path}"),
+        Err(e) => eprintln!("could not record {path}: {e}"),
+    }
+}
+
+/// Minimal JSON emitter (the offline crate set has no serde): an object
+/// of the benches/README shape `{"argv": ..., "lines": [...]}`.
+fn to_json(argv: &str, lines: &[String]) -> String {
+    fn esc(s: &str) -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        for ch in s.chars() {
+            match ch {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+    let mut json = String::from("{\n");
+    json.push_str(&format!(" \"argv\": \"{}\",\n", esc(argv)));
+    json.push_str(" \"lines\": [\n");
+    for (i, line) in lines.iter().enumerate() {
+        let comma = if i + 1 == lines.len() { "" } else { "," };
+        json.push_str(&format!("  \"{}\"{comma}\n", esc(line)));
+    }
+    json.push_str(" ]\n}\n");
+    json
+}

@@ -166,6 +166,25 @@ pub struct TrainConfig {
     /// Bus usage optimization (§3.4): pin context partitions to workers
     /// and rotate only vertex partitions.
     pub fix_context: bool,
+    /// Pipelined wave dispatch: gather and dispatch every wave of an
+    /// episode group without waiting for the previous wave's results
+    /// (waves within a group are mutually row/column-disjoint), scattering
+    /// results as they arrive and fencing only at group boundaries. Off =
+    /// the PR-2 serial dispatch (one wave in flight at a time). Bitwise
+    /// equivalent embeddings either way — see `rust/tests/pipeline_equivalence.rs`.
+    pub pipeline_transfers: bool,
+    /// Generalized partition residency: workers keep a partition resident
+    /// (vertex *or* context) whenever the schedule routes its next block
+    /// to the same worker, eliding the re-upload, with a residency-aware
+    /// episode-group ordering that maximizes those reuses. Off = the PR-2
+    /// transfer pattern (everything re-shipped each episode except the
+    /// `fix_context` context cache). The data movement itself never
+    /// changes trained values — but toggling this flag also switches the
+    /// episode-group *execution order* (on `partitions > workers`
+    /// configs), which is a different, equally valid training trajectory:
+    /// residency on/off runs are not bitwise comparable, unlike
+    /// `pipeline_transfers` on/off runs, which are.
+    pub residency: bool,
     /// Mini-batch size fed to the device per step (HLO artifacts fix this
     /// per variant; native backend uses it directly).
     pub batch_size: usize,
@@ -194,6 +213,8 @@ impl Default for TrainConfig {
             collaboration: true,
             online_augmentation: true,
             fix_context: true,
+            pipeline_transfers: true,
+            residency: true,
             batch_size: 256,
             seed: 42,
             log_every: 0,
@@ -306,6 +327,8 @@ impl TrainConfig {
         set_bool!(collaboration, "collaboration");
         set_bool!(online_augmentation, "online_augmentation");
         set_bool!(fix_context, "fix_context");
+        set_bool!(pipeline_transfers, "pipeline_transfers");
+        set_bool!(residency, "residency");
         cfg.validate()?;
         Ok(cfg)
     }
@@ -352,6 +375,19 @@ mod tests {
         assert!(!cfg.collaboration);
         // untouched keys keep defaults
         assert_eq!(cfg.negatives, 1);
+        assert!(cfg.pipeline_transfers);
+        assert!(cfg.residency);
+    }
+
+    #[test]
+    fn transfer_engine_flags_round_trip() {
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\npipeline_transfers = false\nresidency = false\n",
+        )
+        .unwrap();
+        assert!(!cfg.pipeline_transfers);
+        assert!(!cfg.residency);
+        assert!(TrainConfig::from_toml_str("residency = 3\n").is_err());
     }
 
     #[test]

@@ -1,29 +1,52 @@
 //! The GraphVite coordinator: ties parallel online augmentation (CPU
 //! sampler threads), the double-buffered sample-pool pair, the episode
-//! scheduler and the device workers into the paper's full hybrid system
-//! (Figure 1 / Algorithm 3).
+//! scheduler, the pipelined transfer engine and the device workers into
+//! the paper's full hybrid system (Figure 1 / Algorithm 3).
 //!
 //! Thread topology during [`Trainer::train`]:
 //!
 //! ```text
 //!   producer thread ──  fills pool (num_samplers sampler threads)
-//!        │ PoolPair (double buffer, §3.3 collaboration strategy)
+//!        │ PoolPair (double buffer, §3.3 collaboration strategy;
+//!        │           drained pools recycle back — zero realloc)
 //!        ▼
-//!   main thread      ── redistribute pool into n×n BlockGrid,
-//!                       per episode group: gather partitions, send Jobs
+//!   main thread      ── refill pool into n×n BlockGrid (sharded across
+//!                       num_samplers scoped threads, block buffers
+//!                       recycled), then per episode group: plan
+//!                       transfers (residency), gather partitions into
+//!                       recycled buffers, dispatch ALL waves of the
+//!                       group, scatter results as they arrive
 //!        │ mpsc per worker            ▲ results channel
 //!        ▼                            │
 //!   worker threads   ── one per simulated GPU; owns a gpu::Backend
-//!                       (PJRT client+executable or native trainer),
-//!                       draws restricted negatives, trains its block
+//!                       (PJRT client+executable or native trainer) and a
+//!                       residency cache of pinned partitions, draws
+//!                       restricted negatives, trains its block
 //! ```
+//!
+//! **Prefetch fence rule.** Waves inside one episode group are slices of
+//! a latin-square diagonal: mutually row- *and* column-disjoint. So the
+//! coordinator may gather and dispatch wave `w+1` while wave `w` is still
+//! training — nothing wave `w` will scatter overlaps what wave `w+1`
+//! gathers — and only **group boundaries** are fences (the next group
+//! reuses every partition, so all scatters must land first). This is the
+//! `pipeline_transfers` flag; with it off, each wave is drained before
+//! the next is dispatched (the PR-2 serial dispatch). Both orders produce
+//! bitwise-identical embeddings: scatters of orthogonal blocks commute,
+//! per-worker job order is unchanged, and the learning-rate schedule is
+//! driven by *dispatched* samples (known at send time) rather than
+//! received results — see `rust/tests/pipeline_equivalence.rs`.
+//!
+//! Partition movement itself (gathers, scatters, residency planning,
+//! buffer recycling) lives in [`transfer::TransferEngine`]; the §3.4
+//! `fix_context` context cache is the special case the engine's
+//! generalized residency subsumes.
 //!
 //! The coordinator is backend-agnostic: workers construct whatever
 //! [`crate::gpu::Backend`] the config selects (`native`, `simd`, or
 //! `pjrt`) on their own threads, and the only backend-specific fact the
 //! coordinator consumes is the partition padding rule
-//! ([`crate::gpu::planned_capacity`]). Swapping kernels — e.g. the
-//! f32x8-unrolled [`crate::gpu::SimdWorker`] — changes nothing here.
+//! ([`crate::gpu::planned_capacity`]).
 //!
 //! Episode semantics (what the `episodes` counter and `log_every` lines
 //! count): one *episode* = one orthogonal group — for `P` partitions, the
@@ -38,10 +61,14 @@
 //! Ablation flags in [`TrainConfig`](crate::config::TrainConfig) switch
 //! off each paper component: `online_augmentation` (plain edge sampling
 //! instead), `collaboration` (fill and train sequentially), `fix_context`
-//! (transfer context partitions every episode) — these drive Table 6.
+//! (transfer context partitions every episode), `pipeline_transfers` and
+//! `residency` (the PR-3 transfer engine) — the first three drive
+//! Table 6, the last two `bench_pipeline`.
 
+pub mod transfer;
 mod worker;
 
+use std::sync::mpsc;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -50,16 +77,17 @@ use crate::config::{BackendKind, TrainConfig};
 use crate::embedding::{EmbeddingStore, Matrix};
 use crate::graph::Graph;
 use crate::metrics::{Counters, TrainStats};
-use crate::partition::Partitioner;
-use crate::pool::{BlockGrid, PoolPair, SamplePool};
+use crate::partition::{Partitioner, Partitioning};
 use crate::pool::shuffle;
+use crate::pool::{BlockGrid, PoolPair, SamplePool};
 use crate::runtime::ArtifactMeta;
 use crate::sampling::{AugmentConfig, EdgeSampler, NegativeSampler, OnlineAugmenter, RandomWalker};
-use crate::scheduler::EpisodeSchedule;
-use crate::util::rng::Rng;
+use crate::scheduler::{Assignment, EpisodeSchedule};
+use crate::util::rng::{streams, Rng};
 use crate::util::timer::Stopwatch;
 
-use worker::{spawn_workers, Job, JobMsg, JobResult};
+use transfer::{ShipPlan, TransferEngine};
+use worker::{spawn_workers, Job, JobMsg, JobResult, Reply, Shipment};
 
 /// Output of a training run.
 #[derive(Debug)]
@@ -101,10 +129,10 @@ impl Trainer {
     }
 
     /// Train, invoking `checkpoint` after every pool pass (used by the
-    /// Figure-4 performance-curve experiments). Note: with `fix_context`
-    /// the store's *context* matrix is only synchronized at the end of
-    /// training; checkpoints see current vertex embeddings (the ones all
-    /// evaluations use) and stale context rows.
+    /// Figure-4 performance-curve experiments). Worker-resident
+    /// partitions (`fix_context` / `residency`) are synchronized back
+    /// into the store before every checkpoint, so callbacks always see
+    /// current vertex *and* context rows.
     pub fn train_with_callback(&mut self, mut checkpoint: Option<Checkpoint>) -> Result<TrainResult> {
         let cfg = self.config.clone();
         let graph = Arc::clone(&self.graph);
@@ -115,7 +143,12 @@ impl Trainer {
         let num_parts = cfg.partitions();
         let parts = Arc::new(Partitioner::degree_zigzag(&graph, num_parts));
         let neg = Arc::new(NegativeSampler::new(&graph, &parts));
-        let sched = EpisodeSchedule::new(num_parts, cfg.num_workers, cfg.fix_context);
+        let sched = {
+            let s = EpisodeSchedule::new(num_parts, cfg.num_workers, cfg.fix_context);
+            // group order is part of the training trajectory: only the
+            // residency mode pays for the sticky ordering
+            if cfg.residency { s.with_residency_order() } else { s }
+        };
         let artifact: Option<ArtifactMeta> = match cfg.backend {
             BackendKind::Pjrt => {
                 let manifest = crate::runtime::default_manifest()?;
@@ -162,13 +195,6 @@ impl Trainer {
 
             // ---- pool production ----
             let sampling_ref = &sampling;
-            let counters_ref = &counters;
-            let fill_pool = |pool: &mut SamplePool, pool_idx: usize, target: usize| {
-                let t0 = std::time::Instant::now();
-                fill_pool_parallel(sampling_ref, &cfg, &base_rng, pool_idx, target, pool);
-                counters_ref.add(&counters_ref.sampling_nanos, t0.elapsed().as_nanos() as u64);
-            };
-
             let pair = Arc::new(PoolPair::new());
             let producer_handle = if cfg.collaboration {
                 let pair = Arc::clone(&pair);
@@ -178,11 +204,14 @@ impl Trainer {
                 Some(scope.spawn(move || {
                     let mut buf = SamplePool::new();
                     for pool_idx in 0..num_pools {
-                        buf.clear();
-                        let t0 = std::time::Instant::now();
-                        fill_pool_parallel(sampling_ref, &cfg2, &base2, pool_idx, pool_size, &mut buf);
-                        counters2.add(&counters2.sampling_nanos, t0.elapsed().as_nanos() as u64);
-                        buf = pair.publish(buf);
+                        fill_pool_counted(
+                            sampling_ref, &cfg2, &base2, &counters2, pool_idx, pool_size, &mut buf,
+                        );
+                        match pair.publish(buf) {
+                            Some(b) => buf = b,
+                            // consumer abandoned the run (error path)
+                            None => return,
+                        }
                     }
                     pair.finish();
                 }))
@@ -191,123 +220,87 @@ impl Trainer {
             };
 
             // ---- consumption: episodes over each pool ----
-            let consume_pool = |store: &mut EmbeddingStore,
-                                pool: SamplePool,
-                                samples_done: &mut u64,
-                                loss_curve: &mut Vec<f32>|
-             -> Result<()> {
-                counters.add(&counters.samples_generated, pool.len() as u64);
-                let mut grid = BlockGrid::redistribute(&pool, &parts);
-                for g in 0..sched.num_groups() {
-                    let mut ep_loss = 0.0f64;
-                    let mut ep_trained = 0u64;
-                    for w in 0..sched.waves_per_group() {
-                        let wave = sched.wave(g, w);
-                        let lr = cfg.lr
-                            * (1.0 - *samples_done as f32 / total_samples as f32).max(1e-4);
-                        let mut outstanding = 0usize;
-                        for a in &wave {
-                            let block = grid.take_block(a.vid, a.cid);
-                            let vcap = crate::gpu::planned_capacity(
-                                &cfg,
-                                artifact.as_ref(),
-                                parts.part_size(a.vid),
-                            );
-                            let ccap = crate::gpu::planned_capacity(
-                                &cfg,
-                                artifact.as_ref(),
-                                parts.part_size(a.cid),
-                            );
-                            let mut vertex = Vec::new();
-                            store.gather_partition(&parts, a.vid, vcap, Matrix::Vertex, &mut vertex);
-                            counters.add(&counters.bytes_to_device, (vertex.len() * 4) as u64);
-                            let context = if cfg.fix_context && g + w > 0 {
-                                None // resident on the worker since the first episode
-                            } else {
-                                let mut c = Vec::new();
-                                store.gather_partition(&parts, a.cid, ccap, Matrix::Context, &mut c);
-                                counters.add(&counters.bytes_to_device, (c.len() * 4) as u64);
-                                Some(c)
-                            };
-                            let is_last_group =
-                                g == sched.num_groups() - 1 && w == sched.waves_per_group() - 1;
-                            job_txs[a.worker]
-                                .send(JobMsg::Train(Job {
-                                    vid: a.vid,
-                                    cid: a.cid,
-                                    block,
-                                    vertex,
-                                    context,
-                                    return_context: !cfg.fix_context || is_last_group,
-                                    lr,
-                                }))
-                                .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
-                            outstanding += 1;
-                        }
-                        for _ in 0..outstanding {
-                            let res: JobResult = result_rx
-                                .recv()
-                                .map_err(|_| anyhow::anyhow!("workers hung up"))??;
-                            store.scatter_partition(&parts, res.vid, Matrix::Vertex, &res.vertex);
-                            counters.add(&counters.bytes_from_device, (res.vertex.len() * 4) as u64);
-                            if let Some(ctx) = &res.context {
-                                store.scatter_partition(&parts, res.cid, Matrix::Context, ctx);
-                                counters.add(&counters.bytes_from_device, (ctx.len() * 4) as u64);
-                            }
-                            ep_loss += res.loss as f64 * res.trained as f64;
-                            ep_trained += res.trained;
-                            *samples_done += res.trained;
-                        }
-                    }
-                    counters.add(&counters.episodes, 1);
-                    if ep_trained > 0 {
-                        loss_curve.push((ep_loss / ep_trained as f64) as f32);
-                    }
-                    if cfg.log_every > 0 && loss_curve.len() % cfg.log_every == 0 {
-                        eprintln!(
-                            "episode {} loss {:.4} ({}/{} samples)",
-                            loss_curve.len(),
-                            loss_curve.last().unwrap(),
-                            samples_done,
-                            total_samples
-                        );
-                    }
-                }
-                Ok(())
+            let mut runner = EpisodeRunner {
+                cfg: &cfg,
+                parts: &parts,
+                sched: &sched,
+                artifact: artifact.as_ref(),
+                counters: &counters,
+                job_txs: &job_txs,
+                result_rx: &result_rx,
+                engine: TransferEngine::new(&sched, cfg.num_workers, cfg.residency, cfg.fix_context),
+                grid: BlockGrid::new_empty(num_parts),
+                total_samples,
+                samples_planned: 0,
+                outstanding: 0,
             };
 
-            if cfg.collaboration {
-                while let Some(pool) = pair.take() {
-                    consume_pool(&mut store, pool, &mut samples_done, &mut loss_curve)?;
-                    pair.recycle(SamplePool::new());
-                    if let Some(cb) = checkpoint.as_mut() {
-                        cb(samples_done, &store);
+            // Consumption is fallible (fail-loud residency protocol, worker
+            // errors); its error must not propagate before the producer is
+            // unblocked, or the scope's implicit join would hang forever on
+            // a producer parked in PoolPair::publish.
+            let consume_res: Result<()> = (|| {
+                if cfg.collaboration {
+                    while let Some(pool) = pair.take() {
+                        let drained = runner.consume_pool(
+                            &mut store,
+                            pool,
+                            &mut samples_done,
+                            &mut loss_curve,
+                        )?;
+                        // hand the drained allocation back to the producer
+                        pair.recycle(drained);
+                        if let Some(cb) = checkpoint.as_mut() {
+                            runner.sync_residents(&mut store)?;
+                            cb(samples_done, &store);
+                        }
+                    }
+                } else {
+                    let mut buf = SamplePool::new();
+                    for pool_idx in 0..num_pools {
+                        fill_pool_counted(
+                            sampling_ref, &cfg, &base_rng, &counters, pool_idx, pool_size, &mut buf,
+                        );
+                        buf = runner.consume_pool(
+                            &mut store,
+                            std::mem::take(&mut buf),
+                            &mut samples_done,
+                            &mut loss_curve,
+                        )?;
+                        if let Some(cb) = checkpoint.as_mut() {
+                            runner.sync_residents(&mut store)?;
+                            cb(samples_done, &store);
+                        }
                     }
                 }
-            } else {
-                let mut buf = SamplePool::new();
-                for pool_idx in 0..num_pools {
-                    buf.clear();
-                    fill_pool(&mut buf, pool_idx, pool_size);
-                    let pool = std::mem::take(&mut buf);
-                    consume_pool(&mut store, pool, &mut samples_done, &mut loss_curve)?;
-                    if let Some(cb) = checkpoint.as_mut() {
-                        cb(samples_done, &store);
-                    }
-                }
-            }
+                // pull worker-resident partitions back into the store
+                runner.sync_residents(&mut store)
+            })();
 
-            // drain cached contexts (fix_context) + stop workers
+            if consume_res.is_err() {
+                // wake a parked producer; its publish returns None and it exits
+                pair.close();
+            }
             for tx in &job_txs {
                 let _ = tx.send(JobMsg::Stop);
             }
             if let Some(h) = producer_handle {
                 h.join().map_err(|_| anyhow::anyhow!("producer panicked"))?;
             }
+            let mut worker_res: Result<()> = Ok(());
             for h in handles {
-                h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+                let r = h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+                if worker_res.is_ok() {
+                    worker_res = r;
+                }
             }
-            Ok(())
+            // A worker-thread error (backend construction — run_job errors
+            // travel through the result channel instead and land in
+            // consume_res) is the root cause of any subsequent
+            // channel-disconnect error the consumption loop saw: surface
+            // it first so "worker channel closed" never masks it.
+            worker_res?;
+            consume_res
         })?;
 
         train_sw.stop();
@@ -320,6 +313,236 @@ impl Trainer {
             counters: snapshot,
         };
         Ok(TrainResult { embeddings: store, stats })
+    }
+}
+
+/// The coordinator's episode loop over one training run: owns the
+/// transfer engine, the recycled block grid and the dispatch/drain
+/// bookkeeping of the pipelined wave protocol.
+struct EpisodeRunner<'a> {
+    cfg: &'a TrainConfig,
+    parts: &'a Partitioning,
+    sched: &'a EpisodeSchedule,
+    artifact: Option<&'a ArtifactMeta>,
+    counters: &'a Counters,
+    job_txs: &'a [mpsc::Sender<JobMsg>],
+    result_rx: &'a mpsc::Receiver<Result<Reply>>,
+    engine: TransferEngine,
+    grid: BlockGrid,
+    total_samples: u64,
+    /// Positive samples *dispatched* so far. Drives the LR schedule: the
+    /// trained count of a job equals its block length, so this matches
+    /// the result-side count at every wave boundary while being available
+    /// at send time — pipelined and serial dispatch see identical LRs.
+    samples_planned: u64,
+    /// Jobs in flight (dispatched, result not yet absorbed).
+    outstanding: usize,
+}
+
+impl EpisodeRunner<'_> {
+    /// Run all episode groups over one pool; returns the drained pool for
+    /// recycling.
+    fn consume_pool(
+        &mut self,
+        store: &mut EmbeddingStore,
+        pool: SamplePool,
+        samples_done: &mut u64,
+        loss_curve: &mut Vec<f32>,
+    ) -> Result<SamplePool> {
+        self.counters.add(&self.counters.samples_generated, pool.len() as u64);
+        // In collaboration mode the producer's sampler threads are filling
+        // the next pool while we redistribute this one; halve the refill
+        // shards so the boundary doesn't burst to 2x the sampler-core
+        // budget. (Thread count never changes the refill result — the
+        // merge is order-preserving — so this is purely a scheduling
+        // choice.)
+        let refill_threads = if self.cfg.collaboration {
+            (self.cfg.num_samplers / 2).max(1)
+        } else {
+            self.cfg.num_samplers
+        };
+        self.grid
+            .refill(&pool, self.parts, refill_threads, &mut self.engine.block_spare);
+        let sched = self.sched;
+        for &g in sched.ordered_groups() {
+            let mut ep_loss = 0.0f64;
+            let mut ep_trained = 0u64;
+            for w in 0..sched.waves_per_group() {
+                let lr = self.cfg.lr
+                    * (1.0 - self.samples_planned as f32 / self.total_samples as f32).max(1e-4);
+                for a in sched.wave(g, w) {
+                    self.dispatch(store, &a, lr)?;
+                }
+                if self.cfg.pipeline_transfers {
+                    // prefetch mode: scatter whatever has already finished
+                    // and keep dispatching — the group fence below is the
+                    // only blocking wait
+                    while let Some(res) = self.try_recv_result()? {
+                        self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done);
+                    }
+                } else {
+                    // serial (PR-2) dispatch: one wave in flight at a time
+                    while self.outstanding > 0 {
+                        let res = self.recv_result()?;
+                        self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done);
+                    }
+                }
+            }
+            // group fence: the next group's gathers overlap this group's
+            // scatters, so every result must land before moving on
+            while self.outstanding > 0 {
+                let res = self.recv_result()?;
+                self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done);
+            }
+            self.counters.add(&self.counters.episodes, 1);
+            if ep_trained > 0 {
+                loss_curve.push((ep_loss / ep_trained as f64) as f32);
+            }
+            if self.cfg.log_every > 0 && loss_curve.len() % self.cfg.log_every == 0 {
+                eprintln!(
+                    "episode {} loss {:.4} ({}/{} samples)",
+                    loss_curve.len(),
+                    loss_curve.last().unwrap(),
+                    samples_done,
+                    self.total_samples
+                );
+            }
+        }
+        Ok(pool)
+    }
+
+    /// Gather (or residency-elide) one assignment's partitions and send
+    /// the job to its worker.
+    fn dispatch(&mut self, store: &EmbeddingStore, a: &Assignment, lr: f32) -> Result<()> {
+        let block = self.grid.take_block(a.vid, a.cid);
+        self.samples_planned += block.len() as u64;
+        let (vplan, cplan) = self.engine.plan(a);
+        let t0 = std::time::Instant::now();
+        let vertex = self.gather(store, Matrix::Vertex, a.vid, vplan);
+        let context = self.gather(store, Matrix::Context, a.cid, cplan);
+        self.counters
+            .add(&self.counters.gather_nanos, t0.elapsed().as_nanos() as u64);
+        self.job_txs[a.worker]
+            .send(JobMsg::Train(Job { vid: a.vid, cid: a.cid, block, vertex, context, lr }))
+            .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        self.outstanding += 1;
+        Ok(())
+    }
+
+    fn gather(
+        &mut self,
+        store: &EmbeddingStore,
+        matrix: Matrix,
+        pid: usize,
+        plan: ShipPlan,
+    ) -> Shipment {
+        let cap =
+            crate::gpu::planned_capacity(self.cfg, self.artifact, self.parts.part_size(pid));
+        let data = if plan.upload {
+            let mut buf = self.engine.take_f32();
+            store.gather_partition(self.parts, pid, cap, matrix, &mut buf);
+            self.counters
+                .add(&self.counters.bytes_to_device, (buf.len() * 4) as u64);
+            Some(buf)
+        } else {
+            // the worker already holds the current version resident
+            self.counters.add(&self.counters.residency_hits, 1);
+            self.counters
+                .add(&self.counters.bytes_saved, (cap * self.cfg.dim * 4) as u64);
+            None
+        };
+        Shipment { data, src_version: plan.src_version, keep: plan.keep }
+    }
+
+    /// Scatter one job result into the store and recycle its buffers.
+    fn absorb(
+        &mut self,
+        store: &mut EmbeddingStore,
+        res: JobResult,
+        ep_loss: &mut f64,
+        ep_trained: &mut u64,
+        samples_done: &mut u64,
+    ) {
+        let t0 = std::time::Instant::now();
+        if let Some(v) = res.vertex {
+            store.scatter_partition(self.parts, res.vid, Matrix::Vertex, &v);
+            self.counters
+                .add(&self.counters.bytes_from_device, (v.len() * 4) as u64);
+            self.engine.put_f32(v);
+        }
+        if let Some(c) = res.context {
+            store.scatter_partition(self.parts, res.cid, Matrix::Context, &c);
+            self.counters
+                .add(&self.counters.bytes_from_device, (c.len() * 4) as u64);
+            self.engine.put_f32(c);
+        }
+        self.counters
+            .add(&self.counters.scatter_nanos, t0.elapsed().as_nanos() as u64);
+        self.engine.put_block(res.block);
+        *ep_loss += res.loss as f64 * res.trained as f64;
+        *ep_trained += res.trained;
+        *samples_done += res.trained;
+    }
+
+    /// Blocking receive of one training result.
+    fn recv_result(&mut self) -> Result<JobResult> {
+        let reply = self
+            .result_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("workers hung up"))?;
+        self.outstanding -= 1;
+        match reply? {
+            Reply::Job(r) => Ok(r),
+            Reply::Synced(_) => anyhow::bail!("unexpected sync reply mid-episode"),
+        }
+    }
+
+    /// Non-blocking receive (pipelined mode's opportunistic drain).
+    fn try_recv_result(&mut self) -> Result<Option<JobResult>> {
+        match self.result_rx.try_recv() {
+            Ok(reply) => {
+                self.outstanding -= 1;
+                match reply? {
+                    Reply::Job(r) => Ok(Some(r)),
+                    Reply::Synced(_) => anyhow::bail!("unexpected sync reply mid-episode"),
+                }
+            }
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Err(anyhow::anyhow!("workers hung up"))
+            }
+        }
+    }
+
+    /// Fence: pull clones of every worker-resident partition back into
+    /// the store (checkpoints + end of training). Requires no jobs in
+    /// flight.
+    fn sync_residents(&mut self, store: &mut EmbeddingStore) -> Result<()> {
+        assert_eq!(self.outstanding, 0, "sync fence with jobs in flight");
+        for tx in self.job_txs {
+            tx.send(JobMsg::Sync)
+                .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        }
+        for _ in 0..self.job_txs.len() {
+            let reply = self
+                .result_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("workers hung up"))?;
+            match reply? {
+                Reply::Synced(entries) => {
+                    let t0 = std::time::Instant::now();
+                    for part in entries {
+                        store.scatter_partition(self.parts, part.pid, part.matrix, &part.data);
+                        self.counters
+                            .add(&self.counters.bytes_from_device, (part.data.len() * 4) as u64);
+                    }
+                    self.counters
+                        .add(&self.counters.scatter_nanos, t0.elapsed().as_nanos() as u64);
+                }
+                Reply::Job(_) => anyhow::bail!("unexpected job result at sync fence"),
+            }
+        }
+        Ok(())
     }
 }
 
@@ -351,6 +574,23 @@ impl<'g> SamplingShared<'g> {
     }
 }
 
+/// [`fill_pool_parallel`] plus the `sampling_nanos` accounting — the one
+/// fill entry point both the producer thread (collaboration mode) and the
+/// sequential path use.
+fn fill_pool_counted(
+    shared: &SamplingShared<'_>,
+    cfg: &TrainConfig,
+    base_rng: &Rng,
+    counters: &Counters,
+    pool_idx: usize,
+    target: usize,
+    out: &mut SamplePool,
+) {
+    let t0 = std::time::Instant::now();
+    fill_pool_parallel(shared, cfg, base_rng, pool_idx, target, out);
+    counters.add(&counters.sampling_nanos, t0.elapsed().as_nanos() as u64);
+}
+
 /// Fill one pool with `target` samples using `num_samplers` CPU threads
 /// (parallel online augmentation, Algorithm 2), then shuffle (Table 7).
 fn fill_pool_parallel(
@@ -371,7 +611,8 @@ fn fill_pool_parallel(
     let mut parts: Vec<SamplePool> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..num_samplers)
             .map(|i| {
-                let rng = base_rng.split((pool_idx as u64) << 20 | i as u64 | 1 << 40);
+                let rng =
+                    base_rng.stream(streams::SAMPLER, (pool_idx as u64) << 16 | i as u64);
                 scope.spawn(move || {
                     let mut local = SamplePool::with_capacity(per_thread);
                     match (&shared.walker, &shared.departure, &shared.edge_sampler) {
@@ -398,7 +639,7 @@ fn fill_pool_parallel(
         out.append(p);
     }
     out.truncate(target);
-    let mut rng = base_rng.split(0xF00D ^ pool_idx as u64);
+    let mut rng = base_rng.stream(streams::SHUFFLE, pool_idx as u64);
     shuffle::shuffle(cfg.shuffle, out, cfg.augmentation_distance.max(2), &mut rng);
 }
 
@@ -459,15 +700,18 @@ mod tests {
     #[test]
     fn ablations_run() {
         let g = generators::barabasi_albert(200, 3, 4);
-        for (aug, collab, fixc) in [
-            (false, true, true),
-            (true, false, false),
-            (false, false, false),
+        for (aug, collab, fixc, pipe, resi) in [
+            (false, true, true, true, true),
+            (true, false, false, false, true),
+            (false, false, false, true, false),
+            (true, true, true, false, false),
         ] {
             let cfg = TrainConfig {
                 online_augmentation: aug,
                 collaboration: collab,
                 fix_context: fixc,
+                pipeline_transfers: pipe,
+                residency: resi,
                 epochs: 1,
                 ..small_cfg()
             };
@@ -481,21 +725,31 @@ mod tests {
     fn more_partitions_than_workers() {
         // paper section 3.2: "any number of partitions greater than n",
         // processed in subgroups of n orthogonal blocks per episode.
+        //
+        // The micro-F1 gate is empirical, so it is swept over PINNED seeds
+        // and asserted on the pass rate (flaky-threshold groundwork, see
+        // ROADMAP "Flaky-threshold audit"): pipeline corruption collapses
+        // every seed to ~chance, while a single unlucky seed may dip.
         let g = generators::planted_partition(400, 4, 16.0, 0.05, 23);
-        let cfg = TrainConfig {
-            num_workers: 2,
-            num_partitions: 6,
-            fix_context: false,
-            epochs: 120,
-            ..small_cfg()
-        };
-        let mut t = Trainer::new(g.clone(), cfg).unwrap();
-        let r = t.train().unwrap();
-        assert!(r.stats.counters.samples_trained > 0);
-        assert!(r.stats.final_loss.is_finite());
-        // quality must not collapse vs the square grid
-        let rep = crate::experiments::classify(&r.embeddings, &g, 0.05, 7);
-        assert!(rep.micro_f1 > 0.4, "micro {}", rep.micro_f1);
+        let stats = crate::util::gate::seed_sweep(&[42, 43, 44], |seed| {
+            let cfg = TrainConfig {
+                num_workers: 2,
+                num_partitions: 6,
+                fix_context: false,
+                epochs: 120,
+                seed,
+                ..small_cfg()
+            };
+            let mut t = Trainer::new(g.clone(), cfg).unwrap();
+            let r = t.train().unwrap();
+            assert!(r.stats.counters.samples_trained > 0);
+            assert!(r.stats.final_loss.is_finite());
+            crate::experiments::classify(&r.embeddings, &g, 0.05, 7).micro_f1
+        });
+        eprintln!("{}", stats.report("more_partitions_than_workers.micro_f1", 0.4));
+        // quality must not collapse vs the square grid: at least 2 of the
+        // 3 pinned seeds must clear the floor
+        assert!(stats.pass_rate(0.4) >= 2.0 / 3.0, "{:?}", stats.scores);
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! Host side of the pipelined transfer engine: partition residency
+//! planning and the zero-realloc buffer free-lists.
+//!
+//! The coordinator walks the episode schedule in a fixed dispatch order
+//! (the same order every pool pass — [`EpisodeSchedule::execution_sequence`]).
+//! That makes data movement *plannable*: for every block dispatch the
+//! engine knows which worker touches each partition **next**, so it can
+//! decide, deterministically and ahead of time,
+//!
+//! * **upload elision** — skip gathering/shipping a partition whose
+//!   current version is already resident on the target worker (counted in
+//!   `residency_hits` / `bytes_saved`), and
+//! * **download elision** — tell the worker to keep the trained partition
+//!   resident (`Shipment::keep`) exactly when the partition's next block
+//!   runs on that same worker, so the buffer never crosses the bus at all.
+//!
+//! Correctness rests on two invariants. (1) *Versioning*: every touch of
+//! a partition bumps its version; a worker may only train on a resident
+//! copy whose version matches the coordinator's record (the worker
+//! verifies this and fails loudly — no silent stale training). (2)
+//! *Single holder*: `keep` is only set when the next toucher is the same
+//! worker, so at any fence at most one worker holds a given partition and
+//! that copy is the newest. Host-side staleness is repaired at sync
+//! fences (the worker protocol's `JobMsg::Sync`): checkpoints and the
+//! end of training pull clones of all resident partitions back into the
+//! store.
+//!
+//! With `residency = false` the engine reproduces the PR-2 transfer
+//! pattern exactly (everything re-shipped per episode, except the §3.4
+//! `fix_context` context pinning), which is what the counter-based
+//! regression test in `rust/tests/pipeline_equivalence.rs` compares
+//! against.
+//!
+//! The free-lists close the zero-realloc loop: gather buffers come from
+//! `f32_spare` (fed by scattered results), block buffers return from
+//! workers through `block_spare` into
+//! [`BlockGrid::refill`](crate::pool::BlockGrid::refill), and the drained
+//! sample pool itself is recycled through the
+//! [`PoolPair`](crate::pool::PoolPair).
+
+use crate::embedding::Matrix;
+use crate::scheduler::{Assignment, EpisodeSchedule};
+
+/// The engine's decision for one partition transfer of one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShipPlan {
+    /// Gather + ship the partition (false = residency hit, upload elided).
+    pub upload: bool,
+    /// Worker keeps the trained buffer resident instead of returning it.
+    pub keep: bool,
+    /// Version of the copy the worker trains on (its output is
+    /// `src_version + 1`).
+    pub src_version: u64,
+}
+
+/// Deterministic residency planner + buffer free-lists (one per training
+/// run, owned by the coordinator's episode loop).
+#[derive(Debug)]
+pub struct TransferEngine {
+    num_parts: usize,
+    residency: bool,
+    legacy_fix_context: bool,
+    /// Current (newest) version per partition; index = `idx(matrix, pid)`.
+    latest: Vec<u64>,
+    /// resident[worker][idx] = version that worker holds, if any.
+    resident: Vec<Vec<Option<u64>>>,
+    /// Worker that touches the dispatched assignment's *vertex* partition
+    /// next (cyclically, the schedule repeats every pass), per dispatch
+    /// slot of one pass.
+    next_worker_v: Vec<usize>,
+    /// Same for the context partition.
+    next_worker_c: Vec<usize>,
+    cursor: usize,
+    /// Recycled gather/result buffers (padded partition rows).
+    pub f32_spare: Vec<Vec<f32>>,
+    /// Recycled block buffers, fed back into `BlockGrid::refill`.
+    pub block_spare: Vec<Vec<(i32, i32)>>,
+}
+
+impl TransferEngine {
+    pub fn new(
+        sched: &EpisodeSchedule,
+        num_workers: usize,
+        residency: bool,
+        fix_context: bool,
+    ) -> Self {
+        let seq = sched.execution_sequence();
+        let p = sched.num_parts();
+        let mut next_worker_v = vec![0usize; seq.len()];
+        let mut next_worker_c = vec![0usize; seq.len()];
+        let fill = |next: &mut Vec<usize>, part_of: &dyn Fn(&Assignment) -> usize| {
+            for pid in 0..p {
+                let touches: Vec<usize> = seq
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, a)| part_of(a) == pid)
+                    .map(|(t, _)| t)
+                    .collect();
+                for (k, &t) in touches.iter().enumerate() {
+                    let succ = touches[(k + 1) % touches.len()];
+                    next[t] = seq[succ].worker;
+                }
+            }
+        };
+        fill(&mut next_worker_v, &|a| a.vid);
+        fill(&mut next_worker_c, &|a| a.cid);
+        TransferEngine {
+            num_parts: p,
+            residency,
+            legacy_fix_context: !residency && fix_context,
+            latest: vec![0; 2 * p],
+            resident: vec![vec![None; 2 * p]; num_workers],
+            next_worker_v,
+            next_worker_c,
+            cursor: 0,
+            f32_spare: Vec::new(),
+            block_spare: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn idx(&self, matrix: Matrix, pid: usize) -> usize {
+        match matrix {
+            Matrix::Vertex => pid,
+            Matrix::Context => self.num_parts + pid,
+        }
+    }
+
+    /// Plan the (vertex, context) transfers of the next assignment in
+    /// dispatch order. Must be called exactly once per dispatched job, in
+    /// schedule order — the cursor tracks the position in the pass.
+    pub fn plan(&mut self, a: &Assignment) -> (ShipPlan, ShipPlan) {
+        let t = self.cursor;
+        self.cursor = (self.cursor + 1) % self.next_worker_v.len();
+        let next_v = self.next_worker_v[t];
+        let next_c = self.next_worker_c[t];
+        let v = self.plan_part(Matrix::Vertex, a.vid, a.worker, next_v);
+        let c = self.plan_part(Matrix::Context, a.cid, a.worker, next_c);
+        (v, c)
+    }
+
+    fn plan_part(
+        &mut self,
+        matrix: Matrix,
+        pid: usize,
+        worker: usize,
+        next_worker: usize,
+    ) -> ShipPlan {
+        let i = self.idx(matrix, pid);
+        let cur = self.latest[i];
+        let upload = self.resident[worker][i] != Some(cur);
+        let keep = if self.residency {
+            next_worker == worker
+        } else {
+            // PR-2 semantics: only the §3.4 context cache pins anything
+            matrix == Matrix::Context && self.legacy_fix_context
+        };
+        self.latest[i] = cur + 1;
+        self.resident[worker][i] = if keep { Some(cur + 1) } else { None };
+        ShipPlan { upload, keep, src_version: cur }
+    }
+
+    /// Take a recycled f32 buffer for a partition gather.
+    pub fn take_f32(&mut self) -> Vec<f32> {
+        self.f32_spare.pop().unwrap_or_default()
+    }
+
+    /// Return a scattered result buffer to the free-list.
+    pub fn put_f32(&mut self, buf: Vec<f32>) {
+        self.f32_spare.push(buf);
+    }
+
+    /// Return a spent block buffer to the free-list (fed to
+    /// `BlockGrid::refill` on the next pool pass).
+    pub fn put_block(&mut self, mut block: Vec<(i32, i32)>) {
+        block.clear();
+        self.block_spare.push(block);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive `passes` full pool passes through an engine, returning the
+    /// per-pass count of uploads (vertex + context).
+    fn uploads_per_pass(
+        sched: &EpisodeSchedule,
+        num_workers: usize,
+        residency: bool,
+        fix_context: bool,
+        passes: usize,
+    ) -> Vec<usize> {
+        let mut engine = TransferEngine::new(sched, num_workers, residency, fix_context);
+        let seq = sched.execution_sequence();
+        (0..passes)
+            .map(|_| {
+                seq.iter()
+                    .map(|a| {
+                        let (v, c) = engine.plan(a);
+                        usize::from(v.upload) + usize::from(c.upload)
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn no_residency_ships_everything_every_pass() {
+        let sched = EpisodeSchedule::new(4, 2, false);
+        // 16 assignments per pass, 2 uploads each
+        assert_eq!(uploads_per_pass(&sched, 2, false, false, 3), vec![32, 32, 32]);
+    }
+
+    #[test]
+    fn legacy_fix_context_uploads_context_once() {
+        let sched = EpisodeSchedule::new(2, 2, true);
+        // per pass: 4 assignments; vertex always shipped (4); context
+        // shipped only on first-ever touch (2 in pass one, 0 after)
+        assert_eq!(uploads_per_pass(&sched, 2, false, true, 3), vec![6, 4, 4]);
+    }
+
+    #[test]
+    fn residency_order_halves_context_and_pins_vertex() {
+        let sched = EpisodeSchedule::new(4, 2, false).with_residency_order();
+        // Vertex partitions are sticky to workers under the standard
+        // schedule (vid = slot): 4 first-touch uploads in pass one, 0
+        // after. Context partitions re-upload only at the 2 residue-class
+        // boundaries per pass: 8 context uploads per pass (vs 16).
+        assert_eq!(uploads_per_pass(&sched, 2, true, false, 3), vec![12, 8, 8]);
+    }
+
+    #[test]
+    fn keep_is_only_set_for_same_worker_successor() {
+        let sched = EpisodeSchedule::new(4, 2, false).with_residency_order();
+        let mut engine = TransferEngine::new(&sched, 2, true, false);
+        let seq = sched.execution_sequence();
+        // simulate worker caches and verify the single-holder invariant
+        let mut holder: Vec<Option<usize>> = vec![None; 8]; // (matrix, pid)
+        for pass in 0..2 {
+            for a in &seq {
+                let (v, c) = engine.plan(a);
+                for (plan, idx) in [(v, a.vid), (c, 4 + a.cid)] {
+                    if !plan.upload {
+                        assert_eq!(
+                            holder[idx],
+                            Some(a.worker),
+                            "pass {pass}: elided upload but worker {} does not hold {idx}",
+                            a.worker
+                        );
+                    }
+                    holder[idx] = plan.keep.then_some(a.worker);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn free_lists_recycle() {
+        let sched = EpisodeSchedule::new(2, 2, false);
+        let mut engine = TransferEngine::new(&sched, 2, true, false);
+        assert!(engine.take_f32().is_empty());
+        let mut buf = engine.take_f32();
+        buf.resize(128, 1.0);
+        engine.put_f32(buf);
+        assert!(engine.take_f32().capacity() >= 128);
+        engine.put_block(vec![(1, 2), (3, 4)]);
+        let b = engine.block_spare.pop().unwrap();
+        assert!(b.is_empty() && b.capacity() >= 2, "cleared but capacity kept");
+    }
+}

@@ -3,6 +3,19 @@
 //! [`crate::gpu::create_backend`]), receives block jobs, draws its
 //! restricted negatives (paper §3.2 — only from the resident context
 //! partition), trains, and ships updated partitions back.
+//!
+//! **Residency protocol** (paper §3.4 generalized — see
+//! [`crate::coordinator::transfer`] for the host side). Each partition a
+//! job touches arrives as a [`Shipment`]: either the gathered rows
+//! (`data: Some`) or an instruction to reuse the worker-resident copy
+//! (`data: None` + the version that copy must carry; a mismatch is a
+//! protocol bug and fails the run rather than training on stale rows).
+//! After training, `keep` decides whether the updated buffer stays in the
+//! worker's [`ResidencyCache`] (the coordinator knows the next block
+//! touching it runs here) or ships back in the [`JobResult`]. A
+//! [`JobMsg::Sync`] fence makes the worker reply with *clones* of every
+//! resident partition without evicting, so the coordinator can
+//! synchronize the host store at checkpoints and at end of training.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -11,11 +24,27 @@ use std::thread::{Scope, ScopedJoinHandle};
 use anyhow::Result;
 
 use crate::config::TrainConfig;
+use crate::embedding::Matrix;
 use crate::gpu::{create_backend, Backend, ChunkPlan};
 use crate::metrics::Counters;
 use crate::runtime::ArtifactMeta;
 use crate::sampling::NegativeSampler;
-use crate::util::rng::Rng;
+use crate::util::rng::{streams, Rng};
+
+/// One partition transfer of a [`Job`] (host side planned by
+/// [`crate::coordinator::transfer::TransferEngine`]).
+pub struct Shipment {
+    /// Gathered padded partition rows, or `None` = train on the resident
+    /// copy (residency hit: the upload was elided).
+    pub data: Option<Vec<f32>>,
+    /// Version of the copy the worker trains on. For `data: None` the
+    /// resident entry must carry exactly this version.
+    pub src_version: u64,
+    /// Keep the updated buffer resident (tagged `src_version + 1`)
+    /// instead of returning it — the coordinator routes the partition's
+    /// next block to this same worker.
+    pub keep: bool,
+}
 
 /// A block-training job.
 pub struct Job {
@@ -23,34 +52,92 @@ pub struct Job {
     pub cid: usize,
     /// Partition-local (u, v) positive samples of block (vid, cid).
     pub block: Vec<(i32, i32)>,
-    /// Padded vertex partition rows.
-    pub vertex: Vec<f32>,
-    /// Padded context partition rows; `None` = reuse the worker-resident
-    /// copy (bus-usage optimization, §3.4).
-    pub context: Option<Vec<f32>>,
-    /// Ship the context partition back with the result (off while the
-    /// context stays pinned to this worker).
-    pub return_context: bool,
+    /// Vertex partition transfer.
+    pub vertex: Shipment,
+    /// Context partition transfer.
+    pub context: Shipment,
     pub lr: f32,
 }
 
 pub enum JobMsg {
     Train(Job),
+    /// Fence: reply with clones of all resident partitions (cache kept).
+    Sync,
     Stop,
 }
 
-/// Worker response to one job.
+/// One partition held in a worker's [`ResidencyCache`] (also the wire
+/// format of a [`Reply::Synced`] entry).
+#[derive(Debug, Clone)]
+pub struct ResidentPart {
+    pub matrix: Matrix,
+    pub pid: usize,
+    pub version: u64,
+    pub data: Vec<f32>,
+}
+
+/// Worker response to one training job. (Version tags travel only
+/// host→device: the worker verifies them in `resolve`, and a returned
+/// buffer is by construction the partition's newest copy, so results
+/// carry no version.)
 pub struct JobResult {
     pub vid: usize,
     pub cid: usize,
-    pub vertex: Vec<f32>,
+    /// Updated vertex rows, `None` when kept resident (`Shipment::keep`).
+    pub vertex: Option<Vec<f32>>,
+    /// Updated context rows, `None` when kept resident.
     pub context: Option<Vec<f32>>,
+    /// The job's (emptied) block buffer, returned for the coordinator's
+    /// free-list (zero-realloc block movement).
+    pub block: Vec<(i32, i32)>,
     pub loss: f32,
     /// Real (unpadded) positive samples trained.
     pub trained: u64,
 }
 
-type ResultTx = mpsc::Sender<Result<JobResult>>;
+/// Everything a worker sends back on the shared result channel.
+pub enum Reply {
+    Job(JobResult),
+    Synced(Vec<ResidentPart>),
+}
+
+type ResultTx = mpsc::Sender<Result<Reply>>;
+
+/// Per-worker cache of partitions kept resident between jobs. At most one
+/// entry per (matrix, pid); across the whole worker pool at most one
+/// worker holds any partition (the coordinator only sets `keep` when it
+/// routes the partition's next block to the same worker).
+#[derive(Debug, Default)]
+struct ResidencyCache {
+    entries: Vec<ResidentPart>,
+}
+
+impl ResidencyCache {
+    fn take(&mut self, matrix: Matrix, pid: usize) -> Option<ResidentPart> {
+        let i = self
+            .entries
+            .iter()
+            .position(|e| e.matrix == matrix && e.pid == pid)?;
+        Some(self.entries.swap_remove(i))
+    }
+
+    fn insert(&mut self, part: ResidentPart) {
+        debug_assert!(
+            !self
+                .entries
+                .iter()
+                .any(|e| e.matrix == part.matrix && e.pid == part.pid),
+            "duplicate residency entry for {:?} partition {}",
+            part.matrix,
+            part.pid
+        );
+        self.entries.push(part);
+    }
+
+    fn snapshot(&self) -> Vec<ResidentPart> {
+        self.entries.clone()
+    }
+}
 
 /// Spawn `num_workers` device threads inside `scope`. Returns join
 /// handles, per-worker job senders, and the shared result receiver.
@@ -64,9 +151,9 @@ pub fn spawn_workers<'scope, 'env>(
 ) -> (
     Vec<ScopedJoinHandle<'scope, Result<()>>>,
     Vec<mpsc::Sender<JobMsg>>,
-    mpsc::Receiver<Result<JobResult>>,
+    mpsc::Receiver<Result<Reply>>,
 ) {
-    let (result_tx, result_rx) = mpsc::channel::<Result<JobResult>>();
+    let (result_tx, result_rx) = mpsc::channel::<Result<Reply>>();
     let mut handles = Vec::with_capacity(cfg.num_workers);
     let mut job_txs = Vec::with_capacity(cfg.num_workers);
     for i in 0..cfg.num_workers {
@@ -75,7 +162,7 @@ pub fn spawn_workers<'scope, 'env>(
         let result_tx = result_tx.clone();
         let neg = Arc::clone(&neg);
         let counters = Arc::clone(&counters);
-        let rng = base_rng.split(0xBEEF ^ (i as u64));
+        let rng = base_rng.stream(streams::WORKER, i as u64);
         let cfg = cfg.clone();
         let artifact = artifact.cloned();
         handles.push(scope.spawn(move || {
@@ -100,30 +187,78 @@ fn worker_loop(
     // one client per simulated GPU (like one CUDA context per device).
     let mut backend = create_backend(&cfg, artifact.as_ref())?;
 
-    // fix_context residency: (cid, padded context rows)
-    let mut ctx_cache: Option<(usize, Vec<f32>)> = None;
+    // partitions pinned to this worker by the coordinator's keep flags
+    let mut cache = ResidencyCache::default();
     // reusable chunk scratch (avoids 3 Vec allocations per chunk)
     let mut scratch = ChunkPlan::default();
 
     while let Ok(msg) = rx.recv() {
-        let job = match msg {
-            JobMsg::Train(job) => job,
+        let reply = match msg {
+            JobMsg::Train(job) => run_job(
+                backend.as_mut(),
+                &neg,
+                &counters,
+                &mut rng,
+                &mut cache,
+                &mut scratch,
+                job,
+            )
+            .map(Reply::Job),
+            JobMsg::Sync => Ok(Reply::Synced(cache.snapshot())),
             JobMsg::Stop => break,
         };
-        let out = run_job(
-            backend.as_mut(),
-            &neg,
-            &counters,
-            &mut rng,
-            &mut ctx_cache,
-            &mut scratch,
-            job,
-        );
-        if tx.send(out).is_err() {
+        if tx.send(reply).is_err() {
             break; // coordinator gone
         }
     }
     Ok(())
+}
+
+/// Resolve a [`Shipment`] to the buffer the backend trains on, returning
+/// `(out_version, buffer)` — `out_version` is what the buffer carries
+/// after this job.
+fn resolve(
+    cache: &mut ResidencyCache,
+    matrix: Matrix,
+    pid: usize,
+    ship: &mut Shipment,
+) -> Result<(u64, Vec<f32>)> {
+    let buf = match ship.data.take() {
+        Some(d) => d,
+        None => {
+            let part = cache.take(matrix, pid).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "worker asked to reuse non-resident {matrix:?} partition {pid}"
+                )
+            })?;
+            anyhow::ensure!(
+                part.version == ship.src_version,
+                "resident {matrix:?} partition {pid} has version {} but the \
+                 coordinator expected {}",
+                part.version,
+                ship.src_version
+            );
+            part.data
+        }
+    };
+    Ok((ship.src_version + 1, buf))
+}
+
+/// Keep the trained buffer resident or hand it back for the result.
+fn stash(
+    cache: &mut ResidencyCache,
+    matrix: Matrix,
+    pid: usize,
+    version: u64,
+    data: Vec<f32>,
+    keep: bool,
+) -> Option<Vec<f32>> {
+    if keep {
+        cache.insert(ResidentPart { matrix, pid, version, data });
+        None
+    } else {
+        Some(data)
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -132,24 +267,15 @@ fn run_job(
     neg: &NegativeSampler,
     counters: &Counters,
     rng: &mut Rng,
-    ctx_cache: &mut Option<(usize, Vec<f32>)>,
+    cache: &mut ResidencyCache,
     scratch: &mut ChunkPlan,
     job: Job,
 ) -> Result<JobResult> {
-    let Job { vid, cid, block, mut vertex, context, return_context, lr } = job;
-    // resolve the context partition: shipped with the job or resident
-    let mut ctx = match context {
-        Some(c) => c,
-        None => match ctx_cache.take() {
-            Some((cached_cid, c)) if cached_cid == cid => c,
-            other => {
-                anyhow::bail!(
-                    "worker asked to reuse context {cid} but cache holds {:?}",
-                    other.map(|(c, _)| c)
-                )
-            }
-        },
-    };
+    let Job { vid, cid, mut block, mut vertex, mut context, lr } = job;
+    let keep_v = vertex.keep;
+    let keep_c = context.keep;
+    let (v_version, mut vbuf) = resolve(cache, Matrix::Vertex, vid, &mut vertex)?;
+    let (c_version, mut cbuf) = resolve(cache, Matrix::Context, cid, &mut context)?;
 
     let trained = block.len() as u64;
     let loss = if backend.batched_upload() {
@@ -158,7 +284,7 @@ fn run_job(
         // paper's transfer pattern), not per chunk.
         let chunks = plan_chunks(&*backend, neg, cid, &block, lr, rng);
         let t0 = std::time::Instant::now();
-        let loss = backend.train_chunks(&mut vertex, &mut ctx, &chunks, counters)?;
+        let loss = backend.train_chunks(&mut vbuf, &mut cbuf, &chunks, counters)?;
         counters.add(&counters.device_nanos, t0.elapsed().as_nanos() as u64);
         loss
     } else {
@@ -174,8 +300,8 @@ fn run_job(
             let real = plan_chunk_into(scratch, chunk_sz, k, neg, cid, &block, at, lr, rng);
             let t0 = std::time::Instant::now();
             let loss = backend.train_chunks(
-                &mut vertex,
-                &mut ctx,
+                &mut vbuf,
+                &mut cbuf,
                 std::slice::from_ref(scratch),
                 counters,
             )?;
@@ -188,13 +314,10 @@ fn run_job(
     };
     counters.add(&counters.samples_trained, trained);
 
-    let context_out = if return_context {
-        Some(ctx)
-    } else {
-        *ctx_cache = Some((cid, ctx));
-        None
-    };
-    Ok(JobResult { vid, cid, vertex, context: context_out, loss, trained })
+    let vertex_out = stash(cache, Matrix::Vertex, vid, v_version, vbuf, keep_v);
+    let context_out = stash(cache, Matrix::Context, cid, c_version, cbuf, keep_c);
+    block.clear(); // contents are spent; the allocation rides back
+    Ok(JobResult { vid, cid, vertex: vertex_out, context: context_out, block, loss, trained })
 }
 
 /// Fill `plan` with the chunk starting at `at`: `chunk_sz` positives
@@ -296,5 +419,40 @@ mod tests {
         let backend = NativeWorker::new(4, 16, 1, 5.0);
         let mut rng = Rng::new(2);
         assert!(plan_chunks(&backend, &neg, 1, &[], 0.1, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn residency_cache_take_insert_snapshot() {
+        let mut cache = ResidencyCache::default();
+        cache.insert(ResidentPart {
+            matrix: Matrix::Context,
+            pid: 1,
+            version: 3,
+            data: vec![1.0, 2.0],
+        });
+        assert!(cache.take(Matrix::Vertex, 1).is_none(), "matrices are distinct keys");
+        let snap = cache.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].version, 3);
+        let part = cache.take(Matrix::Context, 1).unwrap();
+        assert_eq!(part.data, vec![1.0, 2.0]);
+        assert!(cache.take(Matrix::Context, 1).is_none(), "take evicts");
+    }
+
+    #[test]
+    fn resolve_rejects_version_mismatch() {
+        let mut cache = ResidencyCache::default();
+        cache.insert(ResidentPart {
+            matrix: Matrix::Vertex,
+            pid: 0,
+            version: 2,
+            data: vec![0.0; 4],
+        });
+        let mut ship = Shipment { data: None, src_version: 5, keep: false };
+        let err = resolve(&mut cache, Matrix::Vertex, 0, &mut ship).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+        // and reuse of a partition that was never kept fails loudly
+        let mut ship = Shipment { data: None, src_version: 0, keep: false };
+        assert!(resolve(&mut cache, Matrix::Context, 3, &mut ship).is_err());
     }
 }

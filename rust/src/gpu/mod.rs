@@ -100,6 +100,12 @@ pub trait Backend {
 /// constructing a backend (backends are built on their worker threads,
 /// after the coordinator has already gathered the padded partitions),
 /// and backends receive buffers sized by it.
+///
+/// The transfer engine's residency protocol additionally relies on this
+/// being a pure function of its arguments: a partition's capacity never
+/// changes between episodes, so a worker-resident buffer is always the
+/// exact size the partition's next job (and the final sync scatter)
+/// expects.
 pub fn planned_capacity(
     cfg: &TrainConfig,
     artifact: Option<&ArtifactMeta>,

@@ -99,6 +99,8 @@ TRAIN OPTIONS (defaults follow paper section 4.3):
   --no-collaboration    disable the double-buffered pools
   --no-augmentation     plain edge sampling instead of online augmentation
   --no-fix-context      re-transfer context partitions every episode
+  --no-pipeline         serial wave dispatch (wait for each wave's results)
+  --no-residency        re-ship partitions every episode (no worker pinning)
   --output FILE         save embeddings (binary; .txt for text format)
 
 GENERATE OPTIONS:
@@ -186,6 +188,12 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
     if args.flag("no-fix-context") {
         cfg.fix_context = false;
     }
+    if args.flag("no-pipeline") {
+        cfg.pipeline_transfers = false;
+    }
+    if args.flag("no-residency") {
+        cfg.residency = false;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -220,10 +228,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.final_loss
     );
     eprintln!(
-        "bus: {} to device, {} from device over {} episodes",
+        "bus: {} to device, {} from device over {} episodes \
+         ({} residency hits saved {})",
         human_bytes(s.counters.bytes_to_device),
         human_bytes(s.counters.bytes_from_device),
-        s.counters.episodes
+        s.counters.episodes,
+        s.counters.residency_hits,
+        human_bytes(s.counters.bytes_saved)
     );
 
     if let Some(out) = args.get("output") {

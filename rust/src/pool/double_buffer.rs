@@ -22,6 +22,8 @@ struct State {
     free: Option<SamplePool>,
     /// Producer signalled end of stream.
     done: bool,
+    /// Consumer abandoned the stream (error path): producer must stop.
+    closed: bool,
 }
 
 /// Shared double-buffer exchange between one producer and one consumer.
@@ -41,21 +43,27 @@ impl PoolPair {
 
     /// Producer: publish a filled pool; blocks while the previous one is
     /// still unconsumed (keeps exactly 2 pools alive). Returns an empty
-    /// buffer to refill, or None if the consumer hung up… (consumer never
-    /// hangs up in our protocol; kept simple).
-    pub fn publish(&self, pool: SamplePool) -> SamplePool {
+    /// buffer to refill, or `None` once the consumer has [`Self::close`]d
+    /// the pair (its error path) — the producer must stop producing.
+    pub fn publish(&self, pool: SamplePool) -> Option<SamplePool> {
         let mut st = self.state.lock().unwrap();
-        while st.ready.is_some() {
+        while st.ready.is_some() && !st.closed {
             st = self.cond.wait(st).unwrap();
+        }
+        if st.closed {
+            return None;
         }
         st.ready = Some(pool);
         self.cond.notify_all();
-        while st.free.is_none() {
+        while st.free.is_none() && !st.closed {
             st = self.cond.wait(st).unwrap();
+        }
+        if st.closed {
+            return None;
         }
         let mut buf = st.free.take().unwrap();
         buf.clear();
-        buf
+        Some(buf)
     }
 
     /// Consumer: take the next filled pool, blocking until one is ready.
@@ -87,6 +95,17 @@ impl PoolPair {
         st.done = true;
         self.cond.notify_all();
     }
+
+    /// Consumer: abandon the stream (error path). Wakes and permanently
+    /// unblocks a producer parked in [`Self::publish`], which then
+    /// returns `None` — without this, an error on the consumer side
+    /// would leave the producer blocked forever and the training scope
+    /// would hang in its implicit join instead of surfacing the error.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cond.notify_all();
+    }
 }
 
 #[cfg(test)]
@@ -104,7 +123,7 @@ mod tests {
                 for round in 0..5u32 {
                     buf.clear();
                     buf.extend((0..100).map(|i| (round, i)));
-                    buf = pair.publish(buf);
+                    buf = pair.publish(buf).expect("consumer alive");
                 }
                 pair.finish();
             })
@@ -117,6 +136,34 @@ mod tests {
         }
         producer.join().unwrap();
         assert_eq!(rounds, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn close_unblocks_parked_producer() {
+        // the consumer-error path: producer is parked in publish (second
+        // pool, first never taken); close() must wake it with None so the
+        // thread exits instead of hanging the scope join
+        let pair = Arc::new(PoolPair::new());
+        let p2 = Arc::clone(&pair);
+        let producer = std::thread::spawn(move || {
+            let mut buf = SamplePool::new();
+            let mut published = 0u32;
+            loop {
+                buf.push((0, 0));
+                match p2.publish(buf) {
+                    Some(b) => {
+                        buf = b;
+                        published += 1;
+                    }
+                    None => break,
+                }
+            }
+            published
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        pair.close();
+        let published = producer.join().unwrap();
+        assert!(published <= 1, "producer kept publishing after close: {published}");
     }
 
     #[test]
@@ -137,7 +184,7 @@ mod tests {
             let mut buf = SamplePool::new();
             for _ in 0..3 {
                 buf.push((1, 1));
-                buf = p2.publish(buf);
+                buf = p2.publish(buf).expect("consumer alive");
             }
             p2.finish();
         });

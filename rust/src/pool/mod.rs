@@ -49,25 +49,109 @@ pub struct BlockGrid {
     blocks: Vec<Vec<(i32, i32)>>,
 }
 
+/// Below this pool size the parallel redistribute's thread-spawn overhead
+/// outweighs the scan, so [`BlockGrid::refill`] falls back to one thread.
+const PARALLEL_REDISTRIBUTE_MIN: usize = 1 << 15;
+
 impl BlockGrid {
+    /// An empty `n × n` grid ready for [`Self::refill`] (the coordinator
+    /// keeps one alive across pool passes so block buffers recycle).
+    pub fn new_empty(n: usize) -> Self {
+        assert!(n >= 1);
+        BlockGrid { n, blocks: vec![Vec::new(); n * n] }
+    }
+
     /// Algorithm 3 `Redistribute(pool)`: scatter pool samples into grid
     /// blocks by (part(u), part(v)), translating to local rows.
     ///
     /// Order within each block preserves pool order — the shuffle applied
     /// to the pool carries through to each block's training order.
     pub fn redistribute(pool: &[(u32, u32)], parts: &Partitioning) -> Self {
-        let n = parts.num_parts();
-        let mut blocks: Vec<Vec<(i32, i32)>> = vec![Vec::new(); n * n];
-        // pre-size: expected pool.len() / n^2 per block
-        let expect = pool.len() / (n * n) + 1;
-        for b in blocks.iter_mut() {
-            b.reserve(expect);
+        let mut grid = Self::new_empty(parts.num_parts());
+        grid.refill(pool, parts, 1, &mut Vec::new());
+        grid
+    }
+
+    /// Redistribute `pool` into this grid in place, reusing the grid's
+    /// own block allocations plus buffers from the `spare` free-list
+    /// (blocks that went out to device workers come back through it —
+    /// the zero-realloc loop of the transfer engine). Emptied shard
+    /// buffers are returned to `spare` for the next pool pass.
+    pub fn refill(
+        &mut self,
+        pool: &[(u32, u32)],
+        parts: &Partitioning,
+        threads: usize,
+        spare: &mut Vec<Vec<(i32, i32)>>,
+    ) {
+        assert_eq!(self.n, parts.num_parts(), "grid / partitioning mismatch");
+        let n = self.n;
+        // top up capacity-less slots (taken by jobs) from the free-list
+        for b in self.blocks.iter_mut() {
+            if b.capacity() == 0 {
+                if let Some(s) = spare.pop() {
+                    *b = s;
+                }
+            }
+            b.clear();
         }
-        for &(u, v) in pool {
-            let (pi, pj) = (parts.part_of(u), parts.part_of(v));
-            blocks[pi * n + pj].push((parts.local_row(u) as i32, parts.local_row(v) as i32));
+        let threads = threads.max(1);
+        if threads == 1 || pool.len() < PARALLEL_REDISTRIBUTE_MIN {
+            // pre-size: expected pool.len() / n^2 per block
+            let expect = pool.len() / (n * n) + 1;
+            for b in self.blocks.iter_mut() {
+                b.reserve(expect);
+            }
+            for &(u, v) in pool {
+                let (pi, pj) = (parts.part_of(u), parts.part_of(v));
+                self.blocks[pi * n + pj]
+                    .push((parts.local_row(u) as i32, parts.local_row(v) as i32));
+            }
+        } else {
+            let shard = pool.len().div_ceil(threads);
+            let mut partials: Vec<Vec<Vec<(i32, i32)>>> = (0..threads)
+                .map(|_| {
+                    (0..n * n)
+                        .map(|_| {
+                            spare
+                                .pop()
+                                .map(|mut b| {
+                                    b.clear();
+                                    b
+                                })
+                                .unwrap_or_default()
+                        })
+                        .collect()
+                })
+                .collect();
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(threads);
+                for (t, partial) in partials.iter_mut().enumerate() {
+                    let lo = (t * shard).min(pool.len());
+                    let hi = ((t + 1) * shard).min(pool.len());
+                    let chunk = &pool[lo..hi];
+                    handles.push(scope.spawn(move || {
+                        for &(u, v) in chunk {
+                            let (pi, pj) = (parts.part_of(u), parts.part_of(v));
+                            partial[pi * n + pj]
+                                .push((parts.local_row(u) as i32, parts.local_row(v) as i32));
+                        }
+                    }));
+                }
+                for h in handles {
+                    h.join().unwrap();
+                }
+            });
+            // merge in shard order: concatenating contiguous-chunk partials
+            // reproduces pool order inside every block exactly
+            for mut partial in partials {
+                for (slot, src) in partial.iter_mut().enumerate() {
+                    self.blocks[slot].append(src);
+                }
+                // emptied shard buffers keep their capacity for next pass
+                spare.append(&mut partial);
+            }
         }
-        BlockGrid { n, blocks }
     }
 
     pub fn num_parts(&self) -> usize {
@@ -149,6 +233,55 @@ mod tests {
         let blk = grid.take_block(0, 0);
         assert_eq!(grid.total_samples(), before - blk.len());
         assert!(grid.block(0, 0).is_empty());
+    }
+
+    #[test]
+    fn parallel_redistribute_is_bitwise_identical() {
+        let g = generators::barabasi_albert(500, 4, 8);
+        let parts = Partitioner::degree_zigzag(&g, 3);
+        // repeat edges until the pool crosses the parallel threshold so
+        // the sharded path actually runs
+        let edges: Vec<(u32, u32)> = g.edges().map(|(u, v, _)| (u, v)).collect();
+        let mut pool: Vec<(u32, u32)> = Vec::new();
+        while pool.len() < super::PARALLEL_REDISTRIBUTE_MIN + 1000 {
+            pool.extend_from_slice(&edges);
+        }
+        let serial = BlockGrid::redistribute(&pool, &parts);
+        for threads in [2, 3, 7] {
+            let mut par = BlockGrid::new_empty(3);
+            par.refill(&pool, &parts, threads, &mut Vec::new());
+            for i in 0..3 {
+                for j in 0..3 {
+                    assert_eq!(serial.block(i, j), par.block(i, j), "threads={threads} block ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn refill_recycles_block_buffers() {
+        let g = generators::barabasi_albert(300, 3, 4);
+        let parts = Partitioner::degree_zigzag(&g, 2);
+        let pool: Vec<(u32, u32)> = g.edges().map(|(u, v, _)| (u, v)).collect();
+        let mut grid = BlockGrid::new_empty(2);
+        let mut spare: Vec<Vec<(i32, i32)>> = Vec::new();
+        grid.refill(&pool, &parts, 1, &mut spare);
+        let reference = BlockGrid::redistribute(&pool, &parts);
+        // simulate the job loop: blocks leave the grid, come back via spare
+        for i in 0..2 {
+            for j in 0..2 {
+                let mut b = grid.take_block(i, j);
+                b.clear();
+                spare.push(b);
+            }
+        }
+        grid.refill(&pool, &parts, 1, &mut spare);
+        for i in 0..2 {
+            for j in 0..2 {
+                assert_eq!(grid.block(i, j), reference.block(i, j), "block ({i},{j})");
+            }
+        }
+        assert!(spare.is_empty(), "all four recycled buffers should be back in slots");
     }
 
     #[test]

@@ -10,6 +10,19 @@
 //! With the bus-usage optimization (§3.4, `fix_context`) the group is
 //! transposed: worker `i` keeps context partition `i` resident and the
 //! *vertex* partitions rotate — saving the context transfer entirely.
+//!
+//! **Residency-aware group ordering** ([`EpisodeSchedule::with_residency_order`]).
+//! Groups are mutually independent (each covers a disjoint diagonal of
+//! blocks), so any execution order is valid. The slot occupied by a
+//! partition in group `g` is a function of `g`, and slots with equal
+//! residue mod `n` belong to the same worker — so executing groups in
+//! residue classes mod `n` (`0, n, 2n, …, 1, n+1, …`) makes the rotating
+//! matrix's partitions return to the *same worker* for every transition
+//! inside a class. The transfer engine then keeps them resident and only
+//! re-uploads at the `n` class boundaries per pass instead of every
+//! group: rotating-partition uploads drop from `P` to `n` per partition
+//! per pass (the sticky matrix — `vid = slot` without `fix_context` —
+//! never leaves its worker at all).
 
 /// One block assignment inside an episode group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,6 +41,8 @@ pub struct EpisodeSchedule {
     num_parts: usize,
     num_workers: usize,
     fix_context: bool,
+    /// Group ids in execution order (identity unless residency-ordered).
+    group_order: Vec<usize>,
 }
 
 impl EpisodeSchedule {
@@ -43,7 +58,29 @@ impl EpisodeSchedule {
             !fix_context || num_parts == num_workers,
             "fix_context requires num_parts == num_workers (paper section 3.4)"
         );
-        EpisodeSchedule { num_parts, num_workers, fix_context }
+        EpisodeSchedule {
+            num_parts,
+            num_workers,
+            fix_context,
+            group_order: (0..num_parts).collect(),
+        }
+    }
+
+    /// Reorder group execution into residue classes mod `num_workers`
+    /// (`0, n, 2n, …, 1, n+1, …`) so the rotating matrix's partitions
+    /// stay sticky to workers inside each class (see the module docs).
+    /// Coverage and per-group orthogonality are unchanged — groups are
+    /// independent — but the training *order* differs, so runs with and
+    /// without this ordering are distinct (equally valid) trajectories.
+    pub fn with_residency_order(mut self) -> Self {
+        let (p, n) = (self.num_parts, self.num_workers);
+        self.group_order = (0..n).flat_map(|r| (0..p / n).map(move |q| q * n + r)).collect();
+        self
+    }
+
+    /// Group ids in execution order.
+    pub fn ordered_groups(&self) -> &[usize] {
+        &self.group_order
     }
 
     pub fn num_parts(&self) -> usize {
@@ -88,9 +125,17 @@ impl EpisodeSchedule {
             .collect()
     }
 
-    /// Every assignment of a full pool pass, in execution order.
+    /// Every assignment of a full pool pass, in execution order (one
+    /// inner Vec per group, groups following [`Self::ordered_groups`]).
     pub fn full_pass(&self) -> Vec<Vec<Assignment>> {
-        (0..self.num_groups()).map(|g| self.group(g)).collect()
+        self.group_order.iter().map(|&g| self.group(g)).collect()
+    }
+
+    /// The full pass flattened into dispatch order — the sequence the
+    /// coordinator walks every pool pass. The transfer engine derives its
+    /// next-toucher (residency) tables from this.
+    pub fn execution_sequence(&self) -> Vec<Assignment> {
+        self.group_order.iter().flat_map(|&g| self.group(g)).collect()
     }
 }
 
@@ -146,6 +191,55 @@ mod tests {
                 assert_eq!(a.cid, (a.worker + g) % 4);
             }
         }
+    }
+
+    #[test]
+    fn residency_order_is_a_complete_permutation() {
+        for (p, n) in [(4, 2), (6, 2), (8, 4), (4, 4), (1, 1)] {
+            let s = EpisodeSchedule::new(p, n, false).with_residency_order();
+            let mut seen = s.ordered_groups().to_vec();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..p).collect::<Vec<_>>(), "p={p} n={n}");
+            // coverage survives the reorder: every block visited once
+            let mut blocks = vec![false; p * p];
+            for a in s.execution_sequence() {
+                assert!(!blocks[a.vid * p + a.cid], "block revisited");
+                blocks[a.vid * p + a.cid] = true;
+            }
+            assert!(blocks.iter().all(|&b| b), "p={p} n={n}: not all blocks covered");
+        }
+        let s = EpisodeSchedule::new(4, 2, false).with_residency_order();
+        assert_eq!(s.ordered_groups(), &[0, 2, 1, 3]);
+        // square grids (P == n) have singleton residue classes: unchanged
+        let s = EpisodeSchedule::new(4, 4, false).with_residency_order();
+        assert_eq!(s.ordered_groups(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn residency_order_keeps_contexts_sticky_within_classes() {
+        // p=4, n=2, standard schedule: order [0,2,1,3]. For the 0→2
+        // transition every context partition must return to the worker
+        // that just trained it (that is the whole point of the order).
+        let s = EpisodeSchedule::new(4, 2, false).with_residency_order();
+        let seq = s.execution_sequence();
+        let worker_of = |group_pos: usize, cid: usize| {
+            seq[group_pos * 4..(group_pos + 1) * 4]
+                .iter()
+                .find(|a| a.cid == cid)
+                .map(|a| a.worker)
+                .unwrap()
+        };
+        for cid in 0..4 {
+            assert_eq!(worker_of(0, cid), worker_of(1, cid), "cid {cid} moved workers");
+        }
+    }
+
+    #[test]
+    fn execution_sequence_matches_full_pass() {
+        let s = EpisodeSchedule::new(6, 2, false).with_residency_order();
+        let flat: Vec<Assignment> = s.full_pass().into_iter().flatten().collect();
+        assert_eq!(flat, s.execution_sequence());
+        assert_eq!(flat.len(), 36);
     }
 
     #[test]

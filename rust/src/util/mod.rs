@@ -3,10 +3,12 @@
 //! The offline crate set has no `rand`, `rayon`, `criterion` or `proptest`,
 //! so this module provides the equivalents the rest of the system needs:
 //! a fast counter-seeded RNG ([`rng`]), wall-clock timers ([`timer`]), a
-//! criterion-style benchmark harness ([`bench`]) and a miniature
-//! property-testing framework ([`prop`]).
+//! criterion-style benchmark harness ([`bench`]), a miniature
+//! property-testing framework ([`prop`]) and pinned-seed sweep statistics
+//! for empirical quality gates ([`gate`]).
 
 pub mod bench;
+pub mod gate;
 pub mod prop;
 pub mod rng;
 pub mod timer;

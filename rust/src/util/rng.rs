@@ -5,6 +5,29 @@
 //! via reseeding through splitmix64), with the distribution helpers the
 //! samplers need (uniform ranges, f32/f64 unit, shuffling).
 
+/// Stream-id namespaces for [`Rng::split`] / [`Rng::stream`].
+///
+/// Every subsystem that derives per-thread RNGs from the run's base seed
+/// must draw its stream ids from a *disjoint* region of the u64 stream
+/// domain, or two subsystems can silently end up on the same stream (the
+/// seed bug this replaces: worker streams `0xBEEF ^ i`, shuffle streams
+/// `0xF00D ^ pool_idx` and sampler streams `pool_idx << 20 | i` all lived
+/// in one flat domain and collided for large `pool_idx`). The top byte of
+/// the id is the namespace tag; the low 56 bits are the subsystem-local
+/// index, whose layout each constant documents. New subsystems take the
+/// next tag here — never an ad-hoc constant at the call site.
+pub mod streams {
+    /// Device-worker training streams (negative sampling). Low bits:
+    /// worker index.
+    pub const WORKER: u64 = 0x01 << 56;
+    /// Sampler-thread streams (online augmentation / edge sampling).
+    /// Low bits: `pool_idx << 16 | sampler_idx` (sampler count < 2^16,
+    /// pool index < 2^40).
+    pub const SAMPLER: u64 = 0x02 << 56;
+    /// Pool-shuffle streams. Low bits: pool index.
+    pub const SHUFFLE: u64 = 0x03 << 56;
+}
+
 /// splitmix64 step — used to expand a single u64 seed into a full state.
 #[inline]
 pub fn splitmix64(state: &mut u64) -> u64 {
@@ -39,10 +62,20 @@ impl Rng {
     }
 
     /// Derive an independent stream for worker `i` (used to give each
-    /// sampler / trainer thread its own deterministic RNG).
+    /// sampler / trainer thread its own deterministic RNG). Callers that
+    /// share one base RNG across subsystems should go through
+    /// [`Self::stream`] so their id domains cannot collide.
     pub fn split(&self, i: u64) -> Self {
         let mut sm = self.s[0] ^ self.s[3] ^ (i.wrapping_mul(0xA0761D6478BD642F));
         Rng::new(splitmix64(&mut sm))
+    }
+
+    /// [`Self::split`] with a namespaced stream id: `namespace` is one of
+    /// the [`streams`] constants (top byte), `id` the subsystem-local
+    /// index (must fit the low 56 bits).
+    pub fn stream(&self, namespace: u64, id: u64) -> Self {
+        debug_assert!(id < (1 << 56), "stream id {id:#x} spills into the namespace byte");
+        self.split(namespace | id)
     }
 
     #[inline]
@@ -212,6 +245,33 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / N as f64;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn stream_namespaces_are_disjoint() {
+        // The ids the coordinator actually constructs (worker, sampler,
+        // shuffle) must be pairwise distinct u64s over realistic index
+        // ranges — the collision the flat pre-namespace domain allowed.
+        let mut seen = std::collections::HashSet::new();
+        for w in 0..64u64 {
+            assert!(seen.insert(streams::WORKER | w));
+        }
+        for pool in 0..512u64 {
+            for s in 0..16u64 {
+                assert!(seen.insert(streams::SAMPLER | (pool << 16) | s));
+            }
+            assert!(seen.insert(streams::SHUFFLE | pool));
+        }
+    }
+
+    #[test]
+    fn stream_derives_from_namespace_and_id() {
+        let base = Rng::new(9);
+        let mut a = base.stream(streams::WORKER, 3);
+        let mut b = base.split(streams::WORKER | 3);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = base.stream(streams::SHUFFLE, 3);
+        assert_ne!(a.next_u64(), c.next_u64());
     }
 
     #[test]
