@@ -6,5 +6,6 @@
 //! records the `small` runs).
 
 fn main() {
-    graphvite::experiments::run("fig5", graphvite::experiments::Scale::from_env()).expect("fig5 experiment");
+    graphvite::experiments::run("fig5", graphvite::experiments::Scale::from_env())
+        .expect("fig5 experiment");
 }

@@ -6,5 +6,6 @@
 //! records the `small` runs).
 
 fn main() {
-    graphvite::experiments::run("fig6", graphvite::experiments::Scale::from_env()).expect("fig6 experiment");
+    graphvite::experiments::run("fig6", graphvite::experiments::Scale::from_env())
+        .expect("fig6 experiment");
 }

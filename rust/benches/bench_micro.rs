@@ -4,18 +4,27 @@
 //!     cargo bench --bench bench_micro
 //!
 //! Scale knobs: GRAPHVITE_BENCH_FAST=1 shrinks iteration counts for CI.
+//!
+//! Like `bench_pipeline`, this target **self-records**: every run writes
+//! `BENCH_micro_<scale>.json` next to this file (the benches/README
+//! convention; the scale tag is the `GRAPHVITE_BENCH_SCALE` label — the
+//! micro workloads themselves are fixed-size), so CI's scheduled bench
+//! job can upload the raw lines as artifacts.
 
 use graphvite::config::{BackendKind, TrainConfig};
 use graphvite::coordinator::Trainer;
 use graphvite::embedding::{EmbeddingStore, Matrix};
+use graphvite::experiments::Scale;
 use graphvite::gpu::{
     native_minibatch_step, simd_minibatch_step, Kernels, ScalarKernels, UnrolledKernels,
 };
 use graphvite::graph::generators;
 use graphvite::partition::Partitioner;
 use graphvite::pool::{shuffle, ShuffleKind};
-use graphvite::sampling::{AliasTable, AugmentConfig, NegativeSampler, OnlineAugmenter, RandomWalker};
-use graphvite::util::bench::{black_box, Bencher};
+use graphvite::sampling::{
+    AliasTable, AugmentConfig, NegativeSampler, OnlineAugmenter, RandomWalker,
+};
+use graphvite::util::bench::{black_box, record_json, Bencher};
 use graphvite::util::rng::Rng;
 
 fn fast() -> bool {
@@ -50,6 +59,11 @@ fn main() {
 
     println!("== end-to-end trainer (native) ==");
     bench_trainer(&mut b);
+
+    // self-record per the benches/README BENCH_*.json convention
+    let scale = Scale::from_env().name();
+    let path = format!("{}/benches/BENCH_micro_{scale}.json", env!("CARGO_MANIFEST_DIR"));
+    record_json(&path, &format!("bench_micro scale={scale}"), &b.result_lines());
 }
 
 fn bench_rng(b: &mut Bencher) {

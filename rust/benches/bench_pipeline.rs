@@ -1,6 +1,7 @@
 //! Transfer-engine comparison: serial dispatch vs pipelined waves vs
-//! pipelined + partition residency (the PR-3 perf work; no paper table —
-//! this tracks the repo's own host↔device data path).
+//! pipelined + partition residency vs heterogeneous capacities (the PR-3
+//! and PR-4 perf work; no paper table — this tracks the repo's own
+//! host↔device data path and capacity-aware scheduler).
 //!
 //! Run with `cargo bench --bench bench_pipeline`; set
 //! `GRAPHVITE_BENCH_SCALE=tiny|small|full` for workload size and
@@ -18,16 +19,8 @@ use graphvite::experiments::{Scale, Workload};
 use graphvite::graph::Graph;
 use graphvite::metrics::TrainStats;
 use graphvite::pool::ShuffleKind;
-use graphvite::util::bench::{Bencher, Table};
+use graphvite::util::bench::{record_json, Bencher, Table};
 use graphvite::util::human_bytes;
-
-fn scale_name(scale: Scale) -> &'static str {
-    match scale {
-        Scale::Tiny => "tiny",
-        Scale::Small => "small",
-        Scale::Full => "full",
-    }
-}
 
 fn workload(scale: Scale) -> (Graph, TrainConfig) {
     let nodes = match scale {
@@ -62,19 +55,23 @@ fn main() {
     let samples = base.total_samples(graph.num_edges()) as f64;
     println!(
         "bench_pipeline scale={} ({} nodes, {} edges, backend {})",
-        scale_name(scale),
+        scale.name(),
         graph.num_nodes(),
         graph.num_edges(),
         base.backend.name()
     );
 
-    let variants: [(&str, bool, bool); 3] = [
-        ("serial", false, false),
-        ("pipelined", true, false),
-        ("pipelined+residency", true, true),
+    // last variant: the same 4-partition grid streamed through 2 unequal
+    // "devices" (capacities [1, 3] — one wave of 4 blocks per group,
+    // bounded residency caches, capacity-scaled chunks)
+    let variants: [(&str, bool, bool, &[usize]); 4] = [
+        ("serial", false, false, &[]),
+        ("pipelined", true, false, &[]),
+        ("pipelined+residency", true, true, &[]),
+        ("hetero-caps[1,3]", true, true, &[1, 3]),
     ];
     let mut table = Table::new(
-        "Transfer engine: serial vs pipelined vs residency",
+        "Transfer engine: serial vs pipelined vs residency vs hetero capacities",
         &[
             "config",
             "train s",
@@ -88,12 +85,13 @@ fn main() {
     );
     let mut recorded: Vec<String> = Vec::new();
 
-    for (name, pipeline, residency) in variants {
+    for (name, pipeline, residency, capacities) in variants {
         let mut last: Option<TrainStats> = None;
         b.bench_items(&format!("train.{name}"), samples, || {
             let cfg = TrainConfig {
                 pipeline_transfers: pipeline,
                 residency,
+                worker_capacities: capacities.to_vec(),
                 ..base.clone()
             };
             let mut t = Trainer::new(graph.clone(), cfg).unwrap();
@@ -135,53 +133,13 @@ fn main() {
     }
 
     // self-record per the benches/README BENCH_*.json convention
-    let mut lines: Vec<String> = b
-        .results()
-        .iter()
-        .map(|r| {
-            format!(
-                "bench {} {:.9} ± {:.9} min {:.9}",
-                r.name, r.mean_secs, r.stddev_secs, r.min_secs
-            )
-        })
-        .collect();
+    let mut lines = b.result_lines();
     lines.extend(table.to_markdown().lines().map(String::from));
     lines.extend(recorded.iter().cloned());
-    let json = to_json(&format!("bench_pipeline scale={}", scale_name(scale)), &lines);
     let path = format!(
         "{}/benches/BENCH_pipeline_{}.json",
         env!("CARGO_MANIFEST_DIR"),
-        scale_name(scale)
+        scale.name()
     );
-    match std::fs::write(&path, json) {
-        Ok(()) => println!("recorded {path}"),
-        Err(e) => eprintln!("could not record {path}: {e}"),
-    }
-}
-
-/// Minimal JSON emitter (the offline crate set has no serde): an object
-/// of the benches/README shape `{"argv": ..., "lines": [...]}`.
-fn to_json(argv: &str, lines: &[String]) -> String {
-    fn esc(s: &str) -> String {
-        let mut out = String::with_capacity(s.len() + 2);
-        for ch in s.chars() {
-            match ch {
-                '"' => out.push_str("\\\""),
-                '\\' => out.push_str("\\\\"),
-                '\n' => out.push_str("\\n"),
-                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-                c => out.push(c),
-            }
-        }
-        out
-    }
-    let mut json = String::from("{\n");
-    json.push_str(&format!(" \"argv\": \"{}\",\n", esc(argv)));
-    json.push_str(" \"lines\": [\n");
-    for (i, line) in lines.iter().enumerate() {
-        let comma = if i + 1 == lines.len() { "" } else { "," };
-        json.push_str(&format!("  \"{}\"{comma}\n", esc(line)));
-    }
-    json.push_str(" ]\n}\n");
-    json
+    record_json(&path, &format!("bench_pipeline scale={}", scale.name()), &lines);
 }

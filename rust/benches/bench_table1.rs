@@ -6,5 +6,6 @@
 //! records the `small` runs).
 
 fn main() {
-    graphvite::experiments::run("table1", graphvite::experiments::Scale::from_env()).expect("table1 experiment");
+    graphvite::experiments::run("table1", graphvite::experiments::Scale::from_env())
+        .expect("table1 experiment");
 }

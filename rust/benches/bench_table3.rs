@@ -6,5 +6,6 @@
 //! records the `small` runs).
 
 fn main() {
-    graphvite::experiments::run("table3", graphvite::experiments::Scale::from_env()).expect("table3 experiment");
+    graphvite::experiments::run("table3", graphvite::experiments::Scale::from_env())
+        .expect("table3 experiment");
 }

@@ -6,5 +6,6 @@
 //! records the `small` runs).
 
 fn main() {
-    graphvite::experiments::run("table5", graphvite::experiments::Scale::from_env()).expect("table5 experiment");
+    graphvite::experiments::run("table5", graphvite::experiments::Scale::from_env())
+        .expect("table5 experiment");
 }

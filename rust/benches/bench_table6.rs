@@ -6,5 +6,6 @@
 //! records the `small` runs).
 
 fn main() {
-    graphvite::experiments::run("table6", graphvite::experiments::Scale::from_env()).expect("table6 experiment");
+    graphvite::experiments::run("table6", graphvite::experiments::Scale::from_env())
+        .expect("table6 experiment");
 }

@@ -7,5 +7,6 @@
 //! records the `small` runs).
 
 fn main() {
-    graphvite::experiments::run("table8", graphvite::experiments::Scale::from_env()).expect("table8 experiment");
+    graphvite::experiments::run("table8", graphvite::experiments::Scale::from_env())
+        .expect("table8 experiment");
 }

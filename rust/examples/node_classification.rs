@@ -55,6 +55,8 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     table.print();
-    println!("(expect F1 to rise with % labeled and sit well above the 1/{num_labels} chance line)");
+    println!(
+        "(expect F1 to rise with % labeled and sit well above the 1/{num_labels} chance line)"
+    );
     Ok(())
 }

@@ -325,7 +325,8 @@ mod tests {
     #[test]
     fn plain_line_no_augmentation() {
         let g = generators::barabasi_albert(200, 3, 2);
-        let cfg = LineConfig { dim: 8, epochs: 2, threads: 2, walk_length: 0, ..Default::default() };
+        let cfg =
+            LineConfig { dim: 8, epochs: 2, threads: 2, walk_length: 0, ..Default::default() };
         let r = LineBaseline::train(&g, &cfg).unwrap();
         assert_eq!(r.embeddings.num_nodes(), 200);
         assert!(r.stats.counters.samples_trained >= 2 * g.num_edges() as u64 - 4);

@@ -335,7 +335,8 @@ mod tests {
     #[test]
     fn walks_stay_on_edges() {
         let g = generators::karate_club();
-        let cfg = Node2VecConfig { walks_per_node: 3, walk_length: 15, threads: 2, ..Default::default() };
+        let cfg =
+            Node2VecConfig { walks_per_node: 3, walk_length: 15, threads: 2, ..Default::default() };
         let trans = EdgeTransitions::build(&g, cfg.p, cfg.q, 2);
         let corpus = Node2VecBaseline::walk_corpus(&g, &cfg, &trans);
         assert_eq!(corpus.len(), 34 * 3);

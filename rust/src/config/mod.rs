@@ -118,6 +118,23 @@ impl BackendKind {
             Self::Simd
         }
     }
+
+    /// The backend the integration suites should drive trainer tests
+    /// through: `GRAPHVITE_TEST_BACKEND` (set by CI's backend-matrix job
+    /// to `native` / `simd`) or [`Self::Native`] when unset. An unknown
+    /// value panics so a typo'd matrix entry cannot silently re-test the
+    /// default backend.
+    pub fn test_backend() -> Self {
+        match std::env::var("GRAPHVITE_TEST_BACKEND") {
+            Ok(s) => Self::parse(&s).unwrap_or_else(|| {
+                panic!(
+                    "GRAPHVITE_TEST_BACKEND='{s}' is not a backend (expected one of: {})",
+                    Self::names_joined()
+                )
+            }),
+            Err(_) => Self::Native,
+        }
+    }
 }
 
 /// Full GraphVite training configuration (defaults follow paper §4.3).
@@ -139,12 +156,26 @@ pub struct TrainConfig {
     pub augmentation_distance: usize,
     /// Number of simulated GPUs (device workers).
     pub num_workers: usize,
+    /// Per-worker device capacities for heterogeneous pools (empty =
+    /// every worker has capacity 1 with the unbounded PR-3 residency
+    /// cache — today-behavior). Declaring capacities opts into
+    /// capacity-aware sharding: worker `i` takes `worker_capacities[i]`
+    /// row/column-disjoint blocks per schedule wave (proportionally more
+    /// of each episode group), trains device chunks of
+    /// `batch_size × capacity` samples, and has its residency cache
+    /// capped at `2 × capacity` resident partitions (fail-loud on
+    /// violation). `partitions()` must be a multiple of the total
+    /// capacity. TOML key `worker_capacities = [..]`, CLI
+    /// `--capacities 2,1`.
+    pub worker_capacities: Vec<usize>,
     /// Matrix partitions (0 = same as `num_workers`). The paper's §3.2
     /// "any number of partitions greater than n" generalization: must be
-    /// a multiple of `num_workers`; each episode group is processed in
-    /// `num_partitions / num_workers` orthogonal waves. More partitions
-    /// shrink the per-device resident set (Table 1 sizing) at the cost of
-    /// more transfers.
+    /// a multiple of the total worker capacity
+    /// ([`TrainConfig::total_capacity`], = `num_workers` for a
+    /// homogeneous pool); each episode group is
+    /// processed in `partitions / total_capacity` orthogonal waves. More
+    /// partitions shrink the per-device resident set (Table 1 sizing) at
+    /// the cost of more transfers.
     pub num_partitions: usize,
     /// CPU sampler threads feeding the pool.
     pub num_samplers: usize,
@@ -205,6 +236,7 @@ impl Default for TrainConfig {
             walk_length: 5,
             augmentation_distance: 2,
             num_workers: 4,
+            worker_capacities: Vec::new(),
             num_partitions: 0,
             num_samplers: 4,
             episode_size: 200_000,
@@ -239,17 +271,30 @@ impl TrainConfig {
         if self.num_workers == 0 || self.num_samplers == 0 {
             bail!("num_workers and num_samplers must be positive");
         }
-        if self.num_partitions != 0 {
-            if self.num_partitions % self.num_workers != 0 {
+        if !self.worker_capacities.is_empty() {
+            if self.worker_capacities.len() != self.num_workers {
                 bail!(
-                    "num_partitions ({}) must be a multiple of num_workers ({})",
-                    self.num_partitions,
+                    "worker_capacities has {} entries but num_workers is {}",
+                    self.worker_capacities.len(),
                     self.num_workers
                 );
             }
-            if self.fix_context && self.num_partitions != self.num_workers {
-                bail!("fix_context requires num_partitions == num_workers (paper section 3.4)");
+            if self.worker_capacities.iter().any(|&c| c == 0) {
+                bail!("worker capacities must be >= 1, got {:?}", self.worker_capacities);
             }
+        }
+        let parts = self.partitions();
+        let total = self.total_capacity();
+        if parts % total != 0 {
+            bail!(
+                "num_partitions ({parts}) must be a multiple of the total worker \
+                 capacity ({total}: {} workers with capacities {:?})",
+                self.num_workers,
+                self.capacities()
+            );
+        }
+        if self.fix_context && parts != self.num_workers {
+            bail!("fix_context requires num_partitions == num_workers (paper section 3.4)");
         }
         if self.walk_length == 0 || self.augmentation_distance == 0 {
             bail!("walk_length and augmentation_distance must be positive");
@@ -296,6 +341,21 @@ impl TrainConfig {
         set_num!(augmentation_distance, "augmentation_distance", usize);
         set_num!(num_workers, "num_workers", usize);
         set_num!(num_partitions, "num_partitions", usize);
+        if let Some(v) = get("worker_capacities") {
+            let arr = v.as_array().ok_or_else(|| {
+                anyhow::anyhow!("worker_capacities must be an array of positive integers")
+            })?;
+            cfg.worker_capacities = arr
+                .iter()
+                .map(|e| {
+                    e.as_i64().filter(|&c| c > 0).map(|c| c as usize).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "worker_capacities entries must be positive integers, got {e:?}"
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
         set_num!(num_samplers, "num_samplers", usize);
         set_num!(episode_size, "episode_size", usize);
         set_num!(batch_size, "batch_size", usize);
@@ -341,6 +401,59 @@ impl TrainConfig {
     /// Effective partition count (defaults to the worker count).
     pub fn partitions(&self) -> usize {
         if self.num_partitions == 0 { self.num_workers } else { self.num_partitions }
+    }
+
+    /// Effective per-worker capacities: `worker_capacities`, or `[1; n]`
+    /// for the homogeneous default.
+    pub fn capacities(&self) -> Vec<usize> {
+        if self.worker_capacities.is_empty() {
+            vec![1; self.num_workers]
+        } else {
+            self.worker_capacities.clone()
+        }
+    }
+
+    /// Capacity of one worker (1 unless declared).
+    pub fn worker_capacity(&self, worker: usize) -> usize {
+        self.worker_capacities.get(worker).copied().unwrap_or(1)
+    }
+
+    /// Total worker capacity = blocks per schedule wave. `partitions()`
+    /// must be a multiple of this.
+    pub fn total_capacity(&self) -> usize {
+        if self.worker_capacities.is_empty() {
+            self.num_workers
+        } else {
+            self.worker_capacities.iter().sum()
+        }
+    }
+
+    /// Per-worker residency-cache limits (max resident partitions), or
+    /// `None` for the unbounded homogeneous default. `2 × capacity`: the
+    /// vertex + context working set of the worker's concurrent blocks —
+    /// declaring capacities is what opts a run into bounded residency
+    /// (ROADMAP "cap the worker residency cache").
+    pub fn residency_limits(&self) -> Option<Vec<usize>> {
+        if self.worker_capacities.is_empty() {
+            None
+        } else {
+            Some(self.worker_capacities.iter().map(|&c| 2 * c).collect())
+        }
+    }
+
+    /// Parse a CLI-style comma-separated capacity list (`"2,1"` →
+    /// `[2, 1]`) — the `--capacities` flag.
+    pub fn parse_capacity_list(s: &str) -> Result<Vec<usize>> {
+        s.split(',')
+            .map(|t| {
+                let t = t.trim();
+                t.parse::<usize>().ok().filter(|&c| c > 0).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "capacity '{t}' is not a positive integer (expected e.g. \"2,1\")"
+                    )
+                })
+            })
+            .collect()
     }
 }
 
@@ -463,5 +576,80 @@ mod tests {
     fn total_samples() {
         let cfg = TrainConfig { epochs: 3, ..Default::default() };
         assert_eq!(cfg.total_samples(100), 300);
+    }
+
+    #[test]
+    fn capacity_accessors_default_to_homogeneous() {
+        let cfg = TrainConfig { num_workers: 3, ..Default::default() };
+        assert_eq!(cfg.capacities(), vec![1, 1, 1]);
+        assert_eq!(cfg.total_capacity(), 3);
+        assert_eq!(cfg.worker_capacity(1), 1);
+        assert_eq!(cfg.residency_limits(), None, "default residency is unbounded");
+    }
+
+    #[test]
+    fn declared_capacities_validate_and_bound_residency() {
+        let cfg = TrainConfig {
+            num_workers: 2,
+            num_partitions: 4,
+            fix_context: false,
+            worker_capacities: vec![1, 3],
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        assert_eq!(cfg.capacities(), vec![1, 3]);
+        assert_eq!(cfg.total_capacity(), 4);
+        assert_eq!(cfg.worker_capacity(1), 3);
+        assert_eq!(cfg.residency_limits(), Some(vec![2, 6]));
+
+        // wrong arity
+        let bad = TrainConfig { worker_capacities: vec![1], ..cfg.clone() };
+        assert!(bad.validate().unwrap_err().to_string().contains("num_workers"));
+        // zero capacity
+        let bad = TrainConfig { worker_capacities: vec![0, 4], ..cfg.clone() };
+        assert!(bad.validate().is_err());
+        // partitions not a multiple of the total capacity (4 % 3)
+        let bad = TrainConfig { worker_capacities: vec![2, 1], ..cfg.clone() };
+        assert!(bad.validate().unwrap_err().to_string().contains("multiple"));
+        // declared capacities with the default partition count (2 % 4)
+        let bad = TrainConfig { num_partitions: 0, ..cfg };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn worker_capacities_toml_round_trip() {
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nnum_workers = 2\nnum_partitions = 4\nfix_context = false\n\
+             worker_capacities = [1, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.worker_capacities, vec![1, 3]);
+        assert_eq!(cfg.total_capacity(), 4);
+        // scalars, floats, zeros and negatives are all rejected
+        assert!(TrainConfig::from_toml_str("worker_capacities = 2\n").is_err());
+        assert!(TrainConfig::from_toml_str("worker_capacities = [1.5, 1]\n").is_err());
+        assert!(TrainConfig::from_toml_str("worker_capacities = [0, 1]\n").is_err());
+        assert!(TrainConfig::from_toml_str("worker_capacities = [-1, 1]\n").is_err());
+    }
+
+    #[test]
+    fn capacity_list_parses_cli_spelling() {
+        assert_eq!(TrainConfig::parse_capacity_list("2,1").unwrap(), vec![2, 1]);
+        assert_eq!(TrainConfig::parse_capacity_list(" 1, 3 ").unwrap(), vec![1, 3]);
+        assert!(TrainConfig::parse_capacity_list("2,zero").is_err());
+        assert!(TrainConfig::parse_capacity_list("2,,1").is_err());
+        assert!(TrainConfig::parse_capacity_list("0").is_err());
+    }
+
+    #[test]
+    fn test_backend_defaults_to_native() {
+        // CI's backend matrix overrides via GRAPHVITE_TEST_BACKEND; the
+        // bare environment must resolve to the reference backend. (Only
+        // meaningful when the var is unset — skip silently otherwise.)
+        if std::env::var("GRAPHVITE_TEST_BACKEND").is_err() {
+            assert_eq!(BackendKind::test_backend(), BackendKind::Native);
+        } else {
+            assert!(BackendKind::test_backend().available());
+        }
     }
 }

@@ -1,9 +1,11 @@
-//! Minimal TOML-subset parser (flat tables, scalar values).
+//! Minimal TOML-subset parser (flat tables, scalar and array values).
 //!
 //! Supports exactly what the config files need: `[section]` headers,
-//! `key = value` with integers, floats, booleans and quoted strings,
+//! `key = value` with integers, floats, booleans, quoted strings and
+//! single-line arrays of those scalars (`worker_capacities = [2, 1]`),
 //! comments (`#`), and blank lines. Keys inside a section are exposed as
-//! `"section.key"`. Arrays/dates/multi-line strings are out of scope.
+//! `"section.key"`. Nested arrays/dates/multi-line strings are out of
+//! scope.
 //!
 //! This layer is untyped: interpretation of individual keys (e.g. mapping
 //! the `backend` string through [`crate::config::BackendKind::parse`],
@@ -16,13 +18,14 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-/// A parsed scalar value.
+/// A parsed value: a scalar, or a single-line array of scalars.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
     Int(i64),
     Float(f64),
     Bool(bool),
     Str(String),
+    Array(Vec<TomlValue>),
 }
 
 impl TomlValue {
@@ -51,6 +54,13 @@ impl TomlValue {
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(items) => Some(items),
             _ => None,
         }
     }
@@ -111,6 +121,23 @@ fn parse_value(s: &str, lineno: usize) -> Result<TomlValue> {
     if s.is_empty() {
         bail!("line {lineno}: missing value");
     }
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            bail!("line {lineno}: unterminated array (arrays must be single-line)");
+        };
+        let mut items = Vec::new();
+        for elem in split_array_elements(inner) {
+            let elem = elem.trim();
+            if elem.is_empty() {
+                bail!("line {lineno}: empty array element");
+            }
+            match parse_value(elem, lineno)? {
+                TomlValue::Array(_) => bail!("line {lineno}: nested arrays are not supported"),
+                v => items.push(v),
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
     if let Some(stripped) = s.strip_prefix('"') {
         let Some(inner) = stripped.strip_suffix('"') else {
             bail!("line {lineno}: unterminated string");
@@ -130,6 +157,29 @@ fn parse_value(s: &str, lineno: usize) -> Result<TomlValue> {
         return Ok(TomlValue::Float(f));
     }
     bail!("line {lineno}: cannot parse value '{s}'");
+}
+
+/// Split the interior of a single-line array on commas, respecting quoted
+/// strings. An empty/whitespace interior yields no elements.
+fn split_array_elements(inner: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    // a whitespace-only tail is a trailing comma (or an empty array): ok
+    if !inner[start..].trim().is_empty() {
+        out.push(&inner[start..]);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -162,12 +212,45 @@ mod tests {
     }
 
     #[test]
+    fn arrays() {
+        let doc = parse_toml(
+            r#"
+            caps = [2, 1]          # comment after an array
+            trailing = [1, 2,]
+            empty = []
+            mixed = [1, 2.5, "x,y", true]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            doc["caps"],
+            TomlValue::Array(vec![TomlValue::Int(2), TomlValue::Int(1)])
+        );
+        assert_eq!(
+            doc["trailing"],
+            TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Int(2)])
+        );
+        assert_eq!(doc["empty"], TomlValue::Array(vec![]));
+        // commas inside quoted strings do not split elements
+        assert_eq!(
+            doc["mixed"].as_array().unwrap()[2],
+            TomlValue::Str("x,y".into())
+        );
+        assert_eq!(doc["mixed"].as_array().unwrap().len(), 4);
+        assert!(doc["caps"].as_f64().is_none(), "arrays are not scalars");
+        assert!(TomlValue::Int(1).as_array().is_none());
+    }
+
+    #[test]
     fn errors() {
         assert!(parse_toml("[unterminated\n").is_err());
         assert!(parse_toml("keyonly\n").is_err());
         assert!(parse_toml("k = \n").is_err());
         assert!(parse_toml("k = \"open\n").is_err());
         assert!(parse_toml("k = 12abc\n").is_err());
+        assert!(parse_toml("k = [1, 2\n").is_err(), "unterminated array");
+        assert!(parse_toml("k = [1, , 2]\n").is_err(), "empty element");
+        assert!(parse_toml("k = [[1], [2]]\n").is_err(), "nested arrays");
     }
 
     #[test]

@@ -51,12 +51,14 @@
 //! Episode semantics (what the `episodes` counter and `log_every` lines
 //! count): one *episode* = one orthogonal group — for `P` partitions, the
 //! `P` blocks of a latin-square diagonal from
-//! [`crate::scheduler::EpisodeSchedule`], run as `P / n` waves of `n`
-//! concurrently-training workers with no shared rows, hence no
-//! synchronization — totalling `episode_size` positive samples; one
-//! *pool pass* = `P` episodes covering all P² blocks, after which the
-//! double-buffered pool pair swaps. The learning rate decays linearly
-//! over total samples, matching the paper's SGD schedule.
+//! [`crate::scheduler::EpisodeSchedule`], run as `P / C` waves of `C`
+//! concurrently-training blocks (`C` = total worker capacity; worker `i`
+//! holds `capacities[i]` of each wave's blocks — one each for the
+//! homogeneous default) with no shared rows, hence no synchronization —
+//! totalling `episode_size` positive samples; one *pool pass* = `P`
+//! episodes covering all P² blocks, after which the double-buffered pool
+//! pair swaps. The learning rate decays linearly over total samples,
+//! matching the paper's SGD schedule.
 //!
 //! Ablation flags in [`TrainConfig`](crate::config::TrainConfig) switch
 //! off each paper component: `online_augmentation` (plain edge sampling
@@ -133,7 +135,10 @@ impl Trainer {
     /// partitions (`fix_context` / `residency`) are synchronized back
     /// into the store before every checkpoint, so callbacks always see
     /// current vertex *and* context rows.
-    pub fn train_with_callback(&mut self, mut checkpoint: Option<Checkpoint>) -> Result<TrainResult> {
+    pub fn train_with_callback(
+        &mut self,
+        mut checkpoint: Option<Checkpoint>,
+    ) -> Result<TrainResult> {
         let cfg = self.config.clone();
         let graph = Arc::clone(&self.graph);
         let counters = Arc::new(Counters::default());
@@ -144,7 +149,11 @@ impl Trainer {
         let parts = Arc::new(Partitioner::degree_zigzag(&graph, num_parts));
         let neg = Arc::new(NegativeSampler::new(&graph, &parts));
         let sched = {
-            let s = EpisodeSchedule::new(num_parts, cfg.num_workers, cfg.fix_context);
+            // capacity-aware waves: worker i takes capacities[i] blocks
+            // per wave (the homogeneous default is one each — the PR-3
+            // schedule, bitwise)
+            let s =
+                EpisodeSchedule::with_capacities(num_parts, &cfg.capacities(), cfg.fix_context);
             // group order is part of the training trajectory: only the
             // residency mode pays for the sticky ordering
             if cfg.residency { s.with_residency_order() } else { s }
@@ -228,7 +237,12 @@ impl Trainer {
                 counters: &counters,
                 job_txs: &job_txs,
                 result_rx: &result_rx,
-                engine: TransferEngine::new(&sched, cfg.num_workers, cfg.residency, cfg.fix_context),
+                engine: TransferEngine::new(
+                    &sched,
+                    cfg.residency,
+                    cfg.fix_context,
+                    cfg.residency_limits(),
+                ),
                 grid: BlockGrid::new_empty(num_parts),
                 total_samples,
                 samples_planned: 0,
@@ -750,6 +764,27 @@ mod tests {
         // quality must not collapse vs the square grid: at least 2 of the
         // 3 pinned seeds must clear the floor
         assert!(stats.pass_rate(0.4) >= 2.0 / 3.0, "{:?}", stats.scores);
+    }
+
+    #[test]
+    fn heterogeneous_capacities_train() {
+        // ISSUE-4 acceptance shape: 4 partitions streamed through 2
+        // unequal "devices" ([1, 3] — one wave of 4 blocks per group)
+        // with bounded residency caches (capacity violations fail loudly
+        // worker-side, so completion is the assertion).
+        let g = generators::barabasi_albert(300, 3, 21);
+        let cfg = TrainConfig {
+            num_workers: 2,
+            worker_capacities: vec![1, 3],
+            num_partitions: 4,
+            fix_context: false,
+            epochs: 2,
+            ..small_cfg()
+        };
+        let mut t = Trainer::new(g, cfg).unwrap();
+        let r = t.train().unwrap();
+        assert!(r.stats.counters.samples_trained > 0);
+        assert!(r.stats.final_loss.is_finite());
     }
 
     #[test]

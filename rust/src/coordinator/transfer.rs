@@ -31,6 +31,23 @@
 //! regression test in `rust/tests/pipeline_equivalence.rs` compares
 //! against.
 //!
+//! **Capacity-bounded residency.** When the config declares
+//! heterogeneous worker capacities, each worker's residency cache is
+//! capped at `2 × capacity` resident partitions (the vertex + context
+//! working set of its concurrent blocks) so a small device can stream a
+//! large grid without resident blow-up. The engine plans against that
+//! bound: it tracks per-worker occupancy in dispatch order — exact,
+//! because a worker executes its jobs FIFO — and when a `keep` would
+//! overflow the cap it ships the newly trained partition home instead.
+//! Entries already resident are all awaiting a strictly scheduled touch
+//! on that worker (that is why they were kept, per the next-toucher
+//! tables), so "evict the newcomer" is the cheapest deterministic
+//! policy: any other eviction forces the same re-upload later. Keep
+//! decisions never change trained values (versioned shipments guarantee
+//! the bytes are identical either way), so bounded and unbounded runs of
+//! the same schedule produce identical embeddings — only the transfer
+//! ledger moves.
+//!
 //! The free-lists close the zero-realloc loop: gather buffers come from
 //! `f32_spare` (fed by scattered results), block buffers return from
 //! workers through `block_spare` into
@@ -71,6 +88,14 @@ pub struct TransferEngine {
     /// Same for the context partition.
     next_worker_c: Vec<usize>,
     cursor: usize,
+    /// Per-worker residency-cache caps (max resident partitions), `None`
+    /// = unbounded (the homogeneous default).
+    limits: Option<Vec<usize>>,
+    /// Resident partitions per worker right now (= `Some` entries in
+    /// `resident[w]`), maintained incrementally.
+    occupancy: Vec<usize>,
+    /// Keeps denied by a full cache (diagnostic; see the module docs).
+    pub capacity_evictions: u64,
     /// Recycled gather/result buffers (padded partition rows).
     pub f32_spare: Vec<Vec<f32>>,
     /// Recycled block buffers, fed back into `BlockGrid::refill`.
@@ -78,12 +103,19 @@ pub struct TransferEngine {
 }
 
 impl TransferEngine {
+    /// `cache_limits`: per-worker caps on resident partitions (`None` =
+    /// unbounded), from
+    /// [`TrainConfig::residency_limits`](crate::config::TrainConfig::residency_limits).
     pub fn new(
         sched: &EpisodeSchedule,
-        num_workers: usize,
         residency: bool,
         fix_context: bool,
+        cache_limits: Option<Vec<usize>>,
     ) -> Self {
+        let num_workers = sched.num_workers();
+        if let Some(limits) = &cache_limits {
+            assert_eq!(limits.len(), num_workers, "one cache limit per worker");
+        }
         let seq = sched.execution_sequence();
         let p = sched.num_parts();
         let mut next_worker_v = vec![0usize; seq.len()];
@@ -113,9 +145,18 @@ impl TransferEngine {
             next_worker_v,
             next_worker_c,
             cursor: 0,
+            limits: cache_limits,
+            occupancy: vec![0; num_workers],
+            capacity_evictions: 0,
             f32_spare: Vec::new(),
             block_spare: Vec::new(),
         }
+    }
+
+    /// Partitions currently planned resident on `worker` (exact at job
+    /// boundaries: the worker drains its queue FIFO).
+    pub fn resident_count(&self, worker: usize) -> usize {
+        self.occupancy[worker]
     }
 
     #[inline]
@@ -148,14 +189,32 @@ impl TransferEngine {
     ) -> ShipPlan {
         let i = self.idx(matrix, pid);
         let cur = self.latest[i];
+        let was_resident = self.resident[worker][i].is_some();
         let upload = self.resident[worker][i] != Some(cur);
-        let keep = if self.residency {
+        let mut keep = if self.residency {
             next_worker == worker
         } else {
             // PR-2 semantics: only the §3.4 context cache pins anything
             matrix == Matrix::Context && self.legacy_fix_context
         };
+        // Capacity bound: a kept partition that is not already resident
+        // grows the worker's cache; when that would exceed the cap, ship
+        // the newly trained buffer home instead (see the module docs for
+        // why the newcomer is the right eviction victim).
+        if keep && !was_resident {
+            if let Some(limits) = &self.limits {
+                if self.occupancy[worker] >= limits[worker] {
+                    keep = false;
+                    self.capacity_evictions += 1;
+                }
+            }
+        }
         self.latest[i] = cur + 1;
+        match (was_resident, keep) {
+            (false, true) => self.occupancy[worker] += 1,
+            (true, false) => self.occupancy[worker] -= 1,
+            _ => {}
+        }
         self.resident[worker][i] = if keep { Some(cur + 1) } else { None };
         ShipPlan { upload, keep, src_version: cur }
     }
@@ -186,12 +245,12 @@ mod tests {
     /// per-pass count of uploads (vertex + context).
     fn uploads_per_pass(
         sched: &EpisodeSchedule,
-        num_workers: usize,
         residency: bool,
         fix_context: bool,
+        limits: Option<Vec<usize>>,
         passes: usize,
     ) -> Vec<usize> {
-        let mut engine = TransferEngine::new(sched, num_workers, residency, fix_context);
+        let mut engine = TransferEngine::new(sched, residency, fix_context, limits);
         let seq = sched.execution_sequence();
         (0..passes)
             .map(|_| {
@@ -209,7 +268,7 @@ mod tests {
     fn no_residency_ships_everything_every_pass() {
         let sched = EpisodeSchedule::new(4, 2, false);
         // 16 assignments per pass, 2 uploads each
-        assert_eq!(uploads_per_pass(&sched, 2, false, false, 3), vec![32, 32, 32]);
+        assert_eq!(uploads_per_pass(&sched, false, false, None, 3), vec![32, 32, 32]);
     }
 
     #[test]
@@ -217,7 +276,7 @@ mod tests {
         let sched = EpisodeSchedule::new(2, 2, true);
         // per pass: 4 assignments; vertex always shipped (4); context
         // shipped only on first-ever touch (2 in pass one, 0 after)
-        assert_eq!(uploads_per_pass(&sched, 2, false, true, 3), vec![6, 4, 4]);
+        assert_eq!(uploads_per_pass(&sched, false, true, None, 3), vec![6, 4, 4]);
     }
 
     #[test]
@@ -227,13 +286,13 @@ mod tests {
         // schedule (vid = slot): 4 first-touch uploads in pass one, 0
         // after. Context partitions re-upload only at the 2 residue-class
         // boundaries per pass: 8 context uploads per pass (vs 16).
-        assert_eq!(uploads_per_pass(&sched, 2, true, false, 3), vec![12, 8, 8]);
+        assert_eq!(uploads_per_pass(&sched, true, false, None, 3), vec![12, 8, 8]);
     }
 
     #[test]
     fn keep_is_only_set_for_same_worker_successor() {
         let sched = EpisodeSchedule::new(4, 2, false).with_residency_order();
-        let mut engine = TransferEngine::new(&sched, 2, true, false);
+        let mut engine = TransferEngine::new(&sched, true, false, None);
         let seq = sched.execution_sequence();
         // simulate worker caches and verify the single-holder invariant
         let mut holder: Vec<Option<usize>> = vec![None; 8]; // (matrix, pid)
@@ -255,10 +314,82 @@ mod tests {
         }
     }
 
+    /// Replay an engine over `passes` passes, checking after every single
+    /// plan that the simulated per-worker cache (which `occupancy`
+    /// mirrors) never exceeds its cap. Returns total upload count.
+    fn check_bounded(
+        sched: &EpisodeSchedule,
+        limits: Vec<usize>,
+        passes: usize,
+    ) -> (usize, u64) {
+        let mut engine = TransferEngine::new(sched, true, false, Some(limits.clone()));
+        let seq = sched.execution_sequence();
+        let mut uploads = 0usize;
+        for _ in 0..passes {
+            for a in &seq {
+                let (v, c) = engine.plan(a);
+                uploads += usize::from(v.upload) + usize::from(c.upload);
+                for (w, &limit) in limits.iter().enumerate() {
+                    assert!(
+                        engine.resident_count(w) <= limit,
+                        "worker {w} resident {} > cap {limit}",
+                        engine.resident_count(w)
+                    );
+                }
+            }
+        }
+        (uploads, engine.capacity_evictions)
+    }
+
+    #[test]
+    fn capacity_caps_bound_residency_at_every_step() {
+        // heterogeneous P=8 on capacities [1,3]: the small worker's cap
+        // (2 resident partitions) is tighter than its sticky set (2 vids
+        // + contexts), so some keeps must be denied — and the bound must
+        // hold after every plan, not just at fences.
+        let sched = EpisodeSchedule::with_capacities(8, &[1, 3], false).with_residency_order();
+        let (bounded_uploads, evictions) = check_bounded(&sched, vec![2, 6], 3);
+        assert!(evictions > 0, "tight caps should deny at least one keep");
+        // unbounded planning of the same schedule elides strictly more
+        let unbounded: usize =
+            uploads_per_pass(&sched, true, false, None, 3).iter().sum();
+        assert!(
+            bounded_uploads > unbounded,
+            "bounded {bounded_uploads} vs unbounded {unbounded}"
+        );
+        // a loose cap (every partition of both matrices) denies nothing
+        let (loose_uploads, loose_evictions) = check_bounded(&sched, vec![16, 16], 3);
+        assert_eq!(loose_evictions, 0);
+        assert_eq!(loose_uploads, unbounded);
+    }
+
+    #[test]
+    fn bounded_planning_keeps_the_single_holder_invariant() {
+        let sched = EpisodeSchedule::with_capacities(8, &[1, 3], false).with_residency_order();
+        let mut engine = TransferEngine::new(&sched, true, false, Some(vec![2, 6]));
+        let seq = sched.execution_sequence();
+        let mut holder: Vec<Option<usize>> = vec![None; 16]; // (matrix, pid)
+        for pass in 0..3 {
+            for a in &seq {
+                let (v, c) = engine.plan(a);
+                for (plan, idx) in [(v, a.vid), (c, 8 + a.cid)] {
+                    if !plan.upload {
+                        assert_eq!(
+                            holder[idx],
+                            Some(a.worker),
+                            "pass {pass}: elided upload without a resident copy"
+                        );
+                    }
+                    holder[idx] = plan.keep.then_some(a.worker);
+                }
+            }
+        }
+    }
+
     #[test]
     fn free_lists_recycle() {
         let sched = EpisodeSchedule::new(2, 2, false);
-        let mut engine = TransferEngine::new(&sched, 2, true, false);
+        let mut engine = TransferEngine::new(&sched, true, false, None);
         assert!(engine.take_f32().is_empty());
         let mut buf = engine.take_f32();
         buf.resize(128, 1.0);

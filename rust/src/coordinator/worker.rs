@@ -107,12 +107,24 @@ type ResultTx = mpsc::Sender<Result<Reply>>;
 /// entry per (matrix, pid); across the whole worker pool at most one
 /// worker holds any partition (the coordinator only sets `keep` when it
 /// routes the partition's next block to the same worker).
+///
+/// When the config declares worker capacities the cache is *bounded*
+/// (`limit = 2 × capacity` — [`TrainConfig::residency_limits`]): the
+/// transfer engine plans keeps against the same bound, so an insert past
+/// it means the coordinator and this worker disagree about residency — a
+/// protocol bug that must fail the run, not silently grow device memory.
 #[derive(Debug, Default)]
 struct ResidencyCache {
     entries: Vec<ResidentPart>,
+    /// Max entries (`None` = unbounded, the homogeneous default).
+    limit: Option<usize>,
 }
 
 impl ResidencyCache {
+    fn new(limit: Option<usize>) -> Self {
+        ResidencyCache { entries: Vec::new(), limit }
+    }
+
     fn take(&mut self, matrix: Matrix, pid: usize) -> Option<ResidentPart> {
         let i = self
             .entries
@@ -121,7 +133,7 @@ impl ResidencyCache {
         Some(self.entries.swap_remove(i))
     }
 
-    fn insert(&mut self, part: ResidentPart) {
+    fn insert(&mut self, part: ResidentPart) -> Result<()> {
         debug_assert!(
             !self
                 .entries
@@ -131,7 +143,19 @@ impl ResidencyCache {
             part.matrix,
             part.pid
         );
+        if let Some(limit) = self.limit {
+            anyhow::ensure!(
+                self.entries.len() < limit,
+                "worker residency cache over capacity: {} resident, limit {} — \
+                 refusing to pin {:?} partition {}",
+                self.entries.len(),
+                limit,
+                part.matrix,
+                part.pid
+            );
+        }
         self.entries.push(part);
+        Ok(())
     }
 
     fn snapshot(&self) -> Vec<ResidentPart> {
@@ -156,6 +180,7 @@ pub fn spawn_workers<'scope, 'env>(
     let (result_tx, result_rx) = mpsc::channel::<Result<Reply>>();
     let mut handles = Vec::with_capacity(cfg.num_workers);
     let mut job_txs = Vec::with_capacity(cfg.num_workers);
+    let cache_limits = cfg.residency_limits();
     for i in 0..cfg.num_workers {
         let (tx, rx) = mpsc::channel::<JobMsg>();
         job_txs.push(tx);
@@ -163,10 +188,18 @@ pub fn spawn_workers<'scope, 'env>(
         let neg = Arc::clone(&neg);
         let counters = Arc::clone(&counters);
         let rng = base_rng.stream(streams::WORKER, i as u64);
-        let cfg = cfg.clone();
+        // Capacity-aware chunk sizing: a declared-capacity worker trains
+        // device chunks of `batch_size × capacity` samples (a bigger
+        // device takes proportionally bigger mini-batches as well as more
+        // blocks per wave). The homogeneous default (capacity 1) leaves
+        // batch_size untouched.
+        let capacity = cfg.worker_capacity(i);
+        let mut cfg = cfg.clone();
+        cfg.batch_size *= capacity;
+        let cache_limit = cache_limits.as_ref().map(|l| l[i]);
         let artifact = artifact.cloned();
         handles.push(scope.spawn(move || {
-            worker_loop(i, cfg, artifact, neg, counters, rng, rx, result_tx)
+            worker_loop(i, cfg, cache_limit, artifact, neg, counters, rng, rx, result_tx)
         }));
     }
     (handles, job_txs, result_rx)
@@ -176,6 +209,7 @@ pub fn spawn_workers<'scope, 'env>(
 fn worker_loop(
     _worker_idx: usize,
     cfg: TrainConfig,
+    cache_limit: Option<usize>,
     artifact: Option<ArtifactMeta>,
     neg: Arc<NegativeSampler>,
     counters: Arc<Counters>,
@@ -187,8 +221,9 @@ fn worker_loop(
     // one client per simulated GPU (like one CUDA context per device).
     let mut backend = create_backend(&cfg, artifact.as_ref())?;
 
-    // partitions pinned to this worker by the coordinator's keep flags
-    let mut cache = ResidencyCache::default();
+    // partitions pinned to this worker by the coordinator's keep flags,
+    // capped at 2 × capacity when the config declares worker capacities
+    let mut cache = ResidencyCache::new(cache_limit);
     // reusable chunk scratch (avoids 3 Vec allocations per chunk)
     let mut scratch = ChunkPlan::default();
 
@@ -245,6 +280,8 @@ fn resolve(
 }
 
 /// Keep the trained buffer resident or hand it back for the result.
+/// Fails when pinning would overflow a bounded cache (a planner/worker
+/// residency disagreement).
 fn stash(
     cache: &mut ResidencyCache,
     matrix: Matrix,
@@ -252,12 +289,12 @@ fn stash(
     version: u64,
     data: Vec<f32>,
     keep: bool,
-) -> Option<Vec<f32>> {
+) -> Result<Option<Vec<f32>>> {
     if keep {
-        cache.insert(ResidentPart { matrix, pid, version, data });
-        None
+        cache.insert(ResidentPart { matrix, pid, version, data })?;
+        Ok(None)
     } else {
-        Some(data)
+        Ok(Some(data))
     }
 }
 
@@ -314,8 +351,8 @@ fn run_job(
     };
     counters.add(&counters.samples_trained, trained);
 
-    let vertex_out = stash(cache, Matrix::Vertex, vid, v_version, vbuf, keep_v);
-    let context_out = stash(cache, Matrix::Context, cid, c_version, cbuf, keep_c);
+    let vertex_out = stash(cache, Matrix::Vertex, vid, v_version, vbuf, keep_v)?;
+    let context_out = stash(cache, Matrix::Context, cid, c_version, cbuf, keep_c)?;
     block.clear(); // contents are spent; the allocation rides back
     Ok(JobResult { vid, cid, vertex: vertex_out, context: context_out, block, loss, trained })
 }
@@ -424,12 +461,14 @@ mod tests {
     #[test]
     fn residency_cache_take_insert_snapshot() {
         let mut cache = ResidencyCache::default();
-        cache.insert(ResidentPart {
-            matrix: Matrix::Context,
-            pid: 1,
-            version: 3,
-            data: vec![1.0, 2.0],
-        });
+        cache
+            .insert(ResidentPart {
+                matrix: Matrix::Context,
+                pid: 1,
+                version: 3,
+                data: vec![1.0, 2.0],
+            })
+            .unwrap();
         assert!(cache.take(Matrix::Vertex, 1).is_none(), "matrices are distinct keys");
         let snap = cache.snapshot();
         assert_eq!(snap.len(), 1);
@@ -442,17 +481,43 @@ mod tests {
     #[test]
     fn resolve_rejects_version_mismatch() {
         let mut cache = ResidencyCache::default();
-        cache.insert(ResidentPart {
-            matrix: Matrix::Vertex,
-            pid: 0,
-            version: 2,
-            data: vec![0.0; 4],
-        });
+        cache
+            .insert(ResidentPart {
+                matrix: Matrix::Vertex,
+                pid: 0,
+                version: 2,
+                data: vec![0.0; 4],
+            })
+            .unwrap();
         let mut ship = Shipment { data: None, src_version: 5, keep: false };
         let err = resolve(&mut cache, Matrix::Vertex, 0, &mut ship).unwrap_err();
         assert!(err.to_string().contains("version"), "{err}");
         // and reuse of a partition that was never kept fails loudly
         let mut ship = Shipment { data: None, src_version: 0, keep: false };
         assert!(resolve(&mut cache, Matrix::Context, 3, &mut ship).is_err());
+    }
+
+    #[test]
+    fn bounded_cache_fails_loudly_on_overflow() {
+        let part = |pid: usize| ResidentPart {
+            matrix: Matrix::Vertex,
+            pid,
+            version: 0,
+            data: vec![0.0; 2],
+        };
+        let mut cache = ResidencyCache::new(Some(2));
+        cache.insert(part(0)).unwrap();
+        cache.insert(part(1)).unwrap();
+        let err = cache.insert(part(2)).unwrap_err();
+        assert!(err.to_string().contains("over capacity"), "{err}");
+        // taking an entry frees a slot again
+        assert!(cache.take(Matrix::Vertex, 0).is_some());
+        cache.insert(part(2)).unwrap();
+        // the unbounded default accepts arbitrarily many
+        let mut cache = ResidencyCache::new(None);
+        for pid in 0..64 {
+            cache.insert(part(pid)).unwrap();
+        }
+        assert_eq!(cache.snapshot().len(), 64);
     }
 }

@@ -49,7 +49,8 @@ pub fn run(scale: Scale) -> Result<()> {
     let mut cfg = w.config.clone();
     // full epoch budget: link structure needs ~1k updates/node before the
     // AUC curve lifts off (see EXPERIMENTS.md on sample budgets)
-    cfg.episode_size = (split.train_graph.num_edges() * cfg.epochs / (8 * cfg.num_workers)).max(2_000);
+    cfg.episode_size =
+        (split.train_graph.num_edges() * cfg.epochs / (8 * cfg.num_workers)).max(2_000);
     let mut trainer = Trainer::new(split.train_graph.clone(), cfg)?;
     let mut points: Vec<(u64, f64)> = Vec::new();
     {

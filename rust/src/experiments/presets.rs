@@ -29,6 +29,16 @@ impl Scale {
         }
     }
 
+    /// Inverse of [`Self::parse`] — the tag the self-recording bench
+    /// targets put in `BENCH_<target>_<scale>.json` filenames.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scale::Tiny => "tiny",
+            Scale::Small => "small",
+            Scale::Full => "full",
+        }
+    }
+
     /// Scale from the `GRAPHVITE_BENCH_SCALE` env var (`tiny` when unset
     /// or unrecognized) — the single parser shared by every bench target.
     pub fn from_env() -> Self {

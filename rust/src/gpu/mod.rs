@@ -68,7 +68,12 @@ pub struct ChunkPlan {
 /// raw pointers and are constructed on the owning thread, like one CUDA
 /// context per device).
 pub trait Backend {
-    /// Positive samples per chunk this backend consumes.
+    /// Positive samples per chunk this backend consumes. For the
+    /// pure-rust workers this is the worker's effective batch size —
+    /// `batch_size × capacity` under heterogeneous sharding (the
+    /// coordinator scales each worker's config by its declared capacity
+    /// before construction, so a bigger device trains proportionally
+    /// bigger device-side mini-batches).
     fn chunk_samples(&self) -> usize;
 
     /// Negatives per positive.

@@ -87,8 +87,12 @@ TRAIN OPTIONS (defaults follow paper section 4.3):
   --dim D               embedding dimension             [64]
   --epochs E            |E| positive samples per epoch  [10]
   --workers N           simulated GPUs                  [4]
-  --partitions N        matrix partitions (0 = workers; multiple of workers;
-                        needs --no-fix-context when > workers)
+  --capacities LIST     per-worker capacities, e.g. 2,1 (heterogeneous
+                        devices: blocks per wave, chunk scale, residency
+                        cap; partitions must be a multiple of the sum)
+  --partitions N        matrix partitions (0 = workers; multiple of the
+                        total worker capacity; needs --no-fix-context
+                        when > workers)
   --samplers N          CPU sampler threads             [4]
   --episode-size N      samples per episode x workers   [200000]
   --backend B           device backend: {names}  [native]
@@ -161,6 +165,10 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
     cfg.walk_length = args.get_parse("walk-length", cfg.walk_length)?;
     cfg.augmentation_distance = args.get_parse("aug-distance", cfg.augmentation_distance)?;
     cfg.num_workers = args.get_parse("workers", cfg.num_workers)?;
+    if let Some(s) = args.get("capacities") {
+        cfg.worker_capacities = TrainConfig::parse_capacity_list(s)
+            .map_err(|e| anyhow::anyhow!("--capacities: {e}"))?;
+    }
     cfg.num_partitions = args.get_parse("partitions", cfg.num_partitions)?;
     cfg.num_samplers = args.get_parse("samplers", cfg.num_samplers)?;
     cfg.episode_size = args.get_parse("episode-size", cfg.episode_size)?;

@@ -50,7 +50,8 @@ impl Partitioner {
     fn zigzag_assign(order: &[u32], n: usize, num_parts: usize) -> Partitioning {
         let mut part_of = vec![0u16; n];
         let mut local_row = vec![0u32; n];
-        let mut nodes_of_part: Vec<Vec<u32>> = vec![Vec::with_capacity(n / num_parts + 1); num_parts];
+        let mut nodes_of_part: Vec<Vec<u32>> =
+            vec![Vec::with_capacity(n / num_parts + 1); num_parts];
         for (i, &v) in order.iter().enumerate() {
             let round = i / num_parts;
             let pos = i % num_parts;

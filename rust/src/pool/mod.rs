@@ -252,7 +252,11 @@ mod tests {
             par.refill(&pool, &parts, threads, &mut Vec::new());
             for i in 0..3 {
                 for j in 0..3 {
-                    assert_eq!(serial.block(i, j), par.block(i, j), "threads={threads} block ({i},{j})");
+                    assert_eq!(
+                        serial.block(i, j),
+                        par.block(i, j),
+                        "threads={threads} block ({i},{j})"
+                    );
                 }
             }
         }

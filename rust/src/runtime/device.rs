@@ -65,7 +65,11 @@ impl Device {
     }
 
     /// Download the state literals back into padded host matrices.
-    pub fn download_partitions(&self, vertex: &Literal, context: &Literal) -> Result<(Vec<f32>, Vec<f32>)> {
+    pub fn download_partitions(
+        &self,
+        vertex: &Literal,
+        context: &Literal,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
         Ok((
             vertex.to_vec::<f32>().map_err(to_anyhow)?,
             context.to_vec::<f32>().map_err(to_anyhow)?,

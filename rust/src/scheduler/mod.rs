@@ -1,4 +1,5 @@
-//! Episode scheduling (paper §3.2, Algorithm 3).
+//! Episode scheduling (paper §3.2, Algorithm 3), generalized to
+//! heterogeneous capacity-aware worker pools.
 //!
 //! For `P` partitions the sample pool redistributes into a `P × P` block
 //! grid. A *pool pass* visits every block exactly once, organized as `P`
@@ -7,6 +8,19 @@
 //! share a vertex-partition row or context-partition column), which is
 //! what lets the workers run without any inter-worker synchronization.
 //!
+//! **Capacity-aware waves.** Each worker `i` declares a capacity `c_i`
+//! (default 1): the number of diagonal blocks it takes per *wave*. A wave
+//! covers `C = Σ c_i` consecutive slots of the diagonal — worker `i` owns
+//! the `c_i`-slot run starting at its capacity prefix — so a group is
+//! `P / C` waves and worker `i` trains `c_i · P / C` blocks per group,
+//! proportional to its capacity. `P` must be a multiple of `C` (the
+//! homogeneous `c_i = 1` case degenerates to the paper's "any number of
+//! partitions greater than n … in subgroups of n": `C = n`, one block per
+//! worker per wave, bitwise the PR-3 schedule). Orthogonality survives
+//! the generalization unchanged: the blocks of a wave — indeed of the
+//! whole group — are distinct slots of one diagonal, hence pairwise
+//! row- and column-disjoint however many of them land on one worker.
+//!
 //! With the bus-usage optimization (§3.4, `fix_context`) the group is
 //! transposed: worker `i` keeps context partition `i` resident and the
 //! *vertex* partitions rotate — saving the context transfer entirely.
@@ -14,15 +28,16 @@
 //! **Residency-aware group ordering** ([`EpisodeSchedule::with_residency_order`]).
 //! Groups are mutually independent (each covers a disjoint diagonal of
 //! blocks), so any execution order is valid. The slot occupied by a
-//! partition in group `g` is a function of `g`, and slots with equal
-//! residue mod `n` belong to the same worker — so executing groups in
-//! residue classes mod `n` (`0, n, 2n, …, 1, n+1, …`) makes the rotating
-//! matrix's partitions return to the *same worker* for every transition
-//! inside a class. The transfer engine then keeps them resident and only
-//! re-uploads at the `n` class boundaries per pass instead of every
-//! group: rotating-partition uploads drop from `P` to `n` per partition
-//! per pass (the sticky matrix — `vid = slot` without `fix_context` —
-//! never leaves its worker at all).
+//! partition in group `g` is a function of `g`, and the slot → worker map
+//! is periodic with period `C` (the capacity pattern repeats every wave) —
+//! so executing groups in residue classes mod `C` (`0, C, 2C, …, 1,
+//! C+1, …`) makes the rotating matrix's partitions return to the *same
+//! worker* for every transition inside a class. The transfer engine then
+//! keeps them resident and only re-uploads at the `C` class boundaries
+//! per pass instead of every group: rotating-partition uploads drop from
+//! `P` to `C` per partition per pass (the sticky matrix — `vid = slot`
+//! without `fix_context` — never leaves its worker at all). For the
+//! homogeneous pool `C = n`, the PR-3 ordering.
 
 /// One block assignment inside an episode group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,40 +56,71 @@ pub struct EpisodeSchedule {
     num_parts: usize,
     num_workers: usize,
     fix_context: bool,
+    /// Per-worker capacities (blocks per wave); `[1; n]` when the pool is
+    /// homogeneous.
+    capacities: Vec<usize>,
+    /// `Σ capacities` — slots per wave.
+    total_capacity: usize,
+    /// Owner of wave offset `o` (`slot → worker` is `slot_owner[slot % C]`).
+    slot_owner: Vec<usize>,
     /// Group ids in execution order (identity unless residency-ordered).
     group_order: Vec<usize>,
 }
 
 impl EpisodeSchedule {
-    /// `num_parts` must be a multiple of `num_workers` (the paper's
-    /// "any number of partitions greater than n … in subgroups of n").
+    /// Homogeneous pool: every worker has capacity 1. `num_parts` must be
+    /// a multiple of `num_workers` (the paper's "any number of partitions
+    /// greater than n … in subgroups of n").
     pub fn new(num_parts: usize, num_workers: usize, fix_context: bool) -> Self {
+        assert!(num_workers >= 1);
+        Self::with_capacities(num_parts, &vec![1; num_workers], fix_context)
+    }
+
+    /// Heterogeneous pool: worker `i` takes `capacities[i]` blocks per
+    /// wave. `num_parts` must be a multiple of the total capacity.
+    pub fn with_capacities(num_parts: usize, capacities: &[usize], fix_context: bool) -> Self {
+        let num_workers = capacities.len();
         assert!(num_parts >= 1 && num_workers >= 1);
         assert!(
-            num_parts % num_workers == 0,
-            "num_parts {num_parts} must be a multiple of num_workers {num_workers}"
+            capacities.iter().all(|&c| c >= 1),
+            "worker capacities must be >= 1, got {capacities:?}"
+        );
+        let total_capacity: usize = capacities.iter().sum();
+        assert!(
+            num_parts % total_capacity == 0,
+            "num_parts {num_parts} must be a multiple of the total worker \
+             capacity {total_capacity} (capacities {capacities:?})"
         );
         assert!(
             !fix_context || num_parts == num_workers,
             "fix_context requires num_parts == num_workers (paper section 3.4)"
         );
+        let slot_owner: Vec<usize> = capacities
+            .iter()
+            .enumerate()
+            .flat_map(|(i, &c)| vec![i; c])
+            .collect();
         EpisodeSchedule {
             num_parts,
             num_workers,
             fix_context,
+            capacities: capacities.to_vec(),
+            total_capacity,
+            slot_owner,
             group_order: (0..num_parts).collect(),
         }
     }
 
-    /// Reorder group execution into residue classes mod `num_workers`
-    /// (`0, n, 2n, …, 1, n+1, …`) so the rotating matrix's partitions
-    /// stay sticky to workers inside each class (see the module docs).
-    /// Coverage and per-group orthogonality are unchanged — groups are
-    /// independent — but the training *order* differs, so runs with and
-    /// without this ordering are distinct (equally valid) trajectories.
+    /// Reorder group execution into residue classes mod the total
+    /// capacity `C` (`0, C, 2C, …, 1, C+1, …`) so the rotating matrix's
+    /// partitions stay sticky to workers inside each class (see the
+    /// module docs — the slot → worker map has period `C`). Coverage and
+    /// per-group orthogonality are unchanged — groups are independent —
+    /// but the training *order* differs, so runs with and without this
+    /// ordering are distinct (equally valid) trajectories.
     pub fn with_residency_order(mut self) -> Self {
-        let (p, n) = (self.num_parts, self.num_workers);
-        self.group_order = (0..n).flat_map(|r| (0..p / n).map(move |q| q * n + r)).collect();
+        let (p, c) = (self.num_parts, self.total_capacity);
+        self.group_order = (0..c).flat_map(|r| (0..p / c).map(move |q| q * c + r)).collect();
         self
     }
 
@@ -87,32 +133,54 @@ impl EpisodeSchedule {
         self.num_parts
     }
 
+    pub fn num_workers(&self) -> usize {
+        self.num_workers
+    }
+
+    /// Per-worker capacities (blocks per wave).
+    pub fn capacities(&self) -> &[usize] {
+        &self.capacities
+    }
+
+    /// Blocks per wave (= `Σ capacities`).
+    pub fn total_capacity(&self) -> usize {
+        self.total_capacity
+    }
+
     /// Episode groups per pool pass (= `num_parts`).
     pub fn num_groups(&self) -> usize {
         self.num_parts
     }
 
-    /// Waves per group: orthogonal blocks processed `num_workers` at a time.
+    /// Waves per group: the diagonal's slots processed `total_capacity`
+    /// at a time.
     pub fn waves_per_group(&self) -> usize {
-        self.num_parts / self.num_workers
+        self.num_parts / self.total_capacity
     }
 
-    /// The assignments of episode group `g`, wave `w`.
+    /// Blocks worker `i` trains per episode group (∝ its capacity).
+    pub fn blocks_per_group(&self, worker: usize) -> usize {
+        self.capacities[worker] * self.waves_per_group()
+    }
+
+    /// The assignments of episode group `g`, wave `w` — `total_capacity`
+    /// blocks, `capacities[i]` of them on worker `i`, in slot order.
     pub fn wave(&self, g: usize, w: usize) -> Vec<Assignment> {
         assert!(g < self.num_groups() && w < self.waves_per_group());
         let p = self.num_parts;
-        (0..self.num_workers)
-            .map(|i| {
-                let slot = w * self.num_workers + i; // position within the diagonal
+        (0..self.total_capacity)
+            .map(|o| {
+                let slot = w * self.total_capacity + o; // position within the diagonal
+                let worker = self.slot_owner[o];
                 if self.fix_context {
-                    // context pinned to worker: cid = i, vertex rotates
+                    // context pinned to its slot's worker: cid = slot, vertex rotates
                     let cid = slot;
                     let vid = (slot + g) % p;
-                    Assignment { worker: i, vid, cid }
+                    Assignment { worker, vid, cid }
                 } else {
                     let vid = slot;
                     let cid = (slot + g) % p;
-                    Assignment { worker: i, vid, cid }
+                    Assignment { worker, vid, cid }
                 }
             })
             .collect()
@@ -143,10 +211,10 @@ impl EpisodeSchedule {
 mod tests {
     use super::*;
 
-    fn check_pass(parts: usize, workers: usize, fix_context: bool) {
-        let s = EpisodeSchedule::new(parts, workers, fix_context);
+    fn check_pass(sched: &EpisodeSchedule) {
+        let parts = sched.num_parts();
         let mut seen = vec![false; parts * parts];
-        for group in s.full_pass() {
+        for group in sched.full_pass() {
             // orthogonality within a group: distinct rows and columns
             let mut rows = vec![false; parts];
             let mut cols = vec![false; parts];
@@ -165,11 +233,76 @@ mod tests {
 
     #[test]
     fn covers_all_blocks_orthogonally() {
-        check_pass(4, 4, false);
-        check_pass(4, 4, true);
-        check_pass(1, 1, false);
-        check_pass(8, 4, false);
-        check_pass(6, 2, false);
+        for (parts, workers, fix_context) in
+            [(4, 4, false), (4, 4, true), (1, 1, false), (8, 4, false), (6, 2, false)]
+        {
+            check_pass(&EpisodeSchedule::new(parts, workers, fix_context));
+        }
+    }
+
+    #[test]
+    fn heterogeneous_capacities_cover_all_blocks_orthogonally() {
+        for (parts, caps) in [
+            (4, vec![1, 3]),
+            (8, vec![1, 3]),
+            (6, vec![1, 2]),
+            (8, vec![2, 2]),
+            (12, vec![1, 2, 3]),
+            (4, vec![4]),
+        ] {
+            check_pass(&EpisodeSchedule::with_capacities(parts, &caps, false));
+            check_pass(
+                &EpisodeSchedule::with_capacities(parts, &caps, false).with_residency_order(),
+            );
+        }
+    }
+
+    #[test]
+    fn waves_respect_declared_capacities() {
+        let caps = [1usize, 3, 2];
+        let s = EpisodeSchedule::with_capacities(12, &caps, false);
+        assert_eq!(s.total_capacity(), 6);
+        assert_eq!(s.waves_per_group(), 2);
+        for g in 0..s.num_groups() {
+            for w in 0..s.waves_per_group() {
+                let wave = s.wave(g, w);
+                assert_eq!(wave.len(), 6);
+                for (i, &c) in caps.iter().enumerate() {
+                    let got = wave.iter().filter(|a| a.worker == i).count();
+                    assert_eq!(got, c, "worker {i} in group {g} wave {w}");
+                }
+            }
+            for (i, &c) in caps.iter().enumerate() {
+                assert_eq!(s.blocks_per_group(i), c * 2);
+                let got = s.group(g).iter().filter(|a| a.worker == i).count();
+                assert_eq!(got, c * 2, "worker {i} blocks in group {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn slot_owner_map_is_periodic_and_contiguous() {
+        // worker i owns the run of c_i consecutive slots after its
+        // capacity prefix, repeating every C slots — the periodicity the
+        // residency ordering's stickiness proof relies on
+        let s = EpisodeSchedule::with_capacities(10, &[2, 1, 2], false);
+        let owners: Vec<usize> = s.wave(0, 0).iter().map(|a| a.worker).collect();
+        assert_eq!(owners, vec![0, 0, 1, 2, 2]);
+        let next: Vec<usize> = s.wave(0, 1).iter().map(|a| a.worker).collect();
+        assert_eq!(next, owners, "owner pattern must repeat every wave");
+    }
+
+    #[test]
+    fn homogeneous_capacities_match_default_schedule_bitwise() {
+        for (p, n, fixc) in [(4, 4, false), (4, 4, true), (8, 4, false), (6, 2, false)] {
+            let ones = vec![1usize; n];
+            let a = EpisodeSchedule::new(p, n, fixc);
+            let b = EpisodeSchedule::with_capacities(p, &ones, fixc);
+            assert_eq!(a.execution_sequence(), b.execution_sequence(), "p={p} n={n}");
+            let a = a.with_residency_order();
+            let b = b.with_residency_order();
+            assert_eq!(a.execution_sequence(), b.execution_sequence(), "p={p} n={n} ordered");
+        }
     }
 
     #[test]
@@ -213,6 +346,9 @@ mod tests {
         // square grids (P == n) have singleton residue classes: unchanged
         let s = EpisodeSchedule::new(4, 4, false).with_residency_order();
         assert_eq!(s.ordered_groups(), &[0, 1, 2, 3]);
+        // heterogeneous pools order by residue mod the total capacity
+        let s = EpisodeSchedule::with_capacities(8, &[1, 3], false).with_residency_order();
+        assert_eq!(s.ordered_groups(), &[0, 4, 1, 5, 2, 6, 3, 7]);
     }
 
     #[test]
@@ -235,6 +371,34 @@ mod tests {
     }
 
     #[test]
+    fn residency_order_keeps_contexts_sticky_for_heterogeneous_pools() {
+        // p=8, capacities [1,3] (C=4): transitions inside a residue class
+        // (consecutive ordered groups g and g+C) must keep every context
+        // partition on the worker that just trained it.
+        let p = 8;
+        let s = EpisodeSchedule::with_capacities(p, &[1, 3], false).with_residency_order();
+        let seq = s.execution_sequence();
+        let worker_of = |group_pos: usize, cid: usize| {
+            seq[group_pos * p..(group_pos + 1) * p]
+                .iter()
+                .find(|a| a.cid == cid)
+                .map(|a| a.worker)
+                .unwrap()
+        };
+        // ordered groups: [0,4, 1,5, 2,6, 3,7] — positions (0,1), (2,3),
+        // (4,5), (6,7) are the intra-class transitions
+        for class in 0..4 {
+            for cid in 0..p {
+                assert_eq!(
+                    worker_of(2 * class, cid),
+                    worker_of(2 * class + 1, cid),
+                    "class {class}: cid {cid} moved workers"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn execution_sequence_matches_full_pass() {
         let s = EpisodeSchedule::new(6, 2, false).with_residency_order();
         let flat: Vec<Assignment> = s.full_pass().into_iter().flatten().collect();
@@ -246,6 +410,19 @@ mod tests {
     #[should_panic(expected = "multiple")]
     fn rejects_nondivisible() {
         EpisodeSchedule::new(5, 2, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn rejects_capacity_nondivisible() {
+        // C = 3 does not divide P = 4
+        EpisodeSchedule::with_capacities(4, &[2, 1], false);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacities must be >= 1")]
+    fn rejects_zero_capacity() {
+        EpisodeSchedule::with_capacities(4, &[0, 4], false);
     }
 
     #[test]

@@ -113,6 +113,62 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// The standard machine-greppable `bench …` record lines for a
+    /// self-recorded `BENCH_*.json` (see `rust/benches/README.md`).
+    pub fn result_lines(&self) -> Vec<String> {
+        self.results
+            .iter()
+            .map(|r| {
+                let thr = r
+                    .throughput()
+                    .map(|t| format!(" ({t:.0}/s)"))
+                    .unwrap_or_default();
+                format!(
+                    "bench {} {:.9} ± {:.9} min {:.9}{thr}",
+                    r.name, r.mean_secs, r.stddev_secs, r.min_secs
+                )
+            })
+            .collect()
+    }
+}
+
+/// Serialize bench output lines as the `rust/benches/README.md`
+/// `BENCH_*.json` shape — `{"argv": …, "lines": […]}` (the offline crate
+/// set has no serde, so this is a minimal hand-rolled emitter).
+pub fn to_json(argv: &str, lines: &[String]) -> String {
+    fn esc(s: &str) -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        for ch in s.chars() {
+            match ch {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+    let mut json = String::from("{\n");
+    json.push_str(&format!(" \"argv\": \"{}\",\n", esc(argv)));
+    json.push_str(" \"lines\": [\n");
+    for (i, line) in lines.iter().enumerate() {
+        let comma = if i + 1 == lines.len() { "" } else { "," };
+        json.push_str(&format!("  \"{}\"{comma}\n", esc(line)));
+    }
+    json.push_str(" ]\n}\n");
+    json
+}
+
+/// Write a self-recorded `BENCH_*.json`, reporting rather than failing on
+/// I/O errors (CI runners and read-only checkouts must not abort a bench
+/// run at the very end).
+pub fn record_json(path: &str, argv: &str, lines: &[String]) {
+    match std::fs::write(path, to_json(argv, lines)) {
+        Ok(()) => println!("recorded {path}"),
+        Err(e) => eprintln!("could not record {path}: {e}"),
+    }
 }
 
 /// Markdown table emitter for experiment harnesses: each paper table is
@@ -206,5 +262,31 @@ mod tests {
     fn table_arity_checked() {
         let mut t = Table::new("Demo", &["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn result_lines_are_greppable() {
+        let mut b = Bencher::with_iters(0, 2);
+        b.bench("plain", || 1);
+        b.bench_items("throughput", 100.0, || 1);
+        let lines = b.result_lines();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("bench plain "));
+        assert!(lines[0].contains(" min "));
+        assert!(!lines[0].contains("/s)"));
+        assert!(lines[1].starts_with("bench throughput "));
+        assert!(lines[1].ends_with("/s)"));
+    }
+
+    #[test]
+    fn json_record_escapes_and_shapes() {
+        let json = to_json("demo scale=tiny", &["a \"quoted\" line".into(), "b".into()]);
+        assert!(json.starts_with("{\n"));
+        assert!(json.contains("\"argv\": \"demo scale=tiny\""));
+        assert!(json.contains("a \\\"quoted\\\" line"));
+        assert!(json.trim_end().ends_with('}'));
+        // empty line set still emits a valid shape
+        let empty = to_json("x", &[]);
+        assert!(empty.contains("\"lines\": [\n ]"));
     }
 }

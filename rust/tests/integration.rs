@@ -28,7 +28,9 @@ fn small_cfg() -> TrainConfig {
         num_workers: 2,
         num_samplers: 2,
         episode_size: 5_000,
-        backend: BackendKind::Native,
+        // CI's backend matrix re-runs this suite per backend via
+        // GRAPHVITE_TEST_BACKEND (default: native)
+        backend: BackendKind::test_backend(),
         shuffle: ShuffleKind::Pseudo,
         ..TrainConfig::default()
     }
@@ -149,9 +151,11 @@ fn all_baselines_produce_finite_embeddings() {
         &DeepWalkConfig { dim: 16, walks_per_node: 2, ..Default::default() },
     )
     .unwrap();
-    let mb =
-        MinibatchGpuBaseline::train(&g, &MinibatchConfig { dim: 16, epochs: 1, ..Default::default() })
-            .unwrap();
+    let mb = MinibatchGpuBaseline::train(
+        &g,
+        &MinibatchConfig { dim: 16, epochs: 1, ..Default::default() },
+    )
+    .unwrap();
     for (name, r) in [("line", &line), ("deepwalk", &dw), ("minibatch", &mb)] {
         assert_eq!(r.embeddings.num_nodes(), 300, "{name}");
         assert!(

@@ -30,7 +30,9 @@ fn base_cfg() -> TrainConfig {
         episode_size: 2_000,
         batch_size: 64,
         fix_context: false, // required for num_partitions > num_workers
-        backend: BackendKind::Native,
+        // CI's backend matrix re-runs this suite per backend via
+        // GRAPHVITE_TEST_BACKEND (default: native)
+        backend: BackendKind::test_backend(),
         shuffle: ShuffleKind::Pseudo,
         seed: 77,
         ..TrainConfig::default()

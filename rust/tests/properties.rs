@@ -7,7 +7,9 @@ use graphvite::embedding::{EmbeddingStore, Matrix};
 use graphvite::graph::{generators, GraphBuilder};
 use graphvite::partition::Partitioner;
 use graphvite::pool::{shuffle, BlockGrid, ShuffleKind};
-use graphvite::sampling::{AliasTable, AugmentConfig, NegativeSampler, OnlineAugmenter, RandomWalker};
+use graphvite::sampling::{
+    AliasTable, AugmentConfig, NegativeSampler, OnlineAugmenter, RandomWalker,
+};
 use graphvite::scheduler::EpisodeSchedule;
 use graphvite::util::prop::forall;
 use graphvite::util::rng::Rng;
@@ -258,7 +260,8 @@ fn prop_pseudo_shuffle_is_exact_permutation() {
     forall("pseudo-permutation", 50, |g| {
         let n = g.usize_in(0..4000);
         let s = g.usize_in(2..9);
-        let orig: Vec<(u32, u32)> = (0..n as u32).map(|i| (i, i.wrapping_mul(2654435761))).collect();
+        let orig: Vec<(u32, u32)> =
+            (0..n as u32).map(|i| (i, i.wrapping_mul(2654435761))).collect();
         let mut pool = orig.clone();
         shuffle::pseudo_shuffle(&mut pool, s);
         assert_eq!(pool.len(), orig.len());

@@ -1,17 +1,27 @@
 //! Deterministic end-to-end regression guard for the coordinator /
 //! scheduler: the same seed trained with `num_workers = 1` and
-//! `num_workers = 2` on the native backend must both produce embeddings
-//! whose link-prediction (graph-reconstruction) AUC clears a fixed floor,
-//! and the two runs must agree on quality. Silent corruption anywhere in
-//! the pipeline — block routing, orthogonal scheduling, partition
-//! gather/scatter, the fix-context residency cache — collapses the AUC to
-//! ~0.5 and trips this test long before it would show up in timing.
+//! `num_workers = 2` must both produce embeddings whose link-prediction
+//! (graph-reconstruction) AUC clears a fixed floor, and the two runs must
+//! agree on quality. Silent corruption anywhere in the pipeline — block
+//! routing, orthogonal scheduling, partition gather/scatter, the
+//! residency caches — collapses the AUC to ~0.5 and trips this test long
+//! before it would show up in timing.
+//!
+//! The AUC floor is an *empirical* gate, so it is swept over PINNED seeds
+//! via [`graphvite::util::gate::seed_sweep`] and asserted on the pass
+//! rate (ROADMAP "Flaky-threshold audit"): corruption collapses every
+//! seed, one unlucky seed may dip. The per-seed `gate-sweep` line lands
+//! in CI logs and the uploaded gate-sweep artifact — the evidence trail
+//! for tightening the floor later.
 //!
 //! Reconstruction (observed edges vs non-edges, see
 //! `eval::graph_reconstruction_auc`) rather than a held-out split: pure
 //! Barabási–Albert graphs have near-zero clustering, so held-out cosine
 //! AUC sits at chance regardless of trainer health (see the workload
 //! notes in `rust/examples/link_prediction.rs` and `experiments/fig4.rs`).
+//!
+//! The backend comes from `GRAPHVITE_TEST_BACKEND` (CI's backend matrix)
+//! and defaults to `native`.
 
 use graphvite::config::{BackendKind, TrainConfig};
 use graphvite::coordinator::Trainer;
@@ -19,6 +29,7 @@ use graphvite::embedding::EmbeddingStore;
 use graphvite::eval::graph_reconstruction_auc;
 use graphvite::graph::{generators, Graph};
 use graphvite::pool::ShuffleKind;
+use graphvite::util::gate::seed_sweep;
 
 fn train_auc(graph: &Graph, num_workers: usize, seed: u64) -> f64 {
     let cfg = TrainConfig {
@@ -28,7 +39,7 @@ fn train_auc(graph: &Graph, num_workers: usize, seed: u64) -> f64 {
         num_samplers: num_workers,
         episode_size: 4_000,
         batch_size: 128,
-        backend: BackendKind::Native,
+        backend: BackendKind::test_backend(),
         shuffle: ShuffleKind::Pseudo,
         seed,
         ..TrainConfig::default()
@@ -49,24 +60,30 @@ fn train_auc(graph: &Graph, num_workers: usize, seed: u64) -> f64 {
 
 // Deliberately loose: a healthy run reconstructs trained edges at AUC
 // well above 0.8 while any corruption collapses to ~0.5, so the floor
-// only needs to split those regimes. (These thresholds are empirical —
-// see ROADMAP "Flaky-threshold audit".)
+// only needs to split those regimes. (Empirical — tighten once enough
+// gate-sweep evidence accumulates in CI artifacts.)
 const AUC_FLOOR: f64 = 0.65;
 
 #[test]
 fn worker_counts_clear_auc_floor_and_agree() {
     let graph = generators::barabasi_albert(600, 3, 42);
-    let auc_1 = train_auc(&graph, 1, 7);
-    let auc_2 = train_auc(&graph, 2, 7);
-    assert!(auc_1 > AUC_FLOOR, "1-worker AUC {auc_1} below floor {AUC_FLOOR}");
-    assert!(auc_2 > AUC_FLOOR, "2-worker AUC {auc_2} below floor {AUC_FLOOR}");
-    // Parallel negative sampling over orthogonal blocks must not cost
-    // quality (paper Table 6): the two runs see the same sample budget
-    // and seed, so their AUCs should land in the same band.
-    assert!(
-        (auc_1 - auc_2).abs() < 0.15,
-        "worker counts disagree: 1w {auc_1} vs 2w {auc_2}"
-    );
+    // score per seed = the worse of the 1-worker and 2-worker AUCs, so a
+    // collapse in either parallelism regime fails that seed
+    let stats = seed_sweep(&[7, 8, 9], |seed| {
+        let auc_1 = train_auc(&graph, 1, seed);
+        let auc_2 = train_auc(&graph, 2, seed);
+        // Parallel negative sampling over orthogonal blocks must not cost
+        // quality (paper Table 6): same sample budget and seed, so the
+        // two AUCs land in the same band. Hard (non-empirical) check.
+        assert!(
+            (auc_1 - auc_2).abs() < 0.15,
+            "seed {seed}: worker counts disagree: 1w {auc_1} vs 2w {auc_2}"
+        );
+        auc_1.min(auc_2)
+    });
+    eprintln!("{}", stats.report("regression.reconstruction_auc", AUC_FLOOR));
+    // at least 2 of the 3 pinned seeds must clear the floor
+    assert!(stats.pass_rate(AUC_FLOOR) >= 2.0 / 3.0, "{:?}", stats.scores);
 }
 
 #[test]
