@@ -44,6 +44,9 @@ fn main() {
     bench_augmentation(&mut b);
     bench_negative(&mut b);
 
+    println!("== out-of-core graph (pack + paged reads) ==");
+    bench_ondisk(&mut b);
+
     println!("== pool shuffles (Table 7 speed column) ==");
     bench_shuffles(&mut b);
 
@@ -120,6 +123,48 @@ fn bench_negative(b: &mut Bencher) {
         }
         acc
     });
+}
+
+/// The packed on-disk graph path: pack throughput, the sequential arc
+/// scan (page-friendly) and random successor reads (cache-hostile) — the
+/// streaming costs training pays when the graph does not fit in RAM.
+fn bench_ondisk(b: &mut Bencher) {
+    use graphvite::graph::{pack_graph, GraphStore, PackOptions, PagedCsr};
+    let g = generators::barabasi_albert(100_000, 5, 21);
+    let dir = std::env::temp_dir().join("graphvite_bench_ondisk");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ba100k.gvpk");
+    let arcs = g.num_arcs() as f64;
+    b.bench_items("ondisk.pack 100k nodes (arcs/s)", arcs, || {
+        pack_graph(&g, &path, &PackOptions::default()).unwrap().payload_bytes
+    });
+    let paged = PagedCsr::open(&path, 1 << 20).unwrap(); // 1 MiB cache: real paging
+    b.bench_items("ondisk.scan paged 1MiB-cache (arcs/s)", arcs, || {
+        let mut n = 0u64;
+        paged.for_each_arc(&mut |_, _, _| n += 1);
+        n
+    });
+    b.bench_items("ondisk.scan in-RAM (arcs/s)", arcs, || {
+        let mut n = 0u64;
+        GraphStore::for_each_arc(&g, &mut |_, _, _| n += 1);
+        n
+    });
+    let mut rng = Rng::new(22);
+    let mut t = Vec::new();
+    let n = if fast() { 20_000 } else { 200_000 };
+    b.bench_items(&format!("ondisk.successors random x{n} (paged)"), n as f64, || {
+        let mut acc = 0usize;
+        for _ in 0..n {
+            paged.successors_into(rng.below_usize(100_000) as u32, &mut t);
+            acc += t.len();
+        }
+        acc
+    });
+    let s = paged.cache_stats();
+    println!(
+        "ondisk page-cache: {} hits, {} misses, {} evictions ({} resident of {} budget)",
+        s.hits, s.misses, s.evictions, s.resident_bytes, s.budget_bytes
+    );
 }
 
 fn bench_shuffles(b: &mut Bencher) {

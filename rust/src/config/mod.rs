@@ -9,6 +9,8 @@ use anyhow::{bail, Result};
 
 use crate::pool::ShuffleKind;
 
+pub use crate::graph::GraphFormat;
+
 /// Which device backend the simulated GPUs run. Every variant corresponds
 /// to an implementation of [`crate::gpu::Backend`]; the PJRT one is only
 /// compiled in with the `pjrt` cargo feature (see [`TrainConfig::validate`]).
@@ -216,6 +218,18 @@ pub struct TrainConfig {
     /// residency on/off runs are not bitwise comparable, unlike
     /// `pipeline_transfers` on/off runs, which are.
     pub residency: bool,
+    /// Which loader a graph path goes through: `auto` sniffs the packed
+    /// magic, `edgelist` forces the text loader (in-RAM CSR), `packed`
+    /// forces the out-of-core [`PagedCsr`](crate::graph::PagedCsr)
+    /// reader and rejects anything else. TOML key `graph_format`, CLI
+    /// `--graph-format`. Synthetic graphs (`--synthetic`) are built in
+    /// RAM and ignore this.
+    pub graph_format: GraphFormat,
+    /// Byte budget of the packed reader's LRU page cache (the resident
+    /// successor-page working set; clamped up to one page at open). TOML
+    /// key `graph_cache_bytes`, CLI `--graph-cache-bytes`. Unused by the
+    /// in-RAM loader.
+    pub graph_cache_bytes: usize,
     /// Mini-batch size fed to the device per step (HLO artifacts fix this
     /// per variant; native backend uses it directly).
     pub batch_size: usize,
@@ -247,6 +261,8 @@ impl Default for TrainConfig {
             fix_context: true,
             pipeline_transfers: true,
             residency: true,
+            graph_format: GraphFormat::Auto,
+            graph_cache_bytes: crate::graph::ondisk::DEFAULT_CACHE_BYTES,
             batch_size: 256,
             seed: 42,
             log_every: 0,
@@ -301,6 +317,12 @@ impl TrainConfig {
         }
         if self.episode_size == 0 || self.batch_size == 0 {
             bail!("episode_size and batch_size must be positive");
+        }
+        if self.graph_cache_bytes == 0 {
+            bail!(
+                "graph_cache_bytes must be positive — it is the page-cache byte \
+                 budget for graph_format = \"packed\"/\"auto\" graphs"
+            );
         }
         if !(self.lr > 0.0) {
             bail!("lr must be positive");
@@ -358,6 +380,7 @@ impl TrainConfig {
         }
         set_num!(num_samplers, "num_samplers", usize);
         set_num!(episode_size, "episode_size", usize);
+        set_num!(graph_cache_bytes, "graph_cache_bytes", usize);
         set_num!(batch_size, "batch_size", usize);
         set_num!(seed, "seed", u64);
         set_num!(log_every, "log_every", usize);
@@ -374,6 +397,12 @@ impl TrainConfig {
                     BackendKind::names_joined()
                 )
             })?;
+        }
+        if let Some(v) = get("graph_format") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("graph_format must be a string"))?;
+            cfg.graph_format = GraphFormat::parse_or_err(s)?;
         }
         macro_rules! set_bool {
             ($field:ident, $key:expr) => {
@@ -557,6 +586,33 @@ mod tests {
         let cfg = TrainConfig { backend: BackendKind::Pjrt, ..TrainConfig::default() };
         cfg.validate().unwrap();
         assert_eq!(BackendKind::best_available(), BackendKind::Pjrt);
+    }
+
+    #[test]
+    fn graph_format_round_trips() {
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\ngraph_format = \"packed\"\ngraph_cache_bytes = 1048576\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.graph_format, GraphFormat::Packed);
+        assert_eq!(cfg.graph_cache_bytes, 1 << 20);
+        // defaults: sniffing loader, 64 MiB page budget
+        let d = TrainConfig::default();
+        assert_eq!(d.graph_format, GraphFormat::Auto);
+        assert_eq!(d.graph_cache_bytes, crate::graph::ondisk::DEFAULT_CACHE_BYTES);
+        // bad values are rejected with the valid spellings in the error
+        let err = TrainConfig::from_toml_str("graph_format = \"mmap\"\n")
+            .unwrap_err()
+            .to_string();
+        for &f in GraphFormat::ALL {
+            assert!(err.contains(f.name()), "error '{err}' misses '{}'", f.name());
+        }
+        assert!(TrainConfig::from_toml_str("graph_format = 3\n").is_err());
+        // a zero page budget cannot load any packed graph — validate refuses
+        let err = TrainConfig::from_toml_str("graph_cache_bytes = 0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("graph_cache_bytes"), "{err}");
     }
 
     #[test]

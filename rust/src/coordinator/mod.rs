@@ -15,7 +15,12 @@
 //!                       recycled), then per episode group: plan
 //!                       transfers (residency), gather partitions into
 //!                       recycled buffers, dispatch ALL waves of the
-//!                       group, scatter results as they arrive
+//!                       group, scatter results as they arrive; while
+//!                       the LAST group's results drain, a helper thread
+//!                       takes the next pool and redistributes it into a
+//!                       second BlockGrid (overlapped refill — the
+//!                       between-pools refill never serializes on the
+//!                       main thread in collaboration mode)
 //!        │ mpsc per worker            ▲ results channel
 //!        ▼                            │
 //!   worker threads   ── one per simulated GPU; owns a gpu::Backend
@@ -77,7 +82,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{BackendKind, TrainConfig};
 use crate::embedding::{EmbeddingStore, Matrix};
-use crate::graph::Graph;
+use crate::graph::{Graph, GraphStore};
 use crate::metrics::{Counters, TrainStats};
 use crate::partition::{Partitioner, Partitioning};
 use crate::pool::shuffle;
@@ -103,22 +108,32 @@ pub type Checkpoint<'a> = &'a mut dyn FnMut(u64, &EmbeddingStore);
 
 /// The GraphVite system handle.
 pub struct Trainer {
-    graph: Arc<Graph>,
+    graph: Arc<dyn GraphStore>,
     config: TrainConfig,
 }
 
 impl Trainer {
+    /// Train off an in-RAM graph (the edge-list loader / generators).
     pub fn new(graph: Graph, config: TrainConfig) -> Result<Self> {
+        Self::from_store(Arc::new(graph), config)
+    }
+
+    /// Train off any [`GraphStore`] — in particular the out-of-core
+    /// [`PagedCsr`](crate::graph::PagedCsr), which streams successor
+    /// pages from disk through its bounded cache while training runs.
+    /// Same seed + config produce bitwise-identical embeddings whichever
+    /// store backs the graph (see `rust/tests/ondisk.rs`).
+    pub fn from_store(graph: Arc<dyn GraphStore>, config: TrainConfig) -> Result<Self> {
         config.validate()?;
         anyhow::ensure!(
             graph.num_nodes() >= config.partitions(),
             "graph smaller than partition count"
         );
-        Ok(Trainer { graph: Arc::new(graph), config })
+        Ok(Trainer { graph, config })
     }
 
-    pub fn graph(&self) -> &Graph {
-        &self.graph
+    pub fn graph(&self) -> &dyn GraphStore {
+        &*self.graph
     }
 
     pub fn config(&self) -> &TrainConfig {
@@ -146,8 +161,8 @@ impl Trainer {
         // ---- preprocessing (paper's "preprocessing time" column) ----
         let mut prep = Stopwatch::started();
         let num_parts = cfg.partitions();
-        let parts = Arc::new(Partitioner::degree_zigzag(&graph, num_parts));
-        let neg = Arc::new(NegativeSampler::new(&graph, &parts));
+        let parts = Arc::new(Partitioner::degree_zigzag(&*graph, num_parts));
+        let neg = Arc::new(NegativeSampler::new(&*graph, &parts));
         let sched = {
             // capacity-aware waves: worker i takes capacities[i] blocks
             // per wave (the homogeneous default is one each — the PR-3
@@ -189,7 +204,7 @@ impl Trainer {
         // walker / departure table / edge sampler per pool fill used to
         // rebuild |V| alias tables per sampler thread per pool on weighted
         // graphs and dominated the profile — EXPERIMENTS.md §Perf.)
-        let sampling = SamplingShared::build(&graph, &cfg);
+        let sampling = SamplingShared::build(&*graph, &cfg);
 
         std::thread::scope(|scope| -> Result<()> {
             // ---- device worker threads ----
@@ -244,6 +259,8 @@ impl Trainer {
                     cfg.residency_limits(),
                 ),
                 grid: BlockGrid::new_empty(num_parts),
+                next_grid: BlockGrid::new_empty(num_parts),
+                grid_prefilled: false,
                 total_samples,
                 samples_planned: 0,
                 outstanding: 0,
@@ -255,10 +272,15 @@ impl Trainer {
             // a producer parked in PoolPair::publish.
             let consume_res: Result<()> = (|| {
                 if cfg.collaboration {
-                    while let Some(pool) = pair.take() {
-                        let drained = runner.consume_pool(
+                    // the first pool is taken here; every later one is
+                    // prefetched (taken + redistributed) during the
+                    // previous pool's final fence drain
+                    let mut next = pair.take();
+                    while let Some(pool) = next.take() {
+                        let (drained, prefetched) = runner.consume_pool(
                             &mut store,
                             pool,
+                            Some(&pair),
                             &mut samples_done,
                             &mut loss_curve,
                         )?;
@@ -268,6 +290,7 @@ impl Trainer {
                             runner.sync_residents(&mut store)?;
                             cb(samples_done, &store);
                         }
+                        next = prefetched;
                     }
                 } else {
                     let mut buf = SamplePool::new();
@@ -275,12 +298,14 @@ impl Trainer {
                         fill_pool_counted(
                             sampling_ref, &cfg, &base_rng, &counters, pool_idx, pool_size, &mut buf,
                         );
-                        buf = runner.consume_pool(
+                        let (drained, _) = runner.consume_pool(
                             &mut store,
                             std::mem::take(&mut buf),
+                            None,
                             &mut samples_done,
                             &mut loss_curve,
                         )?;
+                        buf = drained;
                         if let Some(cb) = checkpoint.as_mut() {
                             runner.sync_residents(&mut store)?;
                             cb(samples_done, &store);
@@ -343,6 +368,15 @@ struct EpisodeRunner<'a> {
     result_rx: &'a mpsc::Receiver<Result<Reply>>,
     engine: TransferEngine,
     grid: BlockGrid,
+    /// Double buffer for the overlapped pool refill: while the LAST
+    /// episode group's in-flight waves drain, a helper thread takes the
+    /// next pool from the [`PoolPair`] and redistributes it into this
+    /// grid (see [`Self::fence_with_prefetch`]), so the refill no longer
+    /// runs sequentially on the main thread between pools.
+    next_grid: BlockGrid,
+    /// `next_grid` holds the redistribution of the pool
+    /// [`Self::consume_pool`] returned last time.
+    grid_prefilled: bool,
     total_samples: u64,
     /// Positive samples *dispatched* so far. Drives the LR schedule: the
     /// trained count of a job equals its block length, so this matches
@@ -354,15 +388,20 @@ struct EpisodeRunner<'a> {
 }
 
 impl EpisodeRunner<'_> {
-    /// Run all episode groups over one pool; returns the drained pool for
-    /// recycling.
+    /// Run all episode groups over one pool; returns the drained pool
+    /// for recycling, plus — when `prefetch` is given — the *next* pool,
+    /// taken and redistributed into [`Self::next_grid`] while the last
+    /// group's in-flight waves drained (the overlapped refill; pass the
+    /// returned pool back in on the next call). `None` from the prefetch
+    /// means the producer finished the stream.
     fn consume_pool(
         &mut self,
         store: &mut EmbeddingStore,
         pool: SamplePool,
+        prefetch: Option<&PoolPair>,
         samples_done: &mut u64,
         loss_curve: &mut Vec<f32>,
-    ) -> Result<SamplePool> {
+    ) -> Result<(SamplePool, Option<SamplePool>)> {
         self.counters.add(&self.counters.samples_generated, pool.len() as u64);
         // In collaboration mode the producer's sampler threads are filling
         // the next pool while we redistribute this one; halve the refill
@@ -375,10 +414,19 @@ impl EpisodeRunner<'_> {
         } else {
             self.cfg.num_samplers
         };
-        self.grid
-            .refill(&pool, self.parts, refill_threads, &mut self.engine.block_spare);
+        if self.grid_prefilled {
+            // `pool` was already redistributed into next_grid during the
+            // previous pool's final drain — just swap the buffers in
+            std::mem::swap(&mut self.grid, &mut self.next_grid);
+            self.grid_prefilled = false;
+        } else {
+            self.grid
+                .refill(&pool, self.parts, refill_threads, &mut self.engine.block_spare);
+        }
         let sched = self.sched;
-        for &g in sched.ordered_groups() {
+        let groups = sched.ordered_groups();
+        let mut prefetched: Option<SamplePool> = None;
+        for (gi, &g) in groups.iter().enumerate() {
             let mut ep_loss = 0.0f64;
             let mut ep_trained = 0u64;
             for w in 0..sched.waves_per_group() {
@@ -403,10 +451,30 @@ impl EpisodeRunner<'_> {
                 }
             }
             // group fence: the next group's gathers overlap this group's
-            // scatters, so every result must land before moving on
-            while self.outstanding > 0 {
-                let res = self.recv_result()?;
-                self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done);
+            // scatters, so every result must land before moving on. At
+            // the LAST group of the pool the fence drain is dead time on
+            // this thread — overlap it with taking + redistributing the
+            // next pool (pure scheduling: dispatch order, absorb
+            // commutativity and the LR schedule are all untouched, so
+            // embeddings stay bitwise-identical — pinned in
+            // rust/tests/pipeline_equivalence.rs).
+            match prefetch.filter(|_| gi + 1 == groups.len()) {
+                Some(pair) => {
+                    prefetched = self.fence_with_prefetch(
+                        store,
+                        pair,
+                        refill_threads,
+                        &mut ep_loss,
+                        &mut ep_trained,
+                        samples_done,
+                    )?;
+                }
+                None => {
+                    while self.outstanding > 0 {
+                        let res = self.recv_result()?;
+                        self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done);
+                    }
+                }
             }
             self.counters.add(&self.counters.episodes, 1);
             if ep_trained > 0 {
@@ -422,6 +490,58 @@ impl EpisodeRunner<'_> {
                 );
             }
         }
+        Ok((pool, prefetched))
+    }
+
+    /// The final group fence of a pool, overlapped with the next pool's
+    /// refill: a helper thread blocks on [`PoolPair::take`] and
+    /// redistributes the pool it gets into [`Self::next_grid`], while
+    /// this thread drains the in-flight results. The block free-list is
+    /// handed to the helper wholesale (buffers absorbed during the drain
+    /// simply start a fresh list — buffer identity never affects trained
+    /// values), and comes back merged afterwards.
+    fn fence_with_prefetch(
+        &mut self,
+        store: &mut EmbeddingStore,
+        pair: &PoolPair,
+        refill_threads: usize,
+        ep_loss: &mut f64,
+        ep_trained: &mut u64,
+        samples_done: &mut u64,
+    ) -> Result<Option<SamplePool>> {
+        let parts = self.parts;
+        let mut grid =
+            std::mem::replace(&mut self.next_grid, BlockGrid::new_empty(parts.num_parts()));
+        let mut spare = std::mem::take(&mut self.engine.block_spare);
+        let (joined, drain) = std::thread::scope(|scope| {
+            let handle = scope.spawn(move || match pair.take() {
+                Some(pool) => {
+                    grid.refill(&pool, parts, refill_threads, &mut spare);
+                    (Some(pool), grid, spare)
+                }
+                None => (None, grid, spare),
+            });
+            let mut drain: Result<()> = Ok(());
+            while self.outstanding > 0 {
+                match self.recv_result() {
+                    Ok(res) => self.absorb(store, res, ep_loss, ep_trained, samples_done),
+                    Err(e) => {
+                        // the helper unblocks on its own: the producer
+                        // either publishes (take returns a pool) or
+                        // finishes (take returns None)
+                        drain = Err(e);
+                        break;
+                    }
+                }
+            }
+            (handle.join(), drain)
+        });
+        let (pool, grid, mut spare) =
+            joined.map_err(|_| anyhow::anyhow!("prefetch refill thread panicked"))?;
+        self.next_grid = grid;
+        self.engine.block_spare.append(&mut spare);
+        self.grid_prefilled = pool.is_some();
+        drain?;
         Ok(pool)
     }
 
@@ -571,7 +691,7 @@ struct SamplingShared<'g> {
 type AliasTableShared = crate::sampling::AliasTable;
 
 impl<'g> SamplingShared<'g> {
-    fn build(graph: &'g Graph, cfg: &TrainConfig) -> Self {
+    fn build(graph: &'g dyn GraphStore, cfg: &TrainConfig) -> Self {
         if cfg.online_augmentation {
             SamplingShared {
                 walker: Some(RandomWalker::new(graph)),
@@ -689,15 +809,24 @@ mod tests {
 
     #[test]
     fn loss_decreases_on_structured_graph() {
+        // Empirical gate, swept over PINNED seeds and asserted on the
+        // pass rate (ROADMAP "Flaky-threshold audit"): a corrupted
+        // pipeline fails to reduce loss on *every* seed, while a single
+        // unlucky seed may plateau. Score = head-minus-tail of the loss
+        // curve; floor 0 = "the curve went down at all".
         let g = generators::planted_partition(500, 5, 20.0, 0.05, 7);
-        let cfg = TrainConfig { epochs: 20, ..small_cfg() };
-        let mut t = Trainer::new(g, cfg).unwrap();
-        let r = t.train().unwrap();
-        let curve = &r.stats.loss_curve;
-        assert!(curve.len() >= 4, "curve {curve:?}");
-        let head: f32 = curve[..2].iter().sum::<f32>() / 2.0;
-        let tail: f32 = curve[curve.len() - 2..].iter().sum::<f32>() / 2.0;
-        assert!(tail < head, "head {head} tail {tail}");
+        let stats = crate::util::gate::seed_sweep(&[5, 6, 7], |seed| {
+            let cfg = TrainConfig { epochs: 20, seed, ..small_cfg() };
+            let mut t = Trainer::new(g.clone(), cfg).unwrap();
+            let r = t.train().unwrap();
+            let curve = &r.stats.loss_curve;
+            assert!(curve.len() >= 4, "curve {curve:?}");
+            let head: f32 = curve[..2].iter().sum::<f32>() / 2.0;
+            let tail: f32 = curve[curve.len() - 2..].iter().sum::<f32>() / 2.0;
+            (head - tail) as f64
+        });
+        eprintln!("{}", stats.report("coordinator.loss_decrease", 0.0));
+        assert!(stats.pass_rate(0.0) >= 2.0 / 3.0, "{:?}", stats.scores);
     }
 
     #[test]

@@ -1,16 +1,28 @@
-//! Graph substrate: CSR storage, edge-list I/O, synthetic generators and
-//! degree statistics.
+//! Graph substrate: CSR storage (in-RAM and out-of-core), edge-list I/O,
+//! synthetic generators and degree statistics.
 //!
 //! GraphVite treats all networks as undirected weighted graphs
-//! (paper section 4.3); [`GraphBuilder`] symmetrizes edges on construction.
+//! (paper section 4.3); [`GraphBuilder`] symmetrizes edges on
+//! construction. Everything downstream of construction — walker,
+//! samplers, partitioner, stats, trainer — consumes the [`GraphStore`]
+//! trait, implemented by both the in-RAM [`Graph`] and the paged
+//! on-disk reader [`PagedCsr`] (`graphvite pack` writes its format;
+//! see [`ondisk`] for the byte layout).
 
 mod builder;
 mod csr;
 pub mod generators;
 mod loader;
+pub mod ondisk;
 mod stats;
+mod store;
 
 pub use builder::GraphBuilder;
 pub use csr::Graph;
 pub use loader::{load_edge_list, save_edge_list};
+pub use ondisk::{
+    load_graph, pack_edge_list, pack_graph, CacheStats, GraphFormat, LoadedGraph, PackOptions,
+    PackStats, PagedCsr,
+};
 pub use stats::{degree_histogram, GraphStats};
+pub use store::GraphStore;

@@ -1,0 +1,1014 @@
+//! Out-of-core graph storage: a versioned on-disk CSR format
+//! (gap + varint successor compression, the webgraph idiom) plus the
+//! [`PagedCsr`] reader that streams it through a bounded LRU page cache.
+//!
+//! GraphVite's headline claim is scale — 66M nodes / 1.8B edges on one
+//! machine — but the edge-list loader materializes the whole CSR in RAM.
+//! This module moves the O(E) part to disk: per-node scalars (offsets,
+//! degrees, weighted degrees, labels) stay resident (O(V), ~18 bytes per
+//! node), while the successor lists are read on demand with
+//! `std::os::unix::fs::FileExt::read_exact_at` — pure std, no mmap crate
+//! needed — into fixed-size pages recycled through an LRU cache bounded
+//! by a configurable byte budget.
+//!
+//! # File layout (`.gvpk`, little-endian throughout)
+//!
+//! ```text
+//! ┌──────────────────────── header, 72 bytes ────────────────────────┐
+//! │ 0   magic        [u8;4]  = "GVPK"                                │
+//! │ 4   version      u32     = 1                                     │
+//! │ 8   num_nodes    u64                                             │
+//! │ 16  num_arcs     u64     (adjacency entries = 2 × edges)         │
+//! │ 24  page_size    u32     (bytes per successor page)              │
+//! │ 28  flags        u32     (bit 0 unit-weights, bit 1 has-labels)  │
+//! │ 32  offsets_pos  u64 ┐                                           │
+//! │ 40  degrees_pos  u64 │  absolute byte positions of the           │
+//! │ 48  wdegrees_pos u64 │  sections below                           │
+//! │ 56  labels_pos   u64 │  (0 when the section is absent)           │
+//! │ 64  pages_pos    u64 ┘                                           │
+//! ├── offsets   (num_nodes + 1) × u64  byte offsets into `pages` ────┤
+//! ├── degrees    num_nodes × u32       adjacency counts              │
+//! ├── wdegrees   num_nodes × f32       weighted degrees              │
+//! ├── labels    [num_nodes × u16]      only with flag bit 1          │
+//! ├── pages      offsets[num_nodes] bytes of per-node records:       │
+//! │                varint(first target),                             │
+//! │                varint(zigzag(gap)) × (degree − 1),               │
+//! │                [f32 × degree weights]  only without flag bit 0   │
+//! └──────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Gaps are zigzag-encoded signed deltas, **not** sorted-ascending
+//! unsigned gaps: the record must reproduce the builder's adjacency
+//! order byte-exactly (neighbor order feeds the walker's RNG indexing,
+//! and training off a packed file must be bitwise-identical to training
+//! off the in-RAM loader). Builder rows are sorted, so the deltas are
+//! small and the compression is the same in practice.
+//!
+//! Fail-loud policy: `open` validates magic, version, section geometry,
+//! offset monotonicity, the degree/arc ledger and the exact file length
+//! (truncation and trailing garbage are both errors). After open, a
+//! record that decodes to the wrong length (corrupt page) or an I/O
+//! error panics — never train on garbage.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{Read, Write};
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{Graph, GraphStore};
+
+/// File magic: "GraphVite PacKed".
+pub const MAGIC: [u8; 4] = *b"GVPK";
+/// On-disk format version this binary reads and writes.
+pub const FORMAT_VERSION: u32 = 1;
+/// Default successor-page size (64 KiB — a few thousand records per page
+/// on typical degree distributions).
+pub const DEFAULT_PAGE_SIZE: u32 = 64 * 1024;
+/// Default page-cache byte budget ([`crate::config::TrainConfig::graph_cache_bytes`]).
+pub const DEFAULT_CACHE_BYTES: usize = 64 * 1024 * 1024;
+
+const HEADER_LEN: usize = 72;
+const FLAG_UNIT_WEIGHTS: u32 = 1;
+const FLAG_HAS_LABELS: u32 = 2;
+
+// ------------------------------------------------------------- format --
+
+/// Which loader a graph path goes through
+/// (`TrainConfig.graph_format` / `--graph-format`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphFormat {
+    /// Sniff the file: packed magic → [`PagedCsr`], anything else → the
+    /// edge-list loader. The default.
+    Auto,
+    /// Force the text edge-list loader (in-RAM CSR).
+    Edgelist,
+    /// Force the packed on-disk reader; non-packed input is an error.
+    Packed,
+}
+
+impl GraphFormat {
+    /// Every format, in display order (mirrors `BackendKind::ALL`).
+    pub const ALL: &'static [GraphFormat] = &[Self::Auto, Self::Edgelist, Self::Packed];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|f| f.name() == s)
+    }
+
+    /// [`Self::parse`] with the one canonical unknown-format error — the
+    /// CLI flags and the TOML key all fail through here so the message
+    /// cannot drift between surfaces.
+    pub fn parse_or_err(s: &str) -> Result<Self> {
+        Self::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown graph format '{s}' (expected one of: {})",
+                Self::names_joined()
+            )
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::Edgelist => "edgelist",
+            Self::Packed => "packed",
+        }
+    }
+
+    /// `"auto|edgelist|packed"` — for usage lines and error messages.
+    pub fn names_joined() -> String {
+        let names: Vec<&str> = Self::ALL.iter().map(|f| f.name()).collect();
+        names.join("|")
+    }
+}
+
+/// `pack` tunables.
+#[derive(Debug, Clone, Copy)]
+pub struct PackOptions {
+    /// Successor-page size in bytes (the cache granularity of readers).
+    pub page_size: u32,
+}
+
+impl Default for PackOptions {
+    fn default() -> Self {
+        PackOptions { page_size: DEFAULT_PAGE_SIZE }
+    }
+}
+
+/// What `pack` wrote (CLI reporting + tests).
+#[derive(Debug, Clone, Copy)]
+pub struct PackStats {
+    pub num_nodes: usize,
+    pub num_arcs: usize,
+    /// Bytes of the compressed successor section.
+    pub payload_bytes: u64,
+    /// Total file size.
+    pub file_bytes: u64,
+}
+
+impl PackStats {
+    /// Compressed successor bytes per adjacency entry (raw in-RAM CSR
+    /// spends 8: u32 target + f32 weight).
+    pub fn bytes_per_arc(&self) -> f64 {
+        if self.num_arcs == 0 {
+            0.0
+        } else {
+            self.payload_bytes as f64 / self.num_arcs as f64
+        }
+    }
+}
+
+#[inline]
+fn zigzag(x: i64) -> u64 {
+    ((x << 1) ^ (x >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+fn put_varint(out: &mut Vec<u8>, mut x: u64) {
+    while x >= 0x80 {
+        out.push((x as u8) | 0x80);
+        x >>= 7;
+    }
+    out.push(x as u8);
+}
+
+fn read_varint(bytes: &[u8], cur: &mut usize) -> Result<u64> {
+    let mut x = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = bytes.get(*cur) else {
+            bail!("varint overruns record (corrupt or truncated page)");
+        };
+        *cur += 1;
+        ensure!(shift < 64, "varint longer than 64 bits (corrupt page)");
+        x |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(x);
+        }
+        shift += 7;
+    }
+}
+
+/// Decode one node record. `weights: Some` also parses the weight tail;
+/// either way the record must be consumed exactly (fail-loud on corrupt
+/// pages).
+fn decode_record(
+    bytes: &[u8],
+    deg: usize,
+    unit_weights: bool,
+    targets: &mut Vec<u32>,
+    mut weights: Option<&mut Vec<f32>>,
+) -> Result<()> {
+    targets.clear();
+    if let Some(w) = weights.as_deref_mut() {
+        w.clear();
+    }
+    let mut cur = 0usize;
+    if deg > 0 {
+        let first = read_varint(bytes, &mut cur)?;
+        ensure!(first <= u32::MAX as u64, "target id out of range (corrupt page)");
+        targets.push(first as u32);
+        let mut prev = first as i64;
+        for _ in 1..deg {
+            let t = prev + unzigzag(read_varint(bytes, &mut cur)?);
+            ensure!(
+                (0..=u32::MAX as i64).contains(&t),
+                "gap walks outside the id range (corrupt page)"
+            );
+            targets.push(t as u32);
+            prev = t;
+        }
+    }
+    if unit_weights {
+        if let Some(w) = weights {
+            w.resize(deg, 1.0);
+        }
+    } else if let Some(w) = weights {
+        for _ in 0..deg {
+            ensure!(cur + 4 <= bytes.len(), "weight tail truncated (corrupt page)");
+            w.push(f32::from_le_bytes(bytes[cur..cur + 4].try_into().unwrap()));
+            cur += 4;
+        }
+    } else {
+        ensure!(
+            bytes.len() >= cur && bytes.len() - cur == 4 * deg,
+            "weight tail has the wrong length (corrupt page)"
+        );
+        cur += 4 * deg;
+    }
+    ensure!(cur == bytes.len(), "record length mismatch (corrupt page)");
+    Ok(())
+}
+
+// --------------------------------------------------------------- pack --
+
+/// Write `graph` as a packed on-disk file (the `graphvite pack` core).
+pub fn pack_graph(graph: &Graph, path: impl AsRef<Path>, opts: &PackOptions) -> Result<PackStats> {
+    ensure!(
+        (16..=1 << 30).contains(&opts.page_size),
+        "page_size {} out of range (16 bytes .. 1 GiB)",
+        opts.page_size
+    );
+    let path = path.as_ref();
+    let n = graph.num_nodes();
+    let unit = graph.unit_weights();
+
+    // encode the successor payload (in RAM: pack is the one-shot step
+    // that already holds the built CSR; readers never do this)
+    let mut offsets: Vec<u64> = Vec::with_capacity(n + 1);
+    let mut pages: Vec<u8> = Vec::with_capacity(graph.num_arcs() * 2);
+    offsets.push(0);
+    for v in 0..n as u32 {
+        let nbrs = graph.neighbors(v);
+        if let Some((&first, rest)) = nbrs.split_first() {
+            put_varint(&mut pages, first as u64);
+            let mut prev = first as i64;
+            for &t in rest {
+                put_varint(&mut pages, zigzag(t as i64 - prev));
+                prev = t as i64;
+            }
+        }
+        if !unit {
+            for &w in graph.neighbor_weights(v) {
+                pages.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        offsets.push(pages.len() as u64);
+    }
+
+    let offsets_pos = HEADER_LEN as u64;
+    let degrees_pos = offsets_pos + 8 * (n as u64 + 1);
+    let wdegrees_pos = degrees_pos + 4 * n as u64;
+    let labels_pos = if graph.labels().is_some() { wdegrees_pos + 4 * n as u64 } else { 0 };
+    let pages_pos = if labels_pos != 0 {
+        labels_pos + 2 * n as u64
+    } else {
+        wdegrees_pos + 4 * n as u64
+    };
+
+    let mut flags = 0u32;
+    if unit {
+        flags |= FLAG_UNIT_WEIGHTS;
+    }
+    if graph.labels().is_some() {
+        flags |= FLAG_HAS_LABELS;
+    }
+
+    let mut w = std::io::BufWriter::new(
+        File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    w.write_all(&MAGIC)?;
+    w.write_all(&FORMAT_VERSION.to_le_bytes())?;
+    w.write_all(&(n as u64).to_le_bytes())?;
+    w.write_all(&(graph.num_arcs() as u64).to_le_bytes())?;
+    w.write_all(&opts.page_size.to_le_bytes())?;
+    w.write_all(&flags.to_le_bytes())?;
+    for pos in [offsets_pos, degrees_pos, wdegrees_pos, labels_pos, pages_pos] {
+        w.write_all(&pos.to_le_bytes())?;
+    }
+    for &off in &offsets {
+        w.write_all(&off.to_le_bytes())?;
+    }
+    for v in 0..n as u32 {
+        w.write_all(&(graph.degree(v) as u32).to_le_bytes())?;
+    }
+    for v in 0..n as u32 {
+        w.write_all(&graph.weighted_degree(v).to_le_bytes())?;
+    }
+    if let Some(labels) = graph.labels() {
+        for &l in labels {
+            w.write_all(&l.to_le_bytes())?;
+        }
+    }
+    w.write_all(&pages)?;
+    w.flush()?;
+
+    Ok(PackStats {
+        num_nodes: n,
+        num_arcs: graph.num_arcs(),
+        payload_bytes: pages.len() as u64,
+        file_bytes: pages_pos + pages.len() as u64,
+    })
+}
+
+/// Load an edge list and pack it — the `graphvite pack` subcommand body.
+pub fn pack_edge_list(
+    input: impl AsRef<Path>,
+    output: impl AsRef<Path>,
+    opts: &PackOptions,
+) -> Result<PackStats> {
+    let graph = super::load_edge_list(input)?;
+    pack_graph(&graph, output, opts)
+}
+
+/// True when `path` starts with the packed magic (the `auto` sniff).
+pub fn is_packed(path: impl AsRef<Path>) -> bool {
+    let Ok(mut f) = File::open(path) else {
+        return false;
+    };
+    let mut m = [0u8; 4];
+    f.read_exact(&mut m).is_ok() && m == MAGIC
+}
+
+// ------------------------------------------------------------- reader --
+
+/// Snapshot of the reader's page-cache counters (CI's `ondisk-smoke` job
+/// greps the line `cmd_train` prints from these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Bytes of page data currently cached (≤ `budget_bytes`, except
+    /// when a single page exceeds the budget — one page is always
+    /// admitted).
+    pub resident_bytes: usize,
+    pub budget_bytes: usize,
+    pub page_size: usize,
+}
+
+const NIL: usize = usize::MAX;
+
+struct Slot {
+    page: u64,
+    data: Vec<u8>,
+    prev: usize,
+    next: usize,
+}
+
+/// Intrusive-list LRU over fixed-size pages, bounded by a byte budget.
+struct PageCache {
+    budget: usize,
+    bytes: usize,
+    map: HashMap<u64, usize>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+    /// Reassembly buffer for records that straddle a page boundary.
+    span_buf: Vec<u8>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl PageCache {
+    fn new(budget: usize) -> Self {
+        PageCache {
+            budget,
+            bytes: 0,
+            map: HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            span_buf: Vec::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.slots[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.slots[next].prev = prev;
+        }
+        self.slots[i].prev = NIL;
+        self.slots[i].next = NIL;
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Return the slot of `page`, loading (and evicting) as needed.
+    fn ensure(&mut self, page: u64, io: &PageIo<'_>) -> Result<usize> {
+        if let Some(&i) = self.map.get(&page) {
+            self.hits += 1;
+            if self.head != i {
+                self.detach(i);
+                self.push_front(i);
+            }
+            return Ok(i);
+        }
+        self.misses += 1;
+        let len = io.page_len(page);
+        // evict from the cold tail until the new page fits (the budget
+        // always admits at least this one page)
+        while self.bytes + len > self.budget && self.tail != NIL {
+            let t = self.tail;
+            self.detach(t);
+            self.map.remove(&self.slots[t].page);
+            self.bytes -= self.slots[t].data.len();
+            self.evictions += 1;
+            self.free.push(t);
+        }
+        let i = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(Slot { page: 0, data: Vec::new(), prev: NIL, next: NIL });
+                self.slots.len() - 1
+            }
+        };
+        self.slots[i].page = page;
+        self.slots[i].data.resize(len, 0);
+        if let Err(e) = io.read_page(page, &mut self.slots[i].data) {
+            self.free.push(i);
+            return Err(e);
+        }
+        self.map.insert(page, i);
+        self.bytes += len;
+        self.push_front(i);
+        Ok(i)
+    }
+}
+
+/// The read-side file geometry `PageCache::ensure` loads through.
+struct PageIo<'a> {
+    file: &'a File,
+    pages_pos: u64,
+    pages_len: u64,
+    page_size: usize,
+}
+
+impl PageIo<'_> {
+    fn page_len(&self, page: u64) -> usize {
+        let start = page * self.page_size as u64;
+        (self.pages_len - start).min(self.page_size as u64) as usize
+    }
+
+    fn read_page(&self, page: u64, buf: &mut [u8]) -> Result<()> {
+        let start = page * self.page_size as u64;
+        self.file
+            .read_exact_at(buf, self.pages_pos + start)
+            .with_context(|| format!("read page {page} (file shrank after open?)"))
+    }
+}
+
+/// Out-of-core CSR reader over a packed file: O(V) resident scalars, the
+/// O(E) successor payload streamed through a byte-bounded LRU page cache.
+///
+/// Thread-safe (`GraphStore: Send + Sync`): the cache sits behind one
+/// mutex, held only for the page lookup + record copy of each access.
+/// Sampler threads therefore serialize on page fetches — acceptable for
+/// the streaming regime this targets; per-thread cursors are the next
+/// step if the lock ever shows up in profiles (see ARCHITECTURE.md).
+pub struct PagedCsr {
+    file: File,
+    page_size: usize,
+    pages_pos: u64,
+    pages_len: u64,
+    num_arcs: u64,
+    unit_weights: bool,
+    offsets: Vec<u64>,
+    degrees: Vec<u32>,
+    wdegrees: Vec<f32>,
+    labels: Option<Vec<u16>>,
+    cache: Mutex<PageCache>,
+}
+
+impl PagedCsr {
+    /// Open a packed graph with a page cache bounded at `cache_bytes`
+    /// (clamped up to one page so progress is always possible).
+    /// Validates the whole resident geometry before returning — a file
+    /// this accepts either reads cleanly or is corrupt at page level
+    /// (which then fails loudly at access time).
+    pub fn open(path: impl AsRef<Path>, cache_bytes: usize) -> Result<Self> {
+        let path = path.as_ref();
+        let mut file =
+            File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut hdr = [0u8; HEADER_LEN];
+        file.read_exact(&mut hdr)
+            .map_err(|_| anyhow::anyhow!("{}: truncated header", path.display()))?;
+        ensure!(
+            hdr[..4] == MAGIC,
+            "{}: not a packed graphvite graph (bad magic; produce one with \
+             `graphvite pack`)",
+            path.display()
+        );
+        let u32_at = |at: usize| u32::from_le_bytes(hdr[at..at + 4].try_into().unwrap());
+        let u64_at = |at: usize| u64::from_le_bytes(hdr[at..at + 8].try_into().unwrap());
+        let version = u32_at(4);
+        ensure!(
+            version == FORMAT_VERSION,
+            "{}: unsupported packed-graph version {version} (this binary reads \
+             version {FORMAT_VERSION})",
+            path.display()
+        );
+        let n = u64_at(8) as usize;
+        let num_arcs = u64_at(16);
+        let page_size = u32_at(24);
+        let flags = u32_at(28);
+        let offsets_pos = u64_at(32);
+        let degrees_pos = u64_at(40);
+        let wdegrees_pos = u64_at(48);
+        let labels_pos = u64_at(56);
+        let pages_pos = u64_at(64);
+        ensure!(
+            (16..=1 << 30).contains(&page_size),
+            "{}: page_size {page_size} out of range",
+            path.display()
+        );
+        // Bound the node count by the file size FIRST: the resident
+        // sections alone need > 16 bytes/node, so any real file has
+        // n < file_len / 16 — and with n bounded, none of the section
+        // arithmetic below can overflow (a corrupt 2^61 node count must
+        // neither wrap the geometry checks nor become a huge alloc).
+        let file_len = file.metadata()?.len();
+        ensure!(
+            (n as u64) < file_len / 16,
+            "{}: node count {n} exceeds what a {file_len}-byte file can hold \
+             (corrupt header)",
+            path.display()
+        );
+        let has_labels = flags & FLAG_HAS_LABELS != 0;
+        let expected_labels_pos = if has_labels { wdegrees_pos + 4 * n as u64 } else { 0 };
+        let expected_pages_pos =
+            wdegrees_pos + 4 * n as u64 + if has_labels { 2 * n as u64 } else { 0 };
+        ensure!(
+            offsets_pos == HEADER_LEN as u64
+                && degrees_pos == offsets_pos + 8 * (n as u64 + 1)
+                && wdegrees_pos == degrees_pos + 4 * n as u64
+                && labels_pos == expected_labels_pos
+                && pages_pos == expected_pages_pos,
+            "{}: section table does not match the declared node count (corrupt header)",
+            path.display()
+        );
+        ensure!(
+            pages_pos <= file_len,
+            "{}: sections overrun the file — truncated or corrupt header",
+            path.display()
+        );
+
+        let read_section = |file: &mut File, len: usize, what: &str| -> Result<Vec<u8>> {
+            let mut buf = vec![0u8; len];
+            file.read_exact(&mut buf)
+                .map_err(|_| anyhow::anyhow!("{}: truncated {what} section", path.display()))?;
+            Ok(buf)
+        };
+        let raw = read_section(&mut file, 8 * (n + 1), "offsets")?;
+        let offsets: Vec<u64> = raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let raw = read_section(&mut file, 4 * n, "degrees")?;
+        let degrees: Vec<u32> = raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let raw = read_section(&mut file, 4 * n, "weighted-degrees")?;
+        let wdegrees: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let labels = if has_labels {
+            let raw = read_section(&mut file, 2 * n, "labels")?;
+            Some(
+                raw.chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+
+        ensure!(offsets[0] == 0, "{}: offsets must start at 0 (corrupt header)", path.display());
+        ensure!(
+            offsets.windows(2).all(|w| w[0] <= w[1]),
+            "{}: non-monotone offset table (corrupt header)",
+            path.display()
+        );
+        ensure!(
+            degrees.iter().map(|&d| d as u64).sum::<u64>() == num_arcs,
+            "{}: degree table disagrees with the declared arc count (corrupt header)",
+            path.display()
+        );
+        let pages_len = *offsets.last().unwrap();
+        ensure!(
+            file_len == pages_pos + pages_len,
+            "{}: file is {file_len} bytes but the header implies {} — truncated \
+             or trailing garbage",
+            path.display(),
+            pages_pos + pages_len
+        );
+
+        // the budget must admit at least one page or no record is readable
+        let budget = cache_bytes.max(page_size as usize);
+        Ok(PagedCsr {
+            file,
+            page_size: page_size as usize,
+            pages_pos,
+            pages_len,
+            num_arcs,
+            unit_weights: flags & FLAG_UNIT_WEIGHTS != 0,
+            offsets,
+            degrees,
+            wdegrees,
+            labels,
+            cache: Mutex::new(PageCache::new(budget)),
+        })
+    }
+
+    /// Page-cache counters (hits/misses/evictions + residency).
+    pub fn cache_stats(&self) -> CacheStats {
+        let c = self.cache.lock().unwrap();
+        CacheStats {
+            hits: c.hits,
+            misses: c.misses,
+            evictions: c.evictions,
+            resident_bytes: c.bytes,
+            budget_bytes: c.budget,
+            page_size: self.page_size,
+        }
+    }
+
+    /// Run `f` over node `v`'s raw record bytes, served from the page
+    /// cache (single-page records decode in place; boundary-straddling
+    /// ones reassemble through the cache's span buffer).
+    fn with_record<R>(&self, v: u32, f: impl FnOnce(&[u8]) -> Result<R>) -> Result<R> {
+        let start = self.offsets[v as usize];
+        let end = self.offsets[v as usize + 1];
+        debug_assert!(start < end, "with_record on an empty record");
+        let ps = self.page_size as u64;
+        let io = PageIo {
+            file: &self.file,
+            pages_pos: self.pages_pos,
+            pages_len: self.pages_len,
+            page_size: self.page_size,
+        };
+        let first_page = start / ps;
+        let last_page = (end - 1) / ps;
+        let mut cache = self.cache.lock().unwrap();
+        if first_page == last_page {
+            let i = cache.ensure(first_page, &io)?;
+            let lo = (start - first_page * ps) as usize;
+            let hi = (end - first_page * ps) as usize;
+            f(&cache.slots[i].data[lo..hi])
+        } else {
+            let mut buf = std::mem::take(&mut cache.span_buf);
+            buf.clear();
+            for page in first_page..=last_page {
+                let i = cache.ensure(page, &io)?;
+                let data = &cache.slots[i].data;
+                let lo = if page == first_page { (start - page * ps) as usize } else { 0 };
+                let hi = if page == last_page { (end - page * ps) as usize } else { data.len() };
+                buf.extend_from_slice(&data[lo..hi]);
+            }
+            let r = f(&buf);
+            cache.span_buf = buf;
+            r
+        }
+    }
+
+    fn record<R>(&self, v: u32, f: impl FnOnce(&[u8]) -> Result<R>) -> R {
+        self.with_record(v, f)
+            .unwrap_or_else(|e| panic!("paged graph: reading node {v} failed: {e:#}"))
+    }
+}
+
+impl GraphStore for PagedCsr {
+    fn num_nodes(&self) -> usize {
+        self.degrees.len()
+    }
+
+    fn num_edges(&self) -> usize {
+        (self.num_arcs / 2) as usize
+    }
+
+    fn num_arcs(&self) -> usize {
+        self.num_arcs as usize
+    }
+
+    fn degree(&self, v: u32) -> usize {
+        self.degrees[v as usize] as usize
+    }
+
+    fn weighted_degree(&self, v: u32) -> f32 {
+        self.wdegrees[v as usize]
+    }
+
+    fn weighted_degrees(&self) -> &[f32] {
+        &self.wdegrees
+    }
+
+    fn unit_weights(&self) -> bool {
+        self.unit_weights
+    }
+
+    fn labels(&self) -> Option<&[u16]> {
+        self.labels.as_deref()
+    }
+
+    fn successors_into(&self, v: u32, targets: &mut Vec<u32>) {
+        let deg = self.degrees[v as usize] as usize;
+        if deg == 0 {
+            targets.clear();
+            return;
+        }
+        self.record(v, |b| decode_record(b, deg, self.unit_weights, targets, None));
+    }
+
+    fn neighborhood_into(&self, v: u32, targets: &mut Vec<u32>, weights: &mut Vec<f32>) {
+        let deg = self.degrees[v as usize] as usize;
+        if deg == 0 {
+            targets.clear();
+            weights.clear();
+            return;
+        }
+        self.record(v, |b| decode_record(b, deg, self.unit_weights, targets, Some(weights)));
+    }
+
+    fn for_each_arc(&self, f: &mut dyn FnMut(u32, u32, f32)) {
+        let mut t = Vec::new();
+        let mut w = Vec::new();
+        for v in 0..self.num_nodes() as u32 {
+            self.neighborhood_into(v, &mut t, &mut w);
+            for (&tt, &ww) in t.iter().zip(&w) {
+                f(v, tt, ww);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- loader --
+
+/// A graph loaded through [`load_graph`]: the trait object for the
+/// trainer plus the concrete paged handle when the source was packed
+/// (for page-cache reporting).
+pub enum LoadedGraph {
+    InMemory(Arc<Graph>),
+    Paged(Arc<PagedCsr>),
+}
+
+impl LoadedGraph {
+    /// The store handle training runs on.
+    pub fn store(&self) -> Arc<dyn GraphStore> {
+        match self {
+            LoadedGraph::InMemory(g) => Arc::clone(g) as Arc<dyn GraphStore>,
+            LoadedGraph::Paged(p) => Arc::clone(p) as Arc<dyn GraphStore>,
+        }
+    }
+
+    /// The paged reader, when the graph is out-of-core.
+    pub fn paged(&self) -> Option<&Arc<PagedCsr>> {
+        match self {
+            LoadedGraph::Paged(p) => Some(p),
+            LoadedGraph::InMemory(_) => None,
+        }
+    }
+}
+
+/// Load `path` according to `format` (`cache_bytes` bounds the page
+/// cache of the packed path). Bad combinations fail loudly: `packed` on
+/// a non-packed file dies on the reader's bad-magic check (and a
+/// missing file on its real I/O error), `edgelist` on a packed file is
+/// rejected here with a pointer at the right invocation.
+pub fn load_graph(
+    path: impl AsRef<Path>,
+    format: GraphFormat,
+    cache_bytes: usize,
+) -> Result<LoadedGraph> {
+    let path = path.as_ref();
+    let packed = is_packed(path);
+    match format {
+        GraphFormat::Auto => {
+            if packed {
+                Ok(LoadedGraph::Paged(Arc::new(PagedCsr::open(path, cache_bytes)?)))
+            } else {
+                Ok(LoadedGraph::InMemory(Arc::new(super::load_edge_list(path)?)))
+            }
+        }
+        GraphFormat::Packed => {
+            // open directly rather than pre-sniffing: a missing file
+            // surfaces its real I/O error and a non-packed file fails
+            // open's own bad-magic check, instead of both collapsing
+            // into one misleading "not packed" message
+            Ok(LoadedGraph::Paged(Arc::new(PagedCsr::open(path, cache_bytes)?)))
+        }
+        GraphFormat::Edgelist => {
+            ensure!(
+                !packed,
+                "{}: graph_format = \"edgelist\" but the file is a packed graph \
+                 (use --graph-format packed or auto)",
+                path.display()
+            );
+            Ok(LoadedGraph::InMemory(Arc::new(super::load_edge_list(path)?)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, GraphBuilder};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("graphvite_ondisk_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        let mut buf = Vec::new();
+        let values = [0u64, 1, 127, 128, 300, 16_383, 16_384, u32::MAX as u64, u64::MAX];
+        for &v in &values {
+            buf.clear();
+            put_varint(&mut buf, v);
+            let mut cur = 0;
+            assert_eq!(read_varint(&buf, &mut cur).unwrap(), v);
+            assert_eq!(cur, buf.len());
+        }
+        // truncated varint fails loudly
+        buf.clear();
+        put_varint(&mut buf, 10_000);
+        buf.pop();
+        let mut cur = 0;
+        assert!(read_varint(&buf, &mut cur).is_err());
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for x in [0i64, 1, -1, 2, -2, 63, -64, i64::from(u32::MAX), -i64::from(u32::MAX)] {
+            assert_eq!(unzigzag(zigzag(x)), x, "x={x}");
+        }
+    }
+
+    #[test]
+    fn pack_open_roundtrip_karate() {
+        let g = generators::karate_club();
+        let path = tmp("karate.gvpk");
+        let stats = pack_graph(&g, &path, &PackOptions::default()).unwrap();
+        assert_eq!(stats.num_nodes, 34);
+        assert_eq!(stats.num_arcs, 156);
+        assert!(stats.bytes_per_arc() < 8.0, "no compression: {}", stats.bytes_per_arc());
+        let p = PagedCsr::open(&path, DEFAULT_CACHE_BYTES).unwrap();
+        assert_eq!(GraphStore::num_nodes(&p), 34);
+        assert_eq!(GraphStore::num_edges(&p), 78);
+        assert!(p.unit_weights());
+        assert_eq!(p.labels(), g.labels());
+        let mut t = Vec::new();
+        for v in 0..34u32 {
+            p.successors_into(v, &mut t);
+            assert_eq!(t, g.neighbors(v), "node {v}");
+        }
+    }
+
+    #[test]
+    fn weighted_graph_roundtrips_exact_bits() {
+        let mut b = GraphBuilder::new().with_num_nodes(6);
+        b.push_edge(0, 1, 0.1);
+        b.push_edge(0, 2, 2.5);
+        b.push_edge(3, 4, 1.0e-7);
+        let g = b.build();
+        let path = tmp("weighted.gvpk");
+        pack_graph(&g, &path, &PackOptions { page_size: 16 }).unwrap();
+        let p = PagedCsr::open(&path, 64).unwrap();
+        assert!(!p.unit_weights());
+        let (mut t, mut w) = (Vec::new(), Vec::new());
+        for v in 0..6u32 {
+            p.neighborhood_into(v, &mut t, &mut w);
+            assert_eq!(t, g.neighbors(v));
+            // exact f32 bits, not approximate equality
+            let got: Vec<u32> = w.iter().map(|x| x.to_bits()).collect();
+            let want: Vec<u32> = g.neighbor_weights(v).iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want, "node {v}");
+            assert_eq!(p.weighted_degree(v).to_bits(), g.weighted_degree(v).to_bits());
+        }
+    }
+
+    #[test]
+    fn tiny_pages_force_boundary_straddling_records() {
+        // page_size 16 guarantees multi-page records on any real degree
+        let g = generators::barabasi_albert(200, 4, 5);
+        let path = tmp("straddle.gvpk");
+        pack_graph(&g, &path, &PackOptions { page_size: 16 }).unwrap();
+        let p = PagedCsr::open(&path, 16 * 4).unwrap(); // 4 resident pages
+        let mut t = Vec::new();
+        for v in 0..200u32 {
+            p.successors_into(v, &mut t);
+            assert_eq!(t, g.neighbors(v), "node {v}");
+        }
+        let s = p.cache_stats();
+        assert!(s.evictions > 0, "tiny budget must evict: {s:?}");
+        assert!(s.resident_bytes <= s.budget_bytes);
+    }
+
+    #[test]
+    fn cache_hits_on_rescan() {
+        let g = generators::karate_club();
+        let path = tmp("hits.gvpk");
+        pack_graph(&g, &path, &PackOptions::default()).unwrap();
+        let p = PagedCsr::open(&path, DEFAULT_CACHE_BYTES).unwrap();
+        let mut t = Vec::new();
+        p.successors_into(0, &mut t);
+        let cold = p.cache_stats();
+        p.successors_into(1, &mut t);
+        let warm = p.cache_stats();
+        assert_eq!(warm.misses, cold.misses, "second read within the same page");
+        assert!(warm.hits > cold.hits);
+    }
+
+    #[test]
+    fn loader_format_combinations() {
+        let g = generators::karate_club();
+        let packed = tmp("combo.gvpk");
+        pack_graph(&g, &packed, &PackOptions::default()).unwrap();
+        let text = tmp("combo.txt");
+        crate::graph::save_edge_list(&g, &text).unwrap();
+
+        assert!(load_graph(&packed, GraphFormat::Auto, 1 << 20).unwrap().paged().is_some());
+        assert!(load_graph(&text, GraphFormat::Auto, 1 << 20).unwrap().paged().is_none());
+        assert!(load_graph(&packed, GraphFormat::Packed, 1 << 20).is_ok());
+        assert!(load_graph(&text, GraphFormat::Edgelist, 1 << 20).is_ok());
+        // the bad combinations fail with pointed errors
+        let err = load_graph(&text, GraphFormat::Packed, 1 << 20).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+        let err = load_graph(&packed, GraphFormat::Edgelist, 1 << 20).unwrap_err().to_string();
+        assert!(err.contains("is a packed graph"), "{err}");
+        // a missing file under `packed` surfaces the real I/O error, not
+        // a misleading "not packed" hint
+        let err = load_graph(tmp("nope.gvpk"), GraphFormat::Packed, 1 << 20)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("open"), "{err}");
+    }
+
+    #[test]
+    fn graph_format_parses() {
+        for &f in GraphFormat::ALL {
+            assert_eq!(GraphFormat::parse(f.name()), Some(f));
+            assert_eq!(GraphFormat::parse_or_err(f.name()).unwrap(), f);
+            assert!(GraphFormat::names_joined().contains(f.name()));
+        }
+        assert_eq!(GraphFormat::parse("mmap"), None);
+        // the shared error (CLI flags + TOML key) names every valid spelling
+        let err = GraphFormat::parse_or_err("mmap").unwrap_err().to_string();
+        for &f in GraphFormat::ALL {
+            assert!(err.contains(f.name()), "error '{err}' misses '{}'", f.name());
+        }
+    }
+}

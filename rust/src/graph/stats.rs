@@ -1,7 +1,7 @@
 //! Degree statistics (used by DESIGN/EXPERIMENTS reporting and the
 //! partitioner's sanity checks).
 
-use super::Graph;
+use super::GraphStore;
 
 /// Summary statistics for a graph.
 #[derive(Debug, Clone, PartialEq)]
@@ -17,7 +17,9 @@ pub struct GraphStats {
 }
 
 impl GraphStats {
-    pub fn compute(g: &Graph) -> Self {
+    /// Works off any [`GraphStore`] — degrees are resident for both the
+    /// in-RAM and the paged store, so this never touches successor pages.
+    pub fn compute(g: &dyn GraphStore) -> Self {
         let n = g.num_nodes();
         let mut degrees: Vec<usize> = (0..n as u32).map(|v| g.degree(v)).collect();
         let total: usize = degrees.iter().sum();
@@ -38,7 +40,7 @@ impl GraphStats {
 }
 
 /// Log-binned degree histogram: (bin upper bound, count).
-pub fn degree_histogram(g: &Graph) -> Vec<(usize, usize)> {
+pub fn degree_histogram(g: &dyn GraphStore) -> Vec<(usize, usize)> {
     let mut bins: Vec<(usize, usize)> = Vec::new();
     let mut bound = 1usize;
     loop {

@@ -1,0 +1,195 @@
+//! The [`GraphStore`] seam: one read-only graph interface implemented by
+//! both the in-RAM CSR ([`Graph`](super::Graph)) and the out-of-core
+//! paged reader ([`PagedCsr`](super::PagedCsr)), so the sampling stack —
+//! random walker, online augmenter, edge sampler, negative sampler,
+//! partitioner, stats — trains off either without knowing which.
+//!
+//! Design constraints:
+//!
+//! * **Object safety.** The trainer holds `Arc<dyn GraphStore>`; every
+//!   method is dyn-compatible (visitor closures instead of generic
+//!   iterators, caller-supplied output buffers instead of borrowed
+//!   slices).
+//! * **O(V) resident, O(E) streamable.** Per-node scalars (degrees,
+//!   weighted degrees, labels) are cheap enough to keep in RAM even at
+//!   paper scale (66M nodes ≈ 1.2 GB); only the successor lists — the
+//!   O(E) part — go through the streaming methods, which an out-of-core
+//!   store serves from a bounded page cache.
+//! * **Identical observation order.** `successors_into` must yield the
+//!   same targets in the same order as the in-RAM adjacency: training off
+//!   a packed file is bitwise-identical to training off the loader
+//!   (asserted in `rust/tests/ondisk.rs`), because every RNG draw that
+//!   depends on a neighbor list sees the same list.
+//!
+//! Storage errors *after* a successful open (I/O failure, page-level
+//! corruption) panic rather than return: the trait keeps infallible
+//! signatures so the hot sampling loop stays clean, and a mid-training
+//! disk fault is unrecoverable anyway — fail loud, never train on
+//! garbage.
+
+use super::Graph;
+
+/// Read-only graph access for the sampling/training stack. Implemented
+/// by the in-RAM [`Graph`] and the on-disk [`PagedCsr`](super::PagedCsr).
+pub trait GraphStore: Send + Sync {
+    /// Number of nodes (dense `u32` ids `0..num_nodes`).
+    fn num_nodes(&self) -> usize;
+
+    /// Number of undirected edges.
+    fn num_edges(&self) -> usize;
+
+    /// Total adjacency entries (directed arc count = 2 × edges).
+    fn num_arcs(&self) -> usize;
+
+    /// Unweighted out-degree of `v`.
+    fn degree(&self, v: u32) -> usize;
+
+    /// Weighted degree of `v` (sum of incident weights).
+    fn weighted_degree(&self, v: u32) -> f32;
+
+    /// All weighted degrees, indexed by node id (resident; feeds the
+    /// departure-node alias table and the negative sampler).
+    fn weighted_degrees(&self) -> &[f32];
+
+    /// True if every edge weight is exactly 1.0 (enables the uniform
+    /// neighbor-choice fast path — no alias tables).
+    fn unit_weights(&self) -> bool;
+
+    /// Community labels, if the graph carries them.
+    fn labels(&self) -> Option<&[u16]>;
+
+    /// Borrow `v`'s neighbor list directly when the store is resident.
+    /// `None` means the caller must go through [`Self::successors_into`]
+    /// (the out-of-core path); in-RAM stores return the slice so the walk
+    /// hot loop stays zero-copy.
+    fn neighbors_slice(&self, _v: u32) -> Option<&[u32]> {
+        None
+    }
+
+    /// Borrow `v`'s edge weights (parallel to [`Self::neighbors_slice`])
+    /// when the store is resident — the zero-copy counterpart of
+    /// [`Self::neighborhood_into`] (the weighted walker builds its alias
+    /// tables through this without copying targets it never reads).
+    fn neighbor_weights_slice(&self, _v: u32) -> Option<&[f32]> {
+        None
+    }
+
+    /// Replace `targets` with `v`'s successors, in adjacency order.
+    fn successors_into(&self, v: u32, targets: &mut Vec<u32>);
+
+    /// Replace `targets`/`weights` with `v`'s successors and their edge
+    /// weights (parallel vectors, adjacency order).
+    fn neighborhood_into(&self, v: u32, targets: &mut Vec<u32>, weights: &mut Vec<f32>);
+
+    /// Visit every arc `(source, target, weight)` in node order — the
+    /// sequential full scan (edge sampler construction, export). Paged
+    /// stores stream this with page-sequential locality.
+    fn for_each_arc(&self, f: &mut dyn FnMut(u32, u32, f32));
+}
+
+impl GraphStore for Graph {
+    fn num_nodes(&self) -> usize {
+        Graph::num_nodes(self)
+    }
+
+    fn num_edges(&self) -> usize {
+        Graph::num_edges(self)
+    }
+
+    fn num_arcs(&self) -> usize {
+        Graph::num_arcs(self)
+    }
+
+    fn degree(&self, v: u32) -> usize {
+        Graph::degree(self, v)
+    }
+
+    fn weighted_degree(&self, v: u32) -> f32 {
+        Graph::weighted_degree(self, v)
+    }
+
+    fn weighted_degrees(&self) -> &[f32] {
+        Graph::weighted_degrees(self)
+    }
+
+    fn unit_weights(&self) -> bool {
+        Graph::unit_weights(self)
+    }
+
+    fn labels(&self) -> Option<&[u16]> {
+        Graph::labels(self)
+    }
+
+    fn neighbors_slice(&self, v: u32) -> Option<&[u32]> {
+        Some(self.neighbors(v))
+    }
+
+    fn neighbor_weights_slice(&self, v: u32) -> Option<&[f32]> {
+        Some(self.neighbor_weights(v))
+    }
+
+    fn successors_into(&self, v: u32, targets: &mut Vec<u32>) {
+        targets.clear();
+        targets.extend_from_slice(self.neighbors(v));
+    }
+
+    fn neighborhood_into(&self, v: u32, targets: &mut Vec<u32>, weights: &mut Vec<f32>) {
+        targets.clear();
+        weights.clear();
+        targets.extend_from_slice(self.neighbors(v));
+        weights.extend_from_slice(self.neighbor_weights(v));
+    }
+
+    fn for_each_arc(&self, f: &mut dyn FnMut(u32, u32, f32)) {
+        for (u, v, w) in self.arcs() {
+            f(u, v, w);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, GraphBuilder};
+
+    #[test]
+    fn graph_implements_store_consistently() {
+        let g = generators::karate_club();
+        let store: &dyn GraphStore = &g;
+        assert_eq!(store.num_nodes(), 34);
+        assert_eq!(store.num_edges(), 78);
+        assert_eq!(store.num_arcs(), 156);
+        assert!(store.unit_weights());
+        let mut t = Vec::new();
+        let mut w = Vec::new();
+        for v in 0..34u32 {
+            assert_eq!(store.degree(v), g.degree(v));
+            assert_eq!(store.neighbors_slice(v), Some(g.neighbors(v)));
+            store.successors_into(v, &mut t);
+            assert_eq!(t, g.neighbors(v));
+            store.neighborhood_into(v, &mut t, &mut w);
+            assert_eq!(t, g.neighbors(v));
+            assert_eq!(w, g.neighbor_weights(v));
+        }
+        let mut arcs = 0usize;
+        store.for_each_arc(&mut |u, v, wt| {
+            assert!(g.has_edge(u, v));
+            assert!(wt > 0.0);
+            arcs += 1;
+        });
+        assert_eq!(arcs, 156);
+    }
+
+    #[test]
+    fn buffers_are_replaced_not_appended() {
+        let g = GraphBuilder::new().add_edge(0, 1, 2.0).add_edge(0, 2, 3.0).build();
+        let store: &dyn GraphStore = &g;
+        let mut t = vec![99u32; 8];
+        let mut w = vec![9.0f32; 8];
+        store.neighborhood_into(0, &mut t, &mut w);
+        assert_eq!(t, vec![1, 2]);
+        assert_eq!(w, vec![2.0, 3.0]);
+        store.successors_into(1, &mut t);
+        assert_eq!(t, vec![0]);
+    }
+}

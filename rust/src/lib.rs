@@ -9,6 +9,9 @@
 //!   sample pool with pseudo shuffle ([`pool`]), parallel negative sampling
 //!   over orthogonal blocks ([`scheduler`], [`partition`]), and the
 //!   double-buffered CPU/GPU collaboration strategy ([`coordinator`]).
+//!   Graphs train from RAM or out-of-core: the sampling stack consumes
+//!   the [`graph::GraphStore`] seam, served by the edge-list loader or by
+//!   the packed on-disk reader [`graph::PagedCsr`] (`graphvite pack`).
 //! * **Layer 2** — the SGNS train-block written in JAX
 //!   (`python/compile/model.py`), AOT-lowered to HLO text at build time.
 //! * **Layer 1** — the SGNS gradient hot-spot as a Pallas kernel
@@ -65,7 +68,7 @@ pub mod prelude {
     pub use crate::coordinator::{TrainResult, Trainer};
     pub use crate::embedding::EmbeddingStore;
     // pub use crate::eval::{classifier, linkpred}; // (enabled once eval lands)
-    pub use crate::graph::{generators, Graph};
+    pub use crate::graph::{generators, Graph, GraphStore, PagedCsr};
     pub use crate::pool::ShuffleKind;
     pub use crate::util::rng::Rng;
 }

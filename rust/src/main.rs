@@ -2,8 +2,11 @@
 //!
 //! Subcommands:
 //!
-//! * `train`      — train node embeddings on an edge-list file or a
-//!                  synthetic graph through the full hybrid system.
+//! * `train`      — train node embeddings on an edge-list file, a packed
+//!                  on-disk graph (`--graph-format`), or a synthetic
+//!                  graph through the full hybrid system.
+//! * `pack`       — convert an edge list into the packed on-disk format
+//!                  (`graph::ondisk`) that trains out-of-core.
 //! * `generate`   — write a synthetic benchmark graph to an edge list.
 //! * `eval`       — evaluate saved embeddings (node classification or
 //!                  link prediction).
@@ -15,6 +18,8 @@
 //!
 //! Run `graphvite help` for usage.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use graphvite::cli::Args;
@@ -23,7 +28,7 @@ use graphvite::coordinator::Trainer;
 use graphvite::embedding::{self, EmbeddingStore};
 use graphvite::eval;
 use graphvite::experiments::{self, Scale};
-use graphvite::graph::{self, generators, Graph, GraphStats};
+use graphvite::graph::{self, generators, GraphFormat, GraphStats, LoadedGraph, PackOptions};
 use graphvite::metrics::memory::MemoryModel;
 use graphvite::pool::ShuffleKind;
 use graphvite::util::{human_bytes, human_secs};
@@ -53,6 +58,7 @@ fn run(args: &Args) -> Result<()> {
     }
     match args.command.as_str() {
         "train" => cmd_train(args),
+        "pack" => cmd_pack(args),
         "generate" => cmd_generate(args),
         "eval" => cmd_eval(args),
         "exp" => cmd_exp(args),
@@ -73,11 +79,14 @@ fn print_usage() {
         "graphvite — CPU/'GPU' hybrid node embedding (GraphVite, WWW'19)
 
 USAGE:
-  graphvite train [GRAPH.txt] [options]     train embeddings
+  graphvite train [GRAPH] [options]         train embeddings (edge list
+                                            or packed graph)
+  graphvite pack GRAPH.txt --out F.gvpk     pack an edge list for
+                                            out-of-core training
   graphvite generate --kind K [options]     write a synthetic graph
   graphvite eval TASK [options]             evaluate saved embeddings
   graphvite exp NAME [--scale S]            regenerate a paper table/figure
-  graphvite stats [GRAPH.txt] [options]     graph stats + memory model
+  graphvite stats [GRAPH] [options]         graph stats + memory model
   graphvite artifacts                       list loadable AOT artifacts
 
 TRAIN OPTIONS (defaults follow paper section 4.3):
@@ -99,6 +108,9 @@ TRAIN OPTIONS (defaults follow paper section 4.3):
   --shuffle S           none|random|index-mapping|pseudo [pseudo]
   --walk-length L       random walk length (edges)      [5]
   --aug-distance S      augmentation distance           [2]
+  --graph-format F      {formats}: how GRAPH is loaded
+                        (packed graphs train out-of-core)   [auto]
+  --graph-cache-bytes N page-cache budget for packed graphs [64 MiB]
   --lr X, --negatives K, --neg-weight W, --seed N, --batch-size B
   --no-collaboration    disable the double-buffered pools
   --no-augmentation     plain edge sampling instead of online augmentation
@@ -106,6 +118,10 @@ TRAIN OPTIONS (defaults follow paper section 4.3):
   --no-pipeline         serial wave dispatch (wait for each wave's results)
   --no-residency        re-ship partitions every episode (no worker pinning)
   --output FILE         save embeddings (binary; .txt for text format)
+
+PACK OPTIONS:
+  --out FILE.gvpk       output path (required)
+  --page-size BYTES     successor-page granularity          [65536]
 
 GENERATE OPTIONS:
   --kind ba|youtube|sbm|er  --nodes N  --edges-per-node M  --labels K
@@ -121,13 +137,21 @@ EXPERIMENTS: table1 table3 table4 table5 table6 table7 table8
 BACKENDS (--backend on the CLI, `backend = \"...\"` in [train] TOML):
 {backends}",
         names = BackendKind::names_joined(),
+        formats = GraphFormat::names_joined(),
         backends = BackendKind::help_text()
     );
 }
 
 // ---------------------------------------------------------------- train --
 
-fn load_or_generate_graph(args: &Args) -> Result<Graph> {
+/// Load the graph a subcommand operates on: a synthetic generator
+/// (always in RAM), or a file routed through `format` — edge list into
+/// the in-RAM CSR, packed file into the out-of-core paged reader.
+fn load_or_generate_graph(
+    args: &Args,
+    format: GraphFormat,
+    cache_bytes: usize,
+) -> Result<LoadedGraph> {
     if let Some(kind) = args.get("synthetic") {
         let n = args.get_parse("nodes", 10_000usize)?;
         let m = args.get_parse("edges-per-node", 5usize)?;
@@ -143,13 +167,25 @@ fn load_or_generate_graph(args: &Args) -> Result<Graph> {
             "karate" => generators::karate_club(),
             other => bail!("unknown synthetic graph kind '{other}'"),
         };
-        return Ok(g);
+        return Ok(LoadedGraph::InMemory(Arc::new(g)));
     }
     let path = args
         .positional
         .first()
-        .ok_or_else(|| anyhow::anyhow!("need a GRAPH.txt path or --synthetic KIND"))?;
-    graph::load_edge_list(path).with_context(|| format!("loading {path}"))
+        .ok_or_else(|| anyhow::anyhow!("need a GRAPH path or --synthetic KIND"))?;
+    graph::load_graph(path, format, cache_bytes).with_context(|| format!("loading {path}"))
+}
+
+/// The `--graph-format` / `--graph-cache-bytes` flags for subcommands
+/// that take them outside a full [`TrainConfig`] (`stats`).
+fn graph_flags(args: &Args) -> Result<(GraphFormat, usize)> {
+    let defaults = TrainConfig::default();
+    let format = match args.get("graph-format") {
+        Some(s) => GraphFormat::parse_or_err(s)?,
+        None => defaults.graph_format,
+    };
+    let cache = args.get_parse("graph-cache-bytes", defaults.graph_cache_bytes)?;
+    Ok((format, cache))
 }
 
 fn config_from_args(args: &Args) -> Result<TrainConfig> {
@@ -202,17 +238,25 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
     if args.flag("no-residency") {
         cfg.residency = false;
     }
+    if let Some(s) = args.get("graph-format") {
+        cfg.graph_format = GraphFormat::parse_or_err(s)?;
+    }
+    cfg.graph_cache_bytes = args.get_parse("graph-cache-bytes", cfg.graph_cache_bytes)?;
     cfg.validate()?;
     Ok(cfg)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let graph = load_or_generate_graph(args)?;
     let cfg = config_from_args(args)?;
-    let stats = GraphStats::compute(&graph);
+    let loaded = load_or_generate_graph(args, cfg.graph_format, cfg.graph_cache_bytes)?;
+    let store = loaded.store();
+    let stats = GraphStats::compute(&*store);
     eprintln!(
-        "graph: {} nodes, {} edges (mean degree {:.1})",
-        stats.num_nodes, stats.num_edges, stats.mean_degree
+        "graph: {} nodes, {} edges (mean degree {:.1}{})",
+        stats.num_nodes,
+        stats.num_edges,
+        stats.mean_degree,
+        if loaded.paged().is_some() { ", out-of-core" } else { "" }
     );
     eprintln!(
         "config: dim={} epochs={} workers={} samplers={} backend={} shuffle={}",
@@ -224,7 +268,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.shuffle.name()
     );
 
-    let mut trainer = Trainer::new(graph, cfg)?;
+    let mut trainer = Trainer::from_store(store, cfg)?;
     let result = trainer.train()?;
     let s = &result.stats;
     eprintln!(
@@ -244,6 +288,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.counters.residency_hits,
         human_bytes(s.counters.bytes_saved)
     );
+    if let Some(paged) = loaded.paged() {
+        // the ondisk-smoke CI job greps this line into its artifact
+        let c = paged.cache_stats();
+        eprintln!(
+            "page-cache: {} hits, {} misses, {} evictions ({} resident of {} budget, \
+             {} pages)",
+            c.hits,
+            c.misses,
+            c.evictions,
+            human_bytes(c.resident_bytes as u64),
+            human_bytes(c.budget_bytes as u64),
+            human_bytes(c.page_size as u64)
+        );
+    }
 
     if let Some(out) = args.get("output") {
         if out.ends_with(".txt") {
@@ -253,6 +311,34 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         eprintln!("embeddings saved to {out}");
     }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- pack --
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    let input = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("pack needs an edge-list path (see `graphvite help`)"))?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out FILE.gvpk is required"))?;
+    let opts = PackOptions {
+        page_size: args.get_parse("page-size", PackOptions::default().page_size)?,
+    };
+    let stats = graph::pack_edge_list(input, out, &opts)
+        .with_context(|| format!("packing {input}"))?;
+    eprintln!(
+        "packed {input} -> {out}: {} nodes, {} arcs, {} payload \
+         ({:.2} bytes/arc vs 8 raw), {} total",
+        stats.num_nodes,
+        stats.num_arcs,
+        human_bytes(stats.payload_bytes),
+        stats.bytes_per_arc(),
+        human_bytes(stats.file_bytes)
+    );
+    eprintln!("train it out-of-core with: graphvite train {out} --graph-format packed");
     Ok(())
 }
 
@@ -365,8 +451,10 @@ fn cmd_stats(args: &Args) -> Result<()> {
         MemoryModel::paper_example().table().print();
         return Ok(());
     }
-    let g = load_or_generate_graph(args)?;
-    let s = GraphStats::compute(&g);
+    let (format, cache_bytes) = graph_flags(args)?;
+    let loaded = load_or_generate_graph(args, format, cache_bytes)?;
+    let store = loaded.store();
+    let s = GraphStats::compute(&*store);
     println!("nodes            {}", s.num_nodes);
     println!("edges            {}", s.num_edges);
     println!(

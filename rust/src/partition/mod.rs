@@ -7,7 +7,7 @@
 //! nodes (sample blocks then have roughly equal sizes, which keeps the
 //! per-episode work of the n GPUs balanced).
 
-use crate::graph::Graph;
+use crate::graph::GraphStore;
 
 /// A partitioning of node ids into `n` parts with local row indices.
 #[derive(Debug, Clone)]
@@ -24,8 +24,10 @@ pub struct Partitioning {
 pub struct Partitioner;
 
 impl Partitioner {
-    /// The paper's degree-guided zig-zag strategy.
-    pub fn degree_zigzag(graph: &Graph, num_parts: usize) -> Partitioning {
+    /// The paper's degree-guided zig-zag strategy. Degrees are resident
+    /// for every [`GraphStore`], so partitioning an out-of-core graph
+    /// never touches successor pages.
+    pub fn degree_zigzag(graph: &dyn GraphStore, num_parts: usize) -> Partitioning {
         assert!(num_parts >= 1);
         let n = graph.num_nodes();
         assert!(n >= num_parts, "fewer nodes than partitions");
@@ -41,7 +43,7 @@ impl Partitioner {
     }
 
     /// Round-robin over raw node ids (ablation baseline: no degree guidance).
-    pub fn round_robin(graph: &Graph, num_parts: usize) -> Partitioning {
+    pub fn round_robin(graph: &dyn GraphStore, num_parts: usize) -> Partitioning {
         let n = graph.num_nodes();
         let order: Vec<u32> = (0..n as u32).collect();
         Self::zigzag_assign(&order, n, num_parts)
@@ -103,7 +105,7 @@ impl Partitioning {
     }
 
     /// Sum of weighted degrees per partition (balance diagnostics).
-    pub fn degree_loads(&self, graph: &Graph) -> Vec<f64> {
+    pub fn degree_loads(&self, graph: &dyn GraphStore) -> Vec<f64> {
         self.nodes_of_part
             .iter()
             .map(|nodes| {

@@ -10,7 +10,7 @@
 //! RNG stream + walk buffer), making the stage embarrassingly parallel —
 //! exactly Algorithm 2's "allocated with an independent sample pool".
 
-use crate::graph::Graph;
+use crate::graph::GraphStore;
 use crate::sampling::{AliasTable, RandomWalker};
 use crate::util::rng::Rng;
 
@@ -38,6 +38,9 @@ pub struct OnlineAugmenter<'g> {
     config: AugmentConfig,
     rng: Rng,
     walk_buf: Vec<u32>,
+    /// Per-thread neighbor scratch for the walker's streaming path
+    /// (untouched when the graph store is resident).
+    nbr_scratch: Vec<u32>,
 }
 
 impl<'g> OnlineAugmenter<'g> {
@@ -61,11 +64,12 @@ impl<'g> OnlineAugmenter<'g> {
             config,
             rng,
             walk_buf: Vec::with_capacity(config.walk_length + 1),
+            nbr_scratch: Vec::new(),
         }
     }
 
     /// Build the shared departure-node distribution (p ∝ weighted degree).
-    pub fn departure_table(graph: &Graph) -> AliasTable {
+    pub fn departure_table(graph: &dyn GraphStore) -> AliasTable {
         AliasTable::new(graph.weighted_degrees())
     }
 
@@ -74,9 +78,13 @@ impl<'g> OnlineAugmenter<'g> {
     pub fn fill_from_one_walk(&mut self, out: &mut Vec<(u32, u32)>) -> usize {
         let start = self.departure.sample(&mut self.rng);
         let cfg = self.config;
-        let len = self
-            .walker
-            .walk_into(start, cfg.walk_length, &mut self.rng, &mut self.walk_buf);
+        let len = self.walker.walk_into(
+            start,
+            cfg.walk_length,
+            &mut self.rng,
+            &mut self.walk_buf,
+            &mut self.nbr_scratch,
+        );
         let before = out.len();
         for i in 0..len {
             let upper = (i + cfg.augmentation_distance).min(len - 1);

@@ -2,24 +2,29 @@
 //! p ∝ weight via a global alias table — what LINE does, and what the
 //! Table 6 ablation baseline uses instead of parallel online augmentation.
 
-use crate::graph::Graph;
+use crate::graph::GraphStore;
 use crate::sampling::AliasTable;
 use crate::util::rng::Rng;
 
 /// O(1) weighted arc sampler over the whole graph.
+///
+/// Construction materializes every arc (one sequential
+/// [`GraphStore::for_each_arc`] scan — page-friendly on the out-of-core
+/// store, but O(E) RAM afterwards either way): this is the
+/// `online_augmentation = false` ablation path, not the streaming one.
 pub struct EdgeSampler {
     table: AliasTable,
     arcs: Vec<(u32, u32)>,
 }
 
 impl EdgeSampler {
-    pub fn new(graph: &Graph) -> Self {
+    pub fn new(graph: &dyn GraphStore) -> Self {
         let mut arcs = Vec::with_capacity(graph.num_arcs());
         let mut weights = Vec::with_capacity(graph.num_arcs());
-        for (u, v, w) in graph.arcs() {
+        graph.for_each_arc(&mut |u, v, w| {
             arcs.push((u, v));
             weights.push(w);
-        }
+        });
         EdgeSampler { table: AliasTable::new(&weights), arcs }
     }
 

@@ -7,7 +7,7 @@
 //! over the partition's member degrees; samples are *partition-local row
 //! indices*, ready to feed the device trainer.
 
-use crate::graph::Graph;
+use crate::graph::GraphStore;
 use crate::partition::Partitioning;
 use crate::sampling::AliasTable;
 use crate::util::rng::Rng;
@@ -24,7 +24,9 @@ pub struct NegativeSampler {
 impl NegativeSampler {
     /// Build from the graph degrees and a partitioning. Table `p` is over
     /// partition `p`'s nodes in *local-row order*, weighted deg^0.75.
-    pub fn new(graph: &Graph, partitioning: &Partitioning) -> Self {
+    /// Weighted degrees are resident for every [`GraphStore`], so this
+    /// never touches an out-of-core store's successor pages.
+    pub fn new(graph: &dyn GraphStore, partitioning: &Partitioning) -> Self {
         let tables = (0..partitioning.num_parts())
             .map(|p| {
                 let weights: Vec<f32> = partitioning

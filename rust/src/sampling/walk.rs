@@ -1,10 +1,22 @@
-//! Random-walk engine over the CSR graph.
+//! Random-walk engine over any [`GraphStore`] — the in-RAM CSR or the
+//! paged on-disk reader.
 //!
 //! Walks are uniform over neighbors for unit-weight graphs and
 //! weight-proportional otherwise (per-node alias tables, built once —
-//! the same O(E)-memory trick LINE/node2vec use).
+//! the same O(E)-memory trick LINE/node2vec use). Resident stores serve
+//! neighbor lists as borrowed slices ([`GraphStore::neighbors_slice`]),
+//! so the in-RAM hot loop is unchanged; out-of-core stores stream each
+//! step's neighborhood into a caller-owned scratch buffer instead.
+//!
+//! RNG discipline: a step consumes exactly the same draws regardless of
+//! which store backs the graph — that is what makes training off a
+//! packed file bitwise-identical to training off the loader (see
+//! `rust/tests/ondisk.rs`). Note the weighted path still materializes
+//! per-node alias tables (O(E) RAM) even over a paged store; the
+//! unit-weight fast path — every synthetic workload and most real edge
+//! lists — is fully out-of-core (tracked in ROADMAP).
 
-use crate::graph::Graph;
+use crate::graph::GraphStore;
 use crate::sampling::AliasTable;
 use crate::util::rng::Rng;
 
@@ -16,20 +28,31 @@ enum NeighborChoice {
     Weighted(Vec<Option<AliasTable>>),
 }
 
-/// Reusable walk engine; cheap to share per thread (immutable).
+/// Reusable walk engine; cheap to share per thread (immutable — each
+/// thread supplies its own scratch buffer for the streaming path).
 pub struct RandomWalker<'g> {
-    graph: &'g Graph,
+    graph: &'g dyn GraphStore,
     choice: NeighborChoice,
 }
 
 impl<'g> RandomWalker<'g> {
-    pub fn new(graph: &'g Graph) -> Self {
+    pub fn new(graph: &'g dyn GraphStore) -> Self {
         let choice = if graph.unit_weights() {
             NeighborChoice::Uniform
         } else {
+            let mut targets = Vec::new();
+            let mut weights = Vec::new();
             let tables = (0..graph.num_nodes() as u32)
                 .map(|v| {
-                    let w = graph.neighbor_weights(v);
+                    // resident stores lend the weights directly; only the
+                    // out-of-core path decodes into the scratch buffers
+                    let w: &[f32] = match graph.neighbor_weights_slice(v) {
+                        Some(w) => w,
+                        None => {
+                            graph.neighborhood_into(v, &mut targets, &mut weights);
+                            &weights
+                        }
+                    };
                     if w.len() >= 2 {
                         Some(AliasTable::new(w))
                     } else {
@@ -42,10 +65,18 @@ impl<'g> RandomWalker<'g> {
         RandomWalker { graph, choice }
     }
 
-    /// One walk step from `v`; None if `v` has no neighbors.
+    /// One walk step from `v`; None if `v` has no neighbors. `scratch`
+    /// holds the streamed neighbor list when the store is out-of-core
+    /// (resident stores never touch it).
     #[inline]
-    pub fn step(&self, v: u32, rng: &mut Rng) -> Option<u32> {
-        let nbrs = self.graph.neighbors(v);
+    pub fn step(&self, v: u32, rng: &mut Rng, scratch: &mut Vec<u32>) -> Option<u32> {
+        let nbrs: &[u32] = match self.graph.neighbors_slice(v) {
+            Some(s) => s,
+            None => {
+                self.graph.successors_into(v, scratch);
+                scratch.as_slice()
+            }
+        };
         match nbrs.len() {
             0 => None,
             1 => Some(nbrs[0]),
@@ -64,12 +95,19 @@ impl<'g> RandomWalker<'g> {
     /// Walk of up to `len` edges starting at `start`, writing nodes into
     /// `out` (cleared first; `out.len() <= len + 1`). Stops early at
     /// dead ends. Returns the number of nodes written.
-    pub fn walk_into(&self, start: u32, len: usize, rng: &mut Rng, out: &mut Vec<u32>) -> usize {
+    pub fn walk_into(
+        &self,
+        start: u32,
+        len: usize,
+        rng: &mut Rng,
+        out: &mut Vec<u32>,
+        scratch: &mut Vec<u32>,
+    ) -> usize {
         out.clear();
         out.push(start);
         let mut cur = start;
         for _ in 0..len {
-            match self.step(cur, rng) {
+            match self.step(cur, rng, scratch) {
                 Some(next) => {
                     out.push(next);
                     cur = next;
@@ -83,7 +121,8 @@ impl<'g> RandomWalker<'g> {
     /// Allocating convenience wrapper around [`Self::walk_into`].
     pub fn walk(&self, start: u32, len: usize, rng: &mut Rng) -> Vec<u32> {
         let mut out = Vec::with_capacity(len + 1);
-        self.walk_into(start, len, rng, &mut out);
+        let mut scratch = Vec::new();
+        self.walk_into(start, len, rng, &mut out, &mut scratch);
         out
     }
 }
@@ -127,10 +166,11 @@ mod tests {
             .build();
         let walker = RandomWalker::new(&g);
         let mut rng = Rng::new(3);
+        let mut scratch = Vec::new();
         let mut count1 = 0;
         const N: usize = 20_000;
         for _ in 0..N {
-            if walker.step(0, &mut rng) == Some(1) {
+            if walker.step(0, &mut rng, &mut scratch) == Some(1) {
                 count1 += 1;
             }
         }
@@ -144,10 +184,34 @@ mod tests {
         let walker = RandomWalker::new(&g);
         let mut rng = Rng::new(4);
         let mut buf = Vec::new();
-        let n1 = walker.walk_into(0, 5, &mut rng, &mut buf);
+        let mut scratch = Vec::new();
+        let n1 = walker.walk_into(0, 5, &mut rng, &mut buf, &mut scratch);
         assert_eq!(n1, buf.len());
-        let n2 = walker.walk_into(1, 3, &mut rng, &mut buf);
+        let n2 = walker.walk_into(1, 3, &mut rng, &mut buf, &mut scratch);
         assert_eq!(n2, buf.len());
         assert!(n2 <= 4);
+    }
+
+    #[test]
+    fn identical_walks_over_ram_and_paged_stores() {
+        // the step consumes identical RNG draws whether neighbors come
+        // from the borrowed slice (in-RAM) or the streamed scratch
+        // (paged) — the contract the packed/in-RAM bitwise training
+        // equivalence rests on
+        use crate::graph::ondisk::{pack_graph, PackOptions, PagedCsr};
+        let g = generators::karate_club();
+        let dir = std::env::temp_dir().join("graphvite_walk_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("karate.gvpk");
+        pack_graph(&g, &path, &PackOptions { page_size: 64 }).unwrap();
+        let p = PagedCsr::open(&path, 256).unwrap();
+        let ram = RandomWalker::new(&g);
+        let paged = RandomWalker::new(&p);
+        let (mut r1, mut r2) = (Rng::new(9), Rng::new(9));
+        for v in 0..34u32 {
+            let a = ram.walk(v, 16, &mut r1);
+            let b = paged.walk(v, 16, &mut r2);
+            assert_eq!(a, b, "walks diverged from node {v}");
+        }
     }
 }

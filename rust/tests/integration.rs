@@ -40,12 +40,22 @@ fn small_cfg() -> TrainConfig {
 
 #[test]
 fn trained_embeddings_classify_communities() {
+    // Empirical F1 gate, swept over PINNED seeds and asserted on the
+    // pass rate (ROADMAP "Flaky-threshold audit", final migrated gate):
+    // pipeline corruption collapses every seed to ~chance, while a
+    // single unlucky seed may dip below the floor. The swept score is
+    // min(micro, macro) so minority-class collapse (macro tanks while
+    // micro survives) still trips the gate, as it did pre-migration.
     let g = generators::planted_partition(1_000, 5, 16.0, 0.05, 3);
-    let mut t = Trainer::new(g.clone(), TrainConfig { epochs: 200, ..small_cfg() }).unwrap();
-    let r = t.train().unwrap();
-    let rep = classify(&r.embeddings, &g, 0.05, 7);
-    assert!(rep.micro_f1 > 0.6, "micro {}", rep.micro_f1);
-    assert!(rep.macro_f1 > 0.6, "macro {}", rep.macro_f1);
+    let stats = graphvite::util::gate::seed_sweep(&[42, 43, 44], |seed| {
+        let mut t =
+            Trainer::new(g.clone(), TrainConfig { epochs: 200, seed, ..small_cfg() }).unwrap();
+        let r = t.train().unwrap();
+        let rep = classify(&r.embeddings, &g, 0.05, 7);
+        rep.micro_f1.min(rep.macro_f1)
+    });
+    eprintln!("{}", stats.report("integration.classify_min_f1", 0.6));
+    assert!(stats.pass_rate(0.6) >= 2.0 / 3.0, "{:?}", stats.scores);
 }
 
 #[test]

@@ -1,0 +1,303 @@
+//! Out-of-core graph storage suite: the packed on-disk format and the
+//! [`PagedCsr`] reader must be *observation-equivalent* to the in-RAM
+//! CSR — same degrees, same successor sequences (same order!), same
+//! weights to the bit, same stats — because every RNG draw in the
+//! sampling stack indexes into those observations. That equivalence is
+//! what makes the headline assertion here hold: training off a packed
+//! file is bitwise-identical to training off the loader, while the page
+//! cache stays bounded at its configured byte budget.
+
+use std::sync::Arc;
+
+use graphvite::config::{BackendKind, TrainConfig};
+use graphvite::coordinator::Trainer;
+use graphvite::graph::{
+    self, generators, Graph, GraphBuilder, GraphStats, GraphStore, PackOptions, PagedCsr,
+};
+use graphvite::partition::Partitioner;
+use graphvite::pool::ShuffleKind;
+use graphvite::util::prop::{forall, Gen};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("graphvite_ondisk_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Pack `g`, reopen it paged, and assert every observation the sampling
+/// stack can make agrees with the in-RAM store.
+fn assert_observation_equivalent(g: &Graph, page_size: u32, cache_bytes: usize, tag: &str) {
+    let path = tmp(&format!("equiv_{tag}.gvpk"));
+    graph::pack_graph(g, &path, &PackOptions { page_size }).unwrap();
+    let p = PagedCsr::open(&path, cache_bytes).unwrap();
+
+    assert_eq!(GraphStore::num_nodes(&p), g.num_nodes(), "{tag}: nodes");
+    assert_eq!(GraphStore::num_edges(&p), g.num_edges(), "{tag}: edges");
+    assert_eq!(GraphStore::num_arcs(&p), g.num_arcs(), "{tag}: arcs");
+    assert_eq!(p.unit_weights(), g.unit_weights(), "{tag}: unit flag");
+    assert_eq!(GraphStore::labels(&p), g.labels(), "{tag}: labels");
+
+    let (mut t, mut w) = (Vec::new(), Vec::new());
+    for v in 0..g.num_nodes() as u32 {
+        assert_eq!(GraphStore::degree(&p, v), g.degree(v), "{tag}: degree({v})");
+        assert_eq!(
+            GraphStore::weighted_degree(&p, v).to_bits(),
+            g.weighted_degree(v).to_bits(),
+            "{tag}: weighted_degree({v})"
+        );
+        p.successors_into(v, &mut t);
+        assert_eq!(t, g.neighbors(v), "{tag}: successors({v})");
+        p.neighborhood_into(v, &mut t, &mut w);
+        assert_eq!(t, g.neighbors(v), "{tag}: neighborhood targets({v})");
+        let got: Vec<u32> = w.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> = g.neighbor_weights(v).iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want, "{tag}: neighborhood weights({v})");
+    }
+
+    // aggregate observations: stats and the full arc scan
+    assert_eq!(GraphStats::compute(&p), GraphStats::compute(g), "{tag}: stats");
+    let mut paged_arcs = Vec::new();
+    p.for_each_arc(&mut |u, v, wt| paged_arcs.push((u, v, wt.to_bits())));
+    let ram_arcs: Vec<(u32, u32, u32)> = {
+        let mut out = Vec::new();
+        GraphStore::for_each_arc(g, &mut |u, v, wt| out.push((u, v, wt.to_bits())));
+        out
+    };
+    assert_eq!(paged_arcs, ram_arcs, "{tag}: arc scan");
+
+    // the cache never exceeds its (page-clamped) budget
+    let s = p.cache_stats();
+    assert!(
+        s.resident_bytes <= s.budget_bytes,
+        "{tag}: cache {} over budget {}",
+        s.resident_bytes,
+        s.budget_bytes
+    );
+}
+
+// ------------------------------------------------------- property tests --
+
+#[test]
+fn paged_equals_ram_on_random_graphs() {
+    forall("paged csr == ram csr", 40, |g: &mut Gen| {
+        let n = g.usize_in(2..80);
+        let edges = g.edges(n, 300);
+        let weighted = g.bool(0.4);
+        // over-declare nodes sometimes: trailing isolated (empty-adjacency)
+        // nodes must round-trip too
+        let extra = g.usize_in(0..4);
+        let mut b = GraphBuilder::new().with_num_nodes(n + extra);
+        for (u, v) in edges {
+            let w = if weighted { g.f32_in(0.1..4.0) } else { 1.0 };
+            b.push_edge(u, v, w);
+        }
+        let graph = b.build();
+        let page_size = *g.choose(&[16u32, 64, 256, 4096]);
+        // budgets from "one page" to "everything resident"
+        let cache = *g.choose(&[1usize, 128, 4096, 1 << 20]);
+        assert_observation_equivalent(&graph, page_size, cache, &format!("case{}", g.case));
+    });
+}
+
+#[test]
+fn empty_adjacency_and_max_degree_nodes() {
+    // a star: node 0 touches everyone (the max-degree record spans many
+    // pages at page_size 16), plus isolated nodes past the star
+    let mut b = GraphBuilder::new().with_num_nodes(70);
+    for v in 1..64u32 {
+        b.push_edge(0, v, 1.0);
+    }
+    let g = b.build();
+    assert_eq!(g.degree(0), 63);
+    assert_eq!(g.degree(69), 0);
+    assert_observation_equivalent(&g, 16, 64, "star");
+}
+
+#[test]
+fn all_isolated_and_empty_graphs() {
+    // nodes but no edges
+    let g = GraphBuilder::new().with_num_nodes(7).build();
+    assert_observation_equivalent(&g, 64, 64, "isolated");
+    // no nodes at all
+    let g = GraphBuilder::new().build();
+    assert_observation_equivalent(&g, 64, 64, "empty");
+}
+
+#[test]
+fn labeled_graph_round_trips() {
+    let g = generators::planted_partition(300, 4, 10.0, 0.1, 17);
+    assert!(g.labels().is_some());
+    assert_observation_equivalent(&g, 256, 2048, "labeled");
+}
+
+// ------------------------------------------------------------ fail loud --
+
+#[test]
+fn corrupted_header_and_truncation_fail_loud() {
+    let g = generators::barabasi_albert(100, 3, 3);
+    let path = tmp("corrupt.gvpk");
+    graph::pack_graph(&g, &path, &PackOptions::default()).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // bad magic
+    let mut bad = bytes.clone();
+    bad[0] = b'X';
+    let p = tmp("bad_magic.gvpk");
+    std::fs::write(&p, &bad).unwrap();
+    let err = PagedCsr::open(&p, 1 << 20).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+
+    // future version
+    let mut bad = bytes.clone();
+    bad[4] = 0xFF;
+    let p = tmp("bad_version.gvpk");
+    std::fs::write(&p, &bad).unwrap();
+    let err = PagedCsr::open(&p, 1 << 20).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+
+    // truncated payload (drop the last 100 bytes)
+    let p = tmp("truncated.gvpk");
+    std::fs::write(&p, &bytes[..bytes.len() - 100]).unwrap();
+    let err = PagedCsr::open(&p, 1 << 20).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "{err}");
+
+    // trailing garbage is as loud as truncation
+    let mut bad = bytes.clone();
+    bad.extend_from_slice(b"junk");
+    let p = tmp("trailing.gvpk");
+    std::fs::write(&p, &bad).unwrap();
+    assert!(PagedCsr::open(&p, 1 << 20).is_err());
+
+    // header intact but the degree ledger broken: bump one degree entry
+    let mut bad = bytes;
+    let degrees_pos = u64::from_le_bytes(bad[40..48].try_into().unwrap()) as usize;
+    bad[degrees_pos] = bad[degrees_pos].wrapping_add(1);
+    let p = tmp("bad_ledger.gvpk");
+    std::fs::write(&p, &bad).unwrap();
+    let err = PagedCsr::open(&p, 1 << 20).unwrap_err().to_string();
+    assert!(err.contains("arc count"), "{err}");
+}
+
+#[test]
+fn corrupt_page_panics_instead_of_training_on_garbage() {
+    let g = generators::karate_club();
+    let path = tmp("page_corrupt.gvpk");
+    graph::pack_graph(&g, &path, &PackOptions::default()).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // node 0's record starts at pages_pos (offsets[0] == 0): setting its
+    // last byte's continuation bit makes the final varint overrun the
+    // record — open still succeeds (header is fine), the read must panic
+    let pages_pos = u64::from_le_bytes(bytes[64..72].try_into().unwrap()) as usize;
+    let offsets_pos = u64::from_le_bytes(bytes[32..40].try_into().unwrap()) as usize;
+    let end0 =
+        u64::from_le_bytes(bytes[offsets_pos + 8..offsets_pos + 16].try_into().unwrap()) as usize;
+    bytes[pages_pos + end0 - 1] |= 0x80;
+    std::fs::write(&path, &bytes).unwrap();
+    let p = PagedCsr::open(&path, 1 << 20).unwrap();
+    let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut t = Vec::new();
+        p.successors_into(0, &mut t);
+    }));
+    assert!(panicked.is_err(), "corrupt record must not decode silently");
+}
+
+// ------------------------------------------------- end-to-end training --
+
+fn train_cfg(seed: u64) -> TrainConfig {
+    TrainConfig {
+        dim: 8,
+        epochs: 3,
+        num_workers: 2,
+        num_samplers: 2,
+        episode_size: 2_000,
+        batch_size: 64,
+        backend: BackendKind::test_backend(),
+        shuffle: ShuffleKind::Pseudo,
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+/// The ISSUE acceptance assertion: same seed, same config — the packed
+/// on-disk graph and the in-RAM loader produce bitwise-identical
+/// embeddings, with the page cache held to a tiny configured budget the
+/// whole time.
+#[test]
+fn packed_training_is_bitwise_identical_to_in_ram() {
+    let g = generators::barabasi_albert(400, 4, 33);
+    let path = tmp("train_unit.gvpk");
+    graph::pack_graph(&g, &path, &PackOptions { page_size: 512 }).unwrap();
+    // 4 KiB budget on a multi-KiB payload: constant paging during training
+    let paged = Arc::new(PagedCsr::open(&path, 4 * 1024).unwrap());
+
+    let ram = Trainer::new(g, train_cfg(91)).unwrap().train().unwrap();
+    let disk = Trainer::from_store(Arc::clone(&paged) as Arc<dyn GraphStore>, train_cfg(91))
+        .unwrap()
+        .train()
+        .unwrap();
+
+    assert_eq!(
+        ram.embeddings.vertex_matrix(),
+        disk.embeddings.vertex_matrix(),
+        "vertex matrices diverged between loader and packed file"
+    );
+    assert_eq!(
+        ram.embeddings.context_matrix(),
+        disk.embeddings.context_matrix(),
+        "context matrices diverged between loader and packed file"
+    );
+    assert_eq!(ram.stats.counters.samples_trained, disk.stats.counters.samples_trained);
+
+    let s = paged.cache_stats();
+    assert!(s.misses > 0, "training never touched the pages?");
+    assert!(s.hits > 0, "no locality at all is suspicious: {s:?}");
+    assert!(s.evictions > 0, "a 4 KiB budget must evict: {s:?}");
+    assert!(s.resident_bytes <= s.budget_bytes, "cache over budget: {s:?}");
+}
+
+#[test]
+fn packed_training_matches_on_weighted_graphs_too() {
+    // weighted path: the walker materializes per-node alias tables from
+    // streamed neighborhoods — table construction order and weight bits
+    // must match the in-RAM build exactly
+    let mut b = GraphBuilder::new();
+    let mut rng = graphvite::util::rng::Rng::new(7);
+    for _ in 0..900 {
+        let u = rng.below_usize(250) as u32;
+        let mut v = rng.below_usize(250) as u32;
+        if u == v {
+            v = (v + 1) % 250;
+        }
+        b.push_edge(u, v, ((u + v) % 7 + 1) as f32 * 0.5);
+    }
+    let g = b.build();
+    assert!(!g.unit_weights());
+    let path = tmp("train_weighted.gvpk");
+    graph::pack_graph(&g, &path, &PackOptions { page_size: 256 }).unwrap();
+    let paged = Arc::new(PagedCsr::open(&path, 2 * 1024).unwrap());
+
+    let ram = Trainer::new(g, train_cfg(55)).unwrap().train().unwrap();
+    let disk = Trainer::from_store(paged as Arc<dyn GraphStore>, train_cfg(55))
+        .unwrap()
+        .train()
+        .unwrap();
+    assert_eq!(ram.embeddings.vertex_matrix(), disk.embeddings.vertex_matrix());
+    assert_eq!(ram.embeddings.context_matrix(), disk.embeddings.context_matrix());
+}
+
+#[test]
+fn partitioner_and_negative_sampler_agree_across_stores() {
+    // the other two consumers of the GraphStore seam: identical
+    // partitionings and identical negative-sampler tables (byte-level
+    // weighted degrees) whichever store feeds them
+    let g = generators::barabasi_albert(300, 3, 11);
+    let path = tmp("parts.gvpk");
+    graph::pack_graph(&g, &path, &PackOptions::default()).unwrap();
+    let p = PagedCsr::open(&path, 1 << 16).unwrap();
+    let ram_parts = Partitioner::degree_zigzag(&g, 4);
+    let paged_parts = Partitioner::degree_zigzag(&p, 4);
+    for v in 0..300u32 {
+        assert_eq!(ram_parts.part_of(v), paged_parts.part_of(v));
+        assert_eq!(ram_parts.local_row(v), paged_parts.local_row(v));
+    }
+}

@@ -103,6 +103,43 @@ fn legacy_fix_context_path_is_bitwise_equivalent() {
 }
 
 #[test]
+fn overlapped_pool_refill_is_bitwise_equivalent() {
+    // Collaboration mode now takes + redistributes the NEXT pool on a
+    // helper thread while the previous pool's final group drains (the
+    // overlapped refill). Both modes fill pools from the same pinned
+    // sampler streams and consume them identically, so collaboration
+    // on (overlapped refill) vs off (fill-then-consume on one thread)
+    // must be bitwise-equivalent — which also pins that the overlap is
+    // pure scheduling. epochs=4 over this pool size gives several pools,
+    // so the prefetched-grid handoff path actually runs.
+    let g = graph();
+    for pipeline in [false, true] {
+        let overlapped = run(
+            &g,
+            TrainConfig { collaboration: true, pipeline_transfers: pipeline, ..base_cfg() },
+        );
+        let sequential = run(
+            &g,
+            TrainConfig { collaboration: false, pipeline_transfers: pipeline, ..base_cfg() },
+        );
+        assert_eq!(
+            overlapped.embeddings.vertex_matrix(),
+            sequential.embeddings.vertex_matrix(),
+            "vertex matrices diverged (pipeline={pipeline})"
+        );
+        assert_eq!(
+            overlapped.embeddings.context_matrix(),
+            sequential.embeddings.context_matrix(),
+            "context matrices diverged (pipeline={pipeline})"
+        );
+        assert_eq!(
+            overlapped.stats.counters.samples_trained,
+            sequential.stats.counters.samples_trained
+        );
+    }
+}
+
+#[test]
 fn residency_strictly_reduces_bytes_to_device() {
     // 4 partitions / 2 workers: the ISSUE's acceptance scenario. The two
     // runs dispatch the same multiset of jobs (group *order* differs, the

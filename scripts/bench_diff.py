@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Diff freshly recorded BENCH_*.json files against committed baselines.
+
+Usage:
+    python3 scripts/bench_diff.py [--baseline-dir rust/benches/baselines] \
+        rust/benches/BENCH_*.json
+
+For every fresh file, looks for a baseline with the same basename under
+the baseline directory and compares the `bench <name> <mean> ± <stddev>
+min <min> ...` lines by name.  Regressions past the threshold (default
+15%) on the *pipeline throughput* lines (names starting with `train.`)
+emit a GitHub `::warning` annotation; everything else is informational.
+
+This script NEVER exits non-zero on a regression: the scheduled bench
+job runs on a shared, noisy runner, so the perf trajectory is a warning
+stream plus uploaded artifacts, not a hard gate (see benches/README.md
+"Baseline diffs").  Baselines carrying `"provisional": true` (the first
+committed set predates a CI perf point) are reported but never warn —
+replace them with a real run's artifact to arm the threshold.
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+
+BENCH_RE = re.compile(
+    r"^bench\s+(?P<name>.+?)\s+(?P<mean>[0-9.eE+-]+)\s+\xb1\s+(?P<std>[0-9.eE+-]+)"
+    r"\s+min\s+(?P<min>[0-9.eE+-]+)"
+)
+# result_lines() writes a literal ± (U+00B1); accept a plain ASCII variant too
+BENCH_RE_ASCII = re.compile(
+    r"^bench\s+(?P<name>.+?)\s+(?P<mean>[0-9.eE+-]+)\s+\+/-\s+(?P<std>[0-9.eE+-]+)"
+    r"\s+min\s+(?P<min>[0-9.eE+-]+)"
+)
+
+
+def parse_bench_lines(doc):
+    out = {}
+    for line in doc.get("lines", []):
+        m = BENCH_RE.match(line) or BENCH_RE_ASCII.match(line)
+        if m:
+            out[m.group("name").strip()] = float(m.group("mean"))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", nargs="+", help="freshly recorded BENCH_*.json files")
+    ap.add_argument("--baseline-dir", default="rust/benches/baselines")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.15,
+        help="warn when a train.* mean regresses past this fraction (default 0.15)",
+    )
+    args = ap.parse_args()
+
+    warnings = 0
+    for fresh_path in args.fresh:
+        base_path = os.path.join(args.baseline_dir, os.path.basename(fresh_path))
+        if not os.path.exists(base_path):
+            print(f"bench-diff: no baseline for {os.path.basename(fresh_path)} — skipped "
+                  f"(commit one under {args.baseline_dir}/ to start the trajectory)")
+            continue
+        with open(fresh_path) as f:
+            fresh_doc = json.load(f)
+        with open(base_path) as f:
+            base_doc = json.load(f)
+        provisional = bool(base_doc.get("provisional"))
+        fresh = parse_bench_lines(fresh_doc)
+        base = parse_bench_lines(base_doc)
+        tag = " (provisional baseline — informational only)" if provisional else ""
+        print(f"bench-diff: {os.path.basename(fresh_path)} vs baseline{tag}")
+        for name in sorted(base):
+            if name not in fresh:
+                print(f"  {name}: missing from the fresh run")
+                continue
+            b, f_ = base[name], fresh[name]
+            if b <= 0:
+                continue
+            delta = (f_ - b) / b
+            marker = ""
+            gated = name.startswith("train.")
+            if gated and delta > args.threshold and not provisional:
+                # shared-runner policy: annotate, never fail the job
+                print(f"::warning title=bench regression::{name} mean {f_:.6g}s is "
+                      f"{delta * 100:.1f}% over baseline {b:.6g}s (threshold "
+                      f"{args.threshold * 100:.0f}%)")
+                warnings += 1
+                marker = "  <-- REGRESSION"
+            print(f"  {name}: baseline {b:.6g}s -> fresh {f_:.6g}s ({delta * 100:+.1f}%)"
+                  f"{marker}")
+        for name in sorted(set(fresh) - set(base)):
+            print(f"  {name}: new (no baseline entry)")
+
+    print(f"bench-diff: {warnings} regression warning(s)")
+    return 0  # never hard-fail on the shared runner
+
+
+if __name__ == "__main__":
+    sys.exit(main())
