@@ -60,6 +60,9 @@ fn main() {
     bench_minibatch_steps(&mut b);
     bench_hlo_step(&mut b);
 
+    println!("== serve (IVF ANN vs brute-force top-k) ==");
+    bench_serve(&mut b);
+
     println!("== end-to-end trainer (native) ==");
     bench_trainer(&mut b);
 
@@ -327,6 +330,49 @@ fn bench_hlo_step(b: &mut Bencher) {
             last
         },
     );
+}
+
+/// The `graphvite serve` query path: IVF-flat probing must beat the exact
+/// scan (the acceptance bar for shipping an ANN index at all), and the
+/// index build itself is timed because hot reload pays it on every
+/// checkpoint.
+fn bench_serve(b: &mut Bencher) {
+    use graphvite::serve::{AnnIndex, IndexConfig};
+
+    let n = if fast() { 20_000 } else { 100_000 };
+    let d = 64;
+    let store = EmbeddingStore::init(n, d, 17);
+    let cfg = IndexConfig::default();
+    b.bench(&format!("serve.index_build {}k nodes d{d}", n / 1000), || {
+        AnnIndex::build(&store, &cfg).nlist()
+    });
+    let idx = AnnIndex::build(&store, &cfg);
+    let queries = if fast() { 200 } else { 2_000 };
+    let mut rng = Rng::new(18);
+    let ids: Vec<u32> = (0..queries).map(|_| rng.below(n as u64) as u32).collect();
+
+    let mut brute = 0u64;
+    b.bench_items(&format!("serve.brute_force top10 x{queries} (queries/s)"), queries as f64, || {
+        brute = 0;
+        for &v in &ids {
+            let q = idx.vector(v).to_vec();
+            brute += idx.brute_force(&q, 10).len() as u64;
+        }
+        brute
+    });
+    let mut ann = 0u64;
+    b.bench_items(
+        &format!("serve.ann top10 x{queries} nprobe={} (queries/s)", idx.nprobe()),
+        queries as f64,
+        || {
+            ann = 0;
+            for &v in &ids {
+                ann += idx.search_node(v, 10, idx.nprobe()).len() as u64;
+            }
+            ann
+        },
+    );
+    black_box((brute, ann));
 }
 
 fn bench_trainer(b: &mut Bencher) {

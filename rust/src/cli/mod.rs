@@ -19,7 +19,7 @@ pub struct Args {
 /// ambiguous (flag + positional vs. `quiet=graph.txt`); a registry is the
 /// only way to resolve it without clap-style declarative specs.
 pub const KNOWN_FLAGS: &[&str] =
-    &["help", "quiet", "version", "normalize", "no-color", "dry-run"];
+    &["help", "quiet", "version", "normalize", "no-color", "dry-run", "watch"];
 
 impl Args {
     /// Parse from raw argv (excluding the program name), resolving flag vs.

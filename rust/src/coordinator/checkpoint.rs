@@ -1,0 +1,327 @@
+//! Episode-boundary training checkpoints (`.gvck`).
+//!
+//! A checkpoint captures *everything* the trajectory depends on at a pool
+//! boundary — not just the weights (the Tencent multi-GPU lesson: resume
+//! must restore sampler/optimizer state or the resumed run diverges):
+//!
+//! - both embedding matrices, fully synced from worker residency via the
+//!   [`JobMsg::Sync`](super::worker::JobMsg) fence;
+//! - the per-worker negative-sampling RNG states — the only *stateful*
+//!   streams in the system (they advance per negative drawn; sampler and
+//!   shuffle streams are pure functions of `seed` + pool index and are
+//!   rederived on resume);
+//! - the LR-schedule position (`samples_planned`) and the pool cursor
+//!   (`pools_done`).
+//!
+//! What a checkpoint deliberately does **not** capture: transfer-engine
+//! residency/version ledgers (keep/upload decisions never change trained
+//! values — a resumed run starts with a cold residency plan and produces
+//! bitwise-identical embeddings; see `transfer.rs`), block grids, and
+//! sample pools (rebuilt deterministically from the pool index). Training
+//! `2N` epochs straight and `N` + checkpoint + resume + `N` therefore
+//! produce identical bytes — pinned in `rust/tests/checkpoint.rs`.
+//!
+//! On-disk layout (all integers little-endian), validated like `.gvpk`:
+//! magic, version, geometry bounded by the actual file length, exact
+//! total size (rejects truncation *and* trailing garbage):
+//!
+//! ```text
+//! offset    size   field
+//!      0       4   magic b"GVCK"
+//!      4       4   format version (u32) = 1
+//!      8       8   seed
+//!     16       8   num_nodes
+//!     24       8   dim
+//!     32       8   num_edges
+//!     40       8   partitions
+//!     48       8   num_workers (W)
+//!     56       8   total_samples
+//!     64       8   pool_size
+//!     72       8   pools_done
+//!     80       8   samples_planned
+//!     88       8   samples_done
+//!     96    32*W   worker RNG states (4 × u64 each, xoshiro256**)
+//!      +   n*d*4   vertex matrix (f32)
+//!      +   n*d*4   context matrix (f32)
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::embedding::EmbeddingStore;
+
+pub const CKPT_MAGIC: &[u8; 4] = b"GVCK";
+pub const CKPT_VERSION: u32 = 1;
+const CKPT_HEADER_LEN: u64 = 96;
+
+/// Borrowed view of the resumable training state at a pool boundary —
+/// what the checkpoint observer receives and [`save_checkpoint`] writes.
+/// No clones: the store and RNG states are borrowed from the live run.
+pub struct CheckpointState<'a> {
+    pub seed: u64,
+    pub num_edges: u64,
+    pub partitions: u64,
+    pub total_samples: u64,
+    pub pool_size: u64,
+    pub pools_done: u64,
+    pub samples_planned: u64,
+    pub samples_done: u64,
+    pub worker_rngs: &'a [[u64; 4]],
+    pub store: &'a EmbeddingStore,
+}
+
+/// An owned, loaded checkpoint — pass to
+/// [`Trainer::train_resumable`](super::Trainer::train_resumable) to
+/// continue the run it captured.
+#[derive(Debug, Clone)]
+pub struct TrainCheckpoint {
+    pub seed: u64,
+    pub num_edges: u64,
+    pub partitions: u64,
+    pub total_samples: u64,
+    pub pool_size: u64,
+    pub pools_done: u64,
+    pub samples_planned: u64,
+    pub samples_done: u64,
+    pub worker_rngs: Vec<[u64; 4]>,
+    pub store: EmbeddingStore,
+}
+
+impl TrainCheckpoint {
+    pub fn state(&self) -> CheckpointState<'_> {
+        CheckpointState {
+            seed: self.seed,
+            num_edges: self.num_edges,
+            partitions: self.partitions,
+            total_samples: self.total_samples,
+            pool_size: self.pool_size,
+            pools_done: self.pools_done,
+            samples_planned: self.samples_planned,
+            samples_done: self.samples_done,
+            worker_rngs: &self.worker_rngs,
+            store: &self.store,
+        }
+    }
+}
+
+/// Write a checkpoint atomically (tmp sibling + rename), so a crash
+/// mid-write never destroys the previous checkpoint and a concurrent
+/// reader never sees a torn file.
+pub fn save_checkpoint(state: &CheckpointState<'_>, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    let tmp = path.with_file_name(name);
+    {
+        let mut w = BufWriter::new(
+            File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?,
+        );
+        w.write_all(CKPT_MAGIC)?;
+        w.write_all(&CKPT_VERSION.to_le_bytes())?;
+        for x in [
+            state.seed,
+            state.store.num_nodes() as u64,
+            state.store.dim() as u64,
+            state.num_edges,
+            state.partitions,
+            state.worker_rngs.len() as u64,
+            state.total_samples,
+            state.pool_size,
+            state.pools_done,
+            state.samples_planned,
+            state.samples_done,
+        ] {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        for rng in state.worker_rngs {
+            for x in rng {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        for mat in [state.store.vertex_matrix(), state.store.context_matrix()] {
+            let mut buf = Vec::with_capacity(mat.len() * 4);
+            for &x in mat {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            w.write_all(&buf)?;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+/// Load and fully validate a checkpoint. Every geometry field is checked
+/// against the actual file length *before* any allocation; truncation,
+/// trailing garbage, and degenerate RNG states all return `Err`.
+pub fn load_checkpoint(path: impl AsRef<Path>) -> Result<TrainCheckpoint> {
+    let file = File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    if file_len < CKPT_HEADER_LEN {
+        bail!(
+            "checkpoint truncated: {file_len} bytes is shorter than the \
+             {CKPT_HEADER_LEN}-byte header"
+        );
+    }
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != CKPT_MAGIC {
+        bail!("not a graphvite checkpoint (bad magic)");
+    }
+    let mut u32buf = [0u8; 4];
+    r.read_exact(&mut u32buf)?;
+    let version = u32::from_le_bytes(u32buf);
+    if version != CKPT_VERSION {
+        bail!("unsupported checkpoint version {version} (this build reads {CKPT_VERSION})");
+    }
+    let mut u64buf = [0u8; 8];
+    let mut next = |r: &mut BufReader<File>| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let seed = next(&mut r)?;
+    let num_nodes = next(&mut r)?;
+    let dim = next(&mut r)?;
+    let num_edges = next(&mut r)?;
+    let partitions = next(&mut r)?;
+    let num_workers = next(&mut r)?;
+    let total_samples = next(&mut r)?;
+    let pool_size = next(&mut r)?;
+    let pools_done = next(&mut r)?;
+    let samples_planned = next(&mut r)?;
+    let samples_done = next(&mut r)?;
+
+    let overflow = || anyhow::anyhow!("checkpoint header geometry overflows u64");
+    let rng_bytes = num_workers.checked_mul(32).ok_or_else(overflow)?;
+    let matrix_bytes = num_nodes
+        .checked_mul(dim)
+        .and_then(|nd| nd.checked_mul(4))
+        .ok_or_else(overflow)?;
+    let expected = CKPT_HEADER_LEN
+        .checked_add(rng_bytes)
+        .and_then(|x| x.checked_add(matrix_bytes.checked_mul(2)?))
+        .ok_or_else(overflow)?;
+    if file_len != expected {
+        bail!(
+            "checkpoint length mismatch: header declares {num_nodes}\u{d7}{dim}, \
+             {num_workers} workers ({expected} bytes expected) but the file is \
+             {file_len} bytes"
+        );
+    }
+    if samples_planned > total_samples {
+        bail!("checkpoint samples_planned {samples_planned} exceeds total {total_samples}");
+    }
+
+    let mut worker_rngs = Vec::with_capacity(num_workers as usize);
+    for w in 0..num_workers {
+        let mut s = [0u64; 4];
+        for x in &mut s {
+            *x = next(&mut r)?;
+        }
+        if s.iter().all(|&x| x == 0) {
+            bail!("checkpoint worker {w} has an all-zero rng state");
+        }
+        worker_rngs.push(s);
+    }
+    let nd = (num_nodes as usize) * (dim as usize);
+    let mut read_matrix = |r: &mut BufReader<File>| -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; nd * 4];
+        r.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    };
+    let vertex = read_matrix(&mut r)?;
+    let context = read_matrix(&mut r)?;
+    Ok(TrainCheckpoint {
+        seed,
+        num_edges,
+        partitions,
+        total_samples,
+        pool_size,
+        pools_done,
+        samples_planned,
+        samples_done,
+        worker_rngs,
+        store: EmbeddingStore::from_raw(num_nodes as usize, dim as usize, vertex, context),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("graphvite_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample() -> TrainCheckpoint {
+        TrainCheckpoint {
+            seed: 42,
+            num_edges: 900,
+            partitions: 4,
+            total_samples: 3600,
+            pool_size: 2000,
+            pools_done: 1,
+            samples_planned: 2000,
+            samples_done: 2000,
+            worker_rngs: vec![[1, 2, 3, 4], [5, 6, 7, 8]],
+            store: EmbeddingStore::init(30, 8, 42),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ck = sample();
+        let p = tmp("ok.gvck");
+        save_checkpoint(&ck.state(), &p).unwrap();
+        let l = load_checkpoint(&p).unwrap();
+        assert_eq!(l.seed, 42);
+        assert_eq!(l.pools_done, 1);
+        assert_eq!(l.samples_planned, 2000);
+        assert_eq!(l.worker_rngs, ck.worker_rngs);
+        assert_eq!(l.store.vertex_matrix(), ck.store.vertex_matrix());
+        assert_eq!(l.store.context_matrix(), ck.store.context_matrix());
+    }
+
+    #[test]
+    fn corrupt_inputs_fail_loudly() {
+        let ck = sample();
+        let p = tmp("base.gvck");
+        save_checkpoint(&ck.state(), &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+
+        let bad = tmp("magic.gvck");
+        let mut b = bytes.clone();
+        b[0] ^= 0xFF;
+        std::fs::write(&bad, &b).unwrap();
+        assert!(load_checkpoint(&bad).unwrap_err().to_string().contains("magic"));
+
+        let bad = tmp("trunc.gvck");
+        std::fs::write(&bad, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(load_checkpoint(&bad).unwrap_err().to_string().contains("mismatch"));
+
+        let bad = tmp("trail.gvck");
+        let mut b = bytes.clone();
+        b.extend_from_slice(b"junk");
+        std::fs::write(&bad, &b).unwrap();
+        assert!(load_checkpoint(&bad).unwrap_err().to_string().contains("mismatch"));
+
+        // oversized node count cannot over-allocate: rejected against the
+        // real file length before any matrix is read
+        let bad = tmp("huge.gvck");
+        let mut b = bytes.clone();
+        b[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&bad, &b).unwrap();
+        assert!(load_checkpoint(&bad).is_err());
+    }
+}

@@ -72,8 +72,11 @@
 //! `residency` (the PR-3 transfer engine) — the first three drive
 //! Table 6, the last two `bench_pipeline`.
 
+pub mod checkpoint;
 pub mod transfer;
 mod worker;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint, CheckpointState, TrainCheckpoint};
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -105,6 +108,29 @@ pub struct TrainResult {
 
 /// Checkpoint callback: (positive samples trained so far, current store).
 pub type Checkpoint<'a> = &'a mut dyn FnMut(u64, &EmbeddingStore);
+
+/// What a [`StateObserver`] tells the trainer after a checkpoint: keep
+/// going, or stop cleanly at this pool boundary (the state it just saw is
+/// a complete resume point).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainFlow {
+    Continue,
+    Stop,
+}
+
+/// Full-state checkpoint observer, invoked after every pool pass with the
+/// complete resumable state (synced store, worker RNG snapshots, LR
+/// schedule position). Used by `--checkpoint` to persist `.gvck` files
+/// and by `--stop-after-pools` / the bitwise-resume test to end a run
+/// early at a pool boundary.
+pub type StateObserver<'a> = &'a mut dyn FnMut(&CheckpointState<'_>) -> Result<TrainFlow>;
+
+/// Internal: the three observer shapes [`Trainer::train_impl`] accepts.
+enum Observer<'a, 'b> {
+    None,
+    Legacy(Checkpoint<'a>),
+    State(StateObserver<'b>),
+}
 
 /// The GraphVite system handle.
 pub struct Trainer {
@@ -142,7 +168,7 @@ impl Trainer {
 
     /// Train to completion.
     pub fn train(&mut self) -> Result<TrainResult> {
-        self.train_with_callback(None)
+        self.train_impl(None, Observer::None)
     }
 
     /// Train, invoking `checkpoint` after every pool pass (used by the
@@ -150,9 +176,39 @@ impl Trainer {
     /// partitions (`fix_context` / `residency`) are synchronized back
     /// into the store before every checkpoint, so callbacks always see
     /// current vertex *and* context rows.
-    pub fn train_with_callback(
+    pub fn train_with_callback(&mut self, checkpoint: Option<Checkpoint>) -> Result<TrainResult> {
+        match checkpoint {
+            Some(cb) => self.train_impl(None, Observer::Legacy(cb)),
+            None => self.train_impl(None, Observer::None),
+        }
+    }
+
+    /// Resumable training: continue from a loaded [`TrainCheckpoint`]
+    /// (or start fresh with `None`), invoking `observer` with the full
+    /// resumable state after every pool pass. The observer may persist
+    /// the state ([`save_checkpoint`]) and/or end the run early at the
+    /// pool boundary by returning [`TrainFlow::Stop`].
+    ///
+    /// Resume is **bitwise-equivalent**: an interrupted-and-resumed run
+    /// produces exactly the bytes of the uninterrupted run with the same
+    /// config (pinned in `rust/tests/checkpoint.rs`). The config must
+    /// therefore describe the *full* target run — same seed, geometry
+    /// and `--epochs` as the run that wrote the checkpoint.
+    pub fn train_resumable(
         &mut self,
-        mut checkpoint: Option<Checkpoint>,
+        resume: Option<TrainCheckpoint>,
+        observer: Option<StateObserver>,
+    ) -> Result<TrainResult> {
+        match observer {
+            Some(obs) => self.train_impl(resume, Observer::State(obs)),
+            None => self.train_impl(resume, Observer::None),
+        }
+    }
+
+    fn train_impl(
+        &mut self,
+        resume: Option<TrainCheckpoint>,
+        mut observer: Observer,
     ) -> Result<TrainResult> {
         let cfg = self.config.clone();
         let graph = Arc::clone(&self.graph);
@@ -187,18 +243,32 @@ impl Trainer {
             // directly on the gathered partitions — no AOT artifact
             BackendKind::Native | BackendKind::Simd => None,
         };
-        let mut store = EmbeddingStore::init(graph.num_nodes(), cfg.dim, cfg.seed);
+        let num_edges = self.graph.num_edges();
+        let total_samples = cfg.total_samples(num_edges).max(1);
+        let pool_size = cfg.episode_size.saturating_mul(num_parts).max(cfg.batch_size);
+        let num_pools = (total_samples as usize).div_ceil(pool_size);
+        // Resume picks up the pool cursor, the synced store, the LR
+        // schedule position and the worker RNG streams; everything else
+        // (pools, grids, transfer-engine residency) rebuilds
+        // deterministically from `seed` + pool index — see checkpoint.rs.
+        let (mut store, start_pool, resume_rngs, resume_done, resume_planned) = match resume {
+            Some(ck) => {
+                validate_resume(
+                    &ck, &cfg, &*graph, num_parts, total_samples, pool_size, num_pools,
+                )?;
+                let pools = ck.pools_done as usize;
+                (ck.store, pools, Some(ck.worker_rngs), ck.samples_done, ck.samples_planned)
+            }
+            None => (EmbeddingStore::init(graph.num_nodes(), cfg.dim, cfg.seed), 0, None, 0, 0),
+        };
         prep.stop();
 
         // ---- training ----
         let mut train_sw = Stopwatch::started();
-        let total_samples = cfg.total_samples(self.graph.num_edges()).max(1);
-        let pool_size = cfg.episode_size.saturating_mul(num_parts).max(cfg.batch_size);
-        let num_pools = (total_samples as usize).div_ceil(pool_size);
-
         let base_rng = Rng::new(cfg.seed);
         let mut loss_curve: Vec<f32> = Vec::new();
-        let mut samples_done: u64 = 0;
+        let mut samples_done: u64 = resume_done;
+        let mut pools_done: u64 = start_pool as u64;
 
         // Shared read-only sampling structures, built ONCE. (Building the
         // walker / departure table / edge sampler per pool fill used to
@@ -215,7 +285,8 @@ impl Trainer {
                 Arc::clone(&neg),
                 Arc::clone(&counters),
                 &base_rng,
-            );
+                resume_rngs.as_deref(),
+            )?;
 
             // ---- pool production ----
             let sampling_ref = &sampling;
@@ -227,7 +298,7 @@ impl Trainer {
                 let counters2 = Arc::clone(&counters);
                 Some(scope.spawn(move || {
                     let mut buf = SamplePool::new();
-                    for pool_idx in 0..num_pools {
+                    for pool_idx in start_pool..num_pools {
                         fill_pool_counted(
                             sampling_ref, &cfg2, &base2, &counters2, pool_idx, pool_size, &mut buf,
                         );
@@ -262,7 +333,7 @@ impl Trainer {
                 next_grid: BlockGrid::new_empty(num_parts),
                 grid_prefilled: false,
                 total_samples,
-                samples_planned: 0,
+                samples_planned: resume_planned,
                 outstanding: 0,
             };
 
@@ -286,15 +357,26 @@ impl Trainer {
                         )?;
                         // hand the drained allocation back to the producer
                         pair.recycle(drained);
-                        if let Some(cb) = checkpoint.as_mut() {
-                            runner.sync_residents(&mut store)?;
-                            cb(samples_done, &store);
+                        pools_done += 1;
+                        let flow = observe_pool(
+                            &mut observer,
+                            &mut runner,
+                            &mut store,
+                            &cfg,
+                            num_edges,
+                            num_parts,
+                            pool_size,
+                            pools_done,
+                            samples_done,
+                        )?;
+                        if flow == TrainFlow::Stop {
+                            break;
                         }
                         next = prefetched;
                     }
                 } else {
                     let mut buf = SamplePool::new();
-                    for pool_idx in 0..num_pools {
+                    for pool_idx in start_pool..num_pools {
                         fill_pool_counted(
                             sampling_ref, &cfg, &base_rng, &counters, pool_idx, pool_size, &mut buf,
                         );
@@ -306,20 +388,32 @@ impl Trainer {
                             &mut loss_curve,
                         )?;
                         buf = drained;
-                        if let Some(cb) = checkpoint.as_mut() {
-                            runner.sync_residents(&mut store)?;
-                            cb(samples_done, &store);
+                        pools_done += 1;
+                        let flow = observe_pool(
+                            &mut observer,
+                            &mut runner,
+                            &mut store,
+                            &cfg,
+                            num_edges,
+                            num_parts,
+                            pool_size,
+                            pools_done,
+                            samples_done,
+                        )?;
+                        if flow == TrainFlow::Stop {
+                            break;
                         }
                     }
                 }
                 // pull worker-resident partitions back into the store
-                runner.sync_residents(&mut store)
+                runner.sync_residents(&mut store).map(|_| ())
             })();
 
-            if consume_res.is_err() {
-                // wake a parked producer; its publish returns None and it exits
-                pair.close();
-            }
+            // Unblock a parked producer — on the error path AND after an
+            // observer's early stop, pools it is still filling will never
+            // be taken, so its publish must return None. After a normal
+            // completion the producer has already exited; close is a no-op.
+            pair.close();
             for tx in &job_txs {
                 let _ = tx.send(JobMsg::Stop);
             }
@@ -649,23 +743,26 @@ impl EpisodeRunner<'_> {
     }
 
     /// Fence: pull clones of every worker-resident partition back into
-    /// the store (checkpoints + end of training). Requires no jobs in
-    /// flight.
-    fn sync_residents(&mut self, store: &mut EmbeddingStore) -> Result<()> {
+    /// the store (checkpoints + end of training) and collect each
+    /// worker's RNG snapshot, indexed by worker (replies arrive unordered
+    /// on the shared channel). Requires no jobs in flight.
+    fn sync_residents(&mut self, store: &mut EmbeddingStore) -> Result<Vec<[u64; 4]>> {
         assert_eq!(self.outstanding, 0, "sync fence with jobs in flight");
         for tx in self.job_txs {
             tx.send(JobMsg::Sync)
                 .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
         }
+        let mut rngs = vec![[0u64; 4]; self.job_txs.len()];
         for _ in 0..self.job_txs.len() {
             let reply = self
                 .result_rx
                 .recv()
                 .map_err(|_| anyhow::anyhow!("workers hung up"))?;
             match reply? {
-                Reply::Synced(entries) => {
+                Reply::Synced(sync) => {
+                    rngs[sync.worker] = sync.rng_state;
                     let t0 = std::time::Instant::now();
-                    for part in entries {
+                    for part in sync.residents {
                         store.scatter_partition(self.parts, part.pid, part.matrix, &part.data);
                         self.counters
                             .add(&self.counters.bytes_from_device, (part.data.len() * 4) as u64);
@@ -676,8 +773,116 @@ impl EpisodeRunner<'_> {
                 Reply::Job(_) => anyhow::bail!("unexpected job result at sync fence"),
             }
         }
-        Ok(())
+        Ok(rngs)
     }
+}
+
+/// Run the post-pool observer hook: legacy callbacks get (samples, store)
+/// after a residency sync; state observers additionally get the worker
+/// RNG snapshots and schedule position as a [`CheckpointState`] and may
+/// stop the run at this pool boundary.
+#[allow(clippy::too_many_arguments)]
+fn observe_pool(
+    observer: &mut Observer,
+    runner: &mut EpisodeRunner,
+    store: &mut EmbeddingStore,
+    cfg: &TrainConfig,
+    num_edges: usize,
+    num_parts: usize,
+    pool_size: usize,
+    pools_done: u64,
+    samples_done: u64,
+) -> Result<TrainFlow> {
+    match observer {
+        Observer::None => Ok(TrainFlow::Continue),
+        Observer::Legacy(cb) => {
+            runner.sync_residents(store)?;
+            cb(samples_done, store);
+            Ok(TrainFlow::Continue)
+        }
+        Observer::State(cb) => {
+            let rngs = runner.sync_residents(store)?;
+            let state = CheckpointState {
+                seed: cfg.seed,
+                num_edges: num_edges as u64,
+                partitions: num_parts as u64,
+                total_samples: runner.total_samples,
+                pool_size: pool_size as u64,
+                pools_done,
+                samples_planned: runner.samples_planned,
+                samples_done,
+                worker_rngs: &rngs,
+                store: &*store,
+            };
+            cb(&state)
+        }
+    }
+}
+
+/// Check a loaded checkpoint against the run it is about to continue.
+/// Every mismatch here would silently break bitwise equivalence (or scatter
+/// out of bounds), so each is a hard error naming both sides.
+fn validate_resume(
+    ck: &TrainCheckpoint,
+    cfg: &TrainConfig,
+    graph: &dyn GraphStore,
+    num_parts: usize,
+    total_samples: u64,
+    pool_size: usize,
+    num_pools: usize,
+) -> Result<()> {
+    use anyhow::ensure;
+    ensure!(ck.seed == cfg.seed, "checkpoint seed {} != config seed {}", ck.seed, cfg.seed);
+    ensure!(
+        ck.store.num_nodes() == graph.num_nodes(),
+        "checkpoint has {} nodes, graph has {}",
+        ck.store.num_nodes(),
+        graph.num_nodes()
+    );
+    ensure!(
+        ck.store.dim() == cfg.dim,
+        "checkpoint dim {} != config dim {}",
+        ck.store.dim(),
+        cfg.dim
+    );
+    ensure!(
+        ck.num_edges == graph.num_edges() as u64,
+        "checkpoint graph had {} edges, this graph has {}",
+        ck.num_edges,
+        graph.num_edges()
+    );
+    ensure!(
+        ck.partitions == num_parts as u64,
+        "checkpoint used {} partitions, config declares {}",
+        ck.partitions,
+        num_parts
+    );
+    ensure!(
+        ck.worker_rngs.len() == cfg.num_workers,
+        "checkpoint used {} workers, config declares {}",
+        ck.worker_rngs.len(),
+        cfg.num_workers
+    );
+    ensure!(
+        ck.total_samples == total_samples,
+        "checkpoint sample budget is {} but this run's is {} — resume with the same --epochs \
+         as the full target run",
+        ck.total_samples,
+        total_samples
+    );
+    ensure!(
+        ck.pool_size == pool_size as u64,
+        "checkpoint pool size {} != this run's {} (episode_size or batch_size changed?)",
+        ck.pool_size,
+        pool_size
+    );
+    ensure!(
+        (ck.pools_done as usize) < num_pools,
+        "checkpoint is already complete ({} of {} pool passes)",
+        ck.pools_done,
+        num_pools
+    );
+    Ok(())
 }
 
 /// Read-only sampling structures shared by every sampler thread and every

@@ -95,10 +95,22 @@ pub struct JobResult {
     pub trained: u64,
 }
 
+/// A worker's answer to a [`JobMsg::Sync`] fence: clones of its resident
+/// partitions plus the worker's identity and RNG snapshot. Replies arrive
+/// unordered on the shared result channel, so the worker index travels in
+/// the reply; the RNG state is what checkpoint/resume needs — the worker
+/// streams are the only *stateful* RNGs in the system (they advance per
+/// negative drawn), everything else rederives from `seed` + pool index.
+pub struct SyncReply {
+    pub worker: usize,
+    pub rng_state: [u64; 4],
+    pub residents: Vec<ResidentPart>,
+}
+
 /// Everything a worker sends back on the shared result channel.
 pub enum Reply {
     Job(JobResult),
-    Synced(Vec<ResidentPart>),
+    Synced(SyncReply),
 }
 
 type ResultTx = mpsc::Sender<Result<Reply>>;
@@ -165,6 +177,11 @@ impl ResidencyCache {
 
 /// Spawn `num_workers` device threads inside `scope`. Returns join
 /// handles, per-worker job senders, and the shared result receiver.
+///
+/// `resume_rngs`, when given (checkpoint resume), replaces the freshly
+/// derived per-worker negative-sampling streams with the exact states the
+/// checkpoint captured, so the resumed run draws the same negatives the
+/// uninterrupted run would have.
 pub fn spawn_workers<'scope, 'env>(
     scope: &'scope Scope<'scope, 'env>,
     cfg: &TrainConfig,
@@ -172,11 +189,20 @@ pub fn spawn_workers<'scope, 'env>(
     neg: Arc<NegativeSampler>,
     counters: Arc<Counters>,
     base_rng: &Rng,
-) -> (
+    resume_rngs: Option<&[[u64; 4]]>,
+) -> Result<(
     Vec<ScopedJoinHandle<'scope, Result<()>>>,
     Vec<mpsc::Sender<JobMsg>>,
     mpsc::Receiver<Result<Reply>>,
-) {
+)> {
+    if let Some(states) = resume_rngs {
+        anyhow::ensure!(
+            states.len() == cfg.num_workers,
+            "checkpoint has {} worker rng states but the config declares {} workers",
+            states.len(),
+            cfg.num_workers
+        );
+    }
     let (result_tx, result_rx) = mpsc::channel::<Result<Reply>>();
     let mut handles = Vec::with_capacity(cfg.num_workers);
     let mut job_txs = Vec::with_capacity(cfg.num_workers);
@@ -187,7 +213,11 @@ pub fn spawn_workers<'scope, 'env>(
         let result_tx = result_tx.clone();
         let neg = Arc::clone(&neg);
         let counters = Arc::clone(&counters);
-        let rng = base_rng.stream(streams::WORKER, i as u64);
+        let rng = match resume_rngs {
+            Some(states) => Rng::from_state(states[i])
+                .map_err(|e| anyhow::anyhow!("resume worker {i} rng: {e}"))?,
+            None => base_rng.stream(streams::WORKER, i as u64),
+        };
         // Capacity-aware chunk sizing: a declared-capacity worker trains
         // device chunks of `batch_size × capacity` samples (a bigger
         // device takes proportionally bigger mini-batches as well as more
@@ -202,12 +232,12 @@ pub fn spawn_workers<'scope, 'env>(
             worker_loop(i, cfg, cache_limit, artifact, neg, counters, rng, rx, result_tx)
         }));
     }
-    (handles, job_txs, result_rx)
+    Ok((handles, job_txs, result_rx))
 }
 
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    _worker_idx: usize,
+    worker_idx: usize,
     cfg: TrainConfig,
     cache_limit: Option<usize>,
     artifact: Option<ArtifactMeta>,
@@ -239,7 +269,11 @@ fn worker_loop(
                 job,
             )
             .map(Reply::Job),
-            JobMsg::Sync => Ok(Reply::Synced(cache.snapshot())),
+            JobMsg::Sync => Ok(Reply::Synced(SyncReply {
+                worker: worker_idx,
+                rng_state: rng.state(),
+                residents: cache.snapshot(),
+            })),
             JobMsg::Stop => break,
         };
         if tx.send(reply).is_err() {

@@ -1,5 +1,13 @@
-//! Embedding persistence: a compact binary format (magic + header + raw
-//! f32 rows) and the word2vec text format other toolchains consume.
+//! Embedding persistence: the legacy binary format (magic + header + raw
+//! f32 rows), the word2vec text format other toolchains consume, and the
+//! packed `.gvemb` format the serving layer mmaps/streams.
+//!
+//! Every loader here follows the fail-loud discipline `graph/ondisk.rs`
+//! established for `.gvpk`: validate magic, version and geometry against
+//! the *actual file length* before allocating anything, and reject both
+//! truncation and trailing garbage with an exact-length check. A corrupt
+//! or hostile header must produce `Err`, never a panic, an out-of-bounds
+//! write, or a multi-gigabyte allocation.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
@@ -10,6 +18,88 @@ use anyhow::{bail, Context, Result};
 use super::EmbeddingStore;
 
 const MAGIC: &[u8; 8] = b"GRVITE01";
+
+/// `.gvemb` packed embedding file: 4-byte magic + fixed 32-byte header,
+/// then raw little-endian f32 matrices at a 32-byte-aligned offset (so
+/// the file can be mapped and the matrices used in place).
+///
+/// ```text
+/// offset  size  field
+///      0     4  magic  b"GVEM"
+///      4     4  format version (u32 LE) = 1
+///      8     8  num_nodes (u64 LE)
+///     16     8  dim (u64 LE)
+///     24     4  flags (u32 LE): bit 0 = context matrix present
+///     28     4  reserved, must be 0
+///     32   n*d*4  vertex matrix (f32 LE, row-major)
+///      +   n*d*4  context matrix (iff flags bit 0)
+/// ```
+pub const GVEMB_MAGIC: &[u8; 4] = b"GVEM";
+pub const GVEMB_VERSION: u32 = 1;
+const GVEMB_HEADER_LEN: u64 = 32;
+const GVEMB_FLAG_CONTEXT: u32 = 1;
+
+/// On-disk formats an embedding store can be written as.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutputFormat {
+    /// Legacy `GRVITE01` binary (vertex + context).
+    Binary,
+    /// word2vec text (`n d` header, vertex rows only).
+    Text,
+    /// Packed `.gvemb` (header-validated, serving-layer format).
+    Gvemb,
+}
+
+impl OutputFormat {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OutputFormat::Binary => "binary",
+            OutputFormat::Text => "text",
+            OutputFormat::Gvemb => "gvemb",
+        }
+    }
+
+    /// Parse an explicit `--output-format` value (case-insensitive).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "binary" | "bin" => Ok(OutputFormat::Binary),
+            "text" | "txt" => Ok(OutputFormat::Text),
+            "gvemb" => Ok(OutputFormat::Gvemb),
+            other => bail!("unknown output format '{other}' (expected binary|text|gvemb)"),
+        }
+    }
+
+    /// Infer the format from a path's extension (case-insensitive).
+    /// Unknown extensions are an error — silently defaulting to binary is
+    /// how embeddings end up unreadable by the tool that expects text.
+    pub fn from_path(path: &str) -> Result<Self> {
+        let ext = Path::new(path)
+            .extension()
+            .and_then(|e| e.to_str())
+            .map(|e| e.to_ascii_lowercase());
+        match ext.as_deref() {
+            Some("txt") => Ok(OutputFormat::Text),
+            Some("gvemb") => Ok(OutputFormat::Gvemb),
+            Some("bin") | Some("emb") => Ok(OutputFormat::Binary),
+            _ => bail!(
+                "cannot infer embedding format from '{path}' \
+                 (known extensions: .bin/.emb, .txt, .gvemb; \
+                 or pass --output-format binary|text|gvemb)"
+            ),
+        }
+    }
+}
+
+/// Write `store` to `path` in the given format. `.gvemb` writes are
+/// atomic (tmp file + rename) so a concurrently-watching server never
+/// observes a half-written file.
+pub fn save_embeddings(store: &EmbeddingStore, path: &str, format: OutputFormat) -> Result<()> {
+    match format {
+        OutputFormat::Binary => save_embeddings_binary(store, path),
+        OutputFormat::Text => save_embeddings_text(store, path),
+        OutputFormat::Gvemb => save_embeddings_gvemb(store, path),
+    }
+}
 
 /// Save both matrices in the binary format.
 pub fn save_embeddings_binary(store: &EmbeddingStore, path: impl AsRef<Path>) -> Result<()> {
@@ -29,10 +119,19 @@ pub fn save_embeddings_binary(store: &EmbeddingStore, path: impl AsRef<Path>) ->
 }
 
 /// Load a binary embedding file.
+///
+/// The header's `n`/`d` are untrusted: the expected size is computed with
+/// checked arithmetic and compared against the actual file length before
+/// any allocation, so a corrupt header can neither over-allocate nor hide
+/// truncation / trailing garbage.
 pub fn load_embeddings(path: impl AsRef<Path>) -> Result<EmbeddingStore> {
-    let mut r = BufReader::new(File::open(path.as_ref()).with_context(|| {
-        format!("open {}", path.as_ref().display())
-    })?);
+    let file = File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    if file_len < 24 {
+        bail!("embedding file truncated: {file_len} bytes is shorter than the 24-byte header");
+    }
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -40,20 +139,107 @@ pub fn load_embeddings(path: impl AsRef<Path>) -> Result<EmbeddingStore> {
     }
     let mut u64buf = [0u8; 8];
     r.read_exact(&mut u64buf)?;
-    let n = u64::from_le_bytes(u64buf) as usize;
+    let n = u64::from_le_bytes(u64buf);
     r.read_exact(&mut u64buf)?;
-    let d = u64::from_le_bytes(u64buf) as usize;
-    let mut read_matrix = |len: usize| -> Result<Vec<f32>> {
-        let mut bytes = vec![0u8; len * 4];
-        r.read_exact(&mut bytes)?;
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    };
-    let vertex = read_matrix(n * d)?;
-    let context = read_matrix(n * d)?;
-    Ok(EmbeddingStore::from_raw(n, d, vertex, context))
+    let d = u64::from_le_bytes(u64buf);
+    let matrix_bytes = checked_matrix_bytes(n, d)?;
+    let expected = 24u64
+        .checked_add(matrix_bytes.checked_mul(2).ok_or_else(size_overflow)?)
+        .ok_or_else(size_overflow)?;
+    if file_len != expected {
+        bail!(
+            "embedding file length mismatch: header declares {n}\u{d7}{d} \
+             ({expected} bytes expected) but the file is {file_len} bytes"
+        );
+    }
+    let nd = (n as usize) * (d as usize);
+    let vertex = read_f32_matrix(&mut r, nd)?;
+    let context = read_f32_matrix(&mut r, nd)?;
+    Ok(EmbeddingStore::from_raw(n as usize, d as usize, vertex, context))
+}
+
+/// Save both matrices as packed `.gvemb`, atomically (tmp + rename).
+pub fn save_embeddings_gvemb(store: &EmbeddingStore, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    let tmp = tmp_sibling(path);
+    {
+        let mut w = BufWriter::new(
+            File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?,
+        );
+        w.write_all(GVEMB_MAGIC)?;
+        w.write_all(&GVEMB_VERSION.to_le_bytes())?;
+        w.write_all(&(store.num_nodes() as u64).to_le_bytes())?;
+        w.write_all(&(store.dim() as u64).to_le_bytes())?;
+        w.write_all(&GVEMB_FLAG_CONTEXT.to_le_bytes())?;
+        w.write_all(&0u32.to_le_bytes())?;
+        for mat in [store.vertex_matrix(), store.context_matrix()] {
+            let mut buf = Vec::with_capacity(mat.len() * 4);
+            for &x in mat {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            w.write_all(&buf)?;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+/// Load a `.gvemb` file with the full `.gvpk`-style validation sequence:
+/// magic, version, geometry bounded by the file length, exact total size.
+pub fn load_embeddings_gvemb(path: impl AsRef<Path>) -> Result<EmbeddingStore> {
+    let file = File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    if file_len < GVEMB_HEADER_LEN {
+        bail!(
+            "gvemb file truncated: {file_len} bytes is shorter than the \
+             {GVEMB_HEADER_LEN}-byte header"
+        );
+    }
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != GVEMB_MAGIC {
+        bail!("not a gvemb embedding file (bad magic)");
+    }
+    let mut u32buf = [0u8; 4];
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u32buf)?;
+    let version = u32::from_le_bytes(u32buf);
+    if version != GVEMB_VERSION {
+        bail!("unsupported gvemb format version {version} (this build reads {GVEMB_VERSION})");
+    }
+    r.read_exact(&mut u64buf)?;
+    let n = u64::from_le_bytes(u64buf);
+    r.read_exact(&mut u64buf)?;
+    let d = u64::from_le_bytes(u64buf);
+    r.read_exact(&mut u32buf)?;
+    let flags = u32::from_le_bytes(u32buf);
+    if flags & !GVEMB_FLAG_CONTEXT != 0 {
+        bail!("gvemb header has unknown flag bits {flags:#x}");
+    }
+    r.read_exact(&mut u32buf)?;
+    if u32::from_le_bytes(u32buf) != 0 {
+        bail!("gvemb header reserved field is not zero");
+    }
+    let matrices = if flags & GVEMB_FLAG_CONTEXT != 0 { 2 } else { 1 };
+    let matrix_bytes = checked_matrix_bytes(n, d)?;
+    let expected = GVEMB_HEADER_LEN
+        .checked_add(matrix_bytes.checked_mul(matrices).ok_or_else(size_overflow)?)
+        .ok_or_else(size_overflow)?;
+    if file_len != expected {
+        bail!(
+            "gvemb file length mismatch: header declares {n}\u{d7}{d} with \
+             {matrices} matrix(es) ({expected} bytes expected) but the file \
+             is {file_len} bytes"
+        );
+    }
+    let nd = (n as usize) * (d as usize);
+    let vertex = read_f32_matrix(&mut r, nd)?;
+    let context = if matrices == 2 { read_f32_matrix(&mut r, nd)? } else { vec![0.0; nd] };
+    Ok(EmbeddingStore::from_raw(n as usize, d as usize, vertex, context))
 }
 
 /// Save the vertex matrix in word2vec text format (`n d` header, then
@@ -72,32 +258,139 @@ pub fn save_embeddings_text(store: &EmbeddingStore, path: impl AsRef<Path>) -> R
 }
 
 /// Load word2vec text format (vertex matrix only; context zeroed).
+///
+/// Malformed input returns `Err`, never panics: the header is parsed with
+/// explicit errors, the declared geometry is sanity-bounded against the
+/// file length before allocating (a complete `n×d` text file needs at
+/// least `n*(2d+2)` bytes), row ids must satisfy `v < n`, rows must carry
+/// exactly `d` values, and every row must appear exactly once.
 pub fn load_embeddings_text(path: impl AsRef<Path>) -> Result<EmbeddingStore> {
-    let r = BufReader::new(File::open(path)?);
+    let file = File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let file_len = file.metadata()?.len();
+    let r = BufReader::new(file);
     let mut lines = r.lines();
-    let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty file"))??;
+    let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty embedding text file"))??;
     let mut it = header.split_whitespace();
-    let n: usize = it.next().unwrap().parse()?;
+    let n: usize = it
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("bad text header (missing node count)"))?
+        .parse()
+        .context("bad text header (node count)")?;
     let d: usize = it
         .next()
-        .ok_or_else(|| anyhow::anyhow!("bad header"))?
-        .parse()?;
+        .ok_or_else(|| anyhow::anyhow!("bad text header (missing dimension)"))?
+        .parse()
+        .context("bad text header (dimension)")?;
+    if it.next().is_some() {
+        bail!("bad text header (expected exactly 'n d')");
+    }
+    // Lower bound on a complete file: each row is an id (>= 1 byte), d
+    // values (>= 2 bytes each with separator) and a newline. Rejecting
+    // here keeps a hostile header from driving a huge allocation.
+    let min_len = (n as u128) * (2 * d as u128 + 2);
+    if min_len > file_len as u128 {
+        bail!(
+            "text header declares {n}\u{d7}{d} but the file is only {file_len} \
+             bytes — too small to hold that many rows"
+        );
+    }
     let mut vertex = vec![0f32; n * d];
+    let mut seen = vec![false; n];
+    let mut rows = 0usize;
     for line in lines {
         let line = line?;
         let mut it = line.split_whitespace();
         let v: usize = match it.next() {
-            Some(tok) => tok.parse()?,
-            None => continue,
+            Some(tok) => tok.parse().with_context(|| format!("bad row id '{tok}'"))?,
+            None => continue, // blank line
         };
-        for (j, tok) in it.enumerate() {
+        if v >= n {
+            bail!("row id {v} out of range (header declares {n} nodes)");
+        }
+        if seen[v] {
+            bail!("duplicate row for node {v}");
+        }
+        seen[v] = true;
+        rows += 1;
+        let mut j = 0usize;
+        for tok in it {
             if j >= d {
                 bail!("row {v} has more than {d} values");
             }
-            vertex[v * d + j] = tok.parse()?;
+            vertex[v * d + j] = tok.parse().with_context(|| format!("row {v}: bad value"))?;
+            j += 1;
+        }
+        if j != d {
+            bail!("row {v} has {j} values, expected {d}");
         }
     }
+    if rows != n {
+        bail!("text file has {rows} rows but the header declares {n}");
+    }
     Ok(EmbeddingStore::from_raw(n, d, vertex, vec![0.0; n * d]))
+}
+
+/// Load an embedding file of any supported format by sniffing its leading
+/// magic bytes: `.gvemb`, the legacy binary format, or (failing both)
+/// word2vec text. Extension spoofing therefore cannot misroute a file.
+pub fn load_embeddings_auto(path: impl AsRef<Path>) -> Result<EmbeddingStore> {
+    let path = path.as_ref();
+    let mut head = [0u8; 8];
+    let got = {
+        let mut f =
+            File::open(path).with_context(|| format!("open {}", path.display()))?;
+        read_head(&mut f, &mut head)?
+    };
+    if got >= 4 && &head[..4] == GVEMB_MAGIC {
+        load_embeddings_gvemb(path)
+    } else if got >= 8 && &head == MAGIC {
+        load_embeddings(path)
+    } else {
+        load_embeddings_text(path)
+            .with_context(|| format!("{}: not gvemb/binary; text parse failed", path.display()))
+    }
+}
+
+fn read_head(f: &mut File, buf: &mut [u8; 8]) -> Result<usize> {
+    let mut got = 0;
+    while got < buf.len() {
+        let k = f.read(&mut buf[got..])?;
+        if k == 0 {
+            break;
+        }
+        got += k;
+    }
+    Ok(got)
+}
+
+fn size_overflow() -> anyhow::Error {
+    anyhow::anyhow!("embedding header geometry overflows u64")
+}
+
+/// `n * d * 4` with overflow checks — the untrusted-header guard shared
+/// by both binary loaders.
+fn checked_matrix_bytes(n: u64, d: u64) -> Result<u64> {
+    n.checked_mul(d)
+        .and_then(|nd| nd.checked_mul(4))
+        .ok_or_else(size_overflow)
+}
+
+/// Read exactly `len` f32s. Callers have already proven the file holds
+/// them (exact-length check), so the allocation is bounded by file size.
+fn read_f32_matrix(r: &mut impl Read, len: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; len * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn tmp_sibling(path: &Path) -> std::path::PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
 }
 
 #[cfg(test)]
@@ -123,6 +416,18 @@ mod tests {
     }
 
     #[test]
+    fn gvemb_roundtrip() {
+        let e = EmbeddingStore::init(21, 6, 3);
+        let p = tmp("emb.gvemb");
+        save_embeddings_gvemb(&e, &p).unwrap();
+        let e2 = load_embeddings_gvemb(&p).unwrap();
+        assert_eq!(e.vertex_matrix(), e2.vertex_matrix());
+        assert_eq!(e.context_matrix(), e2.context_matrix());
+        // atomic write leaves no tmp file behind
+        assert!(!tmp_sibling(&p).exists());
+    }
+
+    #[test]
     fn text_roundtrip_vertex() {
         let e = EmbeddingStore::init(7, 3, 2);
         let p = tmp("emb.txt");
@@ -136,9 +441,34 @@ mod tests {
     }
 
     #[test]
+    fn auto_loader_sniffs_magic_not_extension() {
+        let e = EmbeddingStore::init(5, 4, 7);
+        // gvemb bytes behind a misleading extension
+        let p = tmp("actually_gvemb.bin");
+        save_embeddings_gvemb(&e, &p).unwrap();
+        let e2 = load_embeddings_auto(&p).unwrap();
+        assert_eq!(e.vertex_matrix(), e2.vertex_matrix());
+        let p = tmp("auto.txt");
+        save_embeddings_text(&e, &p).unwrap();
+        assert_eq!(load_embeddings_auto(&p).unwrap().num_nodes(), 5);
+    }
+
+    #[test]
     fn bad_magic_rejected() {
         let p = tmp("bad.bin");
         std::fs::write(&p, b"NOTMAGIC__________").unwrap();
         assert!(load_embeddings(&p).is_err());
+    }
+
+    #[test]
+    fn output_format_dispatch() {
+        assert_eq!(OutputFormat::from_path("x/y/E.TXT").unwrap(), OutputFormat::Text);
+        assert_eq!(OutputFormat::from_path("a.GvEmb").unwrap(), OutputFormat::Gvemb);
+        assert_eq!(OutputFormat::from_path("a.bin").unwrap(), OutputFormat::Binary);
+        assert_eq!(OutputFormat::from_path("a.emb").unwrap(), OutputFormat::Binary);
+        assert!(OutputFormat::from_path("a.npz").is_err());
+        assert!(OutputFormat::from_path("noext").is_err());
+        assert_eq!(OutputFormat::parse("TEXT").unwrap(), OutputFormat::Text);
+        assert!(OutputFormat::parse("parquet").is_err());
     }
 }

@@ -7,7 +7,11 @@
 
 mod io;
 
-pub use io::{load_embeddings, load_embeddings_text, save_embeddings_binary, save_embeddings_text};
+pub use io::{
+    load_embeddings, load_embeddings_auto, load_embeddings_gvemb, load_embeddings_text,
+    save_embeddings, save_embeddings_binary, save_embeddings_gvemb, save_embeddings_text,
+    OutputFormat,
+};
 
 use crate::partition::Partitioning;
 use crate::util::rng::Rng;

@@ -60,12 +60,13 @@ pub mod pool;
 pub mod runtime;
 pub mod sampling;
 pub mod scheduler;
+pub mod serve;
 pub mod util;
 
 /// Convenience re-exports for downstream users.
 pub mod prelude {
     pub use crate::config::{BackendKind, TrainConfig};
-    pub use crate::coordinator::{TrainResult, Trainer};
+    pub use crate::coordinator::{TrainCheckpoint, TrainResult, Trainer};
     pub use crate::embedding::EmbeddingStore;
     // pub use crate::eval::{classifier, linkpred}; // (enabled once eval lands)
     pub use crate::graph::{generators, Graph, GraphStore, PagedCsr};

@@ -24,13 +24,14 @@ use anyhow::{bail, Context, Result};
 
 use graphvite::cli::Args;
 use graphvite::config::{BackendKind, TrainConfig};
-use graphvite::coordinator::Trainer;
-use graphvite::embedding::{self, EmbeddingStore};
+use graphvite::coordinator::{load_checkpoint, save_checkpoint, CheckpointState, TrainFlow, Trainer};
+use graphvite::embedding::{self, EmbeddingStore, OutputFormat};
 use graphvite::eval;
 use graphvite::experiments::{self, Scale};
 use graphvite::graph::{self, generators, GraphFormat, GraphStats, LoadedGraph, PackOptions};
 use graphvite::metrics::memory::MemoryModel;
 use graphvite::pool::ShuffleKind;
+use graphvite::serve::{IndexConfig, ServeConfig, Server};
 use graphvite::util::{human_bytes, human_secs};
 
 fn main() {
@@ -61,6 +62,7 @@ fn run(args: &Args) -> Result<()> {
         "pack" => cmd_pack(args),
         "generate" => cmd_generate(args),
         "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
         "exp" => cmd_exp(args),
         "stats" => cmd_stats(args),
         "artifacts" => cmd_artifacts(),
@@ -85,6 +87,7 @@ USAGE:
                                             out-of-core training
   graphvite generate --kind K [options]     write a synthetic graph
   graphvite eval TASK [options]             evaluate saved embeddings
+  graphvite serve EMB [options]             serve top-k queries over TCP
   graphvite exp NAME [--scale S]            regenerate a paper table/figure
   graphvite stats [GRAPH] [options]         graph stats + memory model
   graphvite artifacts                       list loadable AOT artifacts
@@ -117,7 +120,18 @@ TRAIN OPTIONS (defaults follow paper section 4.3):
   --no-fix-context      re-transfer context partitions every episode
   --no-pipeline         serial wave dispatch (wait for each wave's results)
   --no-residency        re-ship partitions every episode (no worker pinning)
-  --output FILE         save embeddings (binary; .txt for text format)
+  --output FILE         save embeddings (format from the extension:
+                        .bin/.emb binary, .txt text, .gvemb packed)
+  --output-format F     binary | text | gvemb (overrides the extension)
+  --checkpoint FILE     write a resumable .gvck checkpoint at every pool
+                        boundary (also refreshes --output for `serve
+                        --watch` hot reload)
+  --checkpoint-every K  checkpoint every K-th pool boundary        [1]
+  --resume FILE.gvck    continue a checkpointed run; pass the same graph,
+                        seed and --epochs as the full target run (the
+                        resumed run is bitwise-identical to training
+                        straight through)
+  --stop-after-pools K  end the run cleanly after K pool passes (0 = off)
 
 PACK OPTIONS:
   --out FILE.gvpk       output path (required)
@@ -130,6 +144,14 @@ GENERATE OPTIONS:
 EVAL TASKS:
   classify  --embeddings F --graph G [--train-frac X] [--seed N]
   linkpred  --embeddings F --graph G [--holdout X] [--seed N]
+
+SERVE OPTIONS (batched top-k over length-prefixed TCP frames):
+  --addr HOST:PORT      bind address                  [127.0.0.1:7654]
+  --nlist N             IVF inverted lists (0 = ~sqrt(n))          [0]
+  --nprobe N            lists probed per query (0 = nlist/8)       [0]
+  --watch               hot-reload the embedding file when training
+                        rewrites it (pair with train --checkpoint)
+  --poll-ms MS          watcher poll interval                    [500]
 
 EXPERIMENTS: table1 table3 table4 table5 table6 table7 table8
              fig4 fig5 fig6 all       (--scale tiny|small|full)
@@ -248,6 +270,28 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
+    // resolve the output format up front so a bad --output/--output-format
+    // combination fails before hours of training, not after
+    let output = args.get("output");
+    let out_format = match (args.get("output-format"), output) {
+        (Some(f), _) => Some(OutputFormat::parse(f)?),
+        (None, Some(path)) => Some(OutputFormat::from_path(path)?),
+        (None, None) => None,
+    };
+    let resume = match args.get("resume") {
+        Some(p) => {
+            let ck = load_checkpoint(p).with_context(|| format!("loading checkpoint {p}"))?;
+            eprintln!(
+                "resume: {p} at {} pools, {} samples done",
+                ck.pools_done, ck.samples_done
+            );
+            Some(ck)
+        }
+        None => None,
+    };
+    let ckpt_path = args.get("checkpoint").map(str::to_string);
+    let ckpt_every = args.get_parse("checkpoint-every", 1u64)?.max(1);
+    let stop_after = args.get_parse("stop-after-pools", 0u64)?; // 0 = run to completion
     let loaded = load_or_generate_graph(args, cfg.graph_format, cfg.graph_cache_bytes)?;
     let store = loaded.store();
     let stats = GraphStats::compute(&*store);
@@ -269,7 +313,31 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
 
     let mut trainer = Trainer::from_store(store, cfg)?;
-    let result = trainer.train()?;
+    let result = if resume.is_some() || ckpt_path.is_some() || stop_after > 0 {
+        // the observer runs at every pool boundary on fully-synced state:
+        // persist a .gvck (and refresh --output so `serve --watch` can
+        // hot-reload it), then optionally end the run at this boundary
+        let out_path = output.map(str::to_string);
+        let mut observer = |state: &CheckpointState<'_>| -> Result<TrainFlow> {
+            let stop = stop_after > 0 && state.pools_done >= stop_after;
+            if state.pools_done % ckpt_every == 0 || stop {
+                if let Some(ck) = &ckpt_path {
+                    save_checkpoint(state, ck)?;
+                    eprintln!(
+                        "checkpoint: {} pools, {} samples -> {ck}",
+                        state.pools_done, state.samples_done
+                    );
+                    if let (Some(out), Some(fmt)) = (&out_path, out_format) {
+                        embedding::save_embeddings(state.store, out, fmt)?;
+                    }
+                }
+            }
+            Ok(if stop { TrainFlow::Stop } else { TrainFlow::Continue })
+        };
+        trainer.train_resumable(resume, Some(&mut observer))?
+    } else {
+        trainer.train()?
+    };
     let s = &result.stats;
     eprintln!(
         "trained {} samples in {} (preprocess {}), {:.2}M samples/s, final loss {:.4}",
@@ -303,15 +371,35 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
 
-    if let Some(out) = args.get("output") {
-        if out.ends_with(".txt") {
-            embedding::save_embeddings_text(&result.embeddings, out)?;
-        } else {
-            embedding::save_embeddings_binary(&result.embeddings, out)?;
-        }
-        eprintln!("embeddings saved to {out}");
+    if let (Some(out), Some(fmt)) = (output, out_format) {
+        embedding::save_embeddings(&result.embeddings, out, fmt)?;
+        eprintln!("embeddings saved to {out} ({} format)", fmt.name());
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------- serve --
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let emb = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("embeddings"))
+        .ok_or_else(|| anyhow::anyhow!("serve needs an embedding file (see `graphvite help`)"))?;
+    let index = IndexConfig {
+        nlist: args.get_parse("nlist", 0usize)?,
+        nprobe: args.get_parse("nprobe", 0usize)?,
+        seed: args.get_parse("seed", IndexConfig::default().seed)?,
+        ..IndexConfig::default()
+    };
+    let cfg = ServeConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7654").to_string(),
+        index,
+        watch: args.flag("watch"),
+        poll_ms: args.get_parse("poll-ms", 500u64)?,
+    };
+    Server::start(emb, cfg)?.run()
 }
 
 // ----------------------------------------------------------------- pack --
@@ -421,11 +509,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn load_embeddings_any(path: &str) -> Result<EmbeddingStore> {
-    if path.ends_with(".txt") {
-        embedding::load_embeddings_text(path)
-    } else {
-        embedding::load_embeddings(path)
-    }
+    // sniff the magic instead of trusting the extension — a renamed or
+    // mislabeled file loads correctly or fails loudly, never half-parses
+    embedding::load_embeddings_auto(path)
 }
 
 // ------------------------------------------------------------------ exp --

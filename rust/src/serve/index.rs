@@ -1,0 +1,330 @@
+//! IVF-flat ANN index over node embeddings.
+//!
+//! Queries and stored vectors are L2-normalized, so maximum inner product
+//! equals cosine similarity. Build runs spherical k-means for a coarse
+//! quantizer of `nlist` centroids and buckets every node into the
+//! inverted list of its nearest centroid; a query scores all centroids,
+//! probes the `nprobe` best lists, and ranks the candidates by exact dot
+//! product. With `nprobe == nlist` every list is probed and the result is
+//! bitwise-identical to [`AnnIndex::brute_force`] (pinned in tests) —
+//! recall degrades gracefully as `nprobe` shrinks while query cost drops
+//! by roughly `nlist / nprobe`.
+//!
+//! Everything is deterministic: centroid seeding uses the project RNG
+//! ([`crate::util::rng::Rng`]), empty clusters keep their previous
+//! centroid, and all top-k selections break score ties by node id.
+
+use crate::embedding::EmbeddingStore;
+use crate::util::rng::Rng;
+
+/// Build-time knobs. Zeros mean "auto": `nlist ≈ √n`, `nprobe = nlist/8`.
+#[derive(Debug, Clone)]
+pub struct IndexConfig {
+    pub nlist: usize,
+    pub nprobe: usize,
+    pub kmeans_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for IndexConfig {
+    fn default() -> Self {
+        IndexConfig { nlist: 0, nprobe: 0, kmeans_iters: 8, seed: 0x5EED }
+    }
+}
+
+/// The built index: owns a normalized copy of the vertex matrix, the
+/// centroids, and CSR-shaped inverted lists.
+pub struct AnnIndex {
+    dim: usize,
+    nprobe: usize,
+    /// `nlist × dim`, row-major, unit rows.
+    centroids: Vec<f32>,
+    /// CSR offsets into `list_ids`, length `nlist + 1`.
+    list_offsets: Vec<u32>,
+    /// Node ids grouped by nearest centroid.
+    list_ids: Vec<u32>,
+    /// `n × dim`, row-major, unit rows.
+    vectors: Vec<f32>,
+}
+
+impl AnnIndex {
+    /// Build from a store's vertex matrix.
+    pub fn build(store: &EmbeddingStore, cfg: &IndexConfig) -> Self {
+        let n = store.num_nodes();
+        let d = store.dim();
+        let vectors = store.normalized_vertex();
+        let nlist = if cfg.nlist > 0 {
+            cfg.nlist.min(n.max(1))
+        } else {
+            ((n as f64).sqrt().round() as usize).clamp(1, n.max(1))
+        };
+        let nprobe = if cfg.nprobe > 0 { cfg.nprobe.min(nlist) } else { (nlist / 8).max(1) };
+
+        // seed centroids from a deterministic sample of distinct nodes
+        let mut rng = Rng::new(cfg.seed);
+        let perm = rng.permutation(n.max(1));
+        let mut centroids = vec![0f32; nlist * d];
+        for (c, &v) in perm.iter().take(nlist).enumerate() {
+            centroids[c * d..(c + 1) * d]
+                .copy_from_slice(&vectors[v as usize * d..(v as usize + 1) * d]);
+        }
+
+        // spherical k-means: assign by max dot, recenter, renormalize
+        let mut assign = vec![0u32; n];
+        for _ in 0..cfg.kmeans_iters.max(1) {
+            for (v, a) in assign.iter_mut().enumerate() {
+                *a = nearest_centroid(&centroids, nlist, d, &vectors[v * d..(v + 1) * d]);
+            }
+            let mut sums = vec![0f32; nlist * d];
+            let mut counts = vec![0u32; nlist];
+            for (v, &a) in assign.iter().enumerate() {
+                let c = a as usize;
+                counts[c] += 1;
+                for (s, x) in sums[c * d..(c + 1) * d].iter_mut().zip(&vectors[v * d..(v + 1) * d])
+                {
+                    *s += x;
+                }
+            }
+            for c in 0..nlist {
+                // empty clusters keep their previous centroid (deterministic)
+                if counts[c] == 0 {
+                    continue;
+                }
+                let row = &mut sums[c * d..(c + 1) * d];
+                let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+                if norm > 1e-12 {
+                    for x in row.iter_mut() {
+                        *x /= norm;
+                    }
+                }
+                centroids[c * d..(c + 1) * d].copy_from_slice(row);
+            }
+        }
+        for (v, a) in assign.iter_mut().enumerate() {
+            *a = nearest_centroid(&centroids, nlist, d, &vectors[v * d..(v + 1) * d]);
+        }
+
+        // bucket into CSR inverted lists (counting sort keeps id order)
+        let mut counts = vec![0u32; nlist];
+        for &a in &assign {
+            counts[a as usize] += 1;
+        }
+        let mut list_offsets = vec![0u32; nlist + 1];
+        for c in 0..nlist {
+            list_offsets[c + 1] = list_offsets[c] + counts[c];
+        }
+        let mut cursor = list_offsets[..nlist].to_vec();
+        let mut list_ids = vec![0u32; n];
+        for (v, &a) in assign.iter().enumerate() {
+            let c = a as usize;
+            list_ids[cursor[c] as usize] = v as u32;
+            cursor[c] += 1;
+        }
+
+        AnnIndex { dim: d, nprobe, centroids, list_offsets, list_ids, vectors }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.vectors.len() / self.dim.max(1)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn nlist(&self) -> usize {
+        self.list_offsets.len() - 1
+    }
+
+    /// Default probe count chosen at build time.
+    pub fn nprobe(&self) -> usize {
+        self.nprobe
+    }
+
+    /// The stored (normalized) vector of node `v`.
+    pub fn vector(&self, v: u32) -> &[f32] {
+        &self.vectors[v as usize * self.dim..(v as usize + 1) * self.dim]
+    }
+
+    /// Top-`k` nodes by dot product with `query`, probing the `nprobe`
+    /// nearest inverted lists. Pass `self.nprobe()` for the build-time
+    /// default; `nprobe >= nlist` reproduces brute force exactly.
+    pub fn search(&self, query: &[f32], k: usize, nprobe: usize) -> Vec<(u32, f32)> {
+        assert_eq!(query.len(), self.dim);
+        let nlist = self.nlist();
+        let nprobe = nprobe.clamp(1, nlist);
+        // rank centroids by score; ties by list id for determinism
+        let mut probe = TopK::new(nprobe);
+        for c in 0..nlist {
+            probe.push(dot(&self.centroids[c * self.dim..(c + 1) * self.dim], query), c as u32);
+        }
+        let mut top = TopK::new(k);
+        for (c, _) in probe.into_sorted() {
+            let lo = self.list_offsets[c as usize] as usize;
+            let hi = self.list_offsets[c as usize + 1] as usize;
+            for &v in &self.list_ids[lo..hi] {
+                top.push(dot(self.vector(v), query), v);
+            }
+        }
+        top.into_sorted()
+    }
+
+    /// [`Self::search`] seeded by a node's own vector, excluding the node
+    /// itself from the results (the "neighbors of X" query).
+    pub fn search_node(&self, v: u32, k: usize, nprobe: usize) -> Vec<(u32, f32)> {
+        let query = self.vector(v).to_vec();
+        let mut out = self.search(&query, k + 1, nprobe);
+        out.retain(|&(id, _)| id != v);
+        out.truncate(k);
+        out
+    }
+
+    /// Exact top-`k` by scanning every vector — the correctness reference
+    /// and the baseline the ANN path must beat in `bench_micro`.
+    pub fn brute_force(&self, query: &[f32], k: usize) -> Vec<(u32, f32)> {
+        assert_eq!(query.len(), self.dim);
+        let mut top = TopK::new(k);
+        for v in 0..self.num_nodes() as u32 {
+            top.push(dot(self.vector(v), query), v);
+        }
+        top.into_sorted()
+    }
+}
+
+fn nearest_centroid(centroids: &[f32], nlist: usize, d: usize, v: &[f32]) -> u32 {
+    let mut best = 0u32;
+    let mut best_score = f32::NEG_INFINITY;
+    for c in 0..nlist {
+        let s = dot(&centroids[c * d..(c + 1) * d], v);
+        if s > best_score {
+            best_score = s;
+            best = c as u32;
+        }
+    }
+    best
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Bounded best-k accumulator over (score, id), kept sorted descending by
+/// score with ties broken by ascending id — a strict total order, so the
+/// result is independent of push order (which makes IVF-with-all-lists
+/// bitwise-equal to the sequential brute-force scan).
+struct TopK {
+    k: usize,
+    entries: Vec<(f32, u32)>,
+}
+
+impl TopK {
+    fn new(k: usize) -> Self {
+        TopK { k, entries: Vec::with_capacity(k + 1) }
+    }
+
+    fn push(&mut self, score: f32, id: u32) {
+        if self.k == 0 {
+            return;
+        }
+        if self.entries.len() == self.k {
+            let &(ws, wid) = self.entries.last().unwrap();
+            if !beats(score, id, ws, wid) {
+                return;
+            }
+        }
+        let pos = self
+            .entries
+            .iter()
+            .position(|&(s, i)| beats(score, id, s, i))
+            .unwrap_or(self.entries.len());
+        self.entries.insert(pos, (score, id));
+        self.entries.truncate(self.k);
+    }
+
+    fn into_sorted(self) -> Vec<(u32, f32)> {
+        self.entries.into_iter().map(|(s, id)| (id, s)).collect()
+    }
+}
+
+#[inline]
+fn beats(s1: f32, id1: u32, s2: f32, id2: u32) -> bool {
+    s1 > s2 || (s1 == s2 && id1 < id2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Planted clusters: `n` nodes around `c` well-separated directions.
+    fn clustered_store(n: usize, d: usize, c: usize, seed: u64) -> EmbeddingStore {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<f32> = (0..c * d).map(|_| rng.normal() as f32).collect();
+        let mut vertex = vec![0f32; n * d];
+        for v in 0..n {
+            let ctr = &centers[(v % c) * d..(v % c + 1) * d];
+            for j in 0..d {
+                vertex[v * d + j] = ctr[j] + 0.1 * rng.normal() as f32;
+            }
+        }
+        EmbeddingStore::from_raw(n, d, vertex, vec![0.0; n * d])
+    }
+
+    #[test]
+    fn full_probe_matches_brute_force_bitwise() {
+        let store = clustered_store(500, 16, 8, 1);
+        let idx = AnnIndex::build(&store, &IndexConfig::default());
+        for v in [0u32, 17, 499] {
+            let q = idx.vector(v).to_vec();
+            assert_eq!(idx.search(&q, 10, idx.nlist()), idx.brute_force(&q, 10));
+        }
+    }
+
+    #[test]
+    fn ann_recall_on_clustered_data() {
+        let store = clustered_store(2000, 24, 16, 2);
+        let idx = AnnIndex::build(&store, &IndexConfig { nlist: 32, ..Default::default() });
+        let mut hit = 0usize;
+        let mut total = 0usize;
+        for v in (0..2000u32).step_by(97) {
+            let q = idx.vector(v).to_vec();
+            let exact: Vec<u32> = idx.brute_force(&q, 10).into_iter().map(|(id, _)| id).collect();
+            let approx: Vec<u32> =
+                idx.search(&q, 10, idx.nprobe()).into_iter().map(|(id, _)| id).collect();
+            total += exact.len();
+            hit += exact.iter().filter(|id| approx.contains(id)).count();
+        }
+        let recall = hit as f64 / total as f64;
+        assert!(recall >= 0.8, "recall@10 = {recall}");
+    }
+
+    #[test]
+    fn search_node_excludes_self() {
+        let store = clustered_store(300, 8, 4, 3);
+        let idx = AnnIndex::build(&store, &IndexConfig::default());
+        let res = idx.search_node(42, 5, idx.nlist());
+        assert_eq!(res.len(), 5);
+        assert!(res.iter().all(|&(id, _)| id != 42));
+        // a unit query against itself scores ~1.0, so the top hit of the
+        // same planted cluster should score high
+        assert!(res[0].1 > 0.9, "{res:?}");
+    }
+
+    #[test]
+    fn deterministic_build() {
+        let store = clustered_store(400, 8, 4, 4);
+        let a = AnnIndex::build(&store, &IndexConfig::default());
+        let b = AnnIndex::build(&store, &IndexConfig::default());
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.list_ids, b.list_ids);
+    }
+
+    #[test]
+    fn topk_orders_and_bounds() {
+        let mut t = TopK::new(3);
+        for (s, id) in [(0.1, 5), (0.9, 2), (0.5, 9), (0.9, 1), (0.2, 0)] {
+            t.push(s, id);
+        }
+        assert_eq!(t.into_sorted(), vec![(1, 0.9), (2, 0.9), (9, 0.5)]);
+    }
+}

@@ -1,0 +1,24 @@
+//! Embedding serving: the train→serve production loop (ROADMAP item 1).
+//!
+//! Three pieces, each its own submodule:
+//!
+//! * [`index`] — a pure-Rust IVF-flat approximate-nearest-neighbor index
+//!   over the L2-normalized vertex matrix (spherical k-means coarse
+//!   quantizer, `nprobe` inverted-list probing, exact dot products over
+//!   the candidates). Deterministic: same embeddings + seed build the
+//!   same index, and probing every list reproduces brute force bitwise.
+//! * [`protocol`] — the length-prefixed TCP wire format for batched
+//!   top-k queries (all limits enforced on decode, fail-loud like the
+//!   file loaders).
+//! * [`server`] — the accept loop behind `graphvite serve`: one thread
+//!   per connection, a shared read-locked index, and an optional
+//!   hot-reload watcher that rebuilds the index whenever training
+//!   atomically rewrites the embedding file at a checkpoint.
+
+pub mod index;
+pub mod protocol;
+pub mod server;
+
+pub use index::{AnnIndex, IndexConfig};
+pub use protocol::{Request, Response};
+pub use server::{Server, ServeConfig};

@@ -1,0 +1,325 @@
+//! Wire protocol for `graphvite serve`: length-prefixed frames over TCP.
+//!
+//! Every message is one frame: a `u32` little-endian payload length
+//! followed by the payload. Payloads are flat little-endian structs —
+//! no self-describing encoding, so every decode path bounds-checks
+//! against the declared limits *and* the actual payload length before
+//! allocating (the same fail-loud discipline as the file loaders: a
+//! hostile length field must produce `Err`, never an over-allocation).
+//!
+//! ```text
+//! request  payload: [op u8]
+//!   op=1 TOPK: [1][flags u8 = 0][k u16][nq u32][nq × node-id u32]
+//!   op=2 INFO: [2]
+//! response payload: [status u8]
+//!   status=0 ok TOPK: [0][nq u32] then per query [m u32][m × (id u32, score f32)]
+//!   status=0 ok INFO: [0][num_nodes u64][dim u32][generation u64]
+//!   status=1 error:   [1][len u32][len × utf8 byte]
+//! ```
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+/// Frame payload cap: a full response for `MAX_QUERIES × MAX_K` results
+/// fits well under this, and no handshake can make a peer allocate more.
+pub const MAX_FRAME: usize = 16 << 20;
+/// Per-query top-k cap.
+pub const MAX_K: usize = 1024;
+/// Batched queries per request cap.
+pub const MAX_QUERIES: usize = 8192;
+
+const OP_TOPK: u8 = 1;
+const OP_INFO: u8 = 2;
+const STATUS_OK: u8 = 0;
+const STATUS_ERR: u8 = 1;
+
+/// A client request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Batched "top-k neighbors of each node" query.
+    TopK { k: usize, nodes: Vec<u32> },
+    /// Server/index metadata (also surfaces the hot-reload generation).
+    Info,
+}
+
+/// A server response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Per-query ranked `(node, score)` lists, parallel to the request's
+    /// `nodes`.
+    TopK { results: Vec<Vec<(u32, f32)>> },
+    Info { num_nodes: u64, dim: u32, generation: u64 },
+    Error(String),
+}
+
+/// Write one frame (length prefix + payload).
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        bail!("frame payload {} exceeds cap {MAX_FRAME}", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        bail!("peer declared a {len}-byte frame (cap {MAX_FRAME})");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    match req {
+        Request::TopK { k, nodes } => {
+            let mut out = Vec::with_capacity(8 + nodes.len() * 4);
+            out.push(OP_TOPK);
+            out.push(0); // flags
+            out.extend_from_slice(&(*k as u16).to_le_bytes());
+            out.extend_from_slice(&(nodes.len() as u32).to_le_bytes());
+            for v in nodes {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+        Request::Info => vec![OP_INFO],
+    }
+}
+
+pub fn decode_request(payload: &[u8]) -> Result<Request> {
+    let mut c = Cursor::new(payload);
+    let req = match c.u8()? {
+        OP_TOPK => {
+            let flags = c.u8()?;
+            if flags != 0 {
+                bail!("unknown topk request flags {flags:#x}");
+            }
+            let k = c.u16()? as usize;
+            if k == 0 || k > MAX_K {
+                bail!("k={k} out of range 1..={MAX_K}");
+            }
+            let nq = c.u32()? as usize;
+            if nq == 0 || nq > MAX_QUERIES {
+                bail!("query count {nq} out of range 1..={MAX_QUERIES}");
+            }
+            // exact-length check before allocating for the id list
+            c.expect_remaining(nq * 4)?;
+            let mut nodes = Vec::with_capacity(nq);
+            for _ in 0..nq {
+                nodes.push(c.u32()?);
+            }
+            Request::TopK { k, nodes }
+        }
+        OP_INFO => Request::Info,
+        op => bail!("unknown request opcode {op}"),
+    };
+    c.finish()?;
+    Ok(req)
+}
+
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    match resp {
+        Response::TopK { results } => {
+            let mut out = vec![STATUS_OK];
+            out.extend_from_slice(&(results.len() as u32).to_le_bytes());
+            for r in results {
+                out.extend_from_slice(&(r.len() as u32).to_le_bytes());
+                for (id, score) in r {
+                    out.extend_from_slice(&id.to_le_bytes());
+                    out.extend_from_slice(&score.to_le_bytes());
+                }
+            }
+            out
+        }
+        Response::Info { num_nodes, dim, generation } => {
+            let mut out = vec![STATUS_OK];
+            out.extend_from_slice(&num_nodes.to_le_bytes());
+            out.extend_from_slice(&dim.to_le_bytes());
+            out.extend_from_slice(&generation.to_le_bytes());
+            out
+        }
+        Response::Error(msg) => {
+            let bytes = msg.as_bytes();
+            let mut out = vec![STATUS_ERR];
+            out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            out.extend_from_slice(bytes);
+            out
+        }
+    }
+}
+
+/// Decode a response. The caller says which request it sent (`topk`),
+/// since ok-payloads are not self-describing.
+pub fn decode_response(payload: &[u8], topk: bool) -> Result<Response> {
+    let mut c = Cursor::new(payload);
+    let resp = match c.u8()? {
+        STATUS_OK if topk => {
+            let nq = c.u32()? as usize;
+            if nq > MAX_QUERIES {
+                bail!("response declares {nq} queries (cap {MAX_QUERIES})");
+            }
+            let mut results = Vec::with_capacity(nq);
+            for _ in 0..nq {
+                let m = c.u32()? as usize;
+                if m > MAX_K {
+                    bail!("response declares {m} results for one query (cap {MAX_K})");
+                }
+                c.expect_remaining(m * 8)?;
+                let mut row = Vec::with_capacity(m);
+                for _ in 0..m {
+                    let id = c.u32()?;
+                    let score = f32::from_le_bytes(c.bytes(4)?.try_into().unwrap());
+                    row.push((id, score));
+                }
+                results.push(row);
+            }
+            Response::TopK { results }
+        }
+        STATUS_OK => {
+            let num_nodes = c.u64()?;
+            let dim = c.u32()?;
+            let generation = c.u64()?;
+            Response::Info { num_nodes, dim, generation }
+        }
+        STATUS_ERR => {
+            let len = c.u32()? as usize;
+            let bytes = c.bytes(len)?;
+            Response::Error(String::from_utf8_lossy(bytes).into_owned())
+        }
+        s => bail!("unknown response status {s}"),
+    };
+    c.finish()?;
+    Ok(resp)
+}
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, at: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.at < n {
+            bail!("message truncated: wanted {n} more bytes, have {}", self.buf.len() - self.at);
+        }
+        let out = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    /// Require exactly-`n`-more bytes *without* consuming them (the
+    /// pre-allocation guard for variable-length sections).
+    fn expect_remaining(&self, n: usize) -> Result<()> {
+        let have = self.buf.len() - self.at;
+        if have < n {
+            bail!("message truncated: section needs {n} bytes, have {have}");
+        }
+        Ok(())
+    }
+
+    /// Reject trailing garbage — a decoded message must consume its
+    /// whole payload.
+    fn finish(self) -> Result<()> {
+        if self.at != self.buf.len() {
+            bail!("{} trailing bytes after message", self.buf.len() - self.at);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        for req in [
+            Request::TopK { k: 10, nodes: vec![1, 2, 3, 0xFFFF_FFFF] },
+            Request::Info,
+        ] {
+            assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = Response::TopK {
+            results: vec![vec![(7, 0.5), (3, 0.25)], vec![], vec![(0, -1.0)]],
+        };
+        assert_eq!(decode_response(&encode_response(&resp), true).unwrap(), resp);
+        let info = Response::Info { num_nodes: 9, dim: 8, generation: 3 };
+        assert_eq!(decode_response(&encode_response(&info), false).unwrap(), info);
+        let err = Response::Error("node 99 out of range".into());
+        assert_eq!(decode_response(&encode_response(&err), true).unwrap(), err);
+    }
+
+    #[test]
+    fn frame_roundtrip_and_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn corrupt_messages_fail_loudly() {
+        // oversized frame length cannot over-allocate
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_frame(&mut &huge[..]).is_err());
+        // truncated id list
+        let mut req = encode_request(&Request::TopK { k: 5, nodes: vec![1, 2, 3] });
+        req.truncate(req.len() - 2);
+        assert!(decode_request(&req).is_err());
+        // trailing garbage
+        let mut req = encode_request(&Request::Info);
+        req.push(0);
+        assert!(decode_request(&req).is_err());
+        // k and nq range checks
+        assert!(decode_request(&encode_request(&Request::TopK { k: 0, nodes: vec![1] })).is_err());
+        let huge_nq = {
+            let mut p = vec![1u8, 0, 5, 0];
+            p.extend_from_slice(&(u32::MAX).to_le_bytes());
+            p
+        };
+        assert!(decode_request(&huge_nq).is_err());
+        // unknown opcode
+        assert!(decode_request(&[9]).is_err());
+    }
+}

@@ -1,0 +1,327 @@
+//! The `graphvite serve` TCP server: accept loop, per-connection handler
+//! threads, a shared read-locked [`AnnIndex`], and an optional hot-reload
+//! watcher.
+//!
+//! Hot reload closes the train→serve loop: training rewrites the `.gvemb`
+//! output atomically (tmp + rename) at every checkpoint, the watcher
+//! polls the file's metadata, and on change rebuilds the index off the
+//! lock and swaps it in under a short write lock — in-flight queries
+//! finish on the old index, the next query sees the new generation. A
+//! file that fails to load (e.g. a corrupt partial copy) is logged and
+//! skipped; the server keeps answering from the previous index.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, SystemTime};
+
+use anyhow::{Context, Result};
+
+use crate::embedding::load_embeddings_auto;
+
+use super::index::{AnnIndex, IndexConfig};
+use super::protocol::{
+    decode_request, encode_response, read_frame, write_frame, Request, Response,
+};
+
+/// Server options (`graphvite serve` flags map onto these).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:7654` (port 0 = ephemeral).
+    pub addr: String,
+    pub index: IndexConfig,
+    /// Watch the embedding file and hot-reload on change.
+    pub watch: bool,
+    /// Watcher poll interval.
+    pub poll_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7654".to_string(),
+            index: IndexConfig::default(),
+            watch: false,
+            poll_ms: 500,
+        }
+    }
+}
+
+/// The swappable serving state: index + reload generation.
+struct Loaded {
+    index: AnnIndex,
+    generation: u64,
+}
+
+struct Shared {
+    state: RwLock<Loaded>,
+    shutdown: AtomicBool,
+    default_nprobe: usize,
+}
+
+/// A running server. Bind with [`Server::start`]; block on
+/// [`Server::run`] (the CLI path) or keep the handle and call
+/// [`Server::shutdown`] (tests).
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: JoinHandle<()>,
+    watcher: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Load `path`, build the index, bind, and start accepting.
+    pub fn start(path: &str, cfg: ServeConfig) -> Result<Server> {
+        let store = load_embeddings_auto(path)?;
+        let index = AnnIndex::build(&store, &cfg.index);
+        eprintln!(
+            "serve: loaded {} ({} nodes, dim {}), ivf nlist={} nprobe={}",
+            path,
+            index.num_nodes(),
+            index.dim(),
+            index.nlist(),
+            index.nprobe()
+        );
+        let default_nprobe = index.nprobe();
+        let shared = Arc::new(Shared {
+            state: RwLock::new(Loaded { index, generation: 1 }),
+            shutdown: AtomicBool::new(false),
+            default_nprobe,
+        });
+
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        eprintln!("serve: listening on {addr}");
+
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+        let watcher = if cfg.watch {
+            let shared = Arc::clone(&shared);
+            let path = PathBuf::from(path);
+            let index_cfg = cfg.index.clone();
+            let poll = Duration::from_millis(cfg.poll_ms.max(10));
+            Some(std::thread::spawn(move || watch_loop(path, index_cfg, poll, shared)))
+        } else {
+            None
+        };
+        Ok(Server { addr, shared, accept, watcher })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Current hot-reload generation (1 = the initial load).
+    pub fn generation(&self) -> u64 {
+        self.shared.state.read().unwrap().generation
+    }
+
+    /// Block until shutdown is requested (the CLI foreground path).
+    pub fn run(self) -> Result<()> {
+        self.accept.join().map_err(|_| anyhow::anyhow!("accept loop panicked"))?;
+        if let Some(w) = self.watcher {
+            w.join().map_err(|_| anyhow::anyhow!("watcher panicked"))?;
+        }
+        Ok(())
+    }
+
+    /// Stop accepting and join the service threads (open connections are
+    /// served until their peers hang up).
+    pub fn shutdown(self) -> Result<()> {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.run()
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_connection(stream, &shared) {
+                        eprintln!("serve: connection {peer}: {e}");
+                    }
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                eprintln!("serve: accept error: {e}");
+                return;
+            }
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    let mut writer = std::io::BufWriter::new(stream);
+    while let Some(payload) = read_frame(&mut reader)? {
+        // a malformed request answers with an error frame, not a drop —
+        // the client sees *why* (fail loud on both sides of the wire)
+        let resp = match decode_request(&payload) {
+            Ok(req) => answer(&req, shared),
+            Err(e) => Response::Error(format!("bad request: {e}")),
+        };
+        write_frame(&mut writer, &encode_response(&resp))?;
+    }
+    Ok(())
+}
+
+fn answer(req: &Request, shared: &Shared) -> Response {
+    let state = shared.state.read().unwrap();
+    match req {
+        Request::Info => Response::Info {
+            num_nodes: state.index.num_nodes() as u64,
+            dim: state.index.dim() as u32,
+            generation: state.generation,
+        },
+        Request::TopK { k, nodes } => {
+            let n = state.index.num_nodes() as u32;
+            if let Some(&bad) = nodes.iter().find(|&&v| v >= n) {
+                return Response::Error(format!("node {bad} out of range (index has {n} nodes)"));
+            }
+            let results = nodes
+                .iter()
+                .map(|&v| state.index.search_node(v, *k, shared.default_nprobe))
+                .collect();
+            Response::TopK { results }
+        }
+    }
+}
+
+/// Poll the embedding file; on any metadata change, rebuild and swap.
+fn watch_loop(path: PathBuf, cfg: IndexConfig, poll: Duration, shared: Arc<Shared>) {
+    let fingerprint = |p: &PathBuf| -> Option<(u64, SystemTime)> {
+        let meta = std::fs::metadata(p).ok()?;
+        Some((meta.len(), meta.modified().ok()?))
+    };
+    let mut last = fingerprint(&path);
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(poll);
+        let now = fingerprint(&path);
+        if now.is_none() || now == last {
+            continue;
+        }
+        // writes are atomic renames, so a changed fingerprint is a whole
+        // new file — but a non-gvemb/corrupt file must not kill serving
+        match load_embeddings_auto(&path) {
+            Ok(store) => {
+                let index = AnnIndex::build(&store, &cfg);
+                let mut state = shared.state.write().unwrap();
+                state.index = index;
+                state.generation += 1;
+                eprintln!(
+                    "serve: hot-reloaded {} (generation {})",
+                    path.display(),
+                    state.generation
+                );
+            }
+            Err(e) => {
+                eprintln!("serve: reload of {} failed, keeping old index: {e}", path.display());
+            }
+        }
+        last = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::{save_embeddings_gvemb, EmbeddingStore};
+    use crate::serve::protocol::{decode_response, encode_request};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("graphvite_serve");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn query(addr: SocketAddr, req: &Request) -> Response {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let mut writer = std::io::BufWriter::new(stream);
+        write_frame(&mut writer, &encode_request(req)).unwrap();
+        let payload = read_frame(&mut reader).unwrap().unwrap();
+        decode_response(&payload, matches!(req, Request::TopK { .. })).unwrap()
+    }
+
+    #[test]
+    fn end_to_end_topk_over_tcp() {
+        let store = EmbeddingStore::init(200, 8, 11);
+        let p = tmp("e2e.gvemb");
+        save_embeddings_gvemb(&store, &p).unwrap();
+        let cfg = ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+        let server = Server::start(p.to_str().unwrap(), cfg).unwrap();
+        let addr = server.local_addr();
+
+        match query(addr, &Request::Info) {
+            Response::Info { num_nodes, dim, generation } => {
+                assert_eq!((num_nodes, dim, generation), (200, 8, 1));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match query(addr, &Request::TopK { k: 5, nodes: vec![0, 7, 199] }) {
+            Response::TopK { results } => {
+                assert_eq!(results.len(), 3);
+                for (qi, row) in results.iter().enumerate() {
+                    assert_eq!(row.len(), 5, "query {qi}");
+                    // ranked descending, self excluded
+                    for w in row.windows(2) {
+                        assert!(w[0].1 >= w[1].1);
+                    }
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // out-of-range node answers with an error frame, not a hangup
+        match query(addr, &Request::TopK { k: 3, nodes: vec![9999] }) {
+            Response::Error(msg) => assert!(msg.contains("out of range"), "{msg}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn hot_reload_swaps_generation() {
+        let store = EmbeddingStore::init(64, 4, 1);
+        let p = tmp("reload.gvemb");
+        save_embeddings_gvemb(&store, &p).unwrap();
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            watch: true,
+            poll_ms: 20,
+            ..Default::default()
+        };
+        let server = Server::start(p.to_str().unwrap(), cfg).unwrap();
+        // rewrite with different geometry; the watcher must pick it up
+        let store2 = EmbeddingStore::init(100, 4, 2);
+        // ensure the mtime fingerprint moves even on coarse filesystems
+        std::thread::sleep(Duration::from_millis(50));
+        save_embeddings_gvemb(&store2, &p).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            match query(server.local_addr(), &Request::Info) {
+                Response::Info { num_nodes, generation, .. } if generation >= 2 => {
+                    assert_eq!(num_nodes, 100);
+                    break;
+                }
+                _ if std::time::Instant::now() > deadline => panic!("no reload within 10s"),
+                _ => std::thread::sleep(Duration::from_millis(20)),
+            }
+        }
+        server.shutdown().unwrap();
+    }
+}

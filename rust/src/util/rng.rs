@@ -61,6 +61,23 @@ impl Rng {
         }
     }
 
+    /// Snapshot the raw xoshiro state (for checkpointing). Restore with
+    /// [`Self::from_state`]; the pair round-trips bitwise, so a resumed
+    /// stream continues exactly where the snapshot was taken.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild an RNG from a state snapshot taken by [`Self::state`].
+    /// An all-zero state is invalid for xoshiro and is rejected here so a
+    /// corrupt checkpoint cannot construct a degenerate generator.
+    pub fn from_state(s: [u64; 4]) -> Result<Self, &'static str> {
+        if s.iter().all(|&x| x == 0) {
+            return Err("all-zero xoshiro256** state");
+        }
+        Ok(Rng { s })
+    }
+
     /// Derive an independent stream for worker `i` (used to give each
     /// sampler / trainer thread its own deterministic RNG). Callers that
     /// share one base RNG across subsystems should go through

@@ -1,0 +1,255 @@
+//! Embedding I/O corruption suite, mirroring `tests/ondisk.rs` for the
+//! `.gvpk` graph format: every loader (`GRVITE01` binary, `.gvemb`
+//! packed, word2vec text, and the magic-sniffing auto loader) must treat
+//! its input as hostile. A corrupt or truncated file returns `Err` —
+//! never a panic, an out-of-bounds write, or a header-driven
+//! multi-gigabyte allocation — and the error names what went wrong.
+
+use graphvite::embedding::{
+    load_embeddings, load_embeddings_auto, load_embeddings_gvemb, load_embeddings_text,
+    save_embeddings, save_embeddings_binary, save_embeddings_gvemb, save_embeddings_text,
+    EmbeddingStore, OutputFormat,
+};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("graphvite_emb_io_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn store() -> EmbeddingStore {
+    EmbeddingStore::init(40, 6, 13)
+}
+
+// ------------------------------------------------------------- binary --
+
+#[test]
+fn binary_truncation_and_trailing_garbage_fail_loud() {
+    let p = tmp("base.bin");
+    save_embeddings_binary(&store(), &p).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    assert_eq!(bytes.len(), 24 + 2 * 40 * 6 * 4, "writer layout drifted");
+
+    // bad magic
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    let q = tmp("magic.bin");
+    std::fs::write(&q, &bad).unwrap();
+    let err = load_embeddings(&q).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+
+    // shorter than the header
+    let q = tmp("tiny.bin");
+    std::fs::write(&q, &bytes[..10]).unwrap();
+    let err = load_embeddings(&q).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "{err}");
+
+    // truncated matrix payload
+    let q = tmp("trunc.bin");
+    std::fs::write(&q, &bytes[..bytes.len() - 7]).unwrap();
+    let err = load_embeddings(&q).unwrap_err().to_string();
+    assert!(err.contains("mismatch"), "{err}");
+
+    // trailing garbage is as loud as truncation
+    let mut bad = bytes.clone();
+    bad.extend_from_slice(b"junk");
+    let q = tmp("trail.bin");
+    std::fs::write(&q, &bad).unwrap();
+    let err = load_embeddings(&q).unwrap_err().to_string();
+    assert!(err.contains("mismatch"), "{err}");
+}
+
+#[test]
+fn binary_hostile_header_cannot_over_allocate() {
+    let p = tmp("hostile.bin");
+    save_embeddings_binary(&store(), &p).unwrap();
+    let mut bytes = std::fs::read(&p).unwrap();
+
+    // a huge node count is rejected against the real file length before
+    // any allocation (n sits at offset 8)
+    bytes[8..16].copy_from_slice(&(1u64 << 40).to_le_bytes());
+    let q = tmp("huge_n.bin");
+    std::fs::write(&q, &bytes).unwrap();
+    assert!(load_embeddings(&q).is_err());
+
+    // n*d*4 overflowing u64 is caught by the checked arithmetic, not a
+    // wrapped length that happens to match
+    bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+    bytes[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+    let q = tmp("overflow.bin");
+    std::fs::write(&q, &bytes).unwrap();
+    let err = load_embeddings(&q).unwrap_err().to_string();
+    assert!(err.contains("overflow"), "{err}");
+}
+
+// -------------------------------------------------------------- gvemb --
+
+#[test]
+fn gvemb_roundtrip_is_exact() {
+    let e = store();
+    let p = tmp("rt.gvemb");
+    save_embeddings_gvemb(&e, &p).unwrap();
+    let e2 = load_embeddings_gvemb(&p).unwrap();
+    assert_eq!(e.vertex_matrix(), e2.vertex_matrix());
+    assert_eq!(e.context_matrix(), e2.context_matrix());
+    // saving again over the same path (the checkpoint hot-reload path)
+    // replaces the file atomically and re-reads identically
+    save_embeddings_gvemb(&e, &p).unwrap();
+    let e3 = load_embeddings_gvemb(&p).unwrap();
+    assert_eq!(e.vertex_matrix(), e3.vertex_matrix());
+}
+
+#[test]
+fn gvemb_corruption_gauntlet() {
+    let p = tmp("base.gvemb");
+    save_embeddings_gvemb(&store(), &p).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    assert_eq!(bytes.len(), 32 + 2 * 40 * 6 * 4, "writer layout drifted");
+
+    let case = |name: &str, mutate: &dyn Fn(&mut Vec<u8>), needle: &str| {
+        let mut b = bytes.clone();
+        mutate(&mut b);
+        let q = tmp(name);
+        std::fs::write(&q, &b).unwrap();
+        let err = load_embeddings_gvemb(&q).unwrap_err().to_string();
+        assert!(err.contains(needle), "{name}: {err}");
+    };
+
+    case("magic.gvemb", &|b| b[0] = b'X', "magic");
+    case("version.gvemb", &|b| b[4] = 0xFE, "version");
+    case("flags.gvemb", &|b| b[24] |= 0x80, "flag");
+    case("reserved.gvemb", &|b| b[28] = 1, "reserved");
+    case("trunc.gvemb", &|b| b.truncate(b.len() - 5), "mismatch");
+    case("trail.gvemb", &|b| b.extend_from_slice(b"xx"), "mismatch");
+    case(
+        "huge.gvemb",
+        &|b| b[8..16].copy_from_slice(&(1u64 << 40).to_le_bytes()),
+        "mismatch",
+    );
+    case(
+        "overflow.gvemb",
+        &|b| {
+            b[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+            b[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        },
+        "overflow",
+    );
+
+    // vertex-only files (context flag clear) are valid at the shorter
+    // exact length — and only at that length
+    let mut vertex_only = bytes.clone();
+    vertex_only[24..28].copy_from_slice(&0u32.to_le_bytes());
+    vertex_only.truncate(32 + 40 * 6 * 4);
+    let q = tmp("vertex_only.gvemb");
+    std::fs::write(&q, &vertex_only).unwrap();
+    let e = load_embeddings_gvemb(&q).unwrap();
+    assert_eq!(e.num_nodes(), 40);
+    assert!(e.context_matrix().iter().all(|&x| x == 0.0));
+
+    let mut wrong_len = bytes;
+    wrong_len[24..28].copy_from_slice(&0u32.to_le_bytes());
+    let q = tmp("vertex_only_long.gvemb");
+    std::fs::write(&q, &wrong_len).unwrap();
+    let err = load_embeddings_gvemb(&q).unwrap_err().to_string();
+    assert!(err.contains("mismatch"), "{err}");
+}
+
+// --------------------------------------------------------------- text --
+
+#[test]
+fn text_loader_rejects_malformed_rows() {
+    // row id past the declared node count
+    let p = tmp("oob.txt");
+    std::fs::write(&p, "2 3\n0 1 2 3\n5 4 5 6\n").unwrap();
+    let err = load_embeddings_text(&p).unwrap_err().to_string();
+    assert!(err.contains("out of range"), "{err}");
+
+    // short row
+    let p = tmp("short.txt");
+    std::fs::write(&p, "2 3\n0 1 2 3\n1 4 5\n").unwrap();
+    let err = load_embeddings_text(&p).unwrap_err().to_string();
+    assert!(err.contains("expected 3"), "{err}");
+
+    // long row
+    let p = tmp("long.txt");
+    std::fs::write(&p, "2 3\n0 1 2 3 4\n1 4 5 6\n").unwrap();
+    let err = load_embeddings_text(&p).unwrap_err().to_string();
+    assert!(err.contains("more than"), "{err}");
+
+    // duplicate row
+    let p = tmp("dup.txt");
+    std::fs::write(&p, "2 3\n0 1 2 3\n0 4 5 6\n").unwrap();
+    let err = load_embeddings_text(&p).unwrap_err().to_string();
+    assert!(err.contains("duplicate"), "{err}");
+
+    // missing rows (values long enough to clear the min-size bound, so
+    // this exercises the row count check specifically)
+    let p = tmp("missing.txt");
+    std::fs::write(&p, "3 3\n0 1.25 2.5 3.75\n1 4.25 5.5 6.75\n").unwrap();
+    let err = load_embeddings_text(&p).unwrap_err().to_string();
+    assert!(err.contains("2 rows"), "{err}");
+
+    // unparseable id / value / header — Err, not panic
+    for (name, body) in [
+        ("badid.txt", "1 2\nx 1 2\n"),
+        ("badval.txt", "1 2\n0 1 nope\n"),
+        ("badhdr.txt", "one two\n"),
+        ("widehdr.txt", "1 2 3\n0 1 2\n"),
+        ("empty.txt", ""),
+    ] {
+        let p = tmp(name);
+        std::fs::write(&p, body).unwrap();
+        assert!(load_embeddings_text(&p).is_err(), "{name} must be rejected");
+    }
+}
+
+#[test]
+fn text_hostile_header_cannot_over_allocate() {
+    // declares 10^12 × 10^3 floats in a 30-byte file: the pre-allocation
+    // bound rejects it instead of trying to reserve terabytes
+    let p = tmp("hostile.txt");
+    std::fs::write(&p, "1000000000000 1000\n0 1 2\n").unwrap();
+    let err = load_embeddings_text(&p).unwrap_err().to_string();
+    assert!(err.contains("too small"), "{err}");
+}
+
+// --------------------------------------------------- auto + dispatcher --
+
+#[test]
+fn auto_loader_routes_by_magic_and_rejects_garbage() {
+    let e = store();
+    for (name, fmt) in [
+        ("auto.bin", OutputFormat::Binary),
+        ("auto.txt", OutputFormat::Text),
+        ("auto.gvemb", OutputFormat::Gvemb),
+    ] {
+        let p = tmp(name);
+        save_embeddings(&e, p.to_str().unwrap(), fmt).unwrap();
+        let got = load_embeddings_auto(&p).unwrap();
+        assert_eq!(got.num_nodes(), 40, "{name}");
+        assert_eq!(got.dim(), 6, "{name}");
+        assert_eq!(e.vertex_matrix(), got.vertex_matrix(), "{name}");
+    }
+
+    // gvemb bytes behind a .txt name still load as gvemb (magic wins)
+    let p = tmp("disguised.txt");
+    save_embeddings_gvemb(&e, &p).unwrap();
+    assert_eq!(load_embeddings_auto(&p).unwrap().vertex_matrix(), e.vertex_matrix());
+
+    // raw garbage fails through all three loaders with an Err
+    let p = tmp("garbage.bin");
+    std::fs::write(&p, &[0x7Fu8; 64]).unwrap();
+    assert!(load_embeddings_auto(&p).is_err());
+}
+
+#[test]
+fn format_resolution_is_case_insensitive_and_strict() {
+    assert_eq!(OutputFormat::from_path("out/E.TXT").unwrap(), OutputFormat::Text);
+    assert_eq!(OutputFormat::from_path("e.GVEMB").unwrap(), OutputFormat::Gvemb);
+    assert_eq!(OutputFormat::from_path("e.Bin").unwrap(), OutputFormat::Binary);
+    assert!(OutputFormat::from_path("e.npy").is_err());
+    assert!(OutputFormat::from_path("no_extension").is_err());
+    assert_eq!(OutputFormat::parse("GvEmb").unwrap(), OutputFormat::Gvemb);
+    assert_eq!(OutputFormat::parse("BIN").unwrap(), OutputFormat::Binary);
+    assert!(OutputFormat::parse("hdf5").is_err());
+}

@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Tiny client for `graphvite serve` — the CI smoke test's query driver.
+
+Speaks the length-prefixed TCP protocol (u32 LE frame length, then a flat
+little-endian payload; see rust/src/serve/protocol.rs):
+
+    request  TOPK: [1][flags=0][k u16][nq u32][nq x node-id u32]
+    request  INFO: [2]
+    response  ok TOPK: [0][nq u32] then per query [m u32][m x (id u32, f32)]
+    response  ok INFO: [0][num_nodes u64][dim u32][generation u64]
+    response  error:   [1][len u32][len x utf8]
+
+Usage:
+    serve_client.py --addr HOST:PORT info
+    serve_client.py --addr HOST:PORT topk K NODE [NODE ...]
+
+Prints the decoded response and exits 0 on a well-formed reply, 1 on an
+error response, 2 on a protocol violation.
+"""
+
+import argparse
+import socket
+import struct
+import sys
+
+MAX_FRAME = 16 << 20
+
+
+def send_frame(sock, payload: bytes) -> None:
+    sock.sendall(struct.pack("<I", len(payload)) + payload)
+
+
+def recv_exact(sock, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError(f"peer closed mid-frame ({len(buf)}/{n} bytes)")
+        buf += chunk
+    return buf
+
+
+def recv_frame(sock) -> bytes:
+    (length,) = struct.unpack("<I", recv_exact(sock, 4))
+    if length > MAX_FRAME:
+        raise ValueError(f"peer declared a {length}-byte frame")
+    return recv_exact(sock, length)
+
+
+def decode_topk(payload: bytes):
+    if not payload:
+        raise ValueError("empty response payload")
+    status = payload[0]
+    if status == 1:
+        (n,) = struct.unpack_from("<I", payload, 1)
+        return ("error", payload[5 : 5 + n].decode("utf-8", "replace"))
+    if status != 0:
+        raise ValueError(f"unknown response status {status}")
+    (nq,) = struct.unpack_from("<I", payload, 1)
+    at = 5
+    results = []
+    for _ in range(nq):
+        (m,) = struct.unpack_from("<I", payload, at)
+        at += 4
+        row = []
+        for _ in range(m):
+            node, score = struct.unpack_from("<If", payload, at)
+            at += 8
+            row.append((node, score))
+        results.append(row)
+    if at != len(payload):
+        raise ValueError(f"{len(payload) - at} trailing bytes in response")
+    return ("ok", results)
+
+
+def decode_info(payload: bytes):
+    status = payload[0]
+    if status == 1:
+        (n,) = struct.unpack_from("<I", payload, 1)
+        return ("error", payload[5 : 5 + n].decode("utf-8", "replace"))
+    num_nodes, dim, generation = struct.unpack_from("<QIQ", payload, 1)
+    if 1 + 20 != len(payload):
+        raise ValueError("info response has the wrong length")
+    return ("ok", {"num_nodes": num_nodes, "dim": dim, "generation": generation})
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--addr", default="127.0.0.1:7654", help="server host:port")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("info")
+    topk = sub.add_parser("topk")
+    topk.add_argument("k", type=int)
+    topk.add_argument("nodes", type=int, nargs="+")
+    args = ap.parse_args()
+
+    host, port = args.addr.rsplit(":", 1)
+    with socket.create_connection((host, int(port)), timeout=10) as sock:
+        if args.cmd == "info":
+            send_frame(sock, bytes([2]))
+            status, body = decode_info(recv_frame(sock))
+        else:
+            payload = struct.pack("<BBHI", 1, 0, args.k, len(args.nodes))
+            payload += b"".join(struct.pack("<I", v) for v in args.nodes)
+            send_frame(sock, payload)
+            status, body = decode_topk(recv_frame(sock))
+
+    if status == "error":
+        print(f"server error: {body}")
+        return 1
+    if args.cmd == "info":
+        print(f"info: {body['num_nodes']} nodes, dim {body['dim']}, "
+              f"generation {body['generation']}")
+        return 0
+    for node, row in zip(args.nodes, body):
+        ranked = " ".join(f"{v}:{s:.4f}" for v, s in row)
+        print(f"topk node {node}: {ranked}")
+        scores = [s for _, s in row]
+        if scores != sorted(scores, reverse=True):
+            print("response rows must be ranked by descending score")
+            return 2
+        if any(v == node for v, _ in row):
+            print("self must be excluded from its own neighbor list")
+            return 2
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except (ConnectionError, ValueError, struct.error) as e:
+        print(f"protocol violation: {e}")
+        sys.exit(2)
