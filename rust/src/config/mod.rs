@@ -139,6 +139,45 @@ impl BackendKind {
     }
 }
 
+/// Where device workers live (the transport seam,
+/// [`crate::coordinator::transport`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkerMode {
+    /// In-process worker threads over mpsc channels — the PRs-1-6
+    /// topology, bitwise-pinned. The default.
+    Local,
+    /// Workers are separate `graphvite worker --connect ADDR` processes;
+    /// the coordinator listens on this address (`host:port`) and speaks
+    /// the same protocol over length-prefixed TCP frames. Bitwise
+    /// equivalent to local mode (`rust/tests/transport.rs`).
+    Tcp(String),
+}
+
+impl WorkerMode {
+    /// Parse the `workers` config spelling: `"local"` or
+    /// `"tcp://HOST:PORT"`.
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == "local" {
+            return Ok(WorkerMode::Local);
+        }
+        if let Some(addr) = s.strip_prefix("tcp://") {
+            if addr.is_empty() {
+                bail!("workers = \"tcp://...\" needs an address (e.g. \"tcp://127.0.0.1:7077\")");
+            }
+            return Ok(WorkerMode::Tcp(addr.to_string()));
+        }
+        bail!("unknown workers mode '{s}' (expected \"local\" or \"tcp://HOST:PORT\")");
+    }
+
+    /// The config-file spelling of this mode (round-trips [`Self::parse`]).
+    pub fn spelling(&self) -> String {
+        match self {
+            WorkerMode::Local => "local".to_string(),
+            WorkerMode::Tcp(addr) => format!("tcp://{addr}"),
+        }
+    }
+}
+
 /// Full GraphVite training configuration (defaults follow paper §4.3).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -237,6 +276,16 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Print progress every N episodes (0 = quiet).
     pub log_every: usize,
+    /// Where the device workers run ([`WorkerMode`]): in-process threads
+    /// (the default) or remote `graphvite worker` processes over TCP.
+    /// TOML key `workers` (`"local"` / `"tcp://HOST:PORT"`), CLI
+    /// `--transport tcp://HOST:PORT`.
+    pub worker_mode: WorkerMode,
+    /// Seconds the coordinator waits for any worker result on a tcp run
+    /// before failing loud (0 = wait forever; a closed connection still
+    /// errors immediately either way). TOML key `worker_timeout_secs`,
+    /// CLI `--worker-timeout-secs`. Ignored in local mode.
+    pub worker_timeout_secs: u64,
 }
 
 impl Default for TrainConfig {
@@ -266,6 +315,8 @@ impl Default for TrainConfig {
             batch_size: 256,
             seed: 42,
             log_every: 0,
+            worker_mode: WorkerMode::Local,
+            worker_timeout_secs: 0,
         }
     }
 }
@@ -330,6 +381,12 @@ impl TrainConfig {
         if self.negatives == 0 {
             bail!("negatives must be >= 1");
         }
+        if matches!(self.worker_mode, WorkerMode::Tcp(_)) && self.backend == BackendKind::Pjrt {
+            bail!(
+                "workers = \"tcp://...\" cannot run the pjrt backend (HLO artifacts are \
+                 host-local); use native or simd for multi-process training"
+            );
+        }
         Ok(())
     }
 
@@ -384,6 +441,11 @@ impl TrainConfig {
         set_num!(batch_size, "batch_size", usize);
         set_num!(seed, "seed", u64);
         set_num!(log_every, "log_every", usize);
+        set_num!(worker_timeout_secs, "worker_timeout_secs", u64);
+        if let Some(v) = get("workers") {
+            let s = v.as_str().ok_or_else(|| anyhow::anyhow!("workers must be a string"))?;
+            cfg.worker_mode = WorkerMode::parse(s)?;
+        }
         if let Some(v) = get("shuffle") {
             let s = v.as_str().ok_or_else(|| anyhow::anyhow!("shuffle must be a string"))?;
             cfg.shuffle = ShuffleKind::parse(s)
@@ -695,6 +757,47 @@ mod tests {
         assert!(TrainConfig::parse_capacity_list("2,zero").is_err());
         assert!(TrainConfig::parse_capacity_list("2,,1").is_err());
         assert!(TrainConfig::parse_capacity_list("0").is_err());
+    }
+
+    #[test]
+    fn worker_mode_parses_and_round_trips() {
+        assert_eq!(WorkerMode::parse("local").unwrap(), WorkerMode::Local);
+        assert_eq!(
+            WorkerMode::parse("tcp://127.0.0.1:7077").unwrap(),
+            WorkerMode::Tcp("127.0.0.1:7077".to_string())
+        );
+        for s in ["local", "tcp://127.0.0.1:7077"] {
+            assert_eq!(WorkerMode::parse(s).unwrap().spelling(), s);
+        }
+        assert!(WorkerMode::parse("tcp://").is_err());
+        assert!(WorkerMode::parse("udp://1.2.3.4:5").is_err());
+        assert!(WorkerMode::parse("remote").is_err());
+    }
+
+    #[test]
+    fn worker_mode_toml_and_validation() {
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nworkers = \"tcp://127.0.0.1:7077\"\nworker_timeout_secs = 30\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.worker_mode, WorkerMode::Tcp("127.0.0.1:7077".to_string()));
+        assert_eq!(cfg.worker_timeout_secs, 30);
+        // defaults: in-process workers, no timeout
+        let d = TrainConfig::default();
+        assert_eq!(d.worker_mode, WorkerMode::Local);
+        assert_eq!(d.worker_timeout_secs, 0);
+        // bad spellings are rejected with the valid ones in the error
+        let err = TrainConfig::from_toml_str("workers = \"remote\"\n").unwrap_err().to_string();
+        assert!(err.contains("local") && err.contains("tcp://"), "{err}");
+        assert!(TrainConfig::from_toml_str("workers = 3\n").is_err());
+        // pjrt cannot serve remote workers: artifacts are host-local
+        let cfg = TrainConfig {
+            backend: BackendKind::Pjrt,
+            worker_mode: WorkerMode::Tcp("127.0.0.1:0".to_string()),
+            ..TrainConfig::default()
+        };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
     }
 
     #[test]

@@ -74,16 +74,19 @@
 
 pub mod checkpoint;
 pub mod transfer;
+pub mod transport;
 mod worker;
 
 pub use checkpoint::{load_checkpoint, save_checkpoint, CheckpointState, TrainCheckpoint};
+pub use transport::{Transport, TransportReport};
 
-use std::sync::mpsc;
+use std::net::TcpListener;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::config::{BackendKind, TrainConfig};
+use crate::config::{BackendKind, TrainConfig, WorkerMode};
 use crate::embedding::{EmbeddingStore, Matrix};
 use crate::graph::{Graph, GraphStore};
 use crate::metrics::{Counters, TrainStats};
@@ -97,7 +100,14 @@ use crate::util::rng::{streams, Rng};
 use crate::util::timer::Stopwatch;
 
 use transfer::{ShipPlan, TransferEngine};
+use transport::{make_assignments, LocalTransport, SocketTransport};
 use worker::{spawn_workers, Job, JobMsg, JobResult, Reply, Shipment};
+
+/// Decorator applied to the transport before training starts (the fault
+/// -injection seam: tests wrap the real transport in a
+/// [`transport::FlakyTransport`] without touching the episode loop).
+/// Consumed by the next [`Trainer::train`] call.
+pub type TransportWrapper = Box<dyn FnMut(Box<dyn Transport>) -> Box<dyn Transport> + Send>;
 
 /// Output of a training run.
 #[derive(Debug)]
@@ -136,6 +146,15 @@ enum Observer<'a, 'b> {
 pub struct Trainer {
     graph: Arc<dyn GraphStore>,
     config: TrainConfig,
+    /// Pre-bound listener for `workers = "tcp://..."` runs (tests bind
+    /// port 0 and read the ephemeral address back; when unset the trainer
+    /// binds the configured address itself).
+    worker_listener: Option<TcpListener>,
+    /// Fault-injection seam, consumed by the next train call.
+    transport_wrapper: Option<TransportWrapper>,
+    /// Wire ledger of the last socket-transport run (`None` after local
+    /// runs — the in-process channels have no wire to account for).
+    last_transport: Option<TransportReport>,
 }
 
 impl Trainer {
@@ -155,7 +174,13 @@ impl Trainer {
             graph.num_nodes() >= config.partitions(),
             "graph smaller than partition count"
         );
-        Ok(Trainer { graph, config })
+        Ok(Trainer {
+            graph,
+            config,
+            worker_listener: None,
+            transport_wrapper: None,
+            last_transport: None,
+        })
     }
 
     pub fn graph(&self) -> &dyn GraphStore {
@@ -164,6 +189,24 @@ impl Trainer {
 
     pub fn config(&self) -> &TrainConfig {
         &self.config
+    }
+
+    /// Use an already-bound listener for the next `workers = "tcp://..."`
+    /// run instead of binding the configured address (tests bind port 0).
+    pub fn set_worker_listener(&mut self, listener: TcpListener) {
+        self.worker_listener = Some(listener);
+    }
+
+    /// Install a transport decorator for the next train call (the
+    /// fault-injection seam — see [`transport::FlakyTransport`]).
+    pub fn set_transport_wrapper(&mut self, wrapper: TransportWrapper) {
+        self.transport_wrapper = Some(wrapper);
+    }
+
+    /// The verified wire ledger of the last completed socket-transport
+    /// run (`None` for local runs).
+    pub fn transport_report(&self) -> Option<TransportReport> {
+        self.last_transport
     }
 
     /// Train to completion.
@@ -218,7 +261,12 @@ impl Trainer {
         let mut prep = Stopwatch::started();
         let num_parts = cfg.partitions();
         let parts = Arc::new(Partitioner::degree_zigzag(&*graph, num_parts));
-        let neg = Arc::new(NegativeSampler::new(&*graph, &parts));
+        // Weights are kept around for tcp runs: the handshake ships them
+        // bit-exactly so remote workers (no graph) build identical alias
+        // tables. from_weights(partition_weights(..)) is exactly what
+        // NegativeSampler::new does, so local runs are unchanged.
+        let neg_weights = NegativeSampler::partition_weights(&*graph, &parts);
+        let neg = Arc::new(NegativeSampler::from_weights(&neg_weights));
         let sched = {
             // capacity-aware waves: worker i takes capacities[i] blocks
             // per wave (the homogeneous default is one each — the PR-3
@@ -276,17 +324,53 @@ impl Trainer {
         // graphs and dominated the profile — EXPERIMENTS.md §Perf.)
         let sampling = SamplingShared::build(&*graph, &cfg);
 
-        std::thread::scope(|scope| -> Result<()> {
-            // ---- device worker threads ----
-            let (handles, job_txs, result_rx) = spawn_workers(
-                scope,
-                &cfg,
-                artifact.as_ref(),
-                Arc::clone(&neg),
-                Arc::clone(&counters),
-                &base_rng,
-                resume_rngs.as_deref(),
-            )?;
+        let mut pre_listener = self.worker_listener.take();
+        let mut wrapper = self.transport_wrapper.take();
+        self.last_transport = None;
+
+        let report = std::thread::scope(|scope| -> Result<Option<TransportReport>> {
+            // ---- device workers, behind the transport seam ----
+            // Local mode spawns the in-process worker threads of PRs 1-6
+            // (bitwise-pinned); tcp mode accepts `num_workers` remote
+            // `graphvite worker` processes instead — same protocol, same
+            // planner, zero worker threads here.
+            let (handles, transport) = match &cfg.worker_mode {
+                WorkerMode::Local => {
+                    let (handles, job_txs, result_rx) = spawn_workers(
+                        scope,
+                        &cfg,
+                        artifact.as_ref(),
+                        Arc::clone(&neg),
+                        Arc::clone(&counters),
+                        &base_rng,
+                        resume_rngs.as_deref(),
+                    )?;
+                    let local = LocalTransport::new(job_txs, result_rx);
+                    (handles, Box::new(local) as Box<dyn Transport>)
+                }
+                WorkerMode::Tcp(addr) => {
+                    let listener = match pre_listener.take() {
+                        Some(l) => l,
+                        None => TcpListener::bind(addr.as_str())
+                            .with_context(|| format!("binding worker listener on {addr}"))?,
+                    };
+                    let assignments = make_assignments(
+                        &cfg,
+                        num_parts,
+                        &neg_weights,
+                        &base_rng,
+                        resume_rngs.as_deref(),
+                    )?;
+                    let recv_timeout = (cfg.worker_timeout_secs > 0)
+                        .then(|| Duration::from_secs(cfg.worker_timeout_secs));
+                    let socket = SocketTransport::accept(listener, assignments, recv_timeout)?;
+                    (Vec::new(), Box::new(socket) as Box<dyn Transport>)
+                }
+            };
+            let transport = match wrapper.take() {
+                Some(mut wrap) => wrap(transport),
+                None => transport,
+            };
 
             // ---- pool production ----
             let sampling_ref = &sampling;
@@ -321,8 +405,7 @@ impl Trainer {
                 sched: &sched,
                 artifact: artifact.as_ref(),
                 counters: &counters,
-                job_txs: &job_txs,
-                result_rx: &result_rx,
+                transport,
                 engine: TransferEngine::new(
                     &sched,
                     cfg.residency,
@@ -334,7 +417,7 @@ impl Trainer {
                 grid_prefilled: false,
                 total_samples,
                 samples_planned: resume_planned,
-                outstanding: 0,
+                in_flight: Vec::new(),
             };
 
             // Consumption is fallible (fail-loud residency protocol, worker
@@ -414,9 +497,11 @@ impl Trainer {
             // be taken, so its publish must return None. After a normal
             // completion the producer has already exited; close is a no-op.
             pair.close();
-            for tx in &job_txs {
-                let _ = tx.send(JobMsg::Stop);
-            }
+            // Stop the workers through the transport: the local one sends
+            // Stop down every channel; the socket one additionally
+            // collects each worker's BYE ledger and verifies it against
+            // its own per-connection byte counts.
+            let shutdown_res = runner.transport.shutdown();
             if let Some(h) = producer_handle {
                 h.join().map_err(|_| anyhow::anyhow!("producer panicked"))?;
             }
@@ -431,13 +516,35 @@ impl Trainer {
             // travel through the result channel instead and land in
             // consume_res) is the root cause of any subsequent
             // channel-disconnect error the consumption loop saw: surface
-            // it first so "worker channel closed" never masks it.
+            // it first so "worker channel closed" never masks it; a
+            // shutdown/ledger error likewise only matters on an otherwise
+            // clean run.
             worker_res?;
-            consume_res
+            consume_res?;
+            shutdown_res
         })?;
 
         train_sw.stop();
         let snapshot = counters.snapshot();
+        // Close the loop on the wire ledger: what crossed the socket must
+        // be exactly what the transfer engine planned and scattered.
+        if let Some(r) = report {
+            anyhow::ensure!(
+                r.bytes_up == snapshot.bytes_to_device,
+                "transport shipped {} payload bytes to workers but the transfer engine \
+                 gathered {} (bytes_to_device)",
+                r.bytes_up,
+                snapshot.bytes_to_device
+            );
+            anyhow::ensure!(
+                r.bytes_down == snapshot.bytes_from_device,
+                "transport received {} payload bytes from workers but the coordinator \
+                 scattered {} (bytes_from_device)",
+                r.bytes_down,
+                snapshot.bytes_from_device
+            );
+        }
+        self.last_transport = report;
         let stats = TrainStats {
             train_secs: train_sw.secs(),
             preprocess_secs: prep.secs(),
@@ -458,8 +565,10 @@ struct EpisodeRunner<'a> {
     sched: &'a EpisodeSchedule,
     artifact: Option<&'a ArtifactMeta>,
     counters: &'a Counters,
-    job_txs: &'a [mpsc::Sender<JobMsg>],
-    result_rx: &'a mpsc::Receiver<Result<Reply>>,
+    /// Delivery seam: in-process channels ([`LocalTransport`]), TCP
+    /// streams ([`SocketTransport`]) or a fault-injection decorator —
+    /// the episode loop is identical over all of them.
+    transport: Box<dyn Transport>,
     engine: TransferEngine,
     grid: BlockGrid,
     /// Double buffer for the overlapped pool refill: while the LAST
@@ -477,8 +586,11 @@ struct EpisodeRunner<'a> {
     /// the result-side count at every wave boundary while being available
     /// at send time — pipelined and serial dispatch see identical LRs.
     samples_planned: u64,
-    /// Jobs in flight (dispatched, result not yet absorbed).
-    outstanding: usize,
+    /// Blocks in flight: (vid, cid) of every dispatched job whose result
+    /// has not been absorbed. A set rather than a counter so a duplicated
+    /// or fabricated result (a misbehaving transport) is a pointed error
+    /// instead of a silent double-scatter + counter underflow.
+    in_flight: Vec<(usize, usize)>,
 }
 
 impl EpisodeRunner<'_> {
@@ -534,13 +646,13 @@ impl EpisodeRunner<'_> {
                     // and keep dispatching — the group fence below is the
                     // only blocking wait
                     while let Some(res) = self.try_recv_result()? {
-                        self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done);
+                        self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done)?;
                     }
                 } else {
                     // serial (PR-2) dispatch: one wave in flight at a time
-                    while self.outstanding > 0 {
+                    while !self.in_flight.is_empty() {
                         let res = self.recv_result()?;
-                        self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done);
+                        self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done)?;
                     }
                 }
             }
@@ -564,9 +676,9 @@ impl EpisodeRunner<'_> {
                     )?;
                 }
                 None => {
-                    while self.outstanding > 0 {
+                    while !self.in_flight.is_empty() {
                         let res = self.recv_result()?;
-                        self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done);
+                        self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done)?;
                     }
                 }
             }
@@ -616,16 +728,17 @@ impl EpisodeRunner<'_> {
                 None => (None, grid, spare),
             });
             let mut drain: Result<()> = Ok(());
-            while self.outstanding > 0 {
-                match self.recv_result() {
+            while !self.in_flight.is_empty() {
+                let step = match self.recv_result() {
                     Ok(res) => self.absorb(store, res, ep_loss, ep_trained, samples_done),
-                    Err(e) => {
-                        // the helper unblocks on its own: the producer
-                        // either publishes (take returns a pool) or
-                        // finishes (take returns None)
-                        drain = Err(e);
-                        break;
-                    }
+                    Err(e) => Err(e),
+                };
+                if let Err(e) = step {
+                    // the helper unblocks on its own: the producer
+                    // either publishes (take returns a pool) or
+                    // finishes (take returns None)
+                    drain = Err(e);
+                    break;
                 }
             }
             (handle.join(), drain)
@@ -650,10 +763,11 @@ impl EpisodeRunner<'_> {
         let context = self.gather(store, Matrix::Context, a.cid, cplan);
         self.counters
             .add(&self.counters.gather_nanos, t0.elapsed().as_nanos() as u64);
-        self.job_txs[a.worker]
-            .send(JobMsg::Train(Job { vid: a.vid, cid: a.cid, block, vertex, context, lr }))
-            .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
-        self.outstanding += 1;
+        self.transport.send(
+            a.worker,
+            JobMsg::Train(Job { vid: a.vid, cid: a.cid, block, vertex, context, lr }),
+        )?;
+        self.in_flight.push((a.vid, a.cid));
         Ok(())
     }
 
@@ -683,6 +797,8 @@ impl EpisodeRunner<'_> {
     }
 
     /// Scatter one job result into the store and recycle its buffers.
+    /// Rejects results for blocks that are not in flight — a duplicated
+    /// or fabricated delivery must fail loud, never double-scatter.
     fn absorb(
         &mut self,
         store: &mut EmbeddingStore,
@@ -690,7 +806,20 @@ impl EpisodeRunner<'_> {
         ep_loss: &mut f64,
         ep_trained: &mut u64,
         samples_done: &mut u64,
-    ) {
+    ) -> Result<()> {
+        let slot = self
+            .in_flight
+            .iter()
+            .position(|&(v, c)| v == res.vid && c == res.cid)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "result for block ({}, {}) which is not in flight — duplicated or \
+                     corrupted delivery",
+                    res.vid,
+                    res.cid
+                )
+            })?;
+        self.in_flight.swap_remove(slot);
         let t0 = std::time::Instant::now();
         if let Some(v) = res.vertex {
             store.scatter_partition(self.parts, res.vid, Matrix::Vertex, &v);
@@ -707,19 +836,18 @@ impl EpisodeRunner<'_> {
         self.counters
             .add(&self.counters.scatter_nanos, t0.elapsed().as_nanos() as u64);
         self.engine.put_block(res.block);
+        // counted here (not worker-side) so local and remote workers feed
+        // the same ledger — res.trained is the job's real sample count
+        self.counters.add(&self.counters.samples_trained, res.trained);
         *ep_loss += res.loss as f64 * res.trained as f64;
         *ep_trained += res.trained;
         *samples_done += res.trained;
+        Ok(())
     }
 
     /// Blocking receive of one training result.
     fn recv_result(&mut self) -> Result<JobResult> {
-        let reply = self
-            .result_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("workers hung up"))?;
-        self.outstanding -= 1;
-        match reply? {
+        match self.transport.recv()? {
             Reply::Job(r) => Ok(r),
             Reply::Synced(_) => anyhow::bail!("unexpected sync reply mid-episode"),
         }
@@ -727,18 +855,10 @@ impl EpisodeRunner<'_> {
 
     /// Non-blocking receive (pipelined mode's opportunistic drain).
     fn try_recv_result(&mut self) -> Result<Option<JobResult>> {
-        match self.result_rx.try_recv() {
-            Ok(reply) => {
-                self.outstanding -= 1;
-                match reply? {
-                    Reply::Job(r) => Ok(Some(r)),
-                    Reply::Synced(_) => anyhow::bail!("unexpected sync reply mid-episode"),
-                }
-            }
-            Err(mpsc::TryRecvError::Empty) => Ok(None),
-            Err(mpsc::TryRecvError::Disconnected) => {
-                Err(anyhow::anyhow!("workers hung up"))
-            }
+        match self.transport.try_recv()? {
+            Some(Reply::Job(r)) => Ok(Some(r)),
+            Some(Reply::Synced(_)) => anyhow::bail!("unexpected sync reply mid-episode"),
+            None => Ok(None),
         }
     }
 
@@ -747,19 +867,27 @@ impl EpisodeRunner<'_> {
     /// worker's RNG snapshot, indexed by worker (replies arrive unordered
     /// on the shared channel). Requires no jobs in flight.
     fn sync_residents(&mut self, store: &mut EmbeddingStore) -> Result<Vec<[u64; 4]>> {
-        assert_eq!(self.outstanding, 0, "sync fence with jobs in flight");
-        for tx in self.job_txs {
-            tx.send(JobMsg::Sync)
-                .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        assert!(self.in_flight.is_empty(), "sync fence with jobs in flight");
+        let n = self.transport.num_workers();
+        for w in 0..n {
+            self.transport.send(w, JobMsg::Sync)?;
         }
-        let mut rngs = vec![[0u64; 4]; self.job_txs.len()];
-        for _ in 0..self.job_txs.len() {
-            let reply = self
-                .result_rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("workers hung up"))?;
-            match reply? {
+        let mut rngs = vec![[0u64; 4]; n];
+        let mut seen = vec![false; n];
+        for _ in 0..n {
+            match self.transport.recv()? {
                 Reply::Synced(sync) => {
+                    anyhow::ensure!(
+                        sync.worker < n,
+                        "sync reply from out-of-range worker {} ({n} workers)",
+                        sync.worker
+                    );
+                    anyhow::ensure!(
+                        !seen[sync.worker],
+                        "duplicate sync reply from worker {} — duplicated delivery",
+                        sync.worker
+                    );
+                    seen[sync.worker] = true;
                     rngs[sync.worker] = sync.rng_state;
                     let t0 = std::time::Instant::now();
                     for part in sync.residents {

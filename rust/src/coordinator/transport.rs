@@ -1,0 +1,1609 @@
+//! The transport seam: how [`JobMsg`]s travel to device workers and
+//! [`Reply`]s come back.
+//!
+//! The coordinator's planner ([`super::transfer::TransferEngine`]) is
+//! delivery-agnostic: it decides *what* moves (versioned shipments,
+//! residency keeps, evictions); a [`Transport`] decides *how*. Two
+//! implementations ship:
+//!
+//! * [`LocalTransport`] — the in-process mpsc channels of PRs 1-6,
+//!   bitwise-pinned behavior (one sender per worker thread, one shared
+//!   result receiver).
+//! * [`SocketTransport`] — the same protocol over length-prefixed TCP
+//!   frames ([`crate::net`]), one stream per `graphvite worker` process.
+//!   A handshake ships each worker its complete state — scaled config,
+//!   RNG stream state, per-partition negative-sampling weights — so a
+//!   loopback socket run is **bitwise-identical** to the local run
+//!   (`rust/tests/transport.rs`).
+//!
+//! ```text
+//!   worker                      coordinator
+//!     │ ──── HELLO (magic, proto version) ────▶ │  validated field-by-field;
+//!     │ ◀─── ASSIGN (fingerprint, rng, weights)─┤  bad peers get a reject
+//!     │ ──── READY / READY-err ───────────────▶ │  frame, never a panic
+//!     │                                         │
+//!     │ ◀─── TRAIN (block, shipments) ──────────┤  ─┐ repeated per job;
+//!     │ ──── RESULT / ERR ─────────────────────▶ │  ─┘ SYNC/SYNCED at fences
+//!     │ ◀─── STOP ──────────────────────────────┤
+//!     │ ──── BYE (payload-byte ledger) ────────▶ │  both sides' counts must
+//!     │                                         │  agree — the wire ledger
+//! ```
+//!
+//! **Wire ledger.** Both ends count shipment payload bytes (down) and
+//! result payload bytes (up) independently; the worker's counts travel in
+//! its BYE and must equal the coordinator's per-connection counts, and
+//! the transport totals must equal the transfer engine's
+//! `bytes_to_device` / `bytes_from_device` counters — the PR-3 ledger,
+//! asserted on both sides of the wire.
+//!
+//! **Failure discipline.** Every decode path returns a pointed error
+//! (never panics); a worker-side job error travels back as an ERR frame
+//! and surfaces exactly like the local path's `Result<Reply>` channel; a
+//! closed connection is "worker N disconnected", not a hang. The
+//! [`FlakyTransport`] test double wraps any transport with deterministic
+//! seeded drops / holds (reorders) / duplicate delivery / injected
+//! disconnects to prove those properties (`rust/tests/transport.rs`).
+//!
+//! `samples_trained` is counted coordinator-side on absorb (from
+//! `JobResult::trained`), so ledgers are identical for local and remote
+//! workers; per-device timing counters (`device_nanos`) remain
+//! worker-local and are not part of the ledger.
+
+use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::config::{BackendKind, TrainConfig};
+use crate::embedding::Matrix;
+use crate::metrics::Counters;
+use crate::net::{self, Cursor, MAX_CONTROL_FRAME, MAX_DATA_FRAME};
+use crate::sampling::NegativeSampler;
+use crate::util::rng::{streams, Rng};
+
+use super::worker::WorkerCore;
+pub use super::worker::{Job, JobMsg, JobResult, Reply, ResidentPart, Shipment, SyncReply};
+
+/// Handshake magic: the first bytes a worker sends.
+pub const HELLO_MAGIC: [u8; 4] = *b"GVWK";
+/// Assignment magic: the first bytes of a coordinator's assignment body.
+pub const ASSIGN_MAGIC: [u8; 4] = *b"GVAS";
+/// Bumped on any wire-format change; both ends must match exactly.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+const MSG_TRAIN: u8 = 1;
+const MSG_SYNC: u8 = 2;
+const MSG_STOP: u8 = 3;
+const MSG_RESULT: u8 = 17;
+const MSG_SYNCED: u8 = 18;
+const MSG_ERR: u8 = 19;
+const MSG_BYE: u8 = 20;
+
+const ASSIGN_OK: u8 = 0;
+const ASSIGN_REJECT: u8 = 1;
+const READY_OK: u8 = 0;
+const READY_ERR: u8 = 1;
+
+/// How long each side waits for the other's handshake frames.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+/// How long the coordinator waits for every BYE at shutdown.
+const SHUTDOWN_TIMEOUT: Duration = Duration::from_secs(30);
+/// Bad handshakes tolerated (port scanners, stale clients) before the
+/// coordinator gives up waiting for a real worker.
+const MAX_BAD_HANDSHAKES: usize = 64;
+
+/// What a socket transport learned at shutdown: per-run wire totals,
+/// already verified against every worker's BYE ledger.
+/// [`super::Trainer`] re-asserts them against the transfer-engine
+/// counters (`bytes_to_device` / `bytes_from_device`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransportReport {
+    pub workers: usize,
+    /// Shipment payload bytes coordinator → workers.
+    pub bytes_up: u64,
+    /// Result payload bytes workers → coordinator.
+    pub bytes_down: u64,
+}
+
+/// Delivery mechanism between the coordinator and its device workers.
+/// The episode runner drives exactly this surface, so every coordinator
+/// behavior (pipelined dispatch, fences, residency sync, checkpoint) is
+/// transport-agnostic.
+pub trait Transport: Send {
+    fn num_workers(&self) -> usize;
+    /// Send one message to worker `worker`. Ordering per worker is
+    /// guaranteed (FIFO channel / single TCP stream).
+    fn send(&mut self, worker: usize, msg: JobMsg) -> Result<()>;
+    /// Blocking receive of the next reply from any worker. Worker-side
+    /// job errors surface here as `Err` (pointed, naming the worker).
+    fn recv(&mut self) -> Result<Reply>;
+    /// Non-blocking receive (the pipelined opportunistic drain).
+    fn try_recv(&mut self) -> Result<Option<Reply>>;
+    /// Stop all workers. Socket transports collect every worker's BYE
+    /// ledger, verify it against their own per-connection counts and
+    /// return the totals; the local transport returns `None`.
+    fn shutdown(&mut self) -> Result<Option<TransportReport>>;
+}
+
+// ---------------------------------------------------------------------
+// LocalTransport: the PR 1-6 in-process channels, verbatim.
+// ---------------------------------------------------------------------
+
+/// In-process delivery: one mpsc sender per worker thread, one shared
+/// result receiver — exactly the channel topology prior PRs pinned
+/// bitwise. Spawning the threads stays in [`super::worker::spawn_workers`];
+/// this just owns the channel ends.
+pub struct LocalTransport {
+    job_txs: Vec<mpsc::Sender<JobMsg>>,
+    result_rx: mpsc::Receiver<Result<Reply>>,
+}
+
+impl LocalTransport {
+    pub fn new(
+        job_txs: Vec<mpsc::Sender<JobMsg>>,
+        result_rx: mpsc::Receiver<Result<Reply>>,
+    ) -> Self {
+        LocalTransport { job_txs, result_rx }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn num_workers(&self) -> usize {
+        self.job_txs.len()
+    }
+
+    fn send(&mut self, worker: usize, msg: JobMsg) -> Result<()> {
+        self.job_txs[worker]
+            .send(msg)
+            .map_err(|_| anyhow!("worker {worker} channel closed"))
+    }
+
+    fn recv(&mut self) -> Result<Reply> {
+        self.result_rx
+            .recv()
+            .map_err(|_| anyhow!("workers hung up"))?
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Reply>> {
+        match self.result_rx.try_recv() {
+            Ok(reply) => reply.map(Some),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => Err(anyhow!("workers hung up")),
+        }
+    }
+
+    fn shutdown(&mut self) -> Result<Option<TransportReport>> {
+        for tx in &self.job_txs {
+            // workers that already exited (error path) are fine to miss
+            let _ = tx.send(JobMsg::Stop);
+        }
+        Ok(None)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire codec. Flat little-endian structs over crate::net frames; every
+// decoder bounds-checks before allocating and rejects trailing bytes.
+// ---------------------------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(c: &mut Cursor<'_>) -> Result<String> {
+    let len = c.u32()? as usize;
+    let bytes = c.bytes(len)?;
+    Ok(String::from_utf8_lossy(bytes).into_owned())
+}
+
+fn put_shipment(out: &mut Vec<u8>, ship: &Shipment) {
+    let mut flags = 0u8;
+    if ship.data.is_some() {
+        flags |= 1;
+    }
+    if ship.keep {
+        flags |= 2;
+    }
+    out.push(flags);
+    out.extend_from_slice(&ship.src_version.to_le_bytes());
+    if let Some(data) = &ship.data {
+        net::put_f32s(out, data);
+    }
+}
+
+fn get_shipment(c: &mut Cursor<'_>) -> Result<Shipment> {
+    let flags = c.u8()?;
+    ensure!(flags & !3 == 0, "unknown shipment flags {flags:#x}");
+    let src_version = c.u64()?;
+    let data = if flags & 1 != 0 {
+        let mut buf = Vec::new();
+        net::get_f32s(c, &mut buf)?;
+        Some(buf)
+    } else {
+        None
+    };
+    Ok(Shipment { data, src_version, keep: flags & 2 != 0 })
+}
+
+/// Encode one coordinator→worker message.
+pub fn encode_job_msg(msg: &JobMsg) -> Vec<u8> {
+    match msg {
+        JobMsg::Train(job) => {
+            let mut out = Vec::with_capacity(64 + job.block.len() * 8);
+            out.push(MSG_TRAIN);
+            out.extend_from_slice(&(job.vid as u32).to_le_bytes());
+            out.extend_from_slice(&(job.cid as u32).to_le_bytes());
+            out.extend_from_slice(&job.lr.to_le_bytes());
+            out.extend_from_slice(&(job.block.len() as u32).to_le_bytes());
+            for &(u, v) in &job.block {
+                out.extend_from_slice(&u.to_le_bytes());
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            put_shipment(&mut out, &job.vertex);
+            put_shipment(&mut out, &job.context);
+            out
+        }
+        JobMsg::Sync => vec![MSG_SYNC],
+        JobMsg::Stop => vec![MSG_STOP],
+    }
+}
+
+/// Decode one coordinator→worker message (fail-loud: truncation, unknown
+/// tags/flags and trailing garbage are all pointed errors).
+pub fn decode_job_msg(payload: &[u8]) -> Result<JobMsg> {
+    let mut c = Cursor::new(payload);
+    let msg = match c.u8()? {
+        MSG_TRAIN => {
+            let vid = c.u32()? as usize;
+            let cid = c.u32()? as usize;
+            let lr = c.f32()?;
+            let n = c.u32()? as usize;
+            c.expect_remaining(n * 8)?;
+            let mut block = Vec::with_capacity(n);
+            for _ in 0..n {
+                block.push((c.i32()?, c.i32()?));
+            }
+            let vertex = get_shipment(&mut c)?;
+            let context = get_shipment(&mut c)?;
+            JobMsg::Train(Job { vid, cid, block, vertex, context, lr })
+        }
+        MSG_SYNC => JobMsg::Sync,
+        MSG_STOP => JobMsg::Stop,
+        tag => bail!("unknown job-message tag {tag}"),
+    };
+    c.finish()?;
+    Ok(msg)
+}
+
+/// Everything a worker sends up its stream. [`Reply`] is what the local
+/// channel carries; ERR mirrors the local path's `Result<Reply>` errors;
+/// BYE is the shutdown ledger answering STOP.
+#[derive(Debug, Clone)]
+pub enum WireReply {
+    Reply(Reply),
+    Err(String),
+    Bye { received: u64, sent: u64 },
+}
+
+/// Encode one worker→coordinator message. `JobResult::block` does not
+/// cross the wire (the block is spent; only its allocation matters, and
+/// each side recycles its own — see [`SocketTransport`]'s spare list).
+pub fn encode_wire_reply(reply: &WireReply) -> Vec<u8> {
+    match reply {
+        WireReply::Reply(Reply::Job(r)) => {
+            let mut out = Vec::with_capacity(64);
+            out.push(MSG_RESULT);
+            out.extend_from_slice(&(r.vid as u32).to_le_bytes());
+            out.extend_from_slice(&(r.cid as u32).to_le_bytes());
+            out.extend_from_slice(&r.loss.to_le_bytes());
+            out.extend_from_slice(&r.trained.to_le_bytes());
+            for opt in [&r.vertex, &r.context] {
+                match opt {
+                    Some(data) => {
+                        out.push(1);
+                        net::put_f32s(&mut out, data);
+                    }
+                    None => out.push(0),
+                }
+            }
+            out
+        }
+        WireReply::Reply(Reply::Synced(s)) => {
+            let mut out = Vec::with_capacity(64);
+            out.push(MSG_SYNCED);
+            out.extend_from_slice(&(s.worker as u32).to_le_bytes());
+            for w in s.rng_state {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            out.extend_from_slice(&(s.residents.len() as u32).to_le_bytes());
+            for part in &s.residents {
+                out.push(matrix_code(part.matrix));
+                out.extend_from_slice(&(part.pid as u32).to_le_bytes());
+                out.extend_from_slice(&part.version.to_le_bytes());
+                net::put_f32s(&mut out, &part.data);
+            }
+            out
+        }
+        WireReply::Err(msg) => {
+            let mut out = vec![MSG_ERR];
+            put_str(&mut out, msg);
+            out
+        }
+        WireReply::Bye { received, sent } => {
+            let mut out = vec![MSG_BYE];
+            out.extend_from_slice(&received.to_le_bytes());
+            out.extend_from_slice(&sent.to_le_bytes());
+            out
+        }
+    }
+}
+
+/// Decode one worker→coordinator message.
+pub fn decode_wire_reply(payload: &[u8]) -> Result<WireReply> {
+    let mut c = Cursor::new(payload);
+    let reply = match c.u8()? {
+        MSG_RESULT => {
+            let vid = c.u32()? as usize;
+            let cid = c.u32()? as usize;
+            let loss = c.f32()?;
+            let trained = c.u64()?;
+            let mut opts = [None, None];
+            for opt in &mut opts {
+                match c.u8()? {
+                    0 => {}
+                    1 => {
+                        let mut buf = Vec::new();
+                        net::get_f32s(&mut c, &mut buf)?;
+                        *opt = Some(buf);
+                    }
+                    f => bail!("unknown result-section flag {f}"),
+                }
+            }
+            let [vertex, context] = opts;
+            WireReply::Reply(Reply::Job(JobResult {
+                vid,
+                cid,
+                vertex,
+                context,
+                block: Vec::new(),
+                loss,
+                trained,
+            }))
+        }
+        MSG_SYNCED => {
+            let worker = c.u32()? as usize;
+            let mut rng_state = [0u64; 4];
+            for w in &mut rng_state {
+                *w = c.u64()?;
+            }
+            let count = c.u32()? as usize;
+            let mut residents = Vec::with_capacity(count.min(1024));
+            for _ in 0..count {
+                let matrix = matrix_from_code(c.u8()?)?;
+                let pid = c.u32()? as usize;
+                let version = c.u64()?;
+                let mut data = Vec::new();
+                net::get_f32s(&mut c, &mut data)?;
+                residents.push(ResidentPart { matrix, pid, version, data });
+            }
+            WireReply::Reply(Reply::Synced(SyncReply { worker, rng_state, residents }))
+        }
+        MSG_ERR => WireReply::Err(get_str(&mut c)?),
+        MSG_BYE => WireReply::Bye { received: c.u64()?, sent: c.u64()? },
+        tag => bail!("unknown reply tag {tag}"),
+    };
+    c.finish()?;
+    Ok(reply)
+}
+
+fn matrix_code(m: Matrix) -> u8 {
+    match m {
+        Matrix::Vertex => 0,
+        Matrix::Context => 1,
+    }
+}
+
+fn matrix_from_code(code: u8) -> Result<Matrix> {
+    match code {
+        0 => Ok(Matrix::Vertex),
+        1 => Ok(Matrix::Context),
+        c => bail!("unknown matrix code {c}"),
+    }
+}
+
+/// Shipment payload f32 bytes of a job — the "down" ledger unit, counted
+/// identically by [`super::EpisodeRunner`]'s gather (`bytes_to_device`),
+/// the sender, and the receiving worker.
+pub fn job_payload_bytes(job: &Job) -> u64 {
+    let v = job.vertex.data.as_ref().map_or(0, Vec::len);
+    let c = job.context.data.as_ref().map_or(0, Vec::len);
+    ((v + c) * 4) as u64
+}
+
+/// Result payload f32 bytes of a reply — the "up" ledger unit, counted
+/// identically by the worker, the reader thread, and the coordinator's
+/// absorb/sync scatters (`bytes_from_device`).
+pub fn reply_payload_bytes(reply: &Reply) -> u64 {
+    match reply {
+        Reply::Job(r) => {
+            let v = r.vertex.as_ref().map_or(0, Vec::len);
+            let c = r.context.as_ref().map_or(0, Vec::len);
+            ((v + c) * 4) as u64
+        }
+        Reply::Synced(s) => {
+            (s.residents.iter().map(|p| p.data.len()).sum::<usize>() * 4) as u64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Handshake messages.
+// ---------------------------------------------------------------------
+
+/// The worker's first frame: magic + protocol version.
+pub fn encode_hello() -> Vec<u8> {
+    let mut out = Vec::with_capacity(8);
+    out.extend_from_slice(&HELLO_MAGIC);
+    out.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    out
+}
+
+/// Validate a HELLO field by field (the `validate_resume` discipline:
+/// each mismatch is a distinct pointed error naming both sides).
+pub fn decode_hello(payload: &[u8]) -> Result<()> {
+    let mut c = Cursor::new(payload);
+    let magic = c.bytes(4)?;
+    ensure!(
+        magic == HELLO_MAGIC,
+        "bad handshake magic {magic:02x?} (expected {HELLO_MAGIC:02x?} / \"GVWK\") — \
+         the peer is not a graphvite worker"
+    );
+    let version = c.u32()?;
+    ensure!(
+        version == PROTOCOL_VERSION,
+        "worker speaks transport protocol v{version}, this coordinator speaks \
+         v{PROTOCOL_VERSION} — mismatched graphvite builds"
+    );
+    c.finish()?;
+    Ok(())
+}
+
+/// Everything one remote worker needs to be bitwise-equivalent to an
+/// in-process worker thread: the run fingerprint, its capacity-scaled
+/// hyperparameters, its exact RNG stream state and the per-partition
+/// negative-sampling weights (a remote worker has no graph to derive
+/// them from).
+#[derive(Debug, Clone)]
+pub struct WorkerAssignment {
+    pub worker_index: usize,
+    pub num_workers: usize,
+    pub partitions: usize,
+    pub dim: usize,
+    /// Base batch size; the worker multiplies by `capacity` (the same
+    /// capacity-aware chunk sizing `spawn_workers` applies in-process).
+    pub batch_size: usize,
+    pub negatives: usize,
+    pub capacity: usize,
+    /// Residency-cache bound (`None` = unbounded, the homogeneous
+    /// default). Wire sentinel: `u64::MAX`.
+    pub cache_limit: Option<usize>,
+    pub seed: u64,
+    pub neg_weight: f32,
+    pub backend: BackendKind,
+    pub rng_state: [u64; 4],
+    /// Per-partition deg^0.75 weights, bit-exact
+    /// ([`NegativeSampler::partition_weights`]).
+    pub neg_weights: Vec<Vec<f32>>,
+}
+
+/// Encode the coordinator's assignment (the OK arm of the ASSIGN slot).
+pub fn encode_assign(a: &WorkerAssignment) -> Vec<u8> {
+    let weight_bytes: usize = a.neg_weights.iter().map(|w| 4 + w.len() * 4).sum();
+    let mut out = Vec::with_capacity(96 + weight_bytes);
+    out.push(ASSIGN_OK);
+    out.extend_from_slice(&ASSIGN_MAGIC);
+    out.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    out.extend_from_slice(&(a.worker_index as u32).to_le_bytes());
+    out.extend_from_slice(&(a.num_workers as u32).to_le_bytes());
+    out.extend_from_slice(&(a.partitions as u32).to_le_bytes());
+    out.extend_from_slice(&(a.dim as u32).to_le_bytes());
+    out.extend_from_slice(&(a.batch_size as u32).to_le_bytes());
+    out.extend_from_slice(&(a.negatives as u32).to_le_bytes());
+    out.extend_from_slice(&(a.capacity as u32).to_le_bytes());
+    out.extend_from_slice(&a.cache_limit.map_or(u64::MAX, |l| l as u64).to_le_bytes());
+    out.extend_from_slice(&a.seed.to_le_bytes());
+    out.extend_from_slice(&a.neg_weight.to_le_bytes());
+    put_str(&mut out, a.backend.name());
+    for w in a.rng_state {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    for weights in &a.neg_weights {
+        net::put_f32s(&mut out, weights);
+    }
+    out
+}
+
+/// The coordinator's answer to an invalid HELLO (the reject arm of the
+/// ASSIGN slot) — so a mismatched worker gets a pointed message instead
+/// of a dropped connection.
+pub fn encode_reject(msg: &str) -> Vec<u8> {
+    let mut out = vec![ASSIGN_REJECT];
+    put_str(&mut out, msg);
+    out
+}
+
+/// Decode and validate an assignment field by field, mirroring
+/// `validate_resume`: every bad field is a distinct pointed error naming
+/// both sides, so a fingerprint mismatch can never silently train.
+pub fn decode_assign(payload: &[u8]) -> Result<WorkerAssignment> {
+    let mut c = Cursor::new(payload);
+    match c.u8()? {
+        ASSIGN_OK => {}
+        ASSIGN_REJECT => bail!("coordinator rejected this worker: {}", get_str(&mut c)?),
+        tag => bail!("unknown assignment frame tag {tag}"),
+    }
+    let magic = c.bytes(4)?;
+    ensure!(
+        magic == ASSIGN_MAGIC,
+        "bad assignment magic {magic:02x?} (expected {ASSIGN_MAGIC:02x?} / \"GVAS\") — \
+         is the remote end a graphvite coordinator?"
+    );
+    let version = c.u32()?;
+    ensure!(
+        version == PROTOCOL_VERSION,
+        "coordinator speaks transport protocol v{version}, this worker speaks \
+         v{PROTOCOL_VERSION} — mismatched graphvite builds"
+    );
+    let worker_index = c.u32()? as usize;
+    let num_workers = c.u32()? as usize;
+    ensure!(num_workers >= 1, "assignment declares zero workers");
+    ensure!(
+        worker_index < num_workers,
+        "assigned worker index {worker_index} out of range for {num_workers} workers"
+    );
+    let partitions = c.u32()? as usize;
+    ensure!(partitions >= 1, "assignment declares zero partitions");
+    let dim = c.u32()? as usize;
+    ensure!(dim >= 1, "assignment declares dim 0");
+    let batch_size = c.u32()? as usize;
+    ensure!(batch_size >= 1, "assignment declares batch size 0");
+    let negatives = c.u32()? as usize;
+    ensure!(negatives >= 1, "assignment declares zero negatives per positive");
+    let capacity = c.u32()? as usize;
+    ensure!(capacity >= 1, "assignment declares capacity 0 for this worker");
+    let cache_limit = match c.u64()? {
+        u64::MAX => None,
+        l => Some(l as usize),
+    };
+    let seed = c.u64()?;
+    let neg_weight = c.f32()?;
+    ensure!(neg_weight.is_finite(), "assignment negative weight {neg_weight} is not finite");
+    let backend_name = get_str(&mut c)?;
+    let backend = BackendKind::parse(&backend_name)
+        .ok_or_else(|| anyhow!("assignment names unknown backend '{backend_name}'"))?;
+    ensure!(
+        backend != BackendKind::Pjrt,
+        "remote workers cannot run the pjrt backend (HLO artifacts are host-local); \
+         use native or simd for tcp worker mode"
+    );
+    let mut rng_state = [0u64; 4];
+    for w in &mut rng_state {
+        *w = c.u64()?;
+    }
+    ensure!(rng_state != [0u64; 4], "assignment carries an all-zero rng state");
+    let mut neg_weights = Vec::with_capacity(partitions);
+    for _ in 0..partitions {
+        let mut w = Vec::new();
+        net::get_f32s(&mut c, &mut w)?;
+        neg_weights.push(w);
+    }
+    c.finish()?;
+    Ok(WorkerAssignment {
+        worker_index,
+        num_workers,
+        partitions,
+        dim,
+        batch_size,
+        negatives,
+        capacity,
+        cache_limit,
+        seed,
+        neg_weight,
+        backend,
+        rng_state,
+        neg_weights,
+    })
+}
+
+/// The worker's post-construction acknowledgement: OK, or a pointed
+/// rejection message (backend unavailable, invalid rng state, …).
+pub fn encode_ready(err: Option<&str>) -> Vec<u8> {
+    match err {
+        None => vec![READY_OK],
+        Some(msg) => {
+            let mut out = vec![READY_ERR];
+            put_str(&mut out, msg);
+            out
+        }
+    }
+}
+
+/// Decode a READY frame: `None` = worker is ready, `Some(msg)` = the
+/// worker rejected its assignment with that message.
+pub fn decode_ready(payload: &[u8]) -> Result<Option<String>> {
+    let mut c = Cursor::new(payload);
+    let out = match c.u8()? {
+        READY_OK => None,
+        READY_ERR => Some(get_str(&mut c)?),
+        tag => bail!("unknown ready tag {tag}"),
+    };
+    c.finish()?;
+    Ok(out)
+}
+
+/// Build the per-worker assignments for a tcp run — the socket analogue
+/// of [`super::worker::spawn_workers`]'s per-thread setup: identical
+/// capacity scaling, identical cache limits, identical RNG stream
+/// derivation (`streams::WORKER`), so worker `i` behind a socket is
+/// bitwise the worker `i` thread.
+pub fn make_assignments(
+    cfg: &TrainConfig,
+    partitions: usize,
+    neg_weights: &[Vec<f32>],
+    base_rng: &Rng,
+    resume_rngs: Option<&[[u64; 4]]>,
+) -> Result<Vec<WorkerAssignment>> {
+    if let Some(states) = resume_rngs {
+        ensure!(
+            states.len() == cfg.num_workers,
+            "checkpoint has {} worker rng states but the config declares {} workers",
+            states.len(),
+            cfg.num_workers
+        );
+    }
+    let cache_limits = cfg.residency_limits();
+    Ok((0..cfg.num_workers)
+        .map(|i| WorkerAssignment {
+            worker_index: i,
+            num_workers: cfg.num_workers,
+            partitions,
+            dim: cfg.dim,
+            batch_size: cfg.batch_size,
+            negatives: cfg.negatives,
+            capacity: cfg.worker_capacity(i),
+            cache_limit: cache_limits.as_ref().map(|l| l[i]),
+            seed: cfg.seed,
+            neg_weight: cfg.neg_weight,
+            backend: cfg.backend,
+            rng_state: match resume_rngs {
+                Some(states) => states[i],
+                None => base_rng.stream(streams::WORKER, i as u64).state(),
+            },
+            neg_weights: neg_weights.to_vec(),
+        })
+        .collect())
+}
+
+// ---------------------------------------------------------------------
+// SocketTransport: the coordinator side of the TCP protocol.
+// ---------------------------------------------------------------------
+
+enum SocketEvent {
+    Reply(usize, Reply),
+    WorkerErr(usize, String),
+    Bye { worker: usize, received: u64, sent: u64 },
+    Eof(usize),
+    ReadErr(usize, String),
+}
+
+/// TCP delivery: one stream per connected `graphvite worker`, a reader
+/// thread per stream feeding one shared event channel (mirroring the
+/// local transport's shared result channel), and a per-connection byte
+/// ledger verified against each worker's BYE at shutdown.
+pub struct SocketTransport {
+    streams: Vec<TcpStream>,
+    rx: mpsc::Receiver<SocketEvent>,
+    readers: Vec<JoinHandle<()>>,
+    /// Shipment payload bytes sent per worker (main thread).
+    up_bytes: Vec<u64>,
+    /// Result payload bytes received per worker (reader threads).
+    down_bytes: Vec<Arc<AtomicU64>>,
+    /// Emptied block allocations from serialized jobs, reattached to
+    /// decoded results — the coordinator's block free-list keeps
+    /// recycling exactly as in local mode.
+    block_spare: Vec<Vec<(i32, i32)>>,
+    byes: Vec<Option<(u64, u64)>>,
+    /// `None` = block forever (local-mode semantics; TCP EOF still
+    /// fails loud). `TrainConfig::worker_timeout_secs` sets it.
+    recv_timeout: Option<Duration>,
+}
+
+impl SocketTransport {
+    /// Accept and handshake `assignments.len()` workers on `listener`
+    /// (arrival order assigns indices — any process can be any worker,
+    /// the assignment carries that worker's complete state). Invalid
+    /// peers get a reject frame and are dropped without disturbing the
+    /// slot; the run only starts once every worker acknowledged READY.
+    pub fn accept(
+        listener: TcpListener,
+        assignments: Vec<WorkerAssignment>,
+        recv_timeout: Option<Duration>,
+    ) -> Result<Self> {
+        let n = assignments.len();
+        ensure!(n >= 1, "socket transport needs at least one worker");
+        let addr = listener.local_addr().context("listener address")?;
+        eprintln!("transport: listening on {addr}, waiting for {n} workers");
+        let mut streams = Vec::with_capacity(n);
+        let mut bad = 0usize;
+        for (i, assign) in assignments.iter().enumerate() {
+            loop {
+                let (mut stream, peer) =
+                    listener.accept().context("accepting worker connection")?;
+                match handshake_worker(&mut stream, assign) {
+                    Ok(()) => {
+                        eprintln!("transport: worker {i} connected from {peer} (ready)");
+                        streams.push(stream);
+                        break;
+                    }
+                    Err(e) => {
+                        eprintln!("transport: rejected connection from {peer}: {e:#}");
+                        bad += 1;
+                        ensure!(
+                            bad <= MAX_BAD_HANDSHAKES,
+                            "rejected {bad} handshakes while waiting for worker {i} — \
+                             giving up (last: {e:#})"
+                        );
+                    }
+                }
+            }
+        }
+        eprintln!("transport: {n} workers connected, handshake complete");
+
+        let (tx, rx) = mpsc::channel();
+        let mut readers = Vec::with_capacity(n);
+        let mut down_bytes = Vec::with_capacity(n);
+        for (i, stream) in streams.iter().enumerate() {
+            let read_half = stream.try_clone().context("cloning worker stream")?;
+            let tx = tx.clone();
+            let counter = Arc::new(AtomicU64::new(0));
+            down_bytes.push(Arc::clone(&counter));
+            readers.push(
+                std::thread::Builder::new()
+                    .name(format!("transport-rx-{i}"))
+                    .spawn(move || reader_loop(i, read_half, tx, counter))
+                    .context("spawning transport reader")?,
+            );
+        }
+        Ok(SocketTransport {
+            streams,
+            rx,
+            readers,
+            up_bytes: vec![0; n],
+            down_bytes,
+            block_spare: Vec::new(),
+            byes: vec![None; n],
+            recv_timeout,
+        })
+    }
+
+    fn map_event(&mut self, ev: SocketEvent) -> Result<Reply> {
+        match ev {
+            SocketEvent::Reply(_, mut reply) => {
+                if let Reply::Job(ref mut r) = reply {
+                    r.block = self.block_spare.pop().unwrap_or_default();
+                }
+                Ok(reply)
+            }
+            SocketEvent::WorkerErr(i, msg) => bail!("worker {i}: {msg}"),
+            SocketEvent::Bye { worker, .. } => {
+                bail!("worker {worker} sent its shutdown ledger mid-run")
+            }
+            SocketEvent::Eof(i) => bail!(
+                "worker {i} disconnected mid-run (connection closed without a shutdown ledger)"
+            ),
+            SocketEvent::ReadErr(i, msg) => bail!("worker {i} connection failed: {msg}"),
+        }
+    }
+}
+
+fn reader_loop(
+    worker: usize,
+    mut stream: TcpStream,
+    tx: mpsc::Sender<SocketEvent>,
+    bytes: Arc<AtomicU64>,
+) {
+    loop {
+        let event = match net::read_frame(&mut stream, MAX_DATA_FRAME) {
+            Ok(Some(payload)) => match decode_wire_reply(&payload) {
+                Ok(WireReply::Reply(r)) => {
+                    bytes.fetch_add(reply_payload_bytes(&r), Ordering::Relaxed);
+                    SocketEvent::Reply(worker, r)
+                }
+                Ok(WireReply::Err(msg)) => SocketEvent::WorkerErr(worker, msg),
+                Ok(WireReply::Bye { received, sent }) => {
+                    let _ = tx.send(SocketEvent::Bye { worker, received, sent });
+                    return;
+                }
+                Err(e) => {
+                    let _ = tx.send(SocketEvent::ReadErr(worker, format!("{e:#}")));
+                    return;
+                }
+            },
+            Ok(None) => {
+                let _ = tx.send(SocketEvent::Eof(worker));
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send(SocketEvent::ReadErr(worker, format!("{e:#}")));
+                return;
+            }
+        };
+        if tx.send(event).is_err() {
+            return; // transport dropped
+        }
+    }
+}
+
+/// Coordinator side of one worker handshake. Pointed errors at every
+/// step; an invalid HELLO additionally gets a reject frame so the peer
+/// learns why.
+fn handshake_worker(stream: &mut TcpStream, assign: &WorkerAssignment) -> Result<()> {
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+        .context("setting handshake timeout")?;
+    let hello = net::read_frame(stream, MAX_CONTROL_FRAME)
+        .context("reading worker hello")?
+        .ok_or_else(|| anyhow!("peer closed before sending a hello"))?;
+    if let Err(e) = decode_hello(&hello) {
+        let _ = net::write_frame(stream, &encode_reject(&format!("{e:#}")), MAX_CONTROL_FRAME);
+        return Err(e);
+    }
+    net::write_frame(stream, &encode_assign(assign), MAX_DATA_FRAME)
+        .context("sending assignment")?;
+    let ready = net::read_frame(stream, MAX_CONTROL_FRAME)
+        .context("reading worker ready")?
+        .ok_or_else(|| {
+            anyhow!("worker {} closed before acknowledging its assignment", assign.worker_index)
+        })?;
+    if let Some(msg) = decode_ready(&ready)? {
+        bail!("worker {} rejected the assignment: {msg}", assign.worker_index);
+    }
+    stream.set_read_timeout(None).context("clearing handshake timeout")?;
+    Ok(())
+}
+
+impl Transport for SocketTransport {
+    fn num_workers(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn send(&mut self, worker: usize, msg: JobMsg) -> Result<()> {
+        let payload = encode_job_msg(&msg);
+        if let JobMsg::Train(mut job) = msg {
+            self.up_bytes[worker] += job_payload_bytes(&job);
+            job.block.clear();
+            self.block_spare.push(job.block);
+        }
+        net::write_frame(&mut self.streams[worker], &payload, MAX_DATA_FRAME)
+            .with_context(|| format!("sending to worker {worker}"))
+    }
+
+    fn recv(&mut self) -> Result<Reply> {
+        let ev = match self.recv_timeout {
+            None => self
+                .rx
+                .recv()
+                .map_err(|_| anyhow!("all worker connections closed"))?,
+            Some(t) => self.rx.recv_timeout(t).map_err(|e| match e {
+                mpsc::RecvTimeoutError::Timeout => anyhow!(
+                    "no worker result within {t:?} (worker_timeout_secs) — a worker is \
+                     stalled or a message was lost"
+                ),
+                mpsc::RecvTimeoutError::Disconnected => {
+                    anyhow!("all worker connections closed")
+                }
+            })?,
+        };
+        self.map_event(ev)
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Reply>> {
+        match self.rx.try_recv() {
+            Ok(ev) => self.map_event(ev).map(Some),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Err(anyhow!("all worker connections closed"))
+            }
+        }
+    }
+
+    fn shutdown(&mut self) -> Result<Option<TransportReport>> {
+        for stream in &mut self.streams {
+            // a worker that already died surfaces below as a missing BYE
+            let _ = net::write_frame(stream, &encode_job_msg(&JobMsg::Stop), MAX_DATA_FRAME);
+        }
+        let deadline = Instant::now() + SHUTDOWN_TIMEOUT;
+        while self.byes.iter().any(Option::is_none) {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let missing: Vec<usize> = (0..self.byes.len())
+                .filter(|&i| self.byes[i].is_none())
+                .collect();
+            ensure!(
+                !remaining.is_zero(),
+                "worker(s) {missing:?} sent no shutdown ledger within {SHUTDOWN_TIMEOUT:?}"
+            );
+            match self.rx.recv_timeout(remaining) {
+                Ok(SocketEvent::Bye { worker, received, sent }) => {
+                    ensure!(
+                        self.byes[worker].is_none(),
+                        "worker {worker} sent two shutdown ledgers"
+                    );
+                    self.byes[worker] = Some((received, sent));
+                }
+                Ok(SocketEvent::Reply(i, _)) => {
+                    bail!("worker {i} sent a result during shutdown (job still in flight?)")
+                }
+                Ok(SocketEvent::WorkerErr(i, msg)) => bail!("worker {i}: {msg}"),
+                Ok(SocketEvent::Eof(i)) => {
+                    bail!("worker {i} disconnected before sending its shutdown ledger")
+                }
+                Ok(SocketEvent::ReadErr(i, msg)) => {
+                    bail!("worker {i} connection failed during shutdown: {msg}")
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => bail!(
+                    "worker(s) {missing:?} sent no shutdown ledger within {SHUTDOWN_TIMEOUT:?}"
+                ),
+                Err(mpsc::RecvTimeoutError::Disconnected) => bail!(
+                    "reader threads exited before worker(s) {missing:?} sent their ledgers"
+                ),
+            }
+        }
+        for reader in self.readers.drain(..) {
+            let _ = reader.join();
+        }
+        let (mut up, mut down) = (0u64, 0u64);
+        for (i, bye) in self.byes.iter().enumerate() {
+            let (received, sent) = bye.expect("loop above filled every bye");
+            ensure!(
+                received == self.up_bytes[i],
+                "wire ledger mismatch for worker {i}: coordinator shipped {} payload bytes \
+                 but the worker received {received}",
+                self.up_bytes[i]
+            );
+            let local_down = self.down_bytes[i].load(Ordering::Relaxed);
+            ensure!(
+                sent == local_down,
+                "wire ledger mismatch for worker {i}: worker sent {sent} payload bytes \
+                 but the coordinator received {local_down}"
+            );
+            up += received;
+            down += sent;
+        }
+        let n = self.streams.len();
+        eprintln!(
+            "transport: ledger balanced across {n} workers ({up} bytes up, {down} bytes down)"
+        );
+        Ok(Some(TransportReport { workers: n, bytes_up: up, bytes_down: down }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Remote worker runtime: the `graphvite worker` process body.
+// ---------------------------------------------------------------------
+
+/// What [`run_worker`] did, for banners and tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerSummary {
+    pub worker_index: usize,
+    pub jobs: u64,
+    pub bytes_received: u64,
+    pub bytes_sent: u64,
+}
+
+/// Dial `addr` (retrying until `connect_timeout` — workers may start
+/// before the coordinator listens), handshake, then serve jobs through
+/// the same [`WorkerCore`] the in-process threads run, until STOP.
+pub fn run_worker(addr: &str, connect_timeout: Duration) -> Result<WorkerSummary> {
+    let mut stream = connect_with_retry(addr, connect_timeout)?;
+    let _ = stream.set_nodelay(true);
+    net::write_frame(&mut stream, &encode_hello(), MAX_CONTROL_FRAME)
+        .context("sending hello")?;
+    stream
+        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+        .context("setting handshake timeout")?;
+    let frame = net::read_frame(&mut stream, MAX_DATA_FRAME)
+        .context("reading assignment")?
+        .ok_or_else(|| anyhow!("coordinator closed the connection during the handshake"))?;
+    let assign = match decode_assign(&frame) {
+        Ok(a) => a,
+        Err(e) => {
+            let _ = net::write_frame(
+                &mut stream,
+                &encode_ready(Some(&format!("{e:#}"))),
+                MAX_CONTROL_FRAME,
+            );
+            return Err(e.context("validating coordinator assignment"));
+        }
+    };
+    let built = build_core(&assign);
+    let mut core = match built {
+        Ok(core) => core,
+        Err(e) => {
+            let _ = net::write_frame(
+                &mut stream,
+                &encode_ready(Some(&format!("{e:#}"))),
+                MAX_CONTROL_FRAME,
+            );
+            return Err(e);
+        }
+    };
+    net::write_frame(&mut stream, &encode_ready(None), MAX_CONTROL_FRAME)
+        .context("sending ready")?;
+    stream.set_read_timeout(None).context("clearing handshake timeout")?;
+    eprintln!(
+        "worker: connected to {addr} as worker {}/{} (backend {}, dim {}, {} partitions, \
+         capacity {})",
+        assign.worker_index,
+        assign.num_workers,
+        assign.backend.name(),
+        assign.dim,
+        assign.partitions,
+        assign.capacity,
+    );
+
+    let (mut received, mut sent, mut jobs) = (0u64, 0u64, 0u64);
+    loop {
+        let payload = net::read_frame(&mut stream, MAX_DATA_FRAME)
+            .context("reading job")?
+            .ok_or_else(|| {
+                anyhow!("coordinator closed the connection without a stop message")
+            })?;
+        let msg = decode_job_msg(&payload)?;
+        if let JobMsg::Train(job) = &msg {
+            received += job_payload_bytes(job);
+            jobs += 1;
+        }
+        match core.handle(msg) {
+            None => {
+                let bye = WireReply::Bye { received, sent };
+                net::write_frame(&mut stream, &encode_wire_reply(&bye), MAX_CONTROL_FRAME)
+                    .context("sending shutdown ledger")?;
+                break;
+            }
+            Some(Ok(reply)) => {
+                sent += reply_payload_bytes(&reply);
+                let wire = encode_wire_reply(&WireReply::Reply(reply));
+                net::write_frame(&mut stream, &wire, MAX_DATA_FRAME)
+                    .context("sending result")?;
+            }
+            Some(Err(e)) => {
+                // mirror the local loop: the error rides the reply
+                // stream and the worker keeps serving
+                let wire = encode_wire_reply(&WireReply::Err(format!("{e:#}")));
+                net::write_frame(&mut stream, &wire, MAX_DATA_FRAME)
+                    .context("sending job error")?;
+            }
+        }
+    }
+    eprintln!("worker: ledger {received} bytes in, {sent} bytes out over {jobs} jobs — bye");
+    Ok(WorkerSummary {
+        worker_index: assign.worker_index,
+        jobs,
+        bytes_received: received,
+        bytes_sent: sent,
+    })
+}
+
+fn build_core(assign: &WorkerAssignment) -> Result<WorkerCore> {
+    let rng = Rng::from_state(assign.rng_state)
+        .map_err(|e| anyhow!("assignment rng state: {e}"))?;
+    let neg = Arc::new(NegativeSampler::from_weights(&assign.neg_weights));
+    let cfg = TrainConfig {
+        backend: assign.backend,
+        dim: assign.dim,
+        // capacity-aware chunk sizing, exactly like spawn_workers
+        batch_size: assign.batch_size * assign.capacity,
+        negatives: assign.negatives,
+        neg_weight: assign.neg_weight,
+        num_workers: assign.num_workers,
+        seed: assign.seed,
+        ..TrainConfig::default()
+    };
+    WorkerCore::new(
+        assign.worker_index,
+        &cfg,
+        assign.cache_limit,
+        None,
+        neg,
+        Arc::new(Counters::default()),
+        rng,
+    )
+}
+
+fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let start = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => {
+                if start.elapsed() >= timeout {
+                    bail!("could not connect to coordinator at {addr} within {timeout:?}: {e}");
+                }
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// FlakyTransport: deterministic fault injection around any transport.
+// ---------------------------------------------------------------------
+
+/// Seeded fault schedule for [`FlakyTransport`]. All probabilities are
+/// per-mille per training reply (sync replies pass through untouched —
+/// faults target the mid-episode window).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// ‰ chance a training reply is silently discarded (the coordinator
+    /// must then fail loud via `timeout`, never hang).
+    pub drop_permille: u32,
+    /// ‰ chance a training reply is delivered twice (the in-flight set
+    /// rejects the duplicate with a pointed error).
+    pub dup_permille: u32,
+    /// ‰ chance a training reply is held back and delivered after the
+    /// next one (reordering — absorb order is commutative, so the run
+    /// must stay bitwise-identical).
+    pub hold_permille: u32,
+    /// Training replies delivered cleanly before faults arm (lets a
+    /// checkpoint land before the injected failure).
+    pub skip_first: u64,
+    /// After this many sends, every further send/recv fails like a dead
+    /// connection.
+    pub disconnect_after_sends: Option<u64>,
+    /// Deadline for [`Transport::recv`] — the no-hang guarantee when a
+    /// reply was dropped.
+    pub timeout: Duration,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            drop_permille: 0,
+            dup_permille: 0,
+            hold_permille: 0,
+            skip_first: 0,
+            disconnect_after_sends: None,
+            timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// A held reply is released anyway once the inner transport has been
+/// idle this long — a hold on the final in-flight reply must not
+/// deadlock the fence.
+const HOLD_GRACE: Duration = Duration::from_millis(20);
+
+enum Fault {
+    Deliver,
+    Drop,
+    Duplicate,
+    Hold,
+}
+
+/// Fault-injection decorator over any [`Transport`]: deterministic
+/// (seeded xoshiro) drops, duplicate delivery, holds (reorders) and
+/// injected disconnects, with a recv deadline so injected loss turns
+/// into a pointed error instead of a hang. Test-only by intent, wired
+/// in through [`super::Trainer::set_transport_wrapper`].
+pub struct FlakyTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    rng: Rng,
+    seen: u64,
+    sends: u64,
+    disconnected: bool,
+    ready: VecDeque<Reply>,
+    held: VecDeque<Reply>,
+}
+
+impl FlakyTransport {
+    pub fn new(inner: Box<dyn Transport>, plan: FaultPlan) -> Self {
+        let rng = Rng::new(plan.seed);
+        FlakyTransport {
+            inner,
+            plan,
+            rng,
+            seen: 0,
+            sends: 0,
+            disconnected: false,
+            ready: VecDeque::new(),
+            held: VecDeque::new(),
+        }
+    }
+
+    fn ensure_connected(&self) -> Result<()> {
+        ensure!(
+            !self.disconnected,
+            "flaky transport: connection lost (injected disconnect after {} messages)",
+            self.sends
+        );
+        Ok(())
+    }
+
+    fn roll(&mut self) -> Fault {
+        let r = (self.rng.next_u64() % 1000) as u32;
+        let p = &self.plan;
+        if r < p.drop_permille {
+            Fault::Drop
+        } else if r < p.drop_permille + p.dup_permille {
+            Fault::Duplicate
+        } else if r < p.drop_permille + p.dup_permille + p.hold_permille {
+            Fault::Hold
+        } else {
+            Fault::Deliver
+        }
+    }
+
+    fn flush_held(&mut self) {
+        while let Some(r) = self.held.pop_front() {
+            self.ready.push_back(r);
+        }
+    }
+
+    /// Apply the fault decision to one incoming reply; `Some` = deliver
+    /// now (held replies queue up behind it).
+    fn admit(&mut self, reply: Reply) -> Option<Reply> {
+        if !matches!(reply, Reply::Job(_)) {
+            return Some(reply); // fences pass through untouched
+        }
+        self.seen += 1;
+        if self.seen <= self.plan.skip_first {
+            self.flush_held();
+            return Some(reply);
+        }
+        match self.roll() {
+            Fault::Drop => None,
+            Fault::Hold => {
+                self.held.push_back(reply);
+                None
+            }
+            Fault::Duplicate => {
+                self.ready.push_back(reply.clone());
+                self.flush_held();
+                Some(reply)
+            }
+            Fault::Deliver => {
+                self.flush_held();
+                Some(reply)
+            }
+        }
+    }
+}
+
+impl Transport for FlakyTransport {
+    fn num_workers(&self) -> usize {
+        self.inner.num_workers()
+    }
+
+    fn send(&mut self, worker: usize, msg: JobMsg) -> Result<()> {
+        self.ensure_connected()?;
+        if let Some(n) = self.plan.disconnect_after_sends {
+            if self.sends >= n {
+                self.disconnected = true;
+                bail!(
+                    "flaky transport: worker {worker} connection lost \
+                     (injected disconnect after {n} messages)"
+                );
+            }
+        }
+        self.sends += 1;
+        self.inner.send(worker, msg)
+    }
+
+    fn recv(&mut self) -> Result<Reply> {
+        self.ensure_connected()?;
+        if let Some(r) = self.ready.pop_front() {
+            return Ok(r);
+        }
+        let deadline = Instant::now() + self.plan.timeout;
+        let mut idle_since = Instant::now();
+        loop {
+            match self.inner.try_recv()? {
+                Some(reply) => {
+                    idle_since = Instant::now();
+                    if let Some(r) = self.admit(reply) {
+                        return Ok(r);
+                    }
+                }
+                None => {
+                    if !self.held.is_empty() && idle_since.elapsed() >= HOLD_GRACE {
+                        return Ok(self.held.pop_front().expect("non-empty"));
+                    }
+                    ensure!(
+                        Instant::now() < deadline,
+                        "flaky transport: no worker reply within {:?} ({} held back) — \
+                         a dropped message would hang the run, failing loud instead",
+                        self.plan.timeout,
+                        self.held.len()
+                    );
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Reply>> {
+        self.ensure_connected()?;
+        if let Some(r) = self.ready.pop_front() {
+            return Ok(Some(r));
+        }
+        loop {
+            match self.inner.try_recv()? {
+                Some(reply) => {
+                    if let Some(r) = self.admit(reply) {
+                        return Ok(Some(r));
+                    }
+                }
+                None => return Ok(None),
+            }
+        }
+    }
+
+    fn shutdown(&mut self) -> Result<Option<TransportReport>> {
+        // no ensure_connected here: shutdown is cleanup. The "disconnect"
+        // is injected — the inner transport is healthy and must still
+        // deliver Stop to every worker, or the scope join would hang on
+        // workers blocked in recv.
+        self.inner.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn sample_job() -> Job {
+        Job {
+            vid: 3,
+            cid: 7,
+            block: vec![(0, 1), (5, -2), (9, 9)],
+            vertex: Shipment {
+                data: Some(vec![1.5, -0.0, 2.25e-3]),
+                src_version: 4,
+                keep: true,
+            },
+            context: Shipment { data: None, src_version: 9, keep: false },
+            lr: 0.017,
+        }
+    }
+
+    #[test]
+    fn job_msg_roundtrip_bitwise() {
+        let msg = JobMsg::Train(sample_job());
+        let decoded = decode_job_msg(&encode_job_msg(&msg)).unwrap();
+        let JobMsg::Train(job) = decoded else { panic!("wrong variant") };
+        assert_eq!(job.vid, 3);
+        assert_eq!(job.cid, 7);
+        assert_eq!(job.lr.to_bits(), 0.017f32.to_bits());
+        assert_eq!(job.block, vec![(0, 1), (5, -2), (9, 9)]);
+        assert_eq!(bits(job.vertex.data.as_deref().unwrap()), bits(&[1.5, -0.0, 2.25e-3]));
+        assert_eq!(job.vertex.src_version, 4);
+        assert!(job.vertex.keep);
+        assert!(job.context.data.is_none());
+        assert_eq!(job.context.src_version, 9);
+        assert!(!job.context.keep);
+        for msg in [JobMsg::Sync, JobMsg::Stop] {
+            let rt = decode_job_msg(&encode_job_msg(&msg)).unwrap();
+            assert!(matches!(
+                (&msg, &rt),
+                (JobMsg::Sync, JobMsg::Sync) | (JobMsg::Stop, JobMsg::Stop)
+            ));
+        }
+    }
+
+    #[test]
+    fn wire_reply_roundtrip_bitwise() {
+        let reply = WireReply::Reply(Reply::Job(JobResult {
+            vid: 1,
+            cid: 2,
+            vertex: Some(vec![0.5, 1.5]),
+            context: None,
+            block: vec![(7, 7)], // must NOT survive the wire
+            loss: 0.25,
+            trained: 42,
+        }));
+        let rt = decode_wire_reply(&encode_wire_reply(&reply)).unwrap();
+        let WireReply::Reply(Reply::Job(r)) = rt else { panic!("wrong variant") };
+        assert_eq!((r.vid, r.cid, r.trained), (1, 2, 42));
+        assert_eq!(r.loss.to_bits(), 0.25f32.to_bits());
+        assert_eq!(bits(r.vertex.as_deref().unwrap()), bits(&[0.5, 1.5]));
+        assert!(r.context.is_none());
+        assert!(r.block.is_empty(), "block allocation never crosses the wire");
+
+        let synced = WireReply::Reply(Reply::Synced(SyncReply {
+            worker: 1,
+            rng_state: [1, 2, 3, 4],
+            residents: vec![ResidentPart {
+                matrix: Matrix::Context,
+                pid: 3,
+                version: 11,
+                data: vec![9.0, -9.0],
+            }],
+        }));
+        let rt = decode_wire_reply(&encode_wire_reply(&synced)).unwrap();
+        let WireReply::Reply(Reply::Synced(s)) = rt else { panic!("wrong variant") };
+        assert_eq!(s.worker, 1);
+        assert_eq!(s.rng_state, [1, 2, 3, 4]);
+        assert_eq!(s.residents.len(), 1);
+        assert_eq!(s.residents[0].matrix, Matrix::Context);
+        assert_eq!(s.residents[0].version, 11);
+        assert_eq!(bits(&s.residents[0].data), bits(&[9.0, -9.0]));
+
+        let err = WireReply::Err("residency cache over capacity".into());
+        let WireReply::Err(msg) = decode_wire_reply(&encode_wire_reply(&err)).unwrap() else {
+            panic!("wrong variant")
+        };
+        assert_eq!(msg, "residency cache over capacity");
+
+        let bye = WireReply::Bye { received: 100, sent: 200 };
+        let WireReply::Bye { received, sent } =
+            decode_wire_reply(&encode_wire_reply(&bye)).unwrap()
+        else {
+            panic!("wrong variant")
+        };
+        assert_eq!((received, sent), (100, 200));
+    }
+
+    #[test]
+    fn corrupt_messages_fail_loudly() {
+        // truncated frames at several depths
+        let full = encode_job_msg(&JobMsg::Train(sample_job()));
+        for cut in [1, 5, 12, full.len() - 1] {
+            assert!(decode_job_msg(&full[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage
+        let mut msg = encode_job_msg(&JobMsg::Sync);
+        msg.push(0);
+        assert!(decode_job_msg(&msg).is_err());
+        let mut bye = encode_wire_reply(&WireReply::Bye { received: 1, sent: 2 });
+        bye.push(9);
+        assert!(decode_wire_reply(&bye).is_err());
+        // unknown tags / flags / matrix codes
+        assert!(decode_job_msg(&[99]).is_err());
+        assert!(decode_wire_reply(&[99]).is_err());
+        assert!(decode_wire_reply(&[]).is_err());
+        // block length that lies about the payload cannot over-allocate
+        let mut lying = vec![MSG_TRAIN];
+        lying.extend_from_slice(&1u32.to_le_bytes());
+        lying.extend_from_slice(&1u32.to_le_bytes());
+        lying.extend_from_slice(&0.1f32.to_le_bytes());
+        lying.extend_from_slice(&u32::MAX.to_le_bytes()); // "4 billion pairs"
+        assert!(decode_job_msg(&lying).is_err());
+    }
+
+    #[test]
+    fn handshake_roundtrip_and_field_rejection() {
+        decode_hello(&encode_hello()).unwrap();
+        // bad magic
+        let mut hello = encode_hello();
+        hello[0] = b'X';
+        let err = decode_hello(&hello).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        // bad version
+        let mut hello = encode_hello();
+        hello[4..8].copy_from_slice(&999u32.to_le_bytes());
+        let err = decode_hello(&hello).unwrap_err();
+        assert!(err.to_string().contains("protocol v999"), "{err}");
+        // trailing garbage
+        let mut hello = encode_hello();
+        hello.push(0);
+        assert!(decode_hello(&hello).is_err());
+    }
+
+    fn sample_assignment() -> WorkerAssignment {
+        WorkerAssignment {
+            worker_index: 1,
+            num_workers: 2,
+            partitions: 2,
+            dim: 8,
+            batch_size: 32,
+            negatives: 5,
+            capacity: 3,
+            cache_limit: Some(6),
+            seed: 77,
+            neg_weight: 5.0,
+            backend: BackendKind::Native,
+            rng_state: [1, 2, 3, 4],
+            neg_weights: vec![vec![1.0, 2.0], vec![0.5]],
+        }
+    }
+
+    #[test]
+    fn assignment_roundtrip_bitwise() {
+        let a = sample_assignment();
+        let rt = decode_assign(&encode_assign(&a)).unwrap();
+        assert_eq!(rt.worker_index, 1);
+        assert_eq!(rt.num_workers, 2);
+        assert_eq!(rt.partitions, 2);
+        assert_eq!((rt.dim, rt.batch_size, rt.negatives, rt.capacity), (8, 32, 5, 3));
+        assert_eq!(rt.cache_limit, Some(6));
+        assert_eq!(rt.seed, 77);
+        assert_eq!(rt.backend, BackendKind::Native);
+        assert_eq!(rt.rng_state, [1, 2, 3, 4]);
+        assert_eq!(rt.neg_weights.len(), 2);
+        assert_eq!(bits(&rt.neg_weights[0]), bits(&[1.0, 2.0]));
+        // unbounded cache limit uses the sentinel
+        let rt =
+            decode_assign(&encode_assign(&WorkerAssignment { cache_limit: None, ..a })).unwrap();
+        assert_eq!(rt.cache_limit, None);
+    }
+
+    #[test]
+    fn assignment_field_by_field_rejection() {
+        let a = sample_assignment();
+        // worker index out of range
+        let bad = WorkerAssignment { worker_index: 2, ..a.clone() };
+        let err = decode_assign(&encode_assign(&bad)).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // pjrt is rejected for remote workers
+        let bad = WorkerAssignment { backend: BackendKind::Pjrt, ..a.clone() };
+        let err = decode_assign(&encode_assign(&bad)).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        // all-zero rng state
+        let bad = WorkerAssignment { rng_state: [0; 4], ..a.clone() };
+        let err = decode_assign(&encode_assign(&bad)).unwrap_err();
+        assert!(err.to_string().contains("rng"), "{err}");
+        // zero dim
+        let bad = WorkerAssignment { dim: 0, ..a.clone() };
+        assert!(decode_assign(&encode_assign(&bad)).is_err());
+        // reject frame surfaces the coordinator's message
+        let err = decode_assign(&encode_reject("version skew")).unwrap_err();
+        assert!(err.to_string().contains("version skew"), "{err}");
+        // bad magic
+        let mut enc = encode_assign(&a);
+        enc[1] = b'X';
+        let err = decode_assign(&enc).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        // truncated weights
+        let enc = encode_assign(&a);
+        assert!(decode_assign(&enc[..enc.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn ready_roundtrip() {
+        assert_eq!(decode_ready(&encode_ready(None)).unwrap(), None);
+        assert_eq!(
+            decode_ready(&encode_ready(Some("backend 'pjrt' not available"))).unwrap(),
+            Some("backend 'pjrt' not available".into())
+        );
+        assert!(decode_ready(&[7]).is_err());
+    }
+
+    #[test]
+    fn payload_byte_helpers_match() {
+        let job = sample_job();
+        assert_eq!(job_payload_bytes(&job), 12); // 3 f32s, context elided
+        let reply = Reply::Job(JobResult {
+            vid: 0,
+            cid: 0,
+            vertex: Some(vec![0.0; 5]),
+            context: Some(vec![0.0; 2]),
+            block: Vec::new(),
+            loss: 0.0,
+            trained: 0,
+        });
+        assert_eq!(reply_payload_bytes(&reply), 28);
+    }
+}

@@ -33,6 +33,7 @@ use crate::util::rng::{streams, Rng};
 
 /// One partition transfer of a [`Job`] (host side planned by
 /// [`crate::coordinator::transfer::TransferEngine`]).
+#[derive(Debug, Clone)]
 pub struct Shipment {
     /// Gathered padded partition rows, or `None` = train on the resident
     /// copy (residency hit: the upload was elided).
@@ -47,6 +48,7 @@ pub struct Shipment {
 }
 
 /// A block-training job.
+#[derive(Debug, Clone)]
 pub struct Job {
     pub vid: usize,
     pub cid: usize,
@@ -59,6 +61,9 @@ pub struct Job {
     pub lr: f32,
 }
 
+/// Coordinator→worker message (one TCP frame each for the socket
+/// transport; `Clone` exists for transport test doubles).
+#[derive(Debug, Clone)]
 pub enum JobMsg {
     Train(Job),
     /// Fence: reply with clones of all resident partitions (cache kept).
@@ -80,6 +85,7 @@ pub struct ResidentPart {
 /// host→device: the worker verifies them in `resolve`, and a returned
 /// buffer is by construction the partition's newest copy, so results
 /// carry no version.)
+#[derive(Debug, Clone)]
 pub struct JobResult {
     pub vid: usize,
     pub cid: usize,
@@ -101,6 +107,7 @@ pub struct JobResult {
 /// the reply; the RNG state is what checkpoint/resume needs — the worker
 /// streams are the only *stateful* RNGs in the system (they advance per
 /// negative drawn), everything else rederives from `seed` + pool index.
+#[derive(Debug, Clone)]
 pub struct SyncReply {
     pub worker: usize,
     pub rng_state: [u64; 4],
@@ -108,6 +115,7 @@ pub struct SyncReply {
 }
 
 /// Everything a worker sends back on the shared result channel.
+#[derive(Debug, Clone)]
 pub enum Reply {
     Job(JobResult),
     Synced(SyncReply),
@@ -243,44 +251,94 @@ fn worker_loop(
     artifact: Option<ArtifactMeta>,
     neg: Arc<NegativeSampler>,
     counters: Arc<Counters>,
-    mut rng: Rng,
+    rng: Rng,
     rx: mpsc::Receiver<JobMsg>,
     tx: ResultTx,
 ) -> Result<()> {
-    // Backend construction happens on this thread: PJRT handles are !Send,
-    // one client per simulated GPU (like one CUDA context per device).
-    let mut backend = create_backend(&cfg, artifact.as_ref())?;
-
-    // partitions pinned to this worker by the coordinator's keep flags,
-    // capped at 2 × capacity when the config declares worker capacities
-    let mut cache = ResidencyCache::new(cache_limit);
-    // reusable chunk scratch (avoids 3 Vec allocations per chunk)
-    let mut scratch = ChunkPlan::default();
-
+    let mut core =
+        WorkerCore::new(worker_idx, &cfg, cache_limit, artifact.as_ref(), neg, counters, rng)?;
     while let Ok(msg) = rx.recv() {
-        let reply = match msg {
-            JobMsg::Train(job) => run_job(
-                backend.as_mut(),
-                &neg,
-                &counters,
-                &mut rng,
-                &mut cache,
-                &mut scratch,
-                job,
-            )
-            .map(Reply::Job),
-            JobMsg::Sync => Ok(Reply::Synced(SyncReply {
-                worker: worker_idx,
-                rng_state: rng.state(),
-                residents: cache.snapshot(),
-            })),
-            JobMsg::Stop => break,
-        };
-        if tx.send(reply).is_err() {
-            break; // coordinator gone
+        match core.handle(msg) {
+            Some(reply) => {
+                if tx.send(reply).is_err() {
+                    break; // coordinator gone
+                }
+            }
+            None => break, // Stop
         }
     }
     Ok(())
+}
+
+/// The device-side half of the protocol, shared verbatim by in-process
+/// worker threads ([`spawn_workers`]) and the remote worker runtime
+/// (`graphvite worker`, [`crate::coordinator::transport::run_worker`]).
+/// Holding the backend, residency cache, negative sampler and RNG in one
+/// place is what makes local and socket runs bitwise-identical: both
+/// paths execute exactly this code per message.
+pub(crate) struct WorkerCore {
+    worker_idx: usize,
+    backend: Box<dyn Backend>,
+    neg: Arc<NegativeSampler>,
+    counters: Arc<Counters>,
+    rng: Rng,
+    // partitions pinned to this worker by the coordinator's keep flags,
+    // capped at 2 × capacity when the config declares worker capacities
+    cache: ResidencyCache,
+    // reusable chunk scratch (avoids 3 Vec allocations per chunk)
+    scratch: ChunkPlan,
+}
+
+impl WorkerCore {
+    /// Build the device state. `cfg.batch_size` must already be scaled by
+    /// this worker's capacity (the callers do it; remote workers receive
+    /// their capacity in the handshake). Backend construction happens on
+    /// the calling thread: PJRT handles are !Send, one client per
+    /// simulated GPU (like one CUDA context per device).
+    pub(crate) fn new(
+        worker_idx: usize,
+        cfg: &TrainConfig,
+        cache_limit: Option<usize>,
+        artifact: Option<&ArtifactMeta>,
+        neg: Arc<NegativeSampler>,
+        counters: Arc<Counters>,
+        rng: Rng,
+    ) -> Result<Self> {
+        let backend = create_backend(cfg, artifact)?;
+        Ok(WorkerCore {
+            worker_idx,
+            backend,
+            neg,
+            counters,
+            rng,
+            cache: ResidencyCache::new(cache_limit),
+            scratch: ChunkPlan::default(),
+        })
+    }
+
+    /// Handle one message; `None` means Stop (the caller exits its loop).
+    pub(crate) fn handle(&mut self, msg: JobMsg) -> Option<Result<Reply>> {
+        match msg {
+            JobMsg::Train(job) => Some(
+                run_job(
+                    self.backend.as_mut(),
+                    &self.neg,
+                    &self.counters,
+                    &mut self.rng,
+                    &mut self.cache,
+                    &mut self.scratch,
+                    job,
+                )
+                .map(Reply::Job),
+            ),
+            JobMsg::Sync => Some(Ok(Reply::Synced(SyncReply {
+                worker: self.worker_idx,
+                rng_state: self.rng.state(),
+                residents: self.cache.snapshot(),
+            }))),
+            JobMsg::Stop => None,
+        }
+    }
 }
 
 /// Resolve a [`Shipment`] to the buffer the backend trains on, returning
@@ -383,7 +441,9 @@ fn run_job(
         }
         if chunks > 0 { (loss_sum / chunks as f64) as f32 } else { 0.0 }
     };
-    counters.add(&counters.samples_trained, trained);
+    // `samples_trained` is counted by the coordinator when it absorbs the
+    // result (from `JobResult::trained`), so the ledger is identical
+    // whether this worker shares the process or sits behind a socket.
 
     let vertex_out = stash(cache, Matrix::Vertex, vid, v_version, vbuf, keep_v)?;
     let context_out = stash(cache, Matrix::Context, cid, c_version, cbuf, keep_c)?;

@@ -50,11 +50,13 @@
 //! record that decodes to the wrong length (corrupt page) or an I/O
 //! error panics — never train on garbage.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::fs::File;
 use std::io::{Read, Write};
 use std::os::unix::fs::FileExt;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure, Context, Result};
@@ -366,6 +368,9 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Reads served lock-free from a thread's page cursor (these never
+    /// touch the LRU, so they are counted separately from `hits`).
+    pub cursor_hits: u64,
     /// Bytes of page data currently cached (≤ `budget_bytes`, except
     /// when a single page exceeds the budget — one page is always
     /// admitted).
@@ -378,7 +383,13 @@ const NIL: usize = usize::MAX;
 
 struct Slot {
     page: u64,
-    data: Vec<u8>,
+    /// Page bytes behind an `Arc` so thread cursors can hold a page
+    /// lock-free after its slot is evicted. `ensure` recycles a slot's
+    /// buffer with [`Arc::make_mut`]: unshared buffers are reused in
+    /// place, while a buffer some cursor still references is left
+    /// untouched (the cursor keeps the old page's bytes) and the slot
+    /// gets a fresh allocation.
+    data: Arc<Vec<u8>>,
     prev: usize,
     next: usize,
 }
@@ -469,13 +480,20 @@ impl PageCache {
         let i = match self.free.pop() {
             Some(i) => i,
             None => {
-                self.slots.push(Slot { page: 0, data: Vec::new(), prev: NIL, next: NIL });
+                self.slots.push(Slot { page: 0, data: Arc::new(Vec::new()), prev: NIL, next: NIL });
                 self.slots.len() - 1
             }
         };
         self.slots[i].page = page;
-        self.slots[i].data.resize(len, 0);
-        if let Err(e) = io.read_page(page, &mut self.slots[i].data) {
+        // reuse the buffer when unshared; when a thread cursor still holds
+        // the evicted page it contains, leave that allocation to the
+        // cursor and start fresh (make_mut would clone the stale bytes)
+        if Arc::get_mut(&mut self.slots[i].data).is_none() {
+            self.slots[i].data = Arc::new(Vec::new());
+        }
+        let buf = Arc::make_mut(&mut self.slots[i].data);
+        buf.resize(len, 0);
+        if let Err(e) = io.read_page(page, buf) {
             self.free.push(i);
             return Err(e);
         }
@@ -511,13 +529,19 @@ impl PageIo<'_> {
 /// Out-of-core CSR reader over a packed file: O(V) resident scalars, the
 /// O(E) successor payload streamed through a byte-bounded LRU page cache.
 ///
-/// Thread-safe (`GraphStore: Send + Sync`): the cache sits behind one
-/// mutex, held only for the page lookup + record copy of each access.
-/// Sampler threads therefore serialize on page fetches — acceptable for
-/// the streaming regime this targets; per-thread cursors are the next
-/// step if the lock ever shows up in profiles (see ARCHITECTURE.md).
+/// Thread-safe (`GraphStore: Send + Sync`): the shared cache sits behind
+/// one mutex, but each thread also keeps a lock-free *cursor* — an `Arc`
+/// to the last page it read. Sampler threads walk successor lists in
+/// node order, so consecutive reads overwhelmingly land on the cursor
+/// page and never touch the lock; the mutex is only taken on a page
+/// change (and for boundary-straddling records). Page bytes are
+/// immutable after load, so a cursor that outlives its slot's eviction
+/// still reads correct data (see [`Slot::data`] for the recycling rule).
 pub struct PagedCsr {
     file: File,
+    /// Distinguishes this store's pages in the thread-local cursor (two
+    /// open stores must never serve each other's pages).
+    store_id: u64,
     page_size: usize,
     pages_pos: u64,
     pages_len: u64,
@@ -528,6 +552,19 @@ pub struct PagedCsr {
     wdegrees: Vec<f32>,
     labels: Option<Vec<u16>>,
     cache: Mutex<PageCache>,
+    cursor_hits: AtomicU64,
+}
+
+/// Store-id allocator for [`PagedCsr::store_id`]. Starts at 1 so 0 can
+/// never match (an empty cursor is `None`, but belt and braces).
+static NEXT_STORE_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// The calling thread's page cursor: `(store_id, page, bytes)` of the
+    /// last single-page record it read. One entry is enough — samplers
+    /// stream nodes in order, so the win is consecutive records on one
+    /// page, not a working set.
+    static PAGE_CURSOR: RefCell<Option<(u64, u64, Arc<Vec<u8>>)>> = const { RefCell::new(None) };
 }
 
 impl PagedCsr {
@@ -659,6 +696,7 @@ impl PagedCsr {
         let budget = cache_bytes.max(page_size as usize);
         Ok(PagedCsr {
             file,
+            store_id: NEXT_STORE_ID.fetch_add(1, Ordering::Relaxed),
             page_size: page_size as usize,
             pages_pos,
             pages_len,
@@ -669,6 +707,7 @@ impl PagedCsr {
             wdegrees,
             labels,
             cache: Mutex::new(PageCache::new(budget)),
+            cursor_hits: AtomicU64::new(0),
         })
     }
 
@@ -679,6 +718,7 @@ impl PagedCsr {
             hits: c.hits,
             misses: c.misses,
             evictions: c.evictions,
+            cursor_hits: self.cursor_hits.load(Ordering::Relaxed),
             resident_bytes: c.bytes,
             budget_bytes: c.budget,
             page_size: self.page_size,
@@ -701,13 +741,36 @@ impl PagedCsr {
         };
         let first_page = start / ps;
         let last_page = (end - 1) / ps;
-        let mut cache = self.cache.lock().unwrap();
         if first_page == last_page {
-            let i = cache.ensure(first_page, &io)?;
             let lo = (start - first_page * ps) as usize;
             let hi = (end - first_page * ps) as usize;
-            f(&cache.slots[i].data[lo..hi])
+            // lock-free fast path: the record lives on the page this
+            // thread read last time
+            let held = PAGE_CURSOR.with(|c| match &*c.borrow() {
+                Some((sid, page, data)) if *sid == self.store_id && *page == first_page => {
+                    Some(Arc::clone(data))
+                }
+                _ => None,
+            });
+            let data = match held {
+                Some(data) => {
+                    self.cursor_hits.fetch_add(1, Ordering::Relaxed);
+                    data
+                }
+                None => {
+                    let mut cache = self.cache.lock().unwrap();
+                    let i = cache.ensure(first_page, &io)?;
+                    let data = Arc::clone(&cache.slots[i].data);
+                    drop(cache);
+                    PAGE_CURSOR.with(|c| {
+                        *c.borrow_mut() = Some((self.store_id, first_page, Arc::clone(&data)));
+                    });
+                    data
+                }
+            };
+            f(&data[lo..hi])
         } else {
+            let mut cache = self.cache.lock().unwrap();
             let mut buf = std::mem::take(&mut cache.span_buf);
             buf.clear();
             for page in first_page..=last_page {
@@ -958,7 +1021,7 @@ mod tests {
     }
 
     #[test]
-    fn cache_hits_on_rescan() {
+    fn cursor_serves_rescan_without_touching_the_cache() {
         let g = generators::karate_club();
         let path = tmp("hits.gvpk");
         pack_graph(&g, &path, &PackOptions::default()).unwrap();
@@ -969,7 +1032,29 @@ mod tests {
         p.successors_into(1, &mut t);
         let warm = p.cache_stats();
         assert_eq!(warm.misses, cold.misses, "second read within the same page");
-        assert!(warm.hits > cold.hits);
+        // same page again → served by this thread's cursor, lock-free
+        assert_eq!(warm.hits, cold.hits);
+        assert!(warm.cursor_hits > cold.cursor_hits);
+    }
+
+    #[test]
+    fn cursors_do_not_leak_across_stores() {
+        // two stores open at once: the thread cursor must key on the
+        // store id, or store B would read store A's page bytes
+        let ga = generators::karate_club();
+        let gb = generators::barabasi_albert(100, 3, 9);
+        let (pa, pb) = (tmp("cur_a.gvpk"), tmp("cur_b.gvpk"));
+        pack_graph(&ga, &pa, &PackOptions::default()).unwrap();
+        pack_graph(&gb, &pb, &PackOptions::default()).unwrap();
+        let a = PagedCsr::open(&pa, DEFAULT_CACHE_BYTES).unwrap();
+        let b = PagedCsr::open(&pb, DEFAULT_CACHE_BYTES).unwrap();
+        let mut t = Vec::new();
+        for v in 0..34u32 {
+            a.successors_into(v, &mut t);
+            assert_eq!(t, ga.neighbors(v), "store A node {v}");
+            b.successors_into(v, &mut t);
+            assert_eq!(t, gb.neighbors(v), "store B node {v}");
+        }
     }
 
     #[test]

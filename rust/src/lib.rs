@@ -55,6 +55,7 @@ pub mod experiments;
 pub mod gpu;
 pub mod graph;
 pub mod metrics;
+pub mod net;
 pub mod partition;
 pub mod pool;
 pub mod runtime;

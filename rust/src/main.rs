@@ -10,6 +10,8 @@
 //! * `generate`   — write a synthetic benchmark graph to an edge list.
 //! * `eval`       — evaluate saved embeddings (node classification or
 //!                  link prediction).
+//! * `worker`     — host training workers in this process and serve a
+//!                  remote coordinator (`train --transport tcp://...`).
 //! * `exp`        — regenerate a paper table/figure (table1..table8,
 //!                  fig4..fig6, or `all`).
 //! * `stats`      — print graph statistics and the Table-1 memory model
@@ -23,8 +25,10 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use graphvite::cli::Args;
-use graphvite::config::{BackendKind, TrainConfig};
-use graphvite::coordinator::{load_checkpoint, save_checkpoint, CheckpointState, TrainFlow, Trainer};
+use graphvite::config::{BackendKind, TrainConfig, WorkerMode};
+use graphvite::coordinator::{
+    load_checkpoint, save_checkpoint, transport, CheckpointState, TrainFlow, Trainer,
+};
 use graphvite::embedding::{self, EmbeddingStore, OutputFormat};
 use graphvite::eval;
 use graphvite::experiments::{self, Scale};
@@ -63,6 +67,7 @@ fn run(args: &Args) -> Result<()> {
         "generate" => cmd_generate(args),
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
+        "worker" => cmd_worker(args),
         "exp" => cmd_exp(args),
         "stats" => cmd_stats(args),
         "artifacts" => cmd_artifacts(),
@@ -88,6 +93,8 @@ USAGE:
   graphvite generate --kind K [options]     write a synthetic graph
   graphvite eval TASK [options]             evaluate saved embeddings
   graphvite serve EMB [options]             serve top-k queries over TCP
+  graphvite worker --connect HOST:PORT      host a training worker for a
+                                            remote coordinator
   graphvite exp NAME [--scale S]            regenerate a paper table/figure
   graphvite stats [GRAPH] [options]         graph stats + memory model
   graphvite artifacts                       list loadable AOT artifacts
@@ -115,6 +122,11 @@ TRAIN OPTIONS (defaults follow paper section 4.3):
                         (packed graphs train out-of-core)   [auto]
   --graph-cache-bytes N page-cache budget for packed graphs [64 MiB]
   --lr X, --negatives K, --neg-weight W, --seed N, --batch-size B
+  --transport MODE      local | tcp://HOST:PORT — where workers live.
+                        tcp listens on HOST:PORT and waits for one
+                        `graphvite worker --connect` per worker  [local]
+  --worker-timeout-secs N  fail if a remote worker goes silent for N
+                        seconds mid-training (0 = wait forever)     [0]
   --no-collaboration    disable the double-buffered pools
   --no-augmentation     plain edge sampling instead of online augmentation
   --no-fix-context      re-transfer context partitions every episode
@@ -144,6 +156,10 @@ GENERATE OPTIONS:
 EVAL TASKS:
   classify  --embeddings F --graph G [--train-frac X] [--seed N]
   linkpred  --embeddings F --graph G [--holdout X] [--seed N]
+
+WORKER OPTIONS (multi-process training; see --transport):
+  --connect HOST:PORT   coordinator address (required)
+  --connect-timeout-secs N  give up connecting after N seconds      [30]
 
 SERVE OPTIONS (batched top-k over length-prefixed TCP frames):
   --addr HOST:PORT      bind address                  [127.0.0.1:7654]
@@ -237,6 +253,10 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
         cfg.shuffle =
             ShuffleKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown shuffle '{s}'"))?;
     }
+    if let Some(s) = args.get("transport") {
+        cfg.worker_mode = WorkerMode::parse(s).map_err(|e| anyhow::anyhow!("--transport: {e}"))?;
+    }
+    cfg.worker_timeout_secs = args.get_parse("worker-timeout-secs", cfg.worker_timeout_secs)?;
     if let Some(s) = args.get("backend") {
         cfg.backend = BackendKind::parse(s).ok_or_else(|| {
             anyhow::anyhow!(
@@ -356,18 +376,28 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.counters.residency_hits,
         human_bytes(s.counters.bytes_saved)
     );
+    if let Some(r) = trainer.transport_report() {
+        // the transport-smoke CI job greps this line into its artifact
+        eprintln!(
+            "transport: {} remote workers, {} up, {} down (ledger asserted both sides)",
+            r.workers,
+            human_bytes(r.bytes_up),
+            human_bytes(r.bytes_down)
+        );
+    }
     if let Some(paged) = loaded.paged() {
         // the ondisk-smoke CI job greps this line into its artifact
         let c = paged.cache_stats();
         eprintln!(
             "page-cache: {} hits, {} misses, {} evictions ({} resident of {} budget, \
-             {} pages)",
+             {} pages), {} lock-free cursor hits",
             c.hits,
             c.misses,
             c.evictions,
             human_bytes(c.resident_bytes as u64),
             human_bytes(c.budget_bytes as u64),
-            human_bytes(c.page_size as u64)
+            human_bytes(c.page_size as u64),
+            c.cursor_hits
         );
     }
 
@@ -375,6 +405,26 @@ fn cmd_train(args: &Args) -> Result<()> {
         embedding::save_embeddings(&result.embeddings, out, fmt)?;
         eprintln!("embeddings saved to {out} ({} format)", fmt.name());
     }
+    Ok(())
+}
+
+// --------------------------------------------------------------- worker --
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .or_else(|| args.positional.first().map(String::as_str))
+        .ok_or_else(|| anyhow::anyhow!("worker needs --connect HOST:PORT (the coordinator)"))?;
+    let timeout = args.get_parse("connect-timeout-secs", 30u64)?;
+    let summary = transport::run_worker(addr, std::time::Duration::from_secs(timeout))?;
+    // the transport-smoke CI job greps this line from each worker log
+    eprintln!(
+        "worker: slot {} done, {} jobs, {} received, {} sent",
+        summary.worker_index,
+        summary.jobs,
+        human_bytes(summary.bytes_received),
+        human_bytes(summary.bytes_sent)
+    );
     Ok(())
 }
 

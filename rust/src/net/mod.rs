@@ -1,0 +1,205 @@
+//! Length-prefixed TCP framing shared by every wire surface of the
+//! binary (`graphvite serve` and the coordinator↔worker transport).
+//!
+//! Every message is one *frame*: a `u32` little-endian payload length
+//! followed by the payload. Payloads are flat little-endian structs — no
+//! self-describing encoding — so every decoder bounds-checks against its
+//! declared limits *and* the actual payload length before allocating
+//! (the same fail-loud discipline as the file loaders: a hostile length
+//! field must produce `Err`, never an over-allocation, and a decoded
+//! message must consume its whole payload).
+//!
+//! Two frame caps cover the two traffic classes:
+//! * [`MAX_CONTROL_FRAME`] — handshakes and other small control
+//!   messages. A peer that has not authenticated itself as a worker yet
+//!   can never make us allocate more than this.
+//! * [`MAX_DATA_FRAME`] — partition shipments and results, which carry
+//!   whole padded partitions of f32 rows.
+//!
+//! `graphvite serve` keeps its own historical cap
+//! ([`crate::serve::protocol::MAX_FRAME`]) and delegates to the generic
+//! reader/writer here.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+/// Frame cap for handshake/control messages (1 MiB): an unauthenticated
+/// peer cannot make either side allocate more than this.
+pub const MAX_CONTROL_FRAME: usize = 1 << 20;
+
+/// Frame cap for data messages (1 GiB): bounds one shipped partition
+/// (padded rows × dim × 4 bytes) with room to spare.
+pub const MAX_DATA_FRAME: usize = 1 << 30;
+
+/// Write one frame (length prefix + payload), bounded by `cap`.
+pub fn write_frame(w: &mut impl Write, payload: &[u8], cap: usize) -> Result<()> {
+    if payload.len() > cap {
+        bail!("frame payload {} exceeds cap {cap}", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame bounded by `cap`; `Ok(None)` on clean EOF at a frame
+/// boundary. A declared length past the cap is rejected *before* any
+/// allocation.
+pub fn read_frame(r: &mut impl Read, cap: usize) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > cap {
+        bail!("peer declared a {len}-byte frame (cap {cap})");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// Bounds-checked little-endian reader over a payload slice. Decoders
+/// call [`Self::finish`] last so trailing garbage is rejected, and
+/// [`Self::expect_remaining`] before any length-driven allocation.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, at: 0 }
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.at < n {
+            bail!("message truncated: wanted {n} more bytes, have {}", self.buf.len() - self.at);
+        }
+        let out = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    /// Require exactly-`n`-more bytes *without* consuming them (the
+    /// pre-allocation guard for variable-length sections).
+    pub fn expect_remaining(&self, n: usize) -> Result<()> {
+        let have = self.buf.len() - self.at;
+        if have < n {
+            bail!("message truncated: section needs {n} bytes, have {have}");
+        }
+        Ok(())
+    }
+
+    /// Reject trailing garbage — a decoded message must consume its
+    /// whole payload.
+    pub fn finish(self) -> Result<()> {
+        if self.at != self.buf.len() {
+            bail!("{} trailing bytes after message", self.buf.len() - self.at);
+        }
+        Ok(())
+    }
+}
+
+/// Append `xs` as a `u32` length prefix plus raw little-endian f32s.
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Decode a [`put_f32s`] section into `out` (cleared first; the existing
+/// allocation is reused). Exact-length checked before reserving.
+pub fn get_f32s(c: &mut Cursor<'_>, out: &mut Vec<f32>) -> Result<()> {
+    let n = c.u32()? as usize;
+    c.expect_remaining(n * 4)?;
+    out.clear();
+    out.reserve(n);
+    for _ in 0..n {
+        out.push(c.f32()?);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_eof_and_caps() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abc", MAX_CONTROL_FRAME).unwrap();
+        write_frame(&mut buf, b"", MAX_CONTROL_FRAME).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r, MAX_CONTROL_FRAME).unwrap().unwrap(), b"abc");
+        assert_eq!(read_frame(&mut r, MAX_CONTROL_FRAME).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r, MAX_CONTROL_FRAME).unwrap().is_none(), "clean EOF");
+        // a declared length past the cap is rejected before allocation
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_frame(&mut &huge[..], MAX_DATA_FRAME).is_err());
+        // the writer enforces the same cap
+        assert!(write_frame(&mut Vec::new(), &[0u8; 8], 4).is_err());
+        // a frame legal under one cap is rejected under a smaller one
+        let mut mid = Vec::new();
+        write_frame(&mut mid, &[7u8; 64], MAX_DATA_FRAME).unwrap();
+        assert!(read_frame(&mut &mid[..], 16).is_err());
+    }
+
+    #[test]
+    fn cursor_bounds_and_trailing_garbage() {
+        let mut c = Cursor::new(&[1, 0, 0, 0, 9]);
+        assert_eq!(c.u32().unwrap(), 1);
+        assert!(c.expect_remaining(2).is_err());
+        assert_eq!(c.u8().unwrap(), 9);
+        assert!(c.u8().is_err(), "reading past the end fails");
+        let c = Cursor::new(&[1, 2]);
+        assert!(c.finish().is_err(), "unconsumed bytes are rejected");
+    }
+
+    #[test]
+    fn f32_sections_roundtrip_bitwise() {
+        let xs = [1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e7];
+        let mut buf = Vec::new();
+        put_f32s(&mut buf, &xs);
+        let mut c = Cursor::new(&buf);
+        let mut out = Vec::new();
+        get_f32s(&mut c, &mut out).unwrap();
+        c.finish().unwrap();
+        assert_eq!(
+            out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // truncated section cannot over-allocate
+        let mut c = Cursor::new(&buf[..buf.len() - 2]);
+        assert!(get_f32s(&mut c, &mut out).is_err());
+    }
+}

@@ -27,17 +27,33 @@ impl NegativeSampler {
     /// Weighted degrees are resident for every [`GraphStore`], so this
     /// never touches an out-of-core store's successor pages.
     pub fn new(graph: &dyn GraphStore, partitioning: &Partitioning) -> Self {
-        let tables = (0..partitioning.num_parts())
+        Self::from_weights(&Self::partition_weights(graph, partitioning))
+    }
+
+    /// The per-partition deg^0.75 weights [`Self::new`] builds its tables
+    /// from, in local-row order. The socket transport ships these f32s
+    /// bit-exactly in the worker handshake so a remote worker (which has
+    /// no graph) reconstructs the *identical* alias tables —
+    /// [`AliasTable::new`] is deterministic in its input bits.
+    pub fn partition_weights(
+        graph: &dyn GraphStore,
+        partitioning: &Partitioning,
+    ) -> Vec<Vec<f32>> {
+        (0..partitioning.num_parts())
             .map(|p| {
-                let weights: Vec<f32> = partitioning
+                partitioning
                     .nodes_of_part(p)
                     .iter()
                     .map(|&v| graph.weighted_degree(v).max(1e-12).powf(NEG_POWER))
-                    .collect();
-                AliasTable::new(&weights)
+                    .collect()
             })
-            .collect();
-        NegativeSampler { tables }
+            .collect()
+    }
+
+    /// Build directly from per-partition weight vectors (the remote-worker
+    /// path; see [`Self::partition_weights`]).
+    pub fn from_weights(weights: &[Vec<f32>]) -> Self {
+        NegativeSampler { tables: weights.iter().map(|w| AliasTable::new(w)).collect() }
     }
 
     /// Draw one negative as a local row index within partition `part`.

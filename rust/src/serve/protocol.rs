@@ -1,7 +1,8 @@
 //! Wire protocol for `graphvite serve`: length-prefixed frames over TCP.
 //!
 //! Every message is one frame: a `u32` little-endian payload length
-//! followed by the payload. Payloads are flat little-endian structs —
+//! followed by the payload (framing shared with the training transport
+//! via [`crate::net`]). Payloads are flat little-endian structs —
 //! no self-describing encoding, so every decode path bounds-checks
 //! against the declared limits *and* the actual payload length before
 //! allocating (the same fail-loud discipline as the file loaders: a
@@ -20,6 +21,8 @@
 use std::io::{Read, Write};
 
 use anyhow::{bail, Result};
+
+use crate::net::{self, Cursor};
 
 /// Frame payload cap: a full response for `MAX_QUERIES × MAX_K` results
 /// fits well under this, and no handshake can make a peer allocate more.
@@ -53,32 +56,14 @@ pub enum Response {
     Error(String),
 }
 
-/// Write one frame (length prefix + payload).
+/// Write one frame (length prefix + payload) under this protocol's cap.
 pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
-    if payload.len() > MAX_FRAME {
-        bail!("frame payload {} exceeds cap {MAX_FRAME}", payload.len());
-    }
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(payload)?;
-    w.flush()?;
-    Ok(())
+    net::write_frame(w, payload, MAX_FRAME)
 }
 
 /// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
 pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
-    let mut len_buf = [0u8; 4];
-    match r.read_exact(&mut len_buf) {
-        Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(e.into()),
-    }
-    let len = u32::from_le_bytes(len_buf) as usize;
-    if len > MAX_FRAME {
-        bail!("peer declared a {len}-byte frame (cap {MAX_FRAME})");
-    }
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload)?;
-    Ok(Some(payload))
+    net::read_frame(r, MAX_FRAME)
 }
 
 pub fn encode_request(req: &Request) -> Vec<u8> {
@@ -202,62 +187,6 @@ pub fn decode_response(payload: &[u8], topk: bool) -> Result<Response> {
     };
     c.finish()?;
     Ok(resp)
-}
-
-/// Bounds-checked little-endian reader over a payload slice.
-struct Cursor<'a> {
-    buf: &'a [u8],
-    at: usize,
-}
-
-impl<'a> Cursor<'a> {
-    fn new(buf: &'a [u8]) -> Self {
-        Cursor { buf, at: 0 }
-    }
-
-    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.buf.len() - self.at < n {
-            bail!("message truncated: wanted {n} more bytes, have {}", self.buf.len() - self.at);
-        }
-        let out = &self.buf[self.at..self.at + n];
-        self.at += n;
-        Ok(out)
-    }
-
-    fn u8(&mut self) -> Result<u8> {
-        Ok(self.bytes(1)?[0])
-    }
-
-    fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
-    }
-
-    /// Require exactly-`n`-more bytes *without* consuming them (the
-    /// pre-allocation guard for variable-length sections).
-    fn expect_remaining(&self, n: usize) -> Result<()> {
-        let have = self.buf.len() - self.at;
-        if have < n {
-            bail!("message truncated: section needs {n} bytes, have {have}");
-        }
-        Ok(())
-    }
-
-    /// Reject trailing garbage — a decoded message must consume its
-    /// whole payload.
-    fn finish(self) -> Result<()> {
-        if self.at != self.buf.len() {
-            bail!("{} trailing bytes after message", self.buf.len() - self.at);
-        }
-        Ok(())
-    }
 }
 
 #[cfg(test)]

@@ -286,6 +286,49 @@ fn packed_training_matches_on_weighted_graphs_too() {
 }
 
 #[test]
+fn concurrent_readers_agree_with_ram_under_eviction_pressure() {
+    // the per-thread page-cursor fast path: many threads scan the same
+    // tiny-budget store at once, each from a different starting offset so
+    // their cursors chase different pages while the LRU recycles slots
+    // underneath them. Every observation must still match the in-RAM
+    // graph bit-for-bit — a cursor serving stale or recycled page bytes
+    // would show up here as a wrong successor list.
+    let g = Arc::new(generators::barabasi_albert(500, 4, 21));
+    let path = tmp("concurrent.gvpk");
+    graph::pack_graph(&g, &path, &PackOptions { page_size: 64 }).unwrap();
+    // 4 resident pages: constant eviction + slot recycling
+    let p = Arc::new(PagedCsr::open(&path, 64 * 4).unwrap());
+
+    let n = g.num_nodes() as u32;
+    std::thread::scope(|scope| {
+        for t in 0..8u32 {
+            let (g, p) = (Arc::clone(&g), Arc::clone(&p));
+            scope.spawn(move || {
+                let (mut tg, mut w) = (Vec::new(), Vec::new());
+                for round in 0..3u32 {
+                    for i in 0..n {
+                        // stagger the scans so threads disagree on pages
+                        let v = (i + t * 61 + round * 17) % n;
+                        p.successors_into(v, &mut tg);
+                        assert_eq!(tg, g.neighbors(v), "thread {t} round {round} node {v}");
+                        p.neighborhood_into(v, &mut tg, &mut w);
+                        let got: Vec<u32> = w.iter().map(|x| x.to_bits()).collect();
+                        let want: Vec<u32> =
+                            g.neighbor_weights(v).iter().map(|x| x.to_bits()).collect();
+                        assert_eq!(got, want, "thread {t} round {round} node {v} weights");
+                    }
+                }
+            });
+        }
+    });
+
+    let s = p.cache_stats();
+    assert!(s.evictions > 0, "a 4-page budget must evict: {s:?}");
+    assert!(s.cursor_hits > 0, "sequential scans must hit the thread cursors: {s:?}");
+    assert!(s.resident_bytes <= s.budget_bytes, "cache over budget: {s:?}");
+}
+
+#[test]
 fn partitioner_and_negative_sampler_agree_across_stores() {
     // the other two consumers of the GraphStore seam: identical
     // partitionings and identical negative-sampler tables (byte-level

@@ -1,0 +1,374 @@
+//! Transport-seam suite — the PR's headline acceptance assertions:
+//!
+//! 1. **Equivalence.** Training over the loopback socket transport
+//!    (real `run_worker` processes-in-threads, real TCP frames, real
+//!    handshake) is **bitwise-identical** to the in-process local
+//!    transport: same embeddings, same coordinator-side counters, in
+//!    pipelined and serial dispatch, homogeneous and heterogeneous
+//!    capacities. The episode planner never changes — only delivery.
+//! 2. **Ledger.** The payload bytes each side counted crossing the wire
+//!    agree connection-by-connection (worker BYE vs. coordinator
+//!    counters) and in aggregate with the transfer engine's
+//!    `bytes_to_device` / `bytes_from_device`.
+//! 3. **Fail loud.** Injected faults (drops, duplicates, reorders,
+//!    disconnects — deterministic, seeded, via [`FlakyTransport`]) turn
+//!    into pointed errors or bitwise-unchanged runs, never hangs or
+//!    silent corruption; a checkpointed run interrupted by a fault
+//!    resumes to the exact bytes of the uninterrupted run.
+//! 4. **Hostile peers.** Garbage handshakes are rejected without
+//!    disturbing the run; a worker dialing a hostile coordinator gets a
+//!    pointed error, never a panic.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use graphvite::config::{BackendKind, TrainConfig, WorkerMode};
+use graphvite::coordinator::transport::{
+    encode_reject, run_worker, FaultPlan, FlakyTransport, WorkerSummary,
+};
+use graphvite::coordinator::{
+    load_checkpoint, save_checkpoint, CheckpointState, TrainFlow, TrainResult, Trainer,
+    TransportReport,
+};
+use graphvite::graph::{generators, Graph};
+use graphvite::net;
+use graphvite::pool::ShuffleKind;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("graphvite_transport_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Deterministic test graph; regenerated wherever a fresh copy is needed
+/// (same seed, same bytes).
+fn graph() -> Graph {
+    generators::barabasi_albert(300, 3, 5)
+}
+
+fn cfg(seed: u64) -> TrainConfig {
+    TrainConfig {
+        dim: 8,
+        epochs: 4,
+        num_workers: 2,
+        num_samplers: 2,
+        episode_size: 500,
+        batch_size: 64,
+        backend: BackendKind::test_backend(),
+        shuffle: ShuffleKind::Pseudo,
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+/// The socket transport cannot host the pjrt backend (HLO artifacts are
+/// host-local); when CI's backend matrix pins pjrt, the tcp legs skip.
+fn tcp_capable() -> bool {
+    BackendKind::test_backend() != BackendKind::Pjrt
+}
+
+/// Run `cfg` over a loopback socket: bind an ephemeral listener, host
+/// every worker in its own thread via the *real* `graphvite worker`
+/// body ([`run_worker`] — TCP frames, handshake, BYE ledger and all),
+/// and train. Returns the result, the verified wire ledger and each
+/// worker's own summary.
+fn tcp_run(base: TrainConfig) -> (TrainResult, TransportReport, Vec<WorkerSummary>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let n = base.num_workers;
+    let cfg = TrainConfig { worker_mode: WorkerMode::Tcp(addr.clone()), ..base };
+    let mut trainer = Trainer::new(graph(), cfg).unwrap();
+    trainer.set_worker_listener(listener);
+    let workers: Vec<_> = (0..n)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_worker(&addr, Duration::from_secs(30)))
+        })
+        .collect();
+    let result = trainer.train().unwrap();
+    let report = trainer.transport_report().expect("tcp run must produce a wire ledger");
+    let summaries: Vec<WorkerSummary> =
+        workers.into_iter().map(|h| h.join().unwrap().unwrap()).collect();
+    (result, report, summaries)
+}
+
+/// Bitwise equivalence of two runs: embeddings and every
+/// coordinator-side counter. Device-local counters (`device_steps`,
+/// `device_nanos`) are excluded — remote workers keep those in their own
+/// process — as are wall-clock timings.
+fn assert_equivalent(local: &TrainResult, other: &TrainResult, tag: &str) {
+    assert_eq!(
+        local.embeddings.vertex_matrix(),
+        other.embeddings.vertex_matrix(),
+        "{tag}: vertex matrices diverged"
+    );
+    assert_eq!(
+        local.embeddings.context_matrix(),
+        other.embeddings.context_matrix(),
+        "{tag}: context matrices diverged"
+    );
+    let (a, b) = (&local.stats.counters, &other.stats.counters);
+    assert_eq!(a.samples_generated, b.samples_generated, "{tag}: samples_generated");
+    assert_eq!(a.samples_trained, b.samples_trained, "{tag}: samples_trained");
+    assert_eq!(a.bytes_to_device, b.bytes_to_device, "{tag}: bytes_to_device");
+    assert_eq!(a.bytes_from_device, b.bytes_from_device, "{tag}: bytes_from_device");
+    assert_eq!(a.episodes, b.episodes, "{tag}: episodes");
+    assert_eq!(a.residency_hits, b.residency_hits, "{tag}: residency_hits");
+    assert_eq!(a.bytes_saved, b.bytes_saved, "{tag}: bytes_saved");
+}
+
+/// The per-connection ledgers must re-add to the aggregate report, and
+/// every worker slot must have been filled exactly once.
+fn assert_ledger(report: &TransportReport, summaries: &[WorkerSummary], n: usize) {
+    assert_eq!(report.workers, n);
+    let mut seen = vec![false; n];
+    for s in summaries {
+        assert!(!seen[s.worker_index], "worker slot {} assigned twice", s.worker_index);
+        seen[s.worker_index] = true;
+    }
+    let up: u64 = summaries.iter().map(|s| s.bytes_received).sum();
+    let down: u64 = summaries.iter().map(|s| s.bytes_sent).sum();
+    assert_eq!(up, report.bytes_up, "worker-side received sum vs coordinator sent");
+    assert_eq!(down, report.bytes_down, "worker-side sent sum vs coordinator received");
+}
+
+// ------------------------------------------------ bitwise equivalence --
+
+#[test]
+fn loopback_socket_is_bitwise_identical_pipelined() {
+    if !tcp_capable() {
+        eprintln!("skipping: socket transport cannot host the pjrt backend");
+        return;
+    }
+    let local = Trainer::new(graph(), cfg(9)).unwrap().train().unwrap();
+    let (remote, report, summaries) = tcp_run(cfg(9));
+    assert_equivalent(&local, &remote, "pipelined");
+    assert_ledger(&report, &summaries, 2);
+    // the aggregate wire ledger IS the transfer engine's plan
+    assert_eq!(report.bytes_up, remote.stats.counters.bytes_to_device);
+    assert_eq!(report.bytes_down, remote.stats.counters.bytes_from_device);
+    assert!(report.bytes_up > 0, "no payload ever crossed the wire?");
+}
+
+#[test]
+fn loopback_socket_is_bitwise_identical_serial() {
+    if !tcp_capable() {
+        eprintln!("skipping: socket transport cannot host the pjrt backend");
+        return;
+    }
+    // no producer thread, no pipelined dispatch: every wave fenced
+    let mk = || TrainConfig { collaboration: false, pipeline_transfers: false, ..cfg(23) };
+    let local = Trainer::new(graph(), mk()).unwrap().train().unwrap();
+    let (remote, report, summaries) = tcp_run(mk());
+    assert_equivalent(&local, &remote, "serial");
+    assert_ledger(&report, &summaries, 2);
+}
+
+#[test]
+fn loopback_socket_is_bitwise_identical_heterogeneous() {
+    if !tcp_capable() {
+        eprintln!("skipping: socket transport cannot host the pjrt backend");
+        return;
+    }
+    // capacities [1, 3]: worker 1 takes 3 blocks per wave with a 3x
+    // batch chunk — the assignment must carry capacity-scaled geometry
+    let mk = || TrainConfig {
+        worker_capacities: vec![1, 3],
+        num_partitions: 4,
+        fix_context: false,
+        ..cfg(41)
+    };
+    let local = Trainer::new(graph(), mk()).unwrap().train().unwrap();
+    let (remote, report, summaries) = tcp_run(mk());
+    assert_equivalent(&local, &remote, "heterogeneous");
+    assert_ledger(&report, &summaries, 2);
+}
+
+#[test]
+fn local_runs_have_no_wire_ledger() {
+    let mut trainer = Trainer::new(graph(), cfg(7)).unwrap();
+    trainer.train().unwrap();
+    assert_eq!(trainer.transport_report(), None);
+}
+
+// -------------------------------------------------- fault injection --
+
+fn flaky_trainer(seed: u64, plan: FaultPlan) -> Trainer {
+    let mut trainer = Trainer::new(graph(), cfg(seed)).unwrap();
+    trainer.set_transport_wrapper(Box::new(move |inner| {
+        Box::new(FlakyTransport::new(inner, plan.clone()))
+    }));
+    trainer
+}
+
+#[test]
+fn dropped_replies_fail_loud_instead_of_hanging() {
+    let plan = FaultPlan {
+        seed: 11,
+        drop_permille: 400,
+        timeout: Duration::from_millis(300),
+        ..FaultPlan::default()
+    };
+    let err = flaky_trainer(51, plan).train().unwrap_err().to_string();
+    assert!(err.contains("no worker reply within"), "{err}");
+}
+
+#[test]
+fn duplicated_replies_are_rejected_by_the_in_flight_set() {
+    // every training reply delivered twice: the first absorb clears the
+    // block from the in-flight set, the duplicate must be a pointed
+    // error — never a silent double-scatter
+    let plan = FaultPlan { seed: 13, dup_permille: 1000, ..FaultPlan::default() };
+    let err = flaky_trainer(52, plan).train().unwrap_err().to_string();
+    // the duplicate is caught mid-episode by the in-flight set, or — if
+    // it straggles past the last fence — at the sync barrier
+    assert!(
+        err.contains("not in flight") || err.contains("unexpected job result"),
+        "{err}"
+    );
+}
+
+#[test]
+fn injected_disconnect_fails_loud_and_cleans_up() {
+    let plan =
+        FaultPlan { seed: 17, disconnect_after_sends: Some(20), ..FaultPlan::default() };
+    let err = flaky_trainer(53, plan).train().unwrap_err().to_string();
+    assert!(err.contains("connection lost"), "{err}");
+    // reaching here at all proves cleanup: the workers were stopped and
+    // joined even though the transport reported a dead connection
+}
+
+#[test]
+fn reordered_replies_leave_the_trajectory_bitwise_unchanged() {
+    // holds delay ~1/4 of training replies behind their successors.
+    // Orthogonal-block scatters commute, so absorb order must not
+    // change a single bit of the result.
+    let clean = Trainer::new(graph(), cfg(54)).unwrap().train().unwrap();
+    let plan = FaultPlan { seed: 19, hold_permille: 250, ..FaultPlan::default() };
+    let reordered = flaky_trainer(54, plan).train().unwrap();
+    assert_equivalent(&clean, &reordered, "reordered");
+}
+
+#[test]
+fn checkpoint_resume_after_a_fault_is_bitwise_identical() {
+    let full = Trainer::new(graph(), cfg(73)).unwrap().train().unwrap();
+
+    // phase 1: checkpoint at the pool-2 boundary (clean transport)
+    let ck_path = tmp("fault_resume.gvck");
+    let mut trainer = Trainer::new(graph(), cfg(73)).unwrap();
+    let mut observer = |state: &CheckpointState<'_>| -> anyhow::Result<TrainFlow> {
+        if state.pools_done >= 2 {
+            save_checkpoint(state, &ck_path)?;
+            return Ok(TrainFlow::Stop);
+        }
+        Ok(TrainFlow::Continue)
+    };
+    trainer.train_resumable(None, Some(&mut observer)).unwrap();
+
+    // phase 2: a resume attempt dies on an injected disconnect
+    let plan = FaultPlan { seed: 29, disconnect_after_sends: Some(5), ..FaultPlan::default() };
+    let mut crashed = flaky_trainer(73, plan);
+    let err = crashed
+        .train_resumable(Some(load_checkpoint(&ck_path).unwrap()), None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("connection lost"), "{err}");
+
+    // phase 3: the checkpoint is untouched by the failed attempt — a
+    // clean resume still lands on the exact bytes of the straight run
+    let resumed = Trainer::new(graph(), cfg(73))
+        .unwrap()
+        .train_resumable(Some(load_checkpoint(&ck_path).unwrap()), None)
+        .unwrap();
+    assert_eq!(full.embeddings.vertex_matrix(), resumed.embeddings.vertex_matrix());
+    assert_eq!(full.embeddings.context_matrix(), resumed.embeddings.context_matrix());
+}
+
+// ------------------------------------------------------ hostile peers --
+
+#[test]
+fn garbage_handshakes_are_rejected_and_the_run_completes() {
+    if !tcp_capable() {
+        eprintln!("skipping: socket transport cannot host the pjrt backend");
+        return;
+    }
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    // two hostile peers queue up in the accept backlog BEFORE any real
+    // worker: one sends a garbage hello, one hangs up without a word.
+    // Both must be rejected without consuming a worker slot.
+    {
+        use std::io::Write;
+        let mut bad = std::net::TcpStream::connect(&addr).unwrap();
+        let junk = b"XXXXJUNKJUNK";
+        bad.write_all(&(junk.len() as u32).to_le_bytes()).unwrap();
+        bad.write_all(junk).unwrap();
+        // closed by drop: the reject frame the coordinator writes back
+        // is allowed to land on a dead socket
+    }
+    drop(std::net::TcpStream::connect(&addr).unwrap());
+
+    let n = 2usize;
+    let tcp_cfg = TrainConfig { worker_mode: WorkerMode::Tcp(addr.clone()), ..cfg(9) };
+    let mut trainer = Trainer::new(graph(), tcp_cfg).unwrap();
+    trainer.set_worker_listener(listener);
+    let workers: Vec<_> = (0..n)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_worker(&addr, Duration::from_secs(30)))
+        })
+        .collect();
+    let remote = trainer.train().unwrap();
+    for h in workers {
+        h.join().unwrap().unwrap();
+    }
+    // the run behind the hostile peers is still the bitwise run
+    let local = Trainer::new(graph(), cfg(9)).unwrap().train().unwrap();
+    assert_equivalent(&local, &remote, "post-gauntlet");
+}
+
+#[test]
+fn worker_dialing_a_rejecting_coordinator_gets_a_pointed_error() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        // read the hello, then turn the worker away
+        net::read_frame(&mut stream, 1 << 20).unwrap().unwrap();
+        net::write_frame(&mut stream, &encode_reject("all slots are taken"), 1 << 20).unwrap();
+    });
+    let err = format!("{:#}", run_worker(&addr, Duration::from_secs(10)).unwrap_err());
+    assert!(err.contains("rejected"), "{err}");
+    assert!(err.contains("all slots are taken"), "{err}");
+    server.join().unwrap();
+}
+
+#[test]
+fn worker_dialing_a_garbage_coordinator_gets_a_pointed_error() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        net::read_frame(&mut stream, 1 << 20).unwrap().unwrap();
+        // an "assignment" that is pure junk — the worker must refuse it
+        net::write_frame(&mut stream, b"\x00GARBAGE-ASSIGNMENT", 1 << 30).unwrap();
+        // the worker answers with a READY-err frame before bailing
+        let ready = net::read_frame(&mut stream, 1 << 20).unwrap();
+        assert!(ready.is_some(), "worker should explain its refusal");
+    });
+    let err = format!("{:#}", run_worker(&addr, Duration::from_secs(10)).unwrap_err());
+    assert!(err.contains("assignment"), "{err}");
+    server.join().unwrap();
+}
+
+#[test]
+fn worker_dialing_a_dead_address_times_out_with_context() {
+    // a port nothing listens on: bind + drop to find a free one
+    let addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let err = run_worker(&addr, Duration::from_millis(300)).unwrap_err().to_string();
+    assert!(err.contains("could not connect"), "{err}");
+}
