@@ -286,6 +286,28 @@ pub struct TrainConfig {
     /// errors immediately either way). TOML key `worker_timeout_secs`,
     /// CLI `--worker-timeout-secs`. Ignored in local mode.
     pub worker_timeout_secs: u64,
+    /// Heartbeat interval for tcp runs: the coordinator PINGs every idle
+    /// worker this often and the reader tracks the last frame heard per
+    /// slot, so a silent worker is named precisely when a timeout fires
+    /// (0 = no heartbeats). TOML key `heartbeat_secs`, CLI
+    /// `--heartbeat-secs`. Ignored in local mode.
+    pub heartbeat_secs: u64,
+    /// Worker-failure recovery switch: when > 0, the coordinator journals
+    /// every dispatched job (RNG at dispatch + source shipment payloads),
+    /// retries transient transport errors with capped exponential backoff
+    /// up to this many times, and on a dead worker re-dispatches the
+    /// slot's journaled jobs to a rejoined replacement — or folds them
+    /// onto survivors — instead of killing the run. Recovered runs are
+    /// bitwise-identical to fault-free runs. 0 (the default) keeps the
+    /// PR-7 fail-loud behavior. TOML key `max_worker_retries`, CLI
+    /// `--max-worker-retries`.
+    pub max_worker_retries: u64,
+    /// How long a recovering coordinator holds a dead slot open for a
+    /// replacement `graphvite worker` to rejoin before folding the
+    /// slot's work onto the surviving workers (0 = fold immediately).
+    /// Only meaningful with `max_worker_retries > 0`. TOML key
+    /// `rejoin_window_secs`, CLI `--rejoin-window-secs`.
+    pub rejoin_window_secs: u64,
 }
 
 impl Default for TrainConfig {
@@ -317,6 +339,9 @@ impl Default for TrainConfig {
             log_every: 0,
             worker_mode: WorkerMode::Local,
             worker_timeout_secs: 0,
+            heartbeat_secs: 0,
+            max_worker_retries: 0,
+            rejoin_window_secs: 0,
         }
     }
 }
@@ -381,6 +406,12 @@ impl TrainConfig {
         if self.negatives == 0 {
             bail!("negatives must be >= 1");
         }
+        if self.rejoin_window_secs > 0 && self.max_worker_retries == 0 {
+            bail!(
+                "rejoin_window_secs needs max_worker_retries > 0 — the rejoin window \
+                 only opens when worker-failure recovery is enabled"
+            );
+        }
         if matches!(self.worker_mode, WorkerMode::Tcp(_)) && self.backend == BackendKind::Pjrt {
             bail!(
                 "workers = \"tcp://...\" cannot run the pjrt backend (HLO artifacts are \
@@ -388,6 +419,12 @@ impl TrainConfig {
             );
         }
         Ok(())
+    }
+
+    /// Whether worker-failure recovery (job journaling, re-dispatch,
+    /// rejoin/fold) is active. See [`TrainConfig::max_worker_retries`].
+    pub fn recovery_enabled(&self) -> bool {
+        self.max_worker_retries > 0
     }
 
     /// Load from a TOML file's `[train]` table (missing keys keep defaults).
@@ -442,6 +479,9 @@ impl TrainConfig {
         set_num!(seed, "seed", u64);
         set_num!(log_every, "log_every", usize);
         set_num!(worker_timeout_secs, "worker_timeout_secs", u64);
+        set_num!(heartbeat_secs, "heartbeat_secs", u64);
+        set_num!(max_worker_retries, "max_worker_retries", u64);
+        set_num!(rejoin_window_secs, "rejoin_window_secs", u64);
         if let Some(v) = get("workers") {
             let s = v.as_str().ok_or_else(|| anyhow::anyhow!("workers must be a string"))?;
             cfg.worker_mode = WorkerMode::parse(s)?;
@@ -798,6 +838,28 @@ mod tests {
         };
         let err = cfg.validate().unwrap_err().to_string();
         assert!(err.contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn recovery_keys_toml_defaults_and_validation() {
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nheartbeat_secs = 5\nmax_worker_retries = 3\nrejoin_window_secs = 10\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.heartbeat_secs, 5);
+        assert_eq!(cfg.max_worker_retries, 3);
+        assert_eq!(cfg.rejoin_window_secs, 10);
+        assert!(cfg.recovery_enabled());
+        // defaults: recovery off, no heartbeats — PR-7 fail-loud behavior
+        let d = TrainConfig::default();
+        assert_eq!(d.heartbeat_secs, 0);
+        assert_eq!(d.max_worker_retries, 0);
+        assert_eq!(d.rejoin_window_secs, 0);
+        assert!(!d.recovery_enabled());
+        // a rejoin window without recovery enabled is a config error
+        let cfg = TrainConfig { rejoin_window_secs: 4, ..TrainConfig::default() };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("max_worker_retries"), "{err}");
     }
 
     #[test]

@@ -90,6 +90,26 @@ pub struct TrainCheckpoint {
     pub store: EmbeddingStore,
 }
 
+impl CheckpointState<'_> {
+    /// Clone into an owned [`TrainCheckpoint`]. The borrowed state only
+    /// lives for one observer call, but checkpoint-on-fault must hold
+    /// the last pool boundary until the training scope unwinds.
+    pub fn to_owned(&self) -> TrainCheckpoint {
+        TrainCheckpoint {
+            seed: self.seed,
+            num_edges: self.num_edges,
+            partitions: self.partitions,
+            total_samples: self.total_samples,
+            pool_size: self.pool_size,
+            pools_done: self.pools_done,
+            samples_planned: self.samples_planned,
+            samples_done: self.samples_done,
+            worker_rngs: self.worker_rngs.to_vec(),
+            store: self.store.clone(),
+        }
+    }
+}
+
 impl TrainCheckpoint {
     pub fn state(&self) -> CheckpointState<'_> {
         CheckpointState {

@@ -82,7 +82,7 @@ pub use transport::{Transport, TransportReport};
 
 use std::net::TcpListener;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -99,9 +99,9 @@ use crate::scheduler::{Assignment, EpisodeSchedule};
 use crate::util::rng::{streams, Rng};
 use crate::util::timer::Stopwatch;
 
-use transfer::{ShipPlan, TransferEngine};
+use transfer::{JournalEntry, JournalShipment, ShipPlan, TransferEngine};
 use transport::{make_assignments, LocalTransport, SocketTransport};
-use worker::{spawn_workers, Job, JobMsg, JobResult, Reply, Shipment};
+use worker::{spawn_workers, Job, JobMsg, JobResult, Reply, Shipment, SyncReply, Takeover};
 
 /// Decorator applied to the transport before training starts (the fault
 /// -injection seam: tests wrap the real transport in a
@@ -155,6 +155,10 @@ pub struct Trainer {
     /// Wire ledger of the last socket-transport run (`None` after local
     /// runs — the in-process channels have no wire to account for).
     last_transport: Option<TransportReport>,
+    /// Checkpoint-on-fault destination: when set, a run that dies after
+    /// worker-failure recovery is exhausted first writes a `.gvck` of
+    /// the last completed pool boundary here.
+    fault_checkpoint: Option<std::path::PathBuf>,
 }
 
 impl Trainer {
@@ -180,6 +184,7 @@ impl Trainer {
             worker_listener: None,
             transport_wrapper: None,
             last_transport: None,
+            fault_checkpoint: None,
         })
     }
 
@@ -207,6 +212,16 @@ impl Trainer {
     /// run (`None` for local runs).
     pub fn transport_report(&self) -> Option<TransportReport> {
         self.last_transport
+    }
+
+    /// Cut a `.gvck` at `path` if training dies after worker-failure
+    /// recovery is exhausted: the checkpoint captures the last completed
+    /// pool boundary, so a crashed run loses at most one pool —
+    /// [`load_checkpoint`] + [`Trainer::train_resumable`] continue it
+    /// bitwise-identically. Costs one in-memory copy of the store while
+    /// training runs.
+    pub fn set_fault_checkpoint(&mut self, path: impl Into<std::path::PathBuf>) {
+        self.fault_checkpoint = Some(path.into());
     }
 
     /// Train to completion.
@@ -328,7 +343,39 @@ impl Trainer {
         let mut wrapper = self.transport_wrapper.take();
         self.last_transport = None;
 
-        let report = std::thread::scope(|scope| -> Result<Option<TransportReport>> {
+        // Each worker slot's RNG stream state at run start — the recovery
+        // journal's per-slot replay base until the first group fence
+        // refreshes it (identical derivation to spawn_workers /
+        // make_assignments, so the journal's idea of a slot's stream is
+        // bitwise the worker's).
+        let init_worker_rngs: Vec<[u64; 4]> = (0..cfg.num_workers)
+            .map(|i| match resume_rngs.as_deref() {
+                Some(states) => states[i],
+                None => base_rng.stream(streams::WORKER, i as u64).state(),
+            })
+            .collect();
+
+        // Checkpoint-on-fault stash: seeded with the run's starting state
+        // (a failure in the very first pool resumes from the start),
+        // refreshed at every completed pool boundary, written out only on
+        // the error path after recovery is exhausted.
+        let fault_path = self.fault_checkpoint.clone();
+        let mut fault_stash: Option<TrainCheckpoint> = fault_path.as_ref().map(|_| {
+            TrainCheckpoint {
+                seed: cfg.seed,
+                num_edges: num_edges as u64,
+                partitions: num_parts as u64,
+                total_samples,
+                pool_size: pool_size as u64,
+                pools_done: start_pool as u64,
+                samples_planned: resume_planned,
+                samples_done: resume_done,
+                worker_rngs: init_worker_rngs.clone(),
+                store: store.clone(),
+            }
+        });
+
+        let scope_res = std::thread::scope(|scope| -> Result<Option<TransportReport>> {
             // ---- device workers, behind the transport seam ----
             // Local mode spawns the in-process worker threads of PRs 1-6
             // (bitwise-pinned); tcp mode accepts `num_workers` remote
@@ -363,7 +410,16 @@ impl Trainer {
                     )?;
                     let recv_timeout = (cfg.worker_timeout_secs > 0)
                         .then(|| Duration::from_secs(cfg.worker_timeout_secs));
-                    let socket = SocketTransport::accept(listener, assignments, recv_timeout)?;
+                    let heartbeat = (cfg.heartbeat_secs > 0)
+                        .then(|| Duration::from_secs(cfg.heartbeat_secs));
+                    // recovery keeps the listener open for rejoins
+                    let socket = SocketTransport::accept(
+                        listener,
+                        assignments,
+                        recv_timeout,
+                        heartbeat,
+                        cfg.recovery_enabled(),
+                    )?;
                     (Vec::new(), Box::new(socket) as Box<dyn Transport>)
                 }
             };
@@ -418,6 +474,14 @@ impl Trainer {
                 total_samples,
                 samples_planned: resume_planned,
                 in_flight: Vec::new(),
+                recovery: cfg.recovery_enabled().then(|| {
+                    RecoveryState::new(
+                        cfg.num_workers,
+                        init_worker_rngs.clone(),
+                        cfg.max_worker_retries,
+                    )
+                }),
+                stray_syncs: Vec::new(),
             };
 
             // Consumption is fallible (fail-loud residency protocol, worker
@@ -451,6 +515,7 @@ impl Trainer {
                             pool_size,
                             pools_done,
                             samples_done,
+                            fault_path.as_ref().map(|_| &mut fault_stash),
                         )?;
                         if flow == TrainFlow::Stop {
                             break;
@@ -482,6 +547,7 @@ impl Trainer {
                             pool_size,
                             pools_done,
                             samples_done,
+                            fault_path.as_ref().map(|_| &mut fault_stash),
                         )?;
                         if flow == TrainFlow::Stop {
                             break;
@@ -522,7 +588,29 @@ impl Trainer {
             worker_res?;
             consume_res?;
             shutdown_res
-        })?;
+        });
+        let report = match scope_res {
+            Ok(r) => r,
+            Err(e) => {
+                // checkpoint-on-fault: recovery is exhausted (or off) and
+                // the run is dying — cut a .gvck at the last completed
+                // pool boundary first, so at most one pool is lost
+                if let (Some(path), Some(ck)) = (&fault_path, &fault_stash) {
+                    match save_checkpoint(&ck.state(), path) {
+                        Ok(()) => eprintln!(
+                            "coordinator: fault checkpoint cut at pool boundary {} -> {}",
+                            ck.pools_done,
+                            path.display()
+                        ),
+                        Err(save_err) => eprintln!(
+                            "coordinator: fault checkpoint to {} failed: {save_err:#}",
+                            path.display()
+                        ),
+                    }
+                }
+                return Err(e);
+            }
+        };
 
         train_sw.stop();
         let snapshot = counters.snapshot();
@@ -586,11 +674,79 @@ struct EpisodeRunner<'a> {
     /// the result-side count at every wave boundary while being available
     /// at send time — pipelined and serial dispatch see identical LRs.
     samples_planned: u64,
-    /// Blocks in flight: (vid, cid) of every dispatched job whose result
-    /// has not been absorbed. A set rather than a counter so a duplicated
-    /// or fabricated result (a misbehaving transport) is a pointed error
-    /// instead of a silent double-scatter + counter underflow.
-    in_flight: Vec<(usize, usize)>,
+    /// Blocks in flight: (worker, vid, cid) of every dispatched job whose
+    /// result has not been absorbed. A set rather than a counter so a
+    /// duplicated or fabricated result (a misbehaving transport) is a
+    /// pointed error instead of a silent double-scatter + counter
+    /// underflow; the worker index lets recovery drop a dead slot's
+    /// entries precisely.
+    in_flight: Vec<(usize, usize, usize)>,
+    /// Worker-failure recovery bookkeeping; `None` keeps the PR-7
+    /// fail-loud behavior bit-for-bit (`TrainConfig::recovery_enabled`).
+    recovery: Option<RecoveryState>,
+    /// Sync replies that arrived while a fence-time recovery was folding
+    /// a dead slot's journal (the fold's serial wait drains the shared
+    /// reply stream); [`Self::sync_residents`] consumes them first.
+    stray_syncs: Vec<SyncReply>,
+}
+
+/// How a replayed job result whose original was already absorbed (before
+/// its worker died) is disposed of on second delivery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum DiscardMode {
+    /// Replacement replay: the payloads are already in the host store —
+    /// recycle the buffers and count the wire bytes, touch nothing else.
+    Drop,
+    /// Fold replay: the dead worker's kept outputs lived only on its
+    /// device — scatter the replayed payloads to regenerate them, but
+    /// leave the sample counters alone (the job already counted once).
+    ScatterOnly,
+}
+
+/// Worker-failure recovery state (`max_worker_retries > 0`): the
+/// in-flight shipment journal plus per-slot replay bases. The journal's
+/// scope is the current episode group: every group fence syncs all
+/// resident partitions home (making the host store the authoritative
+/// replay base), records each worker's RNG, and clears the journal — so
+/// a dead slot's work since the fence can be regenerated bitwise from
+/// `base_rng` + the journaled shipments.
+struct RecoveryState {
+    /// Per slot, the jobs dispatched since the last group fence, in
+    /// dispatch order. Completed entries stay (flagged `done`): their
+    /// kept outputs existed only on the dead device, so a replacement or
+    /// fold must replay them too to rebuild that state.
+    journal: Vec<Vec<JournalEntry>>,
+    /// Each slot's RNG stream state at the last group fence (initially
+    /// the stream's start) — where a journal replay begins.
+    base_rng: Vec<[u64; 4]>,
+    /// Slots permanently folded onto survivors.
+    folded: Vec<bool>,
+    /// A folded slot's RNG chain, advanced by every job trained on its
+    /// behalf (survivors run takeover jobs with this stream; their own
+    /// streams never move for folded work).
+    folded_rng: Vec<[u64; 4]>,
+    /// Round-robin cursor over survivors for folded work.
+    next_survivor: usize,
+    /// Replayed jobs whose original result was already absorbed; the
+    /// second delivery is consumed here instead of `in_flight`.
+    pending_discards: Vec<(usize, usize, DiscardMode)>,
+    /// Distinct worker failures this run may still absorb before giving
+    /// up (checkpoint-on-fault, then the original error).
+    recoveries_left: u64,
+}
+
+impl RecoveryState {
+    fn new(n: usize, init_rngs: Vec<[u64; 4]>, budget: u64) -> Self {
+        RecoveryState {
+            journal: (0..n).map(|_| Vec::new()).collect(),
+            base_rng: init_rngs,
+            folded: vec![false; n],
+            folded_rng: vec![[0u64; 4]; n],
+            next_survivor: 0,
+            pending_discards: Vec::new(),
+            recoveries_left: budget,
+        }
+    }
 }
 
 impl EpisodeRunner<'_> {
@@ -639,20 +795,40 @@ impl EpisodeRunner<'_> {
                 let lr = self.cfg.lr
                     * (1.0 - self.samples_planned as f32 / self.total_samples as f32).max(1e-4);
                 for a in sched.wave(g, w) {
-                    self.dispatch(store, &a, lr)?;
+                    // a failed dispatch names a dead worker: recover
+                    // (replace or fold) and keep going, or die loud
+                    if let Err(e) =
+                        self.dispatch(store, &a, lr, &mut ep_loss, &mut ep_trained, samples_done)
+                    {
+                        self.recover(store, e, &mut ep_loss, &mut ep_trained, samples_done)?;
+                    }
                 }
                 if self.cfg.pipeline_transfers {
                     // prefetch mode: scatter whatever has already finished
                     // and keep dispatching — the group fence below is the
                     // only blocking wait
-                    while let Some(res) = self.try_recv_result()? {
-                        self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done)?;
+                    loop {
+                        match self.try_recv_result() {
+                            Ok(Some(res)) => self.absorb(
+                                store, res, &mut ep_loss, &mut ep_trained, samples_done,
+                            )?,
+                            Ok(None) => break,
+                            Err(e) => self.recover(
+                                store, e, &mut ep_loss, &mut ep_trained, samples_done,
+                            )?,
+                        }
                     }
                 } else {
                     // serial (PR-2) dispatch: one wave in flight at a time
                     while !self.in_flight.is_empty() {
-                        let res = self.recv_result()?;
-                        self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done)?;
+                        match self.recv_result() {
+                            Ok(res) => self.absorb(
+                                store, res, &mut ep_loss, &mut ep_trained, samples_done,
+                            )?,
+                            Err(e) => self.recover(
+                                store, e, &mut ep_loss, &mut ep_trained, samples_done,
+                            )?,
+                        }
                     }
                 }
             }
@@ -677,11 +853,18 @@ impl EpisodeRunner<'_> {
                 }
                 None => {
                     while !self.in_flight.is_empty() {
-                        let res = self.recv_result()?;
-                        self.absorb(store, res, &mut ep_loss, &mut ep_trained, samples_done)?;
+                        match self.recv_result() {
+                            Ok(res) => self.absorb(
+                                store, res, &mut ep_loss, &mut ep_trained, samples_done,
+                            )?,
+                            Err(e) => self.recover(
+                                store, e, &mut ep_loss, &mut ep_trained, samples_done,
+                            )?,
+                        }
                     }
                 }
             }
+            self.group_fence(store)?;
             self.counters.add(&self.counters.episodes, 1);
             if ep_trained > 0 {
                 loss_curve.push((ep_loss / ep_trained as f64) as f32);
@@ -734,11 +917,15 @@ impl EpisodeRunner<'_> {
                     Err(e) => Err(e),
                 };
                 if let Err(e) = step {
-                    // the helper unblocks on its own: the producer
-                    // either publishes (take returns a pool) or
-                    // finishes (take returns None)
-                    drain = Err(e);
-                    break;
+                    // a dead worker is recovered in place (replace or
+                    // fold) and the drain continues; anything else ends
+                    // it. Either way the helper unblocks on its own: the
+                    // producer either publishes (take returns a pool) or
+                    // finishes (take returns None).
+                    if let Err(e2) = self.recover(store, e, ep_loss, ep_trained, samples_done) {
+                        drain = Err(e2);
+                        break;
+                    }
                 }
             }
             (handle.join(), drain)
@@ -753,22 +940,114 @@ impl EpisodeRunner<'_> {
     }
 
     /// Gather (or residency-elide) one assignment's partitions and send
-    /// the job to its worker.
-    fn dispatch(&mut self, store: &EmbeddingStore, a: &Assignment, lr: f32) -> Result<()> {
+    /// the job to its worker. With recovery on, the job is journaled
+    /// before the send, so a send that kills the worker replays the job
+    /// along with the rest of the slot's journal.
+    fn dispatch(
+        &mut self,
+        store: &mut EmbeddingStore,
+        a: &Assignment,
+        lr: f32,
+        ep_loss: &mut f64,
+        ep_trained: &mut u64,
+        samples_done: &mut u64,
+    ) -> Result<()> {
         let block = self.grid.take_block(a.vid, a.cid);
         self.samples_planned += block.len() as u64;
+        if self.recovery.as_ref().is_some_and(|r| r.folded[a.worker]) {
+            // the slot was folded onto survivors: same version/cursor
+            // trajectory, forced upload, serial takeover dispatch
+            return self.dispatch_folded(store, a, lr, block, ep_loss, ep_trained, samples_done);
+        }
         let (vplan, cplan) = self.engine.plan(a);
         let t0 = std::time::Instant::now();
         let vertex = self.gather(store, Matrix::Vertex, a.vid, vplan);
         let context = self.gather(store, Matrix::Context, a.cid, cplan);
         self.counters
             .add(&self.counters.gather_nanos, t0.elapsed().as_nanos() as u64);
+        if self.recovery.is_some() {
+            let entry = self.journal_entry(store, a, lr, &block, &vertex, &context);
+            self.recovery.as_mut().unwrap().journal[a.worker].push(entry);
+        }
         self.transport.send(
             a.worker,
-            JobMsg::Train(Job { vid: a.vid, cid: a.cid, block, vertex, context, lr }),
+            JobMsg::Train(Job {
+                vid: a.vid,
+                cid: a.cid,
+                block,
+                vertex,
+                context,
+                lr,
+                takeover: None,
+            }),
         )?;
-        self.in_flight.push((a.vid, a.cid));
+        self.in_flight.push((a.worker, a.vid, a.cid));
         Ok(())
+    }
+
+    /// Build the journal record of a job about to be dispatched: block +
+    /// transfer flags, plus a payload snapshot for the group's FIRST
+    /// touch of each partition on that worker — the replay base; later
+    /// touches chain off the in-journal predecessor's on-device output.
+    /// An elided first touch snapshots from the host store, which is
+    /// current at every group fence thanks to the recovery-mode resident
+    /// sync.
+    fn journal_entry(
+        &self,
+        store: &EmbeddingStore,
+        a: &Assignment,
+        lr: f32,
+        block: &[(i32, i32)],
+        vertex: &Shipment,
+        context: &Shipment,
+    ) -> JournalEntry {
+        JournalEntry {
+            vid: a.vid,
+            cid: a.cid,
+            lr,
+            block: block.to_vec(),
+            vertex: self.journal_shipment(store, Matrix::Vertex, a.vid, a.worker, vertex),
+            context: self.journal_shipment(store, Matrix::Context, a.cid, a.worker, context),
+            done: false,
+        }
+    }
+
+    fn journal_shipment(
+        &self,
+        store: &EmbeddingStore,
+        matrix: Matrix,
+        pid: usize,
+        worker: usize,
+        ship: &Shipment,
+    ) -> JournalShipment {
+        let rec = self.recovery.as_ref().expect("journal without recovery");
+        let data = match &ship.data {
+            Some(d) => Some(d.clone()),
+            None => {
+                let prior_touch = rec.journal[worker].iter().any(|e| match matrix {
+                    Matrix::Vertex => e.vid == pid,
+                    Matrix::Context => e.cid == pid,
+                });
+                if prior_touch {
+                    // chains off the predecessor's kept on-device output;
+                    // a replay regenerates it by replaying the
+                    // predecessor first
+                    None
+                } else {
+                    // elided first touch: the resident copy equals the
+                    // host rows (synced at the last fence) — snapshot them
+                    let cap = crate::gpu::planned_capacity(
+                        self.cfg,
+                        self.artifact,
+                        self.parts.part_size(pid),
+                    );
+                    let mut buf = Vec::new();
+                    store.gather_partition(self.parts, pid, cap, matrix, &mut buf);
+                    Some(buf)
+                }
+            }
+        };
+        JournalShipment { data, src_version: ship.src_version, keep: ship.keep }
     }
 
     fn gather(
@@ -807,10 +1086,14 @@ impl EpisodeRunner<'_> {
         ep_trained: &mut u64,
         samples_done: &mut u64,
     ) -> Result<()> {
+        let res = match self.discard_replayed(store, res)? {
+            Some(res) => res,
+            None => return Ok(()), // a replay's second delivery, disposed of
+        };
         let slot = self
             .in_flight
             .iter()
-            .position(|&(v, c)| v == res.vid && c == res.cid)
+            .position(|&(_, v, c)| v == res.vid && c == res.cid)
             .ok_or_else(|| {
                 anyhow::anyhow!(
                     "result for block ({}, {}) which is not in flight — duplicated or \
@@ -820,6 +1103,18 @@ impl EpisodeRunner<'_> {
                 )
             })?;
         self.in_flight.swap_remove(slot);
+        // the journal keeps completed entries (their kept outputs live
+        // only on the worker's device): flag, don't pop
+        if let Some(rec) = &mut self.recovery {
+            if res.worker < rec.journal.len() {
+                if let Some(e) = rec.journal[res.worker]
+                    .iter_mut()
+                    .find(|e| !e.done && e.vid == res.vid && e.cid == res.cid)
+                {
+                    e.done = true;
+                }
+            }
+        }
         let t0 = std::time::Instant::now();
         if let Some(v) = res.vertex {
             store.scatter_partition(self.parts, res.vid, Matrix::Vertex, &v);
@@ -845,70 +1140,557 @@ impl EpisodeRunner<'_> {
         Ok(())
     }
 
+    /// Recovery: a replayed job whose original result was already
+    /// absorbed delivers a second result — dispose of it per its
+    /// [`DiscardMode`] instead of the in-flight path. Returns the result
+    /// back when it is a first (normal) delivery.
+    fn discard_replayed(
+        &mut self,
+        store: &mut EmbeddingStore,
+        res: JobResult,
+    ) -> Result<Option<JobResult>> {
+        let mode = match &mut self.recovery {
+            Some(rec) => {
+                match rec
+                    .pending_discards
+                    .iter()
+                    .position(|&(v, c, _)| v == res.vid && c == res.cid)
+                {
+                    Some(i) => rec.pending_discards.swap_remove(i).2,
+                    None => return Ok(Some(res)),
+                }
+            }
+            None => return Ok(Some(res)),
+        };
+        // either way the payload crossed the wire: the engine-side ledger
+        // counts it so the transport ledger still balances
+        let t0 = std::time::Instant::now();
+        if let Some(v) = res.vertex {
+            if mode == DiscardMode::ScatterOnly {
+                store.scatter_partition(self.parts, res.vid, Matrix::Vertex, &v);
+            }
+            self.counters
+                .add(&self.counters.bytes_from_device, (v.len() * 4) as u64);
+            self.engine.put_f32(v);
+        }
+        if let Some(c) = res.context {
+            if mode == DiscardMode::ScatterOnly {
+                store.scatter_partition(self.parts, res.cid, Matrix::Context, &c);
+            }
+            self.counters
+                .add(&self.counters.bytes_from_device, (c.len() * 4) as u64);
+            self.engine.put_f32(c);
+        }
+        self.counters
+            .add(&self.counters.scatter_nanos, t0.elapsed().as_nanos() as u64);
+        self.engine.put_block(res.block);
+        Ok(None)
+    }
+
     /// Blocking receive of one training result.
     fn recv_result(&mut self) -> Result<JobResult> {
-        match self.transport.recv()? {
-            Reply::Job(r) => Ok(r),
-            Reply::Synced(_) => anyhow::bail!("unexpected sync reply mid-episode"),
+        loop {
+            match self.transport.recv()? {
+                Reply::Job(r) => return Ok(r),
+                Reply::Synced(_) => anyhow::bail!("unexpected sync reply mid-episode"),
+                Reply::Pong => {} // stray liveness ack
+            }
         }
     }
 
     /// Non-blocking receive (pipelined mode's opportunistic drain).
     fn try_recv_result(&mut self) -> Result<Option<JobResult>> {
-        match self.transport.try_recv()? {
-            Some(Reply::Job(r)) => Ok(Some(r)),
-            Some(Reply::Synced(_)) => anyhow::bail!("unexpected sync reply mid-episode"),
-            None => Ok(None),
+        loop {
+            match self.transport.try_recv()? {
+                Some(Reply::Job(r)) => return Ok(Some(r)),
+                Some(Reply::Synced(_)) => anyhow::bail!("unexpected sync reply mid-episode"),
+                Some(Reply::Pong) => {}
+                None => return Ok(None),
+            }
         }
     }
 
+    // ------------------------------------------------------------------
+    // Worker-failure recovery (ISSUE 8): journal replay, rejoin, fold.
+    // ------------------------------------------------------------------
+
+    /// Recovery entry point, called with the error a dispatch/drain step
+    /// produced. When recovery is off, the transport names no failed
+    /// slot, or the budget is exhausted, the error propagates (the PR-7
+    /// fail-loud contract); otherwise the dead slot is either re-staffed
+    /// from the rejoin listener and its journal replayed to the
+    /// replacement, or — when no replacement dials in within the rejoin
+    /// window — folded onto the survivors. Both paths are bitwise: the
+    /// journal holds every input and the dead slot's RNG base, so the
+    /// lost work is regenerated exactly.
+    fn recover(
+        &mut self,
+        store: &mut EmbeddingStore,
+        err: anyhow::Error,
+        ep_loss: &mut f64,
+        ep_trained: &mut u64,
+        samples_done: &mut u64,
+    ) -> Result<()> {
+        if self.recovery.is_none() {
+            return Err(err);
+        }
+        let Some(slot) = self.transport.failed_worker() else {
+            // not a worker death (absorb rejection, logic error, ...) —
+            // never paper over it
+            return Err(err);
+        };
+        {
+            let rec = self.recovery.as_mut().unwrap();
+            if rec.folded[slot] {
+                return Err(err); // a folded slot cannot fail again
+            }
+            if rec.recoveries_left == 0 {
+                return Err(err.context(format!(
+                    "worker-failure recovery budget exhausted (max_worker_retries = {})",
+                    self.cfg.max_worker_retries
+                )));
+            }
+            rec.recoveries_left -= 1;
+        }
+        eprintln!("coordinator: worker {slot} failed: {err:#}");
+        // the dead slot's in-flight jobs are lost with it; the journal
+        // replays them below
+        self.in_flight.retain(|&(w, _, _)| w != slot);
+        let base = self.recovery.as_ref().unwrap().base_rng[slot];
+        // hold the slot open for a replacement, with capped backoff
+        let window = Duration::from_secs(self.cfg.rejoin_window_secs);
+        let start = Instant::now();
+        let mut backoff = Duration::from_millis(100);
+        let mut replaced = self.transport.try_replace(slot, base)?;
+        while !replaced && start.elapsed() < window {
+            std::thread::sleep(backoff.min(window.saturating_sub(start.elapsed())));
+            backoff = (backoff * 2).min(Duration::from_secs(2));
+            replaced = self.transport.try_replace(slot, base)?;
+        }
+        if replaced {
+            self.replay_to_replacement(slot)
+        } else {
+            let survivors = {
+                let rec = self.recovery.as_ref().unwrap();
+                (0..self.transport.num_workers())
+                    .filter(|&w| w != slot && !rec.folded[w])
+                    .count()
+            };
+            anyhow::ensure!(
+                survivors > 0,
+                "worker {slot} failed with no surviving workers to fold its work onto"
+            );
+            eprintln!(
+                "coordinator: no replacement for worker {slot} within {window:?} — folding \
+                 its {} journaled job(s) onto {survivors} survivor(s)",
+                self.recovery.as_ref().unwrap().journal[slot].len()
+            );
+            self.transport.mark_dead(slot);
+            {
+                let rec = self.recovery.as_mut().unwrap();
+                rec.folded[slot] = true;
+                rec.folded_rng[slot] = base;
+            }
+            self.engine.forget_worker(slot);
+            self.fold_journal(store, slot, ep_loss, ep_trained, samples_done)
+        }
+    }
+
+    /// A replacement took the dead slot (same fingerprint, next
+    /// generation, its RNG seeded at the slot's replay base): rebuild
+    /// the device state by re-sending the slot's journal verbatim.
+    /// Completed entries are replayed too — their kept outputs existed
+    /// only on the dead device — and their second results are dropped on
+    /// delivery ([`DiscardMode::Drop`]).
+    fn replay_to_replacement(&mut self, slot: usize) -> Result<()> {
+        // the replacement starts with an empty cache; the engine's
+        // residency view is rebuilt entry by entry below, exactly as the
+        // original plans recorded it
+        self.engine.forget_worker(slot);
+        let n = self.recovery.as_ref().unwrap().journal[slot].len();
+        eprintln!("coordinator: worker {slot} replaced — re-dispatching {n} journaled job(s)");
+        for k in 0..n {
+            let (vid, cid, lr, done, block, vertex, context) = {
+                let e = &self.recovery.as_ref().unwrap().journal[slot][k];
+                (
+                    e.vid,
+                    e.cid,
+                    e.lr,
+                    e.done,
+                    e.block.clone(),
+                    Shipment {
+                        data: e.vertex.data.clone(),
+                        src_version: e.vertex.src_version,
+                        keep: e.vertex.keep,
+                    },
+                    Shipment {
+                        data: e.context.data.clone(),
+                        src_version: e.context.src_version,
+                        keep: e.context.keep,
+                    },
+                )
+            };
+            // re-shipped payloads cross the wire again: count them on the
+            // engine side so the transport ledger still balances
+            let replayed = vertex.data.as_ref().map_or(0, |d| d.len())
+                + context.data.as_ref().map_or(0, |d| d.len());
+            self.counters
+                .add(&self.counters.bytes_to_device, (replayed * 4) as u64);
+            for (matrix, pid, ship) in
+                [(Matrix::Vertex, vid, &vertex), (Matrix::Context, cid, &context)]
+            {
+                if ship.keep {
+                    self.engine.set_resident(slot, matrix, pid, ship.src_version + 1);
+                } else {
+                    self.engine.drop_residency(slot, matrix, pid);
+                }
+            }
+            self.transport.send(
+                slot,
+                JobMsg::Train(Job { vid, cid, block, vertex, context, lr, takeover: None }),
+            )?;
+            if done {
+                self.recovery
+                    .as_mut()
+                    .unwrap()
+                    .pending_discards
+                    .push((vid, cid, DiscardMode::Drop));
+            } else {
+                self.in_flight.push((slot, vid, cid));
+            }
+        }
+        Ok(())
+    }
+
+    /// No replacement arrived: replay the dead slot's journal onto the
+    /// survivors, serially. Each job carries a [`Takeover`] (the dead
+    /// slot's RNG chain + chunk size), so the survivor computes bitwise
+    /// the result the dead worker would have; payloads come from the
+    /// journal snapshot or — for chained entries — the host store, which
+    /// the serial replay-and-scatter keeps current.
+    fn fold_journal(
+        &mut self,
+        store: &mut EmbeddingStore,
+        slot: usize,
+        ep_loss: &mut f64,
+        ep_trained: &mut u64,
+        samples_done: &mut u64,
+    ) -> Result<()> {
+        let n = self.recovery.as_ref().unwrap().journal[slot].len();
+        for k in 0..n {
+            let (vid, cid, lr, done, block, vdata, vver, cdata, cver) = {
+                let e = &self.recovery.as_ref().unwrap().journal[slot][k];
+                (
+                    e.vid,
+                    e.cid,
+                    e.lr,
+                    e.done,
+                    e.block.clone(),
+                    e.vertex.data.clone(),
+                    e.vertex.src_version,
+                    e.context.data.clone(),
+                    e.context.src_version,
+                )
+            };
+            let vertex = self.folded_payload(store, Matrix::Vertex, vid, vver, vdata);
+            let context = self.folded_payload(store, Matrix::Context, cid, cver, cdata);
+            self.fold_dispatch(
+                store, slot, vid, cid, lr, block, vertex, context, done, ep_loss, ep_trained,
+                samples_done,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Payload of one folded replay: the journal snapshot when one was
+    /// taken, else a fresh gather — correct because folded replay is
+    /// serial and scatters as it goes, so the host rows are exactly the
+    /// predecessor entry's output when a chained entry comes up. Folded
+    /// traffic is always a full upload with no keep: the dead slot has
+    /// no device to cache on, and the survivor's own residency must stay
+    /// untouched.
+    fn folded_payload(
+        &mut self,
+        store: &EmbeddingStore,
+        matrix: Matrix,
+        pid: usize,
+        src_version: u64,
+        snapshot: Option<Vec<f32>>,
+    ) -> Shipment {
+        let data = match snapshot {
+            Some(d) => d,
+            None => {
+                let cap = crate::gpu::planned_capacity(
+                    self.cfg,
+                    self.artifact,
+                    self.parts.part_size(pid),
+                );
+                let mut buf = self.engine.take_f32();
+                store.gather_partition(self.parts, pid, cap, matrix, &mut buf);
+                buf
+            }
+        };
+        self.counters
+            .add(&self.counters.bytes_to_device, (data.len() * 4) as u64);
+        Shipment { data: Some(data), src_version, keep: false }
+    }
+
+    /// Ship one folded job to a survivor and wait for its result (the
+    /// next folded job's input may be this one's output). Survivor
+    /// results arriving in between are absorbed normally; sync replies
+    /// (a fence-time fold) are stashed for [`Self::sync_residents`].
+    #[allow(clippy::too_many_arguments)]
+    fn fold_dispatch(
+        &mut self,
+        store: &mut EmbeddingStore,
+        dead: usize,
+        vid: usize,
+        cid: usize,
+        lr: f32,
+        block: Vec<(i32, i32)>,
+        vertex: Shipment,
+        context: Shipment,
+        done: bool,
+        ep_loss: &mut f64,
+        ep_trained: &mut u64,
+        samples_done: &mut u64,
+    ) -> Result<()> {
+        let target = self.next_survivor(dead)?;
+        let takeover = Takeover {
+            rng: self.recovery.as_ref().unwrap().folded_rng[dead],
+            chunk_samples: (self.cfg.batch_size * self.cfg.worker_capacity(dead)) as u32,
+        };
+        self.transport.send(
+            target,
+            JobMsg::Train(Job { vid, cid, block, vertex, context, lr, takeover: Some(takeover) }),
+        )?;
+        if done {
+            self.recovery
+                .as_mut()
+                .unwrap()
+                .pending_discards
+                .push((vid, cid, DiscardMode::ScatterOnly));
+        } else {
+            self.in_flight.push((target, vid, cid));
+        }
+        loop {
+            match self.transport.recv()? {
+                Reply::Job(res) => {
+                    let mine = res.vid == vid && res.cid == cid;
+                    let rng = res.rng_state;
+                    self.absorb(store, res, ep_loss, ep_trained, samples_done)?;
+                    if mine {
+                        // chain the dead slot's stream through its
+                        // replayed job
+                        self.recovery.as_mut().unwrap().folded_rng[dead] = rng;
+                        return Ok(());
+                    }
+                }
+                Reply::Synced(s) => self.stray_syncs.push(s),
+                Reply::Pong => {}
+            }
+        }
+    }
+
+    /// Round-robin over live, unfolded slots for folded work. The choice
+    /// never affects trained bytes: a takeover job runs with the dead
+    /// slot's RNG and chunk size wherever it lands, and its forced
+    /// upload/no-keep transfer leaves the survivor's residency untouched.
+    fn next_survivor(&mut self, dead: usize) -> Result<usize> {
+        let n = self.transport.num_workers();
+        let rec = self.recovery.as_mut().unwrap();
+        for _ in 0..n {
+            let cand = rec.next_survivor % n;
+            rec.next_survivor += 1;
+            if cand != dead && !rec.folded[cand] {
+                return Ok(cand);
+            }
+        }
+        anyhow::bail!("worker {dead} failed with no surviving workers to fold its work onto")
+    }
+
+    /// A scheduled assignment whose slot was folded: advance the
+    /// engine's version/cursor state exactly as a live dispatch would
+    /// (the LR and version trajectories must not notice the fold), force
+    /// upload/no-keep, and run it as a takeover job on a survivor.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_folded(
+        &mut self,
+        store: &mut EmbeddingStore,
+        a: &Assignment,
+        lr: f32,
+        block: Vec<(i32, i32)>,
+        ep_loss: &mut f64,
+        ep_trained: &mut u64,
+        samples_done: &mut u64,
+    ) -> Result<()> {
+        let (vplan, cplan) = self.engine.plan_folded(a);
+        let t0 = std::time::Instant::now();
+        let vertex = self.gather(store, Matrix::Vertex, a.vid, vplan);
+        let context = self.gather(store, Matrix::Context, a.cid, cplan);
+        self.counters
+            .add(&self.counters.gather_nanos, t0.elapsed().as_nanos() as u64);
+        self.fold_dispatch(
+            store, a.worker, a.vid, a.cid, lr, block, vertex, context, false, ep_loss,
+            ep_trained, samples_done,
+        )
+    }
+
+    /// Recovery bookkeeping at every group fence: pull all resident
+    /// partitions home (the host store becomes the authoritative replay
+    /// base), refresh each slot's journal RNG base, and clear the
+    /// journal — "dispatched since the last fence" is exactly what a
+    /// dead slot needs replayed. No-op when recovery is off: the
+    /// per-group sync costs wire traffic, which fail-loud runs don't pay.
+    fn group_fence(&mut self, store: &mut EmbeddingStore) -> Result<()> {
+        if self.recovery.is_none() {
+            return Ok(());
+        }
+        let rngs = self.sync_residents(store)?;
+        let rec = self.recovery.as_mut().unwrap();
+        rec.base_rng = rngs;
+        for j in &mut rec.journal {
+            j.clear();
+        }
+        debug_assert!(rec.pending_discards.is_empty());
+        Ok(())
+    }
+
+    /// [`Self::recover`] from inside a sync fence: nothing is in flight,
+    /// so every journal entry is complete and a fold replays only
+    /// scatter-only work — the episode counters cannot move.
+    fn recover_at_fence(&mut self, store: &mut EmbeddingStore, err: anyhow::Error) -> Result<()> {
+        let (mut l, mut t, mut s) = (0.0f64, 0u64, 0u64);
+        self.recover(store, err, &mut l, &mut t, &mut s)?;
+        anyhow::ensure!(
+            t == 0 && s == 0,
+            "internal: fence recovery trained {t} samples — fence journals must be complete"
+        );
+        Ok(())
+    }
+
+    /// Apply one sync reply: record the worker's RNG snapshot and scatter
+    /// its resident clones home. With recovery on, a re-answered fence
+    /// round may deliver duplicates — re-scattering identical bytes is
+    /// idempotent, so they are tolerated; without recovery a duplicate is
+    /// the PR-7 pointed error.
+    fn apply_sync(
+        &mut self,
+        store: &mut EmbeddingStore,
+        sync: SyncReply,
+        rngs: &mut [[u64; 4]],
+        seen: &mut [bool],
+    ) -> Result<()> {
+        let n = seen.len();
+        anyhow::ensure!(
+            sync.worker < n,
+            "sync reply from out-of-range worker {} ({n} workers)",
+            sync.worker
+        );
+        anyhow::ensure!(
+            self.recovery.is_some() || !seen[sync.worker],
+            "duplicate sync reply from worker {} — duplicated delivery",
+            sync.worker
+        );
+        seen[sync.worker] = true;
+        rngs[sync.worker] = sync.rng_state;
+        let t0 = std::time::Instant::now();
+        for part in sync.residents {
+            store.scatter_partition(self.parts, part.pid, part.matrix, &part.data);
+            self.counters
+                .add(&self.counters.bytes_from_device, (part.data.len() * 4) as u64);
+        }
+        self.counters
+            .add(&self.counters.scatter_nanos, t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
     /// Fence: pull clones of every worker-resident partition back into
-    /// the store (checkpoints + end of training) and collect each
-    /// worker's RNG snapshot, indexed by worker (replies arrive unordered
-    /// on the shared channel). Requires no jobs in flight.
+    /// the store (group fences in recovery mode, checkpoints, end of
+    /// training) and collect each worker's RNG snapshot, indexed by
+    /// worker (replies arrive unordered on the shared channel). Requires
+    /// no jobs in flight. With recovery on, a worker dying mid-fence is
+    /// recovered (replaced or folded) and the fence retried — Sync is
+    /// idempotent worker-side (clones; the RNG does not advance), so
+    /// re-answers just re-scatter identical bytes; folded slots answer
+    /// from the runner's own RNG chain.
     fn sync_residents(&mut self, store: &mut EmbeddingStore) -> Result<Vec<[u64; 4]>> {
         assert!(self.in_flight.is_empty(), "sync fence with jobs in flight");
         let n = self.transport.num_workers();
-        for w in 0..n {
-            self.transport.send(w, JobMsg::Sync)?;
-        }
         let mut rngs = vec![[0u64; 4]; n];
         let mut seen = vec![false; n];
-        for _ in 0..n {
-            match self.transport.recv()? {
-                Reply::Synced(sync) => {
-                    anyhow::ensure!(
-                        sync.worker < n,
-                        "sync reply from out-of-range worker {} ({n} workers)",
-                        sync.worker
-                    );
-                    anyhow::ensure!(
-                        !seen[sync.worker],
-                        "duplicate sync reply from worker {} — duplicated delivery",
-                        sync.worker
-                    );
-                    seen[sync.worker] = true;
-                    rngs[sync.worker] = sync.rng_state;
-                    let t0 = std::time::Instant::now();
-                    for part in sync.residents {
-                        store.scatter_partition(self.parts, part.pid, part.matrix, &part.data);
-                        self.counters
-                            .add(&self.counters.bytes_from_device, (part.data.len() * 4) as u64);
+        loop {
+            for s in std::mem::take(&mut self.stray_syncs) {
+                self.apply_sync(store, s, &mut rngs, &mut seen)?;
+            }
+            if let Some(rec) = &self.recovery {
+                for w in 0..n {
+                    if rec.folded[w] && !seen[w] {
+                        seen[w] = true;
+                        rngs[w] = rec.folded_rng[w];
                     }
-                    self.counters
-                        .add(&self.counters.scatter_nanos, t0.elapsed().as_nanos() as u64);
                 }
-                Reply::Job(_) => anyhow::bail!("unexpected job result at sync fence"),
+            }
+            let discards_pending = self
+                .recovery
+                .as_ref()
+                .is_some_and(|rec| !rec.pending_discards.is_empty());
+            if seen.iter().all(|&s| s) && !discards_pending {
+                return Ok(rngs);
+            }
+            // (re-)request every slot still outstanding; a failure in
+            // this round is recovered and the whole fence retried
+            let mut round_err: Option<anyhow::Error> = None;
+            for w in 0..n {
+                if seen[w] {
+                    continue;
+                }
+                if let Err(e) = self.transport.send(w, JobMsg::Sync) {
+                    round_err = Some(e);
+                    break;
+                }
+            }
+            while round_err.is_none() {
+                let discards_pending = self
+                    .recovery
+                    .as_ref()
+                    .is_some_and(|rec| !rec.pending_discards.is_empty());
+                if seen.iter().all(|&s| s) && !discards_pending {
+                    break;
+                }
+                match self.transport.recv() {
+                    Ok(Reply::Synced(sync)) => {
+                        self.apply_sync(store, sync, &mut rngs, &mut seen)?
+                    }
+                    Ok(Reply::Job(res)) => {
+                        // only a recovery replay's second delivery is
+                        // legal at a fence
+                        if let Some(res) = self.discard_replayed(store, res)? {
+                            anyhow::bail!(
+                                "unexpected job result at sync fence (block ({}, {}))",
+                                res.vid,
+                                res.cid
+                            );
+                        }
+                    }
+                    Ok(Reply::Pong) => {}
+                    Err(e) => round_err = Some(e),
+                }
+            }
+            match round_err {
+                Some(e) => self.recover_at_fence(store, e)?,
+                None => {} // loop re-checks completion and returns
             }
         }
-        Ok(rngs)
     }
 }
 
 /// Run the post-pool observer hook: legacy callbacks get (samples, store)
 /// after a residency sync; state observers additionally get the worker
 /// RNG snapshots and schedule position as a [`CheckpointState`] and may
-/// stop the run at this pool boundary.
+/// stop the run at this pool boundary. When a fault-checkpoint stash is
+/// given, the full state is additionally cloned into it — the last
+/// completed pool boundary an exhausted recovery writes out before dying.
 #[allow(clippy::too_many_arguments)]
 fn observe_pool(
     observer: &mut Observer,
@@ -920,30 +1702,34 @@ fn observe_pool(
     pool_size: usize,
     pools_done: u64,
     samples_done: u64,
+    fault_stash: Option<&mut Option<TrainCheckpoint>>,
 ) -> Result<TrainFlow> {
+    if matches!(observer, Observer::None) && fault_stash.is_none() {
+        return Ok(TrainFlow::Continue);
+    }
+    let rngs = runner.sync_residents(store)?;
+    let state = CheckpointState {
+        seed: cfg.seed,
+        num_edges: num_edges as u64,
+        partitions: num_parts as u64,
+        total_samples: runner.total_samples,
+        pool_size: pool_size as u64,
+        pools_done,
+        samples_planned: runner.samples_planned,
+        samples_done,
+        worker_rngs: &rngs,
+        store: &*store,
+    };
+    if let Some(stash) = fault_stash {
+        *stash = Some(state.to_owned());
+    }
     match observer {
         Observer::None => Ok(TrainFlow::Continue),
         Observer::Legacy(cb) => {
-            runner.sync_residents(store)?;
             cb(samples_done, store);
             Ok(TrainFlow::Continue)
         }
-        Observer::State(cb) => {
-            let rngs = runner.sync_residents(store)?;
-            let state = CheckpointState {
-                seed: cfg.seed,
-                num_edges: num_edges as u64,
-                partitions: num_parts as u64,
-                total_samples: runner.total_samples,
-                pool_size: pool_size as u64,
-                pools_done,
-                samples_planned: runner.samples_planned,
-                samples_done,
-                worker_rngs: &rngs,
-                store: &*store,
-            };
-            cb(&state)
-        }
+        Observer::State(cb) => cb(&state),
     }
 }
 

@@ -58,6 +58,53 @@
 use crate::embedding::Matrix;
 use crate::scheduler::{Assignment, EpisodeSchedule};
 
+/// One partition transfer as the recovery journal remembers it: the
+/// original [`ShipPlan`] plus, when needed for replay, a snapshot of the
+/// exact payload that was (or would have been) shipped.
+///
+/// Snapshot policy — `data` is `Some` exactly when this shipment is the
+/// journal's *first* touch of its partition on this worker within the
+/// current group (whether the original upload was real or elided): later
+/// touches chain off an in-journal predecessor whose `keep` held the
+/// buffer on-device, so replaying the chain regenerates them, while a
+/// first touch's input bytes can be destroyed in the host store by the
+/// job's own scattered output (a `keep: false` result lands home before
+/// the failure) and must be retained. Within one worker's journal a
+/// predecessor touch always has `keep: true` — the planner keeps exactly
+/// when the next toucher is the same worker — so every non-first touch
+/// is reconstructible and carries `data: None`.
+#[derive(Debug, Clone)]
+pub struct JournalShipment {
+    /// Payload to re-upload on replay (`None` = rebuilt by replaying the
+    /// predecessor entries of the same journal).
+    pub data: Option<Vec<f32>>,
+    pub src_version: u64,
+    pub keep: bool,
+}
+
+/// One dispatched job as retained by the in-flight journal: everything
+/// needed to re-send the job verbatim — block samples, LR at dispatch,
+/// shipment plans with first-touch payload snapshots — plus whether its
+/// result was already absorbed. Entries live from dispatch until the
+/// next group fence; `done` entries are retained (not popped) because a
+/// completed job's `keep: true` outputs exist only on the worker that
+/// trained it, and regenerating them after that worker dies requires
+/// replaying the whole per-worker chain in order.
+#[derive(Debug, Clone)]
+pub struct JournalEntry {
+    pub vid: usize,
+    pub cid: usize,
+    pub lr: f32,
+    pub block: Vec<(i32, i32)>,
+    pub vertex: JournalShipment,
+    pub context: JournalShipment,
+    /// The job's result was absorbed before the failure. On replay its
+    /// re-computed result is either discarded (replacement rebuilt its
+    /// own residency) or scatter-only (fold: the kept outputs the dead
+    /// worker held must be regenerated into the host store).
+    pub done: bool,
+}
+
 /// The engine's decision for one partition transfer of one job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShipPlan {
@@ -217,6 +264,52 @@ impl TransferEngine {
         }
         self.resident[worker][i] = if keep { Some(cur + 1) } else { None };
         ShipPlan { upload, keep, src_version: cur }
+    }
+
+    // --- worker-failure recovery hooks -------------------------------
+
+    /// Plan `a` for a worker slot that was folded onto survivors: the
+    /// surviving executor gets fresh bytes and ships the result straight
+    /// home (upload, no keep), but partition versions and the schedule
+    /// cursor advance exactly as the fault-free plan would — so every
+    /// later plan, on any worker, is unchanged.
+    pub fn plan_folded(&mut self, a: &Assignment) -> (ShipPlan, ShipPlan) {
+        let (v, c) = self.plan(a);
+        // undo any keep the fault-free plan recorded for the dead slot
+        self.drop_residency(a.worker, Matrix::Vertex, a.vid);
+        self.drop_residency(a.worker, Matrix::Context, a.cid);
+        (
+            ShipPlan { upload: true, keep: false, ..v },
+            ShipPlan { upload: true, keep: false, ..c },
+        )
+    }
+
+    /// Forget one resident entry (recovery: its holder died, so a future
+    /// plan must re-upload from the host store).
+    pub fn drop_residency(&mut self, worker: usize, matrix: Matrix, pid: usize) {
+        let i = self.idx(matrix, pid);
+        if self.resident[worker][i].take().is_some() {
+            self.occupancy[worker] -= 1;
+        }
+    }
+
+    /// Record that `worker` holds `version` of a partition (recovery: a
+    /// replacement rebuilt this entry by replaying the journal).
+    pub fn set_resident(&mut self, worker: usize, matrix: Matrix, pid: usize, version: u64) {
+        let i = self.idx(matrix, pid);
+        if self.resident[worker][i].replace(version).is_none() {
+            self.occupancy[worker] += 1;
+        }
+    }
+
+    /// Forget everything resident on `worker` (recovery: it died; a
+    /// replacement starts with an empty cache, a folded slot never gets
+    /// another elided upload).
+    pub fn forget_worker(&mut self, worker: usize) {
+        for slot in self.resident[worker].iter_mut() {
+            *slot = None;
+        }
+        self.occupancy[worker] = 0;
     }
 
     /// Take a recycled f32 buffer for a partition gather.
@@ -384,6 +477,44 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn recovery_hooks_keep_versions_and_clear_residency() {
+        let sched = EpisodeSchedule::new(4, 2, false).with_residency_order();
+        let seq = sched.execution_sequence();
+        let mut faulty = TransferEngine::new(&sched, true, false, None);
+        let mut clean = TransferEngine::new(&sched, true, false, None);
+        // fold worker 0 after the first pass: versions and the cursor
+        // must advance identically to the fault-free engine, uploads for
+        // the folded slot must be forced, and nothing stays resident
+        for a in &seq {
+            assert_eq!(faulty.plan(a), clean.plan(a));
+        }
+        faulty.forget_worker(0);
+        assert_eq!(faulty.resident_count(0), 0);
+        for a in &seq {
+            let clean_plans = clean.plan(a);
+            if a.worker == 0 {
+                let (v, c) = faulty.plan_folded(a);
+                assert!(v.upload && c.upload && !v.keep && !c.keep);
+                assert_eq!(v.src_version, clean_plans.0.src_version);
+                assert_eq!(c.src_version, clean_plans.1.src_version);
+                assert_eq!(faulty.resident_count(0), 0, "folded slot never re-pins");
+            } else {
+                assert_eq!(faulty.plan(a), clean_plans, "survivor plans unchanged");
+            }
+        }
+        // set_resident / drop_residency round-trip with occupancy
+        let mut engine = TransferEngine::new(&sched, true, false, None);
+        engine.set_resident(1, Matrix::Context, 2, 5);
+        assert_eq!(engine.resident_count(1), 1);
+        engine.set_resident(1, Matrix::Context, 2, 6); // overwrite, same slot
+        assert_eq!(engine.resident_count(1), 1);
+        engine.drop_residency(1, Matrix::Context, 2);
+        assert_eq!(engine.resident_count(1), 0);
+        engine.drop_residency(1, Matrix::Context, 2); // idempotent
+        assert_eq!(engine.resident_count(1), 0);
     }
 
     #[test]

@@ -66,22 +66,28 @@ use crate::sampling::NegativeSampler;
 use crate::util::rng::{streams, Rng};
 
 use super::worker::WorkerCore;
-pub use super::worker::{Job, JobMsg, JobResult, Reply, ResidentPart, Shipment, SyncReply};
+pub use super::worker::{
+    Job, JobMsg, JobResult, Reply, ResidentPart, Shipment, SyncReply, Takeover,
+};
 
 /// Handshake magic: the first bytes a worker sends.
 pub const HELLO_MAGIC: [u8; 4] = *b"GVWK";
 /// Assignment magic: the first bytes of a coordinator's assignment body.
 pub const ASSIGN_MAGIC: [u8; 4] = *b"GVAS";
 /// Bumped on any wire-format change; both ends must match exactly.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// v2: PING/PONG liveness frames, job takeover (fold) section, post-job
+/// RNG state in results, and the rejoin generation counter in ASSIGN.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 const MSG_TRAIN: u8 = 1;
 const MSG_SYNC: u8 = 2;
 const MSG_STOP: u8 = 3;
+const MSG_PING: u8 = 4;
 const MSG_RESULT: u8 = 17;
 const MSG_SYNCED: u8 = 18;
 const MSG_ERR: u8 = 19;
 const MSG_BYE: u8 = 20;
+const MSG_PONG: u8 = 21;
 
 const ASSIGN_OK: u8 = 0;
 const ASSIGN_REJECT: u8 = 1;
@@ -127,6 +133,31 @@ pub trait Transport: Send {
     /// ledger, verify it against their own per-connection counts and
     /// return the totals; the local transport returns `None`.
     fn shutdown(&mut self) -> Result<Option<TransportReport>>;
+
+    // --- worker-failure recovery hooks (no-ops on transports without
+    // --- failure detection; the episode runner only consults them when
+    // --- `TrainConfig::recovery_enabled()`) ---
+
+    /// Which worker slot this transport last declared dead (recv timeout
+    /// naming a silent slot, connection loss, injected kill). `None` on
+    /// transports that cannot attribute failures.
+    fn failed_worker(&self) -> Option<usize> {
+        None
+    }
+
+    /// Try to install a replacement worker for `slot` (the rejoin
+    /// protocol): poll the still-open listener, handshake the first valid
+    /// candidate with a RE-ASSIGN carrying `rng_state` and the slot's
+    /// next generation, reject stragglers pointedly. `Ok(true)` = a
+    /// replacement is live; `Ok(false)` = nobody dialed in (the caller
+    /// backs off and retries, or folds the slot onto survivors).
+    fn try_replace(&mut self, _slot: usize, _rng_state: [u64; 4]) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Permanently retire `slot` (its journal was folded onto survivors):
+    /// no further sends go to it and shutdown skips its ledger.
+    fn mark_dead(&mut self, _slot: usize) {}
 }
 
 // ---------------------------------------------------------------------
@@ -246,9 +277,20 @@ pub fn encode_job_msg(msg: &JobMsg) -> Vec<u8> {
             }
             put_shipment(&mut out, &job.vertex);
             put_shipment(&mut out, &job.context);
+            match &job.takeover {
+                None => out.push(0),
+                Some(t) => {
+                    out.push(1);
+                    for w in t.rng {
+                        out.extend_from_slice(&w.to_le_bytes());
+                    }
+                    out.extend_from_slice(&t.chunk_samples.to_le_bytes());
+                }
+            }
             out
         }
         JobMsg::Sync => vec![MSG_SYNC],
+        JobMsg::Ping => vec![MSG_PING],
         JobMsg::Stop => vec![MSG_STOP],
     }
 }
@@ -270,9 +312,21 @@ pub fn decode_job_msg(payload: &[u8]) -> Result<JobMsg> {
             }
             let vertex = get_shipment(&mut c)?;
             let context = get_shipment(&mut c)?;
-            JobMsg::Train(Job { vid, cid, block, vertex, context, lr })
+            let takeover = match c.u8()? {
+                0 => None,
+                1 => {
+                    let mut rng = [0u64; 4];
+                    for w in &mut rng {
+                        *w = c.u64()?;
+                    }
+                    Some(Takeover { rng, chunk_samples: c.u32()? })
+                }
+                f => bail!("unknown takeover flag {f}"),
+            };
+            JobMsg::Train(Job { vid, cid, block, vertex, context, lr, takeover })
         }
         MSG_SYNC => JobMsg::Sync,
+        MSG_PING => JobMsg::Ping,
         MSG_STOP => JobMsg::Stop,
         tag => bail!("unknown job-message tag {tag}"),
     };
@@ -302,6 +356,9 @@ pub fn encode_wire_reply(reply: &WireReply) -> Vec<u8> {
             out.extend_from_slice(&(r.cid as u32).to_le_bytes());
             out.extend_from_slice(&r.loss.to_le_bytes());
             out.extend_from_slice(&r.trained.to_le_bytes());
+            for w in r.rng_state {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
             for opt in [&r.vertex, &r.context] {
                 match opt {
                     Some(data) => {
@@ -334,6 +391,7 @@ pub fn encode_wire_reply(reply: &WireReply) -> Vec<u8> {
             put_str(&mut out, msg);
             out
         }
+        WireReply::Reply(Reply::Pong) => vec![MSG_PONG],
         WireReply::Bye { received, sent } => {
             let mut out = vec![MSG_BYE];
             out.extend_from_slice(&received.to_le_bytes());
@@ -352,6 +410,10 @@ pub fn decode_wire_reply(payload: &[u8]) -> Result<WireReply> {
             let cid = c.u32()? as usize;
             let loss = c.f32()?;
             let trained = c.u64()?;
+            let mut rng_state = [0u64; 4];
+            for w in &mut rng_state {
+                *w = c.u64()?;
+            }
             let mut opts = [None, None];
             for opt in &mut opts {
                 match c.u8()? {
@@ -366,6 +428,7 @@ pub fn decode_wire_reply(payload: &[u8]) -> Result<WireReply> {
             }
             let [vertex, context] = opts;
             WireReply::Reply(Reply::Job(JobResult {
+                worker: 0, // not a wire field; the reader thread stamps it
                 vid,
                 cid,
                 vertex,
@@ -373,6 +436,7 @@ pub fn decode_wire_reply(payload: &[u8]) -> Result<WireReply> {
                 block: Vec::new(),
                 loss,
                 trained,
+                rng_state,
             }))
         }
         MSG_SYNCED => {
@@ -394,6 +458,7 @@ pub fn decode_wire_reply(payload: &[u8]) -> Result<WireReply> {
             WireReply::Reply(Reply::Synced(SyncReply { worker, rng_state, residents }))
         }
         MSG_ERR => WireReply::Err(get_str(&mut c)?),
+        MSG_PONG => WireReply::Reply(Reply::Pong),
         MSG_BYE => WireReply::Bye { received: c.u64()?, sent: c.u64()? },
         tag => bail!("unknown reply tag {tag}"),
     };
@@ -438,6 +503,7 @@ pub fn reply_payload_bytes(reply: &Reply) -> u64 {
         Reply::Synced(s) => {
             (s.residents.iter().map(|p| p.data.len()).sum::<usize>() * 4) as u64
         }
+        Reply::Pong => 0,
     }
 }
 
@@ -496,6 +562,11 @@ pub struct WorkerAssignment {
     pub neg_weight: f32,
     pub backend: BackendKind,
     pub rng_state: [u64; 4],
+    /// Rejoin generation of this slot: 0 for the run's original workers;
+    /// a replacement accepted after a worker death gets the slot's next
+    /// generation (RE-ASSIGN), so both ends can tell a fresh start from a
+    /// mid-run rejoin and stale peers get a pointed reject.
+    pub generation: u64,
     /// Per-partition deg^0.75 weights, bit-exact
     /// ([`NegativeSampler::partition_weights`]).
     pub neg_weights: Vec<Vec<f32>>,
@@ -522,6 +593,7 @@ pub fn encode_assign(a: &WorkerAssignment) -> Vec<u8> {
     for w in a.rng_state {
         out.extend_from_slice(&w.to_le_bytes());
     }
+    out.extend_from_slice(&a.generation.to_le_bytes());
     for weights in &a.neg_weights {
         net::put_f32s(&mut out, weights);
     }
@@ -596,6 +668,7 @@ pub fn decode_assign(payload: &[u8]) -> Result<WorkerAssignment> {
         *w = c.u64()?;
     }
     ensure!(rng_state != [0u64; 4], "assignment carries an all-zero rng state");
+    let generation = c.u64()?;
     let mut neg_weights = Vec::with_capacity(partitions);
     for _ in 0..partitions {
         let mut w = Vec::new();
@@ -616,6 +689,7 @@ pub fn decode_assign(payload: &[u8]) -> Result<WorkerAssignment> {
         neg_weight,
         backend,
         rng_state,
+        generation,
         neg_weights,
     })
 }
@@ -684,6 +758,7 @@ pub fn make_assignments(
                 Some(states) => states[i],
                 None => base_rng.stream(streams::WORKER, i as u64).state(),
             },
+            generation: 0,
             neg_weights: neg_weights.to_vec(),
         })
         .collect())
@@ -693,12 +768,22 @@ pub fn make_assignments(
 // SocketTransport: the coordinator side of the TCP protocol.
 // ---------------------------------------------------------------------
 
-enum SocketEvent {
-    Reply(usize, Reply),
-    WorkerErr(usize, String),
-    Bye { worker: usize, received: u64, sent: u64 },
-    Eof(usize),
-    ReadErr(usize, String),
+/// One event off a reader thread. `gen` is the slot generation the
+/// reader was spawned under; events from a replaced or retired reader
+/// are stale and silently dropped by the receive loops, so a dying
+/// connection can never be confused with its replacement.
+struct SocketEvent {
+    worker: usize,
+    gen: u64,
+    kind: SocketEventKind,
+}
+
+enum SocketEventKind {
+    Reply(Reply),
+    WorkerErr(String),
+    Bye { received: u64, sent: u64 },
+    Eof,
+    ReadErr(String),
 }
 
 /// TCP delivery: one stream per connected `graphvite worker`, a reader
@@ -706,13 +791,52 @@ enum SocketEvent {
 /// local transport's shared result channel), and a per-connection byte
 /// ledger verified against each worker's BYE at shutdown.
 pub struct SocketTransport {
+    /// Kept open after the run starts when recovery is enabled, so a
+    /// replacement `graphvite worker --connect` can rejoin a dead slot.
+    listener: Option<TcpListener>,
+    /// Per-slot assignment templates, reused (with a fresh RNG state and
+    /// bumped generation) as the RE-ASSIGN for replacements.
+    assignments: Vec<WorkerAssignment>,
     streams: Vec<TcpStream>,
     rx: mpsc::Receiver<SocketEvent>,
+    tx: mpsc::Sender<SocketEvent>,
     readers: Vec<JoinHandle<()>>,
-    /// Shipment payload bytes sent per worker (main thread).
+    /// Shipment payload bytes sent per worker (main thread), current
+    /// generation only.
     up_bytes: Vec<u64>,
-    /// Result payload bytes received per worker (reader threads).
+    /// Result payload bytes received per worker (reader threads),
+    /// current generation only.
     down_bytes: Vec<Arc<AtomicU64>>,
+    /// Up-bytes of replaced/dead generations, retired out of the
+    /// per-slot BYE asserts but still part of the run totals.
+    retired_up: u64,
+    /// Down-byte counters of retired readers (their threads may still be
+    /// counting a final frame when retired, so the Arcs are summed at
+    /// shutdown rather than snapshotted at replacement).
+    retired_down: Vec<Arc<AtomicU64>>,
+    /// Result payload bytes of stale-dropped replies: counted by a
+    /// reader at receive time but never scattered (their generation was
+    /// retired or folded before the coordinator drained them), so they
+    /// must be backed out of the run total to keep it equal to the
+    /// transfer-engine ledger.
+    stale_down: u64,
+    /// Per-slot rejoin generation; reader events from older generations
+    /// are stale and dropped.
+    generation: Vec<u64>,
+    /// Slots folded onto survivors: no sends, no BYE expected.
+    dead: Vec<bool>,
+    /// Last slot this transport declared dead ([`Transport::failed_worker`]).
+    failed: Option<usize>,
+    /// (vid, cid) of jobs sent but not yet answered, per slot — named in
+    /// the recv-timeout error so "a worker is stalled" points at *which*.
+    outstanding: Vec<Vec<(usize, usize)>>,
+    /// Millis since `epoch` each worker was last heard from (any frame,
+    /// including PONG); updated by reader threads.
+    last_heard: Vec<Arc<AtomicU64>>,
+    epoch: Instant,
+    /// PING cadence while blocked in recv; `None` disables liveness
+    /// probes (the pre-recovery behavior).
+    heartbeat: Option<Duration>,
     /// Emptied block allocations from serialized jobs, reattached to
     /// decoded results — the coordinator's block free-list keeps
     /// recycling exactly as in local mode.
@@ -729,10 +853,16 @@ impl SocketTransport {
     /// the assignment carries that worker's complete state). Invalid
     /// peers get a reject frame and are dropped without disturbing the
     /// slot; the run only starts once every worker acknowledged READY.
+    ///
+    /// `heartbeat` enables PING probes while blocked in recv;
+    /// `keep_listener` holds the listening socket open for the rejoin
+    /// protocol (both wired from the recovery config keys).
     pub fn accept(
         listener: TcpListener,
         assignments: Vec<WorkerAssignment>,
         recv_timeout: Option<Duration>,
+        heartbeat: Option<Duration>,
+        keep_listener: bool,
     ) -> Result<Self> {
         let n = assignments.len();
         ensure!(n >= 1, "socket transport needs at least one worker");
@@ -764,86 +894,201 @@ impl SocketTransport {
         }
         eprintln!("transport: {n} workers connected, handshake complete");
 
+        let listener = if keep_listener {
+            listener
+                .set_nonblocking(true)
+                .context("keeping rejoin listener open (set_nonblocking)")?;
+            Some(listener)
+        } else {
+            None
+        };
+
+        let epoch = Instant::now();
         let (tx, rx) = mpsc::channel();
         let mut readers = Vec::with_capacity(n);
         let mut down_bytes = Vec::with_capacity(n);
+        let mut last_heard = Vec::with_capacity(n);
         for (i, stream) in streams.iter().enumerate() {
             let read_half = stream.try_clone().context("cloning worker stream")?;
             let tx = tx.clone();
             let counter = Arc::new(AtomicU64::new(0));
             down_bytes.push(Arc::clone(&counter));
+            let heard = Arc::new(AtomicU64::new(0));
+            last_heard.push(Arc::clone(&heard));
             readers.push(
                 std::thread::Builder::new()
                     .name(format!("transport-rx-{i}"))
-                    .spawn(move || reader_loop(i, read_half, tx, counter))
+                    .spawn(move || reader_loop(i, 0, read_half, tx, counter, heard, epoch))
                     .context("spawning transport reader")?,
             );
         }
         Ok(SocketTransport {
+            listener,
+            assignments,
             streams,
             rx,
+            tx,
             readers,
             up_bytes: vec![0; n],
             down_bytes,
+            retired_up: 0,
+            retired_down: Vec::new(),
+            stale_down: 0,
+            generation: vec![0; n],
+            dead: vec![false; n],
+            failed: None,
+            outstanding: vec![Vec::new(); n],
+            last_heard,
+            epoch,
+            heartbeat,
             block_spare: Vec::new(),
             byes: vec![None; n],
             recv_timeout,
         })
     }
 
+    /// Events from replaced or folded generations must not be confused
+    /// with the live slot (a dying connection's EOF arriving after its
+    /// replacement handshook, a folded worker's stale reply).
+    fn stale(&self, ev: &SocketEvent) -> bool {
+        self.dead[ev.worker] || ev.gen != self.generation[ev.worker]
+    }
+
+    /// Drop a stale event, backing its reply payload (already counted by
+    /// its reader thread) out of the down ledger — the coordinator never
+    /// scatters it, so the transfer engine never counts it.
+    fn drop_stale(&mut self, ev: SocketEvent) {
+        if let SocketEventKind::Reply(ref reply) = ev.kind {
+            self.stale_down += reply_payload_bytes(reply);
+        }
+    }
+
     fn map_event(&mut self, ev: SocketEvent) -> Result<Reply> {
-        match ev {
-            SocketEvent::Reply(_, mut reply) => {
+        let i = ev.worker;
+        match ev.kind {
+            SocketEventKind::Reply(mut reply) => {
                 if let Reply::Job(ref mut r) = reply {
                     r.block = self.block_spare.pop().unwrap_or_default();
+                    self.outstanding[i].retain(|&(v, c)| (v, c) != (r.vid, r.cid));
                 }
                 Ok(reply)
             }
-            SocketEvent::WorkerErr(i, msg) => bail!("worker {i}: {msg}"),
-            SocketEvent::Bye { worker, .. } => {
-                bail!("worker {worker} sent its shutdown ledger mid-run")
+            SocketEventKind::WorkerErr(msg) => bail!("worker {i}: {msg}"),
+            SocketEventKind::Bye { .. } => {
+                bail!("worker {i} sent its shutdown ledger mid-run")
             }
-            SocketEvent::Eof(i) => bail!(
-                "worker {i} disconnected mid-run (connection closed without a shutdown ledger)"
+            SocketEventKind::Eof => {
+                self.failed = Some(i);
+                bail!(
+                    "worker {i} disconnected mid-run (connection closed without a \
+                     shutdown ledger)"
+                )
+            }
+            SocketEventKind::ReadErr(msg) => {
+                self.failed = Some(i);
+                bail!("worker {i} connection failed: {msg}")
+            }
+        }
+    }
+
+    /// Broadcast a liveness PING to every live worker. A failed write is
+    /// itself a liveness verdict: that worker is declared dead.
+    fn send_pings(&mut self) -> Result<()> {
+        let ping = encode_job_msg(&JobMsg::Ping);
+        for i in 0..self.streams.len() {
+            if self.dead[i] {
+                continue;
+            }
+            if let Err(e) = net::write_frame(&mut self.streams[i], &ping, MAX_CONTROL_FRAME) {
+                self.failed = Some(i);
+                return Err(anyhow!(e).context(format!(
+                    "worker {i} connection failed while sending a liveness ping"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the recv-timeout error: name the slot that has been silent
+    /// longest and list its outstanding job ids, so "a worker is
+    /// stalled" points at *which* worker and *what* it owes.
+    fn timeout_error(&mut self, t: Duration) -> anyhow::Error {
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        let quietest = |with_jobs: bool| {
+            (0..self.streams.len())
+                .filter(|&i| !self.dead[i])
+                .filter(|&i| !with_jobs || !self.outstanding[i].is_empty())
+                .min_by_key(|&i| self.last_heard[i].load(Ordering::Relaxed))
+        };
+        // prefer a slot that actually owes results; fall back to the
+        // longest-silent live slot
+        let suspect = quietest(true).or_else(|| quietest(false));
+        match suspect {
+            Some(i) => {
+                self.failed = Some(i);
+                let heard = self.last_heard[i].load(Ordering::Relaxed);
+                let age = Duration::from_millis(now_ms.saturating_sub(heard));
+                anyhow!(
+                    "no worker result within {t:?} (worker_timeout_secs) — worker {i} \
+                     went silent (last heard {age:?} ago) with {} outstanding job(s) \
+                     {:?}",
+                    self.outstanding[i].len(),
+                    self.outstanding[i]
+                )
+            }
+            None => anyhow!(
+                "no worker result within {t:?} (worker_timeout_secs) — a worker is \
+                 stalled or a message was lost"
             ),
-            SocketEvent::ReadErr(i, msg) => bail!("worker {i} connection failed: {msg}"),
         }
     }
 }
 
 fn reader_loop(
     worker: usize,
+    gen: u64,
     mut stream: TcpStream,
     tx: mpsc::Sender<SocketEvent>,
     bytes: Arc<AtomicU64>,
+    heard: Arc<AtomicU64>,
+    epoch: Instant,
 ) {
+    let event = |kind| SocketEvent { worker, gen, kind };
     loop {
-        let event = match net::read_frame(&mut stream, MAX_DATA_FRAME) {
-            Ok(Some(payload)) => match decode_wire_reply(&payload) {
-                Ok(WireReply::Reply(r)) => {
-                    bytes.fetch_add(reply_payload_bytes(&r), Ordering::Relaxed);
-                    SocketEvent::Reply(worker, r)
+        let ev = match net::read_frame(&mut stream, MAX_DATA_FRAME) {
+            Ok(Some(payload)) => {
+                heard.store(epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
+                match decode_wire_reply(&payload) {
+                    Ok(WireReply::Reply(Reply::Pong)) => continue, // liveness only
+                    Ok(WireReply::Reply(mut r)) => {
+                        // stamp identity from the connection, not the wire
+                        if let Reply::Job(ref mut job) = r {
+                            job.worker = worker;
+                        }
+                        bytes.fetch_add(reply_payload_bytes(&r), Ordering::Relaxed);
+                        event(SocketEventKind::Reply(r))
+                    }
+                    Ok(WireReply::Err(msg)) => event(SocketEventKind::WorkerErr(msg)),
+                    Ok(WireReply::Bye { received, sent }) => {
+                        let _ = tx.send(event(SocketEventKind::Bye { received, sent }));
+                        return;
+                    }
+                    Err(e) => {
+                        let _ = tx.send(event(SocketEventKind::ReadErr(format!("{e:#}"))));
+                        return;
+                    }
                 }
-                Ok(WireReply::Err(msg)) => SocketEvent::WorkerErr(worker, msg),
-                Ok(WireReply::Bye { received, sent }) => {
-                    let _ = tx.send(SocketEvent::Bye { worker, received, sent });
-                    return;
-                }
-                Err(e) => {
-                    let _ = tx.send(SocketEvent::ReadErr(worker, format!("{e:#}")));
-                    return;
-                }
-            },
+            }
             Ok(None) => {
-                let _ = tx.send(SocketEvent::Eof(worker));
+                let _ = tx.send(event(SocketEventKind::Eof));
                 return;
             }
             Err(e) => {
-                let _ = tx.send(SocketEvent::ReadErr(worker, format!("{e:#}")));
+                let _ = tx.send(event(SocketEventKind::ReadErr(format!("{e:#}"))));
                 return;
             }
         };
-        if tx.send(event).is_err() {
+        if tx.send(ev).is_err() {
             return; // transport dropped
         }
     }
@@ -884,77 +1129,136 @@ impl Transport for SocketTransport {
     }
 
     fn send(&mut self, worker: usize, msg: JobMsg) -> Result<()> {
+        ensure!(
+            !self.dead[worker],
+            "internal: send to worker {worker}, which was folded onto survivors"
+        );
         let payload = encode_job_msg(&msg);
         if let JobMsg::Train(mut job) = msg {
             self.up_bytes[worker] += job_payload_bytes(&job);
+            self.outstanding[worker].push((job.vid, job.cid));
             job.block.clear();
             self.block_spare.push(job.block);
         }
         net::write_frame(&mut self.streams[worker], &payload, MAX_DATA_FRAME)
+            .map_err(|e| {
+                self.failed = Some(worker);
+                e
+            })
             .with_context(|| format!("sending to worker {worker}"))
     }
 
     fn recv(&mut self) -> Result<Reply> {
-        let ev = match self.recv_timeout {
-            None => self
-                .rx
-                .recv()
-                .map_err(|_| anyhow!("all worker connections closed"))?,
-            Some(t) => self.rx.recv_timeout(t).map_err(|e| match e {
-                mpsc::RecvTimeoutError::Timeout => anyhow!(
-                    "no worker result within {t:?} (worker_timeout_secs) — a worker is \
-                     stalled or a message was lost"
-                ),
-                mpsc::RecvTimeoutError::Disconnected => {
-                    anyhow!("all worker connections closed")
+        let deadline = self.recv_timeout.map(|t| Instant::now() + t);
+        loop {
+            let wait = match (deadline, self.heartbeat) {
+                (None, None) => {
+                    // block forever (local-mode semantics; EOF fails loud)
+                    let ev = self
+                        .rx
+                        .recv()
+                        .map_err(|_| anyhow!("all worker connections closed"))?;
+                    if self.stale(&ev) {
+                        self.drop_stale(ev);
+                        continue;
+                    }
+                    return self.map_event(ev);
                 }
-            })?,
-        };
-        self.map_event(ev)
+                (None, Some(h)) => h,
+                (Some(d), None) => d.saturating_duration_since(Instant::now()),
+                (Some(d), Some(h)) => h.min(d.saturating_duration_since(Instant::now())),
+            };
+            match self.rx.recv_timeout(wait) {
+                Ok(ev) => {
+                    if self.stale(&ev) {
+                        self.drop_stale(ev);
+                        continue;
+                    }
+                    return self.map_event(ev);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if let Some(d) = deadline {
+                        if Instant::now() >= d {
+                            let t = self.recv_timeout.expect("deadline implies timeout");
+                            return Err(self.timeout_error(t));
+                        }
+                    }
+                    // the slice expired before the deadline: probe
+                    self.send_pings()?;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    bail!("all worker connections closed")
+                }
+            }
+        }
     }
 
     fn try_recv(&mut self) -> Result<Option<Reply>> {
-        match self.rx.try_recv() {
-            Ok(ev) => self.map_event(ev).map(Some),
-            Err(mpsc::TryRecvError::Empty) => Ok(None),
-            Err(mpsc::TryRecvError::Disconnected) => {
-                Err(anyhow!("all worker connections closed"))
+        loop {
+            match self.rx.try_recv() {
+                Ok(ev) => {
+                    if self.stale(&ev) {
+                        self.drop_stale(ev);
+                        continue;
+                    }
+                    return self.map_event(ev).map(Some);
+                }
+                Err(mpsc::TryRecvError::Empty) => return Ok(None),
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    return Err(anyhow!("all worker connections closed"))
+                }
             }
         }
     }
 
     fn shutdown(&mut self) -> Result<Option<TransportReport>> {
-        for stream in &mut self.streams {
+        for (i, stream) in self.streams.iter_mut().enumerate() {
+            if self.dead[i] {
+                continue; // folded slots get no Stop and owe no BYE
+            }
             // a worker that already died surfaces below as a missing BYE
             let _ = net::write_frame(stream, &encode_job_msg(&JobMsg::Stop), MAX_DATA_FRAME);
         }
+        let live_missing = |byes: &[Option<(u64, u64)>], dead: &[bool]| -> Vec<usize> {
+            (0..byes.len()).filter(|&i| !dead[i] && byes[i].is_none()).collect()
+        };
         let deadline = Instant::now() + SHUTDOWN_TIMEOUT;
-        while self.byes.iter().any(Option::is_none) {
+        while !live_missing(&self.byes, &self.dead).is_empty() {
             let remaining = deadline.saturating_duration_since(Instant::now());
-            let missing: Vec<usize> = (0..self.byes.len())
-                .filter(|&i| self.byes[i].is_none())
-                .collect();
+            let missing = live_missing(&self.byes, &self.dead);
             ensure!(
                 !remaining.is_zero(),
                 "worker(s) {missing:?} sent no shutdown ledger within {SHUTDOWN_TIMEOUT:?}"
             );
             match self.rx.recv_timeout(remaining) {
-                Ok(SocketEvent::Bye { worker, received, sent }) => {
-                    ensure!(
-                        self.byes[worker].is_none(),
-                        "worker {worker} sent two shutdown ledgers"
-                    );
-                    self.byes[worker] = Some((received, sent));
-                }
-                Ok(SocketEvent::Reply(i, _)) => {
-                    bail!("worker {i} sent a result during shutdown (job still in flight?)")
-                }
-                Ok(SocketEvent::WorkerErr(i, msg)) => bail!("worker {i}: {msg}"),
-                Ok(SocketEvent::Eof(i)) => {
-                    bail!("worker {i} disconnected before sending its shutdown ledger")
-                }
-                Ok(SocketEvent::ReadErr(i, msg)) => {
-                    bail!("worker {i} connection failed during shutdown: {msg}")
+                Ok(ev) => {
+                    if self.stale(&ev) {
+                        self.drop_stale(ev); // retired generations owe nothing
+                        continue;
+                    }
+                    let i = ev.worker;
+                    match ev.kind {
+                        SocketEventKind::Bye { received, sent } => {
+                            ensure!(
+                                self.byes[i].is_none(),
+                                "worker {i} sent two shutdown ledgers"
+                            );
+                            self.byes[i] = Some((received, sent));
+                        }
+                        SocketEventKind::Reply(_) => {
+                            bail!(
+                                "worker {i} sent a result during shutdown \
+                                 (job still in flight?)"
+                            )
+                        }
+                        SocketEventKind::WorkerErr(msg) => bail!("worker {i}: {msg}"),
+                        SocketEventKind::Eof => {
+                            bail!("worker {i} disconnected before sending its shutdown ledger")
+                        }
+                        SocketEventKind::ReadErr(msg) => {
+                            bail!("worker {i} connection failed during shutdown: {msg}")
+                        }
+                    }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => bail!(
                     "worker(s) {missing:?} sent no shutdown ledger within {SHUTDOWN_TIMEOUT:?}"
@@ -967,9 +1271,20 @@ impl Transport for SocketTransport {
         for reader in self.readers.drain(..) {
             let _ = reader.join();
         }
-        let (mut up, mut down) = (0u64, 0u64);
+        // Totals: live generations (BYE-verified) + folded slots' own
+        // counts + retired (pre-replacement) generations, so the run
+        // totals still equal the transfer-engine ledger after recovery.
+        let (mut up, mut down) = (self.retired_up, 0u64);
+        for counter in &self.retired_down {
+            down += counter.load(Ordering::Relaxed);
+        }
         for (i, bye) in self.byes.iter().enumerate() {
-            let (received, sent) = bye.expect("loop above filled every bye");
+            if self.dead[i] {
+                up += self.up_bytes[i];
+                down += self.down_bytes[i].load(Ordering::Relaxed);
+                continue;
+            }
+            let (received, sent) = bye.expect("loop above filled every live bye");
             ensure!(
                 received == self.up_bytes[i],
                 "wire ledger mismatch for worker {i}: coordinator shipped {} payload bytes \
@@ -985,11 +1300,111 @@ impl Transport for SocketTransport {
             up += received;
             down += sent;
         }
+        // Replies dropped as stale were received (and counted by their
+        // retired/folded reader) but never scattered; back them out so
+        // the totals match the transfer-engine ledger exactly.
+        ensure!(
+            down >= self.stale_down,
+            "internal: stale-dropped reply bytes ({}) exceed the received total ({down})",
+            self.stale_down
+        );
+        down -= self.stale_down;
         let n = self.streams.len();
         eprintln!(
             "transport: ledger balanced across {n} workers ({up} bytes up, {down} bytes down)"
         );
         Ok(Some(TransportReport { workers: n, bytes_up: up, bytes_down: down }))
+    }
+
+    fn failed_worker(&self) -> Option<usize> {
+        self.failed
+    }
+
+    fn try_replace(&mut self, slot: usize, rng_state: [u64; 4]) -> Result<bool> {
+        let mut refilled = false;
+        loop {
+            let accepted = match &self.listener {
+                None => return Ok(false), // rejoin listener not kept open
+                Some(listener) => listener.accept(),
+            };
+            let (mut stream, peer) = match accepted {
+                Ok(pair) => pair,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(anyhow!(e).context("polling rejoin listener")),
+            };
+            // the listener is non-blocking; the handshake must not be
+            stream
+                .set_nonblocking(false)
+                .context("switching rejoin candidate to blocking")?;
+            if refilled {
+                // second candidate for an already-refilled slot: reject
+                // pointedly instead of silently dropping the connection
+                let msg = format!(
+                    "slot {slot} already refilled at generation {} — stale or \
+                     duplicate worker",
+                    self.generation[slot]
+                );
+                eprintln!("transport: rejected connection from {peer}: {msg}");
+                let _ = net::read_frame(&mut stream, MAX_CONTROL_FRAME); // its HELLO
+                let _ =
+                    net::write_frame(&mut stream, &encode_reject(&msg), MAX_CONTROL_FRAME);
+                continue;
+            }
+            let mut assign = self.assignments[slot].clone();
+            assign.rng_state = rng_state;
+            assign.generation = self.generation[slot] + 1;
+            match handshake_worker(&mut stream, &assign) {
+                Ok(()) => {
+                    eprintln!(
+                        "transport: worker {slot} replaced from {peer} \
+                         (generation {})",
+                        assign.generation
+                    );
+                    // retire the dead generation's ledger; the
+                    // replacement's BYE covers only its own traffic
+                    self.retired_up += self.up_bytes[slot];
+                    self.up_bytes[slot] = 0;
+                    self.retired_down.push(Arc::clone(&self.down_bytes[slot]));
+                    let counter = Arc::new(AtomicU64::new(0));
+                    self.down_bytes[slot] = Arc::clone(&counter);
+                    let heard = Arc::new(AtomicU64::new(
+                        self.epoch.elapsed().as_millis() as u64,
+                    ));
+                    self.last_heard[slot] = Arc::clone(&heard);
+                    self.generation[slot] = assign.generation;
+                    self.outstanding[slot].clear();
+                    let read_half =
+                        stream.try_clone().context("cloning replacement stream")?;
+                    let tx = self.tx.clone();
+                    let (gen, epoch) = (assign.generation, self.epoch);
+                    self.readers.push(
+                        std::thread::Builder::new()
+                            .name(format!("transport-rx-{slot}-g{gen}"))
+                            .spawn(move || {
+                                reader_loop(slot, gen, read_half, tx, counter, heard, epoch)
+                            })
+                            .context("spawning replacement reader")?,
+                    );
+                    self.streams[slot] = stream;
+                    self.failed = None;
+                    refilled = true;
+                }
+                Err(e) => {
+                    eprintln!("transport: rejected connection from {peer}: {e:#}");
+                }
+            }
+        }
+        Ok(refilled)
+    }
+
+    fn mark_dead(&mut self, slot: usize) {
+        self.dead[slot] = true;
+        self.outstanding[slot].clear();
+        if self.failed == Some(slot) {
+            self.failed = None;
+        }
+        // closing our end unblocks the peer if it is somehow still alive
+        let _ = self.streams[slot].shutdown(std::net::Shutdown::Both);
     }
 }
 
@@ -1010,6 +1425,19 @@ pub struct WorkerSummary {
 /// before the coordinator listens), handshake, then serve jobs through
 /// the same [`WorkerCore`] the in-process threads run, until STOP.
 pub fn run_worker(addr: &str, connect_timeout: Duration) -> Result<WorkerSummary> {
+    run_worker_with_fault(addr, connect_timeout, None)
+}
+
+/// [`run_worker`] with an injected fault: after answering
+/// `die_after_jobs` training jobs the worker "crashes" — drops its
+/// stream without a BYE, exactly what `kill -9` looks like from the
+/// coordinator. Drives the in-process recovery tests; the CI drill
+/// kills a real process instead.
+pub fn run_worker_with_fault(
+    addr: &str,
+    connect_timeout: Duration,
+    die_after_jobs: Option<u64>,
+) -> Result<WorkerSummary> {
     let mut stream = connect_with_retry(addr, connect_timeout)?;
     let _ = stream.set_nodelay(true);
     net::write_frame(&mut stream, &encode_hello(), MAX_CONTROL_FRAME)
@@ -1056,6 +1484,12 @@ pub fn run_worker(addr: &str, connect_timeout: Duration) -> Result<WorkerSummary
         assign.partitions,
         assign.capacity,
     );
+    if assign.generation > 0 {
+        eprintln!(
+            "worker: rejoined dead slot {} at generation {} — resuming its journaled work",
+            assign.worker_index, assign.generation
+        );
+    }
 
     let (mut received, mut sent, mut jobs) = (0u64, 0u64, 0u64);
     loop {
@@ -1065,6 +1499,7 @@ pub fn run_worker(addr: &str, connect_timeout: Duration) -> Result<WorkerSummary
                 anyhow!("coordinator closed the connection without a stop message")
             })?;
         let msg = decode_job_msg(&payload)?;
+        let is_train = matches!(&msg, JobMsg::Train(_));
         if let JobMsg::Train(job) = &msg {
             received += job_payload_bytes(job);
             jobs += 1;
@@ -1081,6 +1516,13 @@ pub fn run_worker(addr: &str, connect_timeout: Duration) -> Result<WorkerSummary
                 let wire = encode_wire_reply(&WireReply::Reply(reply));
                 net::write_frame(&mut stream, &wire, MAX_DATA_FRAME)
                     .context("sending result")?;
+                if let Some(n) = die_after_jobs {
+                    if is_train && jobs >= n {
+                        // abrupt death: no BYE, the stream just closes —
+                        // the coordinator sees EOF mid-run
+                        bail!("worker: injected crash after {jobs} jobs (fault harness)");
+                    }
+                }
             }
             Some(Err(e)) => {
                 // mirror the local loop: the error rides the reply
@@ -1126,8 +1568,17 @@ fn build_core(assign: &WorkerAssignment) -> Result<WorkerCore> {
     )
 }
 
+/// First retry delay for a refused connection; doubles per attempt.
+const CONNECT_BACKOFF_FLOOR: Duration = Duration::from_millis(100);
+/// Backoff cap — retries keep this cadence until `timeout` expires.
+const CONNECT_BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+/// Dial with capped exponential backoff (100ms doubling to 2s) until
+/// `timeout`: a worker may start before the coordinator listens, or be
+/// a replacement dialing a coordinator that is busy mid-group.
 fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
     let start = Instant::now();
+    let mut backoff = CONNECT_BACKOFF_FLOOR;
     loop {
         match TcpStream::connect(addr) {
             Ok(stream) => return Ok(stream),
@@ -1135,7 +1586,10 @@ fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
                 if start.elapsed() >= timeout {
                     bail!("could not connect to coordinator at {addr} within {timeout:?}: {e}");
                 }
-                std::thread::sleep(Duration::from_millis(200));
+                // never sleep past the deadline
+                let remaining = timeout.saturating_sub(start.elapsed());
+                std::thread::sleep(backoff.min(remaining));
+                backoff = (backoff * 2).min(CONNECT_BACKOFF_CAP);
             }
         }
     }
@@ -1167,6 +1621,12 @@ pub struct FaultPlan {
     /// After this many sends, every further send/recv fails like a dead
     /// connection.
     pub disconnect_after_sends: Option<u64>,
+    /// `(after_sends, slot)`: once that many messages have been sent,
+    /// worker `slot` "dies" — further sends to it are silently
+    /// swallowed, replies to jobs it owned are dropped, and the recv
+    /// deadline surfaces a pointed error naming it. The in-process
+    /// `kill -9`, driving the fold-onto-survivors recovery path.
+    pub kill_worker: Option<(u64, usize)>,
     /// Deadline for [`Transport::recv`] — the no-hang guarantee when a
     /// reply was dropped.
     pub timeout: Duration,
@@ -1181,6 +1641,7 @@ impl Default for FaultPlan {
             hold_permille: 0,
             skip_first: 0,
             disconnect_after_sends: None,
+            kill_worker: None,
             timeout: Duration::from_secs(2),
         }
     }
@@ -1210,6 +1671,10 @@ pub struct FlakyTransport {
     seen: u64,
     sends: u64,
     disconnected: bool,
+    /// Slot killed by `plan.kill_worker`, once the trigger fires.
+    killed: Option<usize>,
+    /// Last slot declared dead ([`Transport::failed_worker`]).
+    failed: Option<usize>,
     ready: VecDeque<Reply>,
     held: VecDeque<Reply>,
 }
@@ -1224,6 +1689,8 @@ impl FlakyTransport {
             seen: 0,
             sends: 0,
             disconnected: false,
+            killed: None,
+            failed: None,
             ready: VecDeque::new(),
             held: VecDeque::new(),
         }
@@ -1261,6 +1728,17 @@ impl FlakyTransport {
     /// Apply the fault decision to one incoming reply; `Some` = deliver
     /// now (held replies queue up behind it).
     fn admit(&mut self, reply: Reply) -> Option<Reply> {
+        if let Some(k) = self.killed {
+            // anything the dead slot produced dies with it — replies are
+            // filtered by *identity* (who trained it), so a job
+            // re-dispatched to a survivor passes even though the dead
+            // slot computed the same job earlier
+            match &reply {
+                Reply::Job(r) if r.worker == k => return None,
+                Reply::Synced(s) if s.worker == k => return None,
+                _ => {}
+            }
+        }
         if !matches!(reply, Reply::Job(_)) {
             return Some(reply); // fences pass through untouched
         }
@@ -1305,6 +1783,14 @@ impl Transport for FlakyTransport {
             }
         }
         self.sends += 1;
+        if let Some((after, slot)) = self.plan.kill_worker {
+            if self.killed.is_none() && self.sends > after {
+                self.killed = Some(slot);
+            }
+        }
+        if self.killed == Some(worker) {
+            return Ok(()); // swallowed: the dead worker never sees it
+        }
         self.inner.send(worker, msg)
     }
 
@@ -1327,13 +1813,22 @@ impl Transport for FlakyTransport {
                     if !self.held.is_empty() && idle_since.elapsed() >= HOLD_GRACE {
                         return Ok(self.held.pop_front().expect("non-empty"));
                     }
-                    ensure!(
-                        Instant::now() < deadline,
-                        "flaky transport: no worker reply within {:?} ({} held back) — \
-                         a dropped message would hang the run, failing loud instead",
-                        self.plan.timeout,
-                        self.held.len()
-                    );
+                    if Instant::now() >= deadline {
+                        if let Some(k) = self.killed {
+                            self.failed = Some(k);
+                            bail!(
+                                "flaky transport: worker {k} killed (injected) — no reply \
+                                 within {:?}, its outstanding jobs died with it",
+                                self.plan.timeout
+                            );
+                        }
+                        bail!(
+                            "flaky transport: no worker reply within {:?} ({} held back) — \
+                             a dropped message would hang the run, failing loud instead",
+                            self.plan.timeout,
+                            self.held.len()
+                        );
+                    }
                     std::thread::sleep(Duration::from_millis(1));
                 }
             }
@@ -1359,10 +1854,32 @@ impl Transport for FlakyTransport {
 
     fn shutdown(&mut self) -> Result<Option<TransportReport>> {
         // no ensure_connected here: shutdown is cleanup. The "disconnect"
-        // is injected — the inner transport is healthy and must still
-        // deliver Stop to every worker, or the scope join would hang on
-        // workers blocked in recv.
+        // and the "kill" are injected — the inner transport is healthy
+        // and must still deliver Stop to every worker (including the
+        // simulated-dead one, whose thread is actually alive), or the
+        // scope join would hang on workers blocked in recv.
         self.inner.shutdown()
+    }
+
+    fn failed_worker(&self) -> Option<usize> {
+        self.failed.or_else(|| self.inner.failed_worker())
+    }
+
+    fn try_replace(&mut self, slot: usize, rng_state: [u64; 4]) -> Result<bool> {
+        if self.killed == Some(slot) {
+            // an injected death has no process to replace — the runner
+            // must fold this slot onto the survivors
+            return Ok(false);
+        }
+        self.inner.try_replace(slot, rng_state)
+    }
+
+    fn mark_dead(&mut self, slot: usize) {
+        if self.killed == Some(slot) {
+            self.failed = None;
+            return; // simulated: the inner worker stays up for shutdown
+        }
+        self.inner.mark_dead(slot);
     }
 }
 
@@ -1386,6 +1903,7 @@ mod tests {
             },
             context: Shipment { data: None, src_version: 9, keep: false },
             lr: 0.017,
+            takeover: None,
         }
     }
 
@@ -1404,18 +1922,37 @@ mod tests {
         assert!(job.context.data.is_none());
         assert_eq!(job.context.src_version, 9);
         assert!(!job.context.keep);
-        for msg in [JobMsg::Sync, JobMsg::Stop] {
+        assert_eq!(job.takeover, None);
+        for msg in [JobMsg::Sync, JobMsg::Stop, JobMsg::Ping] {
             let rt = decode_job_msg(&encode_job_msg(&msg)).unwrap();
             assert!(matches!(
                 (&msg, &rt),
-                (JobMsg::Sync, JobMsg::Sync) | (JobMsg::Stop, JobMsg::Stop)
+                (JobMsg::Sync, JobMsg::Sync)
+                    | (JobMsg::Stop, JobMsg::Stop)
+                    | (JobMsg::Ping, JobMsg::Ping)
             ));
         }
     }
 
     #[test]
+    fn takeover_roundtrip_bitwise() {
+        let mut job = sample_job();
+        job.takeover = Some(Takeover { rng: [9, 8, 7, 6], chunk_samples: 4096 });
+        let rt = decode_job_msg(&encode_job_msg(&JobMsg::Train(job))).unwrap();
+        let JobMsg::Train(job) = rt else { panic!("wrong variant") };
+        assert_eq!(job.takeover, Some(Takeover { rng: [9, 8, 7, 6], chunk_samples: 4096 }));
+        // unknown takeover flag fails loud
+        let mut enc = encode_job_msg(&JobMsg::Train(sample_job()));
+        let last = enc.len() - 1;
+        enc[last] = 7; // the takeover flag is the final byte of a plain job
+        let err = decode_job_msg(&enc).unwrap_err();
+        assert!(err.to_string().contains("takeover"), "{err}");
+    }
+
+    #[test]
     fn wire_reply_roundtrip_bitwise() {
         let reply = WireReply::Reply(Reply::Job(JobResult {
+            worker: 9, // not a wire field: must NOT survive the roundtrip
             vid: 1,
             cid: 2,
             vertex: Some(vec![0.5, 1.5]),
@@ -1423,6 +1960,7 @@ mod tests {
             block: vec![(7, 7)], // must NOT survive the wire
             loss: 0.25,
             trained: 42,
+            rng_state: [5, 6, 7, 8],
         }));
         let rt = decode_wire_reply(&encode_wire_reply(&reply)).unwrap();
         let WireReply::Reply(Reply::Job(r)) = rt else { panic!("wrong variant") };
@@ -1431,6 +1969,12 @@ mod tests {
         assert_eq!(bits(r.vertex.as_deref().unwrap()), bits(&[0.5, 1.5]));
         assert!(r.context.is_none());
         assert!(r.block.is_empty(), "block allocation never crosses the wire");
+        assert_eq!(r.rng_state, [5, 6, 7, 8], "post-job rng state rides the result");
+        assert_eq!(r.worker, 0, "worker identity is stamped by the receiver, not the wire");
+
+        let pong = decode_wire_reply(&encode_wire_reply(&WireReply::Reply(Reply::Pong)));
+        assert!(matches!(pong.unwrap(), WireReply::Reply(Reply::Pong)));
+        assert_eq!(reply_payload_bytes(&Reply::Pong), 0, "pongs carry no payload");
 
         let synced = WireReply::Reply(Reply::Synced(SyncReply {
             worker: 1,
@@ -1526,6 +2070,7 @@ mod tests {
             neg_weight: 5.0,
             backend: BackendKind::Native,
             rng_state: [1, 2, 3, 4],
+            generation: 0,
             neg_weights: vec![vec![1.0, 2.0], vec![0.5]],
         }
     }
@@ -1542,12 +2087,20 @@ mod tests {
         assert_eq!(rt.seed, 77);
         assert_eq!(rt.backend, BackendKind::Native);
         assert_eq!(rt.rng_state, [1, 2, 3, 4]);
+        assert_eq!(rt.generation, 0);
         assert_eq!(rt.neg_weights.len(), 2);
         assert_eq!(bits(&rt.neg_weights[0]), bits(&[1.0, 2.0]));
         // unbounded cache limit uses the sentinel
-        let rt =
-            decode_assign(&encode_assign(&WorkerAssignment { cache_limit: None, ..a })).unwrap();
+        let rt = decode_assign(&encode_assign(&WorkerAssignment {
+            cache_limit: None,
+            ..a.clone()
+        }))
+        .unwrap();
         assert_eq!(rt.cache_limit, None);
+        // a RE-ASSIGN's rejoin generation survives the wire
+        let rt =
+            decode_assign(&encode_assign(&WorkerAssignment { generation: 3, ..a })).unwrap();
+        assert_eq!(rt.generation, 3);
     }
 
     #[test]
@@ -1596,6 +2149,7 @@ mod tests {
         let job = sample_job();
         assert_eq!(job_payload_bytes(&job), 12); // 3 f32s, context elided
         let reply = Reply::Job(JobResult {
+            worker: 0,
             vid: 0,
             cid: 0,
             vertex: Some(vec![0.0; 5]),
@@ -1603,6 +2157,7 @@ mod tests {
             block: Vec::new(),
             loss: 0.0,
             trained: 0,
+            rng_state: [1, 1, 1, 1],
         });
         assert_eq!(reply_payload_bytes(&reply), 28);
     }

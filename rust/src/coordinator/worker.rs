@@ -47,6 +47,21 @@ pub struct Shipment {
     pub keep: bool,
 }
 
+/// Replay identity for a job re-dispatched to a *different* worker after
+/// its original slot died (the fold path of worker-failure recovery).
+/// The dead slot's RNG stream state at the job's dispatch and its device
+/// chunk size travel with the job, so any surviving worker computes
+/// bitwise the same result the dead worker would have — the worker's own
+/// RNG stream is left untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Takeover {
+    /// The dead slot's RNG state as of this job's dispatch.
+    pub rng: [u64; 4],
+    /// The dead slot's device chunk size (`batch_size × capacity`), so
+    /// chunk planning — and with it negative draw order — is unchanged.
+    pub chunk_samples: u32,
+}
+
 /// A block-training job.
 #[derive(Debug, Clone)]
 pub struct Job {
@@ -59,6 +74,9 @@ pub struct Job {
     /// Context partition transfer.
     pub context: Shipment,
     pub lr: f32,
+    /// `Some` only when this job is another (dead) slot's work folded
+    /// onto this worker by the recovery layer.
+    pub takeover: Option<Takeover>,
 }
 
 /// Coordinator→worker message (one TCP frame each for the socket
@@ -68,6 +86,8 @@ pub enum JobMsg {
     Train(Job),
     /// Fence: reply with clones of all resident partitions (cache kept).
     Sync,
+    /// Liveness probe; the worker answers [`Reply::Pong`] immediately.
+    Ping,
     Stop,
 }
 
@@ -87,6 +107,12 @@ pub struct ResidentPart {
 /// carry no version.)
 #[derive(Debug, Clone)]
 pub struct JobResult {
+    /// Index of the worker slot that trained this job. Not a wire field —
+    /// in-process workers stamp it directly and the socket transport's
+    /// reader threads stamp it from the connection the frame arrived on —
+    /// so a fault-injecting transport can drop a dead worker's replies by
+    /// identity rather than by job key.
+    pub worker: usize,
     pub vid: usize,
     pub cid: usize,
     /// Updated vertex rows, `None` when kept resident (`Shipment::keep`).
@@ -99,6 +125,11 @@ pub struct JobResult {
     pub loss: f32,
     /// Real (unpadded) positive samples trained.
     pub trained: u64,
+    /// The state of the RNG stream that trained this job, *after* the
+    /// job (worker streams advance once per negative drawn). The
+    /// recovery journal chains these so each outstanding job's RNG at
+    /// dispatch is known and a lost job can be replayed bitwise.
+    pub rng_state: [u64; 4],
 }
 
 /// A worker's answer to a [`JobMsg::Sync`] fence: clones of its resident
@@ -119,6 +150,10 @@ pub struct SyncReply {
 pub enum Reply {
     Job(JobResult),
     Synced(SyncReply),
+    /// Answer to [`JobMsg::Ping`]. On the socket transport the reader
+    /// thread consumes pongs for liveness tracking; they never reach the
+    /// episode runner.
+    Pong,
 }
 
 type ResultTx = mpsc::Sender<Result<Reply>>;
@@ -329,13 +364,17 @@ impl WorkerCore {
                     &mut self.scratch,
                     job,
                 )
-                .map(Reply::Job),
+                .map(|mut r| {
+                    r.worker = self.worker_idx;
+                    Reply::Job(r)
+                }),
             ),
             JobMsg::Sync => Some(Ok(Reply::Synced(SyncReply {
                 worker: self.worker_idx,
                 rng_state: self.rng.state(),
                 residents: self.cache.snapshot(),
             }))),
+            JobMsg::Ping => Some(Ok(Reply::Pong)),
             JobMsg::Stop => None,
         }
     }
@@ -395,23 +434,41 @@ fn run_job(
     backend: &mut dyn Backend,
     neg: &NegativeSampler,
     counters: &Counters,
-    rng: &mut Rng,
+    worker_rng: &mut Rng,
     cache: &mut ResidencyCache,
     scratch: &mut ChunkPlan,
     job: Job,
 ) -> Result<JobResult> {
-    let Job { vid, cid, mut block, mut vertex, mut context, lr } = job;
+    let Job { vid, cid, mut block, mut vertex, mut context, lr, takeover } = job;
     let keep_v = vertex.keep;
     let keep_c = context.keep;
     let (v_version, mut vbuf) = resolve(cache, Matrix::Vertex, vid, &mut vertex)?;
     let (c_version, mut cbuf) = resolve(cache, Matrix::Context, cid, &mut context)?;
+
+    // A folded job trains with the dead slot's RNG stream and chunk
+    // size; this worker's own stream must not advance for it.
+    let mut takeover_rng = match takeover {
+        Some(t) => Some(
+            Rng::from_state(t.rng)
+                .map_err(|e| anyhow::anyhow!("takeover job ({vid}, {cid}): {e}"))?,
+        ),
+        None => None,
+    };
+    let chunk_sz = match takeover {
+        Some(t) => t.chunk_samples as usize,
+        None => backend.chunk_samples(),
+    };
+    let rng: &mut Rng = match takeover_rng.as_mut() {
+        Some(r) => r,
+        None => worker_rng,
+    };
 
     let trained = block.len() as u64;
     let loss = if backend.batched_upload() {
         // Batched backends (PJRT): one train_chunks call per block so
         // partitions are uploaded/downloaded once per episode (the
         // paper's transfer pattern), not per chunk.
-        let chunks = plan_chunks(&*backend, neg, cid, &block, lr, rng);
+        let chunks = plan_chunks(&*backend, chunk_sz, neg, cid, &block, lr, rng);
         let t0 = std::time::Instant::now();
         let loss = backend.train_chunks(&mut vbuf, &mut cbuf, &chunks, counters)?;
         counters.add(&counters.device_nanos, t0.elapsed().as_nanos() as u64);
@@ -420,7 +477,6 @@ fn run_job(
         // Streaming backends (native): feed chunks through one reusable
         // scratch plan (the collected-Vec variant allocated 3 vectors per
         // chunk and showed up as allocator churn — EXPERIMENTS.md §Perf).
-        let chunk_sz = backend.chunk_samples();
         let k = backend.k();
         let mut loss_sum = 0.0f64;
         let mut chunks = 0usize;
@@ -445,10 +501,21 @@ fn run_job(
     // result (from `JobResult::trained`), so the ledger is identical
     // whether this worker shares the process or sits behind a socket.
 
+    let rng_state = rng.state();
     let vertex_out = stash(cache, Matrix::Vertex, vid, v_version, vbuf, keep_v)?;
     let context_out = stash(cache, Matrix::Context, cid, c_version, cbuf, keep_c)?;
     block.clear(); // contents are spent; the allocation rides back
-    Ok(JobResult { vid, cid, vertex: vertex_out, context: context_out, block, loss, trained })
+    Ok(JobResult {
+        worker: 0, // stamped by the caller (WorkerCore::handle / socket reader)
+        vid,
+        cid,
+        vertex: vertex_out,
+        context: context_out,
+        block,
+        loss,
+        trained,
+        rng_state,
+    })
 }
 
 /// Fill `plan` with the chunk starting at `at`: `chunk_sz` positives
@@ -491,13 +558,13 @@ fn plan_chunk_into(
 /// parity harness; streaming backends go through `plan_chunk_into`).
 fn plan_chunks(
     backend: &dyn Backend,
+    chunk_sz: usize,
     neg: &NegativeSampler,
     cid: usize,
     block: &[(i32, i32)],
     lr: f32,
     rng: &mut Rng,
 ) -> Vec<ChunkPlan> {
-    let chunk_sz = backend.chunk_samples();
     let k = backend.k();
     if block.is_empty() {
         return Vec::new();
@@ -528,7 +595,7 @@ mod tests {
         let backend = NativeWorker::new(8, 32, 2, 5.0);
         let block: Vec<(i32, i32)> = (0..70).map(|i| (i % 50, (i + 1) % 50)).collect();
         let mut rng = Rng::new(1);
-        let chunks = plan_chunks(&backend, &neg, 0, &block, 0.025, &mut rng);
+        let chunks = plan_chunks(&backend, backend.chunk_samples(), &neg, 0, &block, 0.025, &mut rng);
         assert_eq!(chunks.len(), 3); // ceil(70/32)
         assert_eq!(chunks.iter().map(|c| c.real).sum::<usize>(), 70);
         for c in &chunks {
@@ -549,7 +616,10 @@ mod tests {
         let neg = NegativeSampler::new(&g, &parts);
         let backend = NativeWorker::new(4, 16, 1, 5.0);
         let mut rng = Rng::new(2);
-        assert!(plan_chunks(&backend, &neg, 1, &[], 0.1, &mut rng).is_empty());
+        assert!(
+            plan_chunks(&backend, backend.chunk_samples(), &neg, 1, &[], 0.1, &mut rng)
+                .is_empty()
+        );
     }
 
     #[test]

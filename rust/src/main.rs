@@ -127,6 +127,18 @@ TRAIN OPTIONS (defaults follow paper section 4.3):
                         `graphvite worker --connect` per worker  [local]
   --worker-timeout-secs N  fail if a remote worker goes silent for N
                         seconds mid-training (0 = wait forever)     [0]
+  --heartbeat-secs N    PING idle tcp workers every N seconds so a
+                        silent slot is named precisely (0 = off)    [0]
+  --max-worker-retries N  recover up to N worker failures by replaying
+                        the dead slot's journaled jobs to a rejoined
+                        replacement or folding them onto survivors —
+                        bitwise-identical either way (0 = fail loud) [0]
+  --rejoin-window-secs N  hold a dead slot open N seconds for a
+                        replacement `graphvite worker` before folding
+                        its work onto the survivors (0 = fold now)  [0]
+  --fault-checkpoint F  if recovery is exhausted and the run dies, cut
+                        a .gvck of the last completed pool boundary
+                        at F first (resumes bitwise-identically)
   --no-collaboration    disable the double-buffered pools
   --no-augmentation     plain edge sampling instead of online augmentation
   --no-fix-context      re-transfer context partitions every episode
@@ -257,6 +269,9 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
         cfg.worker_mode = WorkerMode::parse(s).map_err(|e| anyhow::anyhow!("--transport: {e}"))?;
     }
     cfg.worker_timeout_secs = args.get_parse("worker-timeout-secs", cfg.worker_timeout_secs)?;
+    cfg.heartbeat_secs = args.get_parse("heartbeat-secs", cfg.heartbeat_secs)?;
+    cfg.max_worker_retries = args.get_parse("max-worker-retries", cfg.max_worker_retries)?;
+    cfg.rejoin_window_secs = args.get_parse("rejoin-window-secs", cfg.rejoin_window_secs)?;
     if let Some(s) = args.get("backend") {
         cfg.backend = BackendKind::parse(s).ok_or_else(|| {
             anyhow::anyhow!(
@@ -333,6 +348,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
 
     let mut trainer = Trainer::from_store(store, cfg)?;
+    if let Some(p) = args.get("fault-checkpoint") {
+        trainer.set_fault_checkpoint(p);
+    }
     let result = if resume.is_some() || ckpt_path.is_some() || stop_after > 0 {
         // the observer runs at every pool boundary on fully-synced state:
         // persist a .gvck (and refresh --output so `serve --watch` can

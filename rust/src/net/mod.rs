@@ -174,6 +174,127 @@ mod tests {
         assert!(read_frame(&mut &mid[..], 16).is_err());
     }
 
+    /// Yields at most `chunk` bytes per `read` call — models a TCP stream
+    /// delivering a frame across many partial reads.
+    struct Fragmented<'a> {
+        buf: &'a [u8],
+        at: usize,
+        chunk: usize,
+    }
+
+    impl Read for Fragmented<'_> {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            let n = out.len().min(self.chunk).min(self.buf.len() - self.at);
+            out[..n].copy_from_slice(&self.buf[self.at..self.at + n]);
+            self.at += n;
+            Ok(n)
+        }
+    }
+
+    /// Serves a 4-byte length header declaring `declared` bytes, then
+    /// fails the first payload read with a sentinel error. Lets boundary
+    /// tests prove the cap check *passed* (the sentinel surfaces, not the
+    /// cap bail) without materializing a gigabyte of payload.
+    struct HeaderThenBail {
+        header: Vec<u8>,
+        at: usize,
+    }
+
+    impl HeaderThenBail {
+        fn declaring(declared: u32) -> Self {
+            HeaderThenBail { header: declared.to_le_bytes().to_vec(), at: 0 }
+        }
+    }
+
+    impl Read for HeaderThenBail {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.at == self.header.len() {
+                return Err(std::io::Error::other("payload read reached"));
+            }
+            let n = out.len().min(self.header.len() - self.at);
+            out[..n].copy_from_slice(&self.header[self.at..self.at + n]);
+            self.at += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn frames_survive_fragmented_and_coalesced_reads() {
+        // deterministic pseudo-random frame sizes/contents (LCG — no
+        // external rand dependency) written back-to-back into one buffer,
+        // i.e. maximally coalesced on the wire
+        let mut state = 0x2545_f491_4f6c_dd1du64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u32
+        };
+        let frames: Vec<Vec<u8>> = (0..32)
+            .map(|i| {
+                let len = if i == 0 { 0 } else { (next() % 4096) as usize };
+                (0..len).map(|_| next() as u8).collect()
+            })
+            .collect();
+        let mut wire = Vec::new();
+        for f in &frames {
+            write_frame(&mut wire, f, MAX_CONTROL_FRAME).unwrap();
+        }
+        // decode the coalesced buffer once whole, then again through
+        // pathological fragmentation (1- and 3-byte reads split length
+        // prefixes and payloads alike)
+        for chunk in [usize::MAX, 1, 3] {
+            let mut r = Fragmented { buf: &wire, at: 0, chunk };
+            for f in &frames {
+                assert_eq!(read_frame(&mut r, MAX_CONTROL_FRAME).unwrap().unwrap(), *f);
+            }
+            assert!(read_frame(&mut r, MAX_CONTROL_FRAME).unwrap().is_none(), "clean EOF");
+        }
+        // EOF mid-prefix and mid-payload are hard errors, not Ok(None)
+        assert!(read_frame(&mut &wire[..2], MAX_CONTROL_FRAME).is_err(), "EOF inside prefix");
+        // walk to the first non-empty frame and truncate its final byte
+        let mut at = 0;
+        for f in &frames {
+            if !f.is_empty() {
+                assert!(
+                    read_frame(&mut &wire[at..at + 4 + f.len() - 1], MAX_CONTROL_FRAME).is_err(),
+                    "EOF inside payload"
+                );
+                break;
+            }
+            at += 4;
+        }
+    }
+
+    #[test]
+    fn control_cap_boundary_is_exact() {
+        // a frame of exactly MAX_CONTROL_FRAME bytes round-trips...
+        let payload = vec![0xA5u8; MAX_CONTROL_FRAME];
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &payload, MAX_CONTROL_FRAME).unwrap();
+        let got = read_frame(&mut &wire[..], MAX_CONTROL_FRAME).unwrap().unwrap();
+        assert_eq!(got, payload);
+        // ...while one byte more is refused by the writer and the reader
+        assert!(write_frame(&mut Vec::new(), &vec![0u8; MAX_CONTROL_FRAME + 1], MAX_CONTROL_FRAME).is_err());
+        let mut r = HeaderThenBail::declaring(MAX_CONTROL_FRAME as u32 + 1);
+        let err = read_frame(&mut r, MAX_CONTROL_FRAME).unwrap_err();
+        assert!(err.to_string().contains("cap"), "cap bail, not a payload read: {err}");
+    }
+
+    #[test]
+    fn data_cap_boundary_is_exact() {
+        // declared == MAX_DATA_FRAME passes the cap check: the sentinel
+        // I/O error from the first payload read surfaces, proving we got
+        // past the length validation without shipping a real gigabyte
+        let mut r = HeaderThenBail::declaring(MAX_DATA_FRAME as u32);
+        let err = read_frame(&mut r, MAX_DATA_FRAME).unwrap_err();
+        assert!(err.to_string().contains("payload read reached"), "boundary accepted: {err}");
+        // declared == MAX_DATA_FRAME + 1 is rejected *before* any payload
+        // read (HeaderThenBail would convert a read attempt into a
+        // different error) and before any allocation
+        let mut r = HeaderThenBail::declaring(MAX_DATA_FRAME as u32 + 1);
+        let err = read_frame(&mut r, MAX_DATA_FRAME).unwrap_err();
+        assert!(err.to_string().contains("cap"), "cap bail, not a payload read: {err}");
+    }
+
     #[test]
     fn cursor_bounds_and_trailing_garbage() {
         let mut c = Cursor::new(&[1, 0, 0, 0, 9]);

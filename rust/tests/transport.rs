@@ -18,13 +18,21 @@
 //! 4. **Hostile peers.** Garbage handshakes are rejected without
 //!    disturbing the run; a worker dialing a hostile coordinator gets a
 //!    pointed error, never a panic.
+//! 5. **Failure recovery.** With `max_worker_retries > 0`, a worker
+//!    killed mid-group — simulated through [`FlakyTransport`] AND a real
+//!    socket drop — is replaced by a rejoining `graphvite worker` (its
+//!    journaled jobs replayed verbatim) or folded onto the survivors,
+//!    and the final embeddings are **bitwise-identical** to the
+//!    fault-free run in pipelined, serial and heterogeneous configs.
+//!    When recovery is exhausted, `--fault-checkpoint` cuts a `.gvck` at
+//!    the last completed pool boundary that resumes bitwise-identically.
 
 use std::net::TcpListener;
 use std::time::Duration;
 
 use graphvite::config::{BackendKind, TrainConfig, WorkerMode};
 use graphvite::coordinator::transport::{
-    encode_reject, run_worker, FaultPlan, FlakyTransport, WorkerSummary,
+    encode_reject, run_worker, run_worker_with_fault, FaultPlan, FlakyTransport, WorkerSummary,
 };
 use graphvite::coordinator::{
     load_checkpoint, save_checkpoint, CheckpointState, TrainFlow, TrainResult, Trainer,
@@ -282,6 +290,198 @@ fn checkpoint_resume_after_a_fault_is_bitwise_identical() {
         .unwrap();
     assert_eq!(full.embeddings.vertex_matrix(), resumed.embeddings.vertex_matrix());
     assert_eq!(full.embeddings.context_matrix(), resumed.embeddings.context_matrix());
+}
+
+// ------------------------------------------------- failure recovery --
+
+/// `base` with the recovery budget armed: one worker failure is
+/// recovered (rejoin or fold) instead of killing the run.
+fn recovery_cfg(base: TrainConfig) -> TrainConfig {
+    TrainConfig { max_worker_retries: 1, ..base }
+}
+
+/// Embedding-only equivalence for recovery runs. Bus counters are *not*
+/// compared: a recovered run legitimately ships extra payload (journal
+/// replays, fold gathers, per-group fence syncs), but the trained
+/// trajectory — every f32 of both matrices and the sample counts — must
+/// not move by a single bit.
+fn assert_same_trajectory(clean: &TrainResult, recovered: &TrainResult, tag: &str) {
+    assert_eq!(
+        clean.embeddings.vertex_matrix(),
+        recovered.embeddings.vertex_matrix(),
+        "{tag}: vertex matrices diverged"
+    );
+    assert_eq!(
+        clean.embeddings.context_matrix(),
+        recovered.embeddings.context_matrix(),
+        "{tag}: context matrices diverged"
+    );
+    let (a, b) = (&clean.stats.counters, &recovered.stats.counters);
+    assert_eq!(a.samples_generated, b.samples_generated, "{tag}: samples_generated");
+    assert_eq!(a.samples_trained, b.samples_trained, "{tag}: samples_trained");
+}
+
+/// Kill worker 1 mid-run through the fault harness (no process to
+/// rejoin, so the slot folds onto worker 0) and demand the fault-free
+/// bytes.
+fn fold_run(base: TrainConfig, tag: &str) {
+    let clean = Trainer::new(graph(), base.clone()).unwrap().train().unwrap();
+    let plan = FaultPlan {
+        seed: 31,
+        kill_worker: Some((10, 1)),
+        timeout: Duration::from_secs(1),
+        ..FaultPlan::default()
+    };
+    let mut trainer = Trainer::new(graph(), recovery_cfg(base)).unwrap();
+    trainer.set_transport_wrapper(Box::new(move |inner| {
+        Box::new(FlakyTransport::new(inner, plan.clone()))
+    }));
+    let folded = trainer.train().unwrap();
+    assert_same_trajectory(&clean, &folded, tag);
+}
+
+#[test]
+fn killed_worker_folds_onto_survivors_bitwise_pipelined() {
+    fold_run(cfg(61), "fold-pipelined");
+}
+
+#[test]
+fn killed_worker_folds_onto_survivors_bitwise_serial() {
+    fold_run(
+        TrainConfig { collaboration: false, pipeline_transfers: false, ..cfg(62) },
+        "fold-serial",
+    );
+}
+
+#[test]
+fn killed_worker_folds_onto_survivors_bitwise_heterogeneous() {
+    fold_run(
+        TrainConfig {
+            worker_capacities: vec![1, 3],
+            num_partitions: 4,
+            fix_context: false,
+            ..cfg(63)
+        },
+        "fold-heterogeneous",
+    );
+}
+
+#[test]
+fn crashed_socket_worker_is_replaced_by_a_rejoin_bitwise() {
+    if !tcp_capable() {
+        eprintln!("skipping: socket transport cannot host the pjrt backend");
+        return;
+    }
+    let base = cfg(67);
+    let clean = Trainer::new(graph(), base.clone()).unwrap().train().unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let tcp_cfg = TrainConfig {
+        worker_mode: WorkerMode::Tcp(addr.clone()),
+        rejoin_window_secs: 30,
+        heartbeat_secs: 1,
+        ..recovery_cfg(base)
+    };
+    let mut trainer = Trainer::new(graph(), tcp_cfg).unwrap();
+    trainer.set_worker_listener(listener);
+
+    // two initial workers, one of which drops its stream after two jobs —
+    // exactly what `kill -9` looks like from the coordinator
+    let healthy = {
+        let addr = addr.clone();
+        std::thread::spawn(move || run_worker(&addr, Duration::from_secs(30)))
+    };
+    let doomed = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            run_worker_with_fault(&addr, Duration::from_secs(30), Some(2))
+        })
+    };
+    // a replacement and a straggler dial in while the run is live: the
+    // first refills the dead slot, the second is turned away (pointed
+    // reject if it lands in the same rejoin poll, otherwise the listener
+    // going down resets it — never a hang, never a second refill)
+    let spares: Vec<_> = [500u64, 700]
+        .into_iter()
+        .map(|delay_ms| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(delay_ms));
+                run_worker(&addr, Duration::from_secs(30))
+            })
+        })
+        .collect();
+
+    let recovered = trainer.train().unwrap();
+    let report = trainer.transport_report().expect("tcp run must produce a wire ledger");
+
+    assert_same_trajectory(&clean, &recovered, "rejoin");
+    // shutdown() already asserted the per-connection ledgers (BYE vs
+    // coordinator counters for every live generation, replacement
+    // included); the aggregate also folds in the retired generation's
+    // partial traffic, so only its existence is asserted here
+    assert_eq!(report.workers, 2);
+    assert!(report.bytes_up > 0, "no payload ever crossed the wire?");
+
+    healthy.join().unwrap().unwrap();
+    let crash = doomed.join().unwrap().expect_err("the doomed worker must crash");
+    assert!(format!("{crash:#}").contains("injected crash"), "{crash:#}");
+    let outcomes: Vec<_> = spares.into_iter().map(|h| h.join().unwrap()).collect();
+    let refills = outcomes.iter().filter(|o| o.is_ok()).count();
+    assert_eq!(refills, 1, "exactly one spare may refill the dead slot: {outcomes:?}");
+    let stale = outcomes.iter().find(|o| o.is_err()).unwrap().as_ref().unwrap_err();
+    let msg = format!("{stale:#}");
+    assert!(
+        msg.contains("already refilled")
+            || msg.contains("rejected")
+            || msg.contains("assignment")
+            || msg.contains("connection"),
+        "stale worker should get a pointed error, got: {msg}"
+    );
+}
+
+#[test]
+fn exhausted_recovery_cuts_a_fault_checkpoint_that_resumes_bitwise() {
+    let base = cfg(71);
+    let clean = Trainer::new(graph(), base.clone()).unwrap().train().unwrap();
+
+    // worker 1 dies (budget spent on the fold), then the whole transport
+    // goes dark — recovery has nothing left, the run must die loudly but
+    // leave a resumable checkpoint at the last completed pool boundary
+    let ck_path = tmp("fault_cut.gvck");
+    let _ = std::fs::remove_file(&ck_path);
+    let plan = FaultPlan {
+        seed: 37,
+        kill_worker: Some((10, 1)),
+        disconnect_after_sends: Some(60),
+        timeout: Duration::from_secs(1),
+        ..FaultPlan::default()
+    };
+    let mut trainer = Trainer::new(graph(), recovery_cfg(base.clone())).unwrap();
+    trainer.set_transport_wrapper(Box::new(move |inner| {
+        Box::new(FlakyTransport::new(inner, plan.clone()))
+    }));
+    trainer.set_fault_checkpoint(&ck_path);
+    let err = trainer.train().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("connection lost"), "{msg}");
+
+    let ck = load_checkpoint(&ck_path).expect("fault checkpoint must exist");
+    let resumed = Trainer::new(graph(), base)
+        .unwrap()
+        .train_resumable(Some(ck), None)
+        .unwrap();
+    assert_eq!(
+        clean.embeddings.vertex_matrix(),
+        resumed.embeddings.vertex_matrix(),
+        "resume from the fault checkpoint diverged (vertex)"
+    );
+    assert_eq!(
+        clean.embeddings.context_matrix(),
+        resumed.embeddings.context_matrix(),
+        "resume from the fault checkpoint diverged (context)"
+    );
 }
 
 // ------------------------------------------------------ hostile peers --
