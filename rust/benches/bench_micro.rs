@@ -60,6 +60,9 @@ fn main() {
     bench_minibatch_steps(&mut b);
     bench_hlo_step(&mut b);
 
+    println!("== wire codec (net::compress pack/unpack) ==");
+    bench_net(&mut b);
+
     println!("== serve (IVF ANN vs brute-force top-k) ==");
     bench_serve(&mut b);
 
@@ -330,6 +333,53 @@ fn bench_hlo_step(b: &mut Bencher) {
             last
         },
     );
+}
+
+/// The wire codec the socket transport runs every shipment through:
+/// Gorilla-style XOR delta coding against the receiver-resident base
+/// (`net::compress`). Throughput is per f32 both directions; the printed
+/// byte counts are the delta-vs-raw sizes the transport ledger reports
+/// as `wire_bytes_saved`. The synthetic shipment mimics one episode of
+/// SGD: half the rows untouched (XOR-zero runs), half nudged slightly.
+fn bench_net(b: &mut Bencher) {
+    use graphvite::net::compress::{pack_f32s, unpack_f32s};
+    use graphvite::net::Cursor;
+
+    let rows = 4096usize;
+    for d in [64usize, 128] {
+        let n = rows * d;
+        let mut rng = Rng::new(23);
+        let base: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let xs: Vec<f32> = base
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| if (i / d) % 2 == 0 { x } else { x + 1e-3 * x })
+            .collect();
+
+        let mut stored = Vec::new();
+        b.bench_items(&format!("net.pack stored  p{rows} d{d} (f32/s)"), n as f64, || {
+            stored.clear();
+            pack_f32s(&mut stored, &xs, None, false).wire
+        });
+        let mut delta = Vec::new();
+        b.bench_items(&format!("net.pack delta   p{rows} d{d} (f32/s)"), n as f64, || {
+            delta.clear();
+            pack_f32s(&mut delta, &xs, Some(&base), true).wire
+        });
+        let mut decoded = Vec::new();
+        b.bench_items(&format!("net.unpack delta p{rows} d{d} (f32/s)"), n as f64, || {
+            let mut c = Cursor::new(&delta);
+            unpack_f32s(&mut c, Some(&base), &mut decoded).unwrap().raw
+        });
+        assert_eq!(decoded, xs, "codec must stay bit-exact");
+        let raw = 4 * n as u64;
+        println!(
+            "net.bytes d{d}: raw {raw}, delta {} ({:.2}x smaller), stored {}",
+            delta.len(),
+            raw as f64 / delta.len() as f64,
+            stored.len(),
+        );
+    }
 }
 
 /// The `graphvite serve` query path: IVF-flat probing must beat the exact

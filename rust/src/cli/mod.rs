@@ -1,10 +1,18 @@
 //! Hand-rolled CLI argument parser (clap is not in the offline crate
-//! set). Supports subcommands, `--flag`, `--key value`, `--key=value`
-//! and positional arguments, with generated usage text.
+//! set). Each subcommand is described by a declarative [`spec::CommandSpec`]
+//! table — flag names, switch-vs-value kinds, help lines, and (for
+//! `train`) which [`crate::config::TrainConfigBuilder`] key each flag
+//! feeds. Parsing is strict against the table: unknown flags get a
+//! "did you mean" suggestion, value flags without a value are pointed
+//! errors, and `--help` text is generated from the same table.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
+
+pub mod spec;
+
+pub use spec::{command_spec, Binding, CommandSpec, FlagKind, FlagSpec};
 
 /// Parsed command line: subcommand, options, positionals.
 #[derive(Debug, Clone, Default)]
@@ -15,28 +23,28 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-/// Option names that never take a value. `--quiet graph.txt` is otherwise
-/// ambiguous (flag + positional vs. `quiet=graph.txt`); a registry is the
-/// only way to resolve it without clap-style declarative specs.
-pub const KNOWN_FLAGS: &[&str] =
-    &["help", "quiet", "version", "normalize", "no-color", "dry-run", "watch"];
-
 impl Args {
-    /// Parse from raw argv (excluding the program name), resolving flag vs.
-    /// option via [`KNOWN_FLAGS`].
+    /// Parse from raw argv (excluding the program name). A recognized
+    /// subcommand parses strictly against its [`CommandSpec`]; anything
+    /// else (no subcommand, or an unknown one the caller will reject)
+    /// parses loosely so `graphvite --help` and the "unknown command"
+    /// error path still work.
     pub fn parse(argv: &[String]) -> Result<Self> {
-        Self::parse_with_flags(argv, KNOWN_FLAGS)
+        let (command, rest) = match argv.first() {
+            Some(first) if !first.starts_with('-') => (first.as_str(), &argv[1..]),
+            _ => ("", argv),
+        };
+        match spec::command_spec(command) {
+            Some(cs) => cs.parse(rest),
+            None => Self::parse_loose(command, rest),
+        }
     }
 
-    /// Parse with an explicit boolean-flag registry.
-    pub fn parse_with_flags(argv: &[String], known_flags: &[&str]) -> Result<Self> {
-        let mut out = Args::default();
+    /// Spec-less fallback: `--key=value` and `--key value` become
+    /// options, a `--key` with no following value token is a switch.
+    fn parse_loose(command: &str, argv: &[String]) -> Result<Self> {
+        let mut out = Args { command: command.to_string(), ..Args::default() };
         let mut it = argv.iter().peekable();
-        if let Some(first) = it.peek() {
-            if !first.starts_with('-') {
-                out.command = it.next().unwrap().clone();
-            }
-        }
         while let Some(tok) = it.next() {
             if let Some(rest) = tok.strip_prefix("--") {
                 if rest.is_empty() {
@@ -44,8 +52,6 @@ impl Args {
                 }
                 if let Some(eq) = rest.find('=') {
                     out.opts.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
-                } else if known_flags.contains(&rest) {
-                    out.flags.push(rest.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
                     out.opts.insert(rest.to_string(), it.next().unwrap().clone());
                 } else {
@@ -104,13 +110,17 @@ mod tests {
     }
 
     #[test]
-    fn subcommand_opts_flags_positionals() {
-        let a = Args::parse(&argv("train --dim 64 --backend=hlo --quiet graph.txt")).unwrap();
+    fn speced_subcommands_parse_strictly() {
+        let a = Args::parse(&argv("train --dim 64 --backend=hlo --no-pipeline graph.txt"))
+            .unwrap();
         assert_eq!(a.command, "train");
         assert_eq!(a.get("dim"), Some("64"));
         assert_eq!(a.get("backend"), Some("hlo"));
-        assert!(a.flag("quiet"));
+        assert!(a.flag("no-pipeline"));
         assert_eq!(a.positional, vec!["graph.txt"]);
+        // a typo is caught at parse time, not silently ignored
+        let err = Args::parse(&argv("train --dmi 64")).unwrap_err().to_string();
+        assert!(err.contains("did you mean --dim?"), "{err}");
     }
 
     #[test]
@@ -124,7 +134,7 @@ mod tests {
     }
 
     #[test]
-    fn flag_via_value() {
+    fn loose_flag_via_value() {
         let a = Args::parse(&argv("x --verbose true")).unwrap();
         assert!(a.flag("verbose"));
         let b = Args::parse(&argv("x --verbose false")).unwrap();

@@ -1,0 +1,686 @@
+//! Declarative flag specs — one table per subcommand.
+//!
+//! [`CommandSpec::parse`] replaces the old `KNOWN_FLAGS` registry and
+//! its flag-vs-option guessing: a token is a switch or a value flag
+//! because its spec entry says so, never because of what happens to
+//! follow it on the command line. The same tables generate each
+//! subcommand's `--help` screen, power "did you mean" suggestions for
+//! typos, and declare which [`crate::config::TrainConfigBuilder`] key
+//! each train flag feeds — so the parser, the help text and the config
+//! layer cannot drift apart (a property test walks the bindings).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::TrainConfigBuilder;
+
+use super::Args;
+
+/// Whether a flag consumes a value token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlagKind {
+    /// `--flag VALUE` / `--flag=VALUE`; the str is the help placeholder.
+    Value(&'static str),
+    /// Bare presence (`--watch`); never consumes the next token.
+    Switch,
+}
+
+/// What a flag does to a [`TrainConfigBuilder`] (train only; every
+/// other subcommand reads its flags directly).
+#[derive(Debug, Clone, Copy)]
+pub enum Binding {
+    /// `--flag VALUE` sets this builder key to VALUE.
+    Set(&'static str),
+    /// The switch sets this builder key to the literal bool.
+    SetBool(&'static str, bool),
+    /// Not a config field (I/O paths, checkpoint cadence, ...).
+    None,
+}
+
+/// One `--flag` a subcommand accepts.
+pub struct FlagSpec {
+    /// Name without the `--` prefix.
+    pub name: &'static str,
+    pub kind: FlagKind,
+    /// One help line.
+    pub help: &'static str,
+    /// Config field this flag feeds, if any.
+    pub binding: Binding,
+}
+
+/// One subcommand: its header line, usage line, and flag table.
+pub struct CommandSpec {
+    pub name: &'static str,
+    /// One-line description for the subcommand header.
+    pub about: &'static str,
+    /// Usage line, e.g. `graphvite train [GRAPH] [options]`.
+    pub usage: &'static str,
+    pub flags: &'static [FlagSpec],
+}
+
+/// Every table ends with this so `--help` parses everywhere.
+const HELP_FLAG: FlagSpec = FlagSpec {
+    name: "help",
+    kind: FlagKind::Switch,
+    help: "print this help",
+    binding: Binding::None,
+};
+
+const fn value(
+    name: &'static str,
+    placeholder: &'static str,
+    help: &'static str,
+) -> FlagSpec {
+    FlagSpec { name, kind: FlagKind::Value(placeholder), help, binding: Binding::None }
+}
+
+const fn setting(
+    name: &'static str,
+    placeholder: &'static str,
+    key: &'static str,
+    help: &'static str,
+) -> FlagSpec {
+    FlagSpec { name, kind: FlagKind::Value(placeholder), help, binding: Binding::Set(key) }
+}
+
+const fn switch_bool(
+    name: &'static str,
+    key: &'static str,
+    to: bool,
+    help: &'static str,
+) -> FlagSpec {
+    FlagSpec { name, kind: FlagKind::Switch, help, binding: Binding::SetBool(key, to) }
+}
+
+pub static TRAIN: CommandSpec = CommandSpec {
+    name: "train",
+    about: "train node embeddings through the full hybrid system",
+    usage: "graphvite train [GRAPH] [options]",
+    flags: &[
+        value("config", "FILE.toml", "load a [train] config table (flags override it)"),
+        value("synthetic", "KIND", "ba | youtube | sbm | karate (instead of GRAPH)"),
+        value("nodes", "N", "synthetic graph size [10000]"),
+        value("edges-per-node", "M", "synthetic mean degree / 2 [5]"),
+        value("labels", "K", "synthetic label count [10]"),
+        value("mixing", "X", "sbm inter-community mixing [0.05]"),
+        setting("dim", "D", "dim", "embedding dimension [64]"),
+        setting("epochs", "E", "epochs", "|E| positive samples per epoch [10]"),
+        setting("lr", "X", "lr", "initial learning rate [0.025]"),
+        setting("negatives", "K", "negatives", "negative samples per positive [5]"),
+        setting("neg-weight", "W", "neg_weight", "negative sample weight [5]"),
+        setting("batch-size", "B", "batch_size", "samples per device batch [1024]"),
+        setting("seed", "N", "seed", "run seed [42]"),
+        setting("log-every", "N", "log_every", "progress cadence in episodes [10]"),
+        setting("walk-length", "L", "walk_length", "random walk length in edges [5]"),
+        setting("aug-distance", "S", "augmentation_distance", "augmentation distance [2]"),
+        setting("workers", "N", "num_workers", "simulated GPUs [4]"),
+        setting(
+            "capacities",
+            "LIST",
+            "worker_capacities",
+            "per-worker capacities, e.g. 2,1 (heterogeneous devices)",
+        ),
+        setting(
+            "partitions",
+            "N",
+            "num_partitions",
+            "matrix partitions (0 = workers; multiple of total capacity)",
+        ),
+        setting("samplers", "N", "num_samplers", "CPU sampler threads [4]"),
+        setting("episode-size", "N", "episode_size", "samples per episode x workers [200000]"),
+        setting("backend", "B", "backend", "device backend (see `graphvite help`) [native]"),
+        setting("shuffle", "S", "shuffle", "none | random | index-mapping | pseudo [pseudo]"),
+        setting("graph-format", "F", "graph_format", "how GRAPH is loaded [auto]"),
+        setting(
+            "graph-cache-bytes",
+            "N",
+            "graph_cache_bytes",
+            "page-cache budget for packed graphs [64 MiB]",
+        ),
+        setting(
+            "transport",
+            "MODE",
+            "workers",
+            "local | tcp://HOST:PORT — where workers live [local]",
+        ),
+        setting(
+            "worker-timeout-secs",
+            "N",
+            "worker_timeout_secs",
+            "fail if a remote worker goes silent this long (0 = off) [0]",
+        ),
+        setting(
+            "heartbeat-secs",
+            "N",
+            "heartbeat_secs",
+            "PING idle tcp workers every N seconds (0 = off) [0]",
+        ),
+        setting(
+            "max-worker-retries",
+            "N",
+            "max_worker_retries",
+            "recover up to N worker failures by replay (0 = fail loud) [0]",
+        ),
+        setting(
+            "rejoin-window-secs",
+            "N",
+            "rejoin_window_secs",
+            "hold a dead slot open for a replacement (0 = fold now) [0]",
+        ),
+        switch_bool(
+            "wire-compression",
+            "wire_compression",
+            true,
+            "delta/XOR-compress tcp shipments (the default; lossless)",
+        ),
+        switch_bool(
+            "no-wire-compression",
+            "wire_compression",
+            false,
+            "ship raw f32 frames (wins if both compression flags given)",
+        ),
+        switch_bool("no-collaboration", "collaboration", false, "disable double-buffered pools"),
+        switch_bool(
+            "no-augmentation",
+            "online_augmentation",
+            false,
+            "plain edge sampling, no online augmentation",
+        ),
+        switch_bool(
+            "no-fix-context",
+            "fix_context",
+            false,
+            "re-transfer context partitions every episode",
+        ),
+        switch_bool("no-pipeline", "pipeline_transfers", false, "serial wave dispatch"),
+        switch_bool("no-residency", "residency", false, "re-ship partitions every episode"),
+        value("fault-checkpoint", "FILE", "cut a .gvck at the last pool boundary on death"),
+        value("output", "FILE", "save embeddings (format from the extension)"),
+        value("output-format", "F", "binary | text | gvemb (overrides the extension)"),
+        value("checkpoint", "FILE", "write a resumable .gvck at pool boundaries"),
+        value("checkpoint-every", "K", "checkpoint every K-th pool boundary [1]"),
+        value("resume", "FILE.gvck", "continue a checkpointed run (same graph/seed/epochs)"),
+        value("stop-after-pools", "K", "end the run cleanly after K pool passes (0 = off)"),
+        HELP_FLAG,
+    ],
+};
+
+pub static PACK: CommandSpec = CommandSpec {
+    name: "pack",
+    about: "pack an edge list for out-of-core training",
+    usage: "graphvite pack GRAPH.txt --out FILE.gvpk [options]",
+    flags: &[
+        value("out", "FILE.gvpk", "output path (required)"),
+        value("page-size", "BYTES", "successor-page granularity [65536]"),
+        HELP_FLAG,
+    ],
+};
+
+pub static GENERATE: CommandSpec = CommandSpec {
+    name: "generate",
+    about: "write a synthetic benchmark graph to an edge list",
+    usage: "graphvite generate --kind KIND --out FILE [options]",
+    flags: &[
+        value("kind", "KIND", "ba | youtube | sbm | er [ba]"),
+        value("nodes", "N", "graph size [10000]"),
+        value("edges-per-node", "M", "mean degree / 2 [5]"),
+        value("labels", "K", "label count (youtube/sbm) [10]"),
+        value("mixing", "X", "sbm inter-community mixing [0.05]"),
+        value("seed", "N", "generator seed [42]"),
+        value("out", "FILE", "output edge-list path (required)"),
+        HELP_FLAG,
+    ],
+};
+
+pub static EVAL: CommandSpec = CommandSpec {
+    name: "eval",
+    about: "evaluate saved embeddings",
+    usage: "graphvite eval TASK --embeddings F --graph G [options]",
+    flags: &[
+        value("embeddings", "FILE", "saved embeddings (required)"),
+        value("graph", "FILE", "edge list the embeddings were trained on (required)"),
+        value("train-frac", "X", "classify: labeled fraction [0.02]"),
+        value("holdout", "X", "linkpred: held-out edge fraction [0.01]"),
+        value("seed", "N", "evaluation split seed [7]"),
+        HELP_FLAG,
+    ],
+};
+
+pub static SERVE: CommandSpec = CommandSpec {
+    name: "serve",
+    about: "serve batched top-k queries over TCP",
+    usage: "graphvite serve EMB [options]",
+    flags: &[
+        value("embeddings", "FILE", "embedding file (or pass it positionally)"),
+        value("addr", "HOST:PORT", "bind address [127.0.0.1:7654]"),
+        value("nlist", "N", "IVF inverted lists (0 = ~sqrt(n)) [0]"),
+        value("nprobe", "N", "lists probed per query (0 = nlist/8) [0]"),
+        value("seed", "N", "IVF clustering seed"),
+        FlagSpec {
+            name: "watch",
+            kind: FlagKind::Switch,
+            help: "hot-reload the embedding file when training rewrites it",
+            binding: Binding::None,
+        },
+        value("poll-ms", "MS", "watcher poll interval [500]"),
+        HELP_FLAG,
+    ],
+};
+
+pub static WORKER: CommandSpec = CommandSpec {
+    name: "worker",
+    about: "host a training worker for a remote coordinator",
+    usage: "graphvite worker --connect HOST:PORT [options]",
+    flags: &[
+        value("connect", "HOST:PORT", "coordinator address (or pass it positionally)"),
+        value("connect-timeout-secs", "N", "give up connecting after N seconds [30]"),
+        HELP_FLAG,
+    ],
+};
+
+pub static EXP: CommandSpec = CommandSpec {
+    name: "exp",
+    about: "regenerate a paper table or figure",
+    usage: "graphvite exp NAME [--scale S]",
+    flags: &[value("scale", "S", "tiny | small | full [small]"), HELP_FLAG],
+};
+
+pub static STATS: CommandSpec = CommandSpec {
+    name: "stats",
+    about: "graph statistics and the Table-1 memory model",
+    usage: "graphvite stats [GRAPH] [options]",
+    flags: &[
+        value("synthetic", "KIND", "ba | youtube | sbm | karate (instead of GRAPH)"),
+        value("nodes", "N", "synthetic graph size [10000]"),
+        value("edges-per-node", "M", "synthetic mean degree / 2 [5]"),
+        value("labels", "K", "synthetic label count [10]"),
+        value("mixing", "X", "sbm inter-community mixing [0.05]"),
+        value("seed", "N", "synthetic generator seed [42]"),
+        value("dim", "D", "memory-model embedding dimension [128]"),
+        value("walk-length", "L", "memory-model walk length [5]"),
+        value("aug-distance", "S", "memory-model augmentation distance [2]"),
+        value("graph-format", "F", "how GRAPH is loaded [auto]"),
+        value("graph-cache-bytes", "N", "page-cache budget for packed graphs [64 MiB]"),
+        HELP_FLAG,
+    ],
+};
+
+pub static ARTIFACTS: CommandSpec = CommandSpec {
+    name: "artifacts",
+    about: "list the AOT HLO artifacts the runtime can load",
+    usage: "graphvite artifacts",
+    flags: &[HELP_FLAG],
+};
+
+/// Every speced subcommand, in `graphvite help` order.
+pub static COMMANDS: &[&CommandSpec] =
+    &[&TRAIN, &PACK, &GENERATE, &EVAL, &SERVE, &WORKER, &EXP, &STATS, &ARTIFACTS];
+
+/// Look up the spec for a subcommand name.
+pub fn command_spec(name: &str) -> Option<&'static CommandSpec> {
+    COMMANDS.iter().copied().find(|c| c.name == name)
+}
+
+impl CommandSpec {
+    /// This command's entry for `name` (without the `--`).
+    pub fn flag(&self, name: &str) -> Option<&'static FlagSpec> {
+        self.flags.iter().find(|f| f.name == name)
+    }
+
+    /// Parse this command's arguments (argv *after* the subcommand
+    /// token). Strict: unknown flags, switches given values, and value
+    /// flags missing them are all pointed errors.
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut out = Args { command: self.name.to_string(), ..Args::default() };
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            let Some(rest) = tok.strip_prefix("--") else {
+                out.positional.push(tok.clone());
+                continue;
+            };
+            if rest.is_empty() {
+                bail!("bare '--' not supported");
+            }
+            let (name, inline) = match rest.find('=') {
+                Some(eq) => (&rest[..eq], Some(rest[eq + 1..].to_string())),
+                None => (rest, None),
+            };
+            let spec = self.flag(name).ok_or_else(|| self.unknown_flag(name))?;
+            match (spec.kind, inline) {
+                (FlagKind::Switch, None) => out.flags.push(spec.name.to_string()),
+                (FlagKind::Switch, Some(v)) => {
+                    bail!("--{name} is a switch and takes no value (got '{v}')")
+                }
+                (FlagKind::Value(_), Some(v)) => {
+                    out.opts.insert(spec.name.to_string(), v);
+                }
+                (FlagKind::Value(ph), None) => match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        out.opts.insert(spec.name.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => bail!(
+                        "--{name} requires a value {ph} (see `graphvite {} --help`)",
+                        self.name
+                    ),
+                },
+            }
+        }
+        Ok(out)
+    }
+
+    fn unknown_flag(&self, name: &str) -> anyhow::Error {
+        match suggest(name, self.flags) {
+            Some(s) => {
+                anyhow!("unknown flag --{name} for `graphvite {}` (did you mean --{s}?)", self.name)
+            }
+            None => anyhow!(
+                "unknown flag --{name} for `graphvite {0}` (see `graphvite {0} --help`)",
+                self.name
+            ),
+        }
+    }
+
+    /// The generated `--help` screen, one line per flag.
+    pub fn help(&self) -> String {
+        let mut out = format!(
+            "graphvite {} — {}\n\nUSAGE:\n  {}\n\nOPTIONS:\n",
+            self.name, self.about, self.usage
+        );
+        for f in self.flags {
+            let head = match f.kind {
+                FlagKind::Value(ph) => format!("--{} {}", f.name, ph),
+                FlagKind::Switch => format!("--{}", f.name),
+            };
+            out.push_str(&format!("  {head:<26} {}\n", f.help));
+        }
+        out
+    }
+
+    /// Fold every config-bound flag in `args` into `b`, recording the
+    /// flag spelling (`--dim`) as the field's provenance. Table order
+    /// decides ties: `--no-wire-compression` is listed after
+    /// `--wire-compression`, so off wins when both are given.
+    pub fn apply_to_builder(&self, args: &Args, b: &mut TrainConfigBuilder) -> Result<()> {
+        for f in self.flags {
+            match f.binding {
+                Binding::Set(key) => {
+                    if let Some(v) = args.get(f.name) {
+                        b.set_str(key, v, &format!("--{}", f.name))?;
+                    }
+                }
+                Binding::SetBool(key, to) => {
+                    if args.flag(f.name) {
+                        b.set_str(key, if to { "true" } else { "false" }, &format!("--{}", f.name))?;
+                    }
+                }
+                Binding::None => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Smallest-edit-distance candidate within distance 2, for "did you
+/// mean" suggestions.
+fn suggest(name: &str, flags: &[FlagSpec]) -> Option<&'static str> {
+    flags
+        .iter()
+        .map(|f| (edit_distance(name, f.name), f.name))
+        .filter(|&(d, _)| d <= 2)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, n)| n)
+}
+
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let cost = usize::from(ca != cb);
+            cur.push((prev[j] + cost).min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn strict_parse_accepts_every_declared_form() {
+        let a = TRAIN.parse(&argv("graph.txt --dim 64 --backend=hlo --no-pipeline")).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("dim"), Some("64"));
+        assert_eq!(a.get("backend"), Some("hlo"));
+        assert!(a.flag("no-pipeline"));
+        assert_eq!(a.positional, vec!["graph.txt"]);
+    }
+
+    #[test]
+    fn unknown_flags_suggest_a_fix() {
+        let err = TRAIN.parse(&argv("--dmi 64")).unwrap_err().to_string();
+        assert!(err.contains("unknown flag --dmi"), "{err}");
+        assert!(err.contains("did you mean --dim?"), "{err}");
+        // nothing within distance 2: plain pointer to --help instead
+        let err = TRAIN.parse(&argv("--completely-wrong")).unwrap_err().to_string();
+        assert!(err.contains("--help"), "{err}");
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn missing_values_and_misused_switches_are_pointed() {
+        let err = TRAIN.parse(&argv("--dim")).unwrap_err().to_string();
+        assert!(err.contains("--dim requires a value D"), "{err}");
+        // a following --flag is not silently eaten as the value
+        let err = TRAIN.parse(&argv("--dim --epochs 3")).unwrap_err().to_string();
+        assert!(err.contains("--dim requires a value"), "{err}");
+        let err = TRAIN.parse(&argv("--no-pipeline=yes")).unwrap_err().to_string();
+        assert!(err.contains("takes no value"), "{err}");
+    }
+
+    #[test]
+    fn wire_compression_flags_reach_the_config() {
+        let mut b = TrainConfigBuilder::new();
+        let a = TRAIN.parse(&argv("--no-wire-compression")).unwrap();
+        TRAIN.apply_to_builder(&a, &mut b).unwrap();
+        assert!(!b.config().wire_compression);
+        assert_eq!(b.source_of("wire_compression"), "--no-wire-compression");
+
+        // both given: the off switch is later in the table and wins
+        let mut b = TrainConfigBuilder::new();
+        let a = TRAIN.parse(&argv("--wire-compression --no-wire-compression")).unwrap();
+        TRAIN.apply_to_builder(&a, &mut b).unwrap();
+        assert!(!b.config().wire_compression);
+    }
+
+    /// Every bound train flag round-trips CLI → config → CLI: parse
+    /// `--flag <spelling>`, fold into a builder, and the builder renders
+    /// the exact same spelling back. Run twice (defaults + a perturbed
+    /// baseline) so list/mode/bool fields are exercised on non-trivial
+    /// values too.
+    #[test]
+    fn every_flag_spec_entry_round_trips_cli_config_cli() {
+        let mut perturbed = TrainConfigBuilder::new();
+        for (k, v) in [
+            ("num_workers", "2"),
+            ("worker_capacities", "1,3"),
+            ("workers", "tcp://127.0.0.1:7077"),
+            ("backend", "simd"),
+            ("shuffle", "none"),
+            ("wire_compression", "false"),
+        ] {
+            perturbed.set_str(k, v, "baseline").unwrap();
+        }
+        for baseline in [TrainConfigBuilder::new(), perturbed] {
+            for f in TRAIN.flags {
+                match f.binding {
+                    Binding::Set(key) => {
+                        let v = baseline.value_of(key).unwrap();
+                        if v.is_empty() {
+                            continue; // e.g. an empty capacities list
+                        }
+                        let a = TRAIN.parse(&[format!("--{}", f.name), v.clone()]).unwrap();
+                        let mut b = TrainConfigBuilder::new();
+                        TRAIN.apply_to_builder(&a, &mut b).unwrap();
+                        assert_eq!(
+                            b.value_of(key).unwrap(),
+                            v,
+                            "--{} drifts through {v:?}",
+                            f.name
+                        );
+                        assert_eq!(b.source_of(key), format!("--{}", f.name));
+                    }
+                    Binding::SetBool(key, to) => {
+                        let a = TRAIN.parse(&[format!("--{}", f.name)]).unwrap();
+                        let mut b = TrainConfigBuilder::new();
+                        TRAIN.apply_to_builder(&a, &mut b).unwrap();
+                        assert_eq!(b.value_of(key).unwrap(), to.to_string(), "--{}", f.name);
+                    }
+                    Binding::None => {
+                        // must still parse in both spellings
+                        match f.kind {
+                            FlagKind::Value(_) => {
+                                let a = TRAIN
+                                    .parse(&[format!("--{}=x", f.name)])
+                                    .unwrap();
+                                assert_eq!(a.get(f.name), Some("x"));
+                            }
+                            FlagKind::Switch => {
+                                let a = TRAIN.parse(&[format!("--{}", f.name)]).unwrap();
+                                assert!(a.flag(f.name));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Golden `--help` surfaces for the four speced daily-driver
+    /// subcommands: exact header + usage lines, and the exact flag list
+    /// in table order (extracted back out of the rendered screen).
+    #[test]
+    fn golden_help_screens() {
+        let golden: &[(&CommandSpec, &str, &str, &[&str])] = &[
+            (
+                &TRAIN,
+                "graphvite train — train node embeddings through the full hybrid system",
+                "  graphvite train [GRAPH] [options]",
+                &[
+                    "config",
+                    "synthetic",
+                    "nodes",
+                    "edges-per-node",
+                    "labels",
+                    "mixing",
+                    "dim",
+                    "epochs",
+                    "lr",
+                    "negatives",
+                    "neg-weight",
+                    "batch-size",
+                    "seed",
+                    "log-every",
+                    "walk-length",
+                    "aug-distance",
+                    "workers",
+                    "capacities",
+                    "partitions",
+                    "samplers",
+                    "episode-size",
+                    "backend",
+                    "shuffle",
+                    "graph-format",
+                    "graph-cache-bytes",
+                    "transport",
+                    "worker-timeout-secs",
+                    "heartbeat-secs",
+                    "max-worker-retries",
+                    "rejoin-window-secs",
+                    "wire-compression",
+                    "no-wire-compression",
+                    "no-collaboration",
+                    "no-augmentation",
+                    "no-fix-context",
+                    "no-pipeline",
+                    "no-residency",
+                    "fault-checkpoint",
+                    "output",
+                    "output-format",
+                    "checkpoint",
+                    "checkpoint-every",
+                    "resume",
+                    "stop-after-pools",
+                    "help",
+                ],
+            ),
+            (
+                &PACK,
+                "graphvite pack — pack an edge list for out-of-core training",
+                "  graphvite pack GRAPH.txt --out FILE.gvpk [options]",
+                &["out", "page-size", "help"],
+            ),
+            (
+                &SERVE,
+                "graphvite serve — serve batched top-k queries over TCP",
+                "  graphvite serve EMB [options]",
+                &["embeddings", "addr", "nlist", "nprobe", "seed", "watch", "poll-ms", "help"],
+            ),
+            (
+                &WORKER,
+                "graphvite worker — host a training worker for a remote coordinator",
+                "  graphvite worker --connect HOST:PORT [options]",
+                &["connect", "connect-timeout-secs", "help"],
+            ),
+        ];
+        for &(spec, header, usage, flags) in golden {
+            let help = spec.help();
+            let lines: Vec<&str> = help.lines().collect();
+            assert_eq!(lines[0], header);
+            assert_eq!(lines[1], "");
+            assert_eq!(lines[2], "USAGE:");
+            assert_eq!(lines[3], usage);
+            assert_eq!(lines[4], "");
+            assert_eq!(lines[5], "OPTIONS:");
+            let listed: Vec<&str> = lines[6..]
+                .iter()
+                .map(|l| {
+                    let rest = l.strip_prefix("  --").expect("option lines start with --");
+                    rest.split([' ', '=']).next().unwrap()
+                })
+                .collect();
+            assert_eq!(listed, flags, "graphvite {} flag list drifted", spec.name);
+            // every option line carries help text past the flag column
+            for l in &lines[6..] {
+                assert!(l.len() > 4 && !l.ends_with(' '), "bare help line: {l:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_subcommand_spec_is_well_formed() {
+        for &cmd in COMMANDS {
+            assert_eq!(command_spec(cmd.name).unwrap().name, cmd.name);
+            // no duplicate flag names within a table
+            for (i, f) in cmd.flags.iter().enumerate() {
+                assert!(
+                    cmd.flags[..i].iter().all(|g| g.name != f.name),
+                    "duplicate --{} in {}",
+                    f.name,
+                    cmd.name
+                );
+                assert!(!f.help.is_empty());
+            }
+            // --help everywhere
+            assert!(cmd.flag("help").is_some(), "{} lacks --help", cmd.name);
+        }
+        assert!(command_spec("no-such-command").is_none());
+    }
+}

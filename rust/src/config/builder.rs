@@ -1,0 +1,400 @@
+//! [`TrainConfigBuilder`]: layered construction of a [`TrainConfig`]
+//! with per-field provenance.
+//!
+//! A config is assembled from three layers — defaults ← TOML ← CLI —
+//! and every field remembers which layer last set it. Validation then
+//! happens *once*, over the final value set, and a failed check reports
+//! where the offending value came from: `worker_capacities has 1
+//! entries but num_workers is 2 (worker_capacities from --capacities)`
+//! reads very differently from `(worker_capacities from config.toml)`.
+//!
+//! The field set and the TOML keys are exactly [`TrainConfig`]'s — this
+//! module adds bookkeeping, not surface.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::graph::GraphFormat;
+use crate::pool::ShuffleKind;
+
+use super::{parse_toml, BackendKind, TomlValue, TrainConfig, WorkerMode};
+
+/// Every TOML-keyed field of [`TrainConfig`], in declaration order.
+/// `value_of`/`set_str` accept exactly these keys; the CLI spec's
+/// round-trip test walks this list.
+pub const KEYS: &[&str] = &[
+    "dim",
+    "epochs",
+    "lr",
+    "negatives",
+    "neg_weight",
+    "walk_length",
+    "augmentation_distance",
+    "num_workers",
+    "worker_capacities",
+    "num_partitions",
+    "num_samplers",
+    "episode_size",
+    "shuffle",
+    "backend",
+    "collaboration",
+    "online_augmentation",
+    "fix_context",
+    "pipeline_transfers",
+    "residency",
+    "graph_format",
+    "graph_cache_bytes",
+    "batch_size",
+    "seed",
+    "log_every",
+    "workers",
+    "worker_timeout_secs",
+    "heartbeat_secs",
+    "max_worker_retries",
+    "rejoin_window_secs",
+    "wire_compression",
+];
+
+/// Builder for [`TrainConfig`]: construction (layered, unvalidated)
+/// split from validation ([`Self::build`]).
+pub struct TrainConfigBuilder {
+    cfg: TrainConfig,
+    sources: BTreeMap<&'static str, String>,
+}
+
+impl Default for TrainConfigBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TrainConfigBuilder {
+    /// Start from [`TrainConfig::default`]; every field's provenance is
+    /// `"default"` until a layer overrides it.
+    pub fn new() -> Self {
+        TrainConfigBuilder { cfg: TrainConfig::default(), sources: BTreeMap::new() }
+    }
+
+    /// Where `field`'s current value came from.
+    pub fn source_of(&self, field: &str) -> &str {
+        self.sources.get(field).map(String::as_str).unwrap_or("default")
+    }
+
+    /// Read access to the accumulated (unvalidated) config.
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Validate the accumulated config. A failed check names the field
+    /// *and* the layer that set it.
+    pub fn build(&self) -> Result<TrainConfig> {
+        if let Err(e) = self.cfg.validate_fields() {
+            bail!("{} ({} from {})", e.message, e.field, self.source_of(e.field));
+        }
+        Ok(self.cfg.clone())
+    }
+
+    /// Canonicalize a key (interned so provenance keys are `'static`).
+    fn intern(key: &str) -> Result<&'static str> {
+        KEYS.iter().find(|&&k| k == key).copied().ok_or_else(|| {
+            anyhow::anyhow!("unknown config key '{key}' (expected one of: {})", KEYS.join(", "))
+        })
+    }
+
+    /// Apply one TOML file's `[train]` table on top of the current
+    /// layers, recording `origin` (e.g. the file name) as the source of
+    /// every key it sets. Unknown keys are ignored (forward
+    /// compatibility, matching the historical loader).
+    pub fn apply_toml_str(&mut self, text: &str, origin: &str) -> Result<&mut Self> {
+        let doc = parse_toml(text)?;
+        let get = |key: &str| -> Option<&TomlValue> {
+            doc.get(&format!("train.{key}")).or_else(|| doc.get(key))
+        };
+        let cfg = &mut self.cfg;
+        let mut touched: Vec<&'static str> = Vec::new();
+        macro_rules! set_num {
+            ($field:ident, $key:expr, $ty:ty) => {
+                if let Some(v) = get($key) {
+                    cfg.$field = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!(concat!($key, " must be a number")))?
+                        as $ty;
+                    touched.push($key);
+                }
+            };
+        }
+        set_num!(dim, "dim", usize);
+        set_num!(epochs, "epochs", usize);
+        set_num!(lr, "lr", f32);
+        set_num!(negatives, "negatives", usize);
+        set_num!(neg_weight, "neg_weight", f32);
+        set_num!(walk_length, "walk_length", usize);
+        set_num!(augmentation_distance, "augmentation_distance", usize);
+        set_num!(num_workers, "num_workers", usize);
+        set_num!(num_partitions, "num_partitions", usize);
+        if let Some(v) = get("worker_capacities") {
+            let arr = v.as_array().ok_or_else(|| {
+                anyhow::anyhow!("worker_capacities must be an array of positive integers")
+            })?;
+            cfg.worker_capacities = arr
+                .iter()
+                .map(|e| {
+                    e.as_i64().filter(|&c| c > 0).map(|c| c as usize).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "worker_capacities entries must be positive integers, got {e:?}"
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            touched.push("worker_capacities");
+        }
+        set_num!(num_samplers, "num_samplers", usize);
+        set_num!(episode_size, "episode_size", usize);
+        set_num!(graph_cache_bytes, "graph_cache_bytes", usize);
+        set_num!(batch_size, "batch_size", usize);
+        set_num!(seed, "seed", u64);
+        set_num!(log_every, "log_every", usize);
+        set_num!(worker_timeout_secs, "worker_timeout_secs", u64);
+        set_num!(heartbeat_secs, "heartbeat_secs", u64);
+        set_num!(max_worker_retries, "max_worker_retries", u64);
+        set_num!(rejoin_window_secs, "rejoin_window_secs", u64);
+        if let Some(v) = get("workers") {
+            let s = v.as_str().ok_or_else(|| anyhow::anyhow!("workers must be a string"))?;
+            cfg.worker_mode = WorkerMode::parse(s)?;
+            touched.push("workers");
+        }
+        if let Some(v) = get("shuffle") {
+            let s = v.as_str().ok_or_else(|| anyhow::anyhow!("shuffle must be a string"))?;
+            cfg.shuffle =
+                ShuffleKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown shuffle '{s}'"))?;
+            touched.push("shuffle");
+        }
+        if let Some(v) = get("backend") {
+            let s = v.as_str().ok_or_else(|| anyhow::anyhow!("backend must be a string"))?;
+            cfg.backend = BackendKind::parse(s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown backend '{s}' (expected one of: {})",
+                    BackendKind::names_joined()
+                )
+            })?;
+            touched.push("backend");
+        }
+        if let Some(v) = get("graph_format") {
+            let s =
+                v.as_str().ok_or_else(|| anyhow::anyhow!("graph_format must be a string"))?;
+            cfg.graph_format = GraphFormat::parse_or_err(s)?;
+            touched.push("graph_format");
+        }
+        macro_rules! set_bool {
+            ($field:ident, $key:expr) => {
+                if let Some(v) = get($key) {
+                    cfg.$field = v
+                        .as_bool()
+                        .ok_or_else(|| anyhow::anyhow!(concat!($key, " must be a bool")))?;
+                    touched.push($key);
+                }
+            };
+        }
+        set_bool!(collaboration, "collaboration");
+        set_bool!(online_augmentation, "online_augmentation");
+        set_bool!(fix_context, "fix_context");
+        set_bool!(pipeline_transfers, "pipeline_transfers");
+        set_bool!(residency, "residency");
+        set_bool!(wire_compression, "wire_compression");
+        for key in touched {
+            self.sources.insert(key, origin.to_string());
+        }
+        Ok(self)
+    }
+
+    /// Set one field from its CLI string spelling, recording `source`
+    /// (the flag, e.g. `"--dim"`). The key set is [`KEYS`] — the same
+    /// names the TOML layer uses.
+    pub fn set_str(&mut self, key: &str, value: &str, source: &str) -> Result<&mut Self> {
+        let key = Self::intern(key)?;
+        let cfg = &mut self.cfg;
+        macro_rules! num {
+            ($ty:ty) => {
+                value.parse::<$ty>().map_err(|_| {
+                    anyhow::anyhow!("{key}: cannot parse '{value}' (from {source})")
+                })?
+            };
+        }
+        let parse_bool = || match value {
+            "true" | "1" => Ok(true),
+            "false" | "0" => Ok(false),
+            _ => bail!("{key}: cannot parse '{value}' as a bool (from {source})"),
+        };
+        match key {
+            "dim" => cfg.dim = num!(usize),
+            "epochs" => cfg.epochs = num!(usize),
+            "lr" => cfg.lr = num!(f32),
+            "negatives" => cfg.negatives = num!(usize),
+            "neg_weight" => cfg.neg_weight = num!(f32),
+            "walk_length" => cfg.walk_length = num!(usize),
+            "augmentation_distance" => cfg.augmentation_distance = num!(usize),
+            "num_workers" => cfg.num_workers = num!(usize),
+            "worker_capacities" => {
+                cfg.worker_capacities = TrainConfig::parse_capacity_list(value)?
+            }
+            "num_partitions" => cfg.num_partitions = num!(usize),
+            "num_samplers" => cfg.num_samplers = num!(usize),
+            "episode_size" => cfg.episode_size = num!(usize),
+            "shuffle" => {
+                cfg.shuffle = ShuffleKind::parse(value)
+                    .ok_or_else(|| anyhow::anyhow!("unknown shuffle '{value}' (from {source})"))?
+            }
+            "backend" => {
+                cfg.backend = BackendKind::parse(value).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown backend '{value}' (expected one of: {}; from {source})",
+                        BackendKind::names_joined()
+                    )
+                })?
+            }
+            "collaboration" => cfg.collaboration = parse_bool()?,
+            "online_augmentation" => cfg.online_augmentation = parse_bool()?,
+            "fix_context" => cfg.fix_context = parse_bool()?,
+            "pipeline_transfers" => cfg.pipeline_transfers = parse_bool()?,
+            "residency" => cfg.residency = parse_bool()?,
+            "graph_format" => cfg.graph_format = GraphFormat::parse_or_err(value)?,
+            "graph_cache_bytes" => cfg.graph_cache_bytes = num!(usize),
+            "batch_size" => cfg.batch_size = num!(usize),
+            "seed" => cfg.seed = num!(u64),
+            "log_every" => cfg.log_every = num!(usize),
+            "workers" => cfg.worker_mode = WorkerMode::parse(value)?,
+            "worker_timeout_secs" => cfg.worker_timeout_secs = num!(u64),
+            "heartbeat_secs" => cfg.heartbeat_secs = num!(u64),
+            "max_worker_retries" => cfg.max_worker_retries = num!(u64),
+            "rejoin_window_secs" => cfg.rejoin_window_secs = num!(u64),
+            "wire_compression" => cfg.wire_compression = parse_bool()?,
+            _ => unreachable!("intern() vetted the key"),
+        }
+        self.sources.insert(key, source.to_string());
+        Ok(self)
+    }
+
+    /// The current value of `key`, rendered in the spelling
+    /// [`Self::set_str`] accepts — so `set_str(k, value_of(k))` is a
+    /// fixpoint. This is what the CLI round-trip property test drives.
+    pub fn value_of(&self, key: &str) -> Result<String> {
+        let key = Self::intern(key)?;
+        let cfg = &self.cfg;
+        Ok(match key {
+            "dim" => cfg.dim.to_string(),
+            "epochs" => cfg.epochs.to_string(),
+            "lr" => cfg.lr.to_string(),
+            "negatives" => cfg.negatives.to_string(),
+            "neg_weight" => cfg.neg_weight.to_string(),
+            "walk_length" => cfg.walk_length.to_string(),
+            "augmentation_distance" => cfg.augmentation_distance.to_string(),
+            "num_workers" => cfg.num_workers.to_string(),
+            "worker_capacities" => cfg
+                .worker_capacities
+                .iter()
+                .map(|c| c.to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+            "num_partitions" => cfg.num_partitions.to_string(),
+            "num_samplers" => cfg.num_samplers.to_string(),
+            "episode_size" => cfg.episode_size.to_string(),
+            "shuffle" => cfg.shuffle.name().to_string(),
+            "backend" => cfg.backend.name().to_string(),
+            "collaboration" => cfg.collaboration.to_string(),
+            "online_augmentation" => cfg.online_augmentation.to_string(),
+            "fix_context" => cfg.fix_context.to_string(),
+            "pipeline_transfers" => cfg.pipeline_transfers.to_string(),
+            "residency" => cfg.residency.to_string(),
+            "graph_format" => cfg.graph_format.name().to_string(),
+            "graph_cache_bytes" => cfg.graph_cache_bytes.to_string(),
+            "batch_size" => cfg.batch_size.to_string(),
+            "seed" => cfg.seed.to_string(),
+            "log_every" => cfg.log_every.to_string(),
+            "workers" => cfg.worker_mode.spelling(),
+            "worker_timeout_secs" => cfg.worker_timeout_secs.to_string(),
+            "heartbeat_secs" => cfg.heartbeat_secs.to_string(),
+            "max_worker_retries" => cfg.max_worker_retries.to_string(),
+            "rejoin_window_secs" => cfg.rejoin_window_secs.to_string(),
+            "wire_compression" => cfg.wire_compression.to_string(),
+            _ => unreachable!("intern() vetted the key"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layers_stack_and_track_provenance() {
+        let mut b = TrainConfigBuilder::new();
+        assert_eq!(b.source_of("dim"), "default");
+        b.apply_toml_str("[train]\ndim = 32\nepochs = 3\n", "config.toml").unwrap();
+        b.set_str("dim", "48", "--dim").unwrap();
+        assert_eq!(b.source_of("dim"), "--dim", "CLI overrides TOML");
+        assert_eq!(b.source_of("epochs"), "config.toml");
+        assert_eq!(b.source_of("lr"), "default");
+        let cfg = b.build().unwrap();
+        assert_eq!(cfg.dim, 48);
+        assert_eq!(cfg.epochs, 3);
+    }
+
+    #[test]
+    fn validation_errors_name_the_layer() {
+        // bad value from the CLI layer
+        let mut b = TrainConfigBuilder::new();
+        b.set_str("num_workers", "2", "--workers").unwrap();
+        b.set_str("worker_capacities", "1", "--capacities").unwrap();
+        let err = b.build().unwrap_err().to_string();
+        assert!(err.contains("worker_capacities from --capacities"), "{err}");
+        // the same bad value from a config file names the file instead
+        let mut b = TrainConfigBuilder::new();
+        b.apply_toml_str("num_workers = 2\nworker_capacities = [1]\n", "bad.toml").unwrap();
+        let err = b.build().unwrap_err().to_string();
+        assert!(err.contains("worker_capacities from bad.toml"), "{err}");
+        // an invariant violated by untouched defaults says so
+        let mut b = TrainConfigBuilder::new();
+        b.set_str("dim", "0", "--dim").unwrap();
+        let err = b.build().unwrap_err().to_string();
+        assert!(err.contains("dim from --dim"), "{err}");
+    }
+
+    #[test]
+    fn set_str_rejects_unknown_keys_and_bad_values() {
+        let mut b = TrainConfigBuilder::new();
+        let err = b.set_str("dimension", "64", "--dimension").unwrap_err().to_string();
+        assert!(err.contains("unknown config key 'dimension'"), "{err}");
+        let err = b.set_str("dim", "big", "--dim").unwrap_err().to_string();
+        assert!(err.contains("'big'") && err.contains("--dim"), "{err}");
+        let err = b.set_str("wire_compression", "maybe", "--wire-compression").unwrap_err();
+        assert!(err.to_string().contains("bool"), "{err}");
+    }
+
+    #[test]
+    fn every_key_round_trips_through_its_string_spelling() {
+        // give list/mode keys non-default values so the spellings are
+        // non-trivial, then check set_str(value_of(k)) is a fixpoint
+        let mut b = TrainConfigBuilder::new();
+        b.set_str("num_workers", "2", "t").unwrap();
+        b.set_str("worker_capacities", "1,3", "t").unwrap();
+        b.set_str("workers", "tcp://127.0.0.1:7077", "t").unwrap();
+        b.set_str("wire_compression", "false", "t").unwrap();
+        for &key in KEYS {
+            let v = b.value_of(key).unwrap();
+            let mut b2 = TrainConfigBuilder::new();
+            if !v.is_empty() {
+                b2.set_str(key, &v, "t").unwrap();
+            }
+            assert_eq!(b2.value_of(key).unwrap(), v, "key '{key}' drifts through {v:?}");
+        }
+    }
+
+    #[test]
+    fn wire_compression_defaults_on_and_parses() {
+        assert!(TrainConfig::default().wire_compression);
+        let cfg = TrainConfig::from_toml_str("[train]\nwire_compression = false\n").unwrap();
+        assert!(!cfg.wire_compression);
+        assert!(TrainConfig::from_toml_str("wire_compression = 3\n").is_err());
+    }
+}

@@ -1,8 +1,10 @@
 //! Training configuration + a TOML-subset parser (serde/toml are not in
 //! the offline crate set, so the config substrate is built from scratch).
 
+mod builder;
 mod toml;
 
+pub use builder::TrainConfigBuilder;
 pub use toml::{parse_toml, TomlValue};
 
 use anyhow::{bail, Result};
@@ -308,6 +310,15 @@ pub struct TrainConfig {
     /// Only meaningful with `max_worker_retries > 0`. TOML key
     /// `rejoin_window_secs`, CLI `--rejoin-window-secs`.
     pub rejoin_window_secs: u64,
+    /// Lossless shipment compression on tcp runs: partition payloads are
+    /// delta-encoded against the copy the receiver already holds and the
+    /// residual packed Gorilla-style ([`crate::net::compress`]) —
+    /// bit-exact reconstruction, negotiated in the HELLO/ASSIGN
+    /// handshake, counted by the `wire_bytes_saved` side of the wire
+    /// ledger. A no-op for local (in-process) workers. TOML key
+    /// `wire_compression`, CLI `--wire-compression` /
+    /// `--no-wire-compression`.
+    pub wire_compression: bool,
 }
 
 impl Default for TrainConfig {
@@ -342,15 +353,38 @@ impl Default for TrainConfig {
             heartbeat_secs: 0,
             max_worker_retries: 0,
             rejoin_window_secs: 0,
+            wire_compression: true,
         }
     }
+}
+
+/// A validation failure that knows which config field it is about, so
+/// [`TrainConfigBuilder`] can append where that field's value came from.
+pub(crate) struct FieldError {
+    pub field: &'static str,
+    pub message: String,
+}
+
+macro_rules! field_bail {
+    ($field:expr, $($arg:tt)*) => {
+        return Err(FieldError { field: $field, message: format!($($arg)*) })
+    };
 }
 
 impl TrainConfig {
     /// Validate invariants; call before training.
     pub fn validate(&self) -> Result<()> {
+        self.validate_fields().map_err(|e| anyhow::anyhow!("{}", e.message))
+    }
+
+    /// The checks behind [`Self::validate`], each tagged with the config
+    /// field it is about. [`TrainConfigBuilder::build`] uses the tag to
+    /// report *where* the offending value came from (CLI flag, config
+    /// file, or default).
+    pub(crate) fn validate_fields(&self) -> std::result::Result<(), FieldError> {
         if !self.backend.available() {
-            bail!(
+            field_bail!(
+                "backend",
                 "backend '{}' is not compiled into this binary: rebuild with \
                  `cargo build --features pjrt` (the default feature set ships \
                  the pure-rust 'native' and 'simd' backends)",
@@ -358,27 +392,36 @@ impl TrainConfig {
             );
         }
         if self.dim == 0 {
-            bail!("dim must be positive");
+            field_bail!("dim", "dim must be positive");
         }
-        if self.num_workers == 0 || self.num_samplers == 0 {
-            bail!("num_workers and num_samplers must be positive");
+        if self.num_workers == 0 {
+            field_bail!("num_workers", "num_workers must be positive");
+        }
+        if self.num_samplers == 0 {
+            field_bail!("num_samplers", "num_samplers must be positive");
         }
         if !self.worker_capacities.is_empty() {
             if self.worker_capacities.len() != self.num_workers {
-                bail!(
+                field_bail!(
+                    "worker_capacities",
                     "worker_capacities has {} entries but num_workers is {}",
                     self.worker_capacities.len(),
                     self.num_workers
                 );
             }
             if self.worker_capacities.iter().any(|&c| c == 0) {
-                bail!("worker capacities must be >= 1, got {:?}", self.worker_capacities);
+                field_bail!(
+                    "worker_capacities",
+                    "worker capacities must be >= 1, got {:?}",
+                    self.worker_capacities
+                );
             }
         }
         let parts = self.partitions();
         let total = self.total_capacity();
         if parts % total != 0 {
-            bail!(
+            field_bail!(
+                "num_partitions",
                 "num_partitions ({parts}) must be a multiple of the total worker \
                  capacity ({total}: {} workers with capacities {:?})",
                 self.num_workers,
@@ -386,34 +429,46 @@ impl TrainConfig {
             );
         }
         if self.fix_context && parts != self.num_workers {
-            bail!("fix_context requires num_partitions == num_workers (paper section 3.4)");
+            field_bail!(
+                "fix_context",
+                "fix_context requires num_partitions == num_workers (paper section 3.4)"
+            );
         }
-        if self.walk_length == 0 || self.augmentation_distance == 0 {
-            bail!("walk_length and augmentation_distance must be positive");
+        if self.walk_length == 0 {
+            field_bail!("walk_length", "walk_length must be positive");
         }
-        if self.episode_size == 0 || self.batch_size == 0 {
-            bail!("episode_size and batch_size must be positive");
+        if self.augmentation_distance == 0 {
+            field_bail!("augmentation_distance", "augmentation_distance must be positive");
+        }
+        if self.episode_size == 0 {
+            field_bail!("episode_size", "episode_size must be positive");
+        }
+        if self.batch_size == 0 {
+            field_bail!("batch_size", "batch_size must be positive");
         }
         if self.graph_cache_bytes == 0 {
-            bail!(
+            field_bail!(
+                "graph_cache_bytes",
                 "graph_cache_bytes must be positive — it is the page-cache byte \
                  budget for graph_format = \"packed\"/\"auto\" graphs"
             );
         }
         if !(self.lr > 0.0) {
-            bail!("lr must be positive");
+            field_bail!("lr", "lr must be positive");
         }
         if self.negatives == 0 {
-            bail!("negatives must be >= 1");
+            field_bail!("negatives", "negatives must be >= 1");
         }
         if self.rejoin_window_secs > 0 && self.max_worker_retries == 0 {
-            bail!(
+            field_bail!(
+                "rejoin_window_secs",
                 "rejoin_window_secs needs max_worker_retries > 0 — the rejoin window \
                  only opens when worker-failure recovery is enabled"
             );
         }
         if matches!(self.worker_mode, WorkerMode::Tcp(_)) && self.backend == BackendKind::Pjrt {
-            bail!(
+            field_bail!(
+                "backend",
                 "workers = \"tcp://...\" cannot run the pjrt backend (HLO artifacts are \
                  host-local); use native or simd for multi-process training"
             );
@@ -433,95 +488,13 @@ impl TrainConfig {
         Self::from_toml_str(&text)
     }
 
+    /// Parse + validate in one step. The typed key mapping lives in
+    /// [`TrainConfigBuilder::apply_toml_str`]; this entry point keeps
+    /// the historical one-shot signature.
     pub fn from_toml_str(text: &str) -> Result<Self> {
-        let doc = parse_toml(text)?;
-        let mut cfg = TrainConfig::default();
-        let get = |key: &str| -> Option<&TomlValue> {
-            doc.get(&format!("train.{key}")).or_else(|| doc.get(key))
-        };
-        macro_rules! set_num {
-            ($field:ident, $key:expr, $ty:ty) => {
-                if let Some(v) = get($key) {
-                    cfg.$field = v.as_f64().ok_or_else(|| {
-                        anyhow::anyhow!(concat!($key, " must be a number"))
-                    })? as $ty;
-                }
-            };
-        }
-        set_num!(dim, "dim", usize);
-        set_num!(epochs, "epochs", usize);
-        set_num!(lr, "lr", f32);
-        set_num!(negatives, "negatives", usize);
-        set_num!(neg_weight, "neg_weight", f32);
-        set_num!(walk_length, "walk_length", usize);
-        set_num!(augmentation_distance, "augmentation_distance", usize);
-        set_num!(num_workers, "num_workers", usize);
-        set_num!(num_partitions, "num_partitions", usize);
-        if let Some(v) = get("worker_capacities") {
-            let arr = v.as_array().ok_or_else(|| {
-                anyhow::anyhow!("worker_capacities must be an array of positive integers")
-            })?;
-            cfg.worker_capacities = arr
-                .iter()
-                .map(|e| {
-                    e.as_i64().filter(|&c| c > 0).map(|c| c as usize).ok_or_else(|| {
-                        anyhow::anyhow!(
-                            "worker_capacities entries must be positive integers, got {e:?}"
-                        )
-                    })
-                })
-                .collect::<Result<Vec<_>>>()?;
-        }
-        set_num!(num_samplers, "num_samplers", usize);
-        set_num!(episode_size, "episode_size", usize);
-        set_num!(graph_cache_bytes, "graph_cache_bytes", usize);
-        set_num!(batch_size, "batch_size", usize);
-        set_num!(seed, "seed", u64);
-        set_num!(log_every, "log_every", usize);
-        set_num!(worker_timeout_secs, "worker_timeout_secs", u64);
-        set_num!(heartbeat_secs, "heartbeat_secs", u64);
-        set_num!(max_worker_retries, "max_worker_retries", u64);
-        set_num!(rejoin_window_secs, "rejoin_window_secs", u64);
-        if let Some(v) = get("workers") {
-            let s = v.as_str().ok_or_else(|| anyhow::anyhow!("workers must be a string"))?;
-            cfg.worker_mode = WorkerMode::parse(s)?;
-        }
-        if let Some(v) = get("shuffle") {
-            let s = v.as_str().ok_or_else(|| anyhow::anyhow!("shuffle must be a string"))?;
-            cfg.shuffle = ShuffleKind::parse(s)
-                .ok_or_else(|| anyhow::anyhow!("unknown shuffle '{s}'"))?;
-        }
-        if let Some(v) = get("backend") {
-            let s = v.as_str().ok_or_else(|| anyhow::anyhow!("backend must be a string"))?;
-            cfg.backend = BackendKind::parse(s).ok_or_else(|| {
-                anyhow::anyhow!(
-                    "unknown backend '{s}' (expected one of: {})",
-                    BackendKind::names_joined()
-                )
-            })?;
-        }
-        if let Some(v) = get("graph_format") {
-            let s = v
-                .as_str()
-                .ok_or_else(|| anyhow::anyhow!("graph_format must be a string"))?;
-            cfg.graph_format = GraphFormat::parse_or_err(s)?;
-        }
-        macro_rules! set_bool {
-            ($field:ident, $key:expr) => {
-                if let Some(v) = get($key) {
-                    cfg.$field = v.as_bool().ok_or_else(|| {
-                        anyhow::anyhow!(concat!($key, " must be a bool"))
-                    })?;
-                }
-            };
-        }
-        set_bool!(collaboration, "collaboration");
-        set_bool!(online_augmentation, "online_augmentation");
-        set_bool!(fix_context, "fix_context");
-        set_bool!(pipeline_transfers, "pipeline_transfers");
-        set_bool!(residency, "residency");
-        cfg.validate()?;
-        Ok(cfg)
+        let mut b = TrainConfigBuilder::new();
+        b.apply_toml_str(text, "config file")?;
+        b.build()
     }
 
     /// Total positive samples this config trains (epochs × |E|).

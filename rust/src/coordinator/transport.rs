@@ -29,12 +29,32 @@
 //!     │                                         │  agree — the wire ledger
 //! ```
 //!
+//! **Overlapped sends (v3).** Each worker slot owns a dedicated writer
+//! thread with a bounded send queue — the sending mirror of its reader
+//! thread — so frame serialization, compression and socket writes
+//! overlap worker compute instead of blocking the coordinator's
+//! dispatch loop. Per-worker FIFO is preserved (one queue, one stream);
+//! the group fence stays the only barrier, so pipelined socket runs
+//! remain bitwise-identical to local runs.
+//!
+//! **Wire compression (v3).** When `TrainConfig::wire_compression` is
+//! negotiated in the handshake, every f32 payload section crosses the
+//! wire as a [`crate::net::compress`] packed section: delta-encoded
+//! against the version of that `(matrix, partition)` the receiver
+//! already holds (both ends keep a [`WireCache`] in lockstep, in either
+//! direction), residuals Gorilla-XOR bit-packed, bit-exact on decode.
+//! Workers that cannot compress are rejected with a pointed error.
+//!
 //! **Wire ledger.** Both ends count shipment payload bytes (down) and
 //! result payload bytes (up) independently; the worker's counts travel in
 //! its BYE and must equal the coordinator's per-connection counts, and
 //! the transport totals must equal the transfer engine's
 //! `bytes_to_device` / `bytes_from_device` counters — the PR-3 ledger,
-//! asserted on both sides of the wire.
+//! asserted on both sides of the wire. v3 extends the ledger two-sided
+//! per direction: raw payload bytes (what the transfer engine counts)
+//! vs on-wire bytes (what the packed sections actually occupied), so
+//! `wire_bytes_saved = raw - wire` is itself a balanced, asserted
+//! quantity and the shutdown banner can print a compression ratio.
 //!
 //! **Failure discipline.** Every decode path returns a pointed error
 //! (never panics); a worker-side job error travels back as an ERR frame
@@ -49,10 +69,10 @@
 //! workers; per-device timing counters (`device_nanos`) remain
 //! worker-local and are not part of the ledger.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -61,6 +81,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::config::{BackendKind, TrainConfig};
 use crate::embedding::Matrix;
 use crate::metrics::Counters;
+use crate::net::compress::PackedLens;
 use crate::net::{self, Cursor, MAX_CONTROL_FRAME, MAX_DATA_FRAME};
 use crate::sampling::NegativeSampler;
 use crate::util::rng::{streams, Rng};
@@ -77,7 +98,10 @@ pub const ASSIGN_MAGIC: [u8; 4] = *b"GVAS";
 /// Bumped on any wire-format change; both ends must match exactly.
 /// v2: PING/PONG liveness frames, job takeover (fold) section, post-job
 /// RNG state in results, and the rejoin generation counter in ASSIGN.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// v3: wire-compression negotiation (HELLO capability byte, ASSIGN
+/// flag), packed f32 payload sections ([`crate::net::compress`]), and
+/// the extended BYE carrying on-wire byte counts per direction.
+pub const PROTOCOL_VERSION: u32 = 3;
 
 const MSG_TRAIN: u8 = 1;
 const MSG_SYNC: u8 = 2;
@@ -109,10 +133,25 @@ const MAX_BAD_HANDSHAKES: usize = 64;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TransportReport {
     pub workers: usize,
-    /// Shipment payload bytes coordinator → workers.
+    /// Shipment payload bytes coordinator → workers (raw f32 bytes, the
+    /// transfer-engine unit).
     pub bytes_up: u64,
-    /// Result payload bytes workers → coordinator.
+    /// Result payload bytes workers → coordinator (raw f32 bytes).
     pub bytes_down: u64,
+    /// On-wire bytes of the packed payload sections coordinator →
+    /// workers. Equals `bytes_up` when compression is off.
+    pub wire_up: u64,
+    /// On-wire bytes of the packed payload sections workers →
+    /// coordinator. Equals `bytes_down` when compression is off.
+    pub wire_down: u64,
+}
+
+impl TransportReport {
+    /// Raw-minus-wire bytes across both directions: what compression
+    /// kept off the wire. Zero when `wire_compression` is off.
+    pub fn wire_bytes_saved(&self) -> u64 {
+        (self.bytes_up - self.wire_up) + (self.bytes_down - self.wire_down)
+    }
 }
 
 /// Delivery mechanism between the coordinator and its device workers.
@@ -217,6 +256,66 @@ impl Transport for LocalTransport {
 }
 
 // ---------------------------------------------------------------------
+// Wire compression context: the per-connection state behind the packed
+// f32 sections of protocol v3.
+// ---------------------------------------------------------------------
+
+/// The last full f32 payload each side of one connection has seen for a
+/// `(matrix, partition)` key — in *either* direction. Both ends update
+/// it at encode/decode time, and frames on one TCP stream arrive in
+/// send order, so the two caches stay in lockstep and a shipment can be
+/// delta-encoded against "the version the receiver already holds".
+/// Every delta section carries a fingerprint of its base, so lockstep
+/// is verified, never assumed.
+struct WireCache {
+    map: HashMap<(u8, u32), Vec<f32>>,
+}
+
+/// One connection's compression context, shared by that connection's
+/// writer and reader threads (clones share the cache). `compress` is
+/// the handshake-negotiated setting: off, every section is stored raw
+/// (mode byte + length) and the cache stays empty.
+#[derive(Clone)]
+pub struct WireCtx {
+    compress: bool,
+    cache: Arc<Mutex<WireCache>>,
+}
+
+impl WireCtx {
+    pub fn new(compress: bool) -> Self {
+        WireCtx { compress, cache: Arc::new(Mutex::new(WireCache { map: HashMap::new() })) }
+    }
+
+    /// Append one packed f32 section for `(matrix, pid)`, delta-encoding
+    /// against the cached base when compression is on, then cache `xs`
+    /// as the new base (the receiver decodes — and caches — the same
+    /// values, keeping both ends in lockstep).
+    fn pack(&self, out: &mut Vec<u8>, matrix: u8, pid: usize, xs: &[f32]) -> PackedLens {
+        let mut cache = self.cache.lock().expect("wire cache poisoned");
+        let base = if self.compress { cache.map.get(&(matrix, pid as u32)) } else { None };
+        let lens = net::compress::pack_f32s(out, xs, base.map(Vec::as_slice), self.compress);
+        if self.compress {
+            cache.map.insert((matrix, pid as u32), xs.to_vec());
+        }
+        lens
+    }
+
+    /// Decode one packed f32 section for `(matrix, pid)` into a fresh
+    /// vector, resolving delta sections against the cached base, then
+    /// cache the reconstructed values as the new base.
+    fn unpack(&self, c: &mut Cursor<'_>, matrix: u8, pid: usize) -> Result<(Vec<f32>, PackedLens)> {
+        let mut cache = self.cache.lock().expect("wire cache poisoned");
+        let mut out = Vec::new();
+        let base = if self.compress { cache.map.get(&(matrix, pid as u32)) } else { None };
+        let lens = net::compress::unpack_f32s(c, base.map(Vec::as_slice), &mut out)?;
+        if self.compress {
+            cache.map.insert((matrix, pid as u32), out.clone());
+        }
+        Ok((out, lens))
+    }
+}
+
+// ---------------------------------------------------------------------
 // Wire codec. Flat little-endian structs over crate::net frames; every
 // decoder bounds-checks before allocating and rejects trailing bytes.
 // ---------------------------------------------------------------------
@@ -232,7 +331,13 @@ fn get_str(c: &mut Cursor<'_>) -> Result<String> {
     Ok(String::from_utf8_lossy(bytes).into_owned())
 }
 
-fn put_shipment(out: &mut Vec<u8>, ship: &Shipment) {
+fn put_shipment(
+    out: &mut Vec<u8>,
+    ship: &Shipment,
+    matrix: u8,
+    pid: usize,
+    ctx: &WireCtx,
+) -> PackedLens {
     let mut flags = 0u8;
     if ship.data.is_some() {
         flags |= 1;
@@ -242,28 +347,35 @@ fn put_shipment(out: &mut Vec<u8>, ship: &Shipment) {
     }
     out.push(flags);
     out.extend_from_slice(&ship.src_version.to_le_bytes());
-    if let Some(data) = &ship.data {
-        net::put_f32s(out, data);
+    match &ship.data {
+        Some(data) => ctx.pack(out, matrix, pid, data),
+        None => PackedLens::default(),
     }
 }
 
-fn get_shipment(c: &mut Cursor<'_>) -> Result<Shipment> {
+fn get_shipment(
+    c: &mut Cursor<'_>,
+    matrix: u8,
+    pid: usize,
+    ctx: &WireCtx,
+) -> Result<(Shipment, PackedLens)> {
     let flags = c.u8()?;
     ensure!(flags & !3 == 0, "unknown shipment flags {flags:#x}");
     let src_version = c.u64()?;
-    let data = if flags & 1 != 0 {
-        let mut buf = Vec::new();
-        net::get_f32s(c, &mut buf)?;
-        Some(buf)
+    let (data, lens) = if flags & 1 != 0 {
+        let (buf, lens) = ctx.unpack(c, matrix, pid)?;
+        (Some(buf), lens)
     } else {
-        None
+        (None, PackedLens::default())
     };
-    Ok(Shipment { data, src_version, keep: flags & 2 != 0 })
+    Ok((Shipment { data, src_version, keep: flags & 2 != 0 }, lens))
 }
 
-/// Encode one coordinator→worker message.
-pub fn encode_job_msg(msg: &JobMsg) -> Vec<u8> {
-    match msg {
+/// Encode one coordinator→worker message. Returns the frame payload and
+/// the raw/on-wire byte counts of its packed f32 sections.
+pub fn encode_job_msg(msg: &JobMsg, ctx: &WireCtx) -> (Vec<u8>, PackedLens) {
+    let mut lens = PackedLens::default();
+    let out = match msg {
         JobMsg::Train(job) => {
             let mut out = Vec::with_capacity(64 + job.block.len() * 8);
             out.push(MSG_TRAIN);
@@ -275,8 +387,8 @@ pub fn encode_job_msg(msg: &JobMsg) -> Vec<u8> {
                 out.extend_from_slice(&u.to_le_bytes());
                 out.extend_from_slice(&v.to_le_bytes());
             }
-            put_shipment(&mut out, &job.vertex);
-            put_shipment(&mut out, &job.context);
+            lens += put_shipment(&mut out, &job.vertex, matrix_code(Matrix::Vertex), job.vid, ctx);
+            lens += put_shipment(&mut out, &job.context, matrix_code(Matrix::Context), job.cid, ctx);
             match &job.takeover {
                 None => out.push(0),
                 Some(t) => {
@@ -292,13 +404,16 @@ pub fn encode_job_msg(msg: &JobMsg) -> Vec<u8> {
         JobMsg::Sync => vec![MSG_SYNC],
         JobMsg::Ping => vec![MSG_PING],
         JobMsg::Stop => vec![MSG_STOP],
-    }
+    };
+    (out, lens)
 }
 
 /// Decode one coordinator→worker message (fail-loud: truncation, unknown
-/// tags/flags and trailing garbage are all pointed errors).
-pub fn decode_job_msg(payload: &[u8]) -> Result<JobMsg> {
+/// tags/flags and trailing garbage are all pointed errors). Returns the
+/// raw/on-wire byte counts of the packed f32 sections it consumed.
+pub fn decode_job_msg(payload: &[u8], ctx: &WireCtx) -> Result<(JobMsg, PackedLens)> {
     let mut c = Cursor::new(payload);
+    let mut lens = PackedLens::default();
     let msg = match c.u8()? {
         MSG_TRAIN => {
             let vid = c.u32()? as usize;
@@ -310,8 +425,10 @@ pub fn decode_job_msg(payload: &[u8]) -> Result<JobMsg> {
             for _ in 0..n {
                 block.push((c.i32()?, c.i32()?));
             }
-            let vertex = get_shipment(&mut c)?;
-            let context = get_shipment(&mut c)?;
+            let (vertex, vl) = get_shipment(&mut c, matrix_code(Matrix::Vertex), vid, ctx)?;
+            lens += vl;
+            let (context, cl) = get_shipment(&mut c, matrix_code(Matrix::Context), cid, ctx)?;
+            lens += cl;
             let takeover = match c.u8()? {
                 0 => None,
                 1 => {
@@ -331,7 +448,7 @@ pub fn decode_job_msg(payload: &[u8]) -> Result<JobMsg> {
         tag => bail!("unknown job-message tag {tag}"),
     };
     c.finish()?;
-    Ok(msg)
+    Ok((msg, lens))
 }
 
 /// Everything a worker sends up its stream. [`Reply`] is what the local
@@ -341,14 +458,16 @@ pub fn decode_job_msg(payload: &[u8]) -> Result<JobMsg> {
 pub enum WireReply {
     Reply(Reply),
     Err(String),
-    Bye { received: u64, sent: u64 },
+    Bye { received: u64, sent: u64, wire_received: u64, wire_sent: u64 },
 }
 
 /// Encode one worker→coordinator message. `JobResult::block` does not
 /// cross the wire (the block is spent; only its allocation matters, and
-/// each side recycles its own — see [`SocketTransport`]'s spare list).
-pub fn encode_wire_reply(reply: &WireReply) -> Vec<u8> {
-    match reply {
+/// each side recycles its own). Returns the frame payload and the
+/// raw/on-wire byte counts of its packed f32 sections.
+pub fn encode_wire_reply(reply: &WireReply, ctx: &WireCtx) -> (Vec<u8>, PackedLens) {
+    let mut lens = PackedLens::default();
+    let out = match reply {
         WireReply::Reply(Reply::Job(r)) => {
             let mut out = Vec::with_capacity(64);
             out.push(MSG_RESULT);
@@ -359,11 +478,14 @@ pub fn encode_wire_reply(reply: &WireReply) -> Vec<u8> {
             for w in r.rng_state {
                 out.extend_from_slice(&w.to_le_bytes());
             }
-            for opt in [&r.vertex, &r.context] {
+            for (opt, matrix, pid) in [
+                (&r.vertex, matrix_code(Matrix::Vertex), r.vid),
+                (&r.context, matrix_code(Matrix::Context), r.cid),
+            ] {
                 match opt {
                     Some(data) => {
                         out.push(1);
-                        net::put_f32s(&mut out, data);
+                        lens += ctx.pack(&mut out, matrix, pid, data);
                     }
                     None => out.push(0),
                 }
@@ -382,7 +504,7 @@ pub fn encode_wire_reply(reply: &WireReply) -> Vec<u8> {
                 out.push(matrix_code(part.matrix));
                 out.extend_from_slice(&(part.pid as u32).to_le_bytes());
                 out.extend_from_slice(&part.version.to_le_bytes());
-                net::put_f32s(&mut out, &part.data);
+                lens += ctx.pack(&mut out, matrix_code(part.matrix), part.pid, &part.data);
             }
             out
         }
@@ -392,18 +514,23 @@ pub fn encode_wire_reply(reply: &WireReply) -> Vec<u8> {
             out
         }
         WireReply::Reply(Reply::Pong) => vec![MSG_PONG],
-        WireReply::Bye { received, sent } => {
+        WireReply::Bye { received, sent, wire_received, wire_sent } => {
             let mut out = vec![MSG_BYE];
             out.extend_from_slice(&received.to_le_bytes());
             out.extend_from_slice(&sent.to_le_bytes());
+            out.extend_from_slice(&wire_received.to_le_bytes());
+            out.extend_from_slice(&wire_sent.to_le_bytes());
             out
         }
-    }
+    };
+    (out, lens)
 }
 
-/// Decode one worker→coordinator message.
-pub fn decode_wire_reply(payload: &[u8]) -> Result<WireReply> {
+/// Decode one worker→coordinator message. Returns the raw/on-wire byte
+/// counts of the packed f32 sections it consumed.
+pub fn decode_wire_reply(payload: &[u8], ctx: &WireCtx) -> Result<(WireReply, PackedLens)> {
     let mut c = Cursor::new(payload);
+    let mut lens = PackedLens::default();
     let reply = match c.u8()? {
         MSG_RESULT => {
             let vid = c.u32()? as usize;
@@ -415,12 +542,15 @@ pub fn decode_wire_reply(payload: &[u8]) -> Result<WireReply> {
                 *w = c.u64()?;
             }
             let mut opts = [None, None];
-            for opt in &mut opts {
+            for (opt, (matrix, pid)) in opts
+                .iter_mut()
+                .zip([(matrix_code(Matrix::Vertex), vid), (matrix_code(Matrix::Context), cid)])
+            {
                 match c.u8()? {
                     0 => {}
                     1 => {
-                        let mut buf = Vec::new();
-                        net::get_f32s(&mut c, &mut buf)?;
+                        let (buf, l) = ctx.unpack(&mut c, matrix, pid)?;
+                        lens += l;
                         *opt = Some(buf);
                     }
                     f => bail!("unknown result-section flag {f}"),
@@ -451,19 +581,24 @@ pub fn decode_wire_reply(payload: &[u8]) -> Result<WireReply> {
                 let matrix = matrix_from_code(c.u8()?)?;
                 let pid = c.u32()? as usize;
                 let version = c.u64()?;
-                let mut data = Vec::new();
-                net::get_f32s(&mut c, &mut data)?;
+                let (data, l) = ctx.unpack(&mut c, matrix_code(matrix), pid)?;
+                lens += l;
                 residents.push(ResidentPart { matrix, pid, version, data });
             }
             WireReply::Reply(Reply::Synced(SyncReply { worker, rng_state, residents }))
         }
         MSG_ERR => WireReply::Err(get_str(&mut c)?),
         MSG_PONG => WireReply::Reply(Reply::Pong),
-        MSG_BYE => WireReply::Bye { received: c.u64()?, sent: c.u64()? },
+        MSG_BYE => WireReply::Bye {
+            received: c.u64()?,
+            sent: c.u64()?,
+            wire_received: c.u64()?,
+            wire_sent: c.u64()?,
+        },
         tag => bail!("unknown reply tag {tag}"),
     };
     c.finish()?;
-    Ok(reply)
+    Ok((reply, lens))
 }
 
 fn matrix_code(m: Matrix) -> u8 {
@@ -511,17 +646,26 @@ pub fn reply_payload_bytes(reply: &Reply) -> u64 {
 // Handshake messages.
 // ---------------------------------------------------------------------
 
-/// The worker's first frame: magic + protocol version.
+/// The worker's first frame: magic + protocol version + a capability
+/// byte advertising wire-compression support (always on for this
+/// build; [`encode_hello_with`] exists for tests of the negotiation).
 pub fn encode_hello() -> Vec<u8> {
-    let mut out = Vec::with_capacity(8);
+    encode_hello_with(true)
+}
+
+/// [`encode_hello`] with an explicit wire-compression capability.
+pub fn encode_hello_with(compression: bool) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9);
     out.extend_from_slice(&HELLO_MAGIC);
     out.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    out.push(compression as u8);
     out
 }
 
 /// Validate a HELLO field by field (the `validate_resume` discipline:
 /// each mismatch is a distinct pointed error naming both sides).
-pub fn decode_hello(payload: &[u8]) -> Result<()> {
+/// Returns whether the worker supports wire compression.
+pub fn decode_hello(payload: &[u8]) -> Result<bool> {
     let mut c = Cursor::new(payload);
     let magic = c.bytes(4)?;
     ensure!(
@@ -535,8 +679,13 @@ pub fn decode_hello(payload: &[u8]) -> Result<()> {
         "worker speaks transport protocol v{version}, this coordinator speaks \
          v{PROTOCOL_VERSION} — mismatched graphvite builds"
     );
+    let compression = match c.u8()? {
+        0 => false,
+        1 => true,
+        f => bail!("unknown hello compression capability {f}"),
+    };
     c.finish()?;
-    Ok(())
+    Ok(compression)
 }
 
 /// Everything one remote worker needs to be bitwise-equivalent to an
@@ -567,6 +716,11 @@ pub struct WorkerAssignment {
     /// generation (RE-ASSIGN), so both ends can tell a fresh start from a
     /// mid-run rejoin and stale peers get a pointed reject.
     pub generation: u64,
+    /// The negotiated wire-compression setting
+    /// ([`TrainConfig::wire_compression`]): when true, every f32 payload
+    /// section on this connection is a [`crate::net::compress`] packed
+    /// section and both ends keep their wire caches in lockstep.
+    pub wire_compression: bool,
     /// Per-partition deg^0.75 weights, bit-exact
     /// ([`NegativeSampler::partition_weights`]).
     pub neg_weights: Vec<Vec<f32>>,
@@ -594,6 +748,7 @@ pub fn encode_assign(a: &WorkerAssignment) -> Vec<u8> {
         out.extend_from_slice(&w.to_le_bytes());
     }
     out.extend_from_slice(&a.generation.to_le_bytes());
+    out.push(a.wire_compression as u8);
     for weights in &a.neg_weights {
         net::put_f32s(&mut out, weights);
     }
@@ -669,6 +824,11 @@ pub fn decode_assign(payload: &[u8]) -> Result<WorkerAssignment> {
     }
     ensure!(rng_state != [0u64; 4], "assignment carries an all-zero rng state");
     let generation = c.u64()?;
+    let wire_compression = match c.u8()? {
+        0 => false,
+        1 => true,
+        f => bail!("unknown assignment wire-compression flag {f}"),
+    };
     let mut neg_weights = Vec::with_capacity(partitions);
     for _ in 0..partitions {
         let mut w = Vec::new();
@@ -690,6 +850,7 @@ pub fn decode_assign(payload: &[u8]) -> Result<WorkerAssignment> {
         backend,
         rng_state,
         generation,
+        wire_compression,
         neg_weights,
     })
 }
@@ -759,6 +920,7 @@ pub fn make_assignments(
                 None => base_rng.stream(streams::WORKER, i as u64).state(),
             },
             generation: 0,
+            wire_compression: cfg.wire_compression,
             neg_weights: neg_weights.to_vec(),
         })
         .collect())
@@ -779,17 +941,41 @@ struct SocketEvent {
 }
 
 enum SocketEventKind {
-    Reply(Reply),
+    /// A decoded reply plus the on-wire bytes of its packed sections
+    /// (carried so stale-dropped replies can be backed out of the wire
+    /// ledger as well as the raw one).
+    Reply(Reply, u64),
     WorkerErr(String),
-    Bye { received: u64, sent: u64 },
+    Bye { received: u64, sent: u64, wire_received: u64, wire_sent: u64 },
     Eof,
     ReadErr(String),
+    /// The slot's writer thread failed to put a frame on the wire — the
+    /// sending mirror of `ReadErr`.
+    WriteErr(String),
+}
+
+/// Depth of each slot's bounded send queue. Deep enough to overlap
+/// serialization/compression/writes with worker compute, shallow enough
+/// that a stalled connection exerts backpressure on dispatch instead of
+/// buffering a whole episode.
+const WRITER_QUEUE_DEPTH: usize = 4;
+
+/// A slot's dedicated writer thread — the sending mirror of its reader.
+/// Dropping `tx` after queueing STOP and joining `join` is the flush
+/// barrier: the loop drains every queued frame before exiting, so no
+/// frame can be lost behind a STOP.
+struct SlotWriter {
+    tx: mpsc::SyncSender<JobMsg>,
+    join: JoinHandle<()>,
 }
 
 /// TCP delivery: one stream per connected `graphvite worker`, a reader
 /// thread per stream feeding one shared event channel (mirroring the
-/// local transport's shared result channel), and a per-connection byte
-/// ledger verified against each worker's BYE at shutdown.
+/// local transport's shared result channel), a writer thread per stream
+/// draining a bounded send queue (so serialization, compression and
+/// socket writes overlap dispatch), and a per-connection byte ledger —
+/// raw and on-wire, both directions — verified against each worker's
+/// BYE at shutdown.
 pub struct SocketTransport {
     /// Kept open after the run starts when recovery is enabled, so a
     /// replacement `graphvite worker --connect` can rejoin a dead slot.
@@ -801,12 +987,25 @@ pub struct SocketTransport {
     rx: mpsc::Receiver<SocketEvent>,
     tx: mpsc::Sender<SocketEvent>,
     readers: Vec<JoinHandle<()>>,
-    /// Shipment payload bytes sent per worker (main thread), current
-    /// generation only.
+    /// Per-slot writer threads; `None` once a slot is folded or its
+    /// writer has been retired mid-replacement.
+    writers: Vec<Option<SlotWriter>>,
+    /// Join handles of writers retired by `try_replace`/`mark_dead`;
+    /// their streams are shut down so they exit promptly, and shutdown
+    /// joins them before summing wire counters.
+    retired_writers: Vec<JoinHandle<()>>,
+    /// Shipment payload bytes sent per worker (main thread, counted at
+    /// enqueue — the transfer-engine unit), current generation only.
     up_bytes: Vec<u64>,
     /// Result payload bytes received per worker (reader threads),
     /// current generation only.
     down_bytes: Vec<Arc<AtomicU64>>,
+    /// On-wire bytes of packed sections written per worker (writer
+    /// threads), current generation only.
+    wire_up: Vec<Arc<AtomicU64>>,
+    /// On-wire bytes of packed sections received per worker (reader
+    /// threads), current generation only.
+    wire_down: Vec<Arc<AtomicU64>>,
     /// Up-bytes of replaced/dead generations, retired out of the
     /// per-slot BYE asserts but still part of the run totals.
     retired_up: u64,
@@ -814,12 +1013,19 @@ pub struct SocketTransport {
     /// counting a final frame when retired, so the Arcs are summed at
     /// shutdown rather than snapshotted at replacement).
     retired_down: Vec<Arc<AtomicU64>>,
+    /// Wire-byte counters of retired writers/readers, summed at
+    /// shutdown for the same reason as `retired_down`.
+    retired_wire_up: Vec<Arc<AtomicU64>>,
+    retired_wire_down: Vec<Arc<AtomicU64>>,
     /// Result payload bytes of stale-dropped replies: counted by a
     /// reader at receive time but never scattered (their generation was
     /// retired or folded before the coordinator drained them), so they
     /// must be backed out of the run total to keep it equal to the
     /// transfer-engine ledger.
     stale_down: u64,
+    /// On-wire bytes of stale-dropped replies, backed out of the wire
+    /// total alongside `stale_down`.
+    stale_wire_down: u64,
     /// Per-slot rejoin generation; reader events from older generations
     /// are stale and dropped.
     generation: Vec<u64>,
@@ -837,11 +1043,9 @@ pub struct SocketTransport {
     /// PING cadence while blocked in recv; `None` disables liveness
     /// probes (the pre-recovery behavior).
     heartbeat: Option<Duration>,
-    /// Emptied block allocations from serialized jobs, reattached to
-    /// decoded results — the coordinator's block free-list keeps
-    /// recycling exactly as in local mode.
-    block_spare: Vec<Vec<(i32, i32)>>,
-    byes: Vec<Option<(u64, u64)>>,
+    /// Each live worker's BYE ledger: (received, sent, wire_received,
+    /// wire_sent) as the worker counted them.
+    byes: Vec<Option<(u64, u64, u64, u64)>>,
     /// `None` = block forever (local-mode semantics; TCP EOF still
     /// fails loud). `TrainConfig::worker_timeout_secs` sets it.
     recv_timeout: Option<Duration>,
@@ -908,19 +1112,53 @@ impl SocketTransport {
         let mut readers = Vec::with_capacity(n);
         let mut down_bytes = Vec::with_capacity(n);
         let mut last_heard = Vec::with_capacity(n);
+        let mut writers = Vec::with_capacity(n);
+        let mut wire_up = Vec::with_capacity(n);
+        let mut wire_down = Vec::with_capacity(n);
         for (i, stream) in streams.iter().enumerate() {
+            // one compression context per connection, shared by its
+            // writer (pack down) and reader (unpack up) — the two
+            // directions keep a single cache in lockstep with the worker
+            let ctx = WireCtx::new(assignments[i].wire_compression);
             let read_half = stream.try_clone().context("cloning worker stream")?;
-            let tx = tx.clone();
+            let reader_tx = tx.clone();
             let counter = Arc::new(AtomicU64::new(0));
             down_bytes.push(Arc::clone(&counter));
+            let wire_rx_counter = Arc::new(AtomicU64::new(0));
+            wire_down.push(Arc::clone(&wire_rx_counter));
             let heard = Arc::new(AtomicU64::new(0));
             last_heard.push(Arc::clone(&heard));
+            let reader_ctx = ctx.clone();
             readers.push(
                 std::thread::Builder::new()
                     .name(format!("transport-rx-{i}"))
-                    .spawn(move || reader_loop(i, 0, read_half, tx, counter, heard, epoch))
+                    .spawn(move || {
+                        reader_loop(
+                            i,
+                            0,
+                            read_half,
+                            reader_tx,
+                            reader_ctx,
+                            counter,
+                            wire_rx_counter,
+                            heard,
+                            epoch,
+                        )
+                    })
                     .context("spawning transport reader")?,
             );
+            let write_half = stream.try_clone().context("cloning worker stream")?;
+            let writer_tx = tx.clone();
+            let wire_tx_counter = Arc::new(AtomicU64::new(0));
+            wire_up.push(Arc::clone(&wire_tx_counter));
+            let (job_tx, job_rx) = mpsc::sync_channel(WRITER_QUEUE_DEPTH);
+            let join = std::thread::Builder::new()
+                .name(format!("transport-tx-{i}"))
+                .spawn(move || {
+                    writer_loop(i, 0, write_half, job_rx, ctx, wire_tx_counter, writer_tx)
+                })
+                .context("spawning transport writer")?;
+            writers.push(Some(SlotWriter { tx: job_tx, join }));
         }
         Ok(SocketTransport {
             listener,
@@ -929,11 +1167,18 @@ impl SocketTransport {
             rx,
             tx,
             readers,
+            writers,
+            retired_writers: Vec::new(),
             up_bytes: vec![0; n],
             down_bytes,
+            wire_up,
+            wire_down,
             retired_up: 0,
             retired_down: Vec::new(),
+            retired_wire_up: Vec::new(),
+            retired_wire_down: Vec::new(),
             stale_down: 0,
+            stale_wire_down: 0,
             generation: vec![0; n],
             dead: vec![false; n],
             failed: None,
@@ -941,7 +1186,6 @@ impl SocketTransport {
             last_heard,
             epoch,
             heartbeat,
-            block_spare: Vec::new(),
             byes: vec![None; n],
             recv_timeout,
         })
@@ -958,17 +1202,17 @@ impl SocketTransport {
     /// its reader thread) out of the down ledger — the coordinator never
     /// scatters it, so the transfer engine never counts it.
     fn drop_stale(&mut self, ev: SocketEvent) {
-        if let SocketEventKind::Reply(ref reply) = ev.kind {
+        if let SocketEventKind::Reply(ref reply, wire) = ev.kind {
             self.stale_down += reply_payload_bytes(reply);
+            self.stale_wire_down += wire;
         }
     }
 
     fn map_event(&mut self, ev: SocketEvent) -> Result<Reply> {
         let i = ev.worker;
         match ev.kind {
-            SocketEventKind::Reply(mut reply) => {
+            SocketEventKind::Reply(mut reply, _wire) => {
                 if let Reply::Job(ref mut r) = reply {
-                    r.block = self.block_spare.pop().unwrap_or_default();
                     self.outstanding[i].retain(|&(v, c)| (v, c) != (r.vid, r.cid));
                 }
                 Ok(reply)
@@ -988,22 +1232,30 @@ impl SocketTransport {
                 self.failed = Some(i);
                 bail!("worker {i} connection failed: {msg}")
             }
+            SocketEventKind::WriteErr(msg) => {
+                self.failed = Some(i);
+                bail!("worker {i} connection failed while sending: {msg}")
+            }
         }
     }
 
-    /// Broadcast a liveness PING to every live worker. A failed write is
-    /// itself a liveness verdict: that worker is declared dead.
+    /// Queue a liveness PING to every live worker's writer. A slot whose
+    /// writer has exited (its queue hung up) is declared dead; a *full*
+    /// queue is skipped — frames are moving, which is liveness enough.
     fn send_pings(&mut self) -> Result<()> {
-        let ping = encode_job_msg(&JobMsg::Ping);
-        for i in 0..self.streams.len() {
+        for i in 0..self.writers.len() {
             if self.dead[i] {
                 continue;
             }
-            if let Err(e) = net::write_frame(&mut self.streams[i], &ping, MAX_CONTROL_FRAME) {
+            let hung_up = match &self.writers[i] {
+                Some(w) => {
+                    matches!(w.tx.try_send(JobMsg::Ping), Err(mpsc::TrySendError::Disconnected(_)))
+                }
+                None => false, // mid-replacement; recv will surface its state
+            };
+            if hung_up {
                 self.failed = Some(i);
-                return Err(anyhow!(e).context(format!(
-                    "worker {i} connection failed while sending a liveness ping"
-                )));
+                bail!("worker {i} connection failed while sending a liveness ping");
             }
         }
         Ok(())
@@ -1044,12 +1296,15 @@ impl SocketTransport {
     }
 }
 
+#[allow(clippy::too_many_arguments)] // one call site, mirrors the slot state
 fn reader_loop(
     worker: usize,
     gen: u64,
     mut stream: TcpStream,
     tx: mpsc::Sender<SocketEvent>,
+    ctx: WireCtx,
     bytes: Arc<AtomicU64>,
+    wire_bytes: Arc<AtomicU64>,
     heard: Arc<AtomicU64>,
     epoch: Instant,
 ) {
@@ -1058,19 +1313,25 @@ fn reader_loop(
         let ev = match net::read_frame(&mut stream, MAX_DATA_FRAME) {
             Ok(Some(payload)) => {
                 heard.store(epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
-                match decode_wire_reply(&payload) {
-                    Ok(WireReply::Reply(Reply::Pong)) => continue, // liveness only
-                    Ok(WireReply::Reply(mut r)) => {
+                match decode_wire_reply(&payload, &ctx) {
+                    Ok((WireReply::Reply(Reply::Pong), _)) => continue, // liveness only
+                    Ok((WireReply::Reply(mut r), lens)) => {
                         // stamp identity from the connection, not the wire
                         if let Reply::Job(ref mut job) = r {
                             job.worker = worker;
                         }
                         bytes.fetch_add(reply_payload_bytes(&r), Ordering::Relaxed);
-                        event(SocketEventKind::Reply(r))
+                        wire_bytes.fetch_add(lens.wire, Ordering::Relaxed);
+                        event(SocketEventKind::Reply(r, lens.wire))
                     }
-                    Ok(WireReply::Err(msg)) => event(SocketEventKind::WorkerErr(msg)),
-                    Ok(WireReply::Bye { received, sent }) => {
-                        let _ = tx.send(event(SocketEventKind::Bye { received, sent }));
+                    Ok((WireReply::Err(msg), _)) => event(SocketEventKind::WorkerErr(msg)),
+                    Ok((WireReply::Bye { received, sent, wire_received, wire_sent }, _)) => {
+                        let _ = tx.send(event(SocketEventKind::Bye {
+                            received,
+                            sent,
+                            wire_received,
+                            wire_sent,
+                        }));
                         return;
                     }
                     Err(e) => {
@@ -1094,6 +1355,36 @@ fn reader_loop(
     }
 }
 
+/// A slot's dedicated writer thread: drains the bounded send queue,
+/// serializing (and compressing) each message and putting it on the
+/// wire — off the dispatch thread, so shipments overlap worker compute.
+/// Queue order is send order, preserving per-worker FIFO. Exits when
+/// the queue hangs up (every queued frame written — the flush
+/// guarantee) or on the first write error (surfaced as `WriteErr`;
+/// senders then see a hung-up queue).
+fn writer_loop(
+    worker: usize,
+    gen: u64,
+    mut stream: TcpStream,
+    rx: mpsc::Receiver<JobMsg>,
+    ctx: WireCtx,
+    wire_bytes: Arc<AtomicU64>,
+    tx: mpsc::Sender<SocketEvent>,
+) {
+    while let Ok(msg) = rx.recv() {
+        let (payload, lens) = encode_job_msg(&msg, &ctx);
+        wire_bytes.fetch_add(lens.wire, Ordering::Relaxed);
+        if let Err(e) = net::write_frame(&mut stream, &payload, MAX_DATA_FRAME) {
+            let _ = tx.send(SocketEvent {
+                worker,
+                gen,
+                kind: SocketEventKind::WriteErr(format!("{e:#}")),
+            });
+            return;
+        }
+    }
+}
+
 /// Coordinator side of one worker handshake. Pointed errors at every
 /// step; an invalid HELLO additionally gets a reject frame so the peer
 /// learns why.
@@ -1105,9 +1396,23 @@ fn handshake_worker(stream: &mut TcpStream, assign: &WorkerAssignment) -> Result
     let hello = net::read_frame(stream, MAX_CONTROL_FRAME)
         .context("reading worker hello")?
         .ok_or_else(|| anyhow!("peer closed before sending a hello"))?;
-    if let Err(e) = decode_hello(&hello) {
-        let _ = net::write_frame(stream, &encode_reject(&format!("{e:#}")), MAX_CONTROL_FRAME);
-        return Err(e);
+    let supports_compression = match decode_hello(&hello) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ =
+                net::write_frame(stream, &encode_reject(&format!("{e:#}")), MAX_CONTROL_FRAME);
+            return Err(e);
+        }
+    };
+    if assign.wire_compression && !supports_compression {
+        let msg = format!(
+            "this run requires wire compression (wire_compression = true) but worker {} \
+             does not support it — upgrade the worker or start the coordinator with \
+             --no-wire-compression",
+            assign.worker_index
+        );
+        let _ = net::write_frame(stream, &encode_reject(&msg), MAX_CONTROL_FRAME);
+        bail!("{msg}");
     }
     net::write_frame(stream, &encode_assign(assign), MAX_DATA_FRAME)
         .context("sending assignment")?;
@@ -1133,19 +1438,22 @@ impl Transport for SocketTransport {
             !self.dead[worker],
             "internal: send to worker {worker}, which was folded onto survivors"
         );
-        let payload = encode_job_msg(&msg);
-        if let JobMsg::Train(mut job) = msg {
-            self.up_bytes[worker] += job_payload_bytes(&job);
+        // raw bytes are counted at enqueue on this thread (the
+        // transfer-engine unit is timing-independent); the writer thread
+        // counts the on-wire bytes when it serializes the frame
+        if let JobMsg::Train(job) = &msg {
+            self.up_bytes[worker] += job_payload_bytes(job);
             self.outstanding[worker].push((job.vid, job.cid));
-            job.block.clear();
-            self.block_spare.push(job.block);
         }
-        net::write_frame(&mut self.streams[worker], &payload, MAX_DATA_FRAME)
-            .map_err(|e| {
-                self.failed = Some(worker);
-                e
-            })
-            .with_context(|| format!("sending to worker {worker}"))
+        let queued = match &self.writers[worker] {
+            Some(w) => w.tx.send(msg).is_ok(),
+            None => false,
+        };
+        if !queued {
+            self.failed = Some(worker);
+            bail!("sending to worker {worker}: connection failed (writer thread exited)");
+        }
+        Ok(())
     }
 
     fn recv(&mut self) -> Result<Reply> {
@@ -1212,14 +1520,28 @@ impl Transport for SocketTransport {
     }
 
     fn shutdown(&mut self) -> Result<Option<TransportReport>> {
-        for (i, stream) in self.streams.iter_mut().enumerate() {
+        // Flush-then-BYE: STOP rides each live writer's queue *behind*
+        // every outstanding frame; dropping the sender and joining the
+        // writer then guarantees the whole queue — STOP included — is on
+        // the wire before we wait for that worker's BYE. No frame can be
+        // lost after STOP (asserted by a unit test below).
+        for i in 0..self.writers.len() {
             if self.dead[i] {
-                continue; // folded slots get no Stop and owe no BYE
+                self.writers[i] = None; // folded: no Stop, no BYE owed
+                continue;
             }
-            // a worker that already died surfaces below as a missing BYE
-            let _ = net::write_frame(stream, &encode_job_msg(&JobMsg::Stop), MAX_DATA_FRAME);
+            if let Some(w) = &self.writers[i] {
+                // a worker that already died surfaces as a missing BYE
+                let _ = w.tx.send(JobMsg::Stop);
+            }
         }
-        let live_missing = |byes: &[Option<(u64, u64)>], dead: &[bool]| -> Vec<usize> {
+        for slot in self.writers.iter_mut() {
+            if let Some(SlotWriter { tx, join }) = slot.take() {
+                drop(tx); // hang up the queue: the writer drains and exits
+                let _ = join.join();
+            }
+        }
+        let live_missing = |byes: &[Option<(u64, u64, u64, u64)>], dead: &[bool]| -> Vec<usize> {
             (0..byes.len()).filter(|&i| !dead[i] && byes[i].is_none()).collect()
         };
         let deadline = Instant::now() + SHUTDOWN_TIMEOUT;
@@ -1238,14 +1560,14 @@ impl Transport for SocketTransport {
                     }
                     let i = ev.worker;
                     match ev.kind {
-                        SocketEventKind::Bye { received, sent } => {
+                        SocketEventKind::Bye { received, sent, wire_received, wire_sent } => {
                             ensure!(
                                 self.byes[i].is_none(),
                                 "worker {i} sent two shutdown ledgers"
                             );
-                            self.byes[i] = Some((received, sent));
+                            self.byes[i] = Some((received, sent, wire_received, wire_sent));
                         }
-                        SocketEventKind::Reply(_) => {
+                        SocketEventKind::Reply(..) => {
                             bail!(
                                 "worker {i} sent a result during shutdown \
                                  (job still in flight?)"
@@ -1258,6 +1580,9 @@ impl Transport for SocketTransport {
                         SocketEventKind::ReadErr(msg) => {
                             bail!("worker {i} connection failed during shutdown: {msg}")
                         }
+                        SocketEventKind::WriteErr(msg) => {
+                            bail!("worker {i} connection failed during shutdown: {msg}")
+                        }
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => bail!(
@@ -1268,6 +1593,11 @@ impl Transport for SocketTransport {
                 ),
             }
         }
+        // retired writers have shut-down streams, so they exit promptly;
+        // join them before summing their wire counters
+        for writer in self.retired_writers.drain(..) {
+            let _ = writer.join();
+        }
         for reader in self.readers.drain(..) {
             let _ = reader.join();
         }
@@ -1275,21 +1605,38 @@ impl Transport for SocketTransport {
         // counts + retired (pre-replacement) generations, so the run
         // totals still equal the transfer-engine ledger after recovery.
         let (mut up, mut down) = (self.retired_up, 0u64);
+        let (mut wire_up, mut wire_down) = (0u64, 0u64);
         for counter in &self.retired_down {
             down += counter.load(Ordering::Relaxed);
         }
+        for counter in &self.retired_wire_up {
+            wire_up += counter.load(Ordering::Relaxed);
+        }
+        for counter in &self.retired_wire_down {
+            wire_down += counter.load(Ordering::Relaxed);
+        }
         for (i, bye) in self.byes.iter().enumerate() {
+            let slot_wire_up = self.wire_up[i].load(Ordering::Relaxed);
+            let slot_wire_down = self.wire_down[i].load(Ordering::Relaxed);
             if self.dead[i] {
                 up += self.up_bytes[i];
                 down += self.down_bytes[i].load(Ordering::Relaxed);
+                wire_up += slot_wire_up;
+                wire_down += slot_wire_down;
                 continue;
             }
-            let (received, sent) = bye.expect("loop above filled every live bye");
+            let (received, sent, wire_received, wire_sent) =
+                bye.expect("loop above filled every live bye");
             ensure!(
                 received == self.up_bytes[i],
                 "wire ledger mismatch for worker {i}: coordinator shipped {} payload bytes \
                  but the worker received {received}",
                 self.up_bytes[i]
+            );
+            ensure!(
+                wire_received == slot_wire_up,
+                "wire ledger mismatch for worker {i}: coordinator put {slot_wire_up} bytes \
+                 on the wire but the worker counted {wire_received} arriving"
             );
             let local_down = self.down_bytes[i].load(Ordering::Relaxed);
             ensure!(
@@ -1297,8 +1644,15 @@ impl Transport for SocketTransport {
                 "wire ledger mismatch for worker {i}: worker sent {sent} payload bytes \
                  but the coordinator received {local_down}"
             );
+            ensure!(
+                wire_sent == slot_wire_down,
+                "wire ledger mismatch for worker {i}: worker put {wire_sent} bytes on the \
+                 wire but the coordinator counted {slot_wire_down} arriving"
+            );
             up += received;
             down += sent;
+            wire_up += slot_wire_up;
+            wire_down += slot_wire_down;
         }
         // Replies dropped as stale were received (and counted by their
         // retired/folded reader) but never scattered; back them out so
@@ -1309,11 +1663,24 @@ impl Transport for SocketTransport {
             self.stale_down
         );
         down -= self.stale_down;
-        let n = self.streams.len();
-        eprintln!(
-            "transport: ledger balanced across {n} workers ({up} bytes up, {down} bytes down)"
+        ensure!(
+            wire_down >= self.stale_wire_down,
+            "internal: stale-dropped wire bytes ({}) exceed the on-wire total ({wire_down})",
+            self.stale_wire_down
         );
-        Ok(Some(TransportReport { workers: n, bytes_up: up, bytes_down: down }))
+        wire_down -= self.stale_wire_down;
+        let n = self.streams.len();
+        let report = TransportReport { workers: n, bytes_up: up, bytes_down: down, wire_up, wire_down };
+        let wire_total = wire_up + wire_down;
+        let ratio =
+            if wire_total == 0 { 1.0 } else { (up + down) as f64 / wire_total as f64 };
+        eprintln!(
+            "transport: ledger balanced across {n} workers ({up} bytes up, {down} bytes \
+             down; {wire_up} up / {wire_down} down on the wire, {} saved, compression \
+             ratio {ratio:.2}x)",
+            report.wire_bytes_saved(),
+        );
+        Ok(Some(report))
     }
 
     fn failed_worker(&self) -> Option<usize> {
@@ -1365,26 +1732,76 @@ impl Transport for SocketTransport {
                     self.retired_up += self.up_bytes[slot];
                     self.up_bytes[slot] = 0;
                     self.retired_down.push(Arc::clone(&self.down_bytes[slot]));
+                    self.retired_wire_up.push(Arc::clone(&self.wire_up[slot]));
+                    self.retired_wire_down.push(Arc::clone(&self.wire_down[slot]));
+                    // cut the dead generation's writer loose: shutting
+                    // down its stream unblocks any stuck write, dropping
+                    // its sender lets it drain and exit (joined at
+                    // shutdown, before its wire counter is summed)
+                    let _ = self.streams[slot].shutdown(std::net::Shutdown::Both);
+                    if let Some(SlotWriter { tx, join }) = self.writers[slot].take() {
+                        drop(tx);
+                        self.retired_writers.push(join);
+                    }
                     let counter = Arc::new(AtomicU64::new(0));
                     self.down_bytes[slot] = Arc::clone(&counter);
+                    let wire_rx_counter = Arc::new(AtomicU64::new(0));
+                    self.wire_down[slot] = Arc::clone(&wire_rx_counter);
+                    let wire_tx_counter = Arc::new(AtomicU64::new(0));
+                    self.wire_up[slot] = Arc::clone(&wire_tx_counter);
                     let heard = Arc::new(AtomicU64::new(
                         self.epoch.elapsed().as_millis() as u64,
                     ));
                     self.last_heard[slot] = Arc::clone(&heard);
                     self.generation[slot] = assign.generation;
                     self.outstanding[slot].clear();
+                    // a fresh compression context: the replacement holds
+                    // no cached partitions, so journal re-sends encode
+                    // against its actual (empty) resident state, never
+                    // the dead worker's
+                    let ctx = WireCtx::new(assign.wire_compression);
                     let read_half =
                         stream.try_clone().context("cloning replacement stream")?;
                     let tx = self.tx.clone();
                     let (gen, epoch) = (assign.generation, self.epoch);
+                    let reader_ctx = ctx.clone();
                     self.readers.push(
                         std::thread::Builder::new()
                             .name(format!("transport-rx-{slot}-g{gen}"))
                             .spawn(move || {
-                                reader_loop(slot, gen, read_half, tx, counter, heard, epoch)
+                                reader_loop(
+                                    slot,
+                                    gen,
+                                    read_half,
+                                    tx,
+                                    reader_ctx,
+                                    counter,
+                                    wire_rx_counter,
+                                    heard,
+                                    epoch,
+                                )
                             })
                             .context("spawning replacement reader")?,
                     );
+                    let write_half =
+                        stream.try_clone().context("cloning replacement stream")?;
+                    let writer_tx = self.tx.clone();
+                    let (job_tx, job_rx) = mpsc::sync_channel(WRITER_QUEUE_DEPTH);
+                    let join = std::thread::Builder::new()
+                        .name(format!("transport-tx-{slot}-g{gen}"))
+                        .spawn(move || {
+                            writer_loop(
+                                slot,
+                                gen,
+                                write_half,
+                                job_rx,
+                                ctx,
+                                wire_tx_counter,
+                                writer_tx,
+                            )
+                        })
+                        .context("spawning replacement writer")?;
+                    self.writers[slot] = Some(SlotWriter { tx: job_tx, join });
                     self.streams[slot] = stream;
                     self.failed = None;
                     refilled = true;
@@ -1403,8 +1820,13 @@ impl Transport for SocketTransport {
         if self.failed == Some(slot) {
             self.failed = None;
         }
-        // closing our end unblocks the peer if it is somehow still alive
+        // closing our end unblocks the peer if it is somehow still
+        // alive, and unblocks the slot's writer if it is stuck mid-write
         let _ = self.streams[slot].shutdown(std::net::Shutdown::Both);
+        if let Some(SlotWriter { tx, join }) = self.writers[slot].take() {
+            drop(tx);
+            self.retired_writers.push(join);
+        }
     }
 }
 
@@ -1419,6 +1841,10 @@ pub struct WorkerSummary {
     pub jobs: u64,
     pub bytes_received: u64,
     pub bytes_sent: u64,
+    /// On-wire bytes of the packed sections behind `bytes_received`.
+    pub wire_received: u64,
+    /// On-wire bytes of the packed sections behind `bytes_sent`.
+    pub wire_sent: u64,
 }
 
 /// Dial `addr` (retrying until `connect_timeout` — workers may start
@@ -1491,14 +1917,19 @@ pub fn run_worker_with_fault(
         );
     }
 
+    // the worker's end of the negotiated compression context: one cache
+    // for both directions, kept in lockstep with the coordinator's
+    let ctx = WireCtx::new(assign.wire_compression);
     let (mut received, mut sent, mut jobs) = (0u64, 0u64, 0u64);
+    let (mut wire_received, mut wire_sent) = (0u64, 0u64);
     loop {
         let payload = net::read_frame(&mut stream, MAX_DATA_FRAME)
             .context("reading job")?
             .ok_or_else(|| {
                 anyhow!("coordinator closed the connection without a stop message")
             })?;
-        let msg = decode_job_msg(&payload)?;
+        let (msg, lens) = decode_job_msg(&payload, &ctx)?;
+        wire_received += lens.wire;
         let is_train = matches!(&msg, JobMsg::Train(_));
         if let JobMsg::Train(job) = &msg {
             received += job_payload_bytes(job);
@@ -1506,15 +1937,17 @@ pub fn run_worker_with_fault(
         }
         match core.handle(msg) {
             None => {
-                let bye = WireReply::Bye { received, sent };
-                net::write_frame(&mut stream, &encode_wire_reply(&bye), MAX_CONTROL_FRAME)
+                let bye = WireReply::Bye { received, sent, wire_received, wire_sent };
+                let (frame, _) = encode_wire_reply(&bye, &ctx);
+                net::write_frame(&mut stream, &frame, MAX_CONTROL_FRAME)
                     .context("sending shutdown ledger")?;
                 break;
             }
             Some(Ok(reply)) => {
                 sent += reply_payload_bytes(&reply);
-                let wire = encode_wire_reply(&WireReply::Reply(reply));
-                net::write_frame(&mut stream, &wire, MAX_DATA_FRAME)
+                let (frame, lens) = encode_wire_reply(&WireReply::Reply(reply), &ctx);
+                wire_sent += lens.wire;
+                net::write_frame(&mut stream, &frame, MAX_DATA_FRAME)
                     .context("sending result")?;
                 if let Some(n) = die_after_jobs {
                     if is_train && jobs >= n {
@@ -1527,18 +1960,29 @@ pub fn run_worker_with_fault(
             Some(Err(e)) => {
                 // mirror the local loop: the error rides the reply
                 // stream and the worker keeps serving
-                let wire = encode_wire_reply(&WireReply::Err(format!("{e:#}")));
-                net::write_frame(&mut stream, &wire, MAX_DATA_FRAME)
+                let (frame, _) = encode_wire_reply(&WireReply::Err(format!("{e:#}")), &ctx);
+                net::write_frame(&mut stream, &frame, MAX_DATA_FRAME)
                     .context("sending job error")?;
             }
         }
     }
-    eprintln!("worker: ledger {received} bytes in, {sent} bytes out over {jobs} jobs — bye");
+    let wire_total = wire_received + wire_sent;
+    let ratio = if wire_total == 0 {
+        1.0
+    } else {
+        (received + sent) as f64 / wire_total as f64
+    };
+    eprintln!(
+        "worker: ledger {received} bytes in ({wire_received} on the wire), {sent} bytes \
+         out ({wire_sent} on the wire) over {jobs} jobs, compression ratio {ratio:.2}x — bye"
+    );
     Ok(WorkerSummary {
         worker_index: assign.worker_index,
         jobs,
         bytes_received: received,
         bytes_sent: sent,
+        wire_received,
+        wire_sent,
     })
 }
 
@@ -1891,6 +2335,12 @@ mod tests {
         xs.iter().map(|x| x.to_bits()).collect()
     }
 
+    /// A fresh encode/decode context pair, like the two ends of one
+    /// connection right after the handshake.
+    fn ctx_pair(compress: bool) -> (WireCtx, WireCtx) {
+        (WireCtx::new(compress), WireCtx::new(compress))
+    }
+
     fn sample_job() -> Job {
         Job {
             vid: 3,
@@ -1909,48 +2359,64 @@ mod tests {
 
     #[test]
     fn job_msg_roundtrip_bitwise() {
-        let msg = JobMsg::Train(sample_job());
-        let decoded = decode_job_msg(&encode_job_msg(&msg)).unwrap();
-        let JobMsg::Train(job) = decoded else { panic!("wrong variant") };
-        assert_eq!(job.vid, 3);
-        assert_eq!(job.cid, 7);
-        assert_eq!(job.lr.to_bits(), 0.017f32.to_bits());
-        assert_eq!(job.block, vec![(0, 1), (5, -2), (9, 9)]);
-        assert_eq!(bits(job.vertex.data.as_deref().unwrap()), bits(&[1.5, -0.0, 2.25e-3]));
-        assert_eq!(job.vertex.src_version, 4);
-        assert!(job.vertex.keep);
-        assert!(job.context.data.is_none());
-        assert_eq!(job.context.src_version, 9);
-        assert!(!job.context.keep);
-        assert_eq!(job.takeover, None);
-        for msg in [JobMsg::Sync, JobMsg::Stop, JobMsg::Ping] {
-            let rt = decode_job_msg(&encode_job_msg(&msg)).unwrap();
-            assert!(matches!(
-                (&msg, &rt),
-                (JobMsg::Sync, JobMsg::Sync)
-                    | (JobMsg::Stop, JobMsg::Stop)
-                    | (JobMsg::Ping, JobMsg::Ping)
-            ));
+        for compress in [false, true] {
+            let (enc, dec) = ctx_pair(compress);
+            let msg = JobMsg::Train(sample_job());
+            let (payload, el) = encode_job_msg(&msg, &enc);
+            let (decoded, dl) = decode_job_msg(&payload, &dec).unwrap();
+            assert_eq!(el.raw, 12, "one 3-f32 shipment");
+            assert_eq!((el.raw, el.wire), (dl.raw, dl.wire), "both ends count alike");
+            assert!(el.wire <= el.raw);
+            let JobMsg::Train(job) = decoded else { panic!("wrong variant") };
+            assert_eq!(job.vid, 3);
+            assert_eq!(job.cid, 7);
+            assert_eq!(job.lr.to_bits(), 0.017f32.to_bits());
+            assert_eq!(job.block, vec![(0, 1), (5, -2), (9, 9)]);
+            assert_eq!(
+                bits(job.vertex.data.as_deref().unwrap()),
+                bits(&[1.5, -0.0, 2.25e-3])
+            );
+            assert_eq!(job.vertex.src_version, 4);
+            assert!(job.vertex.keep);
+            assert!(job.context.data.is_none());
+            assert_eq!(job.context.src_version, 9);
+            assert!(!job.context.keep);
+            assert_eq!(job.takeover, None);
+            for msg in [JobMsg::Sync, JobMsg::Stop, JobMsg::Ping] {
+                let (payload, l) = encode_job_msg(&msg, &enc);
+                let (rt, _) = decode_job_msg(&payload, &dec).unwrap();
+                assert_eq!(l, PackedLens::default(), "control frames carry no payload");
+                assert!(matches!(
+                    (&msg, &rt),
+                    (JobMsg::Sync, JobMsg::Sync)
+                        | (JobMsg::Stop, JobMsg::Stop)
+                        | (JobMsg::Ping, JobMsg::Ping)
+                ));
+            }
         }
     }
 
     #[test]
     fn takeover_roundtrip_bitwise() {
+        let (enc, dec) = ctx_pair(true);
         let mut job = sample_job();
         job.takeover = Some(Takeover { rng: [9, 8, 7, 6], chunk_samples: 4096 });
-        let rt = decode_job_msg(&encode_job_msg(&JobMsg::Train(job))).unwrap();
+        let (payload, _) = encode_job_msg(&JobMsg::Train(job), &enc);
+        let (rt, _) = decode_job_msg(&payload, &dec).unwrap();
         let JobMsg::Train(job) = rt else { panic!("wrong variant") };
         assert_eq!(job.takeover, Some(Takeover { rng: [9, 8, 7, 6], chunk_samples: 4096 }));
         // unknown takeover flag fails loud
-        let mut enc = encode_job_msg(&JobMsg::Train(sample_job()));
-        let last = enc.len() - 1;
-        enc[last] = 7; // the takeover flag is the final byte of a plain job
-        let err = decode_job_msg(&enc).unwrap_err();
+        let (enc, dec) = ctx_pair(true);
+        let (mut payload, _) = encode_job_msg(&JobMsg::Train(sample_job()), &enc);
+        let last = payload.len() - 1;
+        payload[last] = 7; // the takeover flag is the final byte of a plain job
+        let err = decode_job_msg(&payload, &dec).unwrap_err();
         assert!(err.to_string().contains("takeover"), "{err}");
     }
 
     #[test]
     fn wire_reply_roundtrip_bitwise() {
+        let (enc, dec) = ctx_pair(true);
         let reply = WireReply::Reply(Reply::Job(JobResult {
             worker: 9, // not a wire field: must NOT survive the roundtrip
             vid: 1,
@@ -1962,7 +2428,10 @@ mod tests {
             trained: 42,
             rng_state: [5, 6, 7, 8],
         }));
-        let rt = decode_wire_reply(&encode_wire_reply(&reply)).unwrap();
+        let (payload, el) = encode_wire_reply(&reply, &enc);
+        let (rt, dl) = decode_wire_reply(&payload, &dec).unwrap();
+        assert_eq!(el.raw, 8, "two f32s, context elided");
+        assert_eq!((el.raw, el.wire), (dl.raw, dl.wire));
         let WireReply::Reply(Reply::Job(r)) = rt else { panic!("wrong variant") };
         assert_eq!((r.vid, r.cid, r.trained), (1, 2, 42));
         assert_eq!(r.loss.to_bits(), 0.25f32.to_bits());
@@ -1972,8 +2441,9 @@ mod tests {
         assert_eq!(r.rng_state, [5, 6, 7, 8], "post-job rng state rides the result");
         assert_eq!(r.worker, 0, "worker identity is stamped by the receiver, not the wire");
 
-        let pong = decode_wire_reply(&encode_wire_reply(&WireReply::Reply(Reply::Pong)));
-        assert!(matches!(pong.unwrap(), WireReply::Reply(Reply::Pong)));
+        let (payload, _) = encode_wire_reply(&WireReply::Reply(Reply::Pong), &enc);
+        let pong = decode_wire_reply(&payload, &dec);
+        assert!(matches!(pong.unwrap().0, WireReply::Reply(Reply::Pong)));
         assert_eq!(reply_payload_bytes(&Reply::Pong), 0, "pongs carry no payload");
 
         let synced = WireReply::Reply(Reply::Synced(SyncReply {
@@ -1986,7 +2456,8 @@ mod tests {
                 data: vec![9.0, -9.0],
             }],
         }));
-        let rt = decode_wire_reply(&encode_wire_reply(&synced)).unwrap();
+        let (payload, _) = encode_wire_reply(&synced, &enc);
+        let (rt, _) = decode_wire_reply(&payload, &dec).unwrap();
         let WireReply::Reply(Reply::Synced(s)) = rt else { panic!("wrong variant") };
         assert_eq!(s.worker, 1);
         assert_eq!(s.rng_state, [1, 2, 3, 4]);
@@ -1996,50 +2467,70 @@ mod tests {
         assert_eq!(bits(&s.residents[0].data), bits(&[9.0, -9.0]));
 
         let err = WireReply::Err("residency cache over capacity".into());
-        let WireReply::Err(msg) = decode_wire_reply(&encode_wire_reply(&err)).unwrap() else {
+        let (payload, _) = encode_wire_reply(&err, &enc);
+        let WireReply::Err(msg) = decode_wire_reply(&payload, &dec).unwrap().0 else {
             panic!("wrong variant")
         };
         assert_eq!(msg, "residency cache over capacity");
 
-        let bye = WireReply::Bye { received: 100, sent: 200 };
-        let WireReply::Bye { received, sent } =
-            decode_wire_reply(&encode_wire_reply(&bye)).unwrap()
+        let bye =
+            WireReply::Bye { received: 100, sent: 200, wire_received: 80, wire_sent: 150 };
+        let (payload, _) = encode_wire_reply(&bye, &enc);
+        let WireReply::Bye { received, sent, wire_received, wire_sent } =
+            decode_wire_reply(&payload, &dec).unwrap().0
         else {
             panic!("wrong variant")
         };
-        assert_eq!((received, sent), (100, 200));
+        assert_eq!((received, sent, wire_received, wire_sent), (100, 200, 80, 150));
     }
 
     #[test]
     fn corrupt_messages_fail_loudly() {
-        // truncated frames at several depths
-        let full = encode_job_msg(&JobMsg::Train(sample_job()));
+        let (enc, _) = ctx_pair(true);
+        // truncated frames at several depths (fresh decode context each
+        // time: a truncated frame must fail, never poison a cache)
+        let (full, _) = encode_job_msg(&JobMsg::Train(sample_job()), &enc);
         for cut in [1, 5, 12, full.len() - 1] {
-            assert!(decode_job_msg(&full[..cut]).is_err(), "cut at {cut}");
+            let dec = WireCtx::new(true);
+            assert!(decode_job_msg(&full[..cut], &dec).is_err(), "cut at {cut}");
         }
+        let dec = WireCtx::new(true);
         // trailing garbage
-        let mut msg = encode_job_msg(&JobMsg::Sync);
+        let (mut msg, _) = encode_job_msg(&JobMsg::Sync, &enc);
         msg.push(0);
-        assert!(decode_job_msg(&msg).is_err());
-        let mut bye = encode_wire_reply(&WireReply::Bye { received: 1, sent: 2 });
+        assert!(decode_job_msg(&msg, &dec).is_err());
+        let bye = WireReply::Bye { received: 1, sent: 2, wire_received: 1, wire_sent: 2 };
+        let (mut bye, _) = encode_wire_reply(&bye, &enc);
         bye.push(9);
-        assert!(decode_wire_reply(&bye).is_err());
+        assert!(decode_wire_reply(&bye, &dec).is_err());
         // unknown tags / flags / matrix codes
-        assert!(decode_job_msg(&[99]).is_err());
-        assert!(decode_wire_reply(&[99]).is_err());
-        assert!(decode_wire_reply(&[]).is_err());
+        assert!(decode_job_msg(&[99], &dec).is_err());
+        assert!(decode_wire_reply(&[99], &dec).is_err());
+        assert!(decode_wire_reply(&[], &dec).is_err());
         // block length that lies about the payload cannot over-allocate
         let mut lying = vec![MSG_TRAIN];
         lying.extend_from_slice(&1u32.to_le_bytes());
         lying.extend_from_slice(&1u32.to_le_bytes());
         lying.extend_from_slice(&0.1f32.to_le_bytes());
         lying.extend_from_slice(&u32::MAX.to_le_bytes()); // "4 billion pairs"
-        assert!(decode_job_msg(&lying).is_err());
+        assert!(decode_job_msg(&lying, &dec).is_err());
+        // a delta section against a base the receiver does not hold
+        // (diverged caches) is a pointed error, not garbage data
+        let warm = WireCtx::new(true);
+        let mut job = sample_job();
+        job.vertex.data = Some(vec![1.0, 2.0, 3.0]);
+        let (_, _) = encode_job_msg(&JobMsg::Train(job.clone()), &warm);
+        job.vertex.data = Some(vec![1.0, 2.0, 3.5]); // near → delta mode
+        let (delta_frame, _) = encode_job_msg(&JobMsg::Train(job), &warm);
+        let cold = WireCtx::new(true);
+        let err = decode_job_msg(&delta_frame, &cold).unwrap_err();
+        assert!(err.to_string().contains("wire-cached base"), "{err}");
     }
 
     #[test]
     fn handshake_roundtrip_and_field_rejection() {
-        decode_hello(&encode_hello()).unwrap();
+        assert!(decode_hello(&encode_hello()).unwrap(), "this build always compresses");
+        assert!(!decode_hello(&encode_hello_with(false)).unwrap());
         // bad magic
         let mut hello = encode_hello();
         hello[0] = b'X';
@@ -2050,6 +2541,12 @@ mod tests {
         hello[4..8].copy_from_slice(&999u32.to_le_bytes());
         let err = decode_hello(&hello).unwrap_err();
         assert!(err.to_string().contains("protocol v999"), "{err}");
+        // bad capability byte
+        let mut hello = encode_hello();
+        let last = hello.len() - 1;
+        hello[last] = 9;
+        let err = decode_hello(&hello).unwrap_err();
+        assert!(err.to_string().contains("compression capability"), "{err}");
         // trailing garbage
         let mut hello = encode_hello();
         hello.push(0);
@@ -2071,6 +2568,7 @@ mod tests {
             backend: BackendKind::Native,
             rng_state: [1, 2, 3, 4],
             generation: 0,
+            wire_compression: true,
             neg_weights: vec![vec![1.0, 2.0], vec![0.5]],
         }
     }
@@ -2088,6 +2586,7 @@ mod tests {
         assert_eq!(rt.backend, BackendKind::Native);
         assert_eq!(rt.rng_state, [1, 2, 3, 4]);
         assert_eq!(rt.generation, 0);
+        assert!(rt.wire_compression);
         assert_eq!(rt.neg_weights.len(), 2);
         assert_eq!(bits(&rt.neg_weights[0]), bits(&[1.0, 2.0]));
         // unbounded cache limit uses the sentinel
@@ -2097,6 +2596,13 @@ mod tests {
         }))
         .unwrap();
         assert_eq!(rt.cache_limit, None);
+        // the negotiated-off path survives the wire too
+        let rt = decode_assign(&encode_assign(&WorkerAssignment {
+            wire_compression: false,
+            ..a.clone()
+        }))
+        .unwrap();
+        assert!(!rt.wire_compression);
         // a RE-ASSIGN's rejoin generation survives the wire
         let rt =
             decode_assign(&encode_assign(&WorkerAssignment { generation: 3, ..a })).unwrap();
@@ -2160,5 +2666,111 @@ mod tests {
             rng_state: [1, 1, 1, 1],
         });
         assert_eq!(reply_payload_bytes(&reply), 28);
+    }
+
+    /// The shutdown ordering fix: hanging up a writer's queue must flush
+    /// every frame already enqueued — including the trailing STOP —
+    /// before the thread exits. A lost STOP would hang the worker; a
+    /// lost job would corrupt the ledger.
+    #[test]
+    fn writer_drains_every_queued_frame_after_stop() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (mut server, _) = listener.accept().unwrap();
+
+        let (job_tx, job_rx) = mpsc::sync_channel::<JobMsg>(WRITER_QUEUE_DEPTH);
+        let (ev_tx, ev_rx) = mpsc::channel();
+        let ctx = WireCtx::new(true);
+        let wire = Arc::new(AtomicU64::new(0));
+        let writer = {
+            let (ctx, wire) = (ctx.clone(), Arc::clone(&wire));
+            std::thread::spawn(move || writer_loop(0, 0, client, job_rx, ctx, wire, ev_tx))
+        };
+        // 16 jobs through a depth-4 queue exercises backpressure while
+        // the writer drains concurrently.
+        for _ in 0..16 {
+            job_tx.send(JobMsg::Train(sample_job())).unwrap();
+        }
+        job_tx.send(JobMsg::Stop).unwrap();
+        drop(job_tx); // hang up — exactly what shutdown() does
+        writer.join().unwrap();
+
+        let dec = WireCtx::new(true);
+        for i in 0..16 {
+            let frame = net::read_frame(&mut server, MAX_DATA_FRAME).unwrap().unwrap();
+            let (msg, _) = decode_job_msg(&frame, &dec).unwrap();
+            assert!(matches!(msg, JobMsg::Train(_)), "frame {i} lost or reordered");
+        }
+        let frame = net::read_frame(&mut server, MAX_DATA_FRAME).unwrap().unwrap();
+        let (msg, _) = decode_job_msg(&frame, &dec).unwrap();
+        assert!(matches!(msg, JobMsg::Stop), "STOP must be the last frame out");
+        assert!(ev_rx.try_recv().is_err(), "a clean drain reports no write error");
+        assert!(wire.load(Ordering::Relaxed) > 0, "writer counts its wire bytes");
+    }
+
+    /// Both directions feed the same wire cache: after a result comes
+    /// back, re-shipping that partition deltas against the rows the
+    /// *result* carried — and stays bit-exact.
+    #[test]
+    fn repeat_shipments_shrink_on_the_wire_and_stay_bitwise() {
+        let (coord, worker) = ctx_pair(true);
+        let mut job = sample_job();
+        job.vertex.data = Some(vec![1.0, 2.0, 3.0, 4.0]);
+        let (payload, l1) = encode_job_msg(&JobMsg::Train(job.clone()), &coord);
+        let (rt, _) = decode_job_msg(&payload, &worker).unwrap();
+        let JobMsg::Train(rt) = rt else { panic!("wrong variant") };
+        assert_eq!(
+            bits(rt.vertex.data.as_deref().unwrap()),
+            bits(&[1.0, 2.0, 3.0, 4.0])
+        );
+        // the worker returns slightly-evolved rows; decoding the result
+        // moves BOTH ends' caches to the returned values
+        let result = WireReply::Reply(Reply::Job(JobResult {
+            worker: 0,
+            vid: job.vid,
+            cid: job.cid,
+            vertex: Some(vec![1.0, 2.0, 3.0, 4.5]),
+            context: None,
+            block: Vec::new(),
+            loss: 0.1,
+            trained: 3,
+            rng_state: [1, 2, 3, 4],
+        }));
+        let (payload, _) = encode_wire_reply(&result, &worker);
+        decode_wire_reply(&payload, &coord).unwrap();
+        // re-shipping near-identical rows now rides a small delta section
+        job.vertex.data = Some(vec![1.0, 2.0, 3.0, 4.5]);
+        let (payload, l2) = encode_job_msg(&JobMsg::Train(job), &coord);
+        assert_eq!(l2.raw, l1.raw, "same four f32s of raw payload each time");
+        assert!(l2.wire < l2.raw, "second shipment must delta: {l2:?}");
+        let (rt, dl) = decode_job_msg(&payload, &worker).unwrap();
+        assert_eq!((l2.raw, l2.wire), (dl.raw, dl.wire));
+        let JobMsg::Train(rt) = rt else { panic!("wrong variant") };
+        assert_eq!(
+            bits(rt.vertex.data.as_deref().unwrap()),
+            bits(&[1.0, 2.0, 3.0, 4.5])
+        );
+    }
+
+    /// A v3 worker that cannot compress is turned away — with the same
+    /// pointed message on both ends — when the run requires compression.
+    #[test]
+    fn handshake_rejects_workers_without_compression_support() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || -> Result<String> {
+            let mut stream = TcpStream::connect(addr)?;
+            net::write_frame(&mut stream, &encode_hello_with(false), MAX_CONTROL_FRAME)?;
+            let frame = net::read_frame(&mut stream, MAX_CONTROL_FRAME)?
+                .ok_or_else(|| anyhow!("coordinator closed without a reject frame"))?;
+            Ok(decode_assign(&frame).unwrap_err().to_string())
+        });
+        let (mut server, _) = listener.accept().unwrap();
+        let err = handshake_worker(&mut server, &sample_assignment()).unwrap_err();
+        assert!(err.to_string().contains("wire compression"), "{err}");
+        let worker_saw = client.join().unwrap().unwrap();
+        assert!(worker_saw.contains("wire compression"), "{worker_saw}");
+        assert!(worker_saw.contains("--no-wire-compression"), "{worker_saw}");
     }
 }

@@ -24,8 +24,8 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use graphvite::cli::Args;
-use graphvite::config::{BackendKind, TrainConfig, WorkerMode};
+use graphvite::cli::{self, Args};
+use graphvite::config::{BackendKind, TrainConfig, TrainConfigBuilder};
 use graphvite::coordinator::{
     load_checkpoint, save_checkpoint, transport, CheckpointState, TrainFlow, Trainer,
 };
@@ -34,7 +34,6 @@ use graphvite::eval;
 use graphvite::experiments::{self, Scale};
 use graphvite::graph::{self, generators, GraphFormat, GraphStats, LoadedGraph, PackOptions};
 use graphvite::metrics::memory::MemoryModel;
-use graphvite::pool::ShuffleKind;
 use graphvite::serve::{IndexConfig, ServeConfig, Server};
 use graphvite::util::{human_bytes, human_secs};
 
@@ -60,6 +59,14 @@ fn run(args: &Args) -> Result<()> {
     if args.command.is_empty() {
         print_usage();
         return Ok(());
+    }
+    // `graphvite <cmd> --help`: the per-subcommand screen generated
+    // from its flag-spec table
+    if args.flag("help") {
+        if let Some(spec) = cli::command_spec(&args.command) {
+            print!("{}", spec.help());
+            return Ok(());
+        }
     }
     match args.command.as_str() {
         "train" => cmd_train(args),
@@ -98,6 +105,7 @@ USAGE:
   graphvite exp NAME [--scale S]            regenerate a paper table/figure
   graphvite stats [GRAPH] [options]         graph stats + memory model
   graphvite artifacts                       list loadable AOT artifacts
+  graphvite <command> --help                per-command flag reference
 
 TRAIN OPTIONS (defaults follow paper section 4.3):
   --config FILE.toml    load a [train] config table
@@ -125,6 +133,11 @@ TRAIN OPTIONS (defaults follow paper section 4.3):
   --transport MODE      local | tcp://HOST:PORT — where workers live.
                         tcp listens on HOST:PORT and waits for one
                         `graphvite worker --connect` per worker  [local]
+  --no-wire-compression ship raw f32 tcp frames. Compression is on by
+                        default: lossless delta/XOR packing, negotiated
+                        in the handshake, bitwise-identical results
+                        (--wire-compression turns it back on over a
+                        config file that disabled it)
   --worker-timeout-secs N  fail if a remote worker goes silent for N
                         seconds mid-training (0 = wait forever)     [0]
   --heartbeat-secs N    PING idle tcp workers every N seconds so a
@@ -238,69 +251,20 @@ fn graph_flags(args: &Args) -> Result<(GraphFormat, usize)> {
     Ok((format, cache))
 }
 
+/// Build the train config in layers — defaults, then `--config`'s TOML,
+/// then every config-bound CLI flag in the [`cli::spec::TRAIN`] table —
+/// and validate once at the end. A failed check names the layer that
+/// set the offending value (`... (dim from --dim)` vs `(dim from
+/// config.toml)`).
 fn config_from_args(args: &Args) -> Result<TrainConfig> {
-    let mut cfg = match args.get("config") {
-        Some(path) => TrainConfig::from_toml_file(path)?,
-        None => TrainConfig::default(),
-    };
-    cfg.dim = args.get_parse("dim", cfg.dim)?;
-    cfg.epochs = args.get_parse("epochs", cfg.epochs)?;
-    cfg.lr = args.get_parse("lr", cfg.lr)?;
-    cfg.negatives = args.get_parse("negatives", cfg.negatives)?;
-    cfg.neg_weight = args.get_parse("neg-weight", cfg.neg_weight)?;
-    cfg.walk_length = args.get_parse("walk-length", cfg.walk_length)?;
-    cfg.augmentation_distance = args.get_parse("aug-distance", cfg.augmentation_distance)?;
-    cfg.num_workers = args.get_parse("workers", cfg.num_workers)?;
-    if let Some(s) = args.get("capacities") {
-        cfg.worker_capacities = TrainConfig::parse_capacity_list(s)
-            .map_err(|e| anyhow::anyhow!("--capacities: {e}"))?;
+    let mut b = TrainConfigBuilder::new();
+    if let Some(path) = args.get("config") {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        b.apply_toml_str(&text, path)?;
     }
-    cfg.num_partitions = args.get_parse("partitions", cfg.num_partitions)?;
-    cfg.num_samplers = args.get_parse("samplers", cfg.num_samplers)?;
-    cfg.episode_size = args.get_parse("episode-size", cfg.episode_size)?;
-    cfg.batch_size = args.get_parse("batch-size", cfg.batch_size)?;
-    cfg.seed = args.get_parse("seed", cfg.seed)?;
-    cfg.log_every = args.get_parse("log-every", cfg.log_every)?;
-    if let Some(s) = args.get("shuffle") {
-        cfg.shuffle =
-            ShuffleKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown shuffle '{s}'"))?;
-    }
-    if let Some(s) = args.get("transport") {
-        cfg.worker_mode = WorkerMode::parse(s).map_err(|e| anyhow::anyhow!("--transport: {e}"))?;
-    }
-    cfg.worker_timeout_secs = args.get_parse("worker-timeout-secs", cfg.worker_timeout_secs)?;
-    cfg.heartbeat_secs = args.get_parse("heartbeat-secs", cfg.heartbeat_secs)?;
-    cfg.max_worker_retries = args.get_parse("max-worker-retries", cfg.max_worker_retries)?;
-    cfg.rejoin_window_secs = args.get_parse("rejoin-window-secs", cfg.rejoin_window_secs)?;
-    if let Some(s) = args.get("backend") {
-        cfg.backend = BackendKind::parse(s).ok_or_else(|| {
-            anyhow::anyhow!(
-                "unknown backend '{s}' (expected one of: {})",
-                BackendKind::names_joined()
-            )
-        })?;
-    }
-    if args.flag("no-collaboration") {
-        cfg.collaboration = false;
-    }
-    if args.flag("no-augmentation") {
-        cfg.online_augmentation = false;
-    }
-    if args.flag("no-fix-context") {
-        cfg.fix_context = false;
-    }
-    if args.flag("no-pipeline") {
-        cfg.pipeline_transfers = false;
-    }
-    if args.flag("no-residency") {
-        cfg.residency = false;
-    }
-    if let Some(s) = args.get("graph-format") {
-        cfg.graph_format = GraphFormat::parse_or_err(s)?;
-    }
-    cfg.graph_cache_bytes = args.get_parse("graph-cache-bytes", cfg.graph_cache_bytes)?;
-    cfg.validate()?;
-    Ok(cfg)
+    cli::spec::TRAIN.apply_to_builder(args, &mut b)?;
+    b.build()
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -397,10 +361,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(r) = trainer.transport_report() {
         // the transport-smoke CI job greps this line into its artifact
         eprintln!(
-            "transport: {} remote workers, {} up, {} down (ledger asserted both sides)",
+            "transport: {} remote workers, {} up, {} down (ledger asserted both \
+             sides, {} saved on the wire)",
             r.workers,
             human_bytes(r.bytes_up),
-            human_bytes(r.bytes_down)
+            human_bytes(r.bytes_down),
+            human_bytes(r.wire_bytes_saved())
         );
     }
     if let Some(paged) = loaded.paged() {
@@ -437,11 +403,14 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let summary = transport::run_worker(addr, std::time::Duration::from_secs(timeout))?;
     // the transport-smoke CI job greps this line from each worker log
     eprintln!(
-        "worker: slot {} done, {} jobs, {} received, {} sent",
+        "worker: slot {} done, {} jobs, {} received ({} on the wire), {} sent \
+         ({} on the wire)",
         summary.worker_index,
         summary.jobs,
         human_bytes(summary.bytes_received),
-        human_bytes(summary.bytes_sent)
+        human_bytes(summary.wire_received),
+        human_bytes(summary.bytes_sent),
+        human_bytes(summary.wire_sent)
     );
     Ok(())
 }

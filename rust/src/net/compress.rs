@@ -1,0 +1,510 @@
+//! Lossless f32 shipment compression for the socket transport.
+//!
+//! A packed section is self-describing and bit-exact: the decoder
+//! reconstructs the *identical* f32 bit patterns the encoder saw
+//! (including NaN payloads, signed zeros, and subnormals), or fails with
+//! a pointed error — never a silent approximation and never a panic.
+//!
+//! Three modes, one byte on the wire:
+//! * [`MODE_STORED`] — raw little-endian bits. Emitted when compression
+//!   is off, for empty sections, and as the fallback whenever the
+//!   compressed bitstream would not beat raw (so on-wire payload bytes
+//!   never exceed raw payload bytes).
+//! * [`MODE_XOR`] — Gorilla-style chain coding: each value is XORed
+//!   with its predecessor (the first with `0.0`) and the residual packed
+//!   with leading/trailing-zero windows.
+//! * [`MODE_DELTA`] — the same residual coding, but the predictor for
+//!   element `i` is `base[i]`: the copy of this partition the receiver
+//!   already holds (tracked per connection by the transport's wire
+//!   cache). A 32-bit FNV-1a fingerprint of the base travels with the
+//!   section so a cache divergence between the two ends is a pointed
+//!   decode error instead of silent corruption.
+//!
+//! Residual coding (per value, after XOR with the predictor):
+//! * residual == 0 → control bit `0`.
+//! * else → control bit `1`, then either `0` + the meaningful bits
+//!   inside the previous value's leading/trailing window (if they fit),
+//!   or `1` + 5-bit leading-zero count + 5-bit (length−1) + the
+//!   meaningful bits, which becomes the new window.
+//!
+//! Everything here is pure std; the module owns no I/O.
+
+use anyhow::{bail, ensure, Result};
+
+use super::Cursor;
+
+/// Raw little-endian f32 bits; no compression.
+pub const MODE_STORED: u8 = 0;
+/// Gorilla chain coding (predictor = previous value).
+pub const MODE_XOR: u8 = 1;
+/// Delta coding against a receiver-resident base (predictor = `base[i]`).
+pub const MODE_DELTA: u8 = 2;
+
+/// Byte accounting for one packed section: `raw` is what the values
+/// occupy uncompressed (`4 × count`), `wire` is what the payload
+/// actually occupies on the wire (headers excluded on both sides, so
+/// `wire <= raw` always and `raw - wire` is the bytes saved).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PackedLens {
+    pub raw: u64,
+    pub wire: u64,
+}
+
+impl PackedLens {
+    pub fn saved(&self) -> u64 {
+        self.raw - self.wire
+    }
+}
+
+impl std::ops::AddAssign for PackedLens {
+    fn add_assign(&mut self, rhs: PackedLens) {
+        self.raw += rhs.raw;
+        self.wire += rhs.wire;
+    }
+}
+
+/// 32-bit FNV-1a over the little-endian bytes of `xs` — the base
+/// fingerprint carried by [`MODE_DELTA`] sections.
+pub fn fingerprint(xs: &[f32]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &x in xs {
+        for b in x.to_le_bytes() {
+            h ^= b as u32;
+            h = h.wrapping_mul(0x0100_0193);
+        }
+    }
+    h
+}
+
+/// MSB-first bit sink backing the compressed stream.
+struct BitWriter {
+    buf: Vec<u8>,
+    used: u32, // bits used in the last byte, 0 == byte boundary
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        BitWriter { buf: Vec::new(), used: 0 }
+    }
+
+    fn push(&mut self, value: u32, mut n: u32) {
+        debug_assert!(n <= 32);
+        while n > 0 {
+            if self.used == 0 {
+                self.buf.push(0);
+            }
+            let room = 8 - self.used;
+            let take = room.min(n); // take <= 8, so the mask below never overflows
+            let chunk = (value >> (n - take)) & ((1u32 << take) - 1);
+            let last = self.buf.len() - 1;
+            self.buf[last] |= (chunk as u8) << (room - take);
+            self.used = (self.used + take) % 8;
+            n -= take;
+        }
+    }
+
+    fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// MSB-first bit source; every read is bounds-checked.
+struct BitReader<'a> {
+    buf: &'a [u8],
+    at: usize, // bit index
+}
+
+impl<'a> BitReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, at: 0 }
+    }
+
+    fn bits(&mut self, n: u32) -> Result<u32> {
+        debug_assert!(n <= 32);
+        let mut out: u32 = 0;
+        for _ in 0..n {
+            let byte = self.at / 8;
+            if byte >= self.buf.len() {
+                bail!("compressed stream truncated at bit {}", self.at);
+            }
+            let bit = (self.buf[byte] >> (7 - (self.at % 8))) & 1;
+            out = (out << 1) | bit as u32;
+            self.at += 1;
+        }
+        Ok(out)
+    }
+
+    /// All bits consumed, modulo a zero-padded tail in the final byte.
+    fn finish(self) -> Result<()> {
+        let whole = self.at.div_ceil(8);
+        ensure!(
+            whole == self.buf.len(),
+            "compressed stream has {} trailing bytes",
+            self.buf.len() - whole
+        );
+        let pad = whole * 8 - self.at;
+        if pad > 0 {
+            let tail = self.buf[self.buf.len() - 1] & ((1u8 << pad) - 1);
+            ensure!(tail == 0, "compressed stream has nonzero padding bits");
+        }
+        Ok(())
+    }
+}
+
+/// Gorilla residual coding of `xs` against `predict(i)`.
+fn encode_stream(xs: &[f32], predict: impl Fn(usize) -> u32) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    let mut window: Option<(u32, u32)> = None; // (leading zeros, length)
+    for (i, &x) in xs.iter().enumerate() {
+        let residual = x.to_bits() ^ predict(i);
+        if residual == 0 {
+            w.push(0, 1);
+            continue;
+        }
+        w.push(1, 1);
+        let lead = residual.leading_zeros();
+        let trail = residual.trailing_zeros();
+        let len = 32 - lead - trail;
+        if let Some((wl, wn)) = window {
+            let wtrail = 32 - wl - wn;
+            if lead >= wl && trail >= wtrail {
+                w.push(0, 1);
+                w.push(residual >> wtrail, wn);
+                continue;
+            }
+        }
+        w.push(1, 1);
+        w.push(lead, 5);
+        w.push(len - 1, 5);
+        w.push(residual >> trail, len);
+        window = Some((lead, len));
+    }
+    w.into_bytes()
+}
+
+/// Inverse of [`encode_stream`]: `count` values, same predictor.
+fn decode_stream(
+    bytes: &[u8],
+    count: usize,
+    out: &mut Vec<f32>,
+    predict: impl Fn(usize, &[f32]) -> u32,
+) -> Result<()> {
+    let mut r = BitReader::new(bytes);
+    let mut window: Option<(u32, u32)> = None;
+    for i in 0..count {
+        let pred = predict(i, out);
+        let residual = if r.bits(1)? == 0 {
+            0
+        } else if r.bits(1)? == 0 {
+            let (wl, wn) =
+                window.ok_or_else(|| anyhow::anyhow!("compressed stream reuses a window before defining one"))?;
+            r.bits(wn)? << (32 - wl - wn)
+        } else {
+            let lead = r.bits(5)?;
+            let len = r.bits(5)? + 1;
+            ensure!(lead + len <= 32, "compressed stream window {lead}+{len} exceeds 32 bits");
+            let v = r.bits(len)? << (32 - lead - len);
+            window = Some((lead, len));
+            v
+        };
+        out.push(f32::from_bits(pred ^ residual));
+    }
+    r.finish()
+}
+
+/// Append one packed section for `xs` to `out`.
+///
+/// `base` is the receiver's cached copy of this partition (delta
+/// predictor) if the caller's wire cache has one of matching length;
+/// `compress` false forces [`MODE_STORED`] (the negotiated-off path).
+/// Returns the raw/on-wire byte accounting for the section.
+pub fn pack_f32s(out: &mut Vec<u8>, xs: &[f32], base: Option<&[f32]>, compress: bool) -> PackedLens {
+    let raw = 4 * xs.len() as u64;
+    let stored = |out: &mut Vec<u8>| {
+        out.push(MODE_STORED);
+        out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+        for &x in xs {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    };
+    if !compress || xs.is_empty() {
+        stored(out);
+        return PackedLens { raw, wire: raw };
+    }
+    let base = base.filter(|b| b.len() == xs.len());
+    let stream = match base {
+        Some(b) => encode_stream(xs, |i| b[i].to_bits()),
+        None => encode_stream(xs, |i| if i == 0 { 0 } else { xs[i - 1].to_bits() }),
+    };
+    if stream.len() as u64 >= raw {
+        stored(out);
+        return PackedLens { raw, wire: raw };
+    }
+    match base {
+        Some(b) => {
+            out.push(MODE_DELTA);
+            out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+            out.extend_from_slice(&fingerprint(b).to_le_bytes());
+        }
+        None => {
+            out.push(MODE_XOR);
+            out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+        }
+    }
+    out.extend_from_slice(&(stream.len() as u32).to_le_bytes());
+    let wire = stream.len() as u64;
+    out.extend_from_slice(&stream);
+    PackedLens { raw, wire }
+}
+
+/// Decode one [`pack_f32s`] section into `out` (cleared first).
+///
+/// `base` is the receiver's cached copy for this partition, consulted
+/// only for [`MODE_DELTA`] sections — a missing, wrong-length, or
+/// wrong-fingerprint base is a pointed error, never silent corruption.
+pub fn unpack_f32s(c: &mut Cursor<'_>, base: Option<&[f32]>, out: &mut Vec<f32>) -> Result<PackedLens> {
+    let mode = c.u8()?;
+    let count = c.u32()? as usize;
+    let raw = 4 * count as u64;
+    out.clear();
+    match mode {
+        MODE_STORED => {
+            c.expect_remaining(count * 4)?;
+            out.reserve(count);
+            for _ in 0..count {
+                out.push(c.f32()?);
+            }
+            Ok(PackedLens { raw, wire: raw })
+        }
+        MODE_XOR | MODE_DELTA => {
+            let fp = if mode == MODE_DELTA { Some(c.u32()?) } else { None };
+            let nbytes = c.u32()? as usize;
+            c.expect_remaining(nbytes)?;
+            ensure!(
+                count <= nbytes.saturating_mul(8),
+                "compressed section declares {count} values in {nbytes} bytes"
+            );
+            let stream = c.bytes(nbytes)?;
+            out.reserve(count);
+            if let Some(fp) = fp {
+                let base = match base {
+                    Some(b) if b.len() == count => b,
+                    Some(b) => bail!(
+                        "delta section expects a {count}-value base, wire cache holds {} values",
+                        b.len()
+                    ),
+                    None => bail!("delta section without a wire-cached base ({count} values)"),
+                };
+                ensure!(
+                    fingerprint(base) == fp,
+                    "delta base fingerprint mismatch: wire caches diverged ({count} values)"
+                );
+                decode_stream(stream, count, out, |i, _| base[i].to_bits())?;
+            } else {
+                decode_stream(stream, count, out, |i, got| {
+                    if i == 0 {
+                        0
+                    } else {
+                        got[i - 1].to_bits()
+                    }
+                })?;
+            }
+            Ok(PackedLens { raw, wire: nbytes as u64 })
+        }
+        other => bail!("unknown compression mode {other:#x}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random generator (LCG) — no rand dependency.
+    struct Lcg(u64);
+
+    impl Lcg {
+        fn next(&mut self) -> u32 {
+            self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (self.0 >> 33) as u32
+        }
+
+        fn f32(&mut self) -> f32 {
+            f32::from_bits(self.next())
+        }
+    }
+
+    fn roundtrip(xs: &[f32], base: Option<&[f32]>, compress: bool) -> (Vec<f32>, PackedLens, PackedLens) {
+        let mut buf = Vec::new();
+        let enc = pack_f32s(&mut buf, xs, base, compress);
+        let mut c = Cursor::new(&buf);
+        let mut out = Vec::new();
+        let dec = unpack_f32s(&mut c, base, &mut out).unwrap();
+        c.finish().unwrap();
+        (out, enc, dec)
+    }
+
+    fn assert_bits(a: &[f32], b: &[f32]) {
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn special_values_roundtrip_bit_exact() {
+        let xs = [
+            0.0f32,
+            -0.0,
+            f32::NAN,
+            f32::from_bits(0x7fc0_dead), // NaN with payload
+            f32::from_bits(0xffc0_0001), // negative NaN
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            f32::from_bits(1),          // smallest subnormal
+            f32::from_bits(0x8000_0001), // negative subnormal
+            f32::MAX,
+            f32::MIN,
+            1.0,
+            -1.0,
+        ];
+        for compress in [false, true] {
+            let (out, enc, dec) = roundtrip(&xs, None, compress);
+            assert_bits(&out, &xs);
+            assert_eq!(enc, dec);
+        }
+        // delta against a shifted copy of itself
+        let base: Vec<f32> = xs.iter().map(|x| f32::from_bits(x.to_bits() ^ 0x3)).collect();
+        let (out, enc, dec) = roundtrip(&xs, Some(&base), true);
+        assert_bits(&out, &xs);
+        assert_eq!(enc, dec);
+    }
+
+    #[test]
+    fn random_matrices_roundtrip_bit_exact() {
+        let mut rng = Lcg(0x1234_5678_9abc_def0);
+        for round in 0..40 {
+            let n = (rng.next() % 300) as usize;
+            // mix fully random bit patterns (worst case: NaNs, infs,
+            // subnormals) with trained-looking small perturbations
+            let xs: Vec<f32> = (0..n)
+                .map(|i| {
+                    if round % 2 == 0 {
+                        rng.f32()
+                    } else {
+                        (i as f32 * 0.01).sin() * 0.1
+                    }
+                })
+                .collect();
+            let base: Vec<f32> = xs
+                .iter()
+                .map(|x| {
+                    if rng.next() % 4 == 0 {
+                        *x // unchanged element: residual 0
+                    } else {
+                        f32::from_bits(x.to_bits() ^ (rng.next() & 0xff))
+                    }
+                })
+                .collect();
+            for (b, compress) in [(None, false), (None, true), (Some(&base), true)] {
+                let (out, enc, dec) = roundtrip(&xs, b.map(|v| &v[..]), compress);
+                assert_bits(&out, &xs);
+                assert_eq!(enc, dec);
+                assert_eq!(enc.raw, 4 * n as u64);
+                assert!(enc.wire <= enc.raw, "on-wire never exceeds raw");
+            }
+        }
+    }
+
+    #[test]
+    fn near_base_shipments_actually_shrink() {
+        // a trained partition differs from the shipped copy by small
+        // mantissa updates — exactly the delta-mode sweet spot
+        let mut rng = Lcg(7);
+        let base: Vec<f32> = (0..512).map(|i| (i as f32 * 0.02).cos()).collect();
+        let xs: Vec<f32> =
+            base.iter().map(|x| f32::from_bits(x.to_bits() ^ (rng.next() & 0x1f))).collect();
+        let (out, enc, _) = roundtrip(&xs, Some(&base), true);
+        assert_bits(&out, &xs);
+        assert!(enc.wire < enc.raw / 2, "delta mode saves >2x here, got {enc:?}");
+        assert_eq!(enc.saved(), enc.raw - enc.wire);
+    }
+
+    #[test]
+    fn incompressible_data_falls_back_to_stored() {
+        let mut rng = Lcg(99);
+        let xs: Vec<f32> = (0..256).map(|_| rng.f32()).collect();
+        let mut buf = Vec::new();
+        let enc = pack_f32s(&mut buf, &xs, None, true);
+        assert_eq!(enc.wire, enc.raw, "random bits must not expand on the wire");
+        assert_eq!(buf[0], MODE_STORED);
+    }
+
+    #[test]
+    fn empty_section_roundtrips() {
+        let (out, enc, dec) = roundtrip(&[], None, true);
+        assert!(out.is_empty());
+        assert_eq!(enc, PackedLens { raw: 0, wire: 0 });
+        assert_eq!(enc, dec);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_sections_fail_pointed() {
+        let mut rng = Lcg(42);
+        let base: Vec<f32> = (0..64).map(|_| rng.f32()).collect();
+        let xs: Vec<f32> =
+            base.iter().map(|x| f32::from_bits(x.to_bits() ^ 0x7)).collect();
+        let mut buf = Vec::new();
+        pack_f32s(&mut buf, &xs, Some(&base), true);
+        assert_eq!(buf[0], MODE_DELTA);
+
+        let decode = |bytes: &[u8], b: Option<&[f32]>| {
+            let mut c = Cursor::new(bytes);
+            let mut out = Vec::new();
+            unpack_f32s(&mut c, b, &mut out).and_then(|l| c.finish().map(|_| l))
+        };
+
+        // every truncation point errors, never panics
+        for cut in 0..buf.len() {
+            assert!(decode(&buf[..cut], Some(&base)).is_err(), "truncated at {cut}");
+        }
+        // unknown mode byte
+        let mut bad = buf.clone();
+        bad[0] = 9;
+        let err = decode(&bad, Some(&base)).unwrap_err();
+        assert!(err.to_string().contains("unknown compression mode"), "{err}");
+        // delta without a base is pointed
+        let err = decode(&buf, None).unwrap_err();
+        assert!(err.to_string().contains("without a wire-cached base"), "{err}");
+        // delta against a diverged base is pointed
+        let mut other = base.clone();
+        other[0] = f32::from_bits(other[0].to_bits() ^ 1);
+        let err = decode(&buf, Some(&other)).unwrap_err();
+        assert!(err.to_string().contains("fingerprint mismatch"), "{err}");
+        // wrong-length base is pointed
+        let err = decode(&buf, Some(&base[..10])).unwrap_err();
+        assert!(err.to_string().contains("wire cache holds"), "{err}");
+        // flipped bitstream bits either fail or decode to *something*,
+        // but must never panic; padding corruption is always caught
+        let mut padded = buf.clone();
+        let last = padded.len() - 1;
+        padded[last] ^= 0xff;
+        let _ = decode(&padded, Some(&base));
+        // a count that outruns its bitstream is rejected before allocation
+        let mut hostile = vec![MODE_XOR];
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes()); // count
+        hostile.extend_from_slice(&2u32.to_le_bytes()); // nbytes
+        hostile.extend_from_slice(&[0, 0]);
+        let err = decode(&hostile, None).unwrap_err();
+        assert!(err.to_string().contains("declares"), "{err}");
+    }
+
+    #[test]
+    fn disabled_compression_is_pure_stored() {
+        let xs = [1.0f32, 2.0, 3.0];
+        let mut buf = Vec::new();
+        let lens = pack_f32s(&mut buf, &xs, Some(&xs[..]), false);
+        assert_eq!(buf[0], MODE_STORED);
+        assert_eq!(lens.saved(), 0);
+    }
+}

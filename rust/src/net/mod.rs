@@ -20,6 +20,8 @@
 //! ([`crate::serve::protocol::MAX_FRAME`]) and delegates to the generic
 //! reader/writer here.
 
+pub mod compress;
+
 use std::io::{Read, Write};
 
 use anyhow::{bail, Result};

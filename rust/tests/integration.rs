@@ -220,7 +220,7 @@ shuffle = "pseudo"
 #[test]
 fn cli_parse_roundtrip() {
     use graphvite::cli::Args;
-    let argv: Vec<String> = "train graph.txt --dim 32 --backend=native --quiet"
+    let argv: Vec<String> = "train graph.txt --dim 32 --backend=native --no-wire-compression"
         .split_whitespace()
         .map(String::from)
         .collect();
@@ -228,8 +228,13 @@ fn cli_parse_roundtrip() {
     assert_eq!(a.command, "train");
     assert_eq!(a.get("dim"), Some("32"));
     assert_eq!(a.get("backend"), Some("native"));
-    assert!(a.flag("quiet"));
+    assert!(a.flag("no-wire-compression"));
     assert_eq!(a.positional, vec!["graph.txt"]);
+    // the spec table rejects typos with a suggestion
+    let argv: Vec<String> =
+        "train graph.txt --dims 32".split_whitespace().map(String::from).collect();
+    let err = Args::parse(&argv).unwrap_err().to_string();
+    assert!(err.contains("did you mean --dim?"), "{err}");
 }
 
 // ----------------------------------------------------------- ablations --

@@ -138,6 +138,18 @@ fn assert_ledger(report: &TransportReport, summaries: &[WorkerSummary], n: usize
     let down: u64 = summaries.iter().map(|s| s.bytes_sent).sum();
     assert_eq!(up, report.bytes_up, "worker-side received sum vs coordinator sent");
     assert_eq!(down, report.bytes_down, "worker-side sent sum vs coordinator received");
+    // the raw-vs-on-wire ledger: both directions agree in aggregate too,
+    // and the stored fallback guarantees the wire never exceeds raw
+    let wire_up: u64 = summaries.iter().map(|s| s.wire_received).sum();
+    let wire_down: u64 = summaries.iter().map(|s| s.wire_sent).sum();
+    assert_eq!(wire_up, report.wire_up, "worker-side wire received vs coordinator");
+    assert_eq!(wire_down, report.wire_down, "worker-side wire sent vs coordinator");
+    assert!(report.wire_up <= report.bytes_up, "wire bytes exceed raw (up)");
+    assert!(report.wire_down <= report.bytes_down, "wire bytes exceed raw (down)");
+    assert_eq!(
+        report.wire_bytes_saved(),
+        (report.bytes_up - report.wire_up) + (report.bytes_down - report.wire_down)
+    );
 }
 
 // ------------------------------------------------ bitwise equivalence --
@@ -190,6 +202,30 @@ fn loopback_socket_is_bitwise_identical_heterogeneous() {
     let (remote, report, summaries) = tcp_run(mk());
     assert_equivalent(&local, &remote, "heterogeneous");
     assert_ledger(&report, &summaries, 2);
+}
+
+#[test]
+fn wire_compression_off_is_bitwise_identical_and_ships_raw() {
+    if !tcp_capable() {
+        eprintln!("skipping: socket transport cannot host the pjrt backend");
+        return;
+    }
+    let local = Trainer::new(graph(), cfg(9)).unwrap().train().unwrap();
+    let (compressed, on_report, _) = tcp_run(cfg(9));
+    let (raw, report, summaries) =
+        tcp_run(TrainConfig { wire_compression: false, ..cfg(9) });
+    assert_equivalent(&local, &raw, "compression-off");
+    assert_equivalent(&compressed, &raw, "compressed vs raw tcp");
+    assert_ledger(&report, &summaries, 2);
+    // negotiated off: on-wire bytes ARE the raw payload bytes, per
+    // direction, with nothing saved
+    assert_eq!(report.wire_up, report.bytes_up);
+    assert_eq!(report.wire_down, report.bytes_down);
+    assert_eq!(report.wire_bytes_saved(), 0);
+    // both modes planned identical raw traffic — compression changes
+    // delivery, never the transfer plan
+    assert_eq!(report.bytes_up, on_report.bytes_up);
+    assert_eq!(report.bytes_down, on_report.bytes_down);
 }
 
 #[test]
@@ -366,13 +402,11 @@ fn killed_worker_folds_onto_survivors_bitwise_heterogeneous() {
     );
 }
 
-#[test]
-fn crashed_socket_worker_is_replaced_by_a_rejoin_bitwise() {
-    if !tcp_capable() {
-        eprintln!("skipping: socket transport cannot host the pjrt backend");
-        return;
-    }
-    let base = cfg(67);
+/// Kill one real socket worker mid-run and let a freshly dialed
+/// replacement rejoin the dead slot; the journaled jobs replay (re-coded
+/// against the replacement's actual resident state when compression is
+/// on) and the trajectory must be the fault-free one, bit for bit.
+fn rejoin_run(base: TrainConfig, tag: &str) {
     let clean = Trainer::new(graph(), base.clone()).unwrap().train().unwrap();
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -416,7 +450,7 @@ fn crashed_socket_worker_is_replaced_by_a_rejoin_bitwise() {
     let recovered = trainer.train().unwrap();
     let report = trainer.transport_report().expect("tcp run must produce a wire ledger");
 
-    assert_same_trajectory(&clean, &recovered, "rejoin");
+    assert_same_trajectory(&clean, &recovered, tag);
     // shutdown() already asserted the per-connection ledgers (BYE vs
     // coordinator counters for every live generation, replacement
     // included); the aggregate also folds in the retired generation's
@@ -439,6 +473,24 @@ fn crashed_socket_worker_is_replaced_by_a_rejoin_bitwise() {
             || msg.contains("connection"),
         "stale worker should get a pointed error, got: {msg}"
     );
+}
+
+#[test]
+fn crashed_socket_worker_is_replaced_by_a_rejoin_bitwise() {
+    if !tcp_capable() {
+        eprintln!("skipping: socket transport cannot host the pjrt backend");
+        return;
+    }
+    rejoin_run(cfg(67), "rejoin");
+}
+
+#[test]
+fn crashed_socket_worker_rejoin_is_bitwise_with_compression_off() {
+    if !tcp_capable() {
+        eprintln!("skipping: socket transport cannot host the pjrt backend");
+        return;
+    }
+    rejoin_run(TrainConfig { wire_compression: false, ..cfg(67) }, "rejoin-raw");
 }
 
 #[test]
