@@ -211,6 +211,29 @@ pub static PACK: CommandSpec = CommandSpec {
     flags: &[
         value("out", "FILE.gvpk", "output path (required)"),
         value("page-size", "BYTES", "successor-page granularity [65536]"),
+        value(
+            "pack-mem-bytes",
+            "N",
+            "packing memory budget (external sort-merge) [268435456]",
+        ),
+        value("reorder", "KIND", "none | bfs: renumber nodes while packing [none]"),
+        HELP_FLAG,
+    ],
+};
+
+pub static REORDER: CommandSpec = CommandSpec {
+    name: "reorder",
+    about: "repack a graph under a locality-aware node permutation",
+    usage: "graphvite reorder GRAPH --out FILE.gvpk [options]",
+    flags: &[
+        value("out", "FILE.gvpk", "output path (required)"),
+        value("reorder", "KIND", "none | bfs: permutation to apply [bfs]"),
+        value("page-size", "BYTES", "successor-page granularity [65536]"),
+        value(
+            "pack-mem-bytes",
+            "N",
+            "packing memory budget (external sort-merge) [268435456]",
+        ),
         HELP_FLAG,
     ],
 };
@@ -313,7 +336,7 @@ pub static ARTIFACTS: CommandSpec = CommandSpec {
 
 /// Every speced subcommand, in `graphvite help` order.
 pub static COMMANDS: &[&CommandSpec] =
-    &[&TRAIN, &PACK, &GENERATE, &EVAL, &SERVE, &WORKER, &EXP, &STATS, &ARTIFACTS];
+    &[&TRAIN, &PACK, &REORDER, &GENERATE, &EVAL, &SERVE, &WORKER, &EXP, &STATS, &ARTIFACTS];
 
 /// Look up the spec for a subcommand name.
 pub fn command_spec(name: &str) -> Option<&'static CommandSpec> {
@@ -625,7 +648,13 @@ mod tests {
                 &PACK,
                 "graphvite pack — pack an edge list for out-of-core training",
                 "  graphvite pack GRAPH.txt --out FILE.gvpk [options]",
-                &["out", "page-size", "help"],
+                &["out", "page-size", "pack-mem-bytes", "reorder", "help"],
+            ),
+            (
+                &REORDER,
+                "graphvite reorder — repack a graph under a locality-aware node permutation",
+                "  graphvite reorder GRAPH --out FILE.gvpk [options]",
+                &["out", "reorder", "page-size", "pack-mem-bytes", "help"],
             ),
             (
                 &SERVE,

@@ -1932,7 +1932,11 @@ mod tests {
         // pass rate (ROADMAP "Flaky-threshold audit"): a corrupted
         // pipeline fails to reduce loss on *every* seed, while a single
         // unlucky seed may plateau. Score = head-minus-tail of the loss
-        // curve; floor 0 = "the curve went down at all".
+        // curve. Floor tightened 0.0 -> 0.01 ("went down at all" ->
+        // "went down measurably"): sweep evidence shows every pinned
+        // seed dropping the loss by orders of magnitude more than this,
+        // while a stalled optimizer jitters around +/- epsilon and now
+        // fails instead of squeaking by on a lucky rounding.
         let g = generators::planted_partition(500, 5, 20.0, 0.05, 7);
         let stats = crate::util::gate::seed_sweep(&[5, 6, 7], |seed| {
             let cfg = TrainConfig { epochs: 20, seed, ..small_cfg() };
@@ -1944,8 +1948,8 @@ mod tests {
             let tail: f32 = curve[curve.len() - 2..].iter().sum::<f32>() / 2.0;
             (head - tail) as f64
         });
-        eprintln!("{}", stats.report("coordinator.loss_decrease", 0.0));
-        assert!(stats.pass_rate(0.0) >= 2.0 / 3.0, "{:?}", stats.scores);
+        eprintln!("{}", stats.report("coordinator.loss_decrease", 0.01));
+        assert!(stats.pass_rate(0.01) >= 2.0 / 3.0, "{:?}", stats.scores);
     }
 
     #[test]
@@ -2008,10 +2012,12 @@ mod tests {
             assert!(r.stats.final_loss.is_finite());
             crate::experiments::classify(&r.embeddings, &g, 0.05, 7).micro_f1
         });
-        eprintln!("{}", stats.report("more_partitions_than_workers.micro_f1", 0.4));
+        // floor tightened 0.40 -> 0.45 on sweep evidence (pinned seeds
+        // score well above 0.5; chance on 4 balanced classes is 0.25)
+        eprintln!("{}", stats.report("more_partitions_than_workers.micro_f1", 0.45));
         // quality must not collapse vs the square grid: at least 2 of the
         // 3 pinned seeds must clear the floor
-        assert!(stats.pass_rate(0.4) >= 2.0 / 3.0, "{:?}", stats.scores);
+        assert!(stats.pass_rate(0.45) >= 2.0 / 3.0, "{:?}", stats.scores);
     }
 
     #[test]

@@ -68,6 +68,24 @@ impl EmbeddingStore {
         &self.context[v as usize * d..(v as usize + 1) * d]
     }
 
+    /// Scatter rows back to external ids: row `i` holds internal node
+    /// `i`, which a reordered graph's stored permutation maps to external
+    /// id `external[i]` — the returned store is indexed by external id.
+    /// (Checkpoints deliberately stay in internal order — resume must be
+    /// bitwise-identical — only user-facing output is unpermuted.)
+    pub fn unpermuted(&self, external: &[u32]) -> EmbeddingStore {
+        let (n, d) = (self.num_nodes, self.dim);
+        assert_eq!(external.len(), n, "permutation length must match embedding rows");
+        let mut vertex = vec![0f32; n * d];
+        let mut context = vec![0f32; n * d];
+        for internal in 0..n {
+            let ext = external[internal] as usize;
+            vertex[ext * d..(ext + 1) * d].copy_from_slice(self.vertex(internal as u32));
+            context[ext * d..(ext + 1) * d].copy_from_slice(self.context(internal as u32));
+        }
+        EmbeddingStore::from_raw(n, d, vertex, context)
+    }
+
     pub fn vertex_matrix(&self) -> &[f32] {
         &self.vertex
     }

@@ -7,11 +7,50 @@
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use super::{Graph, GraphBuilder};
+
+/// Companion label-file path for an edge list: `g.txt` → `g.txt.labels`.
+pub(crate) fn labels_path(path: &Path) -> PathBuf {
+    path.with_extension(format!(
+        "{}labels",
+        path.extension().map(|e| format!("{}.", e.to_string_lossy())).unwrap_or_default()
+    ))
+}
+
+/// Load the `<path>.labels` companion for an `n`-node graph, if present.
+/// Shared between [`load_edge_list`] and the external packer
+/// ([`super::ondisk::pack_edge_list`]) so both apply the identical
+/// semantics: missing nodes default to label 0, out-of-range node ids
+/// are ignored.
+pub(crate) fn load_labels_for(path: &Path, n: usize) -> Result<Option<Vec<u16>>> {
+    let label_path = labels_path(path);
+    if !label_path.exists() {
+        return Ok(None);
+    }
+    let mut labels = vec![0u16; n];
+    let file = File::open(&label_path)?;
+    for line in BufReader::new(file).lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let node: usize = it.next().unwrap().parse()?;
+        let label: u16 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("missing label for node {node}"))?
+            .parse()?;
+        if node < labels.len() {
+            labels[node] = label;
+        }
+    }
+    Ok(Some(labels))
+}
 
 /// Load an edge list (and `<path>.labels` if present) into a [`Graph`].
 pub fn load_edge_list(path: impl AsRef<Path>) -> Result<Graph> {
@@ -45,30 +84,7 @@ pub fn load_edge_list(path: impl AsRef<Path>) -> Result<Graph> {
         builder.push_edge(u, v, w);
     }
     let mut graph = builder.build();
-
-    let label_path = path.with_extension(format!(
-        "{}labels",
-        path.extension().map(|e| format!("{}.", e.to_string_lossy())).unwrap_or_default()
-    ));
-    if label_path.exists() {
-        let mut labels = vec![0u16; graph.num_nodes()];
-        let file = File::open(&label_path)?;
-        for line in BufReader::new(file).lines() {
-            let line = line?;
-            let line = line.trim();
-            if line.is_empty() || line.starts_with('#') {
-                continue;
-            }
-            let mut it = line.split_whitespace();
-            let node: usize = it.next().unwrap().parse()?;
-            let label: u16 = it
-                .next()
-                .ok_or_else(|| anyhow::anyhow!("missing label for node {node}"))?
-                .parse()?;
-            if node < labels.len() {
-                labels[node] = label;
-            }
-        }
+    if let Some(labels) = load_labels_for(path, graph.num_nodes())? {
         graph.set_labels(labels);
     }
     Ok(graph)
@@ -88,11 +104,7 @@ pub fn save_edge_list(graph: &Graph, path: impl AsRef<Path>) -> Result<()> {
         }
     }
     if let Some(labels) = graph.labels() {
-        let label_path = path.with_extension(format!(
-            "{}labels",
-            path.extension().map(|e| format!("{}.", e.to_string_lossy())).unwrap_or_default()
-        ));
-        let mut lw = BufWriter::new(File::create(label_path)?);
+        let mut lw = BufWriter::new(File::create(labels_path(path))?);
         for (node, label) in labels.iter().enumerate() {
             writeln!(lw, "{node} {label}")?;
         }

@@ -14,6 +14,7 @@ mod csr;
 pub mod generators;
 mod loader;
 pub mod ondisk;
+pub mod reorder;
 mod stats;
 mod store;
 
@@ -21,8 +22,9 @@ pub use builder::GraphBuilder;
 pub use csr::Graph;
 pub use loader::{load_edge_list, save_edge_list};
 pub use ondisk::{
-    load_graph, pack_edge_list, pack_graph, CacheStats, GraphFormat, LoadedGraph, PackOptions,
-    PackStats, PagedCsr,
+    load_graph, pack_edge_list, pack_graph, pack_store, CacheStats, GraphFormat, LoadedGraph,
+    PackOptions, PackStats, PagedCsr, DEFAULT_PACK_MEM_BYTES,
 };
+pub use reorder::{bfs_order, invert_order, relabel, ReorderKind};
 pub use stats::{degree_histogram, GraphStats};
 pub use store::GraphStore;

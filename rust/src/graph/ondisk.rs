@@ -3,37 +3,53 @@
 //! [`PagedCsr`] reader that streams it through a bounded LRU page cache.
 //!
 //! GraphVite's headline claim is scale — 66M nodes / 1.8B edges on one
-//! machine — but the edge-list loader materializes the whole CSR in RAM.
-//! This module moves the O(E) part to disk: per-node scalars (offsets,
-//! degrees, weighted degrees, labels) stay resident (O(V), ~18 bytes per
-//! node), while the successor lists are read on demand with
-//! `std::os::unix::fs::FileExt::read_exact_at` — pure std, no mmap crate
-//! needed — into fixed-size pages recycled through an LRU cache bounded
-//! by a configurable byte budget.
+//! machine — and this module is what removes RAM from that equation:
+//! per-node scalars (offsets, degrees, weighted degrees, labels, the
+//! reorder permutation, alias ledger) stay resident (O(V)), while both
+//! O(E) payloads — successor lists *and* the weighted walker's alias
+//! tables — are read on demand with
+//! `std::os::unix::fs::FileExt::read_exact_at` into fixed-size pages
+//! recycled through one LRU cache bounded by a configurable byte budget.
+//! Packing itself is external sort-merge under a `--pack-mem-bytes`
+//! budget, so neither writing nor reading a packed graph ever
+//! materializes its CSR.
 //!
-//! # File layout (`.gvpk`, little-endian throughout)
+//! # File layout (`.gvpk` version 2, little-endian throughout)
 //!
 //! ```text
-//! ┌──────────────────────── header, 72 bytes ────────────────────────┐
-//! │ 0   magic        [u8;4]  = "GVPK"                                │
-//! │ 4   version      u32     = 1                                     │
-//! │ 8   num_nodes    u64                                             │
-//! │ 16  num_arcs     u64     (adjacency entries = 2 × edges)         │
-//! │ 24  page_size    u32     (bytes per successor page)              │
-//! │ 28  flags        u32     (bit 0 unit-weights, bit 1 has-labels)  │
-//! │ 32  offsets_pos  u64 ┐                                           │
-//! │ 40  degrees_pos  u64 │  absolute byte positions of the           │
-//! │ 48  wdegrees_pos u64 │  sections below                           │
-//! │ 56  labels_pos   u64 │  (0 when the section is absent)           │
-//! │ 64  pages_pos    u64 ┘                                           │
-//! ├── offsets   (num_nodes + 1) × u64  byte offsets into `pages` ────┤
-//! ├── degrees    num_nodes × u32       adjacency counts              │
-//! ├── wdegrees   num_nodes × f32       weighted degrees              │
-//! ├── labels    [num_nodes × u16]      only with flag bit 1          │
-//! ├── pages      offsets[num_nodes] bytes of per-node records:       │
-//! │                varint(first target),                             │
-//! │                varint(zigzag(gap)) × (degree − 1),               │
-//! │                [f32 × degree weights]  only without flag bit 0   │
+//! ┌──────────────────────── header, 96 bytes ────────────────────────┐
+//! │ 0   magic             [u8;4]  = "GVPK"                           │
+//! │ 4   version           u32     = 2                                │
+//! │ 8   num_nodes         u64                                        │
+//! │ 16  num_arcs          u64     (adjacency entries = 2 × edges)    │
+//! │ 24  page_size         u32     (bytes per cached page)            │
+//! │ 28  flags             u32     (bit 0 unit-weights, bit 1 labels, │
+//! │                                bit 2 perm, bit 3 alias sidecar)  │
+//! │ 32  offsets_pos       u64 ┐                                      │
+//! │ 40  degrees_pos       u64 │                                      │
+//! │ 48  wdegrees_pos      u64 │  absolute byte positions of the      │
+//! │ 56  labels_pos        u64 │  sections below                      │
+//! │ 64  perm_pos          u64 │  (0 when the section is absent)      │
+//! │ 72  alias_offsets_pos u64 │                                      │
+//! │ 80  pages_pos         u64 │                                      │
+//! │ 88  alias_pages_pos   u64 ┘                                      │
+//! ├─ offsets        (num_nodes + 1) × u64  byte offsets into `pages` ┤
+//! ├─ degrees         num_nodes × u32       adjacency counts          │
+//! ├─ wdegrees        num_nodes × f32       weighted degrees          │
+//! ├─ labels         [num_nodes × u16]      only with flag bit 1      │
+//! ├─ perm           [num_nodes × u32]      only with flag bit 2:     │
+//! │                   perm[new_id] = external (pre-reorder) id,      │
+//! │                   a bijection over 0..num_nodes                  │
+//! ├─ alias_offsets  [(num_nodes + 1) × u64] only with flag bit 3:    │
+//! │                   byte offsets into `alias_pages`; node v spans  │
+//! │                   8 × degree(v) bytes when degree(v) ≥ 2, else 0 │
+//! ├─ pages           offsets[num_nodes] bytes of per-node records:   │
+//! │                    varint(first target),                         │
+//! │                    varint(zigzag(gap)) × (degree − 1),           │
+//! │                    [f32 × degree weights]  only without bit 0    │
+//! ├─ alias_pages    [alias_offsets[num_nodes] bytes]: per node with  │
+//! │                   degree ≥ 2, its Vose table as                  │
+//! │                   f32 × degree probs then u32 × degree aliases   │
 //! └──────────────────────────────────────────────────────────────────┘
 //! ```
 //!
@@ -44,38 +60,57 @@
 //! off the in-RAM loader). Builder rows are sorted, so the deltas are
 //! small and the compression is the same in practice.
 //!
+//! The alias sidecar (flag bit 3) is present **iff** the graph is
+//! weighted (`has_alias == !unit_weights`, enforced at open): it holds
+//! the exact tables [`AliasTable::new`] would build from each row's
+//! weights, so the walker streams them through the page cache instead of
+//! keeping O(E) tables resident — and samples through
+//! [`AliasTable::sample_slices`], drawing the identical RNG sequence.
+//!
 //! Fail-loud policy: `open` validates magic, version, section geometry,
-//! offset monotonicity, the degree/arc ledger and the exact file length
-//! (truncation and trailing garbage are both errors). After open, a
-//! record that decodes to the wrong length (corrupt page) or an I/O
-//! error panics — never train on garbage.
+//! offset monotonicity, the degree/arc ledger, the per-node alias
+//! ledger, the perm bijection and the exact file length (truncation and
+//! trailing garbage are both errors). After open, a record that decodes
+//! to the wrong length (corrupt page), an alias entry out of range, or
+//! an I/O error panics — never train on garbage.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 use std::fs::File;
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::os::unix::fs::FileExt;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use super::reorder::{bfs_order, invert_order, ReorderKind};
 use super::{Graph, GraphStore};
+use crate::sampling::AliasTable;
 
 /// File magic: "GraphVite PacKed".
 pub const MAGIC: [u8; 4] = *b"GVPK";
-/// On-disk format version this binary reads and writes.
-pub const FORMAT_VERSION: u32 = 1;
+/// On-disk format version this binary reads and writes. Version 2 added
+/// the reorder permutation and streamed-alias sidecars (and grew the
+/// header to 96 bytes); version-1 files must be repacked.
+pub const FORMAT_VERSION: u32 = 2;
 /// Default successor-page size (64 KiB — a few thousand records per page
 /// on typical degree distributions).
 pub const DEFAULT_PAGE_SIZE: u32 = 64 * 1024;
 /// Default page-cache byte budget ([`crate::config::TrainConfig::graph_cache_bytes`]).
 pub const DEFAULT_CACHE_BYTES: usize = 64 * 1024 * 1024;
+/// Default packing memory budget (`--pack-mem-bytes`): spillable-run +
+/// merge-buffer bytes during [`pack_edge_list`].
+pub const DEFAULT_PACK_MEM_BYTES: usize = 256 * 1024 * 1024;
 
-const HEADER_LEN: usize = 72;
+const HEADER_LEN: usize = 96;
 const FLAG_UNIT_WEIGHTS: u32 = 1;
 const FLAG_HAS_LABELS: u32 = 2;
+const FLAG_HAS_PERM: u32 = 4;
+const FLAG_HAS_ALIAS: u32 = 8;
+const KNOWN_FLAGS: u32 = FLAG_UNIT_WEIGHTS | FLAG_HAS_LABELS | FLAG_HAS_PERM | FLAG_HAS_ALIAS;
 
 // ------------------------------------------------------------- format --
 
@@ -132,11 +167,20 @@ impl GraphFormat {
 pub struct PackOptions {
     /// Successor-page size in bytes (the cache granularity of readers).
     pub page_size: u32,
+    /// Packing memory budget in bytes (`--pack-mem-bytes`): bounds the
+    /// in-RAM run buffer and merge read-buffers of [`pack_edge_list`].
+    pub mem_bytes: usize,
+    /// Node renumbering applied while packing (`--reorder`).
+    pub reorder: ReorderKind,
 }
 
 impl Default for PackOptions {
     fn default() -> Self {
-        PackOptions { page_size: DEFAULT_PAGE_SIZE }
+        PackOptions {
+            page_size: DEFAULT_PAGE_SIZE,
+            mem_bytes: DEFAULT_PACK_MEM_BYTES,
+            reorder: ReorderKind::None,
+        }
     }
 }
 
@@ -147,6 +191,8 @@ pub struct PackStats {
     pub num_arcs: usize,
     /// Bytes of the compressed successor section.
     pub payload_bytes: u64,
+    /// Bytes of the streamed alias sidecar (0 for unit-weight graphs).
+    pub alias_bytes: u64,
     /// Total file size.
     pub file_bytes: u64,
 }
@@ -251,103 +297,609 @@ fn decode_record(
 
 // --------------------------------------------------------------- pack --
 
-/// Write `graph` as a packed on-disk file (the `graphvite pack` core).
-pub fn pack_graph(graph: &Graph, path: impl AsRef<Path>, opts: &PackOptions) -> Result<PackStats> {
-    ensure!(
-        (16..=1 << 30).contains(&opts.page_size),
-        "page_size {} out of range (16 bytes .. 1 GiB)",
-        opts.page_size
-    );
-    let path = path.as_ref();
-    let n = graph.num_nodes();
-    let unit = graph.unit_weights();
+/// Sibling temp-file path for pack-time spools (same directory as the
+/// output so the final copy never crosses filesystems).
+fn spool_path(output: &Path, tag: &str) -> PathBuf {
+    let mut name = output.file_name().map(|s| s.to_os_string()).unwrap_or_default();
+    name.push(format!(".{tag}.tmp"));
+    output.with_file_name(name)
+}
 
-    // encode the successor payload (in RAM: pack is the one-shot step
-    // that already holds the built CSR; readers never do this)
-    let mut offsets: Vec<u64> = Vec::with_capacity(n + 1);
-    let mut pages: Vec<u8> = Vec::with_capacity(graph.num_arcs() * 2);
-    offsets.push(0);
-    for v in 0..n as u32 {
-        let nbrs = graph.neighbors(v);
-        if let Some((&first, rest)) = nbrs.split_first() {
-            put_varint(&mut pages, first as u64);
+/// Append-only temp-file writer for an O(E) section; `copy_into` streams
+/// it into the final file and removes it (Drop removes it on error
+/// paths).
+struct Spool {
+    path: PathBuf,
+    w: BufWriter<File>,
+    len: u64,
+}
+
+impl Spool {
+    fn create(path: PathBuf) -> Result<Self> {
+        let file =
+            File::create(&path).with_context(|| format!("create spool {}", path.display()))?;
+        Ok(Spool { path, w: BufWriter::new(file), len: 0 })
+    }
+
+    fn write(&mut self, bytes: &[u8]) -> Result<()> {
+        self.w.write_all(bytes)?;
+        self.len += bytes.len() as u64;
+        Ok(())
+    }
+
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn copy_into<W: Write>(mut self, out: &mut W) -> Result<()> {
+        self.w.flush()?;
+        let mut f = File::open(&self.path)
+            .with_context(|| format!("reopen spool {}", self.path.display()))?;
+        std::io::copy(&mut f, out)?;
+        Ok(())
+    }
+}
+
+impl Drop for Spool {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Streaming low-level `.gvpk` writer shared by every pack path
+/// ([`pack_store`] and the external-sort [`pack_edge_list`]): resident
+/// state is O(V) (offsets/degrees/wdegrees/labels/perm/alias ledger);
+/// both O(E) payloads go straight to disk spools. Equivalent inputs
+/// produce byte-identical files regardless of which path fed them.
+struct PackWriter {
+    path: PathBuf,
+    page_size: u32,
+    unit: bool,
+    offsets: Vec<u64>,
+    degrees: Vec<u32>,
+    wdegrees: Vec<f32>,
+    labels: Option<Vec<u16>>,
+    external_ids: Option<Vec<u32>>,
+    /// `Some` iff `!unit` (the `has_alias == !unit_weights` invariant is
+    /// decided here, at write time).
+    alias_offsets: Option<Vec<u64>>,
+    pages: Spool,
+    alias_pages: Spool,
+    buf: Vec<u8>,
+}
+
+impl PackWriter {
+    fn new(
+        path: &Path,
+        num_nodes: usize,
+        page_size: u32,
+        unit: bool,
+        labels: Option<Vec<u16>>,
+        external_ids: Option<Vec<u32>>,
+    ) -> Result<Self> {
+        ensure!(
+            (16..=1 << 30).contains(&page_size),
+            "page_size {page_size} out of range (16 bytes .. 1 GiB)"
+        );
+        if let Some(l) = &labels {
+            ensure!(l.len() == num_nodes, "label vector length must match node count");
+        }
+        if let Some(p) = &external_ids {
+            ensure!(p.len() == num_nodes, "perm vector length must match node count");
+        }
+        // pre-reserve: n is known, so resident sections never pay vec
+        // doubling-growth transients (the pack-memory bound counts on it)
+        let mut offsets = Vec::with_capacity(num_nodes + 1);
+        offsets.push(0u64);
+        let alias_offsets = if unit {
+            None
+        } else {
+            let mut ao = Vec::with_capacity(num_nodes + 1);
+            ao.push(0u64);
+            Some(ao)
+        };
+        Ok(PackWriter {
+            path: path.to_path_buf(),
+            page_size,
+            unit,
+            offsets,
+            degrees: Vec::with_capacity(num_nodes),
+            wdegrees: Vec::with_capacity(num_nodes),
+            labels,
+            external_ids,
+            alias_offsets,
+            pages: Spool::create(spool_path(path, "pages"))?,
+            alias_pages: Spool::create(spool_path(path, "alias"))?,
+            buf: Vec::new(),
+        })
+    }
+
+    /// Append the next node's row (targets in final adjacency order,
+    /// weights parallel — all 1.0 for unit graphs). Nodes must be pushed
+    /// exactly in id order.
+    fn push_node(&mut self, targets: &[u32], weights: &[f32]) -> Result<()> {
+        debug_assert_eq!(targets.len(), weights.len());
+        let deg = targets.len();
+        self.buf.clear();
+        if let Some((&first, rest)) = targets.split_first() {
+            put_varint(&mut self.buf, first as u64);
             let mut prev = first as i64;
             for &t in rest {
-                put_varint(&mut pages, zigzag(t as i64 - prev));
+                put_varint(&mut self.buf, zigzag(t as i64 - prev));
                 prev = t as i64;
             }
         }
-        if !unit {
-            for &w in graph.neighbor_weights(v) {
-                pages.extend_from_slice(&w.to_le_bytes());
+        if !self.unit {
+            for &w in weights {
+                self.buf.extend_from_slice(&w.to_le_bytes());
             }
         }
-        offsets.push(pages.len() as u64);
-    }
-
-    let offsets_pos = HEADER_LEN as u64;
-    let degrees_pos = offsets_pos + 8 * (n as u64 + 1);
-    let wdegrees_pos = degrees_pos + 4 * n as u64;
-    let labels_pos = if graph.labels().is_some() { wdegrees_pos + 4 * n as u64 } else { 0 };
-    let pages_pos = if labels_pos != 0 {
-        labels_pos + 2 * n as u64
-    } else {
-        wdegrees_pos + 4 * n as u64
-    };
-
-    let mut flags = 0u32;
-    if unit {
-        flags |= FLAG_UNIT_WEIGHTS;
-    }
-    if graph.labels().is_some() {
-        flags |= FLAG_HAS_LABELS;
-    }
-
-    let mut w = std::io::BufWriter::new(
-        File::create(path).with_context(|| format!("create {}", path.display()))?,
-    );
-    w.write_all(&MAGIC)?;
-    w.write_all(&FORMAT_VERSION.to_le_bytes())?;
-    w.write_all(&(n as u64).to_le_bytes())?;
-    w.write_all(&(graph.num_arcs() as u64).to_le_bytes())?;
-    w.write_all(&opts.page_size.to_le_bytes())?;
-    w.write_all(&flags.to_le_bytes())?;
-    for pos in [offsets_pos, degrees_pos, wdegrees_pos, labels_pos, pages_pos] {
-        w.write_all(&pos.to_le_bytes())?;
-    }
-    for &off in &offsets {
-        w.write_all(&off.to_le_bytes())?;
-    }
-    for v in 0..n as u32 {
-        w.write_all(&(graph.degree(v) as u32).to_le_bytes())?;
-    }
-    for v in 0..n as u32 {
-        w.write_all(&graph.weighted_degree(v).to_le_bytes())?;
-    }
-    if let Some(labels) = graph.labels() {
-        for &l in labels {
-            w.write_all(&l.to_le_bytes())?;
+        self.pages.write(&self.buf)?;
+        self.offsets.push(self.pages.len());
+        self.degrees.push(deg as u32);
+        // sequential f32 sum — the exact bits `Graph::from_parts` computes
+        self.wdegrees.push(weights.iter().sum());
+        if let Some(ao) = &mut self.alias_offsets {
+            if deg >= 2 {
+                // the identical table the walker would build resident:
+                // AliasTable::new over the row weights, serialized raw
+                let table = AliasTable::new(weights);
+                self.buf.clear();
+                for &p in table.probs() {
+                    self.buf.extend_from_slice(&p.to_le_bytes());
+                }
+                for &a in table.aliases() {
+                    self.buf.extend_from_slice(&a.to_le_bytes());
+                }
+                self.alias_pages.write(&self.buf)?;
+            }
+            ao.push(self.alias_pages.len());
         }
+        Ok(())
     }
-    w.write_all(&pages)?;
-    w.flush()?;
 
-    Ok(PackStats {
-        num_nodes: n,
-        num_arcs: graph.num_arcs(),
-        payload_bytes: pages.len() as u64,
-        file_bytes: pages_pos + pages.len() as u64,
-    })
+    fn finish(self, num_arcs: u64) -> Result<PackStats> {
+        let PackWriter {
+            path,
+            page_size,
+            unit,
+            offsets,
+            degrees,
+            wdegrees,
+            labels,
+            external_ids,
+            alias_offsets,
+            pages,
+            alias_pages,
+            ..
+        } = self;
+        let n = degrees.len() as u64;
+        debug_assert_eq!(offsets.len() as u64, n + 1);
+        debug_assert_eq!(
+            degrees.iter().map(|&d| d as u64).sum::<u64>(),
+            num_arcs,
+            "pushed rows disagree with the declared arc count"
+        );
+
+        let mut flags = 0u32;
+        if unit {
+            flags |= FLAG_UNIT_WEIGHTS;
+        } else {
+            flags |= FLAG_HAS_ALIAS;
+        }
+        if labels.is_some() {
+            flags |= FLAG_HAS_LABELS;
+        }
+        if external_ids.is_some() {
+            flags |= FLAG_HAS_PERM;
+        }
+
+        let offsets_pos = HEADER_LEN as u64;
+        let degrees_pos = offsets_pos + 8 * (n + 1);
+        let wdegrees_pos = degrees_pos + 4 * n;
+        let mut at = wdegrees_pos + 4 * n;
+        let labels_pos = if labels.is_some() {
+            let p = at;
+            at += 2 * n;
+            p
+        } else {
+            0
+        };
+        let perm_pos = if external_ids.is_some() {
+            let p = at;
+            at += 4 * n;
+            p
+        } else {
+            0
+        };
+        let alias_offsets_pos = if alias_offsets.is_some() {
+            let p = at;
+            at += 8 * (n + 1);
+            p
+        } else {
+            0
+        };
+        let pages_pos = at;
+        let payload_bytes = pages.len();
+        let alias_bytes = alias_pages.len();
+        let alias_pages_pos = if alias_offsets.is_some() { pages_pos + payload_bytes } else { 0 };
+        let file_bytes = pages_pos + payload_bytes + alias_bytes;
+
+        let mut w = BufWriter::new(
+            File::create(&path).with_context(|| format!("create {}", path.display()))?,
+        );
+        w.write_all(&MAGIC)?;
+        w.write_all(&FORMAT_VERSION.to_le_bytes())?;
+        w.write_all(&n.to_le_bytes())?;
+        w.write_all(&num_arcs.to_le_bytes())?;
+        w.write_all(&page_size.to_le_bytes())?;
+        w.write_all(&flags.to_le_bytes())?;
+        for pos in [
+            offsets_pos,
+            degrees_pos,
+            wdegrees_pos,
+            labels_pos,
+            perm_pos,
+            alias_offsets_pos,
+            pages_pos,
+            alias_pages_pos,
+        ] {
+            w.write_all(&pos.to_le_bytes())?;
+        }
+        for &off in &offsets {
+            w.write_all(&off.to_le_bytes())?;
+        }
+        for &d in &degrees {
+            w.write_all(&d.to_le_bytes())?;
+        }
+        for &wd in &wdegrees {
+            w.write_all(&wd.to_le_bytes())?;
+        }
+        if let Some(labels) = &labels {
+            for &l in labels {
+                w.write_all(&l.to_le_bytes())?;
+            }
+        }
+        if let Some(perm) = &external_ids {
+            for &p in perm {
+                w.write_all(&p.to_le_bytes())?;
+            }
+        }
+        if let Some(ao) = &alias_offsets {
+            for &off in ao {
+                w.write_all(&off.to_le_bytes())?;
+            }
+        }
+        pages.copy_into(&mut w)?;
+        if alias_offsets.is_some() {
+            alias_pages.copy_into(&mut w)?;
+        } else {
+            drop(alias_pages);
+        }
+        w.flush()?;
+
+        Ok(PackStats {
+            num_nodes: n as usize,
+            num_arcs: num_arcs as usize,
+            payload_bytes,
+            alias_bytes,
+            file_bytes,
+        })
+    }
 }
 
-/// Load an edge list and pack it — the `graphvite pack` subcommand body.
+/// Pack any [`GraphStore`] — in-RAM or already-paged — applying
+/// `opts.reorder`. This is the single reorder-capable packing
+/// implementation: `graphvite reorder` opens a packed file and runs it
+/// through here; [`pack_graph`] is the in-RAM wrapper. Resident cost is
+/// O(V) (the permutation and writer ledgers); rows stream through
+/// [`GraphStore::neighborhood_into`].
+///
+/// With reordering, node `order[new]` of the input becomes node `new`
+/// of the output and every target id is mapped + row re-sorted —
+/// byte-identical to packing [`super::reorder::relabel`]`(g, order)`
+/// without the O(E) intermediate. External ids compose across repeated
+/// reorders: the stored perm always maps back to the *original* input
+/// ids.
+pub fn pack_store(
+    store: &dyn GraphStore,
+    path: impl AsRef<Path>,
+    opts: &PackOptions,
+) -> Result<PackStats> {
+    let path = path.as_ref();
+    let n = store.num_nodes();
+    let unit = store.unit_weights();
+    let order: Option<Vec<u32>> = match opts.reorder {
+        ReorderKind::None => None,
+        ReorderKind::Bfs => Some(bfs_order(store)),
+    };
+    let old_to_new = order.as_deref().map(invert_order);
+    let prior = store.external_ids();
+    let external_ids: Option<Vec<u32>> = match (&order, prior) {
+        (Some(ord), prior) => {
+            Some(ord.iter().map(|&old| prior.map_or(old, |p| p[old as usize])).collect())
+        }
+        (None, Some(p)) => Some(p.to_vec()),
+        (None, None) => None,
+    };
+    let labels: Option<Vec<u16>> = store.labels().map(|l| match &order {
+        Some(ord) => ord.iter().map(|&old| l[old as usize]).collect(),
+        None => l.to_vec(),
+    });
+
+    let mut w = PackWriter::new(path, n, opts.page_size, unit, labels, external_ids)?;
+    let mut targets: Vec<u32> = Vec::new();
+    let mut weights: Vec<f32> = Vec::new();
+    let mut row: Vec<(u32, f32)> = Vec::new();
+    for new in 0..n as u32 {
+        let old = order.as_ref().map_or(new, |o| o[new as usize]);
+        store.neighborhood_into(old, &mut targets, &mut weights);
+        if let Some(map) = &old_to_new {
+            row.clear();
+            row.extend(targets.iter().map(|&t| map[t as usize]).zip(weights.iter().copied()));
+            // mapped ids are unique within a row (the order is a
+            // bijection), so the unstable sort is deterministic
+            row.sort_unstable_by_key(|&(t, _)| t);
+            targets.clear();
+            weights.clear();
+            for &(t, wt) in &row {
+                targets.push(t);
+                weights.push(wt);
+            }
+        }
+        w.push_node(&targets, &weights)?;
+    }
+    w.finish(store.num_arcs() as u64)
+}
+
+/// Write `graph` as a packed on-disk file (the `graphvite pack` core for
+/// in-RAM sources).
+pub fn pack_graph(graph: &Graph, path: impl AsRef<Path>, opts: &PackOptions) -> Result<PackStats> {
+    pack_store(graph, path, opts)
+}
+
+/// One 12-byte spill-run record read; `Ok(None)` at clean EOF,
+/// fail-loud on a partial record.
+fn read_arc_record(r: &mut impl Read) -> Result<Option<(u32, u32, f32)>> {
+    let mut b = [0u8; 12];
+    let mut got = 0usize;
+    while got < 12 {
+        let k = r.read(&mut b[got..])?;
+        if k == 0 {
+            ensure!(got == 0, "spill run truncated mid-record");
+            return Ok(None);
+        }
+        got += k;
+    }
+    Ok(Some((
+        u32::from_le_bytes(b[0..4].try_into().unwrap()),
+        u32::from_le_bytes(b[4..8].try_into().unwrap()),
+        f32::from_le_bytes(b[8..12].try_into().unwrap()),
+    )))
+}
+
+fn spill_run(
+    buf: &mut Vec<(u32, u32, f32)>,
+    output: &Path,
+    runs: &mut Vec<PathBuf>,
+) -> Result<()> {
+    buf.sort_unstable_by_key(|&(s, t, _)| (s, t));
+    let rp = spool_path(output, &format!("run{}", runs.len()));
+    let mut w = BufWriter::new(
+        File::create(&rp).with_context(|| format!("create spill run {}", rp.display()))?,
+    );
+    for &(s, t, wt) in buf.iter() {
+        w.write_all(&s.to_le_bytes())?;
+        w.write_all(&t.to_le_bytes())?;
+        w.write_all(&wt.to_le_bytes())?;
+    }
+    w.flush()?;
+    runs.push(rp);
+    buf.clear();
+    Ok(())
+}
+
+/// Removes its files on drop — keeps spill runs from leaking when a
+/// pack errors out halfway.
+struct RemoveOnDrop(Vec<PathBuf>);
+
+impl Drop for RemoveOnDrop {
+    fn drop(&mut self) {
+        for p in &self.0 {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Pack a text edge list without ever holding its CSR in RAM: external
+/// sort-merge under `opts.mem_bytes` (the `graphvite pack` subcommand
+/// body).
+///
+/// Phase A parses lines exactly like the in-RAM loader (self-loops
+/// dropped, each surviving edge symmetrized into two arcs), buffering at
+/// most `mem_bytes / 12` arcs before sorting the buffer by (src, tgt)
+/// and spilling it as a run. Phase B k-way-merges the runs — duplicate
+/// (src, tgt) pairs have their weights summed in run order, which also
+/// decides the unit-weights flag *post*-dedup (two 1.0 duplicates sum to
+/// 2.0) — into a merged spool, then streams that spool row-by-row
+/// through the same [`PackWriter`] as every other pack path. Resident
+/// peak is the run buffer + O(V) writer ledgers + bounded merge buffers,
+/// asserted by the allocation-counting test in `rust/tests/pack_mem.rs`.
+///
+/// With `opts.reorder` set this runs twice: an unordered pack to a
+/// sibling temp `.gvpk`, then a [`pack_store`] reorder pass over it
+/// (the page cache reusing `mem_bytes` as its budget).
 pub fn pack_edge_list(
     input: impl AsRef<Path>,
     output: impl AsRef<Path>,
     opts: &PackOptions,
 ) -> Result<PackStats> {
-    let graph = super::load_edge_list(input)?;
-    pack_graph(&graph, output, opts)
+    let input = input.as_ref();
+    let output = output.as_ref();
+    ensure!(
+        opts.mem_bytes >= 4096,
+        "pack_mem_bytes {} too small (minimum 4 KiB)",
+        opts.mem_bytes
+    );
+
+    if opts.reorder != ReorderKind::None {
+        let tmp = spool_path(output, "unordered");
+        let _guard = RemoveOnDrop(vec![tmp.clone()]);
+        let base = PackOptions { reorder: ReorderKind::None, ..*opts };
+        pack_edge_list(input, &tmp, &base)?;
+        let paged = PagedCsr::open(&tmp, opts.mem_bytes)?;
+        return pack_store(&paged, output, opts);
+    }
+
+    // ---- Phase A: parse, symmetrize, spill sorted runs ----
+    let file = File::open(input).with_context(|| format!("open {}", input.display()))?;
+    let max_run = (opts.mem_bytes / 12).max(1024);
+    let mut run_buf: Vec<(u32, u32, f32)> = Vec::with_capacity(max_run);
+    let mut runs: Vec<PathBuf> = Vec::new();
+    let mut num_nodes = 0usize;
+    let mut parse_ok = || -> Result<()> {
+        for (lineno, line) in BufReader::new(file).lines().enumerate() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let u: u32 = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("line {}: missing src", lineno + 1))?
+                .parse()
+                .with_context(|| format!("line {}: bad src", lineno + 1))?;
+            let v: u32 = match it.next() {
+                Some(tok) => {
+                    tok.parse().with_context(|| format!("line {}: bad dst", lineno + 1))?
+                }
+                None => bail!("line {}: missing dst", lineno + 1),
+            };
+            let w: f32 = match it.next() {
+                Some(tok) => {
+                    tok.parse().with_context(|| format!("line {}: bad weight", lineno + 1))?
+                }
+                None => 1.0,
+            };
+            if u == v {
+                continue; // drop self loops (matches GraphBuilder)
+            }
+            num_nodes = num_nodes.max(u.max(v) as usize + 1);
+            for arc in [(u, v, w), (v, u, w)] {
+                run_buf.push(arc);
+                if run_buf.len() >= max_run {
+                    spill_run(&mut run_buf, output, &mut runs)?;
+                }
+            }
+        }
+        if !run_buf.is_empty() || runs.is_empty() {
+            spill_run(&mut run_buf, output, &mut runs)?;
+        }
+        Ok(())
+    };
+    let parsed = parse_ok();
+    let _run_guard = RemoveOnDrop(runs.clone());
+    parsed?;
+    drop(run_buf);
+
+    // ---- Phase B1: k-way merge, dedup-sum, decide unit flag ----
+    let k = runs.len();
+    let read_cap = (opts.mem_bytes / (k + 1)).clamp(4096, 64 * 1024);
+    let mut readers: Vec<BufReader<File>> = Vec::with_capacity(k);
+    for rp in &runs {
+        let f = File::open(rp).with_context(|| format!("reopen spill run {}", rp.display()))?;
+        readers.push(BufReader::with_capacity(read_cap, f));
+    }
+    let mut heap: BinaryHeap<Reverse<(u32, u32, usize)>> = BinaryHeap::with_capacity(k);
+    let mut pending_w = vec![0f32; k];
+    for (i, r) in readers.iter_mut().enumerate() {
+        if let Some((s, t, w)) = read_arc_record(r)? {
+            pending_w[i] = w;
+            heap.push(Reverse((s, t, i)));
+        }
+    }
+    let merged_path = spool_path(output, "merged");
+    let _merged_guard = RemoveOnDrop(vec![merged_path.clone()]);
+    let mut merged = Spool::create(merged_path.clone())?;
+    let mut unit = true;
+    let mut num_arcs = 0u64;
+    let mut rec = [0u8; 12];
+    let mut cur: Option<(u32, u32, f32)> = None;
+    macro_rules! emit {
+        ($s:expr, $t:expr, $w:expr) => {{
+            rec[0..4].copy_from_slice(&$s.to_le_bytes());
+            rec[4..8].copy_from_slice(&$t.to_le_bytes());
+            rec[8..12].copy_from_slice(&$w.to_le_bytes());
+            merged.write(&rec)?;
+            unit &= $w == 1.0;
+            num_arcs += 1;
+        }};
+    }
+    while let Some(Reverse((s, t, i))) = heap.pop() {
+        let w = pending_w[i];
+        match &mut cur {
+            Some((cs, ct, cw)) if *cs == s && *ct == t => *cw += w,
+            Some((cs, ct, cw)) => {
+                let (es, et, ew) = (*cs, *ct, *cw);
+                emit!(es, et, ew);
+                cur = Some((s, t, w));
+            }
+            None => cur = Some((s, t, w)),
+        }
+        if let Some((ns, nt, nw)) = read_arc_record(&mut readers[i])? {
+            pending_w[i] = nw;
+            heap.push(Reverse((ns, nt, i)));
+        }
+    }
+    if let Some((cs, ct, cw)) = cur {
+        emit!(cs, ct, cw);
+    }
+    drop(readers);
+
+    // ---- Phase B2: stream merged arcs into the writer, row by row ----
+    let labels = super::loader::load_labels_for(input, num_nodes)?;
+    merged.w.flush()?;
+    let mut mr = BufReader::with_capacity(
+        64 * 1024,
+        File::open(&merged_path)
+            .with_context(|| format!("reopen merge spool {}", merged_path.display()))?,
+    );
+    let mut pw = PackWriter::new(output, num_nodes, opts.page_size, unit, labels, None)?;
+    let mut targets: Vec<u32> = Vec::new();
+    let mut weights: Vec<f32> = Vec::new();
+    let mut cur_src: Option<u32> = None;
+    while let Some((s, t, w)) = read_arc_record(&mut mr)? {
+        if cur_src != Some(s) {
+            let fill_from = match cur_src {
+                Some(cs) => {
+                    pw.push_node(&targets, &weights)?;
+                    cs + 1
+                }
+                None => 0,
+            };
+            for _ in fill_from..s {
+                pw.push_node(&[], &[])?; // isolated / gap node
+            }
+            targets.clear();
+            weights.clear();
+            cur_src = Some(s);
+        }
+        targets.push(t);
+        weights.push(w);
+    }
+    let fill_from = match cur_src {
+        Some(cs) => {
+            pw.push_node(&targets, &weights)?;
+            cs as usize + 1
+        }
+        None => 0,
+    };
+    for _ in fill_from..num_nodes {
+        pw.push_node(&[], &[])?;
+    }
+    drop(merged);
+    pw.finish(num_arcs)
 }
 
 /// True when `path` starts with the packed magic (the `auto` sniff).
@@ -362,7 +914,8 @@ pub fn is_packed(path: impl AsRef<Path>) -> bool {
 // ------------------------------------------------------------- reader --
 
 /// Snapshot of the reader's page-cache counters (CI's `ondisk-smoke` job
-/// greps the line `cmd_train` prints from these).
+/// greps the line `cmd_train` prints from these). One cache — and one
+/// budget — covers both the successor pages and the alias sidecar pages.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
@@ -381,7 +934,20 @@ pub struct CacheStats {
 
 const NIL: usize = usize::MAX;
 
+/// High bit of a cache key selects the on-disk region the page belongs
+/// to (successor pages vs alias-sidecar pages); the low 63 bits are the
+/// page index within that region. Both regions share one cache, one
+/// budget and one set of counters.
+const REGION_BIT: u64 = 1 << 63;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Region {
+    Successors,
+    Alias,
+}
+
 struct Slot {
+    /// Tagged cache key (region bit | page index).
     page: u64,
     /// Page bytes behind an `Arc` so thread cursors can hold a page
     /// lock-free after its slot is evicted. `ensure` recycles a slot's
@@ -455,9 +1021,10 @@ impl PageCache {
         }
     }
 
-    /// Return the slot of `page`, loading (and evicting) as needed.
-    fn ensure(&mut self, page: u64, io: &PageIo<'_>) -> Result<usize> {
-        if let Some(&i) = self.map.get(&page) {
+    /// Return the slot of tagged key `key`, loading (and evicting) as
+    /// needed. `io` must be the geometry of the key's region.
+    fn ensure(&mut self, key: u64, io: &PageIo<'_>) -> Result<usize> {
+        if let Some(&i) = self.map.get(&key) {
             self.hits += 1;
             if self.head != i {
                 self.detach(i);
@@ -466,7 +1033,7 @@ impl PageCache {
             return Ok(i);
         }
         self.misses += 1;
-        let len = io.page_len(page);
+        let len = io.page_len(key);
         // evict from the cold tail until the new page fits (the budget
         // always admits at least this one page)
         while self.bytes + len > self.budget && self.tail != NIL {
@@ -484,7 +1051,7 @@ impl PageCache {
                 self.slots.len() - 1
             }
         };
-        self.slots[i].page = page;
+        self.slots[i].page = key;
         // reuse the buffer when unshared; when a thread cursor still holds
         // the evicted page it contains, leave that allocation to the
         // cursor and start fresh (make_mut would clone the stale bytes)
@@ -493,32 +1060,36 @@ impl PageCache {
         }
         let buf = Arc::make_mut(&mut self.slots[i].data);
         buf.resize(len, 0);
-        if let Err(e) = io.read_page(page, buf) {
+        if let Err(e) = io.read_page(key, buf) {
             self.free.push(i);
             return Err(e);
         }
-        self.map.insert(page, i);
+        self.map.insert(key, i);
         self.bytes += len;
         self.push_front(i);
         Ok(i)
     }
 }
 
-/// The read-side file geometry `PageCache::ensure` loads through.
+/// The read-side geometry of one on-disk region (successor pages or
+/// alias pages) that `PageCache::ensure` loads through. `tag` is OR'd
+/// into cache keys so the two regions never collide in the shared cache.
 struct PageIo<'a> {
     file: &'a File,
     pages_pos: u64,
     pages_len: u64,
     page_size: usize,
+    tag: u64,
 }
 
 impl PageIo<'_> {
-    fn page_len(&self, page: u64) -> usize {
-        let start = page * self.page_size as u64;
+    fn page_len(&self, key: u64) -> usize {
+        let start = (key & !REGION_BIT) * self.page_size as u64;
         (self.pages_len - start).min(self.page_size as u64) as usize
     }
 
-    fn read_page(&self, page: u64, buf: &mut [u8]) -> Result<()> {
+    fn read_page(&self, key: u64, buf: &mut [u8]) -> Result<()> {
+        let page = key & !REGION_BIT;
         let start = page * self.page_size as u64;
         self.file
             .read_exact_at(buf, self.pages_pos + start)
@@ -527,7 +1098,8 @@ impl PageIo<'_> {
 }
 
 /// Out-of-core CSR reader over a packed file: O(V) resident scalars, the
-/// O(E) successor payload streamed through a byte-bounded LRU page cache.
+/// O(E) successor payload — and, for weighted graphs, the O(E) alias
+/// sidecar — streamed through one byte-bounded LRU page cache.
 ///
 /// Thread-safe (`GraphStore: Send + Sync`): the shared cache sits behind
 /// one mutex, but each thread also keeps a lock-free *cursor* — an `Arc`
@@ -545,12 +1117,21 @@ pub struct PagedCsr {
     page_size: usize,
     pages_pos: u64,
     pages_len: u64,
+    alias_pos: u64,
+    alias_len: u64,
     num_arcs: u64,
     unit_weights: bool,
     offsets: Vec<u64>,
     degrees: Vec<u32>,
     wdegrees: Vec<f32>,
     labels: Option<Vec<u16>>,
+    /// `perm[internal_id] = external (pre-reorder) id` — present when
+    /// the file was packed with `--reorder` (or repacked from a store
+    /// that had one). Training output is mapped back through this.
+    external_ids: Option<Vec<u32>>,
+    /// Byte offsets into the alias sidecar; `Some` iff the graph is
+    /// weighted (`has_alias == !unit_weights`, validated at open).
+    alias_offsets: Option<Vec<u64>>,
     cache: Mutex<PageCache>,
     cursor_hits: AtomicU64,
 }
@@ -560,10 +1141,10 @@ pub struct PagedCsr {
 static NEXT_STORE_ID: AtomicU64 = AtomicU64::new(1);
 
 thread_local! {
-    /// The calling thread's page cursor: `(store_id, page, bytes)` of the
-    /// last single-page record it read. One entry is enough — samplers
-    /// stream nodes in order, so the win is consecutive records on one
-    /// page, not a working set.
+    /// The calling thread's page cursor: `(store_id, tagged key, bytes)`
+    /// of the last single-page record it read. One entry is enough —
+    /// samplers stream nodes in order, so the win is consecutive records
+    /// on one page, not a working set.
     static PAGE_CURSOR: RefCell<Option<(u64, u64, Arc<Vec<u8>>)>> = const { RefCell::new(None) };
 }
 
@@ -575,8 +1156,7 @@ impl PagedCsr {
     /// (which then fails loudly at access time).
     pub fn open(path: impl AsRef<Path>, cache_bytes: usize) -> Result<Self> {
         let path = path.as_ref();
-        let mut file =
-            File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut file = File::open(path).with_context(|| format!("open {}", path.display()))?;
         let mut hdr = [0u8; HEADER_LEN];
         file.read_exact(&mut hdr)
             .map_err(|_| anyhow::anyhow!("{}: truncated header", path.display()))?;
@@ -589,6 +1169,13 @@ impl PagedCsr {
         let u32_at = |at: usize| u32::from_le_bytes(hdr[at..at + 4].try_into().unwrap());
         let u64_at = |at: usize| u64::from_le_bytes(hdr[at..at + 8].try_into().unwrap());
         let version = u32_at(4);
+        ensure!(
+            version != 1,
+            "{}: packed-graph version 1 predates the reorder/alias sidecars \
+             (this binary reads version {FORMAT_VERSION}); repack the source \
+             edge list with `graphvite pack`",
+            path.display()
+        );
         ensure!(
             version == FORMAT_VERSION,
             "{}: unsupported packed-graph version {version} (this binary reads \
@@ -603,10 +1190,29 @@ impl PagedCsr {
         let degrees_pos = u64_at(40);
         let wdegrees_pos = u64_at(48);
         let labels_pos = u64_at(56);
-        let pages_pos = u64_at(64);
+        let perm_pos = u64_at(64);
+        let alias_offsets_pos = u64_at(72);
+        let pages_pos = u64_at(80);
+        let alias_pages_pos = u64_at(88);
         ensure!(
             (16..=1 << 30).contains(&page_size),
             "{}: page_size {page_size} out of range",
+            path.display()
+        );
+        ensure!(
+            flags & !KNOWN_FLAGS == 0,
+            "{}: unknown flag bits {:#x} (corrupt header or a newer format)",
+            path.display(),
+            flags & !KNOWN_FLAGS
+        );
+        let unit_weights = flags & FLAG_UNIT_WEIGHTS != 0;
+        let has_labels = flags & FLAG_HAS_LABELS != 0;
+        let has_perm = flags & FLAG_HAS_PERM != 0;
+        let has_alias = flags & FLAG_HAS_ALIAS != 0;
+        ensure!(
+            has_alias == !unit_weights,
+            "{}: alias-sidecar flag disagrees with the unit-weights flag \
+             (weighted graphs must carry the sidecar — corrupt header)",
             path.display()
         );
         // Bound the node count by the file size FIRST: the resident
@@ -621,16 +1227,31 @@ impl PagedCsr {
              (corrupt header)",
             path.display()
         );
-        let has_labels = flags & FLAG_HAS_LABELS != 0;
-        let expected_labels_pos = if has_labels { wdegrees_pos + 4 * n as u64 } else { 0 };
-        let expected_pages_pos =
-            wdegrees_pos + 4 * n as u64 + if has_labels { 2 * n as u64 } else { 0 };
+        let mut expect = HEADER_LEN as u64;
+        let mut take = |present: bool, len: u64| {
+            if present {
+                let p = expect;
+                expect += len;
+                p
+            } else {
+                0
+            }
+        };
+        let want_offsets = take(true, 8 * (n as u64 + 1));
+        let want_degrees = take(true, 4 * n as u64);
+        let want_wdegrees = take(true, 4 * n as u64);
+        let want_labels = take(has_labels, 2 * n as u64);
+        let want_perm = take(has_perm, 4 * n as u64);
+        let want_alias_offsets = take(has_alias, 8 * (n as u64 + 1));
+        let want_pages = expect;
         ensure!(
-            offsets_pos == HEADER_LEN as u64
-                && degrees_pos == offsets_pos + 8 * (n as u64 + 1)
-                && wdegrees_pos == degrees_pos + 4 * n as u64
-                && labels_pos == expected_labels_pos
-                && pages_pos == expected_pages_pos,
+            offsets_pos == want_offsets
+                && degrees_pos == want_degrees
+                && wdegrees_pos == want_wdegrees
+                && labels_pos == want_labels
+                && perm_pos == want_perm
+                && alias_offsets_pos == want_alias_offsets
+                && pages_pos == want_pages,
             "{}: section table does not match the declared node count (corrupt header)",
             path.display()
         );
@@ -647,27 +1268,56 @@ impl PagedCsr {
             Ok(buf)
         };
         let raw = read_section(&mut file, 8 * (n + 1), "offsets")?;
-        let offsets: Vec<u64> = raw
-            .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-            .collect();
+        let offsets: Vec<u64> =
+            raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect();
         let raw = read_section(&mut file, 4 * n, "degrees")?;
-        let degrees: Vec<u32> = raw
-            .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
+        let degrees: Vec<u32> =
+            raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
         let raw = read_section(&mut file, 4 * n, "weighted-degrees")?;
-        let wdegrees: Vec<f32> = raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
+        let wdegrees: Vec<f32> =
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
         let labels = if has_labels {
             let raw = read_section(&mut file, 2 * n, "labels")?;
-            Some(
-                raw.chunks_exact(2)
-                    .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
-                    .collect(),
-            )
+            Some(raw.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect())
+        } else {
+            None
+        };
+        let external_ids: Option<Vec<u32>> = if has_perm {
+            let raw = read_section(&mut file, 4 * n, "perm")?;
+            let perm: Vec<u32> =
+                raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+            let mut seen = vec![false; n];
+            for &p in &perm {
+                ensure!(
+                    (p as usize) < n && !seen[p as usize],
+                    "{}: perm sidecar is not a bijection over 0..{n} (corrupt file)",
+                    path.display()
+                );
+                seen[p as usize] = true;
+            }
+            Some(perm)
+        } else {
+            None
+        };
+        let alias_offsets: Option<Vec<u64>> = if has_alias {
+            let raw = read_section(&mut file, 8 * (n + 1), "alias-offsets")?;
+            let ao: Vec<u64> =
+                raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect();
+            ensure!(
+                ao[0] == 0,
+                "{}: alias offsets must start at 0 (corrupt header)",
+                path.display()
+            );
+            for v in 0..n {
+                let want = if degrees[v] >= 2 { 8 * degrees[v] as u64 } else { 0 };
+                ensure!(
+                    ao[v + 1] >= ao[v] && ao[v + 1] - ao[v] == want,
+                    "{}: alias ledger disagrees with the degree table at node {v} \
+                     (corrupt file)",
+                    path.display()
+                );
+            }
+            Some(ao)
         } else {
             None
         };
@@ -684,12 +1334,21 @@ impl PagedCsr {
             path.display()
         );
         let pages_len = *offsets.last().unwrap();
+        let alias_len = alias_offsets.as_ref().map_or(0, |ao| *ao.last().unwrap());
+        let want_alias_pages_pos =
+            if has_alias { pages_pos + pages_len } else { 0 };
         ensure!(
-            file_len == pages_pos + pages_len,
+            alias_pages_pos == want_alias_pages_pos,
+            "{}: alias section position disagrees with the successor payload \
+             length (corrupt header)",
+            path.display()
+        );
+        ensure!(
+            file_len == pages_pos + pages_len + alias_len,
             "{}: file is {file_len} bytes but the header implies {} — truncated \
              or trailing garbage",
             path.display(),
-            pages_pos + pages_len
+            pages_pos + pages_len + alias_len
         );
 
         // the budget must admit at least one page or no record is readable
@@ -700,12 +1359,16 @@ impl PagedCsr {
             page_size: page_size as usize,
             pages_pos,
             pages_len,
+            alias_pos: alias_pages_pos,
+            alias_len,
             num_arcs,
-            unit_weights: flags & FLAG_UNIT_WEIGHTS != 0,
+            unit_weights,
             offsets,
             degrees,
             wdegrees,
             labels,
+            external_ids,
+            alias_offsets,
             cache: Mutex::new(PageCache::new(budget)),
             cursor_hits: AtomicU64::new(0),
         })
@@ -725,29 +1388,49 @@ impl PagedCsr {
         }
     }
 
-    /// Run `f` over node `v`'s raw record bytes, served from the page
-    /// cache (single-page records decode in place; boundary-straddling
-    /// ones reassemble through the cache's span buffer).
-    fn with_record<R>(&self, v: u32, f: impl FnOnce(&[u8]) -> Result<R>) -> Result<R> {
-        let start = self.offsets[v as usize];
-        let end = self.offsets[v as usize + 1];
-        debug_assert!(start < end, "with_record on an empty record");
+    fn io(&self, region: Region) -> PageIo<'_> {
+        match region {
+            Region::Successors => PageIo {
+                file: &self.file,
+                pages_pos: self.pages_pos,
+                pages_len: self.pages_len,
+                page_size: self.page_size,
+                tag: 0,
+            },
+            Region::Alias => PageIo {
+                file: &self.file,
+                pages_pos: self.alias_pos,
+                pages_len: self.alias_len,
+                page_size: self.page_size,
+                tag: REGION_BIT,
+            },
+        }
+    }
+
+    /// Run `f` over the raw bytes `[start, end)` of `region`, served
+    /// from the shared page cache (single-page spans decode in place;
+    /// boundary-straddling ones reassemble through the cache's span
+    /// buffer).
+    fn with_span<R>(
+        &self,
+        region: Region,
+        start: u64,
+        end: u64,
+        f: impl FnOnce(&[u8]) -> Result<R>,
+    ) -> Result<R> {
+        debug_assert!(start < end, "with_span on an empty span");
         let ps = self.page_size as u64;
-        let io = PageIo {
-            file: &self.file,
-            pages_pos: self.pages_pos,
-            pages_len: self.pages_len,
-            page_size: self.page_size,
-        };
+        let io = self.io(region);
         let first_page = start / ps;
         let last_page = (end - 1) / ps;
         if first_page == last_page {
+            let key = io.tag | first_page;
             let lo = (start - first_page * ps) as usize;
             let hi = (end - first_page * ps) as usize;
-            // lock-free fast path: the record lives on the page this
+            // lock-free fast path: the span lives on the page this
             // thread read last time
             let held = PAGE_CURSOR.with(|c| match &*c.borrow() {
-                Some((sid, page, data)) if *sid == self.store_id && *page == first_page => {
+                Some((sid, k, data)) if *sid == self.store_id && *k == key => {
                     Some(Arc::clone(data))
                 }
                 _ => None,
@@ -759,11 +1442,11 @@ impl PagedCsr {
                 }
                 None => {
                     let mut cache = self.cache.lock().unwrap();
-                    let i = cache.ensure(first_page, &io)?;
+                    let i = cache.ensure(key, &io)?;
                     let data = Arc::clone(&cache.slots[i].data);
                     drop(cache);
                     PAGE_CURSOR.with(|c| {
-                        *c.borrow_mut() = Some((self.store_id, first_page, Arc::clone(&data)));
+                        *c.borrow_mut() = Some((self.store_id, key, Arc::clone(&data)));
                     });
                     data
                 }
@@ -774,7 +1457,7 @@ impl PagedCsr {
             let mut buf = std::mem::take(&mut cache.span_buf);
             buf.clear();
             for page in first_page..=last_page {
-                let i = cache.ensure(page, &io)?;
+                let i = cache.ensure(io.tag | page, &io)?;
                 let data = &cache.slots[i].data;
                 let lo = if page == first_page { (start - page * ps) as usize } else { 0 };
                 let hi = if page == last_page { (end - page * ps) as usize } else { data.len() };
@@ -787,7 +1470,9 @@ impl PagedCsr {
     }
 
     fn record<R>(&self, v: u32, f: impl FnOnce(&[u8]) -> Result<R>) -> R {
-        self.with_record(v, f)
+        let start = self.offsets[v as usize];
+        let end = self.offsets[v as usize + 1];
+        self.with_span(Region::Successors, start, end, f)
             .unwrap_or_else(|e| panic!("paged graph: reading node {v} failed: {e:#}"))
     }
 }
@@ -853,6 +1538,39 @@ impl GraphStore for PagedCsr {
                 f(v, tt, ww);
             }
         }
+    }
+
+    fn alias_tables_streamed(&self) -> bool {
+        self.alias_offsets.is_some()
+    }
+
+    fn alias_into(&self, v: u32, prob: &mut Vec<f32>, alias: &mut Vec<u32>) {
+        let Some(ao) = &self.alias_offsets else {
+            unreachable!("alias_into on a unit-weight packed graph (walker bug)");
+        };
+        let deg = self.degrees[v as usize] as usize;
+        debug_assert!(deg >= 2, "alias_into for degree-{deg} node {v}");
+        let (start, end) = (ao[v as usize], ao[v as usize + 1]);
+        self.with_span(Region::Alias, start, end, |b| {
+            ensure!(b.len() == 8 * deg, "alias record length mismatch (corrupt page)");
+            prob.clear();
+            alias.clear();
+            for i in 0..deg {
+                prob.push(f32::from_le_bytes(b[4 * i..4 * i + 4].try_into().unwrap()));
+            }
+            let abase = 4 * deg;
+            for i in 0..deg {
+                let a = u32::from_le_bytes(b[abase + 4 * i..abase + 4 * i + 4].try_into().unwrap());
+                ensure!((a as usize) < deg, "alias entry out of range (corrupt page)");
+                alias.push(a);
+            }
+            Ok(())
+        })
+        .unwrap_or_else(|e| panic!("paged graph: reading alias table of node {v} failed: {e:#}"))
+    }
+
+    fn external_ids(&self) -> Option<&[u32]> {
+        self.external_ids.as_deref()
     }
 }
 
@@ -968,10 +1686,13 @@ mod tests {
         assert_eq!(stats.num_nodes, 34);
         assert_eq!(stats.num_arcs, 156);
         assert!(stats.bytes_per_arc() < 8.0, "no compression: {}", stats.bytes_per_arc());
+        assert_eq!(stats.alias_bytes, 0, "unit graphs carry no alias sidecar");
         let p = PagedCsr::open(&path, DEFAULT_CACHE_BYTES).unwrap();
         assert_eq!(GraphStore::num_nodes(&p), 34);
         assert_eq!(GraphStore::num_edges(&p), 78);
         assert!(p.unit_weights());
+        assert!(!p.alias_tables_streamed());
+        assert!(GraphStore::external_ids(&p).is_none());
         assert_eq!(p.labels(), g.labels());
         let mut t = Vec::new();
         for v in 0..34u32 {
@@ -988,9 +1709,13 @@ mod tests {
         b.push_edge(3, 4, 1.0e-7);
         let g = b.build();
         let path = tmp("weighted.gvpk");
-        pack_graph(&g, &path, &PackOptions { page_size: 16 }).unwrap();
+        let stats =
+            pack_graph(&g, &path, &PackOptions { page_size: 16, ..Default::default() }).unwrap();
+        // node 0 has degree 2 → one 16-byte alias record
+        assert_eq!(stats.alias_bytes, 16);
         let p = PagedCsr::open(&path, 64).unwrap();
         assert!(!p.unit_weights());
+        assert!(p.alias_tables_streamed());
         let (mut t, mut w) = (Vec::new(), Vec::new());
         for v in 0..6u32 {
             p.neighborhood_into(v, &mut t, &mut w);
@@ -1004,11 +1729,40 @@ mod tests {
     }
 
     #[test]
+    fn streamed_alias_tables_match_resident_builds_bitwise() {
+        // every deg>=2 node's sidecar record must hold the exact bits of
+        // AliasTable::new over that row — the walker equivalence rests
+        // on this
+        let mut b = GraphBuilder::new();
+        for i in 0..40u32 {
+            for j in 0..4u32 {
+                b.push_edge(i, (i + j + 1) % 40, ((i + j) % 7 + 1) as f32 * 0.5);
+            }
+        }
+        let g = b.build();
+        let path = tmp("alias_bits.gvpk");
+        pack_graph(&g, &path, &PackOptions { page_size: 32, ..Default::default() }).unwrap();
+        let p = PagedCsr::open(&path, 128).unwrap();
+        let (mut prob, mut alias) = (Vec::new(), Vec::new());
+        for v in 0..40u32 {
+            if g.degree(v) < 2 {
+                continue;
+            }
+            GraphStore::alias_into(&p, v, &mut prob, &mut alias);
+            let want = AliasTable::new(g.neighbor_weights(v));
+            let got_bits: Vec<u32> = prob.iter().map(|x| x.to_bits()).collect();
+            let want_bits: Vec<u32> = want.probs().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got_bits, want_bits, "probs of node {v}");
+            assert_eq!(alias, want.aliases(), "aliases of node {v}");
+        }
+    }
+
+    #[test]
     fn tiny_pages_force_boundary_straddling_records() {
         // page_size 16 guarantees multi-page records on any real degree
         let g = generators::barabasi_albert(200, 4, 5);
         let path = tmp("straddle.gvpk");
-        pack_graph(&g, &path, &PackOptions { page_size: 16 }).unwrap();
+        pack_graph(&g, &path, &PackOptions { page_size: 16, ..Default::default() }).unwrap();
         let p = PagedCsr::open(&path, 16 * 4).unwrap(); // 4 resident pages
         let mut t = Vec::new();
         for v in 0..200u32 {
@@ -1055,6 +1809,90 @@ mod tests {
             b.successors_into(v, &mut t);
             assert_eq!(t, gb.neighbors(v), "store B node {v}");
         }
+    }
+
+    #[test]
+    fn external_pack_matches_in_ram_pack_byte_for_byte() {
+        // pack_edge_list (external sort-merge) and pack_graph (in-RAM)
+        // must write identical files for duplicate-free inputs — same
+        // rows, same alias tables, same header
+        for (name, g) in [
+            ("ba", generators::barabasi_albert(300, 4, 77)),
+            ("weighted", {
+                let mut b = GraphBuilder::new();
+                for i in 0..60u32 {
+                    b.push_edge(i, (i * 7 + 3) % 60, ((i % 5) + 1) as f32 * 0.25);
+                    b.push_edge(i, (i * 3 + 1) % 60, 1.0);
+                }
+                b.build()
+            }),
+        ] {
+            let text = tmp(&format!("ext_{name}.txt"));
+            crate::graph::save_edge_list(&g, &text).unwrap();
+            let via_ram = tmp(&format!("ext_{name}_ram.gvpk"));
+            let via_ext = tmp(&format!("ext_{name}_ext.gvpk"));
+            let opts = PackOptions { page_size: 256, ..Default::default() };
+            pack_graph(&crate::graph::load_edge_list(&text).unwrap(), &via_ram, &opts).unwrap();
+            // a tiny budget forces many spill runs through the merge
+            let tiny = PackOptions { mem_bytes: 4096, ..opts };
+            pack_edge_list(&text, &via_ext, &tiny).unwrap();
+            let a = std::fs::read(&via_ram).unwrap();
+            let b = std::fs::read(&via_ext).unwrap();
+            assert_eq!(a, b, "{name}: external pack diverged from in-RAM pack");
+        }
+    }
+
+    #[test]
+    fn external_pack_dedups_and_unflags_unit_like_the_builder() {
+        // duplicate 1.0 edges sum to 2.0 → the file must NOT claim unit
+        // weights even though every input token was 1.0
+        let text = tmp("dedup.txt");
+        std::fs::write(&text, "0 1\n1 0\n1 2\n").unwrap();
+        let packed = tmp("dedup.gvpk");
+        let stats = pack_edge_list(&text, &packed, &PackOptions::default()).unwrap();
+        assert_eq!(stats.num_nodes, 3);
+        assert_eq!(stats.num_arcs, 4);
+        let p = PagedCsr::open(&packed, DEFAULT_CACHE_BYTES).unwrap();
+        assert!(!p.unit_weights(), "summed duplicates are not unit weights");
+        let (mut t, mut w) = (Vec::new(), Vec::new());
+        p.neighborhood_into(0, &mut t, &mut w);
+        assert_eq!(t, vec![1]);
+        assert_eq!(w, vec![2.0]);
+    }
+
+    #[test]
+    fn version_1_files_are_rejected_with_a_repack_pointer() {
+        let g = generators::karate_club();
+        let path = tmp("v1.gvpk");
+        pack_graph(&g, &path, &PackOptions::default()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = PagedCsr::open(&path, 1 << 20).unwrap_err().to_string();
+        assert!(err.contains("version 1"), "{err}");
+        assert!(err.contains("repack"), "{err}");
+    }
+
+    #[test]
+    fn reorder_pack_stores_a_valid_perm() {
+        let g = generators::barabasi_albert(120, 3, 21);
+        let path = tmp("reordered.gvpk");
+        let opts = PackOptions { reorder: ReorderKind::Bfs, ..Default::default() };
+        let stats = pack_graph(&g, &path, &opts).unwrap();
+        assert_eq!(stats.num_nodes, 120);
+        let p = PagedCsr::open(&path, DEFAULT_CACHE_BYTES).unwrap();
+        let ext = GraphStore::external_ids(&p).expect("reordered pack must store a perm");
+        let mut seen = vec![false; 120];
+        for &e in ext {
+            assert!(!seen[e as usize]);
+            seen[e as usize] = true;
+        }
+        // the degree multiset survives the relabeling
+        let mut got: Vec<usize> = (0..120u32).map(|v| GraphStore::degree(&p, v)).collect();
+        let mut want: Vec<usize> = (0..120u32).map(|v| g.degree(v)).collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Locality-aware node reordering — the webgraph BFS-permutation trick.
+//!
+//! Random walks step between neighbors; if neighbors sit on the same
+//! successor page of a packed graph, the walk's page-cache hit rate
+//! tracks the graph's *label locality* instead of whatever order the
+//! edge list happened to arrive in. A BFS traversal renumbers nodes so
+//! that each node's neighborhood occupies a contiguous id range, which
+//! (a) shrinks the zigzag gaps the packer varint-encodes and (b) turns
+//! walk steps into near-neighbor page accesses. `graphvite reorder` (or
+//! `pack --reorder bfs`) computes the permutation and repacks; the
+//! permutation is stored in the `.gvpk` itself (the `perm` sidecar, new
+//! in format v2) so external node ids round-trip through `eval`/`serve`.
+//!
+//! Everything here is O(V) resident: the traversal streams successor
+//! lists through the [`GraphStore`] seam, so reordering an out-of-core
+//! graph never materializes its CSR.
+
+use super::{Graph, GraphStore};
+
+/// Which permutation `pack`/`reorder` apply (`--reorder`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReorderKind {
+    /// Keep the input ids (the default).
+    #[default]
+    None,
+    /// Deterministic breadth-first renumbering (see [`bfs_order`]).
+    Bfs,
+}
+
+impl ReorderKind {
+    pub const ALL: &'static [ReorderKind] = &[Self::None, Self::Bfs];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    pub fn parse_or_err(s: &str) -> anyhow::Result<Self> {
+        Self::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown reorder kind '{s}' (expected one of: {})",
+                Self::names_joined()
+            )
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Bfs => "bfs",
+        }
+    }
+
+    /// `"none|bfs"` — for usage lines and error messages.
+    pub fn names_joined() -> String {
+        let names: Vec<&str> = Self::ALL.iter().map(|k| k.name()).collect();
+        names.join("|")
+    }
+}
+
+/// Deterministic BFS permutation of `store`: returns `order`, where
+/// `order[new_id] = old_id` (length `num_nodes`, a bijection).
+///
+/// The traversal starts at the highest-degree node (lowest id on ties) —
+/// hubs and their neighborhoods get the smallest ids, which is where
+/// degree-weighted walks spend their time — visits neighbors in
+/// adjacency order, and restarts at the lowest-id unvisited node for
+/// every further component (isolated nodes end up last, in id order).
+/// Same graph, same order, always: the permutation feeds bitwise-
+/// reproducible training.
+pub fn bfs_order(store: &dyn GraphStore) -> Vec<u32> {
+    let n = store.num_nodes();
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    let mut visited = vec![false; n];
+    if n == 0 {
+        return order;
+    }
+    let mut queue = std::collections::VecDeque::new();
+    let mut nbrs: Vec<u32> = Vec::new();
+    // primary root: max degree, ties to the lowest id
+    let root = (0..n)
+        .max_by_key(|&v| (store.degree(v as u32), std::cmp::Reverse(v)))
+        .unwrap() as u32;
+    visited[root as usize] = true;
+    queue.push_back(root);
+    let mut next_unvisited = 0usize;
+    loop {
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            store.successors_into(v, &mut nbrs);
+            for &t in &nbrs {
+                if !visited[t as usize] {
+                    visited[t as usize] = true;
+                    queue.push_back(t);
+                }
+            }
+        }
+        while next_unvisited < n && visited[next_unvisited] {
+            next_unvisited += 1;
+        }
+        if next_unvisited == n {
+            break;
+        }
+        visited[next_unvisited] = true;
+        queue.push_back(next_unvisited as u32);
+    }
+    debug_assert_eq!(order.len(), n);
+    order
+}
+
+/// Invert a permutation: `inv[order[new]] = new` (`old_id -> new_id`).
+pub fn invert_order(order: &[u32]) -> Vec<u32> {
+    let mut inv = vec![0u32; order.len()];
+    for (new, &old) in order.iter().enumerate() {
+        inv[old as usize] = new as u32;
+    }
+    inv
+}
+
+/// Relabel `graph` through `order` (`order[new_id] = old_id`): node
+/// `order[i]` of the input becomes node `i` of the output, every target
+/// id is mapped, rows re-sorted by (new) target, labels permuted.
+///
+/// The in-RAM counterpart of the streaming repack in
+/// [`super::ondisk::pack_store`] — both must produce identical rows
+/// (asserted in `rust/tests/reorder.rs`), because the RAM-vs-paged
+/// bitwise training equivalence extends to reordered graphs.
+pub fn relabel(graph: &Graph, order: &[u32]) -> Graph {
+    let n = graph.num_nodes();
+    assert_eq!(order.len(), n, "permutation length must match node count");
+    let old_to_new = invert_order(order);
+    let mut offsets: Vec<u64> = Vec::with_capacity(n + 1);
+    let mut targets: Vec<u32> = Vec::with_capacity(graph.num_arcs());
+    let mut weights: Vec<f32> = Vec::with_capacity(graph.num_arcs());
+    offsets.push(0);
+    let mut row: Vec<(u32, f32)> = Vec::new();
+    for &old in order {
+        row.clear();
+        row.extend(
+            graph
+                .neighbors(old)
+                .iter()
+                .map(|&t| old_to_new[t as usize])
+                .zip(graph.neighbor_weights(old).iter().copied()),
+        );
+        // new target ids are unique within a row (order is a bijection),
+        // so the unstable sort is deterministic
+        row.sort_unstable_by_key(|&(t, _)| t);
+        for &(t, w) in &row {
+            targets.push(t);
+            weights.push(w);
+        }
+        offsets.push(targets.len() as u64);
+    }
+    let labels = graph
+        .labels()
+        .map(|l| order.iter().map(|&old| l[old as usize]).collect());
+    Graph::from_parts(offsets, targets, weights, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, GraphBuilder};
+
+    #[test]
+    fn reorder_kind_parses() {
+        for &k in ReorderKind::ALL {
+            assert_eq!(ReorderKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ReorderKind::parse("llp"), None);
+        let err = ReorderKind::parse_or_err("llp").unwrap_err().to_string();
+        for &k in ReorderKind::ALL {
+            assert!(err.contains(k.name()), "error '{err}' misses '{}'", k.name());
+        }
+    }
+
+    #[test]
+    fn bfs_order_is_a_permutation_rooted_at_the_hub() {
+        let g = generators::karate_club();
+        let order = bfs_order(&g);
+        assert_eq!(order.len(), 34);
+        let mut seen = vec![false; 34];
+        for &v in &order {
+            assert!(!seen[v as usize], "duplicate {v}");
+            seen[v as usize] = true;
+        }
+        // node 33 has the highest degree (17) in the karate club
+        assert_eq!(order[0], 33);
+        // deterministic
+        assert_eq!(order, bfs_order(&g));
+    }
+
+    #[test]
+    fn disconnected_components_and_isolated_nodes_are_covered() {
+        // two triangles + trailing isolated nodes
+        let mut b = GraphBuilder::new().with_num_nodes(9);
+        for (u, v) in [(0, 1), (1, 2), (0, 2), (4, 5), (5, 6), (4, 6)] {
+            b.push_edge(u, v, 1.0);
+        }
+        let g = b.build();
+        let order = bfs_order(&g);
+        assert_eq!(order.len(), 9);
+        let inv = invert_order(&order);
+        assert_eq!(inv.len(), 9);
+        for (new, &old) in order.iter().enumerate() {
+            assert_eq!(inv[old as usize] as usize, new);
+        }
+        // isolated nodes (3, 7, 8) come after both components, in id order
+        assert_eq!(&order[6..], &[3, 7, 8]);
+    }
+
+    #[test]
+    fn relabel_preserves_the_graph_up_to_renaming() {
+        let g = generators::planted_partition(120, 3, 8.0, 0.1, 5);
+        let order = bfs_order(&g);
+        let inv = invert_order(&order);
+        let r = relabel(&g, &order);
+        assert_eq!(r.num_nodes(), g.num_nodes());
+        assert_eq!(r.num_edges(), g.num_edges());
+        assert_eq!(r.unit_weights(), g.unit_weights());
+        for old in 0..g.num_nodes() as u32 {
+            let new = inv[old as usize];
+            assert_eq!(r.degree(new), g.degree(old), "degree of {old}");
+            assert_eq!(
+                r.weighted_degree(new).to_bits(),
+                g.weighted_degree(old).to_bits(),
+                "weighted degree of {old}"
+            );
+            // the relabeled neighbor set is the mapped original set
+            let mut want: Vec<u32> =
+                g.neighbors(old).iter().map(|&t| inv[t as usize]).collect();
+            want.sort_unstable();
+            assert_eq!(r.neighbors(new), want.as_slice(), "neighbors of {old}");
+            assert_eq!(
+                r.labels().unwrap()[new as usize],
+                g.labels().unwrap()[old as usize],
+                "label of {old}"
+            );
+        }
+    }
+
+    #[test]
+    fn permute_then_unpermute_is_the_identity() {
+        let g = generators::barabasi_albert(150, 3, 12);
+        let order = bfs_order(&g);
+        let forward = relabel(&g, &order);
+        // undo: the inverse permutation's order vector is inv itself
+        let back = relabel(&forward, &invert_order(&order));
+        assert_eq!(back.num_nodes(), g.num_nodes());
+        for v in 0..g.num_nodes() as u32 {
+            assert_eq!(back.neighbors(v), g.neighbors(v), "node {v}");
+            let got: Vec<u32> =
+                back.neighbor_weights(v).iter().map(|x| x.to_bits()).collect();
+            let want: Vec<u32> =
+                g.neighbor_weights(v).iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want, "weights of {v}");
+        }
+    }
+}

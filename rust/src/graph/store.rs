@@ -85,6 +85,31 @@ pub trait GraphStore: Send + Sync {
     /// sequential full scan (edge sampler construction, export). Paged
     /// stores stream this with page-sequential locality.
     fn for_each_arc(&self, f: &mut dyn FnMut(u32, u32, f32));
+
+    /// True when the store carries pre-built per-node alias tables (the
+    /// `.gvpk` alias sidecar) that the weighted walker should stream via
+    /// [`Self::alias_into`] instead of building O(E) resident tables.
+    fn alias_tables_streamed(&self) -> bool {
+        false
+    }
+
+    /// Replace `prob`/`alias` with node `v`'s alias table (Vose layout,
+    /// both of length `degree(v)`). Only meaningful when
+    /// [`Self::alias_tables_streamed`] is true and `degree(v) >= 2`; the
+    /// bits must equal what [`crate::sampling::AliasTable::new`] builds
+    /// from `v`'s weights, so streamed and resident walks draw
+    /// identically.
+    fn alias_into(&self, v: u32, _prob: &mut Vec<f32>, _alias: &mut Vec<u32>) {
+        unreachable!("alias_into on a store without streamed alias tables (node {v})");
+    }
+
+    /// External (pre-reorder) node id per internal id, when the store
+    /// was packed with a reorder permutation. `None` means internal ids
+    /// ARE the external ids. Training output is mapped back through
+    /// this so embeddings line up with the original edge-list ids.
+    fn external_ids(&self) -> Option<&[u32]> {
+        None
+    }
 }
 
 impl GraphStore for Graph {

@@ -6,7 +6,12 @@
 //!                  on-disk graph (`--graph-format`), or a synthetic
 //!                  graph through the full hybrid system.
 //! * `pack`       — convert an edge list into the packed on-disk format
-//!                  (`graph::ondisk`) that trains out-of-core.
+//!                  (`graph::ondisk`) that trains out-of-core, under a
+//!                  bounded `--pack-mem-bytes` budget (external
+//!                  sort-merge), optionally BFS-reordered for locality.
+//! * `reorder`    — repack an existing graph under a locality-aware
+//!                  node permutation (the external ids are stored in the
+//!                  file, so saved embeddings still line up).
 //! * `generate`   — write a synthetic benchmark graph to an edge list.
 //! * `eval`       — evaluate saved embeddings (node classification or
 //!                  link prediction).
@@ -32,7 +37,9 @@ use graphvite::coordinator::{
 use graphvite::embedding::{self, EmbeddingStore, OutputFormat};
 use graphvite::eval;
 use graphvite::experiments::{self, Scale};
-use graphvite::graph::{self, generators, GraphFormat, GraphStats, LoadedGraph, PackOptions};
+use graphvite::graph::{
+    self, generators, GraphFormat, GraphStats, LoadedGraph, PackOptions, ReorderKind,
+};
 use graphvite::metrics::memory::MemoryModel;
 use graphvite::serve::{IndexConfig, ServeConfig, Server};
 use graphvite::util::{human_bytes, human_secs};
@@ -71,6 +78,7 @@ fn run(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(args),
         "pack" => cmd_pack(args),
+        "reorder" => cmd_reorder(args),
         "generate" => cmd_generate(args),
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
@@ -97,6 +105,8 @@ USAGE:
                                             or packed graph)
   graphvite pack GRAPH.txt --out F.gvpk     pack an edge list for
                                             out-of-core training
+  graphvite reorder GRAPH --out F.gvpk      repack under a locality-aware
+                                            node permutation
   graphvite generate --kind K [options]     write a synthetic graph
   graphvite eval TASK [options]             evaluate saved embeddings
   graphvite serve EMB [options]             serve top-k queries over TCP
@@ -173,6 +183,18 @@ TRAIN OPTIONS (defaults follow paper section 4.3):
 PACK OPTIONS:
   --out FILE.gvpk       output path (required)
   --page-size BYTES     successor-page granularity          [65536]
+  --pack-mem-bytes N    packing memory budget; edges are externally
+                        sort-merged through spill files, so packing
+                        never holds the CSR in RAM       [268435456]
+  --reorder KIND        {reorders}: renumber nodes while packing
+                        (bfs = hub-rooted breadth-first locality
+                        order; external ids are stored in the file
+                        and saved embeddings are mapped back) [none]
+
+REORDER OPTIONS (input may be an edge list or an existing .gvpk):
+  --out FILE.gvpk       output path (required)
+  --reorder KIND        permutation to apply                  [bfs]
+  --page-size BYTES  --pack-mem-bytes N    as for pack
 
 GENERATE OPTIONS:
   --kind ba|youtube|sbm|er  --nodes N  --edges-per-node M  --labels K
@@ -201,6 +223,7 @@ BACKENDS (--backend on the CLI, `backend = \"...\"` in [train] TOML):
 {backends}",
         names = BackendKind::names_joined(),
         formats = GraphFormat::names_joined(),
+        reorders = ReorderKind::names_joined(),
         backends = BackendKind::help_text()
     );
 }
@@ -293,6 +316,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let stop_after = args.get_parse("stop-after-pools", 0u64)?; // 0 = run to completion
     let loaded = load_or_generate_graph(args, cfg.graph_format, cfg.graph_cache_bytes)?;
     let store = loaded.store();
+    // a reordered packed graph trains on internal (locality) ids; saved
+    // embedding rows are mapped back through the stored permutation so
+    // `eval`/`serve` see the original edge-list ids
+    let external: Option<Vec<u32>> = store.external_ids().map(|e| e.to_vec());
+    if external.is_some() {
+        eprintln!("reorder: graph is node-reordered; saved embeddings use external ids");
+    }
     let stats = GraphStats::compute(&*store);
     eprintln!(
         "graph: {} nodes, {} edges (mean degree {:.1}{})",
@@ -330,7 +360,12 @@ fn cmd_train(args: &Args) -> Result<()> {
                         state.pools_done, state.samples_done
                     );
                     if let (Some(out), Some(fmt)) = (&out_path, out_format) {
-                        embedding::save_embeddings(state.store, out, fmt)?;
+                        match &external {
+                            Some(e) => {
+                                embedding::save_embeddings(&state.store.unpermuted(e), out, fmt)?
+                            }
+                            None => embedding::save_embeddings(state.store, out, fmt)?,
+                        }
                     }
                 }
             }
@@ -386,7 +421,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 
     if let (Some(out), Some(fmt)) = (output, out_format) {
-        embedding::save_embeddings(&result.embeddings, out, fmt)?;
+        match &external {
+            Some(e) => embedding::save_embeddings(&result.embeddings.unpermuted(e), out, fmt)?,
+            None => embedding::save_embeddings(&result.embeddings, out, fmt)?,
+        }
         eprintln!("embeddings saved to {out} ({} format)", fmt.name());
     }
     Ok(())
@@ -441,6 +479,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 // ----------------------------------------------------------------- pack --
 
+/// The shared `--page-size`/`--pack-mem-bytes`/`--reorder` triple of
+/// `pack` and `reorder` (the latter defaults to a BFS permutation — a
+/// reorder pass that doesn't reorder is an explicit `--reorder none`).
+fn pack_options(args: &Args, default_reorder: ReorderKind) -> Result<PackOptions> {
+    let d = PackOptions::default();
+    Ok(PackOptions {
+        page_size: args.get_parse("page-size", d.page_size)?,
+        mem_bytes: args.get_parse("pack-mem-bytes", d.mem_bytes)?,
+        reorder: match args.get("reorder") {
+            Some(s) => ReorderKind::parse_or_err(s)?,
+            None => default_reorder,
+        },
+    })
+}
+
+fn report_pack(input: &str, out: &str, stats: &graph::PackStats, reorder: ReorderKind) {
+    eprintln!(
+        "packed {input} -> {out}: {} nodes, {} arcs, {} payload \
+         ({:.2} bytes/arc vs 8 raw), {} alias sidecar, {} total{}",
+        stats.num_nodes,
+        stats.num_arcs,
+        human_bytes(stats.payload_bytes),
+        stats.bytes_per_arc(),
+        human_bytes(stats.alias_bytes),
+        human_bytes(stats.file_bytes),
+        match reorder {
+            ReorderKind::None => String::new(),
+            k => format!(", {} node order", k.name()),
+        }
+    );
+    eprintln!("train it out-of-core with: graphvite train {out} --graph-format packed");
+}
+
 fn cmd_pack(args: &Args) -> Result<()> {
     let input = args
         .positional
@@ -449,21 +520,33 @@ fn cmd_pack(args: &Args) -> Result<()> {
     let out = args
         .get("out")
         .ok_or_else(|| anyhow::anyhow!("--out FILE.gvpk is required"))?;
-    let opts = PackOptions {
-        page_size: args.get_parse("page-size", PackOptions::default().page_size)?,
-    };
+    let opts = pack_options(args, ReorderKind::None)?;
     let stats = graph::pack_edge_list(input, out, &opts)
         .with_context(|| format!("packing {input}"))?;
-    eprintln!(
-        "packed {input} -> {out}: {} nodes, {} arcs, {} payload \
-         ({:.2} bytes/arc vs 8 raw), {} total",
-        stats.num_nodes,
-        stats.num_arcs,
-        human_bytes(stats.payload_bytes),
-        stats.bytes_per_arc(),
-        human_bytes(stats.file_bytes)
-    );
-    eprintln!("train it out-of-core with: graphvite train {out} --graph-format packed");
+    report_pack(input, out, &stats, opts.reorder);
+    Ok(())
+}
+
+// -------------------------------------------------------------- reorder --
+
+fn cmd_reorder(args: &Args) -> Result<()> {
+    let input = args.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("reorder needs a graph path (edge list or .gvpk; see `graphvite help`)")
+    })?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out FILE.gvpk is required"))?;
+    let opts = pack_options(args, ReorderKind::Bfs)?;
+    let stats = if graph::ondisk::is_packed(input) {
+        // repack an existing packed graph through the streaming reorder
+        // path; its page cache reuses the pack budget
+        let paged = graph::PagedCsr::open(input, opts.mem_bytes)
+            .with_context(|| format!("opening {input}"))?;
+        graph::pack_store(&paged, out, &opts).with_context(|| format!("reordering {input}"))?
+    } else {
+        graph::pack_edge_list(input, out, &opts).with_context(|| format!("reordering {input}"))?
+    };
+    report_pack(input, out, &stats, opts.reorder);
     Ok(())
 }
 

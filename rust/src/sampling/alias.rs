@@ -85,12 +85,34 @@ impl AliasTable {
     /// Draw one outcome in O(1).
     #[inline]
     pub fn sample(&self, rng: &mut Rng) -> u32 {
-        let i = rng.below_usize(self.prob.len());
-        if rng.f32() < self.prob[i] {
+        Self::sample_slices(&self.prob, &self.alias, rng)
+    }
+
+    /// [`Self::sample`] over borrowed table columns — the walker's
+    /// streamed path draws from sidecar-decoded slices without owning an
+    /// `AliasTable`. Consumes exactly the draws `sample` does (one index,
+    /// one f32), so streamed and resident sampling stay bitwise-aligned.
+    #[inline]
+    pub fn sample_slices(prob: &[f32], alias: &[u32], rng: &mut Rng) -> u32 {
+        let i = rng.below_usize(prob.len());
+        if rng.f32() < prob[i] {
             i as u32
         } else {
-            self.alias[i]
+            alias[i]
         }
+    }
+
+    /// The acceptance-probability column (serialized into the `.gvpk`
+    /// alias sidecar).
+    #[inline]
+    pub fn probs(&self) -> &[f32] {
+        &self.prob
+    }
+
+    /// The alias column (parallel to [`Self::probs`]).
+    #[inline]
+    pub fn aliases(&self) -> &[u32] {
+        &self.alias
     }
 
     /// Memory footprint in bytes (for the Table 1 memory model).
@@ -165,5 +187,17 @@ mod tests {
     #[should_panic]
     fn all_zero_weights_panics() {
         AliasTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn sample_slices_matches_sample_draw_for_draw() {
+        let t = AliasTable::new(&[0.5, 3.0, 1.25, 0.25, 7.0]);
+        let (mut r1, mut r2) = (Rng::new(11), Rng::new(11));
+        for _ in 0..1000 {
+            assert_eq!(
+                t.sample(&mut r1),
+                AliasTable::sample_slices(t.probs(), t.aliases(), &mut r2)
+            );
+        }
     }
 }

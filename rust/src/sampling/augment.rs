@@ -11,7 +11,7 @@
 //! exactly Algorithm 2's "allocated with an independent sample pool".
 
 use crate::graph::GraphStore;
-use crate::sampling::{AliasTable, RandomWalker};
+use crate::sampling::{AliasTable, RandomWalker, WalkScratch};
 use crate::util::rng::Rng;
 
 /// Tunables of the augmentation stage.
@@ -38,9 +38,10 @@ pub struct OnlineAugmenter<'g> {
     config: AugmentConfig,
     rng: Rng,
     walk_buf: Vec<u32>,
-    /// Per-thread neighbor scratch for the walker's streaming path
-    /// (untouched when the graph store is resident).
-    nbr_scratch: Vec<u32>,
+    /// Per-thread scratch for the walker's streaming path — neighbor
+    /// list plus streamed alias columns (untouched when the graph store
+    /// is resident).
+    nbr_scratch: WalkScratch,
 }
 
 impl<'g> OnlineAugmenter<'g> {
@@ -64,7 +65,7 @@ impl<'g> OnlineAugmenter<'g> {
             config,
             rng,
             walk_buf: Vec::with_capacity(config.walk_length + 1),
-            nbr_scratch: Vec::new(),
+            nbr_scratch: WalkScratch::new(),
         }
     }
 

@@ -37,4 +37,4 @@ pub use alias::AliasTable;
 pub use augment::{AugmentConfig, OnlineAugmenter};
 pub use edge::EdgeSampler;
 pub use negative::NegativeSampler;
-pub use walk::RandomWalker;
+pub use walk::{RandomWalker, WalkScratch};

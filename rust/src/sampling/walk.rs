@@ -2,19 +2,23 @@
 //! paged on-disk reader.
 //!
 //! Walks are uniform over neighbors for unit-weight graphs and
-//! weight-proportional otherwise (per-node alias tables, built once —
-//! the same O(E)-memory trick LINE/node2vec use). Resident stores serve
-//! neighbor lists as borrowed slices ([`GraphStore::neighbors_slice`]),
-//! so the in-RAM hot loop is unchanged; out-of-core stores stream each
-//! step's neighborhood into a caller-owned scratch buffer instead.
+//! weight-proportional otherwise. Weighted sampling has two equivalent
+//! forms: resident stores build per-node alias tables once (the O(E)
+//! LINE/node2vec trick), while packed graphs carry the *same* tables
+//! pre-built in their alias sidecar
+//! ([`GraphStore::alias_tables_streamed`]) and stream them through the
+//! page cache per step — no O(E) structure stays resident for
+//! out-of-core training. Resident stores serve neighbor lists as
+//! borrowed slices ([`GraphStore::neighbors_slice`]), so the in-RAM hot
+//! loop is unchanged; out-of-core stores stream each step's
+//! neighborhood into the caller-owned [`WalkScratch`] instead.
 //!
 //! RNG discipline: a step consumes exactly the same draws regardless of
-//! which store backs the graph — that is what makes training off a
-//! packed file bitwise-identical to training off the loader (see
-//! `rust/tests/ondisk.rs`). Note the weighted path still materializes
-//! per-node alias tables (O(E) RAM) even over a paged store; the
-//! unit-weight fast path — every synthetic workload and most real edge
-//! lists — is fully out-of-core (tracked in ROADMAP).
+//! which store backs the graph — resident `sample` and streamed
+//! [`AliasTable::sample_slices`] over sidecar bits draw identically.
+//! That is what makes training off a packed file bitwise-identical to
+//! training off the loader (see `rust/tests/ondisk.rs`), for unit and
+//! weighted graphs alike.
 
 use crate::graph::GraphStore;
 use crate::sampling::AliasTable;
@@ -24,12 +28,34 @@ use crate::util::rng::Rng;
 enum NeighborChoice {
     /// Unit weights: sample neighbor index uniformly (no tables needed).
     Uniform,
-    /// Weighted: one alias table per node with degree >= 2.
+    /// Weighted, resident store: one alias table per node with
+    /// degree >= 2, built up front.
     Weighted(Vec<Option<AliasTable>>),
+    /// Weighted, packed store with an alias sidecar: tables are decoded
+    /// per step through the store's page cache
+    /// ([`GraphStore::alias_into`]) — O(1) resident.
+    Streamed,
+}
+
+/// Per-thread scratch buffers for one walker: the streamed neighbor
+/// list plus the streamed alias-table columns. Resident stores never
+/// touch it; out-of-core stores decode into it instead of allocating
+/// per step.
+#[derive(Default)]
+pub struct WalkScratch {
+    nbrs: Vec<u32>,
+    prob: Vec<f32>,
+    alias: Vec<u32>,
+}
+
+impl WalkScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
 }
 
 /// Reusable walk engine; cheap to share per thread (immutable — each
-/// thread supplies its own scratch buffer for the streaming path).
+/// thread supplies its own [`WalkScratch`] for the streaming path).
 pub struct RandomWalker<'g> {
     graph: &'g dyn GraphStore,
     choice: NeighborChoice,
@@ -39,6 +65,8 @@ impl<'g> RandomWalker<'g> {
     pub fn new(graph: &'g dyn GraphStore) -> Self {
         let choice = if graph.unit_weights() {
             NeighborChoice::Uniform
+        } else if graph.alias_tables_streamed() {
+            NeighborChoice::Streamed
         } else {
             let mut targets = Vec::new();
             let mut weights = Vec::new();
@@ -66,15 +94,16 @@ impl<'g> RandomWalker<'g> {
     }
 
     /// One walk step from `v`; None if `v` has no neighbors. `scratch`
-    /// holds the streamed neighbor list when the store is out-of-core
-    /// (resident stores never touch it).
+    /// holds the streamed neighbor list and alias columns when the store
+    /// is out-of-core (resident stores never touch it).
     #[inline]
-    pub fn step(&self, v: u32, rng: &mut Rng, scratch: &mut Vec<u32>) -> Option<u32> {
+    pub fn step(&self, v: u32, rng: &mut Rng, scratch: &mut WalkScratch) -> Option<u32> {
+        let WalkScratch { nbrs, prob, alias } = scratch;
         let nbrs: &[u32] = match self.graph.neighbors_slice(v) {
             Some(s) => s,
             None => {
-                self.graph.successors_into(v, scratch);
-                scratch.as_slice()
+                self.graph.successors_into(v, nbrs);
+                nbrs.as_slice()
             }
         };
         match nbrs.len() {
@@ -85,6 +114,10 @@ impl<'g> RandomWalker<'g> {
                     NeighborChoice::Uniform => rng.below_usize(n),
                     NeighborChoice::Weighted(tables) => {
                         tables[v as usize].as_ref().unwrap().sample(rng) as usize
+                    }
+                    NeighborChoice::Streamed => {
+                        self.graph.alias_into(v, prob, alias);
+                        AliasTable::sample_slices(prob, alias, rng) as usize
                     }
                 };
                 Some(nbrs[idx])
@@ -101,7 +134,7 @@ impl<'g> RandomWalker<'g> {
         len: usize,
         rng: &mut Rng,
         out: &mut Vec<u32>,
-        scratch: &mut Vec<u32>,
+        scratch: &mut WalkScratch,
     ) -> usize {
         out.clear();
         out.push(start);
@@ -121,7 +154,7 @@ impl<'g> RandomWalker<'g> {
     /// Allocating convenience wrapper around [`Self::walk_into`].
     pub fn walk(&self, start: u32, len: usize, rng: &mut Rng) -> Vec<u32> {
         let mut out = Vec::with_capacity(len + 1);
-        let mut scratch = Vec::new();
+        let mut scratch = WalkScratch::new();
         self.walk_into(start, len, rng, &mut out, &mut scratch);
         out
     }
@@ -166,7 +199,7 @@ mod tests {
             .build();
         let walker = RandomWalker::new(&g);
         let mut rng = Rng::new(3);
-        let mut scratch = Vec::new();
+        let mut scratch = WalkScratch::new();
         let mut count1 = 0;
         const N: usize = 20_000;
         for _ in 0..N {
@@ -184,7 +217,7 @@ mod tests {
         let walker = RandomWalker::new(&g);
         let mut rng = Rng::new(4);
         let mut buf = Vec::new();
-        let mut scratch = Vec::new();
+        let mut scratch = WalkScratch::new();
         let n1 = walker.walk_into(0, 5, &mut rng, &mut buf, &mut scratch);
         assert_eq!(n1, buf.len());
         let n2 = walker.walk_into(1, 3, &mut rng, &mut buf, &mut scratch);
@@ -203,7 +236,7 @@ mod tests {
         let dir = std::env::temp_dir().join("graphvite_walk_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("karate.gvpk");
-        pack_graph(&g, &path, &PackOptions { page_size: 64 }).unwrap();
+        pack_graph(&g, &path, &PackOptions { page_size: 64, ..Default::default() }).unwrap();
         let p = PagedCsr::open(&path, 256).unwrap();
         let ram = RandomWalker::new(&g);
         let paged = RandomWalker::new(&p);
@@ -212,6 +245,37 @@ mod tests {
             let a = ram.walk(v, 16, &mut r1);
             let b = paged.walk(v, 16, &mut r2);
             assert_eq!(a, b, "walks diverged from node {v}");
+        }
+    }
+
+    #[test]
+    fn weighted_walks_stream_alias_tables_and_stay_identical() {
+        // weighted paged stores must take the Streamed path (no resident
+        // O(E) tables) and still reproduce the resident walker's draws
+        // exactly — the last piece of the out-of-core story
+        use crate::graph::ondisk::{pack_graph, PackOptions, PagedCsr};
+        let mut b = GraphBuilder::new();
+        for i in 0..50u32 {
+            for j in 1..5u32 {
+                b.push_edge(i, (i + j * 7) % 50, ((i + j) % 9 + 1) as f32 * 0.5);
+            }
+        }
+        let g = b.build();
+        assert!(!g.unit_weights());
+        let dir = std::env::temp_dir().join("graphvite_walk_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("weighted.gvpk");
+        pack_graph(&g, &path, &PackOptions { page_size: 128, ..Default::default() }).unwrap();
+        let p = PagedCsr::open(&path, 1024).unwrap();
+        assert!(p.alias_tables_streamed());
+        let ram = RandomWalker::new(&g);
+        let paged = RandomWalker::new(&p);
+        assert!(matches!(paged.choice, NeighborChoice::Streamed));
+        let (mut r1, mut r2) = (Rng::new(31), Rng::new(31));
+        for v in 0..50u32 {
+            let a = ram.walk(v, 24, &mut r1);
+            let b = paged.walk(v, 24, &mut r2);
+            assert_eq!(a, b, "weighted walks diverged from node {v}");
         }
     }
 }

@@ -54,8 +54,11 @@ fn trained_embeddings_classify_communities() {
         let rep = classify(&r.embeddings, &g, 0.05, 7);
         rep.micro_f1.min(rep.macro_f1)
     });
-    eprintln!("{}", stats.report("integration.classify_min_f1", 0.6));
-    assert!(stats.pass_rate(0.6) >= 2.0 / 3.0, "{:?}", stats.scores);
+    // floor tightened 0.60 -> 0.65: gate-sweep artifacts show all three
+    // pinned seeds scoring well above 0.7, so 0.65 keeps the unlucky-seed
+    // allowance while narrowing the band a soft regression can hide in
+    eprintln!("{}", stats.report("integration.classify_min_f1", 0.65));
+    assert!(stats.pass_rate(0.65) >= 2.0 / 3.0, "{:?}", stats.scores);
 }
 
 #[test]

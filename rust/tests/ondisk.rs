@@ -28,7 +28,7 @@ fn tmp(name: &str) -> std::path::PathBuf {
 /// stack can make agrees with the in-RAM store.
 fn assert_observation_equivalent(g: &Graph, page_size: u32, cache_bytes: usize, tag: &str) {
     let path = tmp(&format!("equiv_{tag}.gvpk"));
-    graph::pack_graph(g, &path, &PackOptions { page_size }).unwrap();
+    graph::pack_graph(g, &path, &PackOptions { page_size, ..Default::default() }).unwrap();
     let p = PagedCsr::open(&path, cache_bytes).unwrap();
 
     assert_eq!(GraphStore::num_nodes(&p), g.num_nodes(), "{tag}: nodes");
@@ -187,7 +187,7 @@ fn corrupt_page_panics_instead_of_training_on_garbage() {
     // node 0's record starts at pages_pos (offsets[0] == 0): setting its
     // last byte's continuation bit makes the final varint overrun the
     // record — open still succeeds (header is fine), the read must panic
-    let pages_pos = u64::from_le_bytes(bytes[64..72].try_into().unwrap()) as usize;
+    let pages_pos = u64::from_le_bytes(bytes[80..88].try_into().unwrap()) as usize;
     let offsets_pos = u64::from_le_bytes(bytes[32..40].try_into().unwrap()) as usize;
     let end0 =
         u64::from_le_bytes(bytes[offsets_pos + 8..offsets_pos + 16].try_into().unwrap()) as usize;
@@ -199,6 +199,70 @@ fn corrupt_page_panics_instead_of_training_on_garbage() {
         p.successors_into(0, &mut t);
     }));
     assert!(panicked.is_err(), "corrupt record must not decode silently");
+}
+
+#[test]
+fn sidecar_sections_fail_as_loudly_as_the_header() {
+    use graphvite::graph::ReorderKind;
+    // weighted + BFS-reordered: the file carries every optional section
+    // (labels aside) — perm, alias ledger, alias pages
+    let mut b = GraphBuilder::new();
+    for (u, v, w) in [(0, 1, 2.0), (1, 2, 0.5), (0, 2, 1.5), (2, 3, 1.25), (3, 4, 0.75)] {
+        b.push_edge(u, v, w);
+    }
+    let g = b.build();
+    assert!(!g.unit_weights());
+    let path = tmp("sidecars.gvpk");
+    graph::pack_store(
+        &g,
+        &path,
+        &PackOptions { reorder: ReorderKind::Bfs, ..Default::default() },
+    )
+    .unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    PagedCsr::open(&path, 1 << 20).unwrap(); // the pristine file opens
+
+    let perm_pos = u64::from_le_bytes(bytes[64..72].try_into().unwrap()) as usize;
+    let alias_offsets_pos = u64::from_le_bytes(bytes[72..80].try_into().unwrap()) as usize;
+    assert!(perm_pos != 0 && alias_offsets_pos != 0, "expected both sidecars present");
+
+    // copy perm[1] over perm[0]: a duplicate external id is no bijection
+    let mut bad = bytes.clone();
+    bad.copy_within(perm_pos + 4..perm_pos + 8, perm_pos);
+    let p = tmp("bad_perm.gvpk");
+    std::fs::write(&p, &bad).unwrap();
+    let err = PagedCsr::open(&p, 1 << 20).unwrap_err().to_string();
+    assert!(err.contains("bijection"), "{err}");
+
+    // bump an alias-ledger entry: it must disagree with the degree table
+    let mut bad = bytes.clone();
+    bad[alias_offsets_pos + 8] = bad[alias_offsets_pos + 8].wrapping_add(8);
+    let p = tmp("bad_alias_ledger.gvpk");
+    std::fs::write(&p, &bad).unwrap();
+    let err = PagedCsr::open(&p, 1 << 20).unwrap_err().to_string();
+    assert!(err.contains("alias ledger"), "{err}");
+
+    // chop the tail of the alias pages: the length reconciliation trips
+    let p = tmp("alias_truncated.gvpk");
+    std::fs::write(&p, &bytes[..bytes.len() - 4]).unwrap();
+    let err = PagedCsr::open(&p, 1 << 20).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "{err}");
+
+    // an unknown flag bit is a newer format or corruption, never ignorable
+    let mut bad = bytes.clone();
+    bad[28] |= 0x10;
+    let p = tmp("bad_flag.gvpk");
+    std::fs::write(&p, &bad).unwrap();
+    let err = PagedCsr::open(&p, 1 << 20).unwrap_err().to_string();
+    assert!(err.contains("unknown flag"), "{err}");
+
+    // clearing the alias flag on a weighted file contradicts unit-weights
+    let mut bad = bytes.clone();
+    bad[28] &= !0x08;
+    let p = tmp("flag_disagree.gvpk");
+    std::fs::write(&p, &bad).unwrap();
+    let err = PagedCsr::open(&p, 1 << 20).unwrap_err().to_string();
+    assert!(err.contains("alias-sidecar flag disagrees"), "{err}");
 }
 
 // ------------------------------------------------- end-to-end training --
@@ -226,7 +290,7 @@ fn train_cfg(seed: u64) -> TrainConfig {
 fn packed_training_is_bitwise_identical_to_in_ram() {
     let g = generators::barabasi_albert(400, 4, 33);
     let path = tmp("train_unit.gvpk");
-    graph::pack_graph(&g, &path, &PackOptions { page_size: 512 }).unwrap();
+    graph::pack_graph(&g, &path, &PackOptions { page_size: 512, ..Default::default() }).unwrap();
     // 4 KiB budget on a multi-KiB payload: constant paging during training
     let paged = Arc::new(PagedCsr::open(&path, 4 * 1024).unwrap());
 
@@ -273,8 +337,14 @@ fn packed_training_matches_on_weighted_graphs_too() {
     let g = b.build();
     assert!(!g.unit_weights());
     let path = tmp("train_weighted.gvpk");
-    graph::pack_graph(&g, &path, &PackOptions { page_size: 256 }).unwrap();
+    graph::pack_graph(&g, &path, &PackOptions { page_size: 256, ..Default::default() }).unwrap();
     let paged = Arc::new(PagedCsr::open(&path, 2 * 1024).unwrap());
+    // v2 files page the alias tables instead of rebuilding them in RAM —
+    // the bitwise identity below must hold *through the streamed path*
+    assert!(
+        paged.alias_tables_streamed(),
+        "weighted packed graphs must stream their alias tables"
+    );
 
     let ram = Trainer::new(g, train_cfg(55)).unwrap().train().unwrap();
     let disk = Trainer::from_store(paged as Arc<dyn GraphStore>, train_cfg(55))
@@ -295,7 +365,7 @@ fn concurrent_readers_agree_with_ram_under_eviction_pressure() {
     // would show up here as a wrong successor list.
     let g = Arc::new(generators::barabasi_albert(500, 4, 21));
     let path = tmp("concurrent.gvpk");
-    graph::pack_graph(&g, &path, &PackOptions { page_size: 64 }).unwrap();
+    graph::pack_graph(&g, &path, &PackOptions { page_size: 64, ..Default::default() }).unwrap();
     // 4 resident pages: constant eviction + slot recycling
     let p = Arc::new(PagedCsr::open(&path, 64 * 4).unwrap());
 

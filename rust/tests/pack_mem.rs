@@ -1,0 +1,108 @@
+//! Bounded-memory packing: `pack_edge_list` must never materialize the
+//! CSR it is building. A counting global allocator measures the peak
+//! resident heap across the pack and asserts it stays within the
+//! configured `--pack-mem-bytes` budget plus the documented O(V)
+//! ledgers. This file holds exactly ONE test: the allocator is
+//! process-global, so any concurrently running test would pollute the
+//! peak measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicIsize, Ordering};
+
+use graphvite::graph::{self, generators, PackOptions, ReorderKind};
+
+struct CountingAlloc;
+
+static CURRENT: AtomicIsize = AtomicIsize::new(0);
+static PEAK: AtomicIsize = AtomicIsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let size = layout.size() as isize;
+            let cur = CURRENT.fetch_add(size, Ordering::Relaxed) + size;
+            PEAK.fetch_max(cur, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        CURRENT.fetch_sub(layout.size() as isize, Ordering::Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            let delta = new_size as isize - layout.size() as isize;
+            let cur = CURRENT.fetch_add(delta, Ordering::Relaxed) + delta;
+            PEAK.fetch_max(cur, Ordering::Relaxed);
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn pack_edge_list_peak_memory_is_bounded_by_the_budget() {
+    // ~200k edges / ~400k arcs: a resident CSR would need several MiB,
+    // an order of magnitude over the budget asserted below. The input is
+    // written BEFORE the measured window.
+    let n: usize = 10_000;
+    let g = generators::barabasi_albert(n, 20, 42);
+    let dir = std::env::temp_dir().join("graphvite_pack_mem_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let listing = dir.join("ba.txt");
+    graph::save_edge_list(&g, &listing).unwrap();
+    let arcs = g.num_arcs();
+    drop(g);
+
+    // allowance: the spill/merge budget itself, the writer's O(V)
+    // ledgers (offsets u64 + degrees u32 + wdegrees f32 + sidecar
+    // vectors, generously 64 B/node), and fixed allocator/buffer slack
+    let budget = 256 * 1024usize;
+    let ledgers = 64 * n;
+    let slack = 1 << 20;
+
+    let baseline = CURRENT.load(Ordering::Relaxed);
+    PEAK.store(baseline, Ordering::Relaxed);
+    let out = dir.join("ba.gvpk");
+    let stats = graph::pack_edge_list(
+        &listing,
+        &out,
+        &PackOptions { mem_bytes: budget, ..Default::default() },
+    )
+    .unwrap();
+    let peak = PEAK.load(Ordering::Relaxed);
+    assert_eq!(stats.num_arcs, arcs, "pack dropped arcs");
+    let delta = (peak - baseline).max(0) as usize;
+    assert!(
+        delta <= budget + ledgers + slack,
+        "pack peak {delta} B over budget {budget} + ledgers {ledgers} + slack {slack}"
+    );
+
+    // the two-pass reorder path must stay bounded as well: the unordered
+    // intermediate is reopened as a *paged* store whose cache reuses the
+    // budget, so the allowance is two budgets (merge buffers have been
+    // freed by then, but the page cache and the BFS state coexist with
+    // the second writer's ledgers)
+    let baseline = CURRENT.load(Ordering::Relaxed);
+    PEAK.store(baseline, Ordering::Relaxed);
+    let out_bfs = dir.join("ba_bfs.gvpk");
+    let stats = graph::pack_edge_list(
+        &listing,
+        &out_bfs,
+        &PackOptions { mem_bytes: budget, reorder: ReorderKind::Bfs, ..Default::default() },
+    )
+    .unwrap();
+    let peak = PEAK.load(Ordering::Relaxed);
+    assert_eq!(stats.num_arcs, arcs, "reorder pack dropped arcs");
+    let delta = (peak - baseline).max(0) as usize;
+    assert!(
+        delta <= 2 * budget + 2 * ledgers + slack,
+        "reorder pack peak {delta} B over 2x budget {budget} + ledgers + slack"
+    );
+}

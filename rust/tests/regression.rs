@@ -58,11 +58,13 @@ fn train_auc(graph: &Graph, num_workers: usize, seed: u64) -> f64 {
     graph_reconstruction_auc(&r.embeddings, graph, 0xA0C ^ seed)
 }
 
-// Deliberately loose: a healthy run reconstructs trained edges at AUC
-// well above 0.8 while any corruption collapses to ~0.5, so the floor
-// only needs to split those regimes. (Empirical — tighten once enough
-// gate-sweep evidence accumulates in CI artifacts.)
-const AUC_FLOOR: f64 = 0.65;
+// A healthy run reconstructs trained edges at AUC well above 0.8 while
+// any corruption collapses to ~0.5, so the floor only needs to split
+// those regimes. Tightened 0.65 -> 0.70 on accumulated gate-sweep
+// evidence: the observed per-seed minimum sits comfortably above 0.8,
+// so 0.70 still leaves a wide noise margin while catching softer
+// degradations than the original floor could.
+const AUC_FLOOR: f64 = 0.70;
 
 #[test]
 fn worker_counts_clear_auc_floor_and_agree() {

@@ -1,0 +1,286 @@
+//! Locality-aware reordering suite. The contract under test: a
+//! BFS-reordered pack is *exactly* the in-RAM [`relabel`] of the source
+//! graph plus a stored permutation sidecar — so reordered paged training
+//! is bitwise-identical to training the relabeled graph in RAM, and the
+//! sidecar maps every trained row back to the external id the user fed
+//! in, which is what lets `eval`/`serve` speak original ids.
+
+use std::sync::Arc;
+
+use graphvite::config::{BackendKind, TrainConfig};
+use graphvite::coordinator::Trainer;
+use graphvite::embedding::EmbeddingStore;
+use graphvite::eval::{link_prediction_auc, LinkSplit};
+use graphvite::graph::{
+    self, bfs_order, generators, invert_order, relabel, Graph, GraphBuilder, GraphStore,
+    PackOptions, PagedCsr, ReorderKind,
+};
+use graphvite::pool::ShuffleKind;
+use graphvite::util::prop::{forall, Gen};
+use graphvite::util::rng::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("graphvite_reorder_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn bfs_opts(page_size: u32) -> PackOptions {
+    PackOptions { page_size, reorder: ReorderKind::Bfs, ..Default::default() }
+}
+
+/// A deterministic weighted multi-community graph (weights exercise the
+/// alias sidecar alongside the perm sidecar).
+fn weighted_graph(n: u32, edges: usize, seed: u64) -> Graph {
+    let mut b = GraphBuilder::new().with_num_nodes(n as usize);
+    let mut rng = Rng::new(seed);
+    for _ in 0..edges {
+        let u = rng.below_usize(n as usize) as u32;
+        let mut v = rng.below_usize(n as usize) as u32;
+        if u == v {
+            v = (v + 1) % n;
+        }
+        b.push_edge(u, v, ((u + v) % 9 + 1) as f32 * 0.25);
+    }
+    b.build()
+}
+
+fn train_cfg(seed: u64) -> TrainConfig {
+    TrainConfig {
+        dim: 8,
+        epochs: 3,
+        num_workers: 2,
+        num_samplers: 2,
+        episode_size: 2_000,
+        batch_size: 64,
+        backend: BackendKind::test_backend(),
+        shuffle: ShuffleKind::Pseudo,
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+// ------------------------------------------------------- property tests --
+
+#[test]
+fn reordered_pack_is_the_relabeled_graph_plus_a_perm_sidecar() {
+    forall("bfs pack == relabel + perm", 30, |gen: &mut Gen| {
+        let n = gen.usize_in(2..60);
+        let edges = gen.edges(n, 250);
+        let weighted = gen.bool(0.5);
+        let extra = gen.usize_in(0..3); // trailing isolated nodes
+        let mut b = GraphBuilder::new().with_num_nodes(n + extra);
+        for (u, v) in edges {
+            let w = if weighted { gen.f32_in(0.1..4.0) } else { 1.0 };
+            b.push_edge(u, v, w);
+        }
+        let g = b.build();
+
+        let order = bfs_order(&g);
+        let rg = relabel(&g, &order);
+        let path = tmp(&format!("prop_{}.gvpk", gen.case));
+        let page_size = *gen.choose(&[16u32, 64, 1024]);
+        graph::pack_store(&g, &path, &bfs_opts(page_size)).unwrap();
+        let p = PagedCsr::open(&path, 4096).unwrap();
+
+        // the sidecar IS the order vector (no prior permutation to compose)
+        assert_eq!(p.external_ids().unwrap(), order.as_slice(), "case {}", gen.case);
+
+        // every observation matches the in-RAM relabel, weights to the bit
+        assert_eq!(GraphStore::num_nodes(&p), rg.num_nodes());
+        assert_eq!(GraphStore::num_arcs(&p), rg.num_arcs());
+        assert_eq!(p.unit_weights(), rg.unit_weights());
+        assert_eq!(GraphStore::labels(&p), rg.labels());
+        let (mut t, mut w) = (Vec::new(), Vec::new());
+        for v in 0..rg.num_nodes() as u32 {
+            p.neighborhood_into(v, &mut t, &mut w);
+            assert_eq!(t, rg.neighbors(v), "case {} successors({v})", gen.case);
+            let got: Vec<u32> = w.iter().map(|x| x.to_bits()).collect();
+            let want: Vec<u32> = rg.neighbor_weights(v).iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want, "case {} weights({v})", gen.case);
+            assert_eq!(
+                GraphStore::weighted_degree(&p, v).to_bits(),
+                rg.weighted_degree(v).to_bits(),
+                "case {} wdeg({v})",
+                gen.case
+            );
+        }
+    });
+}
+
+#[test]
+fn permute_then_unpermute_embeddings_is_the_identity() {
+    forall("unpermute inverts the row scatter", 30, |gen: &mut Gen| {
+        let n = gen.usize_in(1..50);
+        let d = gen.usize_in(1..6);
+        let vertex = gen.vec_f32(n * d..n * d + 1, -2.0..2.0);
+        let context = gen.vec_f32(n * d..n * d + 1, -2.0..2.0);
+        let emb = EmbeddingStore::from_raw(n, d, vertex, context);
+        // a random permutation as `external`: old id per internal row
+        let mut external: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = gen.usize_in(0..i + 1);
+            external.swap(i, j);
+        }
+        let scattered = emb.unpermuted(&external);
+        for internal in 0..n as u32 {
+            let ext = external[internal as usize];
+            assert_eq!(
+                scattered.vertex(ext),
+                emb.vertex(internal),
+                "case {} row {internal}",
+                gen.case
+            );
+            assert_eq!(scattered.context(ext), emb.context(internal));
+        }
+        // scattering through the inverse lands every row back home
+        let back = scattered.unpermuted(&invert_order(&external));
+        assert_eq!(back.vertex_matrix(), emb.vertex_matrix());
+        assert_eq!(back.context_matrix(), emb.context_matrix());
+    });
+}
+
+#[test]
+fn external_ids_compose_across_repacks() {
+    // reorder a reordered pack: the stored sidecar must keep pointing at
+    // the ORIGINAL ids (perm composition), not at the intermediate ones
+    let g = weighted_graph(120, 500, 3);
+    let p1 = tmp("compose_1.gvpk");
+    graph::pack_store(&g, &p1, &bfs_opts(256)).unwrap();
+    let paged1 = PagedCsr::open(&p1, 1 << 16).unwrap();
+    let ext1 = paged1.external_ids().unwrap().to_vec();
+
+    let p2 = tmp("compose_2.gvpk");
+    graph::pack_store(&paged1, &p2, &bfs_opts(256)).unwrap();
+    let paged2 = PagedCsr::open(&p2, 1 << 16).unwrap();
+    let ext2 = paged2.external_ids().unwrap();
+
+    // expected composition: new -> intermediate (bfs of paged1) -> original
+    let order2 = bfs_order(&paged1);
+    let want: Vec<u32> = order2.iter().map(|&mid| ext1[mid as usize]).collect();
+    assert_eq!(ext2, want.as_slice());
+
+    // still a bijection over the original id space, and the doubly
+    // relabeled RAM graph agrees with the doubly reordered pack
+    let mut seen = vec![false; ext2.len()];
+    for &e in ext2 {
+        assert!(!seen[e as usize]);
+        seen[e as usize] = true;
+    }
+    let rg2 = relabel(&relabel(&g, &bfs_order(&g)), &order2);
+    let (mut t, mut w) = (Vec::new(), Vec::new());
+    for v in 0..rg2.num_nodes() as u32 {
+        paged2.neighborhood_into(v, &mut t, &mut w);
+        assert_eq!(t, rg2.neighbors(v), "successors({v})");
+        let got: Vec<u32> = w.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> = rg2.neighbor_weights(v).iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want, "weights({v})");
+    }
+
+    // repacking WITHOUT a reorder carries the sidecar through unchanged
+    let p3 = tmp("compose_3.gvpk");
+    graph::pack_store(&paged2, &p3, &PackOptions { page_size: 256, ..Default::default() })
+        .unwrap();
+    let paged3 = PagedCsr::open(&p3, 1 << 16).unwrap();
+    assert_eq!(paged3.external_ids().unwrap(), ext2);
+}
+
+#[test]
+fn pack_edge_list_reorder_matches_pack_store_byte_for_byte() {
+    // the two reorder entry points — streaming from an edge list under a
+    // memory budget vs packing an in-RAM store — must emit the same file
+    let g = weighted_graph(150, 700, 11);
+    let listing = tmp("reorder_equiv.txt");
+    graph::save_edge_list(&g, &listing).unwrap();
+
+    let from_list = tmp("reorder_from_list.gvpk");
+    let opts = PackOptions { page_size: 512, mem_bytes: 4096, reorder: ReorderKind::Bfs };
+    graph::pack_edge_list(&listing, &from_list, &opts).unwrap();
+
+    let from_store = tmp("reorder_from_store.gvpk");
+    graph::pack_store(&g, &from_store, &opts).unwrap();
+
+    assert_eq!(
+        std::fs::read(&from_list).unwrap(),
+        std::fs::read(&from_store).unwrap(),
+        "external reorder pack diverged from the in-RAM reorder pack"
+    );
+}
+
+// ------------------------------------------------- end-to-end training --
+
+#[test]
+fn reordered_paged_training_is_bitwise_identical_to_relabeled_ram() {
+    let g = weighted_graph(250, 900, 7);
+    assert!(!g.unit_weights());
+    let order = bfs_order(&g);
+    let rg = relabel(&g, &order);
+
+    let path = tmp("train_reordered.gvpk");
+    graph::pack_store(&g, &path, &bfs_opts(256)).unwrap();
+    let paged = Arc::new(PagedCsr::open(&path, 2 * 1024).unwrap());
+    assert!(paged.alias_tables_streamed());
+
+    let ram = Trainer::new(rg, train_cfg(55)).unwrap().train().unwrap();
+    let disk = Trainer::from_store(Arc::clone(&paged) as Arc<dyn GraphStore>, train_cfg(55))
+        .unwrap()
+        .train()
+        .unwrap();
+    assert_eq!(ram.embeddings.vertex_matrix(), disk.embeddings.vertex_matrix());
+    assert_eq!(ram.embeddings.context_matrix(), disk.embeddings.context_matrix());
+
+    // the sidecar puts every trained row back on its original id
+    let ext = paged.external_ids().unwrap();
+    let unperm = disk.embeddings.unpermuted(ext);
+    let inv = invert_order(&order);
+    for old in 0..g.num_nodes() as u32 {
+        assert_eq!(
+            unperm.vertex(old),
+            disk.embeddings.vertex(inv[old as usize]),
+            "row of original node {old}"
+        );
+    }
+}
+
+#[test]
+fn external_ids_round_trip_through_eval() {
+    // the user's workflow: split + eval live in ORIGINAL id space; the
+    // graph got reordered behind their back. Scoring the unpermuted
+    // embeddings against the original-id split must agree with scoring
+    // the internal embeddings against the internally relabeled split.
+    let g = generators::barabasi_albert(250, 3, 9);
+    let split = LinkSplit::new(&g, 0.1, 7);
+
+    let order = bfs_order(&g);
+    let inv = invert_order(&order);
+    let path = tmp("eval_roundtrip.gvpk");
+    graph::pack_store(&g, &path, &bfs_opts(512)).unwrap();
+    let paged = Arc::new(PagedCsr::open(&path, 4 * 1024).unwrap());
+    assert_eq!(paged.external_ids().unwrap(), order.as_slice());
+
+    let disk = Trainer::from_store(Arc::clone(&paged) as Arc<dyn GraphStore>, train_cfg(21))
+        .unwrap()
+        .train()
+        .unwrap();
+    let unperm = disk.embeddings.unpermuted(paged.external_ids().unwrap());
+
+    let map = |pairs: &[(u32, u32)]| -> Vec<(u32, u32)> {
+        pairs.iter().map(|&(u, v)| (inv[u as usize], inv[v as usize])).collect()
+    };
+    let internal_split = LinkSplit {
+        train_graph: relabel(&split.train_graph, &order),
+        positives: map(&split.positives),
+        negatives: map(&split.negatives),
+    };
+
+    let external_auc = link_prediction_auc(&unperm, &split);
+    let internal_auc = link_prediction_auc(&disk.embeddings, &internal_split);
+    assert!((0.0..=1.0).contains(&external_auc), "auc {external_auc}");
+    // the feature rows are bit-identical up to permutation; only the f32
+    // mean-centering accumulation order differs, so the two views of the
+    // same evaluation agree to float noise
+    assert!(
+        (external_auc - internal_auc).abs() < 1e-6,
+        "external-id eval {external_auc} != internal eval {internal_auc}"
+    );
+}

@@ -9,14 +9,14 @@ For every fresh file, looks for a baseline with the same basename under
 the baseline directory and compares the `bench <name> <mean> ± <stddev>
 min <min> ...` lines by name.  Regressions past the threshold (default
 15%) on the *pipeline throughput* lines (names starting with `train.`)
-emit a GitHub `::warning` annotation; everything else is informational.
+emit a GitHub `::error` annotation and FAIL the run (non-zero exit);
+everything else is informational.
 
-This script NEVER exits non-zero on a regression: the scheduled bench
-job runs on a shared, noisy runner, so the perf trajectory is a warning
-stream plus uploaded artifacts, not a hard gate (see benches/README.md
-"Baseline diffs").  Baselines carrying `"provisional": true` (the first
-committed set predates a CI perf point) are reported but never warn —
-replace them with a real run's artifact to arm the threshold.
+The gate is armed: the committed baselines are real perf points, the
+old `"provisional": true` grace period is over.  The 15% threshold
+absorbs shared-runner noise (observed run-to-run jitter is well under
+that); pass `--warn-only` to demote failures back to annotations for
+local experiments.
 """
 
 import argparse
@@ -53,11 +53,16 @@ def main():
         "--threshold",
         type=float,
         default=0.15,
-        help="warn when a train.* mean regresses past this fraction (default 0.15)",
+        help="fail when a train.* mean regresses past this fraction (default 0.15)",
+    )
+    ap.add_argument(
+        "--warn-only",
+        action="store_true",
+        help="report regressions as ::warning and exit zero (local runs)",
     )
     args = ap.parse_args()
 
-    warnings = 0
+    regressions = 0
     for fresh_path in args.fresh:
         base_path = os.path.join(args.baseline_dir, os.path.basename(fresh_path))
         if not os.path.exists(base_path):
@@ -68,11 +73,9 @@ def main():
             fresh_doc = json.load(f)
         with open(base_path) as f:
             base_doc = json.load(f)
-        provisional = bool(base_doc.get("provisional"))
         fresh = parse_bench_lines(fresh_doc)
         base = parse_bench_lines(base_doc)
-        tag = " (provisional baseline — informational only)" if provisional else ""
-        print(f"bench-diff: {os.path.basename(fresh_path)} vs baseline{tag}")
+        print(f"bench-diff: {os.path.basename(fresh_path)} vs baseline")
         for name in sorted(base):
             if name not in fresh:
                 print(f"  {name}: missing from the fresh run")
@@ -83,20 +86,23 @@ def main():
             delta = (f_ - b) / b
             marker = ""
             gated = name.startswith("train.")
-            if gated and delta > args.threshold and not provisional:
-                # shared-runner policy: annotate, never fail the job
-                print(f"::warning title=bench regression::{name} mean {f_:.6g}s is "
+            if gated and delta > args.threshold:
+                level = "warning" if args.warn_only else "error"
+                print(f"::{level} title=bench regression::{name} mean {f_:.6g}s is "
                       f"{delta * 100:.1f}% over baseline {b:.6g}s (threshold "
                       f"{args.threshold * 100:.0f}%)")
-                warnings += 1
+                regressions += 1
                 marker = "  <-- REGRESSION"
             print(f"  {name}: baseline {b:.6g}s -> fresh {f_:.6g}s ({delta * 100:+.1f}%)"
                   f"{marker}")
         for name in sorted(set(fresh) - set(base)):
             print(f"  {name}: new (no baseline entry)")
 
-    print(f"bench-diff: {warnings} regression warning(s)")
-    return 0  # never hard-fail on the shared runner
+    print(f"bench-diff: {regressions} regression(s) past the "
+          f"{args.threshold * 100:.0f}% threshold")
+    if regressions and not args.warn_only:
+        return 1  # the perf gate is armed: a train.* regression fails CI
+    return 0
 
 
 if __name__ == "__main__":

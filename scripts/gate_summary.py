@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Aggregate `gate-sweep` evidence lines into a markdown table.
+
+Usage:
+    python3 scripts/gate_summary.py gate-sweep.log [more.log ...] \
+        >> "$GITHUB_STEP_SUMMARY"
+
+Parses the one-line records the empirical quality gates print
+(`rust/src/util/gate.rs`):
+
+    gate-sweep <name>: floor <f> pass-rate <p> min <m> mean <mean> [seed ...]
+
+and emits one markdown table row per gate, plus the per-seed tail for any
+gate whose pass-rate dipped below 1.00.  Exits non-zero on malformed
+input so a format drift in the gate reporter cannot silently blank the
+summary, and on an empty input so a broken grep upstream is loud.
+"""
+
+import re
+import sys
+
+LINE = re.compile(
+    r"gate-sweep\s+(?P<name>.+?):\s+floor\s+(?P<floor>[0-9.eE+-]+)\s+"
+    r"pass-rate\s+(?P<rate>[0-9.]+)\s+min\s+(?P<min>[0-9.eE+-]+)\s+"
+    r"mean\s+(?P<mean>[0-9.eE+-]+)\s+\[(?P<seeds>.*)\]"
+)
+
+
+def main(argv):
+    if len(argv) < 2:
+        print("usage: gate_summary.py GATE_LOG [...]", file=sys.stderr)
+        return 2
+    rows, bad = [], 0
+    for path in argv[1:]:
+        with open(path) as f:
+            for raw in f:
+                raw = raw.strip()
+                if not raw or "gate-sweep" not in raw:
+                    continue
+                m = LINE.search(raw)
+                if not m:
+                    print(f"gate-summary: unparseable line: {raw}", file=sys.stderr)
+                    bad += 1
+                    continue
+                rows.append(m.groupdict())
+    if not rows:
+        print("gate-summary: no gate-sweep lines found", file=sys.stderr)
+        return 1
+
+    print("### Empirical gate sweep")
+    print()
+    print("| gate | floor | pass-rate | min | mean |")
+    print("|---|---|---|---|---|")
+    for r in rows:
+        flag = "" if float(r["rate"]) >= 1.0 else " ⚠️"
+        print(
+            f"| `{r['name']}` | {r['floor']} | {r['rate']}{flag} "
+            f"| {r['min']} | {r['mean']} |"
+        )
+    dipped = [r for r in rows if float(r["rate"]) < 1.0]
+    if dipped:
+        print()
+        print("Per-seed scores for gates below a 1.00 pass-rate:")
+        print()
+        for r in dipped:
+            print(f"- `{r['name']}`: {r['seeds']}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
